@@ -1,0 +1,84 @@
+//! Fleet-scale what-if: a 32K-GPU / NVL32 training job (the paper's §5.3
+//! setup) runs through a 15-day Llama-3-calibrated failure trace under
+//! DP-DROP, NTP and NTP-PW; reports time-integrated throughput, pauses
+//! and the spare budget each strategy needs — Figs. 6/7 as one narrative.
+//!
+//! Run: cargo run --release --example fleet_sim -- [--days 15] [--rate-x 1]
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{BlastRadius, FailureModel, Trace};
+use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
+use ntp::metrics::Recorder;
+use ntp::parallel::ParallelConfig;
+use ntp::power::RackDesign;
+use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::cli::Args;
+use ntp::util::prng::Rng;
+use ntp::util::table::{f4, pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1));
+    let days = args.f64_or("days", 15.0);
+    let rate_x = args.f64_or("rate-x", 1.0);
+    let seed = args.u64_or("seed", 2026);
+    args.finish()?;
+
+    // The paper's main simulation target: 480B model, 32K B200, NVL32,
+    // TP32 / PP8 / DP128.
+    let model = presets::model("gpt-480b")?;
+    let cluster = presets::cluster("paper-32k-nvl32")?;
+    let work = WorkloadConfig {
+        seq_len: 16_384,
+        minibatch_tokens: 16 << 20,
+        dtype: Dtype::BF16,
+    };
+    let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+    let sim = IterationModel::new(model, work, cluster.clone(), SimParams::default());
+    let rack = RackDesign::default();
+    println!("# building strategy table (TP{} -> TP{}..)", cfg.tp, 28);
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+
+    let topo = Topology::new(&cluster);
+    let fmodel = FailureModel::llama3().scaled(rate_x);
+    let mut rng = Rng::new(seed);
+    println!("# generating {days}-day failure trace ({}x Llama-3 rate)", rate_x);
+    let trace = Trace::generate(&topo, &fmodel, days * 24.0, &mut rng);
+    println!("# {} failure events", trace.events.len());
+
+    let mut rec = Recorder::new("fleet_sim_32k");
+    let mut out = Table::new(&["strategy", "spares", "mean tput", "tput/GPU", "paused"]);
+    for strategy in [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw] {
+        for &spares in &[0usize, 16] {
+            let fs = FleetSim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: cfg.pp,
+                strategy,
+                spares: if spares > 0 {
+                    Some(SparePolicy { spare_domains: spares, min_tp: 28 })
+                } else {
+                    None
+                },
+                packed: true,
+                blast: BlastRadius::Single,
+            };
+            let stats = fs.run(&trace, 3.0);
+            out.row(&[
+                strategy.name().into(),
+                format!("{spares}"),
+                f4(stats.mean_throughput),
+                f4(stats.throughput_per_gpu),
+                pct(stats.paused_frac),
+            ]);
+            rec.scalar(
+                &format!("{}_s{}_tput", strategy.name(), spares),
+                stats.mean_throughput,
+            );
+        }
+    }
+    out.print();
+    let path = rec.save("results")?;
+    println!("\nsaved {path}");
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT compile path: lower replica train-step functions to XLA HLO *text*
+and write `artifacts/manifest.json` for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction-id
+protos, while `HloModuleProto::from_text_file` reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as `python -m compile.aot --out ../artifacts` (the Makefile's
+`artifacts` target). Python never runs again after this: the Rust binary
+loads the text, compiles it with the PJRT CPU client and owns the
+training loop.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# (model, tp, batch, seq): every program the Rust side needs.
+#  - tiny @ TP1/2/3/4: cargo tests + quickstart (fast to compile & run)
+#  - e2e-20m @ TP4/TP3/TP1: the end-to-end loss-curve example; TP3 also
+#    compiled at reduced batch for plain-NTP (batch-shrink) mode
+#  - e2e-100m @ TP4/TP3: the ~100M-parameter run
+DEFAULT_PROGRAMS = [
+    ("tiny", 1, 4, 32),
+    ("tiny", 2, 4, 32),
+    ("tiny", 3, 4, 32),
+    ("tiny", 4, 4, 32),
+    ("tiny", 3, 3, 32),  # reduced batch for NTP batch-shrink tests
+    ("e2e-20m", 4, 4, 128),
+    ("e2e-20m", 3, 4, 128),
+    ("e2e-20m", 3, 3, 128),
+    ("e2e-20m", 1, 4, 128),
+    ("e2e-100m", 4, 4, 128),
+    ("e2e-100m", 3, 4, 128),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def program_name(model_name, tp, batch, seq):
+    return f"{model_name}_tp{tp}_b{batch}_s{seq}"
+
+
+def lower_program(model_name, tp, batch, seq):
+    cfg = M.PRESETS[model_name]
+    step = M.make_train_step(cfg, tp, batch, seq)
+    args = M.example_args(cfg, tp, batch, seq)
+    return jax.jit(step).lower(*args)
+
+
+def manifest_entry(model_name, tp, batch, seq, hlo_file):
+    cfg = M.PRESETS[model_name]
+    heads, ffns = M.shard_spec(cfg, tp)
+    return {
+        "name": program_name(model_name, tp, batch, seq),
+        "file": hlo_file,
+        "model": {
+            "name": cfg.name,
+            "hidden": cfg.hidden,
+            "ffn": cfg.ffn,
+            "heads": cfg.heads,
+            "head_dim": cfg.head_dim,
+            "layers": cfg.layers,
+            "vocab": cfg.vocab,
+        },
+        "tp": tp,
+        "batch": batch,
+        "seq_len": seq,
+        "head_shards": heads,
+        "ffn_shards": ffns,
+        "params": M.param_manifest(cfg, tp, seq),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default="",
+        help="comma-separated model names to (re)build; default all",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(filter(None, args.only.split(",")))
+    programs = [
+        p for p in DEFAULT_PROGRAMS if not only or p[0] in only
+    ]
+
+    entries = []
+    for model_name, tp, batch, seq in programs:
+        name = program_name(model_name, tp, batch, seq)
+        hlo_file = f"{name}.hlo.txt"
+        path = os.path.join(args.out, hlo_file)
+        if os.path.exists(path):
+            print(f"[aot] {name}: exists, skipping", file=sys.stderr)
+        else:
+            print(f"[aot] lowering {name} ...", file=sys.stderr)
+            text = to_hlo_text(lower_program(model_name, tp, batch, seq))
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"[aot]   wrote {len(text)/1e6:.1f} MB", file=sys.stderr)
+        entries.append(manifest_entry(model_name, tp, batch, seq, hlo_file))
+
+    manifest = {"version": 1, "programs": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {len(entries)} programs", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: causal multi-head attention for one TP shard's heads.
+
+Attention is TP-partitioned along the head dimension (paper eq. 4-6):
+each shard owns `nh_i` heads' worth of `W_Q/W_K/W_V/W_O` and computes its
+heads completely independently — the kernel grid iterates (batch, head),
+staging one head's `[S, dh]` Q/K/V through VMEM per step, with the
+softmax in f32.
+
+Backward is a custom_vjp in plain jnp (scores recomputed, not saved —
+this is what FlashAttention-style kernels do too, adapted here to the
+BlockSpec/VMEM model per DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    # block = one (batch, head): [1, 1, S, dh]
+    q = q_ref[0, 0].astype(jnp.float32)      # [S, dh]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s_len, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    scores = (q @ k.T) * scale                # [S, S] on the MXU
+    row = jax.lax.broadcasted_iota(jnp.int32, (s_len, s_len), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s_len, s_len), 1)
+    scores = jnp.where(col <= row, scores, NEG_INF)
+    # numerically stable softmax in f32
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = (p @ v).astype(o_ref.dtype)
+
+
+def _attn_fwd_pallas(q, k, v):
+    b, nh, s, dh = q.shape
+    spec = pl.BlockSpec((1, 1, s, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(b, nh),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, nh, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def attention_shard(q, k, v):
+    """Causal MHA over this shard's heads: [B, nh_i, S, dh] -> same."""
+    return _attn_fwd_pallas(q, k, v)
+
+
+def _fwd(q, k, v):
+    return _attn_fwd_pallas(q, k, v), (q, k, v)
+
+
+def _bwd(res, g):
+    q, k, v = res
+    dh = q.shape[-1]
+    s_len = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bnsd,bntd->bnst", q, k) * scale
+    mask = jnp.tril(jnp.ones((s_len, s_len), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.asarray(NEG_INF, scores.dtype))
+    p = jax.nn.softmax(scores, axis=-1)            # [B, nh, S, S]
+    dv = jnp.einsum("bnst,bnsd->bntd", p, g)
+    dp = jnp.einsum("bnsd,bntd->bnst", g, v)
+    # softmax backward: dS = P * (dP - sum(dP * P))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    ds = jnp.where(mask, ds, jnp.zeros_like(ds)) * scale
+    dq = jnp.einsum("bnst,bntd->bnsd", ds, k)
+    dk = jnp.einsum("bnst,bnsd->bntd", ds, q)
+    return dq, dk, dv
+
+
+attention_shard.defvjp(_fwd, _bwd)
+
+
+# Re-export the reference for tests.
+ref_attention_shard = ref.ref_attention_shard

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: one TP shard of the Megatron MLP block.
+
+Computes the partial sum `Z_i = GeLU(X @ A_i^T) @ B_i` (paper eq. 2-3)
+for a shard holding `F_i` ffn units. Sharded weights are stored
+*unit-major* (`[F_i, H]`), so the NTP reshard moves contiguous rows.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's GPU
+threadblock tiling becomes a BlockSpec grid over token tiles — each grid
+step stages one `[BLOCK_T, H]` activation tile plus the full `[F_i, H]`
+weight pair through VMEM and drives the MXU with `[BLOCK_T, H] x [H,
+F_i]` matmuls, accumulating in f32. `interpret=True` is mandatory on the
+CPU PJRT backend (real TPU lowering emits Mosaic custom-calls the CPU
+plugin cannot execute); the BlockSpec structure is what carries over to
+real hardware.
+
+The backward pass is a custom_vjp in plain jnp (Pallas kernels are not
+reverse-differentiable); it recomputes `u = X A^T` instead of saving it —
+the standard Megatron selective-recompute tradeoff.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Token-tile height: 8 sublanes x 16 rows; divides every batch*seq we
+# compile (tiny: 4*32=128, e2e: 4*128=512).
+BLOCK_T = 128
+
+
+def _mlp_kernel(x_ref, a_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)      # [bt, H]
+    a = a_ref[...].astype(jnp.float32)      # [F_i, H]
+    b = b_ref[...].astype(jnp.float32)      # [F_i, H]
+    u = x @ a.T                             # [bt, F_i] on the MXU
+    y = ref.gelu(u)
+    o_ref[...] = (y @ b).astype(o_ref.dtype)
+
+
+def _mlp_fwd_pallas(x, a, b):
+    t, h = x.shape
+    f = a.shape[0]
+    block_t = min(BLOCK_T, t)
+    assert t % block_t == 0, f"token count {t} not divisible by {block_t}"
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=(t // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t, h), lambda i: (i, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), x.dtype),
+        interpret=True,
+    )(x, a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def mlp_shard(x, a, b):
+    """Partial MLP output for one shard: `GeLU(x @ a.T) @ b` -> [T, H]."""
+    return _mlp_fwd_pallas(x, a, b)
+
+
+def _fwd(x, a, b):
+    return _mlp_fwd_pallas(x, a, b), (x, a, b)
+
+
+def _bwd(res, g):
+    x, a, b = res
+    u = x @ a.T                       # recompute (selective recompute)
+    y = ref.gelu(u)
+    db = y.T @ g                      # [F_i, H]
+    dy = g @ b.T                      # [T, F_i]
+    # d/du gelu(u), tanh approximation
+    c = jnp.sqrt(2.0 / jnp.pi).astype(u.dtype)
+    t = jnp.tanh(c * (u + 0.044715 * u**3))
+    du = dy * (0.5 * (1.0 + t) + 0.5 * u * (1.0 - t**2) * c * (1.0 + 3 * 0.044715 * u**2))
+    da = du.T @ x                     # [F_i, H]
+    dx = du @ a                       # [T, H]
+    return dx, da, db
+
+
+mlp_shard.defvjp(_fwd, _bwd)

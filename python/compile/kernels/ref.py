@@ -1,0 +1,59 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here; pytest
+checks `assert_allclose(kernel(...), ref(...))` over hypothesis-swept
+shapes/dtypes. The references are also what the kernels' custom_vjp
+backward passes are derived from.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approximation GeLU (matches the kernel's formula exactly)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def ref_mlp_shard(x, a, b):
+    """One TP shard of the Megatron MLP block (paper eq. 1-3).
+
+    Args:
+      x: [T, H] replicated activations.
+      a: [F_i, H] this shard's slice of A (stored unit-major: one ffn
+         column of A per row, so NTP resharding moves contiguous rows).
+      b: [F_i, H] this shard's slice of B (row-partitioned).
+
+    Returns:
+      [T, H] partial sum Z_i; summing over shards gives Z.
+    """
+    y = gelu(x @ a.T)          # [T, F_i]
+    return y @ b               # [T, H]
+
+
+def ref_attention_shard(q, k, v, causal=True):
+    """Multi-head attention for one TP shard's heads (paper eq. 4-6).
+
+    Args:
+      q, k, v: [B, nh_i, S, dh].
+
+    Returns:
+      [B, nh_i, S, dh] per-head attention output.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bnsd,bntd->bnst", q, k) * scale
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bnst,bntd->bnsd", p, v)
+
+
+def ref_layernorm(x, scale, bias, eps=1e-5):
+    """LayerNorm over the trailing axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias

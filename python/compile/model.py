@@ -1,0 +1,229 @@
+"""L2: TP-shardable decoder-only transformer (build-time JAX).
+
+One *replica step* — forward + backward over a whole local batch — is a
+single JAX function whose parameters are laid out as explicit per-shard
+tensors with (possibly nonuniform) widths, and whose dataflow is exactly
+Megatron tensor parallelism (paper §3.1):
+
+* attention partitioned by head (eq. 4-6): shard `s` holds
+  `wqkv[nh_s, 3, dh, H]` and `wo[nh_s, dh, H]`; per-shard outputs are
+  partial sums over heads, summed across shards (the TP allreduce).
+* MLP partitioned by ffn unit (eq. 1-3): shard `s` holds `wa[f_s, H]`
+  and `wb[f_s, H]` — *unit-major* storage so an NTP reshard moves
+  contiguous rows; per-shard `GeLU(x wa^T) wb` partial sums are summed.
+
+Because sharding is explicit in the signature, `jax.grad` returns
+gradients sharded exactly as TP shards them — which is what the Rust
+coordinator reshards (Algorithm 1) and allreduces across DP replicas.
+The summation tree over shards is the only thing that changes between a
+TP-n1 and TP-n2 replica, so losses agree to float tolerance — NTP's
+correctness claim.
+
+The compute hot spots call the L1 Pallas kernels
+(`kernels.mlp_shard.mlp_shard`, `kernels.attention_shard.attention_shard`).
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention_shard import attention_shard
+from .kernels.mlp_shard import mlp_shard
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Mirror of the Rust `ModelConfig` presets (rust/src/config)."""
+
+    name: str
+    hidden: int
+    ffn: int
+    heads: int
+    head_dim: int
+    layers: int
+    vocab: int
+
+    @property
+    def attn_dim(self):
+        return self.heads * self.head_dim
+
+
+PRESETS = {
+    "tiny": ModelCfg("tiny", 64, 256, 4, 16, 2, 256),
+    "e2e-20m": ModelCfg("e2e-20m", 320, 1280, 8, 40, 8, 8192),
+    "e2e-100m": ModelCfg("e2e-100m", 640, 2560, 8, 80, 12, 32_768),
+}
+
+
+def partition_sizes(k: int, n: int) -> List[int]:
+    """Balanced contiguous partition, larger shards first (mirrors
+    rust ntp::partition::partition_sizes)."""
+    assert 1 <= n <= k, f"cannot partition {k} units over {n} shards"
+    base, extra = divmod(k, n)
+    return [base + (1 if i < extra else 0) for i in range(n)]
+
+
+def shard_spec(cfg: ModelCfg, tp: int):
+    """(head counts, ffn unit counts) per shard for TP degree `tp`."""
+    return partition_sizes(cfg.heads, tp), partition_sizes(cfg.ffn, tp)
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+def param_manifest(cfg: ModelCfg, tp: int, seq_len: int):
+    """Ordered parameter descriptors for one replica program.
+
+    Each entry: dict(name, shape, shard_dim) where shard_dim is
+    "heads" / "ffn" / None; the Rust side re-derives full-tensor layouts
+    by concatenating shard tensors along axis 0.
+    """
+    heads, ffns = shard_spec(cfg, tp)
+    entries = []
+
+    def add(name, shape, shard=None):
+        entries.append({"name": name, "shape": list(shape), "shard": shard})
+
+    for l in range(cfg.layers):
+        add(f"l{l}.ln1.scale", (cfg.hidden,))
+        add(f"l{l}.ln1.bias", (cfg.hidden,))
+        for s, nh in enumerate(heads):
+            add(f"l{l}.attn.wqkv.s{s}", (nh, 3, cfg.head_dim, cfg.hidden), "heads")
+        for s, nh in enumerate(heads):
+            add(f"l{l}.attn.wo.s{s}", (nh, cfg.head_dim, cfg.hidden), "heads")
+        add(f"l{l}.ln2.scale", (cfg.hidden,))
+        add(f"l{l}.ln2.bias", (cfg.hidden,))
+        for s, f in enumerate(ffns):
+            add(f"l{l}.mlp.wa.s{s}", (f, cfg.hidden), "ffn")
+        for s, f in enumerate(ffns):
+            add(f"l{l}.mlp.wb.s{s}", (f, cfg.hidden), "ffn")
+    add("embed", (cfg.vocab, cfg.hidden))
+    add("pos", (seq_len, cfg.hidden))
+    add("final_ln.scale", (cfg.hidden,))
+    add("final_ln.bias", (cfg.hidden,))
+    add("lm_head", (cfg.vocab, cfg.hidden))
+    return entries
+
+
+def init_params(cfg: ModelCfg, tp: int, seq_len: int, seed: int = 0):
+    """Random init matching the manifest order (python-side tests only;
+    the Rust trainer owns initialization at run time)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for e in param_manifest(cfg, tp, seq_len):
+        key, sub = jax.random.split(key)
+        shape = tuple(e["shape"])
+        if e["name"].endswith(".scale"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif e["name"].endswith(".bias"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def shard_full_params(full_params_tp1, cfg: ModelCfg, tp: int, seq_len: int):
+    """Re-shard a TP1 parameter list into a TP-`tp` list (contiguous
+    splits along the unit-major axis) — used by tests to prove that
+    different TP degrees compute the same function."""
+    src = {e["name"]: p for e, p in
+           zip(param_manifest(cfg, 1, seq_len), full_params_tp1)}
+    heads, ffns = shard_spec(cfg, tp)
+    out = []
+    for e in param_manifest(cfg, tp, seq_len):
+        name = e["name"]
+        if e["shard"] is None:
+            out.append(src[name])
+            continue
+        base, sidx = name.rsplit(".s", 1)
+        sidx = int(sidx)
+        full = src[base + ".s0"]
+        sizes = heads if e["shard"] == "heads" else ffns
+        start = sum(sizes[:sidx])
+        out.append(full[start:start + sizes[sidx]])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+def _attention_block(x, wqkv_shards, wo_shards):
+    """TP attention: per-shard partial outputs summed (the allreduce)."""
+    partial_sums = []
+    for wqkv, wo in zip(wqkv_shards, wo_shards):
+        # x: [B, S, H]; wqkv: [nh, 3, dh, H]
+        qkv = jnp.einsum("bsh,njdh->bnjsd", x, wqkv)      # [B, nh, 3, S, dh]
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        o = attention_shard(q, k, v)                       # [B, nh, S, dh]
+        partial_sums.append(jnp.einsum("bnsd,ndh->bsh", o, wo))
+    z = partial_sums[0]
+    for p in partial_sums[1:]:
+        z = z + p
+    return z
+
+
+def _mlp_block(x, wa_shards, wb_shards):
+    """TP MLP: per-shard Pallas partial sums, summed (the allreduce)."""
+    b, s, h = x.shape
+    xt = x.reshape(b * s, h)
+    partial_sums = [mlp_shard(xt, wa, wb) for wa, wb in zip(wa_shards, wb_shards)]
+    z = partial_sums[0]
+    for p in partial_sums[1:]:
+        z = z + p
+    return z.reshape(b, s, h)
+
+
+def replica_loss(params, tokens, targets, cfg: ModelCfg, tp: int, seq_len: int):
+    """Causal-LM cross-entropy over one local batch.
+
+    `params` is the flat list in `param_manifest` order; `tokens` /
+    `targets` are [B, S] int32.
+    """
+    entries = param_manifest(cfg, tp, seq_len)
+    p = {e["name"]: t for e, t in zip(entries, params)}
+    heads, _ = shard_spec(cfg, tp)
+
+    x = p["embed"][tokens] + p["pos"][None, :, :]
+    for l in range(cfg.layers):
+        h = ref.ref_layernorm(x, p[f"l{l}.ln1.scale"], p[f"l{l}.ln1.bias"])
+        wqkv = [p[f"l{l}.attn.wqkv.s{s}"] for s in range(len(heads))]
+        wo = [p[f"l{l}.attn.wo.s{s}"] for s in range(len(heads))]
+        x = x + _attention_block(h, wqkv, wo)
+        h = ref.ref_layernorm(x, p[f"l{l}.ln2.scale"], p[f"l{l}.ln2.bias"])
+        wa = [p[f"l{l}.mlp.wa.s{s}"] for s in range(len(heads))]
+        wb = [p[f"l{l}.mlp.wb.s{s}"] for s in range(len(heads))]
+        x = x + _mlp_block(h, wa, wb)
+    x = ref.ref_layernorm(x, p["final_ln.scale"], p["final_ln.bias"])
+    logits = jnp.einsum("bsh,vh->bsv", x, p["lm_head"])
+
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: ModelCfg, tp: int, batch: int, seq_len: int):
+    """The AOT-compiled function: (tokens, targets, *params) ->
+    (loss, *grads) with grads in manifest order."""
+
+    def step(tokens, targets, *params):
+        loss, grads = jax.value_and_grad(
+            lambda ps: replica_loss(ps, tokens, targets, cfg, tp, seq_len)
+        )(list(params))
+        return (loss, *grads)
+
+    return step
+
+
+def example_args(cfg: ModelCfg, tp: int, batch: int, seq_len: int):
+    """ShapeDtypeStructs for lowering."""
+    toks = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+    params = [
+        jax.ShapeDtypeStruct(tuple(e["shape"]), jnp.float32)
+        for e in param_manifest(cfg, tp, seq_len)
+    ]
+    return (toks, toks, *params)

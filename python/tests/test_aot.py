@@ -1,0 +1,82 @@
+"""AOT path checks: manifest consistency, program naming, and HLO text
+lowering (one small program end-to-end)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+
+def test_program_names_unique():
+    names = [aot.program_name(m, tp, b, s) for (m, tp, b, s) in aot.DEFAULT_PROGRAMS]
+    assert len(names) == len(set(names))
+
+
+def test_manifest_entries_match_model_shapes():
+    for (model_name, tp, batch, seq) in aot.DEFAULT_PROGRAMS:
+        e = aot.manifest_entry(model_name, tp, batch, seq, "f.hlo.txt")
+        cfg = M.PRESETS[model_name]
+        assert e["model"]["hidden"] == cfg.hidden
+        assert sum(e["head_shards"]) == cfg.heads
+        assert sum(e["ffn_shards"]) == cfg.ffn
+        assert len(e["head_shards"]) == tp
+        # per layer: 4 norms + 4*tp sharded tensors; plus 5 globals
+        assert len(e["params"]) == cfg.layers * (4 + 4 * tp) + 5
+        # every shape matches its own product
+        for p in e["params"]:
+            assert all(d > 0 for d in p["shape"]), p
+
+
+def test_lowering_produces_hlo_text():
+    lowered = aot.lower_program("tiny", 2, 4, 32)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # entry computation must take tokens + targets + params
+    cfg = M.PRESETS["tiny"]
+    n_params = len(M.param_manifest(cfg, 2, 32))
+    # count parameter instructions in the entry computation
+    entry = text.split("ENTRY")[-1]
+    n_inputs = entry.count("parameter(")
+    assert n_inputs == 2 + n_params, f"{n_inputs} vs {2 + n_params}"
+
+
+def test_default_programs_cover_required_variants():
+    specs = {(m, tp, b) for (m, tp, b, _) in aot.DEFAULT_PROGRAMS}
+    # quickstart + tests need tiny at all degrees
+    for tp in [1, 2, 3, 4]:
+        assert ("tiny", tp, 4) in specs
+    # e2e needs healthy + reduced variants
+    assert ("e2e-20m", 4, 4) in specs
+    assert ("e2e-20m", 3, 4) in specs  # power-boost mode (full batch)
+    assert ("e2e-20m", 3, 3) in specs  # batch-shrink mode
+    assert ("e2e-100m", 4, 4) in specs
+    assert ("e2e-100m", 3, 4) in specs
+
+
+def test_written_manifest_is_valid_json(tmp_path):
+    # do not re-lower (slow); just exercise the manifest writer contract
+    entries = [aot.manifest_entry("tiny", 2, 4, 32, "tiny_tp2_b4_s32.hlo.txt")]
+    manifest = {"version": 1, "programs": entries}
+    p = tmp_path / "manifest.json"
+    p.write_text(json.dumps(manifest, indent=1))
+    loaded = json.loads(p.read_text())
+    assert loaded["programs"][0]["tp"] == 2
+
+
+def test_repo_artifacts_if_present():
+    """When artifacts/ exists (post `make artifacts`), its manifest must
+    agree with the current code's expectations."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(path))
+    by_name = {p["name"]: p for p in manifest["programs"]}
+    for (model_name, tp, batch, seq) in aot.DEFAULT_PROGRAMS:
+        name = aot.program_name(model_name, tp, batch, seq)
+        assert name in by_name, f"missing program {name} — rerun make artifacts"
+        expected = aot.manifest_entry(model_name, tp, batch, seq, by_name[name]["file"])
+        assert by_name[name]["params"] == expected["params"], name

@@ -1,0 +1,115 @@
+//! Ablations over the design choices DESIGN.md calls out (not a paper
+//! figure): how sensitive are the headline results to
+//!   (a) the pipeline-interleaving factor and TP-comm overlap the
+//!       simulator assumes,
+//!   (b) failure packing on restart (§3.3),
+//!   (c) ZeRO-1 optimizer sharding in the memory model,
+//!   (d) failure-rate spikes (7x bursts, [Kokolis et al.]).
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::scenario::scenario_from_failed;
+use ntp::failure::{sample_failed_gpus, BlastRadius, FailureModel, Trace};
+use ntp::manager::{pack_domains, StrategyTable};
+use ntp::parallel::{best_config, MemoryModel, ParallelConfig};
+use ntp::power::RackDesign;
+use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::prng::Rng;
+use ntp::util::table::{f2, pct, Table};
+
+fn main() {
+    let model = presets::model("gpt-480b").unwrap();
+    let cluster = presets::cluster("paper-32k-nvl32").unwrap();
+    let work = WorkloadConfig {
+        seq_len: 16_384,
+        minibatch_tokens: 16 << 20,
+        dtype: Dtype::BF16,
+    };
+
+    // ---- (a) simulator-parameter sensitivity ----
+    println!("\n=== Ablation: SimParams sensitivity (best config @32K) ===\n");
+    let mut t = Table::new(&["virtual_stages", "tp_overlap", "best cfg", "tok/s/gpu"]);
+    for v in [1usize, 2, 4, 8] {
+        for ov in [0.0, 0.5, 0.75] {
+            let p = SimParams { virtual_stages: v, tp_overlap: ov, ..SimParams::default() };
+            if let Some(best) = best_config(&model, &work, &cluster, 32, p) {
+                t.row(&[
+                    format!("{v}"),
+                    f2(ov),
+                    best.cfg.label(),
+                    f2(best.tokens_per_sec_per_gpu),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    // ---- (b) packing on/off under NTP ----
+    println!("\n=== Ablation: packing vs rank-order assignment (NTP) ===\n");
+    let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+    let sim = IterationModel::new(model.clone(), work.clone(), cluster.clone(), SimParams::default());
+    let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
+    let topo = Topology::new(&cluster);
+    let mut t2 = Table::new(&["failed frac", "packed tput", "unpacked tput", "gain"]);
+    let mut rng = Rng::new(17);
+    for &frac in &[0.001, 0.002, 0.004] {
+        let n = (frac * topo.n_gpus as f64) as usize;
+        let (mut pk, mut up) = (0.0, 0.0);
+        let samples = 40;
+        for _ in 0..samples {
+            let failed = sample_failed_gpus(&topo, n, BlastRadius::Single, &mut rng);
+            let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
+            let a1 = pack_domains(&healthy, 32, cfg.pp, true);
+            let a2 = pack_domains(&healthy, 32, cfg.pp, false);
+            pk += table.group_throughput(&a1.replica_tp, FtStrategy::Ntp);
+            up += table.group_throughput(&a2.replica_tp, FtStrategy::Ntp);
+        }
+        pk /= samples as f64;
+        up /= samples as f64;
+        t2.row(&[format!("{frac}"), pct(pk), pct(up), pct(pk - up)]);
+        assert!(pk >= up - 1e-9, "packing must not hurt");
+    }
+    t2.print();
+
+    // ---- (c) ZeRO-1 memory-model ablation ----
+    println!("\n=== Ablation: optimizer-state sharding (memory model) ===\n");
+    let mm_plain = MemoryModel::default();
+    let mm_zero1 = MemoryModel { zero1: true, ..MemoryModel::default() };
+    let mut t3 = Table::new(&["tp", "min PP (Megatron)", "min PP (ZeRO-1)"]);
+    for tp in [8usize, 16, 32] {
+        let dp = 256;
+        let a = mm_plain.min_pp(&model, tp, dp, 1, &work, cluster.gpu.hbm_gib, 64);
+        let b = mm_zero1.min_pp(&model, tp, dp, 1, &work, cluster.gpu.hbm_gib, 64);
+        t3.row(&[
+            format!("{tp}"),
+            a.map(|x| x.to_string()).unwrap_or_else(|| ">64".into()),
+            b.map(|x| x.to_string()).unwrap_or_else(|| ">64".into()),
+        ]);
+        if let (Some(a), Some(b)) = (a, b) {
+            assert!(b <= a, "ZeRO-1 must not need more PP");
+        }
+    }
+    t3.print();
+    println!("(ZeRO-1 relaxes the PP floor — the paper's Megatron baseline\n doesn't shard optimizer state, which is what forces deep PP at low TP)");
+
+    // ---- (d) failure-rate spikes ----
+    println!("\n=== Ablation: 7x failure-rate spikes vs flat rate ===\n");
+    let fmodel = FailureModel::llama3();
+    let mut t4 = Table::new(&["trace", "events", "peak failed", "time >0.1%"]);
+    let mut rng = Rng::new(23);
+    let flat = Trace::generate(&topo, &fmodel, 15.0 * 24.0, &mut rng);
+    let mut rng2 = Rng::new(23);
+    let spiky =
+        Trace::generate_with_spikes(&topo, &fmodel, 15.0 * 24.0, 7.0, 1.0, 24.0, &mut rng2);
+    for (name, tr) in [("flat", &flat), ("7x spikes", &spiky)] {
+        let series = tr.failed_series(&topo, BlastRadius::Single, 1.0);
+        let peak = series.iter().map(|x| x.1).max().unwrap_or(0) as f64 / topo.n_gpus as f64;
+        t4.row(&[
+            name.into(),
+            format!("{}", tr.events.len()),
+            pct(peak),
+            pct(tr.time_above_fraction(&topo, BlastRadius::Single, 1.0, 0.001)),
+        ]);
+    }
+    t4.print();
+}

@@ -1,0 +1,104 @@
+//! Fig. 10: sensitivity to failure blast radius — fraction of cluster
+//! GPU capacity lost when one failure event takes out 1/2/4 GPUs, a
+//! whole node, or a whole scale-up domain.
+//!
+//! Paper reference: larger blast radii cost NTP throughput (more GPUs
+//! per event, deeper TP reductions) but NTP and NTP-PW still beat
+//! DP-DROP substantially; DP-DROP is insensitive (its effective blast
+//! radius is already the whole DP replica).
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::scenario::scenario_from_failed;
+use ntp::failure::{sample_failed_gpus, BlastRadius};
+use ntp::manager::{pack_domains, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::power::RackDesign;
+use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::prng::Rng;
+use ntp::util::table::{pct, Table};
+
+fn main() {
+    let model = presets::model("gpt-480b").unwrap();
+    let cluster = presets::cluster("paper-32k-nvl32").unwrap();
+    let work = WorkloadConfig {
+        seq_len: 16_384,
+        minibatch_tokens: 16 << 20,
+        dtype: Dtype::BF16,
+    };
+    let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+    let sim = IterationModel::new(model, work, cluster.clone(), SimParams::default());
+    let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
+    let topo = Topology::new(&cluster);
+    let samples = 50;
+    // The paper varies the blast radius at a fixed number of failure
+    // *events*: each event takes out `radius` GPUs, so DP-DROP (which
+    // loses the whole replica per event regardless) is flat while NTP
+    // pays more per event as the radius grows.
+    let n_events = 40usize;
+
+    println!("\n=== Fig 10: capacity loss vs blast radius ({n_events} failure events) ===");
+    println!("(paper: DP-DROP flat; NTP degrades with radius but still wins)\n");
+    let mut t = Table::new(&["blast", "gpus down", "DP-DROP loss", "NTP loss", "NTP-PW loss"]);
+    let mut ntp_losses = Vec::new();
+    let mut rng = Rng::new(10);
+    for (label, blast) in [
+        ("1 GPU", BlastRadius::Single),
+        ("2 GPUs", BlastRadius::Gpus(2)),
+        ("4 GPUs (node)", BlastRadius::Node),
+        ("8 GPUs", BlastRadius::Gpus(8)),
+        ("domain (32)", BlastRadius::Domain),
+    ] {
+        let mut losses = [0.0f64; 3];
+        let mut down = 0usize;
+        for _ in 0..samples {
+            // n_events event epicenters, each expanded by the radius
+            let mut failed = vec![false; topo.n_gpus];
+            for _ in 0..n_events {
+                let g = rng.index(topo.n_gpus);
+                for a in blast.affected(&topo, g) {
+                    failed[a] = true;
+                }
+            }
+            let failed: Vec<usize> = (0..topo.n_gpus).filter(|&g| failed[g]).collect();
+            down += failed.len();
+            let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
+            let a = pack_domains(&healthy, topo.domain_size, cfg.pp, true);
+            for (i, strat) in
+                [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw].iter().enumerate()
+            {
+                losses[i] += 1.0 - table.group_throughput(&a.replica_tp, *strat);
+            }
+        }
+        for l in &mut losses {
+            *l /= samples as f64;
+        }
+        t.row(&[
+            label.into(),
+            format!("{}", down / samples),
+            pct(losses[0]),
+            pct(losses[1]),
+            pct(losses[2]),
+        ]);
+        ntp_losses.push((losses[0], losses[1], losses[2]));
+    }
+    t.print();
+
+    // Shape checks (paper's Fig. 10):
+    for (i, &(drop, ntp, pw)) in ntp_losses.iter().enumerate() {
+        assert!(
+            ntp <= drop + 1e-9,
+            "NTP must not lose more than DP-DROP (radius #{i})"
+        );
+        assert!(pw <= ntp + 1e-9);
+    }
+    // DP-DROP roughly flat across radii (each event costs one replica).
+    let drop_spread = ntp_losses.iter().map(|l| l.0).fold(f64::NEG_INFINITY, f64::max)
+        - ntp_losses.iter().map(|l| l.0).fold(f64::INFINITY, f64::min);
+    assert!(drop_spread < 0.03, "DP-DROP should be ~flat, spread {drop_spread}");
+    // NTP loss grows with the radius.
+    assert!(ntp_losses[0].1 < ntp_losses[4].1, "NTP loss should grow with radius");
+    // whole-domain blast: nothing to reduce, NTP == DP-DROP
+    let (drop_d, ntp_d, _) = ntp_losses[4];
+    assert!((drop_d - ntp_d).abs() < 0.02, "domain blast: NTP ~ DP-DROP");
+}

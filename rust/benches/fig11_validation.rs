@@ -1,0 +1,101 @@
+//! Fig. 11: simulator validation — predicted vs measured performance.
+//!
+//! Paper reference: (b) across many pretraining workloads (model size,
+//! sequence length, scale) the simulator's projections correlate very
+//! highly with measured throughput; (a) the same across per-GPU power
+//! budgets.
+//!
+//! Our testbed substitution (DESIGN.md): the "measured" side is REAL
+//! PJRT execution of the AOT-compiled replica programs on the CPU host
+//! (every tiny/e2e program variant = one workload); the "predicted"
+//! side is the calibrated linear cost model fit on *half* the workloads
+//! and validated on the held-out half. Fig. 11a's power axis cannot be
+//! physically actuated on this host, so we validate the power model's
+//! *internal* consistency (perf_at_power inverse, Table-1-style solves)
+//! and report the analytic curve.
+
+use ntp::config::presets;
+use ntp::runtime::{manifest::default_dir, Runtime};
+use ntp::sim::calibrate::{fit, predict, validation_r, Measurement};
+use ntp::train::params::init_full_then_shard;
+use ntp::util::table::{f2, f3, Table};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&default_dir())?;
+
+    // Every compiled workload except the 100M ones (compile cost) —
+    // 9 (model, tp, batch) points.
+    let specs: Vec<(String, usize, usize)> = rt
+        .manifest
+        .programs
+        .iter()
+        .filter(|p| p.model.name != "e2e-100m")
+        .map(|p| (p.model.name.clone(), p.tp, p.batch))
+        .collect();
+
+    println!("\n=== Fig 11b: simulator vs measured across workloads ===\n");
+    let mut measurements = Vec::new();
+    let mut t = Table::new(&["workload", "flops/step", "measured", "predicted"]);
+    for (id, (model, tp, batch)) in specs.iter().enumerate() {
+        eprintln!("compiling + running {model} tp{tp} b{batch} ...");
+        let prog = rt.load_spec(model, *tp, *batch)?;
+        let n = prog.meta.batch * prog.meta.seq_len;
+        let v = prog.meta.model.vocab as i32;
+        let tokens: Vec<i32> = (0..n).map(|i| (i as i32) % (v - 1)).collect();
+        let targets: Vec<i32> = (0..n).map(|i| (i as i32 + 1) % (v - 1)).collect();
+        let params = init_full_then_shard(&prog.meta, 3);
+        // warmup + 3 timed steps, take the median
+        prog.train_step(&tokens, &targets, &params)?;
+        let mut times = Vec::new();
+        for _ in 0..3 {
+            times.push(prog.train_step(&tokens, &targets, &params)?.execute_secs);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        measurements.push(Measurement { flops: prog.step_flops(), secs: times[1], id });
+    }
+
+    // Fit on even-indexed workloads, validate on odd.
+    let train: Vec<Measurement> =
+        measurements.iter().copied().filter(|m| m.id % 2 == 0).collect();
+    let held: Vec<Measurement> =
+        measurements.iter().copied().filter(|m| m.id % 2 == 1).collect();
+    let cal = fit(&train);
+    for m in &measurements {
+        let (model, tp, batch) = &specs[m.id];
+        t.row(&[
+            format!("{model} tp{tp} b{batch}"),
+            format!("{:.2e}", m.flops),
+            format!("{:.3}s", m.secs),
+            format!("{:.3}s", predict(&cal, m.flops)),
+        ]);
+    }
+    t.print();
+    let r_train = cal.r;
+    let r_valid = validation_r(&cal, &held);
+    println!("\ncalibrated effective throughput: {:.2} GFLOP/s, overhead {:.1}ms",
+        cal.eff_flops / 1e9, cal.overhead_secs * 1e3);
+    println!("correlation (train half):    r = {r_train:.4}");
+    println!("correlation (held-out half): r = {r_valid:.4}");
+    println!("(paper: 'highly correlated with observed performance')");
+    assert!(r_valid > 0.95, "simulator must track measured times (r={r_valid})");
+
+    // ---- Fig. 11a substitute: power model consistency ----
+    println!("\n=== Fig 11a (substitute): power-curve consistency ===");
+    println!("(cannot actuate CPU power caps; validating the analytic model\n the simulator uses for NTP-PW — see DESIGN.md substitutions)\n");
+    let gpu = presets::gpu("b200")?;
+    let mut t2 = Table::new(&["power (xTDP)", "perf (model)", "perf/watt", "roundtrip err"]);
+    for p in [0.7, 0.85, 1.0, 1.15, 1.3] {
+        let perf = gpu.perf_at_power(p);
+        let back = gpu.power_for_perf(perf);
+        t2.row(&[
+            f2(p),
+            f3(perf),
+            f3(perf / p),
+            format!("{:.1e}", (back - p).abs()),
+        ]);
+        assert!((back - p).abs() < 1e-9, "power curve must invert exactly");
+    }
+    t2.print();
+    println!("\nperf/watt monotonically decreases with power (paper §6.4). ");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Fig. 2 (+ Fig. 14): effect of NVL domain size and TP-degree caps on
+//! per-GPU throughput when scaling a 480B-parameter training job, and
+//! the execution-time breakdown behind it.
+//!
+//! Paper reference points (Fig. 2a, normalized to NVL32 @ 16K):
+//!   at 32K GPUs, NVL32 ≈ 87% per-GPU utilization vs NVL8 ≈ 68% — a
+//!   ~1.28x gap; at 8K GPUs the domain sizes are nearly equal.
+//! Fig. 2b: best-config throughput degrades as TP is capped; Fig. 14:
+//! the loss shows up as pipeline-bubble share.
+
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::parallel::best_config;
+use ntp::sim::SimParams;
+use ntp::util::table::{f2, f3, pct, Table};
+
+fn main() {
+    let model = presets::model("gpt-480b").unwrap();
+    let work = WorkloadConfig {
+        seq_len: 8192,
+        minibatch_tokens: 16 << 20,
+        dtype: Dtype::BF16,
+    };
+    let params = SimParams::default();
+
+    // ---- Fig. 2a: NVL domain size x cluster scale ----
+    println!("\n=== Fig 2a: per-GPU throughput vs scale and NVL domain size ===");
+    println!("(paper: at 32K GPUs NVL32/NVL8 ~ 1.28x; near parity at 8K)\n");
+    let mut t = Table::new(&["gpus", "NVL8", "NVL16", "NVL32", "NVL32/NVL8"]);
+    let mut norm = None;
+    let mut rows = Vec::new();
+    for n_gpus in [8_192usize, 16_384, 32_768] {
+        let mut tputs = Vec::new();
+        for domain in [8usize, 16, 32] {
+            let mut cluster = presets::cluster("paper-32k-nvl32").unwrap();
+            cluster.domain_size = domain;
+            cluster.n_gpus = n_gpus;
+            let best = best_config(&model, &work, &cluster, domain, params)
+                .expect("no legal config");
+            tputs.push(best.tokens_per_sec_per_gpu);
+        }
+        if n_gpus == 16_384 {
+            norm = Some(tputs[2]); // NVL32 @ 16K = 1.0 (paper normalization)
+        }
+        rows.push((n_gpus, tputs));
+    }
+    let norm = norm.unwrap();
+    for (n_gpus, tputs) in rows {
+        t.row(&[
+            format!("{n_gpus}"),
+            f3(tputs[0] / norm),
+            f3(tputs[1] / norm),
+            f3(tputs[2] / norm),
+            f2(tputs[2] / tputs[0]),
+        ]);
+    }
+    t.print();
+
+    // ---- Fig. 2b: TP cap sweep at fixed NVL32 ----
+    println!("\n=== Fig 2b: best-config throughput under TP caps (32K GPUs) ===");
+    println!("(paper uses NVL16 with caps 8/16/unlimited; same mechanism)\n");
+    let cluster = presets::cluster("paper-32k-nvl32").unwrap();
+    let mut t2 = Table::new(&["tp cap", "best config", "tok/s/gpu", "vs uncapped"]);
+    let best32 = best_config(&model, &work, &cluster, 32, params).unwrap();
+    for cap in [8usize, 16, 32] {
+        let best = best_config(&model, &work, &cluster, cap, params).unwrap();
+        t2.row(&[
+            format!("{cap}"),
+            best.cfg.label(),
+            f2(best.tokens_per_sec_per_gpu),
+            pct(best.tokens_per_sec_per_gpu / best32.tokens_per_sec_per_gpu),
+        ]);
+    }
+    t2.print();
+
+    // ---- Fig. 14: execution-time breakdown per TP cap ----
+    println!("\n=== Fig 14: execution-time breakdown vs TP cap (32K, NVL32) ===");
+    println!("(paper: low TP caps blow up the PP share; high TP trades it for TP comm)\n");
+    let mut t3 = Table::new(&["tp cap", "compute", "tp comm", "pp bubble", "dp+p2p", "total(s)"]);
+    for cap in [8usize, 16, 32] {
+        let best = best_config(&model, &work, &cluster, cap, params).unwrap();
+        let b = best.breakdown;
+        t3.row(&[
+            format!("{cap}"),
+            pct(b.compute / b.total()),
+            pct(b.tp_comm / b.total()),
+            pct(b.pp_bubble / b.total()),
+            pct((b.dp_exposed + b.pp_p2p) / b.total()),
+            f3(b.total()),
+        ]);
+    }
+    t3.print();
+
+    // Shape assertions (the bench doubles as a regression check).
+    let c8 = {
+        let mut c = cluster.clone();
+        c.domain_size = 8;
+        best_config(&model, &work, &c, 8, params).unwrap().tokens_per_sec_per_gpu
+    };
+    assert!(
+        best32.tokens_per_sec_per_gpu / c8 > 1.08,
+        "NVL32 must clearly beat NVL8 at 32K"
+    );
+}

@@ -1,0 +1,87 @@
+//! §Perf hot-path microbenchmarks (not a paper figure): quantifies every
+//! Rust-side cost in the training step so the optimization log in
+//! EXPERIMENTS.md §Perf has before/after numbers.
+//!
+//! Components measured at e2e-20m scale (~21M params/replica):
+//!   * AdamW update (the optimizer loop)
+//!   * sync_grads (gather + weighted reduce + scatter across 2 replicas)
+//!   * explicit NTP reshard permutations (ntp::sync comp<->sync)
+//!   * Algorithm-1 plan construction (per reconfiguration, not per step)
+
+use ntp::ntp::shard_map::ShardMap;
+use ntp::ntp::sync::{comp_to_sync, scatter_comp, sync_to_comp};
+use ntp::train::optimizer::AdamW;
+use ntp::util::bench::{bench_with, black_box, BenchConfig};
+use ntp::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let cfg = BenchConfig { max_iters: 30, ..BenchConfig::default() };
+
+    // ---- AdamW on ~21M params split into realistic tensor sizes ----
+    let sizes = [8192 * 320, 320 * 1280, 1280 * 320, 320, 1280];
+    let mut params: Vec<Vec<f32>> = Vec::new();
+    while params.iter().map(|p| p.len()).sum::<usize>() < 21_000_000 {
+        for &s in &sizes {
+            params.push(rng.normal_vec_f32(s, 0.02));
+        }
+    }
+    let grads: Vec<Vec<f32>> = params.iter().map(|p| {
+        p.iter().map(|x| x * 0.01).collect()
+    }).collect();
+    let mask = vec![true; params.len()];
+    let mut opt = AdamW::new(1e-3, &params);
+    let n_elems: usize = params.iter().map(|p| p.len()).sum();
+    let r = bench_with("adamw_21M_params", cfg, || {
+        opt.update(&mut params, &grads, &mask);
+        black_box(&params);
+    });
+    println!("{}", r.line());
+    println!(
+        "  -> {:.1} M elems/s",
+        n_elems as f64 / r.secs.p50 / 1e6
+    );
+
+    // ---- sync_grads at e2e-20m scale (via the fake-meta trick is
+    // complex; measure the underlying memory ops instead) ----
+    // gather+reduce+scatter over 21M f32 x 2 replicas:
+    let a: Vec<f32> = rng.normal_vec_f32(21_000_000, 1.0);
+    let b: Vec<f32> = rng.normal_vec_f32(21_000_000, 1.0);
+    let mut full = vec![0f32; 21_000_000];
+    let r = bench_with("weighted_reduce_2x21M", cfg, || {
+        for i in 0..full.len() {
+            full[i] = 0.5 * a[i] + 0.5 * b[i];
+        }
+        black_box(&full);
+    });
+    println!("{}", r.line());
+    println!(
+        "  -> {:.2} GB/s effective",
+        (2.0 * 21e6 * 4.0) / r.secs.p50 / 1e9
+    );
+
+    // ---- explicit reshard permutation, paper-ish shard shapes ----
+    let k = 2560; // ffn units of a TP4 shard at e2e-100m scale
+    let unit_len = 2 * 640; // wa+wb rows
+    let map = ShardMap::build(k, 4, 3);
+    let full_t: Vec<f32> = rng.normal_vec_f32(k * unit_len, 1.0);
+    let comp = scatter_comp(&map, unit_len, &full_t);
+    let r = bench_with("reshard_comp_to_sync_3.3M_f32", cfg, || {
+        let sync = comp_to_sync(&map, unit_len, &comp);
+        black_box(sync);
+    });
+    println!("{}", r.line());
+    let sync = comp_to_sync(&map, unit_len, &comp);
+    let r = bench_with("reshard_sync_to_comp_3.3M_f32", cfg, || {
+        let back = sync_to_comp(&map, unit_len, &sync);
+        black_box(back);
+    });
+    println!("{}", r.line());
+
+    // ---- Algorithm-1 plan construction at paper scale ----
+    let r = bench_with("alg1_build_k81920_tp32_to_30", BenchConfig::fast(), || {
+        let m = ShardMap::build(81_920, 32, 30);
+        black_box(m);
+    });
+    println!("{}", r.line());
+}

@@ -1,0 +1,88 @@
+//! Table 1: simulated training settings for the 480B / 32K-B200 / NVL32
+//! job — the local batch and power each reduced-TP mode needs to match
+//! the healthy replicas' iteration time.
+//!
+//! Paper reference:
+//!   TP32      bs 8, 1.00x power, rel iter 1/.994
+//!   TP30      bs 7, 1.00x power, rel iter 1.002
+//!   TP30-PW   bs 8, 1.15x power, rel iter .978
+//!   TP28      bs 6, 1.00x power, rel iter 1.003
+//!   TP28-PW   bs 8, 1.30x power, rel iter .999
+
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::parallel::ParallelConfig;
+use ntp::power::{min_boost_for, BoostDecision, RackDesign};
+use ntp::sim::engine::max_batch_within;
+use ntp::sim::{IterationModel, SimParams};
+use ntp::util::table::{f3, Table};
+
+fn main() {
+    let model = presets::model("gpt-480b").unwrap();
+    let cluster = presets::cluster("paper-32k-nvl32").unwrap();
+    let work = WorkloadConfig {
+        seq_len: 16_384,
+        minibatch_tokens: 16 << 20,
+        dtype: Dtype::BF16,
+    };
+    let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+    let sim = IterationModel::new(model, work, cluster, SimParams::default());
+    let rack = RackDesign::default();
+
+    let full_local = sim.work.global_batch() / cfg.dp;
+    let healthy = sim.healthy_iteration(&cfg).total();
+
+    println!("\n=== Table 1: simulated training settings ===");
+    println!("(paper values in parentheses)\n");
+    let mut t = Table::new(&["setting", "local bs", "power", "rel iter time", "paper"]);
+    t.row(&[
+        "TP32".into(),
+        format!("{full_local}"),
+        "1.00x".into(),
+        f3(1.0),
+        "bs8 1.00x 1.000".into(),
+    ]);
+
+    for (tp, paper) in [(30usize, "bs7 1.00x 1.002"), (28, "bs6 1.00x 1.003")] {
+        let bs = max_batch_within(&sim, &cfg, tp, full_local, healthy, 1.0);
+        let rel = sim.ntp_iteration(&cfg, tp, bs, 1.0).total() / healthy;
+        t.row(&[
+            format!("TP{tp}"),
+            format!("{bs}"),
+            "1.00x".into(),
+            f3(rel),
+            paper.into(),
+        ]);
+    }
+    for (tp, paper) in [(30usize, "bs8 1.15x 0.978"), (28, "bs8 1.30x 0.999")] {
+        match min_boost_for(&sim, &cfg, tp, full_local, healthy, &rack, &sim.cluster.gpu) {
+            BoostDecision::Boost { power_frac } => {
+                let perf = sim.cluster.gpu.perf_at_power(power_frac);
+                let rel = sim.ntp_iteration(&cfg, tp, full_local, perf).total() / healthy;
+                t.row(&[
+                    format!("TP{tp}-PW"),
+                    format!("{full_local}"),
+                    format!("{power_frac:.2}x"),
+                    f3(rel),
+                    paper.into(),
+                ]);
+            }
+            other => {
+                t.row(&[
+                    format!("TP{tp}-PW"),
+                    "-".into(),
+                    format!("{other:?}"),
+                    "-".into(),
+                    paper.into(),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    // Shape checks: reduced batch ~ proportional to TP reduction; PW
+    // power grows with reduction depth and stays <= 1.3x.
+    let bs30 = max_batch_within(&sim, &cfg, 30, full_local, healthy, 1.0);
+    let bs28 = max_batch_within(&sim, &cfg, 28, full_local, healthy, 1.0);
+    assert!(bs30 >= bs28, "deeper reduction, smaller batch");
+    assert!(bs30 < full_local && bs30 >= full_local * 6 / 8);
+}

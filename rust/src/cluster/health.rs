@@ -1,0 +1,223 @@
+//! Fleet health: per-GPU state plus per-domain aggregates that the NTP
+//! planner and the resource manager consume ("how many GPUs are still
+//! usable in each scale-up domain?").
+
+use super::topology::Topology;
+
+/// Health of one GPU.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GpuState {
+    Healthy,
+    /// Failed at `at_hours`, expected back at `until_hours` (sim time).
+    Failed { at_hours: f64, until_hours: f64 },
+}
+
+impl GpuState {
+    pub fn is_healthy(&self) -> bool {
+        matches!(self, GpuState::Healthy)
+    }
+}
+
+/// Mutable fleet health snapshot.
+#[derive(Clone, Debug)]
+pub struct FleetHealth {
+    pub topo: Topology,
+    states: Vec<GpuState>,
+    /// healthy-GPU count per domain (maintained incrementally).
+    domain_healthy: Vec<usize>,
+    n_failed: usize,
+}
+
+impl FleetHealth {
+    pub fn new(topo: Topology) -> FleetHealth {
+        let n = topo.n_gpus;
+        let d = topo.n_domains();
+        let ds = topo.domain_size;
+        FleetHealth {
+            topo,
+            states: vec![GpuState::Healthy; n],
+            domain_healthy: vec![ds; d],
+            n_failed: 0,
+        }
+    }
+
+    pub fn state(&self, gpu: usize) -> GpuState {
+        self.states[gpu]
+    }
+
+    pub fn n_failed(&self) -> usize {
+        self.n_failed
+    }
+
+    pub fn failed_fraction(&self) -> f64 {
+        self.n_failed as f64 / self.topo.n_gpus as f64
+    }
+
+    /// Healthy GPUs remaining in domain `d`.
+    pub fn domain_healthy(&self, d: usize) -> usize {
+        self.domain_healthy[d]
+    }
+
+    /// Per-domain healthy counts (for the packing manager).
+    pub fn domain_healthy_counts(&self) -> &[usize] {
+        &self.domain_healthy
+    }
+
+    /// Number of domains with at least one failure but not fully dead.
+    pub fn n_partial_domains(&self) -> usize {
+        self.domain_healthy
+            .iter()
+            .filter(|&&h| h > 0 && h < self.topo.domain_size)
+            .count()
+    }
+
+    /// Number of fully healthy domains.
+    pub fn n_full_domains(&self) -> usize {
+        self.domain_healthy.iter().filter(|&&h| h == self.topo.domain_size).count()
+    }
+
+    /// Mark a GPU failed. Idempotent (re-failing a failed GPU extends its
+    /// recovery time).
+    pub fn fail(&mut self, gpu: usize, at_hours: f64, until_hours: f64) {
+        let d = self.topo.domain_of(gpu);
+        match self.states[gpu] {
+            GpuState::Healthy => {
+                self.states[gpu] = GpuState::Failed { at_hours, until_hours };
+                self.domain_healthy[d] -= 1;
+                self.n_failed += 1;
+            }
+            GpuState::Failed { at_hours: prev_at, until_hours: prev_until } => {
+                self.states[gpu] = GpuState::Failed {
+                    at_hours: prev_at,
+                    until_hours: prev_until.max(until_hours),
+                };
+            }
+        }
+    }
+
+    /// Mark a GPU recovered.
+    pub fn recover(&mut self, gpu: usize) {
+        if let GpuState::Failed { .. } = self.states[gpu] {
+            self.states[gpu] = GpuState::Healthy;
+            self.domain_healthy[self.topo.domain_of(gpu)] += 1;
+            self.n_failed -= 1;
+        }
+    }
+
+    /// Recover everything due by `now_hours`; returns how many recovered.
+    pub fn recover_due(&mut self, now_hours: f64) -> usize {
+        let mut n = 0;
+        for gpu in 0..self.states.len() {
+            if let GpuState::Failed { until_hours, .. } = self.states[gpu] {
+                if until_hours <= now_hours {
+                    self.recover(gpu);
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Reset to all-healthy.
+    pub fn reset(&mut self) {
+        for s in &mut self.states {
+            *s = GpuState::Healthy;
+        }
+        for h in &mut self.domain_healthy {
+            *h = self.topo.domain_size;
+        }
+        self.n_failed = 0;
+    }
+
+    /// Internal consistency check (used by tests and debug assertions).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut failed = 0;
+        for d in 0..self.topo.n_domains() {
+            let healthy = self
+                .topo
+                .domain_gpus(d)
+                .filter(|&g| self.states[g].is_healthy())
+                .count();
+            if healthy != self.domain_healthy[d] {
+                return Err(format!(
+                    "domain {d}: cached healthy {} != actual {healthy}",
+                    self.domain_healthy[d]
+                ));
+            }
+            failed += self.topo.domain_size - healthy;
+        }
+        if failed != self.n_failed {
+            return Err(format!("cached n_failed {} != actual {failed}", self.n_failed));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet() -> FleetHealth {
+        FleetHealth::new(Topology::of(32, 8, 4))
+    }
+
+    #[test]
+    fn fail_and_recover_maintain_counts() {
+        let mut f = fleet();
+        f.fail(0, 0.0, 10.0);
+        f.fail(1, 0.0, 5.0);
+        f.fail(9, 1.0, 3.0);
+        assert_eq!(f.n_failed(), 3);
+        assert_eq!(f.domain_healthy(0), 6);
+        assert_eq!(f.domain_healthy(1), 7);
+        assert_eq!(f.n_partial_domains(), 2);
+        assert_eq!(f.n_full_domains(), 2);
+        f.check_invariants().unwrap();
+
+        let recovered = f.recover_due(6.0);
+        assert_eq!(recovered, 2); // gpu1 (until 5) and gpu9 (until 3)
+        assert_eq!(f.n_failed(), 1);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn refail_extends_recovery() {
+        let mut f = fleet();
+        f.fail(3, 0.0, 5.0);
+        f.fail(3, 2.0, 20.0); // extension, not double-count
+        assert_eq!(f.n_failed(), 1);
+        assert_eq!(f.recover_due(10.0), 0);
+        assert_eq!(f.recover_due(21.0), 1);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn recover_healthy_is_noop() {
+        let mut f = fleet();
+        f.recover(5);
+        assert_eq!(f.n_failed(), 0);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn failed_fraction() {
+        let mut f = fleet();
+        for g in 0..8 {
+            f.fail(g, 0.0, 1.0);
+        }
+        assert!((f.failed_fraction() - 0.25).abs() < 1e-12);
+        assert_eq!(f.domain_healthy(0), 0);
+        assert_eq!(f.n_partial_domains(), 0); // fully dead, not partial
+    }
+
+    #[test]
+    fn reset_restores_all() {
+        let mut f = fleet();
+        f.fail(0, 0.0, 1.0);
+        f.fail(31, 0.0, 1.0);
+        f.reset();
+        assert_eq!(f.n_failed(), 0);
+        assert_eq!(f.n_full_domains(), 4);
+        f.check_invariants().unwrap();
+    }
+}

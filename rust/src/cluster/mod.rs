@@ -1,0 +1,9 @@
+//! Cluster topology and health: GPUs grouped into scale-up (NVL) domains
+//! and host nodes, with a per-GPU health state machine driven by the
+//! failure engine.
+
+pub mod health;
+pub mod topology;
+
+pub use health::{FleetHealth, GpuState};
+pub use topology::Topology;

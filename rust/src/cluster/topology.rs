@@ -1,0 +1,108 @@
+//! Static cluster topology derived from a [`ClusterConfig`]: which GPUs
+//! share a scale-up domain (NVLink-class fabric) and a host node.
+
+use crate::config::ClusterConfig;
+
+/// Immutable topology view. GPUs are numbered `0..n_gpus`; domain `d`
+/// owns the contiguous range `[d*domain_size, (d+1)*domain_size)`, and
+/// nodes subdivide domains.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n_gpus: usize,
+    pub domain_size: usize,
+    pub gpus_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(cfg: &ClusterConfig) -> Topology {
+        cfg.validate().expect("invalid cluster config");
+        Topology {
+            n_gpus: cfg.n_gpus,
+            domain_size: cfg.domain_size,
+            gpus_per_node: cfg.gpus_per_node,
+        }
+    }
+
+    /// Build directly from sizes (tests / ad-hoc experiments).
+    pub fn of(n_gpus: usize, domain_size: usize, gpus_per_node: usize) -> Topology {
+        assert!(domain_size > 0 && n_gpus % domain_size == 0);
+        assert!(gpus_per_node > 0 && domain_size % gpus_per_node == 0);
+        Topology { n_gpus, domain_size, gpus_per_node }
+    }
+
+    pub fn n_domains(&self) -> usize {
+        self.n_gpus / self.domain_size
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_gpus / self.gpus_per_node
+    }
+
+    #[inline]
+    pub fn domain_of(&self, gpu: usize) -> usize {
+        debug_assert!(gpu < self.n_gpus);
+        gpu / self.domain_size
+    }
+
+    #[inline]
+    pub fn node_of(&self, gpu: usize) -> usize {
+        gpu / self.gpus_per_node
+    }
+
+    /// GPUs in domain `d` as a range.
+    pub fn domain_gpus(&self, d: usize) -> std::ops::Range<usize> {
+        let start = d * self.domain_size;
+        start..start + self.domain_size
+    }
+
+    /// GPUs on node `n` as a range.
+    pub fn node_gpus(&self, n: usize) -> std::ops::Range<usize> {
+        let start = n * self.gpus_per_node;
+        start..start + self.gpus_per_node
+    }
+
+    /// Nodes making up domain `d`.
+    pub fn domain_nodes(&self, d: usize) -> std::ops::Range<usize> {
+        let per = self.domain_size / self.gpus_per_node;
+        d * per..(d + 1) * per
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let t = Topology::of(64, 16, 4);
+        assert_eq!(t.n_domains(), 4);
+        assert_eq!(t.n_nodes(), 16);
+        for gpu in 0..t.n_gpus {
+            let d = t.domain_of(gpu);
+            assert!(t.domain_gpus(d).contains(&gpu));
+            let n = t.node_of(gpu);
+            assert!(t.node_gpus(n).contains(&gpu));
+            // node nested in domain
+            assert!(t.domain_nodes(d).contains(&n));
+        }
+    }
+
+    #[test]
+    fn domain_ranges_partition_cluster() {
+        let t = Topology::of(96, 8, 4);
+        let mut seen = vec![false; 96];
+        for d in 0..t.n_domains() {
+            for g in t.domain_gpus(d) {
+                assert!(!seen[g]);
+                seen[g] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_sizes_panic() {
+        Topology::of(100, 32, 4);
+    }
+}

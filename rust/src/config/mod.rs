@@ -1,0 +1,376 @@
+//! Typed configuration: model shapes, GPU specs, cluster topologies and
+//! training workloads, with JSON load/save (via [`crate::util::json`])
+//! and the presets used throughout the paper's experiments.
+
+pub mod presets;
+
+use crate::util::json::Value;
+use anyhow::Result;
+
+/// Transformer model shape (decoder-only, Megatron-style).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub hidden: usize,
+    /// FFN inner width (paper: 4x hidden).
+    pub ffn: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub layers: usize,
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    /// Parameter count (embeddings + per-layer attn/MLP + final norm),
+    /// untied input/output embeddings.
+    pub fn params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        let attn_dim = (self.heads * self.head_dim) as u64;
+        // qkv: h -> 3*attn_dim, out proj: attn_dim -> h, 2 norms (2h)
+        let attn = 3 * h * attn_dim + attn_dim * h;
+        let mlp = h * f + f * h;
+        let per_layer = attn + mlp + 4 * h; // norms + biases approx
+        2 * (self.vocab as u64) * h + (self.layers as u64) * per_layer + 2 * h
+    }
+
+    /// Training FLOPs per token (fwd+bwd ≈ 3x fwd; fwd ≈ 2·params + attention
+    /// quadratic term).
+    pub fn flops_per_token(&self, seq_len: usize) -> f64 {
+        let dense = 2.0 * self.params() as f64;
+        // attention scores+context: 2 matmuls of [seq, d] x [d, seq] per layer
+        let attn_quad = 4.0 * (self.layers as f64)
+            * (seq_len as f64)
+            * (self.heads * self.head_dim) as f64;
+        3.0 * (dense + attn_quad)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("hidden", self.hidden.into()),
+            ("ffn", self.ffn.into()),
+            ("heads", self.heads.into()),
+            ("head_dim", self.head_dim.into()),
+            ("layers", self.layers.into()),
+            ("vocab", self.vocab.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: v.req_str("name")?.to_string(),
+            hidden: v.req_usize("hidden")?,
+            ffn: v.req_usize("ffn")?,
+            heads: v.req_usize("heads")?,
+            head_dim: v.req_usize("head_dim")?,
+            layers: v.req_usize("layers")?,
+            vocab: v.req_usize("vocab")?,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.hidden > 0 && self.layers > 0, "empty model");
+        anyhow::ensure!(
+            self.heads * self.head_dim == self.hidden || self.head_dim > 0,
+            "head geometry"
+        );
+        Ok(())
+    }
+}
+
+/// Numeric format used for compute (affects flops and bytes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    BF16,
+    FP8,
+    FP32,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::FP8 => 1,
+            Dtype::BF16 => 2,
+            Dtype::FP32 => 4,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s.to_ascii_lowercase().as_str() {
+            "bf16" => Ok(Dtype::BF16),
+            "fp8" => Ok(Dtype::FP8),
+            "fp32" | "f32" => Ok(Dtype::FP32),
+            other => anyhow::bail!("unknown dtype '{other}'"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::BF16 => "bf16",
+            Dtype::FP8 => "fp8",
+            Dtype::FP32 => "fp32",
+        }
+    }
+}
+
+/// GPU ("AI accelerator") specification used by the performance simulator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Peak dense TFLOP/s at BF16.
+    pub tflops_bf16: f64,
+    /// Peak dense TFLOP/s at FP8 (0 if unsupported).
+    pub tflops_fp8: f64,
+    /// HBM capacity, GiB.
+    pub hbm_gib: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbs: f64,
+    /// Per-GPU scale-up (NVLink-class) bandwidth, GB/s unidirectional.
+    pub nvlink_gbs: f64,
+    /// Per-GPU scale-out (InfiniBand/Ethernet) bandwidth, GB/s.
+    pub ib_gbs: f64,
+    /// Nominal TDP, watts.
+    pub tdp_w: f64,
+    /// Max sustained boost as a fraction of TDP (paper rack design: 1.3).
+    pub max_boost: f64,
+    /// Exponent of the power-frequency curve: power ∝ freq^alpha
+    /// (alpha ≈ 2.4 for recent datacenter GPUs; perf ∝ freq in the
+    /// compute-bound regime).
+    pub power_alpha: f64,
+}
+
+impl GpuSpec {
+    /// Effective peak TFLOP/s for a dtype.
+    pub fn tflops(&self, dtype: Dtype) -> f64 {
+        match dtype {
+            Dtype::BF16 => self.tflops_bf16,
+            Dtype::FP8 => {
+                if self.tflops_fp8 > 0.0 {
+                    self.tflops_fp8
+                } else {
+                    self.tflops_bf16
+                }
+            }
+            Dtype::FP32 => self.tflops_bf16 / 2.0,
+        }
+    }
+
+    /// Relative performance at `power` (fraction of TDP): perf ∝ f,
+    /// power ∝ f^alpha  ⇒  perf = power^(1/alpha). Clamped to
+    /// `[idle floor, max_boost^(1/alpha)]`.
+    pub fn perf_at_power(&self, power_frac: f64) -> f64 {
+        let p = power_frac.clamp(0.2, self.max_boost);
+        p.powf(1.0 / self.power_alpha)
+    }
+
+    /// Power fraction needed to reach `perf` (relative to TDP-perf).
+    pub fn power_for_perf(&self, perf: f64) -> f64 {
+        perf.max(0.0).powf(self.power_alpha)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("tflops_bf16", self.tflops_bf16.into()),
+            ("tflops_fp8", self.tflops_fp8.into()),
+            ("hbm_gib", self.hbm_gib.into()),
+            ("hbm_gbs", self.hbm_gbs.into()),
+            ("nvlink_gbs", self.nvlink_gbs.into()),
+            ("ib_gbs", self.ib_gbs.into()),
+            ("tdp_w", self.tdp_w.into()),
+            ("max_boost", self.max_boost.into()),
+            ("power_alpha", self.power_alpha.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<GpuSpec> {
+        Ok(GpuSpec {
+            name: v.req_str("name")?.to_string(),
+            tflops_bf16: v.req_f64("tflops_bf16")?,
+            tflops_fp8: v.req_f64("tflops_fp8")?,
+            hbm_gib: v.req_f64("hbm_gib")?,
+            hbm_gbs: v.req_f64("hbm_gbs")?,
+            nvlink_gbs: v.req_f64("nvlink_gbs")?,
+            ib_gbs: v.req_f64("ib_gbs")?,
+            tdp_w: v.req_f64("tdp_w")?,
+            max_boost: v.req_f64("max_boost")?,
+            power_alpha: v.req_f64("power_alpha")?,
+        })
+    }
+}
+
+/// Cluster topology: `n_gpus` split into scale-up (NVL) domains of
+/// `domain_size`, grouped into racks (1 domain = 1 rack for GB200-class).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    pub name: String,
+    pub n_gpus: usize,
+    /// Scale-up domain size (NVL8 / NVL32 / NVL72 ...).
+    pub domain_size: usize,
+    /// GPUs that share a host board (failure blast radius option "node").
+    pub gpus_per_node: usize,
+    pub gpu: GpuSpec,
+}
+
+impl ClusterConfig {
+    pub fn n_domains(&self) -> usize {
+        self.n_gpus / self.domain_size
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.domain_size > 0, "domain_size = 0");
+        anyhow::ensure!(
+            self.n_gpus % self.domain_size == 0,
+            "n_gpus {} not divisible by domain_size {}",
+            self.n_gpus,
+            self.domain_size
+        );
+        anyhow::ensure!(
+            self.domain_size % self.gpus_per_node == 0,
+            "domain_size {} not divisible by gpus_per_node {}",
+            self.domain_size,
+            self.gpus_per_node
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("n_gpus", self.n_gpus.into()),
+            ("domain_size", self.domain_size.into()),
+            ("gpus_per_node", self.gpus_per_node.into()),
+            ("gpu", self.gpu.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ClusterConfig> {
+        Ok(ClusterConfig {
+            name: v.req_str("name")?.to_string(),
+            n_gpus: v.req_usize("n_gpus")?,
+            domain_size: v.req_usize("domain_size")?,
+            gpus_per_node: v.req_usize("gpus_per_node")?,
+            gpu: GpuSpec::from_json(v.get("gpu"))?,
+        })
+    }
+}
+
+/// Training workload: sequence length and global batch in tokens.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadConfig {
+    pub seq_len: usize,
+    /// Global minibatch size in tokens (paper: 16M tokens).
+    pub minibatch_tokens: usize,
+    pub dtype: Dtype,
+}
+
+impl WorkloadConfig {
+    pub fn global_batch(&self) -> usize {
+        self.minibatch_tokens / self.seq_len
+    }
+}
+
+/// Load a JSON config file into a `Value` (with `//` comments allowed).
+pub fn load_json(path: &str) -> Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    Value::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+}
+
+/// Save a `Value` pretty-printed.
+pub fn save_json(path: &str, v: &Value) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, v.pretty() + "\n")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_matches_expected_scale() {
+        let m = presets::model("gpt-480b").unwrap();
+        let p = m.params() as f64;
+        // 480B nominal, allow 15% for accounting differences.
+        assert!((p / 480e9 - 1.0).abs() < 0.15, "params {p:.3e}");
+    }
+
+    #[test]
+    fn params_100m_scale() {
+        let m = presets::model("e2e-100m").unwrap();
+        let p = m.params() as f64;
+        assert!((0.8e8..1.3e8).contains(&p), "params {p:.3e}");
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let m = presets::model("tiny").unwrap();
+        let m2 = ModelConfig::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn gpu_json_roundtrip() {
+        let g = presets::gpu("b200").unwrap();
+        let g2 = GpuSpec::from_json(&g.to_json()).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn cluster_validation() {
+        let mut c = presets::cluster("paper-32k-nvl32").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.n_domains(), 1024);
+        c.n_gpus = 100; // not divisible by 32
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn power_curve_monotone_and_inverse() {
+        let g = presets::gpu("b200").unwrap();
+        let p1 = g.perf_at_power(1.0);
+        let p13 = g.perf_at_power(1.3);
+        assert!((p1 - 1.0).abs() < 1e-12);
+        assert!(p13 > 1.0 && p13 < 1.3, "sublinear boost {p13}");
+        // inverse consistency
+        let need = g.power_for_perf(p13);
+        assert!((need - 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perf_at_power_clamps() {
+        let g = presets::gpu("h100").unwrap();
+        assert_eq!(g.perf_at_power(5.0), g.perf_at_power(g.max_boost));
+        assert_eq!(g.perf_at_power(0.0), g.perf_at_power(0.2));
+    }
+
+    #[test]
+    fn dtype_bytes_and_parse() {
+        assert_eq!(Dtype::BF16.bytes(), 2);
+        assert_eq!(Dtype::parse("FP8").unwrap(), Dtype::FP8);
+        assert!(Dtype::parse("int4").is_err());
+    }
+
+    #[test]
+    fn flops_per_token_dominated_by_params() {
+        let m = presets::model("gpt-175b").unwrap();
+        let f = m.flops_per_token(2048);
+        // classic 6·params lower bound
+        assert!(f >= 6.0 * m.params() as f64);
+        assert!(f < 8.0 * m.params() as f64);
+    }
+
+    #[test]
+    fn workload_global_batch() {
+        let w = WorkloadConfig {
+            seq_len: 16384,
+            minibatch_tokens: 16 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        };
+        assert_eq!(w.global_batch(), 1024);
+    }
+}

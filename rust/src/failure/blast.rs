@@ -1,0 +1,110 @@
+//! Failure blast radius (§6.4 / Fig. 10): how many GPUs a single failure
+//! event takes out. Per [Cui et al. 2025], 91% of GPU failures are
+//! uncontained memory / MMU errors confined to one GPU, ~5% are NVLink
+//! errors that can propagate; and on GB200-class racks operators may
+//! prefer discarding a whole compute tray (node) or domain.
+
+use crate::cluster::topology::Topology;
+
+/// Blast-radius policy for a single failure event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlastRadius {
+    /// Only the failing GPU.
+    Single,
+    /// The failing GPU plus `k - 1` neighbours within its node/domain.
+    Gpus(usize),
+    /// The failing GPU's host node (compute tray).
+    Node,
+    /// The entire scale-up domain.
+    Domain,
+}
+
+impl BlastRadius {
+    pub fn parse(s: &str) -> anyhow::Result<BlastRadius> {
+        Ok(match s {
+            "single" | "1" => BlastRadius::Single,
+            "node" => BlastRadius::Node,
+            "domain" => BlastRadius::Domain,
+            other => BlastRadius::Gpus(
+                other
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad blast radius '{other}'"))?,
+            ),
+        })
+    }
+
+    /// Number of GPUs affected under topology `t`.
+    pub fn size(&self, t: &Topology) -> usize {
+        match self {
+            BlastRadius::Single => 1,
+            BlastRadius::Gpus(k) => (*k).min(t.domain_size),
+            BlastRadius::Node => t.gpus_per_node,
+            BlastRadius::Domain => t.domain_size,
+        }
+    }
+
+    /// GPUs taken out when `gpu` fails. The affected set is contained
+    /// within the GPU's scale-up domain (failures never propagate over
+    /// the scale-out network) and aligned to blocks of `size` so whole
+    /// trays/domains are discarded cleanly.
+    pub fn affected(&self, t: &Topology, gpu: usize) -> Vec<usize> {
+        let k = self.size(t);
+        let domain_start = t.domain_of(gpu) * t.domain_size;
+        // Align to k-sized blocks within the domain.
+        let offset = (gpu - domain_start) / k * k;
+        let start = domain_start + offset;
+        (start..start + k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_is_self() {
+        let t = Topology::of(64, 16, 4);
+        assert_eq!(BlastRadius::Single.affected(&t, 37), vec![37]);
+    }
+
+    #[test]
+    fn node_takes_out_tray() {
+        let t = Topology::of(64, 16, 4);
+        // gpu 37 is on node 9 (gpus 36..40)
+        assert_eq!(BlastRadius::Node.affected(&t, 37), vec![36, 37, 38, 39]);
+    }
+
+    #[test]
+    fn domain_takes_out_whole_domain() {
+        let t = Topology::of(64, 16, 4);
+        let a = BlastRadius::Domain.affected(&t, 37);
+        assert_eq!(a, (32..48).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pair_blocks_stay_in_domain() {
+        let t = Topology::of(64, 16, 4);
+        for gpu in 0..64 {
+            let a = BlastRadius::Gpus(2).affected(&t, gpu);
+            assert_eq!(a.len(), 2);
+            assert!(a.contains(&gpu));
+            assert!(a.iter().all(|&g| t.domain_of(g) == t.domain_of(gpu)));
+        }
+    }
+
+    #[test]
+    fn oversized_radius_clamps_to_domain() {
+        let t = Topology::of(64, 16, 4);
+        let a = BlastRadius::Gpus(100).affected(&t, 5);
+        assert_eq!(a.len(), 16);
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(BlastRadius::parse("single").unwrap(), BlastRadius::Single);
+        assert_eq!(BlastRadius::parse("4").unwrap(), BlastRadius::Gpus(4));
+        assert_eq!(BlastRadius::parse("node").unwrap(), BlastRadius::Node);
+        assert_eq!(BlastRadius::parse("domain").unwrap(), BlastRadius::Domain);
+        assert!(BlastRadius::parse("huge").is_err());
+    }
+}

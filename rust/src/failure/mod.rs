@@ -1,0 +1,13 @@
+//! Failure engine: rate models calibrated to the Llama-3 training report,
+//! blast-radius expansion, synthetic failure traces (Fig. 4) and
+//! Monte-Carlo failure-placement scenarios (Figs. 3, 6, 10).
+
+pub mod blast;
+pub mod rates;
+pub mod scenario;
+pub mod trace;
+
+pub use blast::BlastRadius;
+pub use rates::FailureModel;
+pub use scenario::{sample_failed_gpus, Scenario};
+pub use trace::{FailureEvent, Trace};

@@ -1,0 +1,125 @@
+//! Failure rate model.
+//!
+//! Calibrated from the Llama-3 training report (§2.3 / Fig. 4 of the
+//! paper): ~466 job interruptions over 54 days on a 16,384-GPU cluster,
+//! 78% attributed to hardware. Hardware failures need a part swap
+//! (3–5 days, the paper notes this may be optimistic); software failures
+//! recover in ~3 hours. The paper's 3× sensitivity case models observed
+//! rate spikes ([15]: 7× variation in a 16K-A100 fleet).
+
+use crate::util::prng::Rng;
+
+/// Per-GPU failure process parameters.
+#[derive(Clone, Debug)]
+pub struct FailureModel {
+    /// Failures per GPU-day (both kinds combined).
+    pub failures_per_gpu_day: f64,
+    /// Fraction of failures that are hardware (paper: 0.78).
+    pub hw_fraction: f64,
+    /// Hardware recovery time range, hours (paper: 3–5 days).
+    pub hw_recovery_hours: (f64, f64),
+    /// Software recovery time, hours (paper: 3 h).
+    pub sw_recovery_hours: f64,
+}
+
+impl FailureModel {
+    /// Llama-3-report calibration: 466 interruptions / 54 days / 16,384
+    /// GPUs ≈ 5.3e-4 failures per GPU-day.
+    pub fn llama3() -> FailureModel {
+        FailureModel {
+            failures_per_gpu_day: 466.0 / (54.0 * 16_384.0),
+            hw_fraction: 0.78,
+            hw_recovery_hours: (3.0 * 24.0, 5.0 * 24.0),
+            sw_recovery_hours: 3.0,
+        }
+    }
+
+    /// The paper's "3× the Llama-3 rate" sensitivity case.
+    pub fn llama3_3x() -> FailureModel {
+        let mut m = FailureModel::llama3();
+        m.failures_per_gpu_day *= 3.0;
+        m
+    }
+
+    /// Scale the base rate (for sweeps).
+    pub fn scaled(&self, factor: f64) -> FailureModel {
+        let mut m = self.clone();
+        m.failures_per_gpu_day *= factor;
+        m
+    }
+
+    /// Expected failures per hour across `n_gpus`.
+    pub fn cluster_rate_per_hour(&self, n_gpus: usize) -> f64 {
+        self.failures_per_gpu_day * n_gpus as f64 / 24.0
+    }
+
+    /// Draw a recovery duration (hours) for one failure event.
+    pub fn draw_recovery_hours(&self, rng: &mut Rng) -> (bool, f64) {
+        if rng.chance(self.hw_fraction) {
+            let (lo, hi) = self.hw_recovery_hours;
+            (true, rng.range_f64(lo, hi))
+        } else {
+            (false, self.sw_recovery_hours)
+        }
+    }
+
+    /// Steady-state expected fraction of GPUs concurrently failed
+    /// (Little's law: rate × mean repair time).
+    pub fn steady_state_failed_fraction(&self) -> f64 {
+        let (lo, hi) = self.hw_recovery_hours;
+        let mean_hours =
+            self.hw_fraction * 0.5 * (lo + hi) + (1.0 - self.hw_fraction) * self.sw_recovery_hours;
+        (self.failures_per_gpu_day / 24.0) * mean_hours
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama3_rate_magnitude() {
+        let m = FailureModel::llama3();
+        assert!((5.0e-4..6.0e-4).contains(&m.failures_per_gpu_day));
+        assert!((m.hw_fraction - 0.78).abs() < 1e-12);
+    }
+
+    #[test]
+    fn steady_state_fraction_matches_paper_regime() {
+        // Paper Fig. 4: with 3/5-day hw recovery the 16K cluster spends most
+        // of its time above 0.1% failed; steady state should be ~0.1–0.4%.
+        let f = FailureModel::llama3().steady_state_failed_fraction();
+        assert!((0.001..0.004).contains(&f), "steady-state {f}");
+        // 3x case roughly triples it.
+        let f3 = FailureModel::llama3_3x().steady_state_failed_fraction();
+        assert!((f3 / f - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recovery_draws_in_range() {
+        let m = FailureModel::llama3();
+        let mut rng = Rng::new(1);
+        let mut hw_seen = 0;
+        for _ in 0..2000 {
+            let (is_hw, hours) = m.draw_recovery_hours(&mut rng);
+            if is_hw {
+                hw_seen += 1;
+                assert!((72.0..=120.0).contains(&hours));
+            } else {
+                assert_eq!(hours, 3.0);
+            }
+        }
+        // ~78% hardware
+        assert!((1450..1700).contains(&hw_seen), "hw {hw_seen}");
+    }
+
+    #[test]
+    fn cluster_rate_scales_linearly() {
+        let m = FailureModel::llama3();
+        let r1 = m.cluster_rate_per_hour(16_384);
+        let r2 = m.cluster_rate_per_hour(32_768);
+        assert!((r2 / r1 - 2.0).abs() < 1e-12);
+        // ~8.6 failures/day on the Llama-3 cluster.
+        assert!((r1 * 24.0 - 8.63).abs() < 0.1);
+    }
+}

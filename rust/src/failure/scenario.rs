@@ -1,0 +1,187 @@
+//! Monte-Carlo failure-placement scenarios (Figs. 3, 6, 10): sample F
+//! failed GPUs uniformly at random (with blast-radius expansion) and
+//! summarize the per-domain damage — the input to the availability and
+//! throughput-loss computations.
+
+use super::blast::BlastRadius;
+use crate::cluster::Topology;
+use crate::util::prng::Rng;
+
+/// One sampled failure placement.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Healthy GPUs remaining per domain.
+    pub domain_healthy: Vec<usize>,
+    pub domain_size: usize,
+    pub n_failed: usize,
+}
+
+impl Scenario {
+    pub fn n_domains(&self) -> usize {
+        self.domain_healthy.len()
+    }
+
+    /// Domains with zero failures.
+    pub fn full_domains(&self) -> usize {
+        self.domain_healthy.iter().filter(|&&h| h == self.domain_size).count()
+    }
+
+    /// Domains with at least one failure.
+    pub fn impacted_domains(&self) -> usize {
+        self.n_domains() - self.full_domains()
+    }
+
+    /// Fleet availability if any impacted domain is entirely unusable
+    /// (the uniform-TP / pre-NTP model behind Fig. 3).
+    pub fn availability_domain_drop(&self) -> f64 {
+        self.full_domains() as f64 / self.n_domains() as f64
+    }
+
+    /// Fleet availability if impacted domains still contribute their
+    /// healthy GPUs (the NTP model: throughput ∝ functional GPUs).
+    pub fn availability_ntp(&self) -> f64 {
+        let healthy: usize = self.domain_healthy.iter().sum();
+        healthy as f64 / (self.n_domains() * self.domain_size) as f64
+    }
+}
+
+/// Sample `n_failed` distinct failed GPUs uniformly; when `blast`
+/// expands an event, sampling proceeds event-by-event until at least
+/// `n_failed` GPUs are down (matching the paper's x-axis of "fraction of
+/// GPUs failed").
+pub fn sample_failed_gpus(
+    topo: &Topology,
+    n_failed: usize,
+    blast: BlastRadius,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    if blast == BlastRadius::Single {
+        return rng.sample_indices(topo.n_gpus, n_failed);
+    }
+    let mut failed = vec![false; topo.n_gpus];
+    let mut count = 0;
+    while count < n_failed {
+        let gpu = rng.index(topo.n_gpus);
+        for g in blast.affected(topo, gpu) {
+            if !failed[g] {
+                failed[g] = true;
+                count += 1;
+            }
+        }
+    }
+    failed
+        .iter()
+        .enumerate()
+        .filter_map(|(g, &f)| if f { Some(g) } else { None })
+        .collect()
+}
+
+/// Build a [`Scenario`] from an explicit failed-GPU set.
+pub fn scenario_from_failed(topo: &Topology, failed: &[usize]) -> Scenario {
+    let mut domain_healthy = vec![topo.domain_size; topo.n_domains()];
+    for &g in failed {
+        domain_healthy[topo.domain_of(g)] -= 1;
+    }
+    Scenario {
+        domain_healthy,
+        domain_size: topo.domain_size,
+        n_failed: failed.len(),
+    }
+}
+
+/// Sample a scenario directly.
+pub fn sample_scenario(
+    topo: &Topology,
+    n_failed: usize,
+    blast: BlastRadius,
+    rng: &mut Rng,
+) -> Scenario {
+    let failed = sample_failed_gpus(topo, n_failed, blast, rng);
+    scenario_from_failed(topo, &failed)
+}
+
+/// Closed-form expected domain-drop availability under uniform single-GPU
+/// failures: P(domain untouched) = prod_{i=0..D-1} (N - F - i) / (N - i).
+/// Used to validate the Monte-Carlo sampler.
+pub fn expected_availability_domain_drop(n_gpus: usize, domain_size: usize, n_failed: usize) -> f64 {
+    let mut p = 1.0;
+    for i in 0..domain_size {
+        if n_failed + i >= n_gpus {
+            return 0.0; // more failures than remaining slots
+        }
+        p *= (n_gpus - n_failed - i) as f64 / (n_gpus - i) as f64;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampled_failures_are_distinct_and_counted() {
+        let topo = Topology::of(1024, 32, 4);
+        let mut rng = Rng::new(5);
+        let failed = sample_failed_gpus(&topo, 50, BlastRadius::Single, &mut rng);
+        assert_eq!(failed.len(), 50);
+        let s = scenario_from_failed(&topo, &failed);
+        assert_eq!(s.n_failed, 50);
+        assert_eq!(
+            s.domain_healthy.iter().sum::<usize>(),
+            1024 - 50
+        );
+    }
+
+    #[test]
+    fn monte_carlo_matches_closed_form() {
+        let topo = Topology::of(4096, 16, 4);
+        let n_failed = 8;
+        let mut rng = Rng::new(9);
+        let trials = 4000;
+        let mean_avail: f64 = (0..trials)
+            .map(|_| {
+                sample_scenario(&topo, n_failed, BlastRadius::Single, &mut rng)
+                    .availability_domain_drop()
+            })
+            .sum::<f64>()
+            / trials as f64;
+        let expected = expected_availability_domain_drop(4096, 16, n_failed);
+        assert!(
+            (mean_avail - expected).abs() < 0.005,
+            "mc {mean_avail} vs exact {expected}"
+        );
+    }
+
+    #[test]
+    fn paper_fig3_tp64_at_0_1pct() {
+        // Paper: TP64, 0.1% failed → ~94% availability.
+        let a = expected_availability_domain_drop(32_768, 64, 33);
+        assert!((a - 0.94).abs() < 0.01, "availability {a}");
+    }
+
+    #[test]
+    fn ntp_availability_dominates_domain_drop() {
+        let topo = Topology::of(2048, 32, 4);
+        let mut rng = Rng::new(2);
+        for &f in &[1usize, 10, 50, 200] {
+            let s = sample_scenario(&topo, f, BlastRadius::Single, &mut rng);
+            assert!(s.availability_ntp() >= s.availability_domain_drop());
+            // NTP availability is exactly 1 - failed fraction.
+            let exact = 1.0 - f as f64 / 2048.0;
+            assert!((s.availability_ntp() - exact).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn blast_expansion_reaches_target() {
+        let topo = Topology::of(512, 16, 4);
+        let mut rng = Rng::new(3);
+        let failed = sample_failed_gpus(&topo, 30, BlastRadius::Node, &mut rng);
+        assert!(failed.len() >= 30);
+        // all-or-nothing per node
+        for n in 0..topo.n_nodes() {
+            let in_node = topo.node_gpus(n).filter(|g| failed.contains(g)).count();
+            assert!(in_node == 0 || in_node == topo.gpus_per_node);
+        }
+    }
+}

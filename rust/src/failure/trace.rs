@@ -1,0 +1,287 @@
+//! Synthetic failure traces (paper Fig. 4): Poisson failure arrivals at
+//! the calibrated per-GPU rate, hw/sw recovery mix, replayed against a
+//! [`FleetHealth`] to produce the concurrently-failed time series.
+
+use super::blast::BlastRadius;
+use super::rates::FailureModel;
+use crate::cluster::{FleetHealth, Topology};
+use crate::util::prng::Rng;
+
+/// One failure event in a trace.
+#[derive(Clone, Copy, Debug)]
+pub struct FailureEvent {
+    pub at_hours: f64,
+    pub gpu: usize,
+    pub is_hw: bool,
+    pub recover_at_hours: f64,
+}
+
+/// A generated failure trace over a time horizon.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub horizon_hours: f64,
+    pub events: Vec<FailureEvent>,
+}
+
+impl Trace {
+    /// Generate a trace: cluster-wide Poisson process with per-event
+    /// uniform GPU choice (paper assumption: failures i.i.d. across GPUs).
+    pub fn generate(
+        topo: &Topology,
+        model: &FailureModel,
+        horizon_hours: f64,
+        rng: &mut Rng,
+    ) -> Trace {
+        let rate = model.cluster_rate_per_hour(topo.n_gpus);
+        let mut events = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(rate);
+            if t >= horizon_hours {
+                break;
+            }
+            let gpu = rng.index(topo.n_gpus);
+            let (is_hw, rec) = model.draw_recovery_hours(rng);
+            events.push(FailureEvent {
+                at_hours: t,
+                gpu,
+                is_hw,
+                recover_at_hours: t + rec,
+            });
+        }
+        Trace { horizon_hours, events }
+    }
+
+    /// Sample the number of concurrently-failed GPUs at `step_hours`
+    /// granularity, applying `blast` expansion. Returns `(t, failed)`
+    /// pairs. A GPU hit by overlapping events stays failed until the
+    /// latest recovery.
+    pub fn failed_series(
+        &self,
+        topo: &Topology,
+        blast: BlastRadius,
+        step_hours: f64,
+    ) -> Vec<(f64, usize)> {
+        // Build per-GPU failure intervals.
+        #[derive(Clone, Copy)]
+        struct Interval {
+            start: f64,
+            end: f64,
+            gpu: usize,
+        }
+        let mut intervals: Vec<Interval> = Vec::new();
+        for ev in &self.events {
+            for g in blast.affected(topo, ev.gpu) {
+                intervals.push(Interval { start: ev.at_hours, end: ev.recover_at_hours, gpu: g });
+            }
+        }
+        // Sweep: at each sample point count GPUs with an active interval.
+        // Merge per-GPU overlapping intervals first.
+        intervals.sort_by(|a, b| (a.gpu, a.start).partial_cmp(&(b.gpu, b.start)).unwrap());
+        let mut merged: Vec<Interval> = Vec::new();
+        for iv in intervals {
+            match merged.last_mut() {
+                Some(last) if last.gpu == iv.gpu && iv.start <= last.end => {
+                    last.end = last.end.max(iv.end);
+                }
+                _ => merged.push(iv),
+            }
+        }
+        // Event-count sweep via start/end breakpoints.
+        let mut starts: Vec<f64> = merged.iter().map(|iv| iv.start).collect();
+        let mut ends: Vec<f64> = merged.iter().map(|iv| iv.end).collect();
+        starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut out = Vec::new();
+        let mut si = 0;
+        let mut ei = 0;
+        let n_steps = (self.horizon_hours / step_hours).ceil() as usize;
+        for step in 0..=n_steps {
+            let t = step as f64 * step_hours;
+            while si < starts.len() && starts[si] <= t {
+                si += 1;
+            }
+            while ei < ends.len() && ends[ei] <= t {
+                ei += 1;
+            }
+            out.push((t, si - ei));
+        }
+        out
+    }
+
+    /// Replay the trace into a fresh `FleetHealth` up to `now_hours`.
+    pub fn replay_to(
+        &self,
+        topo: &Topology,
+        blast: BlastRadius,
+        now_hours: f64,
+    ) -> FleetHealth {
+        let mut fleet = FleetHealth::new(topo.clone());
+        for ev in &self.events {
+            if ev.at_hours > now_hours {
+                break;
+            }
+            if ev.recover_at_hours > now_hours {
+                for g in blast.affected(topo, ev.gpu) {
+                    fleet.fail(g, ev.at_hours, ev.recover_at_hours);
+                }
+            }
+        }
+        fleet
+    }
+
+    /// Generate a trace with *time-varying* rate spikes ([Kokolis et al.]
+    /// observed 7x rate variation in a 16K-A100 fleet). Implemented by
+    /// thinning a Poisson process at `peak = spike_factor x base`:
+    /// during spike windows (each `spike_hours` long, starting at rate
+    /// `spikes_per_week`) all arrivals are kept, otherwise only
+    /// `1/spike_factor` of them.
+    pub fn generate_with_spikes(
+        topo: &Topology,
+        model: &FailureModel,
+        horizon_hours: f64,
+        spike_factor: f64,
+        spikes_per_week: f64,
+        spike_hours: f64,
+        rng: &mut Rng,
+    ) -> Trace {
+        assert!(spike_factor >= 1.0);
+        // sample spike windows
+        let mut windows: Vec<(f64, f64)> = Vec::new();
+        let spike_rate = spikes_per_week / (7.0 * 24.0);
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(spike_rate.max(1e-12));
+            if t >= horizon_hours {
+                break;
+            }
+            windows.push((t, t + spike_hours));
+        }
+        let in_spike = |t: f64| windows.iter().any(|&(a, b)| t >= a && t < b);
+
+        let peak = model.cluster_rate_per_hour(topo.n_gpus) * spike_factor;
+        let mut events = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(peak);
+            if t >= horizon_hours {
+                break;
+            }
+            if !in_spike(t) && !rng.chance(1.0 / spike_factor) {
+                continue; // thinned to the base rate
+            }
+            let gpu = rng.index(topo.n_gpus);
+            let (is_hw, rec) = model.draw_recovery_hours(rng);
+            events.push(FailureEvent { at_hours: t, gpu, is_hw, recover_at_hours: t + rec });
+        }
+        Trace { horizon_hours, events }
+    }
+
+    /// Fraction of sampled time with failed fraction strictly above `thresh`.
+    pub fn time_above_fraction(
+        &self,
+        topo: &Topology,
+        blast: BlastRadius,
+        step_hours: f64,
+        thresh: f64,
+    ) -> f64 {
+        let series = self.failed_series(topo, blast, step_hours);
+        let above = series
+            .iter()
+            .filter(|&&(_, failed)| failed as f64 / topo.n_gpus as f64 > thresh)
+            .count();
+        above as f64 / series.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_topo() -> Topology {
+        Topology::of(1024, 8, 4)
+    }
+
+    #[test]
+    fn event_count_matches_rate() {
+        let topo = small_topo();
+        let model = FailureModel {
+            failures_per_gpu_day: 0.01,
+            hw_fraction: 0.5,
+            hw_recovery_hours: (10.0, 20.0),
+            sw_recovery_hours: 1.0,
+        };
+        let mut rng = Rng::new(7);
+        let horizon = 24.0 * 100.0;
+        let trace = Trace::generate(&topo, &model, horizon, &mut rng);
+        let expected = model.cluster_rate_per_hour(topo.n_gpus) * horizon;
+        let got = trace.events.len() as f64;
+        assert!((got / expected - 1.0).abs() < 0.1, "got {got} expected {expected}");
+        // events sorted in time, within horizon
+        for w in trace.events.windows(2) {
+            assert!(w[0].at_hours <= w[1].at_hours);
+        }
+        assert!(trace.events.iter().all(|e| e.at_hours < horizon));
+    }
+
+    #[test]
+    fn series_counts_match_replay() {
+        let topo = small_topo();
+        let model = FailureModel::llama3().scaled(50.0);
+        let mut rng = Rng::new(3);
+        let trace = Trace::generate(&topo, &model, 24.0 * 15.0, &mut rng);
+        let series = trace.failed_series(&topo, BlastRadius::Single, 6.0);
+        for &(t, failed) in series.iter().step_by(10) {
+            let fleet = trace.replay_to(&topo, BlastRadius::Single, t);
+            assert_eq!(fleet.n_failed(), failed, "mismatch at t={t}");
+            fleet.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn blast_radius_scales_failed_counts() {
+        let topo = small_topo();
+        let model = FailureModel::llama3().scaled(20.0);
+        let mut rng = Rng::new(11);
+        let trace = Trace::generate(&topo, &model, 24.0 * 15.0, &mut rng);
+        let single: usize =
+            trace.failed_series(&topo, BlastRadius::Single, 12.0).iter().map(|x| x.1).sum();
+        let node: usize =
+            trace.failed_series(&topo, BlastRadius::Node, 12.0).iter().map(|x| x.1).sum();
+        assert!(node > 2 * single, "node {node} vs single {single}");
+    }
+
+    #[test]
+    fn spiky_traces_have_heavier_tails() {
+        let topo = small_topo();
+        let model = FailureModel::llama3().scaled(30.0);
+        let horizon = 24.0 * 30.0;
+        let mut r1 = Rng::new(21);
+        let flat = Trace::generate(&topo, &model, horizon, &mut r1);
+        let mut r2 = Rng::new(21);
+        let spiky = Trace::generate_with_spikes(&topo, &model, horizon, 7.0, 1.0, 12.0, &mut r2);
+        let peak = |t: &Trace| {
+            t.failed_series(&topo, BlastRadius::Single, 2.0)
+                .iter()
+                .map(|x| x.1)
+                .max()
+                .unwrap_or(0)
+        };
+        // spiky trace mean rate ~ base rate, but peaks higher
+        let ratio = flat.events.len() as f64 / spiky.events.len().max(1) as f64;
+        assert!((0.4..2.5).contains(&ratio), "mean rates should be comparable ({ratio})");
+        assert!(peak(&spiky) > peak(&flat), "spikes should raise the peak");
+    }
+
+    #[test]
+    fn paper_fig4_regime_time_above_threshold() {
+        // Llama-3 rates on the 16K cluster: most of a 15-day trace should
+        // sit above 0.1% failed (paper reports 81%).
+        let topo = Topology::of(16_384, 8, 8);
+        let model = FailureModel::llama3();
+        let mut rng = Rng::new(42);
+        let trace = Trace::generate(&topo, &model, 24.0 * 15.0, &mut rng);
+        let frac = trace.time_above_fraction(&topo, BlastRadius::Single, 1.0, 0.001);
+        assert!(frac > 0.5, "time above 0.1% = {frac}");
+    }
+}

@@ -1,0 +1,35 @@
+//! `ntp` — Nonuniform Tensor Parallelism: failure-resilient LLM training.
+//!
+//! Reproduction of "Nonuniform-Tensor-Parallelism: Mitigating GPU failure
+//! impact for Scaled-up LLM Training" (cs.DC 2025). See DESIGN.md for the
+//! system inventory and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! The crate is organized as:
+//!
+//! * [`util`] / [`config`] / [`metrics`] — infrastructure substrates
+//!   (JSON, PRNG, stats, CLI, bench harness) built in-repo because the
+//!   offline vendor set has no serde/clap/criterion.
+//! * [`cluster`] / [`failure`] — cluster topology and the failure engine
+//!   (Llama-3-calibrated rates, blast radius, Monte-Carlo scenarios).
+//! * [`ntp`] — the paper's contribution: nonuniform partitioning,
+//!   Algorithm 1 shard mapping, all-to-all reshard plans, and the
+//!   bucketed gradient-sync orchestration.
+//! * [`parallel`] / [`sim`] / [`power`] / [`manager`] — hybrid-parallel
+//!   planner, the performance simulator behind every large-scale figure,
+//!   the power-boost allocator (NTP-PW), and the fleet resource manager.
+//! * [`runtime`] / [`train`] — PJRT execution of the AOT-compiled JAX
+//!   model and the real-numerics training driver (DP replicas at
+//!   nonuniform TP, reshard + allreduce in Rust memory).
+
+pub mod util;
+pub mod config;
+pub mod metrics;
+pub mod cluster;
+pub mod failure;
+pub mod ntp;
+pub mod parallel;
+pub mod sim;
+pub mod power;
+pub mod manager;
+pub mod runtime;
+pub mod train;

@@ -1,0 +1,316 @@
+//! `ntp` CLI — the leader entrypoint.
+//!
+//! Subcommands map to the paper's workflows:
+//!
+//! * `train`       — real NTP training over the AOT artifacts (PJRT).
+//! * `plan`        — hybrid-parallel config search (Fig. 2b machinery).
+//! * `simulate`    — iteration-time breakdown for one config.
+//! * `availability`— failure-amplification scan (Fig. 3).
+//! * `trace`       — synthetic failure trace stats (Fig. 4).
+//! * `reshard-plan`— Algorithm-1 shard mapping + all-to-all splits.
+//! * `power`       — power-boost solve for reduced-TP replicas (Table 1).
+//! * `fleet`       — trace-driven fleet simulation (Figs. 6/7 semantics).
+
+use anyhow::Result;
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{sample_failed_gpus, scenario::scenario_from_failed, BlastRadius, FailureModel, Trace};
+use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
+use ntp::ntp::{ReshardPlan, ShardMap};
+use ntp::parallel::{best_config, ParallelConfig};
+use ntp::power::{min_boost_for, BoostDecision, RackDesign};
+use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::cli::Args;
+use ntp::util::prng::Rng;
+use ntp::util::table::{f2, f3, f4, pct, Table};
+
+fn main() {
+    let mut args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&mut args),
+        Some("plan") => cmd_plan(&mut args),
+        Some("simulate") => cmd_simulate(&mut args),
+        Some("availability") => cmd_availability(&mut args),
+        Some("trace") => cmd_trace(&mut args),
+        Some("reshard-plan") => cmd_reshard_plan(&mut args),
+        Some("power") => cmd_power(&mut args),
+        Some("fleet") => cmd_fleet(&mut args),
+        Some(other) => Err(anyhow::anyhow!("unknown subcommand '{other}'\n{USAGE}")),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+ntp — Nonuniform Tensor Parallelism (paper reproduction)
+
+USAGE: ntp <subcommand> [options]
+
+  train         --model tiny|e2e-20m|e2e-100m --replicas 4,3 --batches 4,4
+                --steps N --lr 1e-3 --seed S [--fail-at STEP --fail-tp TP]
+  plan          --model gpt-480b --cluster paper-32k-nvl32 --seq 8192
+                [--tp-cap 32]
+  simulate      --model gpt-480b --cluster paper-32k-nvl32 --tp 32 --pp 8
+                --dp 128 [--seq 16384]
+  availability  --cluster paper-32k-nvl32 --tp 8,16,32,64 [--samples 200]
+  trace         --cluster llama3-16k-nvl8 --days 15 [--rate-x 1.0]
+  reshard-plan  --k 12288 --n1 32 --n2 30
+  power         --model gpt-480b --cluster paper-32k-nvl32 --tp 32 --pp 8
+                --dp 128
+  fleet         --strategy ntp|ntp-pw|dp-drop --days 15 --spares 0
+                [--replicas 16] [--rate-x 10]
+";
+
+fn cmd_train(args: &mut Args) -> Result<()> {
+    use ntp::runtime::Runtime;
+    use ntp::train::{Trainer, TrainerConfig};
+    let model = args.str_or("model", "tiny");
+    let tps = args.usize_list_or("replicas", &[4, 3]);
+    let batches = args.usize_list_or("batches", &vec![4; tps.len()]);
+    let steps = args.usize_or("steps", 20);
+    let lr = args.f64_or("lr", 1e-3) as f32;
+    let seed = args.u64_or("seed", 42);
+    let fail_at = args.usize_or("fail-at", 0);
+    let fail_tp = args.usize_or("fail-tp", 3);
+    args.finish()?;
+    anyhow::ensure!(tps.len() == batches.len(), "--replicas and --batches lengths differ");
+
+    let rt = Runtime::with_default_dir()?;
+    let replicas: Vec<(usize, usize)> = tps.into_iter().zip(batches).collect();
+    println!("# training {model} with replicas {replicas:?}");
+    let mut trainer = Trainer::new(&rt, &TrainerConfig {
+        model: model.clone(),
+        replicas,
+        lr,
+        seed,
+    })?;
+    for step in 0..steps {
+        if fail_at > 0 && step == fail_at {
+            println!("! injecting failure: replica 1 -> TP{fail_tp}");
+            trainer.inject_failure(&rt, 1, fail_tp, trainer.replicas[1].batch())?;
+        }
+        let rec = trainer.step()?;
+        if step < 3 || (step + 1) % 10 == 0 {
+            println!(
+                "step {:>4}  loss {:.4}  wall {:.2}s  exec {:.2}s  sync {:.1}ms",
+                rec.step,
+                rec.loss,
+                rec.wall_secs,
+                rec.execute_secs,
+                rec.sync.total() * 1e3
+            );
+        }
+    }
+    println!("tokens/sec (last 10 steps): {:.1}", trainer.tokens_per_sec(10));
+    Ok(())
+}
+
+fn cmd_plan(args: &mut Args) -> Result<()> {
+    let model = presets::model(&args.str_or("model", "gpt-480b"))?;
+    let cluster = presets::cluster(&args.str_or("cluster", "paper-32k-nvl32"))?;
+    let seq = args.usize_or("seq", 8192);
+    let tp_cap = args.usize_or("tp-cap", cluster.domain_size);
+    args.finish()?;
+    let w = WorkloadConfig { seq_len: seq, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 };
+    let best = best_config(&model, &w, &cluster, tp_cap, SimParams::default())
+        .ok_or_else(|| anyhow::anyhow!("no legal config"))?;
+    println!("best config: {}", best.cfg.label());
+    println!("tokens/s/GPU: {:.1}", best.tokens_per_sec_per_gpu);
+    let b = best.breakdown;
+    let mut t = Table::new(&["component", "seconds", "share"]);
+    for (name, v) in [
+        ("compute", b.compute),
+        ("tp_comm", b.tp_comm),
+        ("pp_bubble", b.pp_bubble),
+        ("pp_p2p", b.pp_p2p),
+        ("dp_exposed", b.dp_exposed),
+    ] {
+        t.row(&[name.into(), f3(v), pct(v / b.total())]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &mut Args) -> Result<()> {
+    let model = presets::model(&args.str_or("model", "gpt-480b"))?;
+    let cluster = presets::cluster(&args.str_or("cluster", "paper-32k-nvl32"))?;
+    let seq = args.usize_or("seq", 16_384);
+    let cfg = ParallelConfig {
+        tp: args.usize_or("tp", 32),
+        pp: args.usize_or("pp", 8),
+        dp: args.usize_or("dp", 128),
+        microbatch: args.usize_or("microbatch", 1),
+    };
+    args.finish()?;
+    let w = WorkloadConfig { seq_len: seq, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 };
+    let sim = IterationModel::new(model, w, cluster, SimParams::default());
+    let b = sim.healthy_iteration(&cfg);
+    println!("config {}: iteration {:.3}s, util {}", cfg.label(), b.total(), pct(b.utilization()));
+    Ok(())
+}
+
+fn cmd_availability(args: &mut Args) -> Result<()> {
+    let cluster = presets::cluster(&args.str_or("cluster", "paper-32k-nvl32"))?;
+    let tps = args.usize_list_or("tp", &[8, 16, 32, 64]);
+    let samples = args.usize_or("samples", 200);
+    args.finish()?;
+    let mut t = Table::new(&["failed%", "TP", "avail(median)", "avail(min)"]);
+    let mut rng = Rng::new(1);
+    for &tp in &tps {
+        let topo = Topology::of(cluster.n_gpus / tp * tp, tp, tp.min(4));
+        for &frac in &[0.0005, 0.001, 0.002, 0.004] {
+            let n_failed = (frac * topo.n_gpus as f64) as usize;
+            let mut avails: Vec<f64> = (0..samples)
+                .map(|_| {
+                    let failed =
+                        sample_failed_gpus(&topo, n_failed, BlastRadius::Single, &mut rng);
+                    scenario_from_failed(&topo, &failed).availability_domain_drop()
+                })
+                .collect();
+            avails.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            t.row(&[
+                pct(frac),
+                format!("{tp}"),
+                f4(avails[samples / 2]),
+                f4(avails[0]),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_trace(args: &mut Args) -> Result<()> {
+    let cluster = presets::cluster(&args.str_or("cluster", "llama3-16k-nvl8"))?;
+    let days = args.f64_or("days", 15.0);
+    let rate_x = args.f64_or("rate-x", 1.0);
+    let seed = args.u64_or("seed", 7);
+    args.finish()?;
+    let topo = Topology::new(&cluster);
+    let model = FailureModel::llama3().scaled(rate_x);
+    let mut rng = Rng::new(seed);
+    let trace = Trace::generate(&topo, &model, days * 24.0, &mut rng);
+    let series = trace.failed_series(&topo, BlastRadius::Single, 1.0);
+    let fracs: Vec<f64> =
+        series.iter().map(|&(_, f)| f as f64 / topo.n_gpus as f64).collect();
+    println!("events: {}", trace.events.len());
+    println!("peak failed fraction: {}", pct(fracs.iter().cloned().fold(0.0, f64::max)));
+    println!(
+        "time above 0.1% failed: {}",
+        pct(trace.time_above_fraction(&topo, BlastRadius::Single, 1.0, 0.001))
+    );
+    Ok(())
+}
+
+fn cmd_reshard_plan(args: &mut Args) -> Result<()> {
+    let k = args.usize_or("k", 12_288);
+    let n1 = args.usize_or("n1", 32);
+    let n2 = args.usize_or("n2", 30);
+    args.finish()?;
+    let map = ShardMap::build(k, n1, n2);
+    let plan = ReshardPlan::from_map(&map);
+    println!("k={k} n1={n1} n2={n2}");
+    let mut t = Table::new(&["gpu", "role", "units", "sent", "received"]);
+    for g in 0..n1 {
+        let role = if g < n2 { "sync" } else { "offload" };
+        let recv = if g < n2 { plan.received_by(g) } else { 0 };
+        t.row(&[
+            format!("{g}"),
+            role.into(),
+            format!("{}", map.comp_size(g)),
+            format!("{}", plan.sent_by(g)),
+            format!("{recv}"),
+        ]);
+    }
+    t.print();
+    let unit_bytes = 2 * 2 * args.usize_or("hidden", 12_288);
+    println!(
+        "max bytes/GPU: {:.2} MB; total moved: {:.2} MB",
+        plan.max_bytes_per_gpu(unit_bytes) as f64 / 1e6,
+        plan.total_bytes(unit_bytes) as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_power(args: &mut Args) -> Result<()> {
+    let model = presets::model(&args.str_or("model", "gpt-480b"))?;
+    let cluster = presets::cluster(&args.str_or("cluster", "paper-32k-nvl32"))?;
+    let cfg = ParallelConfig {
+        tp: args.usize_or("tp", 32),
+        pp: args.usize_or("pp", 8),
+        dp: args.usize_or("dp", 128),
+        microbatch: 1,
+    };
+    args.finish()?;
+    let w = WorkloadConfig { seq_len: 16_384, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 };
+    let sim = IterationModel::new(model, w, cluster, SimParams::default());
+    let full_local = sim.work.global_batch() / cfg.dp;
+    let target = sim.healthy_iteration(&cfg).total();
+    let rack = RackDesign::default();
+    let mut t = Table::new(&["TP", "power", "rel iter time"]);
+    t.row(&["32 (healthy)".into(), "1.00x".into(), f3(1.0)]);
+    for tp in [31, 30, 29, 28] {
+        match min_boost_for(&sim, &cfg, tp, full_local, target, &rack, &sim.cluster.gpu) {
+            BoostDecision::Boost { power_frac } => {
+                let perf = sim.cluster.gpu.perf_at_power(power_frac);
+                let rel = sim.ntp_iteration(&cfg, tp, full_local, perf).total() / target;
+                t.row(&[format!("{tp}-PW"), format!("{:.2}x", power_frac), f3(rel)]);
+            }
+            BoostDecision::NotNeeded => t.row(&[format!("{tp}-PW"), "1.00x".into(), f3(1.0)]),
+            BoostDecision::Infeasible { max_power_frac } => {
+                t.row(&[format!("{tp}-PW"), format!(">{:.2}x", max_power_frac), "inf".into()])
+            }
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_fleet(args: &mut Args) -> Result<()> {
+    let strategy = FtStrategy::parse(&args.str_or("strategy", "ntp"))?;
+    let days = args.f64_or("days", 15.0);
+    let spares = args.usize_or("spares", 0);
+    let n_replicas = args.usize_or("replicas", 16);
+    let rate_x = args.f64_or("rate-x", 10.0);
+    let seed = args.u64_or("seed", 5);
+    args.finish()?;
+
+    let model = presets::model("gpt-480b")?;
+    let cluster = presets::cluster("paper-32k-nvl32")?;
+    let w = WorkloadConfig { seq_len: 16_384, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 };
+    let cfg = ParallelConfig { tp: 32, pp: 8, dp: n_replicas, microbatch: 1 };
+    let sim = IterationModel::new(model, w, cluster, SimParams::default());
+    let rack = RackDesign::default();
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    let n_domains = n_replicas * cfg.pp + spares;
+    let topo = Topology::of(n_domains * 32, 32, 4);
+    let fmodel = FailureModel::llama3().scaled(rate_x);
+    let mut rng = Rng::new(seed);
+    let trace = Trace::generate(&topo, &fmodel, days * 24.0, &mut rng);
+    let fs = FleetSim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: cfg.pp,
+        strategy,
+        spares: if spares > 0 || strategy != FtStrategy::Ntp {
+            Some(SparePolicy { spare_domains: spares, min_tp: 28 })
+        } else {
+            None
+        },
+        packed: true,
+        blast: BlastRadius::Single,
+    };
+    let stats = fs.run(&trace, 3.0);
+    println!("strategy {}: ", strategy.name());
+    println!("  mean throughput:      {}", f4(stats.mean_throughput));
+    println!("  throughput per GPU:   {}", f4(stats.throughput_per_gpu));
+    println!("  paused fraction:      {}", pct(stats.paused_frac));
+    println!("  mean spares used:     {}", f2(stats.mean_spares_used));
+    Ok(())
+}

@@ -1,0 +1,327 @@
+//! Fleet simulation: evolve a failure trace against a training job and
+//! integrate throughput over time (Figs. 4, 6, 7 and the fleet_sim
+//! example). A precomputed [`StrategyTable`] makes per-event evaluation
+//! O(#replicas) instead of re-running the iteration model.
+
+use super::packing::pack_domains;
+use super::spares::{apply_spares, meets_minibatch, SparePolicy};
+use crate::cluster::Topology;
+use crate::failure::{BlastRadius, Trace};
+use crate::parallel::ParallelConfig;
+use crate::power::{min_boost_for, BoostDecision, RackDesign};
+use crate::sim::engine::{max_batch_within, min_supported_tp, FtStrategy};
+use crate::sim::IterationModel;
+
+/// Precomputed per-TP-degree responses for one (sim, cfg, strategy).
+#[derive(Clone, Debug)]
+pub struct StrategyTable {
+    pub full_tp: usize,
+    pub full_local_batch: usize,
+    pub min_tp: usize,
+    /// `batch[t]` — local batch the replica can run at TP degree
+    /// `min_tp + t` (plain NTP); `power[t]` — boost under NTP-PW
+    /// (`None` ⇒ PW infeasible, falls back to `batch_pw[t]`).
+    pub batch: Vec<usize>,
+    pub power: Vec<Option<f64>>,
+    pub batch_pw: Vec<usize>,
+}
+
+impl StrategyTable {
+    pub fn build(sim: &IterationModel, cfg: &ParallelConfig, rack: &RackDesign) -> StrategyTable {
+        let full_tp = cfg.tp;
+        let min_tp = min_supported_tp(full_tp);
+        let full_local = (sim.work.global_batch() / cfg.dp.max(1)).max(1);
+        let healthy_time = sim.healthy_iteration(cfg).total();
+        let mut batch = Vec::new();
+        let mut power = Vec::new();
+        let mut batch_pw = Vec::new();
+        for tp in min_tp..full_tp {
+            batch.push(max_batch_within(sim, cfg, tp, full_local, healthy_time, 1.0));
+            match min_boost_for(sim, cfg, tp, full_local, healthy_time, rack, &sim.cluster.gpu) {
+                BoostDecision::NotNeeded => {
+                    power.push(Some(1.0));
+                    batch_pw.push(full_local);
+                }
+                BoostDecision::Boost { power_frac } => {
+                    power.push(Some(power_frac));
+                    batch_pw.push(full_local);
+                }
+                BoostDecision::Infeasible { max_power_frac } => {
+                    power.push(None);
+                    let perf = sim.cluster.gpu.perf_at_power(max_power_frac);
+                    batch_pw.push(max_batch_within(
+                        sim, cfg, tp, full_local, healthy_time, perf,
+                    ));
+                }
+            }
+        }
+        StrategyTable { full_tp, full_local_batch: full_local, min_tp, batch, power, batch_pw }
+    }
+
+    /// Local batch a replica at TP `tp` contributes under `strategy`
+    /// (0 = dropped).
+    pub fn replica_batch(&self, tp: usize, strategy: FtStrategy) -> usize {
+        if tp >= self.full_tp {
+            return self.full_local_batch;
+        }
+        match strategy {
+            FtStrategy::DpDrop => 0,
+            _ if tp < self.min_tp => 0,
+            FtStrategy::Ntp => self.batch[tp - self.min_tp],
+            FtStrategy::NtpPw => self.batch_pw[tp - self.min_tp],
+        }
+    }
+
+    /// Fraction of the target minibatch the group processes (no overhead
+    /// terms — the fixed-minibatch pause criterion).
+    pub fn group_minibatch_frac(&self, replica_tp: &[usize], strategy: FtStrategy) -> f64 {
+        let processed: usize =
+            replica_tp.iter().map(|&tp| self.replica_batch(tp, strategy)).sum();
+        processed as f64 / (self.full_local_batch * replica_tp.len()) as f64
+    }
+
+    /// Group relative throughput for per-replica TP degrees.
+    pub fn group_throughput(&self, replica_tp: &[usize], strategy: FtStrategy) -> f64 {
+        let processed: usize =
+            replica_tp.iter().map(|&tp| self.replica_batch(tp, strategy)).sum();
+        let capacity = self.full_local_batch * replica_tp.len();
+        let frac = processed as f64 / capacity as f64;
+        let nonuniform = strategy != FtStrategy::DpDrop
+            && replica_tp.iter().any(|&t| t < self.full_tp && t >= self.min_tp);
+        if nonuniform {
+            frac * 0.995 // healthy-replica reshard overhead (§6.2)
+        } else {
+            frac
+        }
+    }
+}
+
+/// Time-integrated fleet statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetStats {
+    /// Time-weighted mean relative throughput.
+    pub mean_throughput: f64,
+    /// Fraction of time the job was paused (fixed minibatch unmet).
+    pub paused_frac: f64,
+    /// Mean spares in use.
+    pub mean_spares_used: f64,
+    /// Throughput normalized per *provisioned* GPU (incl. spares).
+    pub throughput_per_gpu: f64,
+}
+
+/// Fleet simulator over a failure trace.
+pub struct FleetSim<'a> {
+    pub topo: &'a Topology,
+    pub table: &'a StrategyTable,
+    pub domains_per_replica: usize,
+    pub strategy: FtStrategy,
+    /// `None` ⇒ flexible minibatch (Fig. 6 semantics: reduced replicas
+    /// just shrink the batch). `Some(policy)` ⇒ fixed minibatch with
+    /// spares + pausing (Fig. 7 semantics).
+    pub spares: Option<SparePolicy>,
+    pub packed: bool,
+    pub blast: BlastRadius,
+}
+
+impl<'a> FleetSim<'a> {
+    /// Run the trace, sampling at `step_hours`, and integrate.
+    pub fn run(&self, trace: &Trace, step_hours: f64) -> FleetStats {
+        let n_steps = (trace.horizon_hours / step_hours).ceil() as usize;
+        let mut tput_sum = 0.0;
+        let mut paused = 0usize;
+        let mut spares_sum = 0.0;
+        for step in 0..n_steps {
+            let t = step as f64 * step_hours;
+            let fleet = trace.replay_to(self.topo, self.blast, t);
+            let healthy = fleet.domain_healthy_counts();
+            let (tput, pause, used) = self.evaluate(healthy);
+            tput_sum += tput;
+            paused += usize::from(pause);
+            spares_sum += used as f64;
+        }
+        let n = n_steps as f64;
+        let spare_gpus = self
+            .spares
+            .map(|p| p.spare_domains * self.topo.domain_size)
+            .unwrap_or(0);
+        let job_gpus = self.topo.n_gpus - spare_gpus;
+        let mean_tput = tput_sum / n;
+        FleetStats {
+            mean_throughput: mean_tput,
+            paused_frac: paused as f64 / n,
+            mean_spares_used: spares_sum / n,
+            throughput_per_gpu: mean_tput * job_gpus as f64 / self.topo.n_gpus as f64,
+        }
+    }
+
+    /// Evaluate one snapshot: returns (throughput, paused, spares used).
+    pub fn evaluate(&self, domain_healthy: &[usize]) -> (f64, bool, usize) {
+        match &self.spares {
+            None => {
+                let a = pack_domains(
+                    domain_healthy,
+                    self.topo.domain_size,
+                    self.domains_per_replica,
+                    self.packed,
+                );
+                (self.table.group_throughput(&a.replica_tp, self.strategy), false, 0)
+            }
+            Some(policy) => {
+                // Job domains are the leading ones; spares at the tail.
+                let n_job = domain_healthy.len() - policy.spare_domains;
+                let job_healthy = &domain_healthy[..n_job];
+                // Spares that are themselves failed shrink the pool.
+                let live_spares = domain_healthy[n_job..]
+                    .iter()
+                    .filter(|&&h| h == self.topo.domain_size)
+                    .count();
+                let policy = SparePolicy { spare_domains: live_spares, ..*policy };
+                let o = apply_spares(
+                    job_healthy,
+                    self.topo.domain_size,
+                    self.domains_per_replica,
+                    &policy,
+                );
+                let boosted = self.strategy == FtStrategy::NtpPw;
+                let ok = match self.strategy {
+                    FtStrategy::DpDrop => {
+                        meets_minibatch(&o.assignment, self.topo.domain_size, false)
+                    }
+                    FtStrategy::Ntp => {
+                        // Fixed-minibatch NTP: the paper's Fig. 7 NTP
+                        // curve counts the minibatch as met while the
+                        // total batch shortfall from reduced replicas is
+                        // below one replica's worth (NTP "never
+                        // experiences a throughput drop larger than the
+                        // equivalent of dropping two DP replicas" with 2
+                        // spare replicas' worth of slack).
+                        let frac = self
+                            .table
+                            .group_minibatch_frac(&o.assignment.replica_tp, self.strategy);
+                        let shortfall = (1.0 - frac) * o.assignment.replica_tp.len() as f64;
+                        shortfall < 1.0
+                    }
+                    FtStrategy::NtpPw => meets_minibatch(&o.assignment, policy.min_tp, boosted),
+                };
+                if !ok {
+                    return (0.0, true, o.spares_used);
+                }
+                let tput = self.table.group_throughput(&o.assignment.replica_tp, self.strategy);
+                (tput, false, o.spares_used)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Dtype, WorkloadConfig};
+    use crate::failure::FailureModel;
+    use crate::sim::SimParams;
+    use crate::util::prng::Rng;
+
+    fn small_setup() -> (IterationModel, ParallelConfig) {
+        let sim = IterationModel::new(
+            presets::model("gpt-480b").unwrap(),
+            WorkloadConfig {
+                seq_len: 16_384,
+                minibatch_tokens: 2 * 1024 * 1024,
+                dtype: Dtype::BF16,
+            },
+            presets::cluster("paper-32k-nvl32").unwrap(),
+            SimParams::default(),
+        );
+        // 16 replicas x 4 domains x 32 GPUs = 2048 GPUs (kept small for tests)
+        let cfg = ParallelConfig { tp: 32, pp: 4, dp: 16, microbatch: 1 };
+        (sim, cfg)
+    }
+
+    #[test]
+    fn table_matches_engine_semantics() {
+        let (sim, cfg) = small_setup();
+        let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+        let t = StrategyTable::build(&sim, &cfg, &rack);
+        assert_eq!(t.full_tp, 32);
+        assert_eq!(t.min_tp, 28);
+        // NTP batch decreases with deeper reduction
+        for w in t.batch.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // PW keeps full batch wherever feasible
+        for (i, p) in t.power.iter().enumerate() {
+            if p.is_some() {
+                assert_eq!(t.batch_pw[i], t.full_local_batch);
+            }
+        }
+    }
+
+    #[test]
+    fn group_throughput_ordering() {
+        let (sim, cfg) = small_setup();
+        let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+        let t = StrategyTable::build(&sim, &cfg, &rack);
+        let tps = vec![32, 31, 30, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32, 32];
+        let drop = t.group_throughput(&tps, FtStrategy::DpDrop);
+        let ntp = t.group_throughput(&tps, FtStrategy::Ntp);
+        let pw = t.group_throughput(&tps, FtStrategy::NtpPw);
+        assert!(drop < ntp && ntp <= pw, "drop {drop} ntp {ntp} pw {pw}");
+        assert!((drop - 14.0 / 16.0).abs() < 1e-9);
+        assert!(pw > 0.985);
+    }
+
+    #[test]
+    fn fleet_sim_runs_and_integrates() {
+        let (sim, cfg) = small_setup();
+        let topo = Topology::of(cfg.n_gpus(), 32, 4);
+        let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+        let table = StrategyTable::build(&sim, &cfg, &rack);
+        let model = FailureModel::llama3().scaled(30.0); // dense failures for a small cluster
+        let mut rng = Rng::new(5);
+        let trace = Trace::generate(&topo, &model, 24.0 * 15.0, &mut rng);
+        let fs = FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            strategy: FtStrategy::Ntp,
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+        };
+        let stats = fs.run(&trace, 6.0);
+        assert!(stats.mean_throughput > 0.5 && stats.mean_throughput <= 1.0);
+        assert_eq!(stats.paused_frac, 0.0);
+
+        // DP-DROP must do worse on the same trace.
+        let fs_drop = FleetSim { strategy: FtStrategy::DpDrop, ..fs };
+        let stats_drop = fs_drop.run(&trace, 6.0);
+        assert!(stats_drop.mean_throughput < stats.mean_throughput);
+    }
+
+    #[test]
+    fn packing_improves_throughput_under_spread_failures() {
+        let (sim, cfg) = small_setup();
+        let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+        let table = StrategyTable::build(&sim, &cfg, &rack);
+        let topo = Topology::of(cfg.n_gpus(), 32, 4);
+        // failures in 4 different replicas (one per 4-domain block)
+        let mut healthy = vec![32usize; 64];
+        healthy[0] = 31;
+        healthy[5] = 31;
+        healthy[9] = 31;
+        healthy[13] = 31;
+        let packed = FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: 4,
+            strategy: FtStrategy::Ntp,
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+        };
+        let unpacked = FleetSim { packed: false, ..packed };
+        let (tp_packed, _, _) = packed.evaluate(&healthy);
+        let (tp_unpacked, _, _) = unpacked.evaluate(&healthy);
+        assert!(tp_packed >= tp_unpacked);
+    }
+}

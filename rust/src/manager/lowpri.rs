@@ -1,0 +1,185 @@
+//! Low-priority job donation (paper §3.3): healthy GPUs that sit idle
+//! because their DP replica runs at a reduced TP degree "can be made
+//! available to run other workloads rather than remain idle". This
+//! module tracks the donatable inventory over time and schedules
+//! best-effort jobs onto it, with preemption when the primary job's
+//! failures recover.
+
+use super::packing::Assignment;
+
+/// A best-effort job requesting whole GPUs within one scale-up domain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LowPriJob {
+    pub id: usize,
+    /// GPUs requested (must fit inside one domain's idle set).
+    pub gpus: usize,
+}
+
+/// Current placement of a low-priority job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    pub job: LowPriJob,
+    pub domain: usize,
+    pub gpus: usize,
+}
+
+/// Idle-GPU inventory per domain for one assignment snapshot.
+pub fn idle_inventory(assignment: &Assignment, domain_healthy: &[usize]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (r, doms) in assignment.replicas.iter().enumerate() {
+        let tp = assignment.replica_tp[r];
+        for &d in doms {
+            let idle = domain_healthy[d].saturating_sub(tp);
+            if idle > 0 {
+                out.push((d, idle));
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Greedy best-fit scheduler: place each job in the domain with the
+/// smallest sufficient idle block (minimizing fragmentation). Jobs that
+/// do not fit anywhere are returned unplaced.
+pub fn schedule(
+    inventory: &[(usize, usize)],
+    jobs: &[LowPriJob],
+) -> (Vec<Placement>, Vec<LowPriJob>) {
+    let mut free: Vec<(usize, usize)> = inventory.to_vec();
+    let mut placements = Vec::new();
+    let mut unplaced = Vec::new();
+    // Larger jobs first: best-fit-decreasing.
+    let mut jobs: Vec<LowPriJob> = jobs.to_vec();
+    jobs.sort_by(|a, b| b.gpus.cmp(&a.gpus));
+    for job in jobs {
+        let mut best: Option<usize> = None;
+        for (i, &(_, idle)) in free.iter().enumerate() {
+            if idle >= job.gpus {
+                let better = match best {
+                    None => true,
+                    Some(b) => idle < free[b].1,
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+        }
+        match best {
+            Some(i) => {
+                free[i].1 -= job.gpus;
+                placements.push(Placement { job: job.clone(), domain: free[i].0, gpus: job.gpus });
+            }
+            None => unplaced.push(job),
+        }
+    }
+    (placements, unplaced)
+}
+
+/// When the primary job's failure state changes (recovery or a new
+/// failure), recompute which placements survive: a placement is
+/// preempted if its domain no longer has the idle capacity.
+pub fn preempt(
+    placements: &[Placement],
+    new_inventory: &[(usize, usize)],
+) -> (Vec<Placement>, Vec<Placement>) {
+    let mut capacity: std::collections::BTreeMap<usize, usize> =
+        new_inventory.iter().copied().collect();
+    let mut kept = Vec::new();
+    let mut preempted = Vec::new();
+    for p in placements {
+        match capacity.get_mut(&p.domain) {
+            Some(c) if *c >= p.gpus => {
+                *c -= p.gpus;
+                kept.push(p.clone());
+            }
+            _ => preempted.push(p.clone()),
+        }
+    }
+    (kept, preempted)
+}
+
+/// Fraction of the cluster's GPU-capacity recovered by donation: idle
+/// GPUs actually hosting low-pri work / total GPUs.
+pub fn recovered_fraction(placements: &[Placement], n_gpus: usize) -> f64 {
+    placements.iter().map(|p| p.gpus).sum::<usize>() as f64 / n_gpus as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manager::packing::pack_domains;
+
+    fn job(id: usize, gpus: usize) -> LowPriJob {
+        LowPriJob { id, gpus }
+    }
+
+    #[test]
+    fn inventory_from_packed_assignment() {
+        // Replica of 2 domains at TP30: the 32-healthy domain idles 2.
+        let healthy = vec![30usize, 32, 32, 32];
+        let a = pack_domains(&healthy, 32, 2, true);
+        let inv = idle_inventory(&a, &healthy);
+        assert_eq!(inv, vec![(1, 2)]);
+    }
+
+    #[test]
+    fn best_fit_decreasing_placement() {
+        let inv = vec![(0usize, 2usize), (1, 5), (2, 3)];
+        let jobs = vec![job(1, 3), job(2, 2), job(3, 4)];
+        let (placed, unplaced) = schedule(&inv, &jobs);
+        assert!(unplaced.is_empty());
+        // job 3 (4 gpus) -> domain 1 (only fit); job 1 (3) -> domain 2
+        // (exact fit); job 2 (2) -> domain 0 (exact fit)
+        let by_id: std::collections::BTreeMap<usize, usize> =
+            placed.iter().map(|p| (p.job.id, p.domain)).collect();
+        assert_eq!(by_id[&3], 1);
+        assert_eq!(by_id[&1], 2);
+        assert_eq!(by_id[&2], 0);
+    }
+
+    #[test]
+    fn oversized_jobs_stay_unplaced() {
+        let inv = vec![(0usize, 2usize)];
+        let (placed, unplaced) = schedule(&inv, &[job(1, 3)]);
+        assert!(placed.is_empty());
+        assert_eq!(unplaced.len(), 1);
+    }
+
+    #[test]
+    fn preemption_on_recovery() {
+        // Two placements; after recovery domain 0 has no idle capacity.
+        let placements = vec![
+            Placement { job: job(1, 2), domain: 0, gpus: 2 },
+            Placement { job: job(2, 1), domain: 1, gpus: 1 },
+        ];
+        let (kept, preempted) = preempt(&placements, &[(1usize, 1usize)]);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].job.id, 2);
+        assert_eq!(preempted.len(), 1);
+        assert_eq!(preempted[0].job.id, 1);
+    }
+
+    #[test]
+    fn recovered_fraction_accounting() {
+        let placements = vec![
+            Placement { job: job(1, 2), domain: 0, gpus: 2 },
+            Placement { job: job(2, 6), domain: 1, gpus: 6 },
+        ];
+        assert!((recovered_fraction(&placements, 64) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_never_oversubscribed() {
+        let inv = vec![(0usize, 4usize), (1, 4)];
+        let jobs: Vec<LowPriJob> = (0..10).map(|i| job(i, 2)).collect();
+        let (placed, unplaced) = schedule(&inv, &jobs);
+        assert_eq!(placed.len(), 4); // 8 idle GPUs / 2 each
+        assert_eq!(unplaced.len(), 6);
+        for d in [0usize, 1] {
+            let used: usize =
+                placed.iter().filter(|p| p.domain == d).map(|p| p.gpus).sum();
+            assert!(used <= 4);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Resource manager (paper §3.3): pack partially-failed scale-up domains
+//! into as few DP replicas as possible on restart, maintain the spare
+//! pool and the fixed-minibatch pause semantics (Fig. 7), and account
+//! for idle healthy GPUs donated to lower-priority jobs.
+
+pub mod fleet;
+pub mod lowpri;
+pub mod packing;
+pub mod spares;
+
+pub use fleet::{FleetSim, FleetStats, StrategyTable};
+pub use packing::{pack_domains, Assignment};
+pub use spares::{SparePolicy, SpareOutcome};

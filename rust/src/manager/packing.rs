@@ -1,0 +1,147 @@
+//! Domain→replica assignment with failure packing.
+//!
+//! When a failure forces a restart, process-group ranks are reassigned so
+//! unhealthy domains land in the lowest ranks ("packed together"),
+//! minimizing the number of DP replicas that must run at reduced TP —
+//! each replica's TP degree is the *minimum* healthy count over its `pp`
+//! domains, because every pipeline stage within a replica must run the
+//! same TP degree to avoid stage imbalance (§3.3).
+
+/// A domain→replica assignment.
+#[derive(Clone, Debug)]
+pub struct Assignment {
+    /// `replicas[r]` = domain indices assigned to replica `r`.
+    pub replicas: Vec<Vec<usize>>,
+    /// Effective TP degree of each replica (min healthy over its domains).
+    pub replica_tp: Vec<usize>,
+    pub domain_size: usize,
+}
+
+impl Assignment {
+    /// Replicas running below full TP.
+    pub fn impacted(&self) -> usize {
+        self.replica_tp.iter().filter(|&&t| t < self.domain_size).count()
+    }
+
+    /// Healthy GPUs idled because their replica runs at a lower TP than
+    /// the domain could support (donatable to low-priority jobs, §3.3).
+    pub fn idle_healthy_gpus(&self, domain_healthy: &[usize]) -> usize {
+        let mut idle = 0;
+        for (r, doms) in self.replicas.iter().enumerate() {
+            let tp = self.replica_tp[r];
+            for &d in doms {
+                idle += domain_healthy[d].saturating_sub(tp);
+            }
+        }
+        idle
+    }
+}
+
+/// Build the assignment. `packed = true` sorts domains by health
+/// ascending first (the paper's rank-reassignment restart); `false`
+/// keeps rank order (what you get without the resource manager).
+pub fn pack_domains(
+    domain_healthy: &[usize],
+    domain_size: usize,
+    domains_per_replica: usize,
+    packed: bool,
+) -> Assignment {
+    assert!(domains_per_replica >= 1);
+    let n_replicas = domain_healthy.len() / domains_per_replica;
+    let mut order: Vec<usize> = (0..n_replicas * domains_per_replica).collect();
+    if packed {
+        // unhealthy (lowest healthy count) domains into the lowest ranks;
+        // stable by index for determinism
+        order.sort_by_key(|&d| (domain_healthy[d], d));
+    }
+    let mut replicas = Vec::with_capacity(n_replicas);
+    let mut replica_tp = Vec::with_capacity(n_replicas);
+    for r in 0..n_replicas {
+        let doms: Vec<usize> =
+            order[r * domains_per_replica..(r + 1) * domains_per_replica].to_vec();
+        let tp = doms.iter().map(|&d| domain_healthy[d]).min().unwrap();
+        replicas.push(doms);
+        replica_tp.push(tp.min(domain_size));
+    }
+    Assignment { replicas, replica_tp, domain_size }
+}
+
+/// Lower bound on impacted replicas: the partially/fully failed domains
+/// packed as densely as possible.
+pub fn optimal_impacted(domain_healthy: &[usize], domain_size: usize, per_replica: usize) -> usize {
+    let n_bad = domain_healthy.iter().filter(|&&h| h < domain_size).count();
+    n_bad.div_ceil(per_replica)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn healthy_fleet_untouched() {
+        let healthy = vec![32usize; 16];
+        let a = pack_domains(&healthy, 32, 4, true);
+        assert_eq!(a.replicas.len(), 4);
+        assert_eq!(a.impacted(), 0);
+        assert_eq!(a.idle_healthy_gpus(&healthy), 0);
+    }
+
+    #[test]
+    fn packing_concentrates_damage() {
+        // 4 replicas of 4 domains; failures spread across 4 domains that
+        // land in 4 different replicas without packing.
+        let mut healthy = vec![32usize; 16];
+        healthy[0] = 31;
+        healthy[5] = 30;
+        healthy[10] = 31;
+        healthy[15] = 29;
+        let unpacked = pack_domains(&healthy, 32, 4, false);
+        let packed = pack_domains(&healthy, 32, 4, true);
+        assert_eq!(unpacked.impacted(), 4);
+        assert_eq!(packed.impacted(), 1);
+        assert_eq!(packed.impacted(), optimal_impacted(&healthy, 32, 4));
+        // packed replica runs at min(31,30,31,29) = 29
+        assert_eq!(packed.replica_tp[0], 29);
+    }
+
+    #[test]
+    fn packing_achieves_optimal_always() {
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let n_domains = 4 * (1 + rng.index(8));
+            let per = [1usize, 2, 4][rng.index(3)];
+            if n_domains % per != 0 {
+                continue;
+            }
+            let healthy: Vec<usize> = (0..n_domains)
+                .map(|_| if rng.chance(0.2) { 32 - 1 - rng.index(4) } else { 32 })
+                .collect();
+            let a = pack_domains(&healthy, 32, per, true);
+            assert_eq!(
+                a.impacted(),
+                optimal_impacted(&healthy, 32, per),
+                "healthy={healthy:?} per={per}"
+            );
+        }
+    }
+
+    #[test]
+    fn idle_gpu_accounting() {
+        // One replica of 2 domains: healthy 30 and 32 -> TP30; domain
+        // with 32 healthy idles 2 GPUs.
+        let healthy = vec![30usize, 32];
+        let a = pack_domains(&healthy, 32, 2, true);
+        assert_eq!(a.replica_tp[0], 30);
+        assert_eq!(a.idle_healthy_gpus(&healthy), 2);
+    }
+
+    #[test]
+    fn replicas_partition_domains() {
+        let healthy = vec![32usize; 12];
+        let a = pack_domains(&healthy, 32, 3, true);
+        let mut all: Vec<usize> = a.replicas.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,131 @@
+//! Spare-domain policy and fixed-minibatch pause semantics (Fig. 7).
+//!
+//! When SGD requires a fixed minibatch, a group that cannot process it
+//! (too many failures for the spare pool to absorb) must *pause* until
+//! enough recoveries occur. Spares are whole scale-up domains reserved
+//! next to the job; they replace failed/partial domains wholesale.
+
+use super::packing::{pack_domains, Assignment};
+
+/// Spare-pool configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SparePolicy {
+    /// Number of spare scale-up domains reserved.
+    pub spare_domains: usize,
+    /// Minimum TP degree NTP will run a replica at (below ⇒ replica needs
+    /// a spare or drops).
+    pub min_tp: usize,
+}
+
+/// Outcome of applying spares to one failure state.
+#[derive(Clone, Debug)]
+pub struct SpareOutcome {
+    /// Domain-health vector actually used by the job after spare
+    /// substitution (same length as the job's domain count).
+    pub effective_healthy: Vec<usize>,
+    /// Spares consumed.
+    pub spares_used: usize,
+    /// The resulting assignment.
+    pub assignment: Assignment,
+}
+
+/// Substitute spares for the worst domains, then pack.
+///
+/// `domain_healthy` — job domains' healthy counts; spares are assumed
+/// fully healthy (a failed spare is just removed from the pool by the
+/// caller). Greedy: replace the most-damaged domains first, because each
+/// substitution buys back the most capacity there.
+pub fn apply_spares(
+    domain_healthy: &[usize],
+    domain_size: usize,
+    domains_per_replica: usize,
+    policy: &SparePolicy,
+) -> SpareOutcome {
+    let mut effective: Vec<usize> = domain_healthy.to_vec();
+    // Most damaged first.
+    let mut order: Vec<usize> = (0..effective.len()).collect();
+    order.sort_by_key(|&d| effective[d]);
+    let mut used = 0;
+    for &d in &order {
+        if used >= policy.spare_domains {
+            break;
+        }
+        if effective[d] < domain_size {
+            effective[d] = domain_size;
+            used += 1;
+        }
+    }
+    let assignment = pack_domains(&effective, domain_size, domains_per_replica, true);
+    SpareOutcome { effective_healthy: effective, spares_used: used, assignment }
+}
+
+/// Can the job process its full minibatch? With NTP, replicas at
+/// `tp >= min_tp` still deliver *reduced* batch; the group meets the full
+/// minibatch only if the shortfall is zero — i.e. every replica is at
+/// full TP (NTP-PW makes reduced replicas full-batch, so there the
+/// criterion is `tp >= min_tp`).
+pub fn meets_minibatch(
+    assignment: &Assignment,
+    min_tp: usize,
+    power_boosted: bool,
+) -> bool {
+    assignment.replica_tp.iter().all(|&tp| {
+        if power_boosted {
+            tp >= min_tp
+        } else {
+            tp >= assignment.domain_size
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spares_fix_worst_domains_first() {
+        let healthy = vec![32, 28, 31, 32, 30, 32, 32, 32];
+        let policy = SparePolicy { spare_domains: 2, min_tp: 28 };
+        let o = apply_spares(&healthy, 32, 4, &policy);
+        assert_eq!(o.spares_used, 2);
+        // 28 and 30 replaced; 31 remains
+        assert_eq!(o.effective_healthy.iter().filter(|&&h| h == 32).count(), 7);
+        assert!(o.effective_healthy.contains(&31));
+    }
+
+    #[test]
+    fn enough_spares_restore_full_minibatch() {
+        let healthy = vec![31, 32, 32, 32, 30, 32, 32, 32];
+        let policy = SparePolicy { spare_domains: 2, min_tp: 28 };
+        let o = apply_spares(&healthy, 32, 4, &policy);
+        assert!(meets_minibatch(&o.assignment, 28, false));
+    }
+
+    #[test]
+    fn without_spares_fixed_minibatch_fails() {
+        let healthy = vec![31, 32, 32, 32, 32, 32, 32, 32];
+        let policy = SparePolicy { spare_domains: 0, min_tp: 28 };
+        let o = apply_spares(&healthy, 32, 4, &policy);
+        assert!(!meets_minibatch(&o.assignment, 28, false));
+        // ... but power boosting saves it (tp 31 >= min 28, full batch)
+        assert!(meets_minibatch(&o.assignment, 28, true));
+    }
+
+    #[test]
+    fn spares_not_wasted_on_healthy_fleet() {
+        let healthy = vec![32; 8];
+        let policy = SparePolicy { spare_domains: 4, min_tp: 28 };
+        let o = apply_spares(&healthy, 32, 4, &policy);
+        assert_eq!(o.spares_used, 0);
+    }
+
+    #[test]
+    fn dead_domain_needs_spare() {
+        let mut healthy = vec![32; 8];
+        healthy[3] = 0;
+        let none = apply_spares(&healthy, 32, 4, &SparePolicy { spare_domains: 0, min_tp: 28 });
+        assert!(!meets_minibatch(&none.assignment, 28, true));
+        let one = apply_spares(&healthy, 32, 4, &SparePolicy { spare_domains: 1, min_tp: 28 });
+        assert!(meets_minibatch(&one.assignment, 28, true));
+    }
+}

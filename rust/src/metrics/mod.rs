@@ -1,0 +1,110 @@
+//! Experiment metric recording: named series of (x, y) points plus
+//! scalar results, dumped as JSON/CSV under `results/` so EXPERIMENTS.md
+//! numbers are regenerable.
+
+use crate::util::json::Value;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// One experiment's recorded output.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub name: String,
+    scalars: BTreeMap<String, f64>,
+    series: BTreeMap<String, Vec<(f64, f64)>>,
+    notes: Vec<String>,
+}
+
+impl Recorder {
+    pub fn new(name: &str) -> Recorder {
+        Recorder { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn scalar(&mut self, key: &str, value: f64) {
+        self.scalars.insert(key.to_string(), value);
+    }
+
+    pub fn point(&mut self, series: &str, x: f64, y: f64) {
+        self.series.entry(series.to_string()).or_default().push((x, y));
+    }
+
+    pub fn note(&mut self, msg: impl Into<String>) {
+        self.notes.push(msg.into());
+    }
+
+    pub fn get_scalar(&self, key: &str) -> Option<f64> {
+        self.scalars.get(key).copied()
+    }
+
+    pub fn get_series(&self, name: &str) -> Option<&[(f64, f64)]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let scalars = Value::Obj(
+            self.scalars.iter().map(|(k, v)| (k.clone(), Value::Num(*v))).collect(),
+        );
+        let series = Value::Obj(
+            self.series
+                .iter()
+                .map(|(k, pts)| {
+                    let arr = Value::Arr(
+                        pts.iter()
+                            .map(|&(x, y)| Value::Arr(vec![Value::Num(x), Value::Num(y)]))
+                            .collect(),
+                    );
+                    (k.clone(), arr)
+                })
+                .collect(),
+        );
+        Value::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("scalars", scalars),
+            ("series", series),
+            (
+                "notes",
+                Value::Arr(self.notes.iter().map(|n| Value::Str(n.clone())).collect()),
+            ),
+        ])
+    }
+
+    /// Write `results/<name>.json`. Creates the directory as needed.
+    pub fn save(&self, dir: &str) -> Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.json", self.name);
+        std::fs::write(&path, self.to_json().pretty() + "\n")?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_serialize() {
+        let mut r = Recorder::new("test_exp");
+        r.scalar("throughput", 0.97);
+        r.point("loss", 0.0, 5.0);
+        r.point("loss", 1.0, 4.2);
+        r.note("first run");
+        let v = r.to_json();
+        assert_eq!(v.get("name").as_str(), Some("test_exp"));
+        assert_eq!(v.get("scalars").get("throughput").as_f64(), Some(0.97));
+        assert_eq!(v.get("series").get("loss").as_arr().unwrap().len(), 2);
+        // roundtrip through the parser
+        let v2 = Value::parse(&v.pretty()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn save_creates_file() {
+        let dir = std::env::temp_dir().join("ntp_metrics_test");
+        let dir = dir.to_str().unwrap();
+        let mut r = Recorder::new("unit");
+        r.scalar("x", 1.0);
+        let path = r.save(dir).unwrap();
+        assert!(std::path::Path::new(&path).exists());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,25 @@
+//! Nonuniform Tensor Parallelism — the paper's core contribution (§3.1).
+//!
+//! A DP replica with failed GPUs keeps training at a reduced TP degree
+//! `n2` while healthy replicas run at `n1 > n2`. The TP partitioning
+//! dimension (MLP inner width `k`, or attention heads) is divided
+//! *contiguously* over `n2` shards on the reduced replica; on healthy
+//! replicas the same `k` units are computed balanced over `n1` GPUs but
+//! must be *resharded* to a contiguous `n2`-way layout before gradient
+//! allreduce so every shard synchronizes with exactly one peer shard
+//! (and back afterwards). [`shard_map`] implements the paper's
+//! Algorithm 1 (which GPU computes / synchronizes each unit), [`reshard`]
+//! derives the all-to-all send/recv splits, [`plan`] assembles the whole
+//! DP-group synchronization plan, and [`sync`] executes the permutations
+//! on real buffers for the training driver.
+
+pub mod partition;
+pub mod plan;
+pub mod reshard;
+pub mod shard_map;
+pub mod sync;
+
+pub use partition::{partition_ranges, partition_sizes, Partition};
+pub use plan::SyncPlan;
+pub use reshard::ReshardPlan;
+pub use shard_map::ShardMap;

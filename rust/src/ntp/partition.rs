@@ -1,0 +1,136 @@
+//! Contiguous (possibly nonuniform) partitioning of `k` shardable units
+//! (MLP inner columns, attention heads) over `n` shards.
+//!
+//! Balanced partitioning gives each shard `⌊k/n⌋` or `⌈k/n⌉` units, the
+//! larger shards first. The paper (§3.1, "Attention blocks") notes the
+//! imbalance effect: for MLP `k` is large so the relative imbalance is
+//! tiny, while attention has O(10) heads and can be noticeably imbalanced
+//! at awkward reduced degrees — [`imbalance`] quantifies exactly that.
+
+/// Sizes of a balanced contiguous partition of `k` units over `n` shards.
+pub fn partition_sizes(k: usize, n: usize) -> Vec<usize> {
+    assert!(n > 0, "partition over 0 shards");
+    assert!(k >= n, "cannot give every shard at least one unit: k={k} n={n}");
+    let base = k / n;
+    let extra = k % n;
+    (0..n).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Contiguous ranges of a balanced partition.
+pub fn partition_ranges(k: usize, n: usize) -> Vec<std::ops::Range<usize>> {
+    let sizes = partition_sizes(k, n);
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for s in sizes {
+        out.push(start..start + s);
+        start += s;
+    }
+    out
+}
+
+/// Relative imbalance of the partition: `max_shard / mean_shard - 1`.
+/// This is the throughput penalty of the slowest (largest) shard on the
+/// reduced-TP replica.
+pub fn imbalance(k: usize, n: usize) -> f64 {
+    let sizes = partition_sizes(k, n);
+    let max = *sizes.iter().max().unwrap() as f64;
+    let mean = k as f64 / n as f64;
+    max / mean - 1.0
+}
+
+/// A named contiguous partition with lookup helpers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Partition {
+    pub k: usize,
+    pub ranges: Vec<std::ops::Range<usize>>,
+}
+
+impl Partition {
+    pub fn balanced(k: usize, n: usize) -> Partition {
+        Partition { k, ranges: partition_ranges(k, n) }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn size(&self, shard: usize) -> usize {
+        self.ranges[shard].len()
+    }
+
+    /// Which shard owns unit `u` (binary search over contiguous ranges).
+    pub fn owner(&self, u: usize) -> usize {
+        debug_assert!(u < self.k);
+        // ranges are contiguous ascending: find first range whose end > u
+        self.ranges.partition_point(|r| r.end <= u)
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        self.ranges.iter().map(|r| r.len()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_sum_and_balance() {
+        for &(k, n) in &[(12usize, 4usize), (13, 4), (100, 7), (7, 7), (12288, 30)] {
+            let sizes = partition_sizes(k, n);
+            assert_eq!(sizes.len(), n);
+            assert_eq!(sizes.iter().sum::<usize>(), k);
+            let max = sizes.iter().max().unwrap();
+            let min = sizes.iter().min().unwrap();
+            assert!(max - min <= 1, "k={k} n={n}");
+            // larger shards first
+            let mut sorted = sizes.clone();
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            assert_eq!(sizes, sorted);
+        }
+    }
+
+    #[test]
+    fn ranges_are_contiguous_cover() {
+        let ranges = partition_ranges(13, 4);
+        // sizes [4,3,3,3], larger shard first
+        assert_eq!(ranges[0], 0..4);
+        assert_eq!(ranges[1], 4..7);
+        assert_eq!(ranges[2], 7..10);
+        assert_eq!(ranges[3], 10..13);
+    }
+
+    #[test]
+    fn owner_lookup_consistent() {
+        let p = Partition::balanced(29, 5);
+        for u in 0..29 {
+            let s = p.owner(u);
+            assert!(p.ranges[s].contains(&u));
+        }
+    }
+
+    #[test]
+    fn paper_example_hidden_12k_tp30() {
+        // §3.1: hidden 12K, N1=32, N2=30 — contiguous over both causes
+        // 375/25-column sub-shards; our partition of 12000 over 30 is
+        // uniformly 400.
+        let sizes = partition_sizes(12_000, 30);
+        assert!(sizes.iter().all(|&s| s == 400));
+    }
+
+    #[test]
+    fn attention_head_imbalance() {
+        // 128 heads over TP30: shards have 5 or 4 heads -> imbalance ≈ 17%.
+        let im = imbalance(128, 30);
+        assert!((im - (5.0 / (128.0 / 30.0) - 1.0)).abs() < 1e-12);
+        assert!(im > 0.15 && im < 0.20);
+        // MLP k=81920 over 30: near zero.
+        assert!(imbalance(81_920, 30) < 0.001);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_few_units_panics() {
+        partition_sizes(3, 4);
+    }
+}

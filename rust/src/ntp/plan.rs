@@ -1,0 +1,143 @@
+//! DP-group synchronization plan: given the TP degree of every replica in
+//! a data-parallel group (healthy replicas at the full degree, partially
+//! failed ones reduced), derive the common *sync sharding* and the
+//! per-replica reshard plans, plus the communication-volume accounting
+//! the paper reports (§6.2: allreduce volume grows by `n1/n_sync`).
+
+use super::reshard::ReshardPlan;
+use super::shard_map::ShardMap;
+
+/// Per-replica piece of a [`SyncPlan`].
+#[derive(Clone, Debug)]
+pub struct ReplicaPlan {
+    /// This replica's TP degree (number of live GPUs in its TP group).
+    pub tp: usize,
+    pub map: ShardMap,
+    pub reshard: ReshardPlan,
+}
+
+/// Synchronization plan for one DP group sharing one sharded dimension.
+#[derive(Clone, Debug)]
+pub struct SyncPlan {
+    pub k: usize,
+    /// Common sync sharding degree = min TP degree over the group.
+    pub sync_degree: usize,
+    pub replicas: Vec<ReplicaPlan>,
+}
+
+impl SyncPlan {
+    /// Build a plan for replicas with TP degrees `tps` over `k` units.
+    pub fn build(k: usize, tps: &[usize]) -> SyncPlan {
+        assert!(!tps.is_empty(), "empty DP group");
+        let sync_degree = *tps.iter().min().unwrap();
+        assert!(sync_degree >= 1);
+        let replicas = tps
+            .iter()
+            .map(|&tp| {
+                let map = ShardMap::build(k, tp, sync_degree);
+                let reshard = ReshardPlan::from_map(&map);
+                ReplicaPlan { tp, map, reshard }
+            })
+            .collect();
+        SyncPlan { k, sync_degree, replicas }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// True when all replicas share the same TP degree (healthy group —
+    /// no resharding anywhere).
+    pub fn is_uniform(&self) -> bool {
+        self.replicas.iter().all(|r| r.reshard.is_noop())
+    }
+
+    /// Factor by which per-GPU allreduce volume grows versus a fully
+    /// healthy group at degree `full_tp` (§6.2: "allreduce time increases
+    /// proportionally to the TP reduction"): each sync GPU now owns
+    /// `k/sync_degree` instead of `k/full_tp` units.
+    pub fn allreduce_increase_factor(&self, full_tp: usize) -> f64 {
+        full_tp as f64 / self.sync_degree as f64
+    }
+
+    /// Bytes each sync GPU contributes to the ring allreduce:
+    /// `2 (R-1)/R * block_bytes` for R replicas.
+    pub fn allreduce_bytes_per_gpu(&self, unit_bytes: usize) -> f64 {
+        let r = self.n_replicas() as f64;
+        if r < 2.0 {
+            return 0.0;
+        }
+        let max_block = (0..self.sync_degree)
+            .map(|s| self.replicas[0].map.sync_units(s).len())
+            .max()
+            .unwrap_or(0);
+        2.0 * (r - 1.0) / r * (max_block * unit_bytes) as f64
+    }
+
+    /// Largest pre-sync reshard burden (bytes) on any GPU of any replica.
+    pub fn max_reshard_bytes(&self, unit_bytes: usize) -> usize {
+        self.replicas
+            .iter()
+            .map(|r| r.reshard.max_bytes_per_gpu(unit_bytes))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_group_needs_no_reshard() {
+        let p = SyncPlan::build(1024, &[8, 8, 8, 8]);
+        assert!(p.is_uniform());
+        assert_eq!(p.sync_degree, 8);
+        assert_eq!(p.allreduce_increase_factor(8), 1.0);
+    }
+
+    #[test]
+    fn mixed_group_syncs_at_min() {
+        let p = SyncPlan::build(12_288, &[32, 32, 30, 28]);
+        assert_eq!(p.sync_degree, 28);
+        assert!(!p.is_uniform());
+        // healthy replicas reshard 32 -> 28
+        assert!(!p.replicas[0].reshard.is_noop());
+        // the TP28 replica is already contiguous over 28
+        assert!(p.replicas[3].reshard.is_noop());
+        // allreduce volume grows by 32/28
+        assert!((p.allreduce_increase_factor(32) - 32.0 / 28.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sync_blocks_agree_across_replicas() {
+        // All replicas must shard the sync layout identically, or the
+        // 1:1 allreduce pairs would mix different units.
+        let p = SyncPlan::build(1000, &[16, 12, 14]);
+        for s in 0..p.sync_degree {
+            let r0 = p.replicas[0].map.sync_units(s);
+            for rep in &p.replicas[1..] {
+                assert_eq!(rep.map.sync_units(s), r0);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_bytes_ring_formula() {
+        let p = SyncPlan::build(1024, &[8, 8]);
+        let per_unit = 4usize;
+        let b = p.allreduce_bytes_per_gpu(per_unit);
+        // R=2: 2*(1/2)*block = block bytes; block = 128 units * 4 B
+        assert!((b - 128.0 * 4.0).abs() < 1e-9);
+        let p1 = SyncPlan::build(1024, &[8]);
+        assert_eq!(p1.allreduce_bytes_per_gpu(per_unit), 0.0);
+    }
+
+    #[test]
+    fn single_failed_gpu_tp31() {
+        let p = SyncPlan::build(81_920, &[32, 31]);
+        assert_eq!(p.sync_degree, 31);
+        let bytes = p.max_reshard_bytes(2 * 20_480 * 2);
+        assert!(bytes > 0);
+    }
+}

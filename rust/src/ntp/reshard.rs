@@ -1,0 +1,186 @@
+//! Reshard plans: the all-to-all `send_splits` / `recv_splits` derived
+//! from a [`ShardMap`] (paper Fig. 12 precomputes exactly these), plus
+//! byte accounting used by the overhead model (Fig. 8's
+//! communication:computation ratio).
+//!
+//! Pre-sync reshard moves gradient units from the *comp* sharding
+//! (balanced over `n1` GPUs) to the *sync* sharding (contiguous over the
+//! first `n2` GPUs); post-sync reshard is the exact inverse, scattering
+//! the allreduced gradients back so the next iteration's parameters are
+//! laid out for computation.
+
+use super::shard_map::ShardMap;
+
+/// All-to-all splits for one sharded tensor dimension.
+#[derive(Clone, Debug)]
+pub struct ReshardPlan {
+    pub n1: usize,
+    pub n2: usize,
+    /// `send_units[g][d]` — units GPU `g` sends to sync GPU `d` during
+    /// pre-sync reshard (ascending unit ids). Indexed `[n1][n2]`.
+    pub send_units: Vec<Vec<Vec<usize>>>,
+    /// Units GPU `g` keeps in place (comp rank == sync rank == g).
+    pub keep_units: Vec<Vec<usize>>,
+}
+
+impl ReshardPlan {
+    pub fn from_map(m: &ShardMap) -> ReshardPlan {
+        let mut send_units = vec![vec![Vec::new(); m.n2]; m.n1];
+        let mut keep_units = vec![Vec::new(); m.n1];
+        for u in 0..m.k {
+            let c = m.comp_rank[u] as usize;
+            let s = m.sync_rank[u] as usize;
+            if c == s {
+                keep_units[c].push(u);
+            } else {
+                send_units[c][s].push(u);
+            }
+        }
+        ReshardPlan { n1: m.n1, n2: m.n2, send_units, keep_units }
+    }
+
+    /// Split *counts* as the paper's `send_splits` (units per destination).
+    pub fn send_splits(&self, g: usize) -> Vec<usize> {
+        self.send_units[g].iter().map(|v| v.len()).collect()
+    }
+
+    /// `recv_splits[s][g]` — units sync GPU `s` receives from GPU `g`.
+    pub fn recv_splits(&self, s: usize) -> Vec<usize> {
+        (0..self.n1).map(|g| self.send_units[g][s].len()).collect()
+    }
+
+    /// Total units sent by GPU `g`.
+    pub fn sent_by(&self, g: usize) -> usize {
+        self.send_units[g].iter().map(|v| v.len()).sum()
+    }
+
+    /// Total units received by sync GPU `s`.
+    pub fn received_by(&self, s: usize) -> usize {
+        (0..self.n1).map(|g| self.send_units[g][s].len()).sum()
+    }
+
+    /// Max bytes any GPU sends **or** receives during one reshard —
+    /// the paper's metric (2) in §6.2 driving backward-pass slowdown.
+    /// `unit_bytes` is the byte size of one shardable unit's gradient
+    /// (e.g. one MLP column pair: `2 * hidden * dtype_bytes`).
+    pub fn max_bytes_per_gpu(&self, unit_bytes: usize) -> usize {
+        let max_sent = (0..self.n1).map(|g| self.sent_by(g)).max().unwrap_or(0);
+        let max_recv = (0..self.n2).map(|s| self.received_by(s)).max().unwrap_or(0);
+        max_sent.max(max_recv) * unit_bytes
+    }
+
+    /// Total bytes crossing the fabric in one reshard.
+    pub fn total_bytes(&self, unit_bytes: usize) -> usize {
+        (0..self.n1).map(|g| self.sent_by(g)).sum::<usize>() * unit_bytes
+    }
+
+    /// Ideal reshard time (seconds) over a fabric with per-GPU
+    /// unidirectional bandwidth `gbs` (GB/s): bounded by the busiest GPU.
+    pub fn ideal_time_secs(&self, unit_bytes: usize, gbs: f64) -> f64 {
+        self.max_bytes_per_gpu(unit_bytes) as f64 / (gbs * 1e9)
+    }
+
+    /// True when nothing moves (n1 == n2 case).
+    pub fn is_noop(&self) -> bool {
+        (0..self.n1).all(|g| self.sent_by(g) == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ShardInstanceGen};
+
+    #[test]
+    fn identity_plan_is_noop() {
+        let m = ShardMap::build(64, 8, 8);
+        let p = ReshardPlan::from_map(&m);
+        assert!(p.is_noop());
+        assert_eq!(p.max_bytes_per_gpu(1024), 0);
+    }
+
+    #[test]
+    fn conservation_sent_equals_received() {
+        let m = ShardMap::build(12_288, 32, 30);
+        let p = ReshardPlan::from_map(&m);
+        let sent: usize = (0..32).map(|g| p.sent_by(g)).sum();
+        let recv: usize = (0..30).map(|s| p.received_by(s)).sum();
+        assert_eq!(sent, recv);
+        // every unit either kept or sent exactly once
+        let kept: usize = p.keep_units.iter().map(|v| v.len()).sum();
+        assert_eq!(kept + sent, 12_288);
+    }
+
+    #[test]
+    fn sync_gpus_send_nothing() {
+        let m = ShardMap::build(1000, 16, 12);
+        let p = ReshardPlan::from_map(&m);
+        for g in 0..12 {
+            assert_eq!(p.sent_by(g), 0, "sync GPU {g} should not send");
+        }
+        for g in 12..16 {
+            assert!(p.sent_by(g) > 0, "offload GPU {g} should send");
+            // offload GPUs keep nothing
+            assert!(p.keep_units[g].is_empty());
+        }
+    }
+
+    #[test]
+    fn splits_match_units() {
+        let m = ShardMap::build(128, 8, 6);
+        let p = ReshardPlan::from_map(&m);
+        for g in 0..8 {
+            let splits = p.send_splits(g);
+            assert_eq!(splits.len(), 6);
+            assert_eq!(splits.iter().sum::<usize>(), p.sent_by(g));
+        }
+        for s in 0..6 {
+            let r = p.recv_splits(s);
+            assert_eq!(r.len(), 8);
+            assert_eq!(r.iter().sum::<usize>(), p.received_by(s));
+        }
+    }
+
+    #[test]
+    fn property_conservation_all_instances() {
+        let gen = ShardInstanceGen { max_k: 3000, max_n: 48 };
+        check(0xB2, 200, &gen, |&(k, n1, n2)| {
+            let m = ShardMap::build(k, n1, n2);
+            let p = ReshardPlan::from_map(&m);
+            let sent: usize = (0..n1).map(|g| p.sent_by(g)).sum();
+            let kept: usize = p.keep_units.iter().map(|v| v.len()).sum();
+            if kept + sent != k {
+                return Err(format!("kept {kept} + sent {sent} != k {k}"));
+            }
+            let recv: usize = (0..n2).map(|s| p.received_by(s)).sum();
+            if sent != recv {
+                return Err(format!("sent {sent} != recv {recv}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reshard_volume_shrinks_with_smaller_reduction() {
+        // A smaller TP reduction (n2 closer to n1) moves fewer bytes.
+        let unit = 2 * 12_288 * 2; // one column pair of A/B at bf16
+        let p30 = ReshardPlan::from_map(&ShardMap::build(49_152, 32, 30));
+        let p24 = ReshardPlan::from_map(&ShardMap::build(49_152, 32, 24));
+        let p12 = ReshardPlan::from_map(&ShardMap::build(49_152, 32, 12));
+        assert!(p30.total_bytes(unit) < p24.total_bytes(unit));
+        // max per-GPU burden: send side is constant (k/n1 per offload GPU)
+        // until n2 < n1/2, where the receive side starts dominating
+        // (k/n2 - k/n1 per sync GPU).
+        assert!(p30.max_bytes_per_gpu(unit) <= p24.max_bytes_per_gpu(unit));
+        assert!(p24.max_bytes_per_gpu(unit) < p12.max_bytes_per_gpu(unit));
+    }
+
+    #[test]
+    fn ideal_time_positive_and_scales() {
+        let p = ReshardPlan::from_map(&ShardMap::build(4096, 8, 6));
+        let t600 = p.ideal_time_secs(1024, 600.0);
+        let t300 = p.ideal_time_secs(1024, 300.0);
+        assert!(t600 > 0.0);
+        assert!((t300 / t600 - 2.0).abs() < 1e-9);
+    }
+}

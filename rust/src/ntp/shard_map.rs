@@ -1,0 +1,269 @@
+//! Algorithm 1 — Comp and Sync Rank Assignment (paper §3.1).
+//!
+//! Inputs: `k` shardable units (MLP inner columns or attention heads),
+//! `n1` GPUs in the healthy replica's TP group, `n2 < n1` shards in the
+//! reduced replica (= the sync sharding). Outputs, per unit:
+//!
+//! * `sync_rank[u]` — which of the `n2` *sync* shards unit `u`'s gradient
+//!   lives on during allreduce. Sync shards are contiguous blocks so each
+//!   synchronization is one fused, latency-friendly transfer with exactly
+//!   one peer (§3.1 "Shard-mapping algorithm").
+//! * `comp_rank[u]` — which of the `n1` GPUs *computes* unit `u` (holds
+//!   its parameter/gradient slice during fwd/bwd). Computation stays
+//!   balanced over all `n1` GPUs.
+//!
+//! GPUs `0..n2` are **sync GPUs**: each keeps the leading portion of its
+//! own sync block (as much as a balanced comp shard allows) so those
+//! units need no resharding at all. GPUs `n2..n1` are **offload GPUs**:
+//! they compute the remaining units of every sync block. The placement of
+//! offloaded units iterates round-robin over the offload GPUs ("we
+//! enumerate all such rows/columns ... and iterate their placement") so
+//! every (offload GPU → sync GPU) pair carries a near-equal share of the
+//! pre-synchronization reshard — fully using the scale-up fabric's
+//! pairwise bandwidth.
+
+use super::partition::{partition_ranges, partition_sizes};
+
+/// The Algorithm-1 assignment for one sharded dimension.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardMap {
+    pub k: usize,
+    pub n1: usize,
+    pub n2: usize,
+    /// `comp_rank[u] ∈ [0, n1)` — computing GPU of unit `u`.
+    pub comp_rank: Vec<u32>,
+    /// `sync_rank[u] ∈ [0, n2)` — sync shard of unit `u`.
+    pub sync_rank: Vec<u32>,
+}
+
+impl ShardMap {
+    /// Build the assignment. Requires `1 <= n2 <= n1 <= k`.
+    ///
+    /// When `n1 == n2` the comp and sync shardings coincide (identity
+    /// mapping, no resharding needed) — healthy replicas in a healthy DP
+    /// group hit this path.
+    pub fn build(k: usize, n1: usize, n2: usize) -> ShardMap {
+        assert!(n2 >= 1 && n2 <= n1, "need 1 <= n2 <= n1, got n1={n1} n2={n2}");
+        assert!(k >= n1, "need k >= n1, got k={k} n1={n1}");
+
+        let sync_blocks = partition_ranges(k, n2);
+        let comp_sizes = partition_sizes(k, n1);
+
+        let mut sync_rank = vec![0u32; k];
+        for (s, block) in sync_blocks.iter().enumerate() {
+            for u in block.clone() {
+                sync_rank[u] = s as u32;
+            }
+        }
+
+        let mut comp_rank = vec![u32::MAX; k];
+        if n1 == n2 {
+            // Shardings coincide: comp == sync.
+            for u in 0..k {
+                comp_rank[u] = sync_rank[u];
+            }
+            return ShardMap { k, n1, n2, comp_rank, sync_rank };
+        }
+
+        // Sync GPU s keeps the first `comp_sizes[s]` units of its block
+        // (a balanced comp shard never exceeds a sync block: k/n1 <= k/n2).
+        let mut remaining: Vec<usize> = Vec::new(); // units needing offload
+        for (s, block) in sync_blocks.iter().enumerate() {
+            let keep = comp_sizes[s].min(block.len());
+            for u in block.start..block.start + keep {
+                comp_rank[u] = s as u32;
+            }
+            for u in block.start + keep..block.end {
+                remaining.push(u);
+            }
+        }
+
+        // Distribute the remaining units over offload GPUs n2..n1
+        // round-robin, respecting each offload GPU's balanced capacity.
+        let n_off = n1 - n2;
+        let mut capacity: Vec<usize> = (n2..n1).map(|g| comp_sizes[g]).collect();
+        debug_assert_eq!(capacity.iter().sum::<usize>(), remaining.len());
+        let mut offload_idx = 0usize;
+        for u in remaining {
+            // Advance to the next offload GPU with spare capacity.
+            let mut tries = 0;
+            while capacity[offload_idx] == 0 {
+                offload_idx = (offload_idx + 1) % n_off;
+                tries += 1;
+                debug_assert!(tries <= n_off, "capacity exhausted");
+            }
+            comp_rank[u] = (n2 + offload_idx) as u32;
+            capacity[offload_idx] -= 1;
+            offload_idx = (offload_idx + 1) % n_off;
+        }
+
+        ShardMap { k, n1, n2, comp_rank, sync_rank }
+    }
+
+    /// Units computed by GPU `g` (ascending).
+    pub fn comp_units(&self, g: usize) -> Vec<usize> {
+        (0..self.k).filter(|&u| self.comp_rank[u] == g as u32).collect()
+    }
+
+    /// Units synchronized on sync shard `s` — a contiguous range.
+    pub fn sync_units(&self, s: usize) -> std::ops::Range<usize> {
+        let blocks = partition_ranges(self.k, self.n2);
+        blocks[s].clone()
+    }
+
+    /// Number of units GPU `g` computes.
+    pub fn comp_size(&self, g: usize) -> usize {
+        self.comp_rank.iter().filter(|&&r| r == g as u32).count()
+    }
+
+    /// Units that GPU `g` must *send* during pre-sync resharding,
+    /// grouped by destination sync GPU: `(dest, units)`.
+    /// Sync GPUs (`g < n2`) send nothing; their kept units already live
+    /// on the right GPU.
+    pub fn sends_of(&self, g: usize) -> Vec<(usize, Vec<usize>)> {
+        let mut by_dest: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+        for u in 0..self.k {
+            if self.comp_rank[u] == g as u32 {
+                let dest = self.sync_rank[u] as usize;
+                if dest != g {
+                    by_dest.entry(dest).or_default().push(u);
+                }
+            }
+        }
+        by_dest.into_iter().collect()
+    }
+
+    /// True when no resharding is needed (comp sharding == sync sharding).
+    pub fn is_identity(&self) -> bool {
+        self.comp_rank
+            .iter()
+            .zip(&self.sync_rank)
+            .all(|(c, s)| c == s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen, ShardInstanceGen};
+
+    fn verify_invariants(k: usize, n1: usize, n2: usize) -> Result<(), String> {
+        let m = ShardMap::build(k, n1, n2);
+        // 1. every unit assigned
+        if m.comp_rank.iter().any(|&r| r == u32::MAX) {
+            return Err("unassigned comp rank".into());
+        }
+        // 2. comp balanced: sizes match balanced partition multiset
+        let mut comp_sizes: Vec<usize> = (0..n1).map(|g| m.comp_size(g)).collect();
+        let mut expected = partition_sizes(k, n1);
+        comp_sizes.sort_unstable();
+        expected.sort_unstable();
+        if comp_sizes != expected {
+            return Err(format!("comp sizes {comp_sizes:?} != balanced {expected:?}"));
+        }
+        // 3. sync blocks contiguous and balanced
+        for s in 0..n2 {
+            let r = m.sync_units(s);
+            for u in r.clone() {
+                if m.sync_rank[u] != s as u32 {
+                    return Err(format!("sync_rank[{u}] != {s}"));
+                }
+            }
+        }
+        // 4. sync GPUs keep only units of their own block (no sync-GPU ->
+        //    sync-GPU transfers)
+        for g in 0..n2 {
+            for u in 0..k {
+                if m.comp_rank[u] == g as u32 && m.sync_rank[u] != g as u32 {
+                    return Err(format!("sync GPU {g} computes unit {u} of foreign block"));
+                }
+            }
+        }
+        // 5. pairwise offload traffic balanced: for each offload GPU the
+        //    per-destination unit counts differ by at most ceil(k/n2 / ...)+1
+        //    — round-robin guarantees near-uniform spread.
+        if n1 > n2 {
+            for g in n2..n1 {
+                let sends = m.sends_of(g);
+                let counts: Vec<usize> = sends.iter().map(|(_, v)| v.len()).collect();
+                if let (Some(&max), Some(&min)) =
+                    (counts.iter().max(), counts.iter().min())
+                {
+                    // sends to n2 destinations; round robin keeps spread <= 2
+                    if max - min > 2 {
+                        return Err(format!(
+                            "offload GPU {g} unbalanced sends {counts:?} (k={k} n1={n1} n2={n2})"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn identity_when_degrees_equal() {
+        let m = ShardMap::build(16, 4, 4);
+        assert!(m.is_identity());
+        assert!(m.sends_of(0).is_empty());
+    }
+
+    #[test]
+    fn small_example_by_hand() {
+        // k=8, n1=4, n2=2: sync blocks [0..4), [4..8); comp shards size 2.
+        let m = ShardMap::build(8, 4, 2);
+        // sync GPU 0 keeps units 0,1; sync GPU 1 keeps 4,5.
+        assert_eq!(m.comp_rank[0], 0);
+        assert_eq!(m.comp_rank[1], 0);
+        assert_eq!(m.comp_rank[4], 1);
+        assert_eq!(m.comp_rank[5], 1);
+        // offload GPUs 2,3 compute units 2,3,6,7 — round robin.
+        assert_eq!(m.comp_rank[2], 2);
+        assert_eq!(m.comp_rank[3], 3);
+        assert_eq!(m.comp_rank[6], 2);
+        assert_eq!(m.comp_rank[7], 3);
+        verify_invariants(8, 4, 2).unwrap();
+    }
+
+    #[test]
+    fn paper_shapes() {
+        verify_invariants(12_288, 32, 30).unwrap();
+        verify_invariants(12_288, 32, 28).unwrap();
+        verify_invariants(81_920, 32, 30).unwrap();
+        verify_invariants(128, 32, 30).unwrap(); // attention heads
+        verify_invariants(49_152, 8, 6).unwrap(); // prototype TP8 -> TP6
+    }
+
+    #[test]
+    fn property_all_instances() {
+        let gen = ShardInstanceGen { max_k: 2000, max_n: 64 };
+        check(0xA1, 300, &gen, |&(k, n1, n2)| verify_invariants(k, n1, n2));
+    }
+
+    #[test]
+    fn extreme_reduction() {
+        verify_invariants(64, 64, 1).unwrap();
+        let m = ShardMap::build(64, 64, 1);
+        // GPU 0 keeps 1 unit, the rest offloaded over 63 GPUs
+        assert_eq!(m.comp_size(0), 1);
+    }
+
+    #[test]
+    fn sends_cover_all_offloaded_units() {
+        let m = ShardMap::build(100, 8, 5);
+        let mut sent: Vec<usize> = Vec::new();
+        for g in 0..8 {
+            for (dest, units) in m.sends_of(g) {
+                for u in units {
+                    assert_eq!(m.sync_rank[u] as usize, dest);
+                    sent.push(u);
+                }
+            }
+        }
+        sent.sort_unstable();
+        // exactly the units whose comp GPU != sync GPU
+        let expected: Vec<usize> =
+            (0..100).filter(|&u| m.comp_rank[u] != m.sync_rank[u]).collect();
+        assert_eq!(sent, expected);
+    }
+}

@@ -1,0 +1,268 @@
+//! Execute reshard permutations and cross-replica allreduce on real f32
+//! buffers — the data-movement backend of the training driver.
+//!
+//! Layout convention: a sharded tensor is `Vec<Vec<f32>>`; shard `g`
+//! holds the data of the units it computes, each unit being `unit_len`
+//! contiguous floats, units stored in ascending unit id. Under the sync
+//! sharding, shard `s` holds its contiguous block `[start_s, end_s)` of
+//! units — exactly what a fused 1:1 allreduce with the peer replica needs.
+
+use super::shard_map::ShardMap;
+
+/// Scatter a full tensor (all `k` units) into comp shards per `map`.
+pub fn scatter_comp(map: &ShardMap, unit_len: usize, full: &[f32]) -> Vec<Vec<f32>> {
+    assert_eq!(full.len(), map.k * unit_len);
+    let mut shards: Vec<Vec<f32>> = (0..map.n1).map(|_| Vec::new()).collect();
+    for u in 0..map.k {
+        let g = map.comp_rank[u] as usize;
+        shards[g].extend_from_slice(&full[u * unit_len..(u + 1) * unit_len]);
+    }
+    shards
+}
+
+/// Gather comp shards back into the full tensor (inverse of `scatter_comp`).
+pub fn gather_comp(map: &ShardMap, unit_len: usize, shards: &[Vec<f32>]) -> Vec<f32> {
+    assert_eq!(shards.len(), map.n1);
+    let mut full = vec![0f32; map.k * unit_len];
+    let mut cursor = vec![0usize; map.n1];
+    for u in 0..map.k {
+        let g = map.comp_rank[u] as usize;
+        let c = cursor[g];
+        full[u * unit_len..(u + 1) * unit_len]
+            .copy_from_slice(&shards[g][c..c + unit_len]);
+        cursor[g] = c + unit_len;
+    }
+    full
+}
+
+/// Pre-sync reshard: comp sharding (n1 shards) → sync sharding (n2
+/// contiguous blocks). This is the all-to-all of paper Fig. 12.
+pub fn comp_to_sync(map: &ShardMap, unit_len: usize, comp: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    assert_eq!(comp.len(), map.n1);
+    let mut sync: Vec<Vec<f32>> = (0..map.n2)
+        .map(|s| vec![0f32; map.sync_units(s).len() * unit_len])
+        .collect();
+    let mut cursor = vec![0usize; map.n1];
+    for u in 0..map.k {
+        let g = map.comp_rank[u] as usize;
+        let s = map.sync_rank[u] as usize;
+        let block_start = map.sync_units(s).start;
+        let dst_off = (u - block_start) * unit_len;
+        let c = cursor[g];
+        sync[s][dst_off..dst_off + unit_len].copy_from_slice(&comp[g][c..c + unit_len]);
+        cursor[g] = c + unit_len;
+    }
+    sync
+}
+
+/// Post-sync reshard: sync sharding → comp sharding (exact inverse).
+pub fn sync_to_comp(map: &ShardMap, unit_len: usize, sync: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    assert_eq!(sync.len(), map.n2);
+    let mut comp: Vec<Vec<f32>> = (0..map.n1)
+        .map(|g| Vec::with_capacity(map.comp_size(g) * unit_len))
+        .collect();
+    for u in 0..map.k {
+        let g = map.comp_rank[u] as usize;
+        let s = map.sync_rank[u] as usize;
+        let block_start = map.sync_units(s).start;
+        let src_off = (u - block_start) * unit_len;
+        comp[g].extend_from_slice(&sync[s][src_off..src_off + unit_len]);
+    }
+    comp
+}
+
+/// Stage exactly the units that must cross the fabric during pre-sync
+/// resharding: units whose comp rank differs from their sync rank are
+/// copied into per-destination send buffers (what a NIC/NVLink DMA would
+/// transmit); kept units are untouched. The returned buffers are indexed
+/// by destination sync GPU. This is the *traffic-proportional* cost of
+/// the reshard — the quantity Fig. 8 correlates with backward compute —
+/// as opposed to [`comp_to_sync`], which materializes the whole sync
+/// layout.
+pub fn stage_offloaded(map: &ShardMap, unit_len: usize, comp: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    assert_eq!(comp.len(), map.n1);
+    let mut out: Vec<Vec<f32>> = (0..map.n2).map(|_| Vec::new()).collect();
+    let mut cursor = vec![0usize; map.n1];
+    for u in 0..map.k {
+        let g = map.comp_rank[u] as usize;
+        let s = map.sync_rank[u] as usize;
+        let c = cursor[g];
+        if g != s {
+            out[s].extend_from_slice(&comp[g][c..c + unit_len]);
+        }
+        cursor[g] = c + unit_len;
+    }
+    out
+}
+
+/// In-place elementwise mean across replicas of matching sync shards:
+/// the 1:1 allreduce. All replicas must present the same sync sharding
+/// (guaranteed by [`super::plan::SyncPlan`]).
+pub fn allreduce_mean(replica_shards: &mut [Vec<Vec<f32>>]) {
+    let n_rep = replica_shards.len();
+    assert!(n_rep >= 1);
+    let n_shards = replica_shards[0].len();
+    for r in replica_shards.iter() {
+        assert_eq!(r.len(), n_shards, "replica shard counts differ");
+    }
+    let inv = 1.0f32 / n_rep as f32;
+    for s in 0..n_shards {
+        let len = replica_shards[0][s].len();
+        for r in replica_shards.iter() {
+            assert_eq!(r[s].len(), len, "shard {s} length mismatch across replicas");
+        }
+        // accumulate into replica 0's buffer
+        for r in 1..n_rep {
+            let (head, tail) = replica_shards.split_at_mut(r);
+            let acc = &mut head[0][s];
+            let src = &tail[0][s];
+            for (a, b) in acc.iter_mut().zip(src) {
+                *a += *b;
+            }
+        }
+        for v in replica_shards[0][s].iter_mut() {
+            *v *= inv;
+        }
+        // broadcast back
+        let (head, tail) = replica_shards.split_at_mut(1);
+        for r in tail.iter_mut() {
+            r[s].copy_from_slice(&head[0][s]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_full(rng: &mut Rng, k: usize, unit_len: usize) -> Vec<f32> {
+        (0..k * unit_len).map(|_| rng.f32() - 0.5).collect()
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let map = ShardMap::build(37, 8, 5);
+        let mut rng = Rng::new(1);
+        let full = random_full(&mut rng, 37, 3);
+        let shards = scatter_comp(&map, 3, &full);
+        assert_eq!(gather_comp(&map, 3, &shards), full);
+    }
+
+    #[test]
+    fn comp_sync_roundtrip_is_identity() {
+        let map = ShardMap::build(100, 8, 6);
+        let mut rng = Rng::new(2);
+        let full = random_full(&mut rng, 100, 4);
+        let comp = scatter_comp(&map, 4, &full);
+        let sync = comp_to_sync(&map, 4, &comp);
+        let comp2 = sync_to_comp(&map, 4, &sync);
+        assert_eq!(comp, comp2);
+    }
+
+    #[test]
+    fn sync_layout_is_contiguous_block() {
+        let map = ShardMap::build(24, 6, 3);
+        let full: Vec<f32> = (0..24).map(|u| u as f32).collect(); // unit_len = 1
+        let comp = scatter_comp(&map, 1, &full);
+        let sync = comp_to_sync(&map, 1, &comp);
+        // sync shard s must hold exactly units [8s, 8s+8) in order
+        for s in 0..3 {
+            let expect: Vec<f32> = (8 * s..8 * (s + 1)).map(|u| u as f32).collect();
+            assert_eq!(sync[s], expect, "shard {s}");
+        }
+    }
+
+    #[test]
+    fn stage_offloaded_moves_exactly_the_offloaded_units() {
+        let map = ShardMap::build(100, 8, 6);
+        let mut rng = Rng::new(7);
+        let full = random_full(&mut rng, 100, 2);
+        let comp = scatter_comp(&map, 2, &full);
+        let staged = stage_offloaded(&map, 2, &comp);
+        // total staged elements == offloaded units * unit_len
+        let offloaded =
+            (0..100).filter(|&u| map.comp_rank[u] != map.sync_rank[u]).count();
+        let total: usize = staged.iter().map(|v| v.len()).sum();
+        assert_eq!(total, offloaded * 2);
+        // identity mapping stages nothing
+        let id = ShardMap::build(100, 6, 6);
+        let comp_id = scatter_comp(&id, 2, &full);
+        let staged_id = stage_offloaded(&id, 2, &comp_id);
+        assert!(staged_id.iter().all(|v| v.is_empty()));
+        // deeper reduction stages more
+        let map2 = ShardMap::build(100, 8, 3);
+        let comp2 = scatter_comp(&map2, 2, &full);
+        let staged2: usize =
+            stage_offloaded(&map2, 2, &comp2).iter().map(|v| v.len()).sum();
+        assert!(staged2 > total);
+    }
+
+    #[test]
+    fn allreduce_mean_matches_full_average() {
+        // Two replicas at different TP degrees: reshard both to sync
+        // layout, allreduce, reshard back, gather — must equal the mean
+        // of the two full tensors.
+        let k = 64;
+        let unit_len = 5;
+        let mut rng = Rng::new(3);
+        let full_a = random_full(&mut rng, k, unit_len);
+        let full_b = random_full(&mut rng, k, unit_len);
+
+        let map_a = ShardMap::build(k, 8, 6); // healthy replica, TP8
+        let map_b = ShardMap::build(k, 6, 6); // reduced replica, TP6
+
+        let comp_a = scatter_comp(&map_a, unit_len, &full_a);
+        let comp_b = scatter_comp(&map_b, unit_len, &full_b);
+        let mut shards = vec![
+            comp_to_sync(&map_a, unit_len, &comp_a),
+            comp_to_sync(&map_b, unit_len, &comp_b),
+        ];
+        allreduce_mean(&mut shards);
+        let comp_a2 = sync_to_comp(&map_a, unit_len, &shards[0]);
+        let comp_b2 = sync_to_comp(&map_b, unit_len, &shards[1]);
+        let got_a = gather_comp(&map_a, unit_len, &comp_a2);
+        let got_b = gather_comp(&map_b, unit_len, &comp_b2);
+
+        let expect: Vec<f32> =
+            full_a.iter().zip(&full_b).map(|(x, y)| (x + y) / 2.0).collect();
+        assert_eq!(got_a, expect);
+        assert_eq!(got_b, expect);
+    }
+
+    #[test]
+    fn allreduce_single_replica_is_identity() {
+        let map = ShardMap::build(16, 4, 4);
+        let full: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        let comp = scatter_comp(&map, 1, &full);
+        let mut shards = vec![comp_to_sync(&map, 1, &comp)];
+        allreduce_mean(&mut shards);
+        let back = gather_comp(&map, 1, &sync_to_comp(&map, 1, &shards[0]));
+        assert_eq!(back, full);
+    }
+
+    #[test]
+    fn three_way_nonuniform_allreduce() {
+        let k = 90;
+        let unit_len = 2;
+        let mut rng = Rng::new(9);
+        let fulls: Vec<Vec<f32>> = (0..3).map(|_| random_full(&mut rng, k, unit_len)).collect();
+        let tps = [10usize, 9, 7];
+        let maps: Vec<ShardMap> = tps.iter().map(|&tp| ShardMap::build(k, tp, 7)).collect();
+        let mut shards: Vec<Vec<Vec<f32>>> = maps
+            .iter()
+            .zip(&fulls)
+            .map(|(m, f)| comp_to_sync(m, unit_len, &scatter_comp(m, unit_len, f)))
+            .collect();
+        allreduce_mean(&mut shards);
+        let expect: Vec<f32> = (0..k * unit_len)
+            .map(|i| (fulls[0][i] + fulls[1][i] + fulls[2][i]) / 3.0)
+            .collect();
+        for (m, s) in maps.iter().zip(&shards) {
+            let got = gather_comp(m, unit_len, &sync_to_comp(m, unit_len, s));
+            for (g, e) in got.iter().zip(&expect) {
+                assert!((g - e).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Hybrid-parallel configuration: TP within the scale-up domain, PP
+//! across domains, DP across replicas. (Context parallelism is folded
+//! into the TP degree, as in the paper's appendix; expert parallelism is
+//! out of scope for the dense models evaluated.)
+
+use crate::config::ModelConfig;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Tensor-parallel degree (GPUs per TP group; must fit in a scale-up
+    /// domain).
+    pub tp: usize,
+    /// Pipeline-parallel degree (stages).
+    pub pp: usize,
+    /// Data-parallel degree (replicas).
+    pub dp: usize,
+    /// Local batch size per DP replica per microbatch (samples).
+    pub microbatch: usize,
+}
+
+impl ParallelConfig {
+    pub fn n_gpus(&self) -> usize {
+        self.tp * self.pp * self.dp
+    }
+
+    /// GPUs per DP replica.
+    pub fn gpus_per_replica(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    /// Number of microbatches per replica per iteration for a global
+    /// batch of `global_batch` samples.
+    pub fn n_microbatches(&self, global_batch: usize) -> usize {
+        let local = global_batch / self.dp;
+        (local / self.microbatch).max(1)
+    }
+
+    /// Layers per pipeline stage (balanced; asserts divisibility handled
+    /// by ceiling — trailing stage may be lighter).
+    pub fn layers_per_stage(&self, model: &ModelConfig) -> usize {
+        model.layers.div_ceil(self.pp)
+    }
+
+    /// Does this config evenly consume `global_batch` samples?
+    pub fn divides_batch(&self, global_batch: usize) -> bool {
+        global_batch % self.dp == 0 && (global_batch / self.dp) % self.microbatch == 0
+    }
+
+    pub fn label(&self) -> String {
+        format!("TP{}/PP{}/DP{}/mb{}", self.tp, self.pp, self.dp, self.microbatch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn gpu_accounting() {
+        let c = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+        assert_eq!(c.n_gpus(), 32_768);
+        assert_eq!(c.gpus_per_replica(), 256);
+    }
+
+    #[test]
+    fn microbatch_count() {
+        let c = ParallelConfig { tp: 8, pp: 4, dp: 16, microbatch: 2 };
+        // global batch 1024 -> local 64 -> 32 microbatches
+        assert_eq!(c.n_microbatches(1024), 32);
+        assert!(c.divides_batch(1024));
+        assert!(!c.divides_batch(1000));
+    }
+
+    #[test]
+    fn layers_per_stage_ceil() {
+        let m = presets::model("gpt-480b").unwrap(); // 100 layers
+        let c = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+        assert_eq!(c.layers_per_stage(&m), 13);
+        let c2 = ParallelConfig { tp: 32, pp: 4, dp: 256, microbatch: 1 };
+        assert_eq!(c2.layers_per_stage(&m), 25);
+    }
+}

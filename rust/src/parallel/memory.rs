@@ -1,0 +1,190 @@
+//! Per-GPU HBM footprint model (Megatron-style accounting with a
+//! ZeRO-1/distributed optimizer over DP and selective activation
+//! recompute), used to reject hybrid-parallel configs that do not fit.
+//!
+//! References: Korthikanti et al. "Reducing Activation Recomputation in
+//! Large Transformer Models" for the activation term; the paper's §2.1
+//! for why PP degree is "set to the minimum required to fit".
+
+use super::config::ParallelConfig;
+use crate::config::{Dtype, ModelConfig, WorkloadConfig};
+
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryModel {
+    /// Fraction of HBM usable for model state (rest: framework, NCCL
+    /// buffers, fragmentation).
+    pub usable_fraction: f64,
+    /// Shard the optimizer state over DP (ZeRO-1 / Megatron distributed
+    /// optimizer). The paper's Megatron baseline keeps full Adam state
+    /// per rank, so this defaults to `false` — which is what forces
+    /// low-TP configs into deep PP (Fig. 2's mechanism).
+    pub zero1: bool,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        MemoryModel { usable_fraction: 0.9, zero1: false }
+    }
+}
+
+impl MemoryModel {
+    /// Parameter-state bytes per GPU: bf16 params + fp32 grads held for
+    /// accumulation + fp32 Adam (m, v, master), optionally sharded over
+    /// DP (ZeRO-1).
+    pub fn param_state_bytes(
+        &self,
+        model: &ModelConfig,
+        cfg: &ParallelConfig,
+        dtype: Dtype,
+    ) -> f64 {
+        let p_local = model.params() as f64 / (cfg.tp * cfg.pp) as f64;
+        let weight = dtype.bytes().max(2) as f64; // fp8 still keeps bf16 weights
+        let grad = 4.0;
+        let optim = if self.zero1 { 12.0 / cfg.dp as f64 } else { 12.0 };
+        p_local * (weight + grad + optim)
+    }
+
+    /// Activation bytes per GPU with selective recompute **and sequence
+    /// parallelism** (standard for Megatron at these scales): per layer &
+    /// microbatch ≈ `s·b·h·34 / tp` bytes (softmax/score tensors
+    /// recomputed; the rest sharded over the TP group along sequence or
+    /// hidden). 1F1B keeps up to `pp` microbatches in flight on the
+    /// first stage.
+    pub fn activation_bytes(
+        &self,
+        model: &ModelConfig,
+        cfg: &ParallelConfig,
+        work: &WorkloadConfig,
+    ) -> f64 {
+        let s = work.seq_len as f64;
+        let b = cfg.microbatch as f64;
+        let h = model.hidden as f64;
+        let per_layer = s * b * h * 34.0 / cfg.tp as f64;
+        let layers = cfg.layers_per_stage(model) as f64;
+        // 1F1B first stage holds min(pp, m) microbatches in flight.
+        let m = cfg.n_microbatches(work.global_batch()) as f64;
+        let in_flight = (cfg.pp as f64).min(m);
+        per_layer * layers * in_flight
+    }
+
+    /// Total per-GPU bytes.
+    pub fn total_bytes(
+        &self,
+        model: &ModelConfig,
+        cfg: &ParallelConfig,
+        work: &WorkloadConfig,
+    ) -> f64 {
+        self.param_state_bytes(model, cfg, work.dtype)
+            + self.activation_bytes(model, cfg, work)
+    }
+
+    /// Does the config fit in `hbm_gib` GiB?
+    pub fn fits(
+        &self,
+        model: &ModelConfig,
+        cfg: &ParallelConfig,
+        work: &WorkloadConfig,
+        hbm_gib: f64,
+    ) -> bool {
+        self.total_bytes(model, cfg, work) <= hbm_gib * self.usable_fraction * (1u64 << 30) as f64
+    }
+
+    /// Minimum PP degree that fits (with TP and DP fixed), or None.
+    pub fn min_pp(
+        &self,
+        model: &ModelConfig,
+        tp: usize,
+        dp: usize,
+        microbatch: usize,
+        work: &WorkloadConfig,
+        hbm_gib: f64,
+        max_pp: usize,
+    ) -> Option<usize> {
+        (1..=max_pp).find(|&pp| {
+            let cfg = ParallelConfig { tp, pp, dp, microbatch };
+            self.fits(model, &cfg, work, hbm_gib)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn work() -> WorkloadConfig {
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 16 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        }
+    }
+
+    #[test]
+    fn paper_config_fits_on_b200() {
+        // 480B on 32K B200 (189 GiB) at TP32: needs PP to fit.
+        let m = presets::model("gpt-480b").unwrap();
+        let mm = MemoryModel::default();
+        let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+        assert!(mm.fits(&m, &cfg, &work(), 189.0));
+    }
+
+    #[test]
+    fn low_tp_no_pp_does_not_fit_480b() {
+        // Without PP at TP8, the param state (~6 B/param / 8 ≈ 360 GB)
+        // overflows even B200's 189 GB — PP is mandatory (§2.1).
+        let m = presets::model("gpt-480b").unwrap();
+        let mm = MemoryModel::default();
+        let cfg = ParallelConfig { tp: 8, pp: 1, dp: 4096, microbatch: 1 };
+        assert!(!mm.fits(&m, &cfg, &work(), 189.0));
+    }
+
+    #[test]
+    fn memory_decreases_with_tp_and_pp() {
+        let m = presets::model("gpt-175b").unwrap();
+        let mm = MemoryModel::default();
+        let w = work();
+        let base = ParallelConfig { tp: 8, pp: 4, dp: 8, microbatch: 1 };
+        let more_tp = ParallelConfig { tp: 16, pp: 4, dp: 8, microbatch: 1 };
+        let more_pp = ParallelConfig { tp: 8, pp: 8, dp: 8, microbatch: 1 };
+        let t0 = mm.total_bytes(&m, &base, &w);
+        assert!(mm.total_bytes(&m, &more_tp, &w) < t0);
+        // more PP shrinks param state but raises in-flight activations;
+        // param state dominates at these shapes
+        assert!(mm.param_state_bytes(&m, &more_pp, w.dtype) < mm.param_state_bytes(&m, &base, w.dtype));
+    }
+
+    #[test]
+    fn min_pp_monotone_in_hbm() {
+        let m = presets::model("gpt-175b").unwrap();
+        let mm = MemoryModel::default();
+        let w = WorkloadConfig {
+            seq_len: 4096,
+            minibatch_tokens: 16 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        };
+        let pp_small = mm.min_pp(&m, 8, 64, 1, &w, 80.0, 64);
+        let pp_big = mm.min_pp(&m, 8, 64, 1, &w, 189.0, 64);
+        let (a, b) = (pp_small.unwrap(), pp_big.unwrap());
+        assert!(b <= a, "more HBM should not need more PP ({a} vs {b})");
+        assert!(a > 1, "175B at TP8 on 80 GB needs PP");
+    }
+
+    #[test]
+    fn zero1_optimizer_shards_over_dp() {
+        let m = presets::model("gpt-8b").unwrap();
+        let mm = MemoryModel { zero1: true, ..MemoryModel::default() };
+        let small_dp = ParallelConfig { tp: 8, pp: 1, dp: 2, microbatch: 1 };
+        let big_dp = ParallelConfig { tp: 8, pp: 1, dp: 64, microbatch: 1 };
+        assert!(
+            mm.param_state_bytes(&m, &big_dp, Dtype::BF16)
+                < mm.param_state_bytes(&m, &small_dp, Dtype::BF16)
+        );
+        // default (Megatron baseline) is DP-independent
+        let base = MemoryModel::default();
+        assert_eq!(
+            base.param_state_bytes(&m, &big_dp, Dtype::BF16),
+            base.param_state_bytes(&m, &small_dp, Dtype::BF16)
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! Hybrid parallelism: configuration space (TP × PP × DP), the per-GPU
+//! memory-footprint model that constrains it, and the exhaustive planner
+//! behind Fig. 2b / Fig. 14 ("best config under a TP cap").
+
+pub mod config;
+pub mod memory;
+pub mod planner;
+
+pub use config::ParallelConfig;
+pub use memory::MemoryModel;
+pub use planner::{best_config, enumerate_legal, PlanChoice};

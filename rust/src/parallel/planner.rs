@@ -1,0 +1,137 @@
+//! Exhaustive hybrid-parallel configuration search (the paper's §2.2
+//! methodology: "we exhaustively search the space of hybrid-parallel
+//! configurations"), under a TP-degree cap — reproduces Fig. 2b/14.
+
+use super::config::ParallelConfig;
+use super::memory::MemoryModel;
+use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use crate::sim::{IterationModel, SimParams};
+
+/// Result of a planner run.
+#[derive(Clone, Debug)]
+pub struct PlanChoice {
+    pub cfg: ParallelConfig,
+    pub tokens_per_sec_per_gpu: f64,
+    pub breakdown: crate::sim::Breakdown,
+}
+
+/// All legal configs: TP ∈ powers-of-two ≤ min(cap, domain), PP divides
+/// layers reasonably, DP fills the cluster, memory fits, batch divides.
+pub fn enumerate_legal(
+    model: &ModelConfig,
+    work: &WorkloadConfig,
+    cluster: &ClusterConfig,
+    tp_cap: usize,
+) -> Vec<ParallelConfig> {
+    let mm = MemoryModel::default();
+    let n = cluster.n_gpus;
+    let global_batch = work.global_batch();
+    let mut out = Vec::new();
+    let mut tp = 1;
+    while tp <= tp_cap.min(cluster.domain_size) {
+        let mut pp = 1;
+        while pp <= 64 && tp * pp <= n {
+            if n % (tp * pp) == 0 && pp <= model.layers {
+                let dp = n / (tp * pp);
+                if dp <= global_batch && global_batch % dp == 0 {
+                    for mb in [1usize, 2, 4] {
+                        let cfg = ParallelConfig { tp, pp, dp, microbatch: mb };
+                        if cfg.divides_batch(global_batch)
+                            && mm.fits(model, &cfg, work, cluster.gpu.hbm_gib)
+                        {
+                            out.push(cfg);
+                        }
+                    }
+                }
+            }
+            pp *= 2;
+        }
+        tp *= 2;
+    }
+    out
+}
+
+/// Best config by simulated tokens/s/GPU.
+pub fn best_config(
+    model: &ModelConfig,
+    work: &WorkloadConfig,
+    cluster: &ClusterConfig,
+    tp_cap: usize,
+    params: SimParams,
+) -> Option<PlanChoice> {
+    let sim = IterationModel::new(model.clone(), work.clone(), cluster.clone(), params);
+    enumerate_legal(model, work, cluster, tp_cap)
+        .into_iter()
+        .map(|cfg| {
+            let tput = sim.tokens_per_sec_per_gpu(&cfg);
+            let breakdown = sim.healthy_iteration(&cfg);
+            PlanChoice { cfg, tokens_per_sec_per_gpu: tput, breakdown }
+        })
+        .max_by(|a, b| {
+            a.tokens_per_sec_per_gpu
+                .partial_cmp(&b.tokens_per_sec_per_gpu)
+                .unwrap()
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Dtype};
+
+    fn work(seq: usize) -> WorkloadConfig {
+        WorkloadConfig {
+            seq_len: seq,
+            minibatch_tokens: 16 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        }
+    }
+
+    #[test]
+    fn legal_configs_fill_cluster_exactly() {
+        let m = presets::model("gpt-480b").unwrap();
+        let c = presets::cluster("paper-32k-nvl32").unwrap();
+        let w = work(8192);
+        let configs = enumerate_legal(&m, &w, &c, 32);
+        assert!(!configs.is_empty());
+        for cfg in &configs {
+            assert_eq!(cfg.n_gpus(), c.n_gpus);
+            assert!(cfg.tp <= 32);
+            assert!(cfg.divides_batch(w.global_batch()));
+        }
+    }
+
+    #[test]
+    fn relaxing_tp_cap_never_hurts() {
+        // DESIGN.md invariant: the best config under a looser cap is at
+        // least as good.
+        let m = presets::model("gpt-480b").unwrap();
+        let c = presets::cluster("paper-32k-nvl32").unwrap();
+        let w = work(8192);
+        let p = SimParams::default();
+        let best8 = best_config(&m, &w, &c, 8, p).unwrap();
+        let best16 = best_config(&m, &w, &c, 16, p).unwrap();
+        let best32 = best_config(&m, &w, &c, 32, p).unwrap();
+        assert!(best16.tokens_per_sec_per_gpu >= best8.tokens_per_sec_per_gpu);
+        assert!(best32.tokens_per_sec_per_gpu >= best16.tokens_per_sec_per_gpu);
+    }
+
+    #[test]
+    fn high_scale_wants_high_tp() {
+        // Fig. 2b: at 32K GPUs the unrestricted best uses TP > 8.
+        let m = presets::model("gpt-480b").unwrap();
+        let c = presets::cluster("paper-32k-nvl32").unwrap();
+        let w = work(8192);
+        let best = best_config(&m, &w, &c, 32, SimParams::default()).unwrap();
+        assert!(best.cfg.tp > 8, "chose {:?}", best.cfg);
+    }
+
+    #[test]
+    fn chosen_config_fits_memory() {
+        let m = presets::model("gpt-480b").unwrap();
+        let c = presets::cluster("paper-32k-nvl32").unwrap();
+        let w = work(8192);
+        let best = best_config(&m, &w, &c, 32, SimParams::default()).unwrap();
+        assert!(MemoryModel::default().fits(&m, &best.cfg, &w, c.gpu.hbm_gib));
+    }
+}

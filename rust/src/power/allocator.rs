@@ -1,0 +1,154 @@
+//! Dynamic power allocator: solve for the *minimum* boost that lets a
+//! reduced-TP replica keep the healthy replicas' iteration time at full
+//! local batch (§5.3: "minimum operating power (for power-boosted) for
+//! the iteration time ... to be less than or equal to the iteration time
+//! of the healthy replicas").
+
+use super::rack::RackDesign;
+use crate::config::GpuSpec;
+use crate::parallel::ParallelConfig;
+use crate::sim::IterationModel;
+
+/// Outcome of a boost solve for one reduced-TP replica.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BoostDecision {
+    /// No boost needed (replica keeps up at nominal power).
+    NotNeeded,
+    /// Boost to `power_frac` × TDP keeps full batch at healthy iteration
+    /// time.
+    Boost { power_frac: f64 },
+    /// Even the max available boost cannot keep up; caller must fall back
+    /// to batch reduction (plain NTP) at `max_power_frac`.
+    Infeasible { max_power_frac: f64 },
+}
+
+/// Binary-search the minimum power fraction in `[1, max_boost]` such that
+/// the reduced replica at full `local_batch` matches `target_secs`.
+pub fn min_boost_for(
+    sim: &IterationModel,
+    cfg_full: &ParallelConfig,
+    tp_reduced: usize,
+    local_batch: usize,
+    target_secs: f64,
+    rack: &RackDesign,
+    gpu: &GpuSpec,
+) -> BoostDecision {
+    let domain_size = cfg_full.tp;
+    let max_power = rack
+        .max_boost(domain_size, tp_reduced)
+        .min(gpu.max_boost);
+
+    let time_at = |power: f64| -> f64 {
+        let perf = gpu.perf_at_power(power);
+        sim.ntp_iteration(cfg_full, tp_reduced, local_batch, perf).total()
+    };
+
+    if time_at(1.0) <= target_secs {
+        return BoostDecision::NotNeeded;
+    }
+    if time_at(max_power) > target_secs {
+        return BoostDecision::Infeasible { max_power_frac: max_power };
+    }
+    // Bisect on power.
+    let (mut lo, mut hi) = (1.0f64, max_power);
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        if time_at(mid) <= target_secs {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    BoostDecision::Boost { power_frac: hi }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Dtype, WorkloadConfig};
+    use crate::sim::SimParams;
+
+    fn sim() -> IterationModel {
+        IterationModel::new(
+            presets::model("gpt-480b").unwrap(),
+            WorkloadConfig {
+                seq_len: 16_384,
+                minibatch_tokens: 16 * 1024 * 1024,
+                dtype: Dtype::BF16,
+            },
+            presets::cluster("paper-32k-nvl32").unwrap(),
+            SimParams::default(),
+        )
+    }
+
+    fn cfg() -> ParallelConfig {
+        ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 }
+    }
+
+    #[test]
+    fn table1_tp30_needs_moderate_boost() {
+        // Paper Table 1: TP30-PW runs at 1.15× power with full batch.
+        let s = sim();
+        let cfg = cfg();
+        let local = s.work.global_batch() / cfg.dp;
+        let target = s.healthy_iteration(&cfg).total();
+        let rack = RackDesign::default();
+        // Allow rack budget beyond repurposed power (provisioned rack).
+        let rack = RackDesign { rack_budget_frac: 1.3, ..rack };
+        match min_boost_for(&s, &cfg, 30, local, target, &rack, &s.cluster.gpu) {
+            BoostDecision::Boost { power_frac } => {
+                assert!(
+                    (1.02..1.30).contains(&power_frac),
+                    "TP30 boost {power_frac}"
+                );
+            }
+            other => panic!("expected Boost, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tp28_needs_more_boost_than_tp30() {
+        let s = sim();
+        let cfg = cfg();
+        let local = s.work.global_batch() / cfg.dp;
+        let target = s.healthy_iteration(&cfg).total();
+        let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+        let b30 = min_boost_for(&s, &cfg, 30, local, target, &rack, &s.cluster.gpu);
+        let b28 = min_boost_for(&s, &cfg, 28, local, target, &rack, &s.cluster.gpu);
+        match (b30, b28) {
+            (BoostDecision::Boost { power_frac: p30 }, BoostDecision::Boost { power_frac: p28 }) => {
+                assert!(p28 > p30, "p28 {p28} should exceed p30 {p30}");
+            }
+            other => panic!("expected two Boosts, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn extreme_reduction_is_infeasible() {
+        let s = sim();
+        let cfg = cfg();
+        let local = s.work.global_batch() / cfg.dp;
+        let target = s.healthy_iteration(&cfg).total();
+        let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+        // Halving the TP group cannot be fixed by 1.3x power.
+        match min_boost_for(&s, &cfg, 16, local, target, &rack, &s.cluster.gpu) {
+            BoostDecision::Infeasible { max_power_frac } => {
+                assert!(max_power_frac <= 1.3 + 1e-12);
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_reduction_needs_no_boost() {
+        let s = sim();
+        let cfg = cfg();
+        let local = s.work.global_batch() / cfg.dp;
+        let target = s.healthy_iteration(&cfg).total();
+        let rack = RackDesign::default();
+        assert_eq!(
+            min_boost_for(&s, &cfg, 32, local, target, &rack, &s.cluster.gpu),
+            BoostDecision::NotNeeded
+        );
+    }
+}

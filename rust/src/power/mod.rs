@@ -1,0 +1,10 @@
+//! Dynamic power allocation (paper §3.2): the flexible rack design that
+//! redistributes the power budget of failed GPUs to the survivors in the
+//! same scale-up domain, letting a reduced-TP replica keep full local
+//! batch size (NTP-PW).
+
+pub mod allocator;
+pub mod rack;
+
+pub use allocator::{min_boost_for, BoostDecision};
+pub use rack::RackDesign;

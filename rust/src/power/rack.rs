@@ -1,0 +1,108 @@
+//! Rack electrical/thermal budget model (§3.2).
+//!
+//! The flexible rack provisions whips, breakers, PDUs, PSUs, VRs and
+//! cooling for up to `gpu_boost_cap` × TDP per GPU (1.3 in the paper,
+//! matching GH200's 700 W → 900 W dynamic balancing), with the row-level
+//! budget oversubscribed: the *expected* draw stays near nominal because
+//! boosting only happens in domains that have failed (power-free) GPUs.
+
+use crate::config::GpuSpec;
+
+#[derive(Clone, Debug)]
+pub struct RackDesign {
+    /// Max sustained per-GPU power as a fraction of TDP.
+    pub gpu_boost_cap: f64,
+    /// Rack-level budget as a fraction of `domain_size × TDP` (1.0 =
+    /// traditional rack; the flexible design keeps 1.0 nominal but allows
+    /// per-GPU boost inside it).
+    pub rack_budget_frac: f64,
+}
+
+impl Default for RackDesign {
+    fn default() -> Self {
+        RackDesign { gpu_boost_cap: 1.3, rack_budget_frac: 1.3 }
+    }
+}
+
+/// A traditional rack: no boosting at all.
+impl RackDesign {
+    pub fn traditional() -> RackDesign {
+        RackDesign { gpu_boost_cap: 1.0, rack_budget_frac: 1.0 }
+    }
+
+    /// Maximum uniform boost (fraction of TDP) available to the `healthy`
+    /// survivors of a domain of `domain_size` GPUs: limited by the GPU
+    /// cap and by the rack budget with failed GPUs' power repurposed.
+    pub fn max_boost(&self, domain_size: usize, healthy: usize) -> f64 {
+        if healthy == 0 {
+            return 0.0;
+        }
+        let rack_limit =
+            self.rack_budget_frac * domain_size as f64 / healthy as f64;
+        self.gpu_boost_cap.min(rack_limit.max(1.0))
+    }
+
+    /// Net domain power draw (fraction of nominal `domain_size × TDP`)
+    /// when `healthy` GPUs run at `boost` × TDP.
+    pub fn domain_power_frac(&self, domain_size: usize, healthy: usize, boost: f64) -> f64 {
+        healthy as f64 * boost / domain_size as f64
+    }
+
+    /// Perf-per-watt penalty of running at `boost` × TDP (relative to
+    /// TDP operation): perf ∝ P^(1/α) ⇒ perf/W ∝ P^(1/α - 1).
+    pub fn perf_per_watt_penalty(&self, gpu: &GpuSpec, boost: f64) -> f64 {
+        1.0 - boost.powf(1.0 / gpu.power_alpha - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn traditional_rack_never_boosts() {
+        let r = RackDesign::traditional();
+        assert_eq!(r.max_boost(32, 30), 1.0);
+    }
+
+    #[test]
+    fn flexible_rack_boosts_up_to_cap() {
+        let r = RackDesign::default();
+        // provisioned rack: per-GPU cap binds
+        assert_eq!(r.max_boost(32, 30), 1.3);
+        assert_eq!(r.max_boost(32, 16), 1.3);
+        // no failures: the flexible rack could still boost, but the
+        // allocator never asks for it (no repurposed power); budget math
+        // still caps at the GPU limit
+        assert_eq!(r.max_boost(32, 32), 1.3);
+        // dead domain
+        assert_eq!(r.max_boost(32, 0), 0.0);
+
+        // A rack with only nominal budget: boost limited to the
+        // repurposed power of the failed GPUs.
+        let nominal = RackDesign { gpu_boost_cap: 1.3, rack_budget_frac: 1.0 };
+        assert!((nominal.max_boost(32, 30) - 32.0 / 30.0).abs() < 1e-12);
+        assert_eq!(nominal.max_boost(32, 32), 1.0);
+    }
+
+    #[test]
+    fn boosted_domain_stays_within_provisioned_budget() {
+        let r = RackDesign::default();
+        let healthy = 30;
+        let boost = r.max_boost(32, healthy);
+        assert!(r.domain_power_frac(32, healthy, boost) <= r.rack_budget_frac + 1e-12);
+    }
+
+    #[test]
+    fn perf_per_watt_matches_paper_sensitivity() {
+        // §6.4: at 1.1× power perf/watt drops ~2.8%; at 1.2× ~6.5%.
+        let gpu = presets::gpu("b200").unwrap();
+        let r = RackDesign::default();
+        let p11 = r.perf_per_watt_penalty(&gpu, 1.1);
+        let p12 = r.perf_per_watt_penalty(&gpu, 1.2);
+        assert!((p11 - 0.028).abs() < 0.03, "1.1x penalty {p11}");
+        assert!((p12 - 0.065).abs() < 0.045, "1.2x penalty {p12}");
+        assert!(p12 > p11);
+    }
+}

@@ -1,0 +1,197 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted — program
+//! names, model shapes, TP shardings and the ordered parameter list the
+//! XLA programs expect.
+
+use crate::config::ModelConfig;
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+
+/// One parameter tensor in program order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `None` = replicated; `Some("heads" | "ffn")` = sharded along
+    /// axis 0 by that dimension's partition.
+    pub shard: Option<String>,
+}
+
+impl ParamMeta {
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// For sharded params: bytes (f32) of one unit (one row of axis 0).
+    pub fn unit_len(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    /// Which shard index this tensor is (parsed from the trailing `.sN`),
+    /// if sharded.
+    pub fn shard_index(&self) -> Option<usize> {
+        self.shard.as_ref()?;
+        let (_, idx) = self.name.rsplit_once(".s")?;
+        idx.parse().ok()
+    }
+
+    /// Group key: parameter name without the `.sN` suffix.
+    pub fn group_name(&self) -> &str {
+        if self.shard.is_some() {
+            self.name.rsplit_once(".s").map(|(b, _)| b).unwrap_or(&self.name)
+        } else {
+            &self.name
+        }
+    }
+}
+
+/// One compiled program.
+#[derive(Clone, Debug)]
+pub struct ProgramMeta {
+    pub name: String,
+    pub file: String,
+    pub model: ModelConfig,
+    pub tp: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub head_shards: Vec<usize>,
+    pub ffn_shards: Vec<usize>,
+    pub params: Vec<ParamMeta>,
+}
+
+impl ProgramMeta {
+    /// Total parameter element count (all shards).
+    pub fn n_param_elements(&self) -> usize {
+        self.params.iter().map(|p| p.n_elements()).sum()
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub programs: Vec<ProgramMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        let v = Value::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let mut programs = Vec::new();
+        for p in v.get("programs").as_arr().unwrap_or(&[]) {
+            let model_v = p.get("model");
+            let model = ModelConfig {
+                name: model_v.req_str("name")?.to_string(),
+                hidden: model_v.req_usize("hidden")?,
+                ffn: model_v.req_usize("ffn")?,
+                heads: model_v.req_usize("heads")?,
+                head_dim: model_v.req_usize("head_dim")?,
+                layers: model_v.req_usize("layers")?,
+                vocab: model_v.req_usize("vocab")?,
+            };
+            let usize_arr = |key: &str| -> Result<Vec<usize>> {
+                p.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("missing array '{key}'"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_usize().ok_or_else(|| anyhow::anyhow!("bad int in '{key}'"))
+                    })
+                    .collect()
+            };
+            let mut params = Vec::new();
+            for e in p.get("params").as_arr().unwrap_or(&[]) {
+                params.push(ParamMeta {
+                    name: e.req_str("name")?.to_string(),
+                    shape: e
+                        .get("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect(),
+                    shard: e.get("shard").as_str().map(|s| s.to_string()),
+                });
+            }
+            programs.push(ProgramMeta {
+                name: p.req_str("name")?.to_string(),
+                file: p.req_str("file")?.to_string(),
+                model,
+                tp: p.req_usize("tp")?,
+                batch: p.req_usize("batch")?,
+                seq_len: p.req_usize("seq_len")?,
+                head_shards: usize_arr("head_shards")?,
+                ffn_shards: usize_arr("ffn_shards")?,
+                params,
+            });
+        }
+        Ok(Manifest { dir: dir.to_string(), programs })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ProgramMeta> {
+        self.programs
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow::anyhow!("program '{name}' not in manifest"))
+    }
+
+    /// Find by (model, tp, batch).
+    pub fn find_spec(&self, model: &str, tp: usize, batch: usize) -> Result<&ProgramMeta> {
+        self.programs
+            .iter()
+            .find(|p| p.model.name == model && p.tp == tp && p.batch == batch)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no program for model={model} tp={tp} batch={batch}")
+            })
+    }
+
+    pub fn hlo_path(&self, p: &ProgramMeta) -> String {
+        format!("{}/{}", self.dir, p.file)
+    }
+}
+
+/// Default artifacts directory (relative to the repo root).
+pub fn default_dir() -> String {
+    std::env::var("NTP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(&format!("{}/manifest.json", default_dir())).exists()
+    }
+
+    #[test]
+    fn loads_manifest_when_present() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&default_dir()).unwrap();
+        assert!(!m.programs.is_empty());
+        let tiny = m.find_spec("tiny", 3, 4).unwrap();
+        assert_eq!(tiny.tp, 3);
+        assert_eq!(tiny.head_shards, vec![2, 1, 1]);
+        assert_eq!(tiny.ffn_shards, vec![86, 85, 85]);
+        // parameter order sanity: first four entries are layer-0 norms +
+        // attn shards
+        assert_eq!(tiny.params[0].name, "l0.ln1.scale");
+        assert!(tiny.params[2].name.starts_with("l0.attn.wqkv.s0"));
+        // sharded params expose group + index
+        let p = &tiny.params[2];
+        assert_eq!(p.group_name(), "l0.attn.wqkv");
+        assert_eq!(p.shard_index(), Some(0));
+        assert_eq!(p.unit_len(), 3 * 16 * 64);
+        // last param is the lm head
+        assert_eq!(tiny.params.last().unwrap().name, "lm_head");
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

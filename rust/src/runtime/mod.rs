@@ -1,0 +1,10 @@
+//! Runtime: load AOT-compiled HLO-text artifacts and execute them on the
+//! PJRT CPU client. Python never runs here — the Rust binary is
+//! self-contained once `make artifacts` has produced
+//! `artifacts/manifest.json` + `*.hlo.txt`.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Program, Runtime, StepOutput};
+pub use manifest::{Manifest, ParamMeta, ProgramMeta};

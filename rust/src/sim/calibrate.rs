@@ -1,0 +1,98 @@
+//! Simulator calibration against real execution (paper §6.3 / Fig. 11).
+//!
+//! The paper validates its simulator by correlating projected throughput
+//! with measurements on DGX-H100s across workloads and power caps. Our
+//! testbed is the CPU PJRT backend, so we do the same methodology at CPU
+//! scale: run real training steps through `runtime`, fit the `cpu-host`
+//! GpuSpec's effective FLOP/s (and the power curve is exercised
+//! analytically), then report predicted-vs-measured correlation.
+
+use crate::util::stats;
+
+/// A calibration data point: work in FLOPs, measured wall time.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub flops: f64,
+    pub secs: f64,
+    /// Label for reports (model/seq/tp).
+    pub id: usize,
+}
+
+/// Result of fitting `secs ≈ flops / eff_flops + overhead`.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// Effective FLOP/s of the backend.
+    pub eff_flops: f64,
+    /// Fixed per-step overhead (dispatch, host work), seconds.
+    pub overhead_secs: f64,
+    /// Pearson r between measured and fitted times.
+    pub r: f64,
+}
+
+/// Least-squares fit of time vs flops.
+pub fn fit(measurements: &[Measurement]) -> Calibration {
+    assert!(measurements.len() >= 2, "need >= 2 calibration points");
+    let xs: Vec<f64> = measurements.iter().map(|m| m.flops).collect();
+    let ys: Vec<f64> = measurements.iter().map(|m| m.secs).collect();
+    let (intercept, slope) = stats::linear_fit(&xs, &ys);
+    let r = stats::pearson_r(&xs, &ys);
+    Calibration {
+        eff_flops: if slope > 0.0 { 1.0 / slope } else { f64::INFINITY },
+        overhead_secs: intercept.max(0.0),
+        r,
+    }
+}
+
+/// Predict a step time under a calibration.
+pub fn predict(cal: &Calibration, flops: f64) -> f64 {
+    flops / cal.eff_flops + cal.overhead_secs
+}
+
+/// Predicted-vs-measured correlation for held-out points.
+pub fn validation_r(cal: &Calibration, held_out: &[Measurement]) -> f64 {
+    let predicted: Vec<f64> = held_out.iter().map(|m| predict(cal, m.flops)).collect();
+    let measured: Vec<f64> = held_out.iter().map(|m| m.secs).collect();
+    stats::pearson_r(&predicted, &measured)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn synth(n: usize, eff: f64, overhead: f64, noise: f64, seed: u64) -> Vec<Measurement> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|id| {
+                let flops = 1e9 * (1.0 + rng.f64() * 50.0);
+                let secs = flops / eff + overhead + rng.normal() * noise;
+                Measurement { flops, secs: secs.max(1e-6), id }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_known_parameters() {
+        let ms = synth(50, 5e10, 0.01, 0.0, 1);
+        let cal = fit(&ms);
+        assert!((cal.eff_flops / 5e10 - 1.0).abs() < 1e-6);
+        assert!((cal.overhead_secs - 0.01).abs() < 1e-6);
+        assert!(cal.r > 0.9999);
+    }
+
+    #[test]
+    fn noisy_fit_still_correlates() {
+        let ms = synth(100, 5e10, 0.01, 0.02, 2);
+        let cal = fit(&ms);
+        assert!(cal.r > 0.95, "r = {}", cal.r);
+        let held = synth(30, 5e10, 0.01, 0.02, 3);
+        assert!(validation_r(&cal, &held) > 0.95);
+    }
+
+    #[test]
+    fn predict_is_linear() {
+        let cal = Calibration { eff_flops: 1e9, overhead_secs: 0.5, r: 1.0 };
+        assert!((predict(&cal, 1e9) - 1.5).abs() < 1e-12);
+        assert!((predict(&cal, 2e9) - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,121 @@
+//! Collective communication cost models (α–β style): ring allreduce,
+//! reduce-scatter/all-gather, all-to-all and point-to-point, over either
+//! the scale-up (NVLink-class) or scale-out (IB/Ethernet) fabric.
+
+/// A link model: per-GPU unidirectional bandwidth and per-message latency.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// GB/s per GPU, unidirectional.
+    pub gbs: f64,
+    /// Per-hop latency, seconds.
+    pub latency: f64,
+}
+
+impl Link {
+    pub fn nvlink(gbs: f64) -> Link {
+        Link { gbs, latency: 2.0e-6 }
+    }
+
+    pub fn infiniband(gbs: f64) -> Link {
+        Link { gbs, latency: 6.0e-6 }
+    }
+
+    #[inline]
+    fn bytes_time(&self, bytes: f64) -> f64 {
+        bytes / (self.gbs * 1e9)
+    }
+}
+
+/// Ring allreduce over `n` ranks of `bytes` per rank:
+/// `2 (n-1)/n · bytes / bw + 2 (n-1) · α`.
+pub fn allreduce(link: &Link, n: usize, bytes: f64) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    2.0 * (nf - 1.0) / nf * link.bytes_time(bytes) + 2.0 * (nf - 1.0) * link.latency
+}
+
+/// Reduce-scatter (or all-gather): half an allreduce.
+pub fn reduce_scatter(link: &Link, n: usize, bytes: f64) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    (nf - 1.0) / nf * link.bytes_time(bytes) + (nf - 1.0) * link.latency
+}
+
+/// All-to-all where the busiest rank moves `max_bytes_per_gpu`:
+/// bandwidth-bound on that rank plus fan-out latency.
+pub fn all_to_all(link: &Link, n: usize, max_bytes_per_gpu: f64) -> f64 {
+    if n <= 1 || max_bytes_per_gpu <= 0.0 {
+        return 0.0;
+    }
+    link.bytes_time(max_bytes_per_gpu) + (n as f64 - 1.0) * link.latency
+}
+
+/// Point-to-point transfer.
+pub fn p2p(link: &Link, bytes: f64) -> f64 {
+    if bytes <= 0.0 {
+        return 0.0;
+    }
+    link.bytes_time(bytes) + link.latency
+}
+
+/// Broadcast within a scale-up domain (tree): `log2(n)` hops.
+pub fn broadcast(link: &Link, n: usize, bytes: f64) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let hops = (n as f64).log2().ceil();
+    link.bytes_time(bytes) + hops * link.latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_asymptotics() {
+        let l = Link::nvlink(900.0);
+        // Large message: approaches 2*bytes/bw.
+        let bytes = 1e9;
+        let t = allreduce(&l, 32, bytes);
+        let ideal = 2.0 * bytes / (900.0 * 1e9);
+        assert!(t > ideal && t < ideal * 1.2, "t={t} ideal={ideal}");
+        // n=1 or empty is free.
+        assert_eq!(allreduce(&l, 1, bytes), 0.0);
+        assert_eq!(allreduce(&l, 8, 0.0), 0.0);
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let l = Link::nvlink(900.0);
+        let t = allreduce(&l, 32, 1024.0);
+        // 62 hops × 2µs ≈ 124µs >> bandwidth term (~2ns)
+        assert!(t > 1.0e-4);
+    }
+
+    #[test]
+    fn reduce_scatter_is_half_allreduce() {
+        let l = Link::infiniband(100.0);
+        let bytes = 1e8;
+        let ar = allreduce(&l, 16, bytes);
+        let rs = reduce_scatter(&l, 16, bytes);
+        assert!((ar / rs - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bigger_rings_cost_more_latency() {
+        let l = Link::nvlink(900.0);
+        assert!(allreduce(&l, 64, 1e6) > allreduce(&l, 8, 1e6));
+    }
+
+    #[test]
+    fn p2p_and_broadcast() {
+        let l = Link::infiniband(50.0);
+        assert!(p2p(&l, 1e9) > 0.019);
+        let b = broadcast(&Link::nvlink(900.0), 32, 1e6);
+        assert!(b > 0.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Per-GPU compute-time model for transformer layers under TP sharding,
+//! including the efficiency penalty of small local matmuls (high TP
+//! shrinks the per-GPU GEMM shapes) and the imbalance penalty of
+//! nonuniform shard widths (§3.1 "Attention blocks").
+
+use crate::config::{Dtype, GpuSpec, ModelConfig};
+use crate::ntp::partition;
+
+/// Forward FLOPs for one token of one transformer layer, unsharded.
+pub fn layer_fwd_flops(model: &ModelConfig, seq_len: usize) -> f64 {
+    let h = model.hidden as f64;
+    let ad = (model.heads * model.head_dim) as f64;
+    let f = model.ffn as f64;
+    // qkv + out-proj matmuls: 2*(3·h·ad) + 2*(ad·h)
+    let attn_linear = 8.0 * h * ad;
+    // attention scores + context: 2 matmuls of [s, ad] — 4·s·ad per token
+    let attn_quad = 4.0 * seq_len as f64 * ad;
+    // MLP: two matmuls h×f
+    let mlp = 4.0 * h * f;
+    attn_linear + attn_quad + mlp
+}
+
+/// GEMM efficiency model: fraction of peak achieved as a function of the
+/// smallest local matmul dimension `d` (columns of the sharded weight).
+/// Saturates at `base_eff` for large tiles, decays when TP slicing makes
+/// the local GEMM skinny — the classic reason TP doesn't scale forever.
+pub fn gemm_efficiency(base_eff: f64, local_dim: usize) -> f64 {
+    let d = local_dim as f64;
+    base_eff * d / (d + 96.0)
+}
+
+/// Compute time (seconds) for one microbatch of `mb_samples` through one
+/// transformer layer's **forward**, sharded `tp`-ways on `gpu`.
+///
+/// `shard_units_max / shard_units_mean` captures nonuniform-TP imbalance:
+/// the slowest (largest) shard gates the TP group.
+pub fn layer_fwd_time(
+    model: &ModelConfig,
+    gpu: &GpuSpec,
+    dtype: Dtype,
+    seq_len: usize,
+    mb_samples: usize,
+    tp: usize,
+    base_eff: f64,
+    perf_factor: f64,
+) -> f64 {
+    let tokens = (seq_len * mb_samples) as f64;
+    let total = layer_fwd_flops(model, seq_len);
+    // Imbalance penalties are per sharded dimension, weighted by that
+    // block's compute share: attention shards by head (coarse, O(10–100)
+    // units — the §3.1 imbalance concern), MLP by ffn column (fine).
+    let h = model.hidden as f64;
+    let ad = (model.heads * model.head_dim) as f64;
+    let attn_share = (8.0 * h * ad + 4.0 * seq_len as f64 * ad) / total;
+    let mlp_share = 1.0 - attn_share;
+    let head_imb = if model.heads >= tp {
+        partition::imbalance(model.heads, tp)
+    } else {
+        0.0
+    };
+    let ffn_imb = if model.ffn >= tp { partition::imbalance(model.ffn, tp) } else { 0.0 };
+    let imb = 1.0 + attn_share * head_imb + mlp_share * ffn_imb;
+    let flops = total * tokens / tp as f64;
+    let local_ffn_cols = model.ffn / tp;
+    let eff = gemm_efficiency(base_eff, local_ffn_cols);
+    flops * imb / (gpu.tflops(dtype) * 1e12 * eff * perf_factor)
+}
+
+/// Backward ≈ 2× forward.
+pub fn layer_bwd_time(
+    model: &ModelConfig,
+    gpu: &GpuSpec,
+    dtype: Dtype,
+    seq_len: usize,
+    mb_samples: usize,
+    tp: usize,
+    base_eff: f64,
+    perf_factor: f64,
+) -> f64 {
+    2.0 * layer_fwd_time(model, gpu, dtype, seq_len, mb_samples, tp, base_eff, perf_factor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn flops_scale_with_model() {
+        let big = presets::model("gpt-480b").unwrap();
+        let small = presets::model("gpt-8b").unwrap();
+        assert!(layer_fwd_flops(&big, 8192) > 10.0 * layer_fwd_flops(&small, 8192));
+    }
+
+    #[test]
+    fn time_inversely_proportional_to_tp() {
+        let m = presets::model("gpt-480b").unwrap();
+        let g = presets::gpu("b200").unwrap();
+        let t8 = layer_fwd_time(&m, &g, Dtype::BF16, 8192, 1, 8, 0.85, 1.0);
+        let t32 = layer_fwd_time(&m, &g, Dtype::BF16, 8192, 1, 32, 0.85, 1.0);
+        // 4x more GPUs, but lower efficiency: speedup between 3x and 4x.
+        let speedup = t8 / t32;
+        assert!(speedup > 3.0 && speedup < 4.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn perf_factor_scales_linearly() {
+        let m = presets::model("gpt-175b").unwrap();
+        let g = presets::gpu("h100").unwrap();
+        let t1 = layer_fwd_time(&m, &g, Dtype::BF16, 4096, 2, 8, 0.85, 1.0);
+        let t2 = layer_fwd_time(&m, &g, Dtype::BF16, 4096, 2, 8, 0.85, 1.1);
+        assert!((t1 / t2 - 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn imbalance_hurts_odd_tp() {
+        let m = presets::model("gpt-480b").unwrap(); // 128 heads
+        let g = presets::gpu("b200").unwrap();
+        // TP30: heads split 5/4 -> ~17% imbalance; TP32 is exact.
+        let t30 = layer_fwd_time(&m, &g, Dtype::BF16, 8192, 1, 30, 0.85, 1.0);
+        let t32 = layer_fwd_time(&m, &g, Dtype::BF16, 8192, 1, 32, 0.85, 1.0);
+        // per-GPU work at TP30 > (32/30)·TP32 work because of imbalance
+        let ratio = t30 / t32;
+        assert!(ratio > 32.0 / 30.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd() {
+        let m = presets::model("gpt-15b").unwrap();
+        let g = presets::gpu("h100").unwrap();
+        let f = layer_fwd_time(&m, &g, Dtype::FP8, 2048, 4, 8, 0.85, 1.0);
+        let b = layer_bwd_time(&m, &g, Dtype::FP8, 2048, 4, 8, 0.85, 1.0);
+        assert!((b / f - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fp8_faster_than_bf16() {
+        let m = presets::model("gpt-15b").unwrap();
+        let g = presets::gpu("h100").unwrap();
+        let t_bf16 = layer_fwd_time(&m, &g, Dtype::BF16, 2048, 1, 8, 0.85, 1.0);
+        let t_fp8 = layer_fwd_time(&m, &g, Dtype::FP8, 2048, 1, 8, 0.85, 1.0);
+        assert!(t_fp8 < t_bf16);
+    }
+
+    #[test]
+    fn gemm_efficiency_monotone() {
+        assert!(gemm_efficiency(0.85, 4096) > gemm_efficiency(0.85, 256));
+        assert!(gemm_efficiency(0.85, 256) > gemm_efficiency(0.85, 32));
+        assert!(gemm_efficiency(0.85, 100_000) <= 0.85);
+    }
+}

@@ -1,0 +1,318 @@
+//! End-to-end iteration-time model: assembles compute, TP collectives,
+//! the 1F1B pipeline and the (partially overlapped) DP gradient allreduce
+//! into one iteration's timing with a full breakdown — the quantity every
+//! large-scale figure is computed from.
+
+use super::comm::{self, Link};
+use super::compute;
+use super::pipeline::PipelineTiming;
+use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use crate::ntp::{ReshardPlan, ShardMap};
+use crate::parallel::ParallelConfig;
+
+/// Tunable simulator constants (fit once in [`super::calibrate`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SimParams {
+    /// Peak fraction achievable by large GEMMs.
+    pub base_eff: f64,
+    /// Interleaved virtual stages per GPU (Megatron-style).
+    pub virtual_stages: usize,
+    /// Fraction of the TP allreduce that overlaps with computation
+    /// (async TP / comm-overlap techniques; 0 = fully exposed).
+    pub tp_overlap: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        // tp_overlap 0.75: Megatron-style sequence-parallel + async TP
+        // collectives hide most of the allreduce behind the GEMMs (the
+        // paper reports 87% per-GPU utilization at NVL32/32K, which
+        // requires most TP comm to be hidden).
+        SimParams { base_eff: 0.85, virtual_stages: 4, tp_overlap: 0.75 }
+    }
+}
+
+/// Iteration-time breakdown (seconds). `compute` is pure math; the comm
+/// terms are *exposed* (non-overlapped) times.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    pub compute: f64,
+    pub tp_comm: f64,
+    pub pp_bubble: f64,
+    pub pp_p2p: f64,
+    pub dp_exposed: f64,
+    /// NTP overheads: exposed reshard + allreduce-volume increase.
+    pub ntp_overhead: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.tp_comm + self.pp_bubble + self.pp_p2p + self.dp_exposed
+            + self.ntp_overhead
+    }
+
+    /// Model-FLOPs utilization proxy: compute / total.
+    pub fn utilization(&self) -> f64 {
+        if self.total() <= 0.0 {
+            return 0.0;
+        }
+        self.compute / self.total()
+    }
+}
+
+/// The iteration model for one (model, workload, cluster) triple.
+#[derive(Clone, Debug)]
+pub struct IterationModel {
+    pub model: ModelConfig,
+    pub work: WorkloadConfig,
+    pub cluster: ClusterConfig,
+    pub params: SimParams,
+}
+
+impl IterationModel {
+    pub fn new(
+        model: ModelConfig,
+        work: WorkloadConfig,
+        cluster: ClusterConfig,
+        params: SimParams,
+    ) -> IterationModel {
+        IterationModel { model, work, cluster, params }
+    }
+
+    fn nvlink(&self) -> Link {
+        Link::nvlink(self.cluster.gpu.nvlink_gbs)
+    }
+
+    fn ib(&self) -> Link {
+        Link::infiniband(self.cluster.gpu.ib_gbs)
+    }
+
+    /// Evaluate one DP replica's iteration time at TP degree `cfg.tp`
+    /// (which may be a reduced NTP degree), local batch `local_batch`
+    /// samples, with GPUs running at `perf_factor` × nominal speed.
+    ///
+    /// Returns the breakdown. `cfg.dp` only affects the DP-allreduce
+    /// term; the pipeline/compute terms are per-replica.
+    pub fn replica_iteration(
+        &self,
+        cfg: &ParallelConfig,
+        local_batch: usize,
+        perf_factor: f64,
+    ) -> Breakdown {
+        let m = (local_batch / cfg.microbatch).max(1);
+        let seq = self.work.seq_len;
+        let mb = cfg.microbatch;
+        let dtype = self.work.dtype;
+        let layers_per_stage = cfg.layers_per_stage(&self.model);
+
+        // --- per-microbatch, per-stage compute ---
+        let t_layer_f = compute::layer_fwd_time(
+            &self.model,
+            &self.cluster.gpu,
+            dtype,
+            seq,
+            mb,
+            cfg.tp,
+            self.params.base_eff,
+            perf_factor,
+        );
+        let t_fwd_comp = t_layer_f * layers_per_stage as f64;
+        let t_bwd_comp = 2.0 * t_fwd_comp;
+
+        // --- TP collectives: 2 allreduces fwd + 2 bwd per layer over the
+        // activation tensor [mb, seq, hidden] on the scale-up fabric ---
+        let act_bytes = (mb * seq * self.model.hidden * dtype.bytes()) as f64;
+        let t_ar = comm::allreduce(&self.nvlink(), cfg.tp, act_bytes);
+        let tp_exposed_per_layer = 4.0 * t_ar * (1.0 - self.params.tp_overlap);
+        let t_tp_stage = tp_exposed_per_layer * layers_per_stage as f64;
+        // fwd carries 2 of the 4 allreduces
+        let t_fwd = t_fwd_comp + 0.5 * t_tp_stage;
+        let t_bwd = t_bwd_comp + 0.5 * t_tp_stage;
+
+        // --- PP p2p: activation [mb, seq, hidden] split over tp NICs ---
+        let p2p_bytes = act_bytes / cfg.tp as f64;
+        let t_p2p = comm::p2p(&self.ib(), p2p_bytes);
+
+        let v = self.params.virtual_stages.min(layers_per_stage).max(1);
+        let pipe = PipelineTiming { t_fwd, t_bwd, t_p2p, pp: cfg.pp, m, v };
+
+        // --- DP gradient allreduce (bf16 grads) over IB, overlapped with
+        // the pipeline cooldown ---
+        let grad_bytes =
+            self.model.params() as f64 / (cfg.tp * cfg.pp) as f64 * 2.0;
+        let t_dp = comm::allreduce(&self.ib(), cfg.dp, grad_bytes);
+        let dp_exposed = (t_dp - pipe.dp_overlap_window()).max(0.0);
+
+        let compute_total = m as f64 * (t_fwd_comp + t_bwd_comp);
+        Breakdown {
+            compute: compute_total,
+            tp_comm: m as f64 * t_tp_stage,
+            pp_bubble: pipe.bubble_time(),
+            pp_p2p: pipe.p2p_time(),
+            dp_exposed,
+            ntp_overhead: 0.0,
+        }
+    }
+
+    /// Healthy-replica iteration for a full config (local batch from the
+    /// workload's global batch).
+    pub fn healthy_iteration(&self, cfg: &ParallelConfig) -> Breakdown {
+        let local_batch = self.work.global_batch() / cfg.dp.max(1);
+        self.replica_iteration(cfg, local_batch.max(1), 1.0)
+    }
+
+    /// Iteration of an NTP-reduced replica: TP degree `tp_reduced`,
+    /// local batch `local_batch`, optional power boost, including the
+    /// NTP synchronization overheads (§6.2):
+    /// * pre-sync reshard — overlapped with backward, exposed fraction
+    ///   grows with the reshard:compute ratio (Fig. 8's linear law);
+    /// * allreduce volume increase — gradients sync over `tp_reduced`
+    ///   instead of `tp_full` GPUs;
+    /// * post-sync reshard — fully overlapped with the allreduce.
+    pub fn ntp_iteration(
+        &self,
+        cfg_full: &ParallelConfig,
+        tp_reduced: usize,
+        local_batch: usize,
+        perf_factor: f64,
+    ) -> Breakdown {
+        let cfg_red = ParallelConfig { tp: tp_reduced, ..*cfg_full };
+        let mut b = self.replica_iteration(&cfg_red, local_batch, perf_factor);
+
+        // NTP overheads only exist when the group is nonuniform.
+        if tp_reduced < cfg_full.tp {
+            let map = ShardMap::build(self.model.ffn, cfg_full.tp, tp_reduced);
+            let plan = ReshardPlan::from_map(&map);
+            // one unit = one (A column + B row) pair per layer, bf16
+            let unit_bytes = 2 * self.model.hidden * 2;
+            let reshard_bytes =
+                plan.max_bytes_per_gpu(unit_bytes) as f64 * self.model.layers as f64
+                    / cfg_full.pp as f64;
+            let t_reshard = reshard_bytes / (self.cluster.gpu.nvlink_gbs * 1e9);
+            // Fig. 8: exposure fraction ~ linear in comm:comp ratio.
+            let t_bwd_total = 2.0 / 3.0 * b.compute;
+            let ratio = (t_reshard / t_bwd_total.max(1e-12)).min(1.0);
+            let exposed_reshard = t_reshard * (0.05 + 0.5 * ratio).min(1.0);
+
+            // allreduce volume increase on sync GPUs: n_full / n_reduced
+            let grad_bytes = self.model.params() as f64
+                / (cfg_full.tp * cfg_full.pp) as f64
+                * 2.0
+                * (cfg_full.tp as f64 / tp_reduced as f64 - 1.0);
+            let extra_ar = comm::allreduce(&self.ib(), cfg_full.dp, grad_bytes);
+            // mostly overlapped with the tail backward; expose 30%
+            b.ntp_overhead = exposed_reshard + 0.3 * extra_ar;
+        }
+        b
+    }
+
+    /// Tokens/second/GPU for a healthy config — the y-axis of Fig. 2.
+    pub fn tokens_per_sec_per_gpu(&self, cfg: &ParallelConfig) -> f64 {
+        let b = self.healthy_iteration(cfg);
+        let tokens = self.work.minibatch_tokens as f64;
+        tokens / b.total() / cfg.n_gpus() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Dtype};
+
+    fn setup() -> IterationModel {
+        IterationModel::new(
+            presets::model("gpt-480b").unwrap(),
+            WorkloadConfig {
+                seq_len: 8192,
+                minibatch_tokens: 16 * 1024 * 1024,
+                dtype: Dtype::BF16,
+            },
+            presets::cluster("paper-32k-nvl32").unwrap(),
+            SimParams::default(),
+        )
+    }
+
+    fn cfg32k() -> ParallelConfig {
+        ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 }
+    }
+
+    #[test]
+    fn breakdown_is_positive_and_decomposes() {
+        let m = setup();
+        let b = m.healthy_iteration(&cfg32k());
+        assert!(b.compute > 0.0);
+        assert!(b.pp_bubble > 0.0);
+        assert!(b.total() >= b.compute);
+        assert!(b.utilization() > 0.3 && b.utilization() < 1.0, "util {}", b.utilization());
+    }
+
+    #[test]
+    fn higher_tp_cuts_bubble_at_scale() {
+        // The Fig. 2b mechanism: at 32K GPUs, capping TP forces more
+        // PP/DP and a bigger bubble share.
+        let m = setup();
+        let tp32 = m.healthy_iteration(&cfg32k());
+        let tp8 = m.healthy_iteration(&ParallelConfig { tp: 8, pp: 16, dp: 256, microbatch: 1 });
+        let share32 = tp32.pp_bubble / tp32.total();
+        let share8 = tp8.pp_bubble / tp8.total();
+        assert!(share8 > share32, "bubble share tp8 {share8} vs tp32 {share32}");
+    }
+
+    #[test]
+    fn reduced_tp_replica_is_slower_at_same_batch() {
+        let m = setup();
+        let full = m.healthy_iteration(&cfg32k());
+        let red = m.ntp_iteration(&cfg32k(), 30, 16, 1.0);
+        assert!(red.total() > full.total());
+        assert!(red.ntp_overhead > 0.0);
+    }
+
+    #[test]
+    fn reduced_batch_compensates() {
+        // Paper Table 1: TP30 with local bs 7 (of 8) keeps the reduced
+        // replica's iteration time within the healthy replicas'.
+        let m = setup();
+        let full_local = m.work.global_batch() / cfg32k().dp; // 16M tok / 16K seq / 128 dp... = 8? (global 2048 at 8K; here seq 8192 -> 2048/128 = 16)
+        let full = m.healthy_iteration(&cfg32k());
+        // bs scaled by ~ (30/32) / (1 + imbalance) -> ceil at 7/8 of full
+        let reduced_bs = full_local * 7 / 8;
+        let red = m.ntp_iteration(&cfg32k(), 30, reduced_bs, 1.0);
+        assert!(
+            red.total() <= full.total() * 1.02,
+            "red {} vs full {}",
+            red.total(),
+            full.total()
+        );
+    }
+
+    #[test]
+    fn power_boost_compensates_full_batch() {
+        // Paper Table 1: TP28-PW at 1.3x power sustains full local batch.
+        let m = setup();
+        let full = m.healthy_iteration(&cfg32k());
+        let boost = m.cluster.gpu.perf_at_power(1.3);
+        let red = m.ntp_iteration(&cfg32k(), 28, 16, boost);
+        assert!(
+            red.total() <= full.total() * 1.05,
+            "red {} vs full {}",
+            red.total(),
+            full.total()
+        );
+    }
+
+    #[test]
+    fn uniform_ntp_iteration_has_no_overhead() {
+        let m = setup();
+        let b = m.ntp_iteration(&cfg32k(), 32, 16, 1.0);
+        assert_eq!(b.ntp_overhead, 0.0);
+    }
+
+    #[test]
+    fn tokens_per_sec_sane_range() {
+        let m = setup();
+        let tps = m.tokens_per_sec_per_gpu(&cfg32k());
+        // B200 ~2.2 PFLOP/s bf16; 480B model needs ~2.9 TFLOPs/token.
+        // Perfect world ≈ 700 tok/s/GPU; expect 30–90% of that.
+        assert!(tps > 200.0 && tps < 700.0, "tokens/s/gpu {tps}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Performance simulator (paper §4.2): an analytical model of large-scale
+//! LLM training — per-GPU compute, collective communication, the 1F1B
+//! pipeline schedule, compute/comm overlap, and power — detailed enough
+//! to reproduce the *shape* of every large-scale result in the paper
+//! (Figs. 2, 6, 7, 10, 14; Table 1). Fidelity against real execution is
+//! checked in Fig. 11 ([`calibrate`] fits the CPU-host GpuSpec to
+//! measured PJRT runs, then predicted-vs-measured correlation is
+//! reported).
+
+pub mod calibrate;
+pub mod comm;
+pub mod compute;
+pub mod engine;
+pub mod iteration;
+pub mod pipeline;
+
+pub use engine::{evaluate_group, FtStrategy, GroupOutcome};
+pub use iteration::{Breakdown, IterationModel, SimParams};

@@ -1,0 +1,127 @@
+//! 1F1B pipeline schedule timing (with Megatron-style interleaved
+//! virtual stages): steady-state cost, bubble ratio, and the exposure
+//! window available for overlapping the DP gradient allreduce.
+
+/// Timing of one pipeline iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineTiming {
+    /// Per-microbatch forward time of one stage (seconds).
+    pub t_fwd: f64,
+    /// Per-microbatch backward time of one stage.
+    pub t_bwd: f64,
+    /// Per-boundary p2p activation transfer time.
+    pub t_p2p: f64,
+    pub pp: usize,
+    /// Microbatches per iteration.
+    pub m: usize,
+    /// Interleaving factor (virtual pipeline stages per GPU); 1 = plain
+    /// 1F1B. Interleaving divides the bubble by `v` at the cost of `v×`
+    /// more p2p boundaries.
+    pub v: usize,
+}
+
+impl PipelineTiming {
+    /// Pipeline bubble ratio: fraction of the iteration the average GPU
+    /// is idle waiting for the pipeline: `(pp-1) / (v·m + pp - 1)`.
+    pub fn bubble_ratio(&self) -> f64 {
+        if self.pp <= 1 {
+            return 0.0;
+        }
+        let ppf = self.pp as f64;
+        (ppf - 1.0) / (self.v as f64 * self.m as f64 + ppf - 1.0)
+    }
+
+    /// Active (non-bubble) time: every stage processes `m` microbatches.
+    pub fn active_time(&self) -> f64 {
+        self.m as f64 * (self.t_fwd + self.t_bwd)
+    }
+
+    /// Bubble time implied by the ratio.
+    pub fn bubble_time(&self) -> f64 {
+        let r = self.bubble_ratio();
+        self.active_time() * r / (1.0 - r)
+    }
+
+    /// Total p2p transfer time on the critical path: the pipeline fill
+    /// traverses `pp-1` boundaries (×`v` interleave rounds); steady-state
+    /// p2p overlaps with compute.
+    pub fn p2p_time(&self) -> f64 {
+        if self.pp <= 1 {
+            return 0.0;
+        }
+        (self.pp - 1) as f64 * self.v as f64 * 2.0 * self.t_p2p
+    }
+
+    /// End-to-end pipeline time (before DP sync).
+    pub fn total_time(&self) -> f64 {
+        self.active_time() + self.bubble_time() + self.p2p_time()
+    }
+
+    /// Window at the tail of the iteration during which DP allreduce can
+    /// overlap with remaining backward work: roughly the cooldown phase,
+    /// `(pp-1)/v + 1` microbatches of backward plus the final stage's
+    /// backward stream.
+    pub fn dp_overlap_window(&self) -> f64 {
+        let tail_ubatches = ((self.pp - 1) as f64 / self.v as f64 + 1.0)
+            .min(self.m as f64);
+        tail_ubatches * self.t_bwd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> PipelineTiming {
+        PipelineTiming { t_fwd: 0.01, t_bwd: 0.02, t_p2p: 1e-4, pp: 8, m: 32, v: 1 }
+    }
+
+    #[test]
+    fn bubble_formula() {
+        let p = base();
+        assert!((p.bubble_ratio() - 7.0 / 39.0).abs() < 1e-12);
+        // no pipeline, no bubble
+        let p1 = PipelineTiming { pp: 1, ..base() };
+        assert_eq!(p1.bubble_ratio(), 0.0);
+    }
+
+    #[test]
+    fn interleaving_shrinks_bubble() {
+        let p1 = base();
+        let p4 = PipelineTiming { v: 4, ..base() };
+        assert!(p4.bubble_ratio() < p1.bubble_ratio() / 2.0);
+        // ... but adds p2p
+        assert!(p4.p2p_time() > p1.p2p_time());
+    }
+
+    #[test]
+    fn more_microbatches_shrink_bubble() {
+        let few = PipelineTiming { m: 8, ..base() };
+        let many = PipelineTiming { m: 128, ..base() };
+        assert!(many.bubble_ratio() < few.bubble_ratio());
+    }
+
+    #[test]
+    fn total_decomposes() {
+        let p = base();
+        let total = p.total_time();
+        assert!(
+            (total - (p.active_time() + p.bubble_time() + p.p2p_time())).abs() < 1e-12
+        );
+        assert!(total > p.active_time());
+    }
+
+    #[test]
+    fn bubble_time_consistent_with_ratio() {
+        let p = base();
+        let ratio = p.bubble_time() / (p.bubble_time() + p.active_time());
+        assert!((ratio - p.bubble_ratio()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_window_bounded_by_iteration() {
+        let p = base();
+        assert!(p.dp_overlap_window() <= p.m as f64 * p.t_bwd);
+        assert!(p.dp_overlap_window() > 0.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Checkpointing — the traditional resilience baseline the paper
+//! contrasts NTP against (§7: "DNN training has relied on checkpointing
+//! for resilience"). Full-tensor checkpoints are TP-layout-agnostic
+//! (saved via `params::gather_full`), so a job can checkpoint at TP32
+//! and restore at TP30 — which is also exactly what a cold NTP restart
+//! does.
+//!
+//! Format: a little-endian binary blob per tensor group plus a JSON
+//! index — no external serialization deps (offline build).
+
+use super::params;
+use super::replica::Replica;
+use crate::util::json::Value;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+
+/// Magic + version for the binary blob.
+const MAGIC: &[u8; 8] = b"NTPCKPT1";
+
+/// A checkpoint: named full tensors + optimizer state + step counter.
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<(String, Vec<f32>)>,
+    pub opt_m: Vec<(String, Vec<f32>)>,
+    pub opt_v: Vec<(String, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    /// Capture a replica's state (any TP degree).
+    pub fn capture(replica: &Replica) -> Checkpoint {
+        let meta = &replica.program.meta;
+        Checkpoint {
+            step: replica.opt.step,
+            params: params::gather_full(meta, &replica.params),
+            opt_m: params::gather_full(meta, &replica.opt.m),
+            opt_v: params::gather_full(meta, &replica.opt.v),
+        }
+    }
+
+    /// Restore into a replica (possibly at a different TP degree).
+    pub fn restore(&self, replica: &mut Replica) -> Result<()> {
+        let meta = replica.program.meta.clone();
+        replica.params = params::reshard_full(&meta, &self.params)?;
+        replica.opt.m = params::reshard_full(&meta, &self.opt_m)?;
+        replica.opt.v = params::reshard_full(&meta, &self.opt_v)?;
+        replica.opt.step = self.step;
+        Ok(())
+    }
+
+    fn write_sections(out: &mut impl Write, sections: &[(String, Vec<f32>)]) -> Result<()> {
+        for (_, data) in sections {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            out.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Save to `<path>.json` (index) + `<path>.bin` (tensor data).
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let index_of = |sections: &[(String, Vec<f32>)]| -> Value {
+            Value::Arr(
+                sections
+                    .iter()
+                    .map(|(name, data)| {
+                        Value::obj(vec![
+                            ("name", name.as_str().into()),
+                            ("len", data.len().into()),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let index = Value::obj(vec![
+            ("step", (self.step as usize).into()),
+            ("params", index_of(&self.params)),
+            ("opt_m", index_of(&self.opt_m)),
+            ("opt_v", index_of(&self.opt_v)),
+        ]);
+        std::fs::write(format!("{path}.json"), index.pretty())?;
+
+        let mut bin = std::io::BufWriter::new(std::fs::File::create(format!("{path}.bin"))?);
+        bin.write_all(MAGIC)?;
+        Self::write_sections(&mut bin, &self.params)?;
+        Self::write_sections(&mut bin, &self.opt_m)?;
+        Self::write_sections(&mut bin, &self.opt_v)?;
+        Ok(())
+    }
+
+    /// Load from `<path>.{json,bin}`.
+    pub fn load(path: &str) -> Result<Checkpoint> {
+        let index_text = std::fs::read_to_string(format!("{path}.json"))
+            .with_context(|| format!("reading {path}.json"))?;
+        let index = Value::parse(&index_text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut bin = std::io::BufReader::new(
+            std::fs::File::open(format!("{path}.bin"))
+                .with_context(|| format!("opening {path}.bin"))?,
+        );
+        let mut magic = [0u8; 8];
+        bin.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic");
+
+        let read_sections = |bin: &mut dyn Read, key: &str| -> Result<Vec<(String, Vec<f32>)>> {
+            let mut out = Vec::new();
+            for e in index.get(key).as_arr().unwrap_or(&[]) {
+                let name = e.req_str("name")?.to_string();
+                let len = e.req_usize("len")?;
+                let mut data = vec![0f32; len];
+                let bytes: &mut [u8] = unsafe {
+                    std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, len * 4)
+                };
+                bin.read_exact(bytes)?;
+                out.push((name, data));
+            }
+            Ok(out)
+        };
+        let params = read_sections(&mut bin, "params")?;
+        let opt_m = read_sections(&mut bin, "opt_m")?;
+        let opt_v = read_sections(&mut bin, "opt_v")?;
+        Ok(Checkpoint {
+            step: index.req_usize("step")? as u64,
+            params,
+            opt_m,
+            opt_v,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_ckpt() -> Checkpoint {
+        Checkpoint {
+            step: 42,
+            params: vec![
+                ("embed".into(), vec![1.0, 2.0, 3.5]),
+                ("l0.mlp.wa".into(), vec![-0.25; 64]),
+            ],
+            opt_m: vec![
+                ("embed".into(), vec![0.1, 0.2, 0.3]),
+                ("l0.mlp.wa".into(), vec![0.0; 64]),
+            ],
+            opt_v: vec![
+                ("embed".into(), vec![0.4, 0.5, 0.6]),
+                ("l0.mlp.wa".into(), vec![1e-8; 64]),
+            ],
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("ntp_ckpt_test");
+        let path = dir.join("ck").to_str().unwrap().to_string();
+        let ck = fake_ckpt();
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.step, 42);
+        assert_eq!(loaded.params, ck.params);
+        assert_eq!(loaded.opt_m, ck.opt_m);
+        assert_eq!(loaded.opt_v, ck.opt_v);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Checkpoint::load("/nonexistent/ck").is_err());
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let dir = std::env::temp_dir().join("ntp_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck").to_str().unwrap().to_string();
+        fake_ckpt().save(&path).unwrap();
+        // stomp the magic
+        let bin = format!("{path}.bin");
+        let mut data = std::fs::read(&bin).unwrap();
+        data[0] = b'X';
+        std::fs::write(&bin, data).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,16 @@
+//! Training driver: real data-parallel training over the AOT-compiled
+//! replica programs, with nonuniform TP — DP replicas at different TP
+//! degrees, gradient resharding + weighted allreduce in Rust memory,
+//! AdamW, and live failure-driven TP reconfiguration.
+
+pub mod checkpoint;
+pub mod data;
+pub mod optimizer;
+pub mod params;
+pub mod replica;
+pub mod sync;
+pub mod trainer;
+
+pub use optimizer::AdamW;
+pub use replica::Replica;
+pub use trainer::{Trainer, TrainerConfig};

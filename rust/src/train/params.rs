@@ -1,0 +1,231 @@
+//! Parameter initialization and (re)sharding.
+//!
+//! Full tensors are initialized deterministically per *group name* (the
+//! parameter name without its `.sN` shard suffix), so every TP variant
+//! of the same model slices the exact same full tensors — the property
+//! the NTP numerics tests rely on, and what makes live TP
+//! reconfiguration (gather at TP `n1`, re-slice at TP `n2`) exact.
+
+use crate::ntp::partition::partition_ranges;
+use crate::runtime::{ParamMeta, ProgramMeta};
+use crate::util::prng::Rng;
+
+/// FNV-1a hash for stable per-group PRNG streams.
+fn name_hash(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn init_group(group: &str, n: usize, seed: u64) -> Vec<f32> {
+    if group.ends_with(".scale") {
+        return vec![1.0; n];
+    }
+    if group.ends_with(".bias") {
+        return vec![0.0; n];
+    }
+    let mut rng = Rng::new(seed ^ name_hash(group));
+    rng.normal_vec_f32(n, 0.02)
+}
+
+/// Shard sizes along axis 0 for a sharded param group.
+fn group_shard_sizes(meta: &ProgramMeta, p: &ParamMeta) -> Vec<usize> {
+    match p.shard.as_deref() {
+        Some("heads") => meta.head_shards.clone(),
+        Some("ffn") => meta.ffn_shards.clone(),
+        _ => vec![],
+    }
+}
+
+/// Initialize all params for `meta`, slicing sharded groups from
+/// deterministic full tensors. Returns buffers in manifest order.
+pub fn init_full_then_shard(meta: &ProgramMeta, seed: u64) -> Vec<Vec<f32>> {
+    let mut out = Vec::with_capacity(meta.params.len());
+    for p in &meta.params {
+        match p.shard_index() {
+            None => out.push(init_group(&p.name, p.n_elements(), seed)),
+            Some(sidx) => {
+                let sizes = group_shard_sizes(meta, p);
+                let k: usize = sizes.iter().sum();
+                let unit = p.unit_len();
+                let full = init_group(p.group_name(), k * unit, seed);
+                let start: usize = sizes[..sidx].iter().sum();
+                let len = sizes[sidx];
+                out.push(full[start * unit..(start + len) * unit].to_vec());
+            }
+        }
+    }
+    out
+}
+
+/// Gather a TP-`n` parameter list back into full tensors keyed by group
+/// name, in first-appearance order. Used for TP reconfiguration and
+/// checkpointing.
+pub fn gather_full(meta: &ProgramMeta, params: &[Vec<f32>]) -> Vec<(String, Vec<f32>)> {
+    let mut out: Vec<(String, Vec<f32>)> = Vec::new();
+    let mut index: std::collections::BTreeMap<String, usize> = Default::default();
+    for (p, buf) in meta.params.iter().zip(params) {
+        let group = p.group_name().to_string();
+        match index.get(&group) {
+            None => {
+                index.insert(group.clone(), out.len());
+                out.push((group, buf.clone()));
+            }
+            Some(&i) => {
+                out[i].1.extend_from_slice(buf);
+            }
+        }
+    }
+    out
+}
+
+/// Re-shard full tensors (from [`gather_full`]) into the layout another
+/// program variant expects.
+pub fn reshard_full(
+    target: &ProgramMeta,
+    full: &[(String, Vec<f32>)],
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    let by_name: std::collections::BTreeMap<&str, &Vec<f32>> =
+        full.iter().map(|(n, v)| (n.as_str(), v)).collect();
+    let mut out = Vec::with_capacity(target.params.len());
+    for p in &target.params {
+        let group = p.group_name();
+        let src = by_name
+            .get(group)
+            .ok_or_else(|| anyhow::anyhow!("missing group '{group}' in checkpoint"))?;
+        match p.shard_index() {
+            None => {
+                anyhow::ensure!(src.len() == p.n_elements(), "size mismatch for {group}");
+                out.push((*src).clone());
+            }
+            Some(sidx) => {
+                let sizes = group_shard_sizes(target, p);
+                let unit = p.unit_len();
+                let k: usize = sizes.iter().sum();
+                anyhow::ensure!(
+                    src.len() == k * unit,
+                    "full tensor '{group}' has {} elements, expected {}",
+                    src.len(),
+                    k * unit
+                );
+                let start: usize = sizes[..sidx].iter().sum();
+                out.push(src[start * unit..(start + sizes[sidx]) * unit].to_vec());
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Contiguous ranges of units per shard for a sharded dimension.
+pub fn shard_ranges(sizes: &[usize]) -> Vec<std::ops::Range<usize>> {
+    let k: usize = sizes.iter().sum();
+    // partition_ranges re-derives balanced ranges; shard sizes from the
+    // manifest are always the balanced partition, assert equivalence.
+    let ranges = partition_ranges(k, sizes.len());
+    debug_assert_eq!(
+        ranges.iter().map(|r| r.len()).collect::<Vec<_>>(),
+        sizes.to_vec()
+    );
+    ranges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    /// Hand-built tiny ProgramMeta (no artifacts needed).
+    fn fake_meta(tp: usize) -> ProgramMeta {
+        let model = ModelConfig {
+            name: "fake".into(),
+            hidden: 8,
+            ffn: 16,
+            heads: 4,
+            head_dim: 2,
+            layers: 1,
+            vocab: 10,
+        };
+        let heads = crate::ntp::partition::partition_sizes(4, tp);
+        let ffns = crate::ntp::partition::partition_sizes(16, tp);
+        let mut params = vec![ParamMeta {
+            name: "l0.ln1.scale".into(),
+            shape: vec![8],
+            shard: None,
+        }];
+        for (s, &nh) in heads.iter().enumerate() {
+            params.push(ParamMeta {
+                name: format!("l0.attn.wqkv.s{s}"),
+                shape: vec![nh, 3, 2, 8],
+                shard: Some("heads".into()),
+            });
+        }
+        for (s, &f) in ffns.iter().enumerate() {
+            params.push(ParamMeta {
+                name: format!("l0.mlp.wa.s{s}"),
+                shape: vec![f, 8],
+                shard: Some("ffn".into()),
+            });
+        }
+        ProgramMeta {
+            name: format!("fake_tp{tp}"),
+            file: String::new(),
+            model,
+            tp,
+            batch: 1,
+            seq_len: 4,
+            head_shards: heads,
+            ffn_shards: ffns,
+            params,
+        }
+    }
+
+    #[test]
+    fn same_seed_same_full_tensors_across_tp() {
+        let m1 = fake_meta(1);
+        let m3 = fake_meta(3);
+        let p1 = init_full_then_shard(&m1, 5);
+        let p3 = init_full_then_shard(&m3, 5);
+        let f1 = gather_full(&m1, &p1);
+        let f3 = gather_full(&m3, &p3);
+        assert_eq!(f1, f3);
+    }
+
+    #[test]
+    fn reshard_roundtrip() {
+        let m4 = fake_meta(4);
+        let m2 = fake_meta(2);
+        let p4 = init_full_then_shard(&m4, 9);
+        let full = gather_full(&m4, &p4);
+        let p2 = reshard_full(&m2, &full).unwrap();
+        // gathering the resharded params gives the same full tensors
+        assert_eq!(gather_full(&m2, &p2), full);
+        // and resharding back to tp4 reproduces the original buffers
+        let p4b = reshard_full(&m4, &gather_full(&m2, &p2)).unwrap();
+        assert_eq!(p4, p4b);
+    }
+
+    #[test]
+    fn scale_bias_init_special_cased() {
+        let m = fake_meta(1);
+        let p = init_full_then_shard(&m, 1);
+        assert!(p[0].iter().all(|&x| x == 1.0)); // ln scale
+    }
+
+    #[test]
+    fn different_groups_get_different_values() {
+        let m = fake_meta(1);
+        let p = init_full_then_shard(&m, 1);
+        // wqkv vs wa must differ (independent streams)
+        assert_ne!(p[1][..8], p[2][..8]);
+    }
+
+    #[test]
+    fn missing_group_errors() {
+        let m = fake_meta(2);
+        let full = vec![("nope".to_string(), vec![0.0; 4])];
+        assert!(reshard_full(&m, &full).is_err());
+    }
+}

@@ -1,0 +1,72 @@
+//! One DP replica: a compiled program + its sharded parameters and
+//! optimizer state.
+
+use super::optimizer::{decay_mask_from_names, AdamW};
+use super::params;
+use crate::runtime::{Program, Runtime, StepOutput};
+use anyhow::Result;
+
+/// A live DP replica.
+pub struct Replica {
+    pub program: Program,
+    pub params: Vec<Vec<f32>>,
+    pub opt: AdamW,
+    pub decay_mask: Vec<bool>,
+    /// Cumulative PJRT execute time, seconds.
+    pub execute_secs: f64,
+    pub steps: u64,
+}
+
+impl Replica {
+    /// Create with deterministic full-tensor init (seed shared across
+    /// replicas so all start from identical full parameters).
+    pub fn new(rt: &Runtime, model: &str, tp: usize, batch: usize, lr: f32, seed: u64) -> Result<Replica> {
+        let program = rt.load_spec(model, tp, batch)?;
+        let params = params::init_full_then_shard(&program.meta, seed);
+        let opt = AdamW::new(lr, &params);
+        let decay_mask =
+            decay_mask_from_names(program.meta.params.iter().map(|p| p.name.as_str()));
+        Ok(Replica { program, params, opt, decay_mask, execute_secs: 0.0, steps: 0 })
+    }
+
+    pub fn tp(&self) -> usize {
+        self.program.meta.tp
+    }
+
+    pub fn batch(&self) -> usize {
+        self.program.meta.batch
+    }
+
+    /// Forward+backward over one local batch.
+    pub fn step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<StepOutput> {
+        let out = self.program.train_step(tokens, targets, &self.params)?;
+        self.execute_secs += out.execute_secs;
+        self.steps += 1;
+        Ok(out)
+    }
+
+    /// Apply (already synchronized) gradients.
+    pub fn apply(&mut self, grads: &[Vec<f32>]) {
+        self.opt.update(&mut self.params, grads, &self.decay_mask);
+    }
+
+    /// Reconfigure to a new TP degree / batch (NTP failure response):
+    /// gather params and optimizer moments to full tensors, re-slice for
+    /// the new program variant. The optimizer step count carries over.
+    pub fn reconfigure(&mut self, rt: &Runtime, new_tp: usize, new_batch: usize) -> Result<()> {
+        let model = self.program.meta.model.name.clone();
+        let new_program = rt.load_spec(&model, new_tp, new_batch)?;
+
+        let full_p = params::gather_full(&self.program.meta, &self.params);
+        let full_m = params::gather_full(&self.program.meta, &self.opt.m);
+        let full_v = params::gather_full(&self.program.meta, &self.opt.v);
+
+        self.params = params::reshard_full(&new_program.meta, &full_p)?;
+        self.opt.m = params::reshard_full(&new_program.meta, &full_m)?;
+        self.opt.v = params::reshard_full(&new_program.meta, &full_v)?;
+        self.decay_mask =
+            decay_mask_from_names(new_program.meta.params.iter().map(|p| p.name.as_str()));
+        self.program = new_program;
+        Ok(())
+    }
+}

@@ -1,0 +1,279 @@
+//! Cross-replica gradient synchronization with nonuniform TP.
+//!
+//! Numerically this is: per parameter *group*, reshard every replica's
+//! shards to the common sync sharding (contiguous over the minimum TP
+//! degree), perform the 1:1 weighted allreduce, and reshard back
+//! (paper Fig. 5). Because the sync sharding of a group is just a
+//! different contiguous slicing of the same full tensor, the fused
+//! implementation accumulates each replica's shards into one full-tensor
+//! buffer (gather ≙ pre-sync reshard), averages (≙ allreduce), and
+//! slices back out (≙ post-sync reshard) — bit-identical to the
+//! explicit three-phase dance while touching each element once.
+//!
+//! Weights handle replicas running *different local batch sizes* (plain
+//! NTP shrinks the reduced replica's batch): the correct global gradient
+//! is the batch-size-weighted mean of per-replica mean-gradients.
+
+use crate::runtime::ProgramMeta;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Timing breakdown of one synchronization (for the Fig. 8/9 benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SyncTiming {
+    /// Gather (pre-sync reshard analog), seconds.
+    pub gather_secs: f64,
+    /// Accumulate + scale (allreduce analog), seconds.
+    pub reduce_secs: f64,
+    /// Scatter (post-sync reshard analog), seconds.
+    pub scatter_secs: f64,
+}
+
+impl SyncTiming {
+    pub fn total(&self) -> f64 {
+        self.gather_secs + self.reduce_secs + self.scatter_secs
+    }
+}
+
+/// Index of one parameter group across a replica's flat param list.
+#[derive(Clone, Debug)]
+struct Group {
+    /// (param index, element length) per shard, in shard order; one entry
+    /// with the full length for replicated tensors.
+    members: Vec<(usize, usize)>,
+    total_len: usize,
+}
+
+/// Build the group table for one program variant (same group list and
+/// total lengths across all variants of a model).
+fn groups_of(meta: &ProgramMeta) -> Vec<Group> {
+    let mut out: Vec<Group> = Vec::new();
+    let mut by_name: std::collections::BTreeMap<String, usize> = Default::default();
+    for (i, p) in meta.params.iter().enumerate() {
+        let group = p.group_name().to_string();
+        let len = p.n_elements();
+        match by_name.get(&group) {
+            None => {
+                by_name.insert(group, out.len());
+                out.push(Group { members: vec![(i, len)], total_len: len });
+            }
+            Some(&gi) => {
+                out[gi].members.push((i, len));
+                out[gi].total_len += len;
+            }
+        }
+    }
+    out
+}
+
+/// Synchronize gradients across replicas in place.
+///
+/// `metas[r]` / `grads[r]` describe replica `r` (possibly different TP
+/// degrees and batch sizes); `weights[r]` is its local batch size. After
+/// the call every replica holds the weighted-mean gradient in its own
+/// sharding.
+pub fn sync_grads(
+    metas: &[&ProgramMeta],
+    grads: &mut [Vec<Vec<f32>>],
+    weights: &[f32],
+) -> Result<SyncTiming> {
+    let n_rep = metas.len();
+    anyhow::ensure!(n_rep == grads.len() && n_rep == weights.len(), "length mismatch");
+    anyhow::ensure!(n_rep >= 1, "no replicas");
+    let wsum: f32 = weights.iter().sum();
+    anyhow::ensure!(wsum > 0.0, "zero total weight");
+
+    let group_tables: Vec<Vec<Group>> = metas.iter().map(|m| groups_of(m)).collect();
+    let n_groups = group_tables[0].len();
+    for (r, t) in group_tables.iter().enumerate() {
+        anyhow::ensure!(
+            t.len() == n_groups,
+            "replica {r} has {} groups, expected {n_groups}",
+            t.len()
+        );
+    }
+
+    let mut timing = SyncTiming::default();
+    let mut full: Vec<f32> = Vec::new();
+    for g in 0..n_groups {
+        let total = group_tables[0][g].total_len;
+        for (r, t) in group_tables.iter().enumerate() {
+            anyhow::ensure!(
+                t[g].total_len == total,
+                "group {g} length differs on replica {r}"
+            );
+        }
+        full.clear();
+        full.resize(total, 0.0);
+
+        // gather (pre-sync reshard analog: replica 0's shards laid out
+        // into the sync buffer) ...
+        let t0 = Instant::now();
+        {
+            let w = weights[0] / wsum;
+            let mut off = 0usize;
+            for &(pi, len) in &group_tables[0][g].members {
+                let src = &grads[0][pi];
+                debug_assert_eq!(src.len(), len);
+                for (dst, s) in full[off..off + len].iter_mut().zip(src) {
+                    *dst += w * s;
+                }
+                off += len;
+            }
+        }
+        timing.gather_secs += t0.elapsed().as_secs_f64();
+        // ... + weighted accumulate of the peers (the allreduce analog)
+        let t0 = Instant::now();
+        for r in 1..n_rep {
+            let w = weights[r] / wsum;
+            let mut off = 0usize;
+            for &(pi, len) in &group_tables[r][g].members {
+                let src = &grads[r][pi];
+                debug_assert_eq!(src.len(), len);
+                for (dst, s) in full[off..off + len].iter_mut().zip(src) {
+                    *dst += w * s;
+                }
+                off += len;
+            }
+        }
+        timing.reduce_secs += t0.elapsed().as_secs_f64();
+
+        // scatter back (post-sync reshard)
+        let t1 = Instant::now();
+        for r in 0..n_rep {
+            let mut off = 0usize;
+            for &(pi, len) in &group_tables[r][g].members {
+                grads[r][pi].copy_from_slice(&full[off..off + len]);
+                off += len;
+            }
+        }
+        timing.scatter_secs += t1.elapsed().as_secs_f64();
+    }
+    Ok(timing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::runtime::ParamMeta;
+
+    fn meta_with_tp(tp: usize) -> ProgramMeta {
+        let heads = crate::ntp::partition::partition_sizes(4, tp);
+        let ffns = crate::ntp::partition::partition_sizes(12, tp);
+        let mut params = vec![ParamMeta { name: "ln.scale".into(), shape: vec![6], shard: None }];
+        for (s, &f) in ffns.iter().enumerate() {
+            params.push(ParamMeta {
+                name: format!("mlp.wa.s{s}"),
+                shape: vec![f, 6],
+                shard: Some("ffn".into()),
+            });
+        }
+        ProgramMeta {
+            name: format!("m_tp{tp}"),
+            file: String::new(),
+            model: ModelConfig {
+                name: "m".into(),
+                hidden: 6,
+                ffn: 12,
+                heads: 4,
+                head_dim: 2,
+                layers: 1,
+                vocab: 8,
+            },
+            tp,
+            batch: 1,
+            seq_len: 4,
+            head_shards: heads,
+            ffn_shards: ffns,
+            params,
+        }
+    }
+
+    fn grads_for(meta: &ProgramMeta, fill: impl Fn(usize) -> f32) -> Vec<Vec<f32>> {
+        // deterministic values by *global* element index within each group
+        let mut out = Vec::new();
+        let mut group_off: std::collections::BTreeMap<String, usize> = Default::default();
+        for p in &meta.params {
+            let off = *group_off.get(p.group_name()).unwrap_or(&0);
+            let len = p.n_elements();
+            out.push((0..len).map(|j| fill(off + j)).collect());
+            *group_off.entry(p.group_name().to_string()).or_insert(0) += len;
+        }
+        out
+    }
+
+    #[test]
+    fn uniform_replicas_average() {
+        let m = meta_with_tp(2);
+        let mut grads = vec![
+            grads_for(&m, |i| i as f32),
+            grads_for(&m, |i| 3.0 * i as f32),
+        ];
+        let metas = vec![&m, &m];
+        sync_grads(&metas, &mut grads, &[1.0, 1.0]).unwrap();
+        let expect = grads_for(&m, |i| 2.0 * i as f32);
+        assert_eq!(grads[0], expect);
+        assert_eq!(grads[1], expect);
+    }
+
+    #[test]
+    fn nonuniform_tp_sync_matches_full_average() {
+        // TP4 and TP3 replicas: same full-gradient semantics.
+        let m4 = meta_with_tp(4);
+        let m3 = meta_with_tp(3);
+        let mut grads = vec![
+            grads_for(&m4, |i| i as f32),
+            grads_for(&m3, |i| 10.0 + i as f32),
+        ];
+        let metas: Vec<&ProgramMeta> = vec![&m4, &m3];
+        sync_grads(&metas, &mut grads, &[1.0, 1.0]).unwrap();
+        let expect4 = grads_for(&m4, |i| (i as f32 + 10.0 + i as f32) / 2.0);
+        let expect3 = grads_for(&m3, |i| (i as f32 + 10.0 + i as f32) / 2.0);
+        assert_eq!(grads[0], expect4);
+        assert_eq!(grads[1], expect3);
+    }
+
+    #[test]
+    fn weighted_mean_for_mixed_batches() {
+        // Replica 0 ran batch 3, replica 1 batch 1: weights 3:1.
+        let m = meta_with_tp(1);
+        let mut grads =
+            vec![grads_for(&m, |_| 4.0), grads_for(&m, |_| 0.0)];
+        let metas = vec![&m, &m];
+        sync_grads(&metas, &mut grads, &[3.0, 1.0]).unwrap();
+        for buf in &grads[0] {
+            for &x in buf {
+                assert!((x - 3.0).abs() < 1e-6); // (3*4 + 1*0)/4
+            }
+        }
+    }
+
+    #[test]
+    fn single_replica_is_identity() {
+        let m = meta_with_tp(2);
+        let orig = grads_for(&m, |i| i as f32 * 0.5);
+        let mut grads = vec![orig.clone()];
+        let metas = vec![&m];
+        sync_grads(&metas, &mut grads, &[1.0]).unwrap();
+        assert_eq!(grads[0], orig);
+    }
+
+    #[test]
+    fn three_way_mixed_degrees() {
+        let m4 = meta_with_tp(4);
+        let m3 = meta_with_tp(3);
+        let m2 = meta_with_tp(2);
+        let mut grads = vec![
+            grads_for(&m4, |i| i as f32),
+            grads_for(&m3, |i| 2.0 * i as f32),
+            grads_for(&m2, |i| 3.0 * i as f32),
+        ];
+        let metas: Vec<&ProgramMeta> = vec![&m4, &m3, &m2];
+        sync_grads(&metas, &mut grads, &[1.0, 1.0, 1.0]).unwrap();
+        let expect = |i: usize| (1.0 + 2.0 + 3.0) * i as f32 / 3.0;
+        assert_eq!(grads[0], grads_for(&m4, expect));
+        assert_eq!(grads[1], grads_for(&m3, expect));
+        assert_eq!(grads[2], grads_for(&m2, expect));
+    }
+}

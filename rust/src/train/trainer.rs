@@ -1,0 +1,137 @@
+//! The training loop: DP replicas (possibly at nonuniform TP degrees),
+//! per-step gradient sync, AdamW, loss/throughput accounting, and live
+//! failure injection with TP reconfiguration.
+
+use super::data::Corpus;
+use super::replica::Replica;
+use super::sync::{sync_grads, SyncTiming};
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub model: String,
+    /// (tp, batch) per DP replica — `[(4,4),(3,4)]` is an NTP-PW-style
+    /// group (reduced TP, full batch), `[(4,4),(3,3)]` plain NTP.
+    pub replicas: Vec<(usize, usize)>,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+/// Per-step record.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    /// Batch-weighted mean loss across replicas.
+    pub loss: f64,
+    /// Wall time of the whole step, seconds.
+    pub wall_secs: f64,
+    /// PJRT execute time summed over replicas.
+    pub execute_secs: f64,
+    pub sync: SyncTiming,
+    /// Tokens processed this step (all replicas).
+    pub tokens: usize,
+}
+
+/// The DP training group.
+pub struct Trainer {
+    pub replicas: Vec<Replica>,
+    corpora: Vec<Corpus>,
+    pub history: Vec<StepRecord>,
+    seq_len: usize,
+    step: u64,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, cfg: &TrainerConfig) -> Result<Trainer> {
+        anyhow::ensure!(!cfg.replicas.is_empty(), "no replicas");
+        let mut replicas = Vec::new();
+        for &(tp, batch) in &cfg.replicas {
+            replicas.push(Replica::new(rt, &cfg.model, tp, batch, cfg.lr, cfg.seed)?);
+        }
+        let seq_len = replicas[0].program.meta.seq_len;
+        let vocab = replicas[0].program.meta.model.vocab;
+        // independent data stream per replica (data parallelism)
+        let corpora = (0..replicas.len())
+            .map(|r| Corpus::new(vocab, cfg.seed ^ (0xD0 + r as u64)))
+            .collect();
+        Ok(Trainer { replicas, corpora, history: Vec::new(), seq_len, step: 0 })
+    }
+
+    /// Run one synchronized training step.
+    pub fn step(&mut self) -> Result<StepRecord> {
+        let t0 = std::time::Instant::now();
+        let n_rep = self.replicas.len();
+        let mut grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n_rep);
+        let mut weights: Vec<f32> = Vec::with_capacity(n_rep);
+        let mut loss_acc = 0.0f64;
+        let mut execute_secs = 0.0;
+        let mut tokens = 0usize;
+        for r in 0..n_rep {
+            let b = self.replicas[r].batch();
+            let (toks, targs) = self.corpora[r].next_batch(b, self.seq_len);
+            let out = self.replicas[r].step(&toks, &targs)?;
+            loss_acc += out.loss as f64 * b as f64;
+            weights.push(b as f32);
+            tokens += b * self.seq_len;
+            execute_secs += out.execute_secs;
+            grads.push(out.grads);
+        }
+        let metas: Vec<_> = self.replicas.iter().map(|r| &r.program.meta).collect();
+        let sync = sync_grads(&metas, &mut grads, &weights)?;
+        for (r, g) in grads.iter().enumerate() {
+            self.replicas[r].apply(g);
+        }
+        self.step += 1;
+        let rec = StepRecord {
+            step: self.step,
+            loss: loss_acc / weights.iter().sum::<f32>() as f64,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            execute_secs,
+            sync,
+            tokens,
+        };
+        self.history.push(rec);
+        Ok(rec)
+    }
+
+    /// Run `n` steps; returns the last record.
+    pub fn run(&mut self, n: usize) -> Result<StepRecord> {
+        let mut last = None;
+        for _ in 0..n {
+            last = Some(self.step()?);
+        }
+        last.ok_or_else(|| anyhow::anyhow!("run(0)"))
+    }
+
+    /// Inject a failure into replica `r`: reconfigure it to `new_tp`
+    /// (and `new_batch`), carrying parameters and optimizer state over —
+    /// the live NTP response.
+    pub fn inject_failure(
+        &mut self,
+        rt: &Runtime,
+        r: usize,
+        new_tp: usize,
+        new_batch: usize,
+    ) -> Result<()> {
+        self.replicas[r].reconfigure(rt, new_tp, new_batch)
+    }
+
+    /// Loss curve as (step, loss) pairs.
+    pub fn loss_curve(&self) -> Vec<(f64, f64)> {
+        self.history.iter().map(|r| (r.step as f64, r.loss)).collect()
+    }
+
+    /// Tokens/second over the last `n` steps.
+    pub fn tokens_per_sec(&self, n: usize) -> f64 {
+        let tail = &self.history[self.history.len().saturating_sub(n)..];
+        let tokens: usize = tail.iter().map(|r| r.tokens).sum();
+        let secs: f64 = tail.iter().map(|r| r.wall_secs).sum();
+        if secs > 0.0 {
+            tokens as f64 / secs
+        } else {
+            0.0
+        }
+    }
+}

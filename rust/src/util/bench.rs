@@ -1,0 +1,161 @@
+//! Criterion-lite: a small measurement harness for `cargo bench` targets
+//! (the offline vendor set has no criterion). Warms up, runs timed
+//! iterations until a time or count budget is reached, and reports a
+//! `stats::Summary`. Used both by the per-figure benches and by the §Perf
+//! optimization loop in EXPERIMENTS.md.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            max_time: Duration::from_secs(3),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Budget for expensive end-to-end cases (PJRT training steps).
+    pub fn slow() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 30,
+            max_time: Duration::from_secs(10),
+        }
+    }
+
+    /// Budget for microbenchmarks.
+    pub fn fast() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 10,
+            min_iters: 50,
+            max_iters: 10_000,
+            max_time: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.secs.mean
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>10} mean  {:>10} p50  {:>10} p95  (n={})",
+            self.name,
+            crate::util::table::dur(self.secs.mean),
+            crate::util::table::dur(self.secs.p50),
+            crate::util::table::dur(self.secs.p95),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` under `cfg`, returning per-iteration summaries.
+pub fn bench_with<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(cfg.min_iters);
+    let budget_start = Instant::now();
+    while samples.len() < cfg.max_iters
+        && (samples.len() < cfg.min_iters || budget_start.elapsed() < cfg.max_time)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        secs: Summary::of(&samples),
+    }
+}
+
+/// Time `f` with the default config and print one line.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench_with(name, BenchConfig::default(), f);
+    println!("{}", r.line());
+    r
+}
+
+/// Measure a one-shot operation (no repetition), e.g. a whole simulated
+/// 15-day trace.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            max_time: Duration::from_millis(100),
+        };
+        let r = bench_with("spin", cfg, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.secs.mean > 0.0);
+        assert!(r.secs.min <= r.secs.p50 && r.secs.p50 <= r.secs.max);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, t) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 3,
+            max_time: Duration::from_secs(60),
+        };
+        let r = bench_with("noop", cfg, || {});
+        assert!(r.iters <= 3);
+    }
+}

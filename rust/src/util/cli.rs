@@ -1,0 +1,173 @@
+//! Tiny command-line parser (no `clap` in the offline vendor set).
+//!
+//! Grammar: `ntp <subcommand> [--flag] [--key value] [--key=value] [pos...]`.
+//! Typed accessors with defaults; `finish()` rejects unknown options so
+//! typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(item);
+            } else {
+                args.positional.push(item);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&mut self, name: &str) -> Option<String> {
+        self.consumed.push(name.to_string());
+        self.options.get(name).cloned()
+    }
+
+    pub fn str_or(&mut self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&mut self, name: &str, default: usize) -> usize {
+        self.opt_str(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&mut self, name: &str, default: u64) -> u64 {
+        self.opt_str(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&mut self, name: &str, default: f64) -> f64 {
+        self.opt_str(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--tp 8,16,32`.
+    pub fn usize_list_or(&mut self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.opt_str(name) {
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer '{s}'"))
+                })
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Error if any unconsumed `--option` remains (catches typos).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !self.consumed.iter().any(|c| c == k) {
+                anyhow::bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let mut a = parse("train --steps 100 --model small --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("steps", 1), 100);
+        assert_eq!(a.str_or("model", "tiny"), "small");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax_and_lists() {
+        let mut a = parse("sim --tp=8,16,32 --scale=2.5");
+        assert_eq!(a.usize_list_or("tp", &[]), vec![8, 16, 32]);
+        assert_eq!(a.f64_or("scale", 1.0), 2.5);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("run file1 file2");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = parse("x --good 1 --bad 2");
+        let _ = a.usize_or("good", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse("x");
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.str_or("name", "d"), "d");
+        assert_eq!(a.usize_list_or("l", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let mut a = parse("x --dry-run");
+        assert!(a.flag("dry-run"));
+        a.finish().unwrap();
+    }
+}

@@ -1,0 +1,11 @@
+//! Infrastructure substrates built in-repo (the offline vendor set has no
+//! serde / clap / criterion / proptest / rand).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,139 @@
+//! Mini property-testing helper (no `proptest` offline).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it performs greedy shrinking via the generator's
+//! `shrink` hook and panics with the minimal counterexample. Coordinator
+//! invariants (Alg. 1 assignments, reshard roundtrips, packing, planner
+//! monotonicity) are tested through this.
+
+use crate::util::prng::Rng;
+use std::fmt::Debug;
+
+/// A generator of random test inputs with optional shrinking.
+pub trait Gen {
+    type Item: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Item;
+    /// Candidate smaller inputs; default: no shrinking.
+    fn shrink(&self, _item: &Self::Item) -> Vec<Self::Item> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` random inputs. Panics with a (shrunk)
+/// counterexample on the first failure.
+pub fn check<G: Gen, P: Fn(&G::Item) -> Result<(), String>>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: P,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first failing shrink.
+            let mut current = input;
+            let mut current_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                budget -= 1;
+                for cand in gen.shrink(&current) {
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        current_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  input: {current:?}\n  error: {current_msg}"
+            );
+        }
+    }
+}
+
+/// Generator for `(k, n1, n2)` NTP shard-mapping instances with
+/// `1 <= n2 <= n1 <= k`.
+pub struct ShardInstanceGen {
+    pub max_k: usize,
+    pub max_n: usize,
+}
+
+impl Gen for ShardInstanceGen {
+    type Item = (usize, usize, usize);
+
+    fn generate(&self, rng: &mut Rng) -> (usize, usize, usize) {
+        let n1 = 1 + rng.index(self.max_n);
+        let n2 = 1 + rng.index(n1);
+        // k >= n1 so every shard holds at least one column.
+        let k = n1 + rng.index(self.max_k.saturating_sub(n1) + 1);
+        (k, n1, n2)
+    }
+
+    fn shrink(&self, &(k, n1, n2): &(usize, usize, usize)) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::new();
+        if k > n1 {
+            out.push((k - 1, n1, n2));
+            out.push((n1, n1, n2)); // jump to minimum k
+        }
+        if n1 > n2 {
+            out.push((k, n1 - 1, n2.min(n1 - 1)));
+        }
+        if n2 > 1 {
+            out.push((k, n1, n2 - 1));
+        }
+        out
+    }
+}
+
+/// Generator for u64 seeds (for randomized sub-experiments).
+pub struct SeedGen;
+impl Gen for SeedGen {
+    type Item = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.next_u64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let gen = ShardInstanceGen { max_k: 100, max_n: 16 };
+        check(1, 200, &gen, |&(k, n1, n2)| {
+            if n2 <= n1 && n1 <= k {
+                Ok(())
+            } else {
+                Err(format!("bad instance {k} {n1} {n2}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        let gen = ShardInstanceGen { max_k: 50, max_n: 8 };
+        check(2, 500, &gen, |&(k, _, _)| {
+            if k < 10 {
+                Ok(())
+            } else {
+                Err("k too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_small_instance() {
+        // Verify the shrinker produces strictly "smaller" candidates.
+        let gen = ShardInstanceGen { max_k: 100, max_n: 16 };
+        let shrinks = gen.shrink(&(50, 8, 4));
+        assert!(!shrinks.is_empty());
+        for (k, n1, n2) in shrinks {
+            assert!(n2 <= n1 && n1 <= k);
+            assert!(k < 50 || n1 < 8 || n2 < 4);
+        }
+    }
+}

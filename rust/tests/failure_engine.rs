@@ -1,0 +1,127 @@
+//! Integration: failure-engine edge cases and cross-checks between the
+//! trace generator, blast expansion, fleet replay and the closed-form
+//! availability math.
+
+use ntp::cluster::{FleetHealth, Topology};
+use ntp::failure::scenario::{expected_availability_domain_drop, sample_scenario};
+use ntp::failure::{BlastRadius, FailureModel, Trace};
+use ntp::util::prng::Rng;
+
+#[test]
+fn zero_rate_trace_is_empty() {
+    let topo = Topology::of(128, 8, 4);
+    let model = FailureModel {
+        failures_per_gpu_day: 1e-12,
+        hw_fraction: 0.5,
+        hw_recovery_hours: (1.0, 2.0),
+        sw_recovery_hours: 1.0,
+    };
+    let mut rng = Rng::new(1);
+    let trace = Trace::generate(&topo, &model, 24.0, &mut rng);
+    assert!(trace.events.is_empty());
+    let fleet = trace.replay_to(&topo, BlastRadius::Single, 24.0);
+    assert_eq!(fleet.n_failed(), 0);
+}
+
+#[test]
+fn replay_at_time_zero_is_healthy() {
+    let topo = Topology::of(256, 8, 4);
+    let model = FailureModel::llama3().scaled(100.0);
+    let mut rng = Rng::new(2);
+    let trace = Trace::generate(&topo, &model, 24.0 * 5.0, &mut rng);
+    assert!(!trace.events.is_empty());
+    let fleet = trace.replay_to(&topo, BlastRadius::Single, 0.0);
+    assert_eq!(fleet.n_failed(), 0);
+}
+
+#[test]
+fn everything_recovers_eventually() {
+    let topo = Topology::of(256, 8, 4);
+    let model = FailureModel {
+        failures_per_gpu_day: 0.05,
+        hw_fraction: 0.8,
+        hw_recovery_hours: (5.0, 10.0),
+        sw_recovery_hours: 1.0,
+    };
+    let mut rng = Rng::new(3);
+    let trace = Trace::generate(&topo, &model, 48.0, &mut rng);
+    // 10+ hours after the horizon, every failure has recovered
+    let fleet = trace.replay_to(&topo, BlastRadius::Single, 48.0 + 11.0);
+    assert_eq!(fleet.n_failed(), 0);
+}
+
+#[test]
+fn domain_blast_kills_whole_domains_in_replay() {
+    let topo = Topology::of(256, 16, 4);
+    let model = FailureModel::llama3().scaled(300.0);
+    let mut rng = Rng::new(4);
+    let trace = Trace::generate(&topo, &model, 24.0, &mut rng);
+    let fleet = trace.replay_to(&topo, BlastRadius::Domain, 23.9);
+    for d in 0..topo.n_domains() {
+        let h = fleet.domain_healthy(d);
+        assert!(h == 0 || h == 16, "domain {d} partially failed under domain blast: {h}");
+    }
+    fleet.check_invariants().unwrap();
+}
+
+#[test]
+fn fleet_health_mass_fail_recover_cycle() {
+    let topo = Topology::of(1024, 32, 4);
+    let mut fleet = FleetHealth::new(topo);
+    let mut rng = Rng::new(5);
+    // randomized fail/recover churn, invariants must hold throughout
+    for round in 0..50 {
+        for _ in 0..20 {
+            let g = rng.index(1024);
+            fleet.fail(g, round as f64, round as f64 + 1.0 + rng.f64() * 5.0);
+        }
+        fleet.recover_due(round as f64 + 0.5);
+        fleet.check_invariants().unwrap();
+    }
+    fleet.recover_due(1e9);
+    assert_eq!(fleet.n_failed(), 0);
+}
+
+#[test]
+fn availability_closed_form_extremes() {
+    // no failures -> 1.0
+    assert_eq!(expected_availability_domain_drop(1024, 8, 0), 1.0);
+    // every GPU failed -> 0.0
+    assert!(expected_availability_domain_drop(64, 8, 64) < 1e-12);
+    // monotone in failures
+    let mut prev = 1.0;
+    for f in [1usize, 2, 4, 8, 16, 32] {
+        let a = expected_availability_domain_drop(1024, 16, f);
+        assert!(a < prev);
+        prev = a;
+    }
+    // monotone in domain size (bigger domain, worse availability)
+    let a8 = expected_availability_domain_drop(32_768, 8, 33);
+    let a64 = expected_availability_domain_drop(32_768, 64, 33);
+    assert!(a64 < a8);
+}
+
+#[test]
+fn scenario_sampler_is_unbiased_at_boundaries() {
+    let topo = Topology::of(64, 8, 4);
+    let mut rng = Rng::new(6);
+    // all GPUs failed
+    let s = sample_scenario(&topo, 64, BlastRadius::Single, &mut rng);
+    assert_eq!(s.availability_domain_drop(), 0.0);
+    assert_eq!(s.availability_ntp(), 0.0);
+    // none failed
+    let s = sample_scenario(&topo, 0, BlastRadius::Single, &mut rng);
+    assert_eq!(s.availability_domain_drop(), 1.0);
+    assert_eq!(s.availability_ntp(), 1.0);
+}
+
+#[test]
+fn overlapping_failures_extend_not_duplicate() {
+    let topo = Topology::of(64, 8, 4);
+    let mut fleet = FleetHealth::new(topo);
+    fleet.fail(5, 0.0, 10.0);
+    fleet.fail(5, 1.0, 4.0); // shorter second failure must not shrink recovery
+    assert_eq!(fleet.recover_due(5.0), 0);
+    assert_eq!(fleet.recover_due(10.0), 1);
+    fleet.check_invariants().unwrap();
+}

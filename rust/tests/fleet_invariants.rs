@@ -1,0 +1,160 @@
+//! Integration: fleet-level invariants across failure engine, resource
+//! manager, power allocator and strategy evaluation (Figs. 3, 6, 7, 10
+//! machinery).
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{sample_failed_gpus, scenario::scenario_from_failed, BlastRadius, FailureModel, Trace};
+use ntp::manager::{pack_domains, FleetSim, SparePolicy, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::power::RackDesign;
+use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::prng::Rng;
+
+fn sim_32k() -> (IterationModel, ParallelConfig) {
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 16 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+    (sim, cfg)
+}
+
+#[test]
+fn strategy_ordering_holds_across_failure_fractions() {
+    // Fig. 6's headline: NTP-PW >= NTP >= DP-DROP at every failed
+    // fraction.
+    let (sim, cfg) = sim_32k();
+    let rack = RackDesign::default();
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    let topo = Topology::of(cfg.n_gpus(), 32, 4);
+    let mut rng = Rng::new(2026);
+    for &fail_frac in &[0.0005, 0.001, 0.002, 0.004] {
+        let n_failed = (fail_frac * topo.n_gpus as f64) as usize;
+        let failed = sample_failed_gpus(&topo, n_failed, BlastRadius::Single, &mut rng);
+        let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
+        let assignment = pack_domains(&healthy, 32, cfg.pp, true);
+        let drop = table.group_throughput(&assignment.replica_tp, FtStrategy::DpDrop);
+        let ntp = table.group_throughput(&assignment.replica_tp, FtStrategy::Ntp);
+        let pw = table.group_throughput(&assignment.replica_tp, FtStrategy::NtpPw);
+        assert!(
+            drop <= ntp + 1e-9 && ntp <= pw + 0.01,
+            "f={fail_frac}: drop {drop} ntp {ntp} pw {pw}"
+        );
+        // NTP loss bounded well below DP-DROP loss
+        assert!((1.0 - ntp) <= 0.6 * (1.0 - drop) + 1e-9, "f={fail_frac}");
+    }
+}
+
+#[test]
+fn ntp_pw_single_failures_near_zero_loss() {
+    // Paper: NTP-PW <1% loss at up to 4e-3 failed fraction.
+    let (sim, cfg) = sim_32k();
+    let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
+    let topo = Topology::of(cfg.n_gpus(), 32, 4);
+    let mut rng = Rng::new(7);
+    let n_failed = (0.002 * topo.n_gpus as f64) as usize;
+    let failed = sample_failed_gpus(&topo, n_failed, BlastRadius::Single, &mut rng);
+    let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
+    let assignment = pack_domains(&healthy, 32, cfg.pp, true);
+    let pw = table.group_throughput(&assignment.replica_tp, FtStrategy::NtpPw);
+    assert!(pw > 0.97, "NTP-PW throughput {pw}");
+}
+
+#[test]
+fn packing_never_hurts() {
+    let (sim, cfg) = sim_32k();
+    let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
+    let topo = Topology::of(cfg.n_gpus(), 32, 4);
+    let mut rng = Rng::new(11);
+    for trial in 0..20 {
+        let n_failed = 1 + rng.index(60);
+        let failed = sample_failed_gpus(&topo, n_failed, BlastRadius::Single, &mut rng);
+        let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
+        for strat in [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw] {
+            let packed = pack_domains(&healthy, 32, cfg.pp, true);
+            let unpacked = pack_domains(&healthy, 32, cfg.pp, false);
+            let tp_packed = table.group_throughput(&packed.replica_tp, strat);
+            let tp_unpacked = table.group_throughput(&unpacked.replica_tp, strat);
+            assert!(
+                tp_packed >= tp_unpacked - 1e-9,
+                "trial {trial} {strat:?}: packed {tp_packed} < unpacked {tp_unpacked}"
+            );
+        }
+    }
+}
+
+#[test]
+fn blast_radius_degrades_gracefully() {
+    // Fig. 10: larger blast radii cost NTP throughput but it still beats
+    // DP-DROP.
+    let (sim, cfg) = sim_32k();
+    let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
+    let topo = Topology::of(cfg.n_gpus(), 32, 4);
+    let n_failed = 33; // ~0.1%
+    let mut prev_ntp = 1.1;
+    for blast in [BlastRadius::Single, BlastRadius::Gpus(2), BlastRadius::Node] {
+        let mut rng = Rng::new(13);
+        // average over a few placements
+        let mut ntp_acc = 0.0;
+        let mut drop_acc = 0.0;
+        let trials = 10;
+        for _ in 0..trials {
+            let failed = sample_failed_gpus(&topo, n_failed, blast, &mut rng);
+            let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
+            let a = pack_domains(&healthy, 32, cfg.pp, true);
+            ntp_acc += table.group_throughput(&a.replica_tp, FtStrategy::Ntp);
+            drop_acc += table.group_throughput(&a.replica_tp, FtStrategy::DpDrop);
+        }
+        let ntp = ntp_acc / trials as f64;
+        let drop = drop_acc / trials as f64;
+        assert!(ntp > drop, "{blast:?}: ntp {ntp} <= drop {drop}");
+        assert!(ntp <= prev_ntp + 0.02, "{blast:?} should not improve: {ntp} vs {prev_ntp}");
+        prev_ntp = ntp;
+    }
+}
+
+#[test]
+fn fixed_minibatch_needs_fewer_spares_with_ntp_pw() {
+    // Fig. 7's shape: to avoid pausing, DP-DROP needs many spare domains,
+    // NTP-PW close to zero.
+    let (sim, cfg) = sim_32k();
+    let rack = RackDesign::default();
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    // small fleet: 16 replicas * 8 domains + spares
+    let n_job_domains = 16 * cfg.pp;
+    let spares = 8usize;
+    let topo = Topology::of((n_job_domains + spares) * 32, 32, 4);
+    let model = FailureModel::llama3().scaled(10.0);
+    let mut rng = Rng::new(3);
+    let trace = Trace::generate(&topo, &model, 24.0 * 10.0, &mut rng);
+    let policy = SparePolicy { spare_domains: spares, min_tp: 28 };
+
+    let run = |strategy| {
+        let fs = FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            strategy,
+            spares: Some(policy),
+            packed: true,
+            blast: BlastRadius::Single,
+        };
+        fs.run(&trace, 6.0)
+    };
+    let drop = run(FtStrategy::DpDrop);
+    let pw = run(FtStrategy::NtpPw);
+    assert!(
+        pw.paused_frac <= drop.paused_frac,
+        "pw paused {} > drop paused {}",
+        pw.paused_frac,
+        drop.paused_frac
+    );
+    assert!(pw.mean_throughput >= drop.mean_throughput);
+}

@@ -1,0 +1,106 @@
+//! Integration: NTP shard-mapping + resharding invariants at paper scale,
+//! exercised across modules (shard_map → reshard → sync buffers).
+
+use ntp::ntp::shard_map::ShardMap;
+use ntp::ntp::sync::{allreduce_mean, comp_to_sync, gather_comp, scatter_comp, sync_to_comp};
+use ntp::ntp::{partition, ReshardPlan, SyncPlan};
+use ntp::util::prng::Rng;
+
+#[test]
+fn paper_scale_tp32_to_tp30_full_roundtrip() {
+    // MLP dimension of the 480B model: k = 81920 columns, TP32 -> TP30.
+    let map = ShardMap::build(81_920, 32, 30);
+    let plan = ReshardPlan::from_map(&map);
+    // Offload GPUs 30,31 each hold a balanced comp shard (2560 units)
+    // and send all of it.
+    assert_eq!(plan.sent_by(30), 2560);
+    assert_eq!(plan.sent_by(31), 2560);
+    // Each sync GPU receives its block's shortfall.
+    let per_sync: usize = (0..30).map(|s| plan.received_by(s)).sum();
+    assert_eq!(per_sync, 2 * 2560);
+    // Pairwise balance: every (offload, sync) split within 2 units.
+    for g in 30..32 {
+        let splits = plan.send_splits(g);
+        let max = splits.iter().max().unwrap();
+        let min = splits.iter().min().unwrap();
+        assert!(max - min <= 2, "splits {splits:?}");
+    }
+}
+
+#[test]
+fn buffer_roundtrip_with_data_at_moderate_scale() {
+    let k = 4096;
+    let unit_len = 16;
+    let map = ShardMap::build(k, 16, 13);
+    let mut rng = Rng::new(99);
+    let full: Vec<f32> = (0..k * unit_len).map(|_| rng.f32()).collect();
+    let comp = scatter_comp(&map, unit_len, &full);
+    let sync = comp_to_sync(&map, unit_len, &comp);
+    // sync layout is the contiguous full tensor, re-chunked
+    let cat: Vec<f32> = sync.iter().flatten().copied().collect();
+    assert_eq!(cat, full);
+    let comp2 = sync_to_comp(&map, unit_len, &sync);
+    assert_eq!(gather_comp(&map, unit_len, &comp2), full);
+}
+
+#[test]
+fn cross_replica_sync_through_explicit_reshard() {
+    // Three replicas at TP (8, 7, 6) — gradient averaging through the
+    // explicit comp->sync->allreduce->comp path equals the full-tensor
+    // average.
+    let k = 336; // divisible by lots of things
+    let unit_len = 3;
+    let tps = [8usize, 7, 6];
+    let sync_deg = 6;
+    let mut rng = Rng::new(5);
+    let fulls: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..k * unit_len).map(|_| rng.f32() - 0.5).collect())
+        .collect();
+    let maps: Vec<ShardMap> = tps.iter().map(|&tp| ShardMap::build(k, tp, sync_deg)).collect();
+    let mut sync_shards: Vec<Vec<Vec<f32>>> = maps
+        .iter()
+        .zip(&fulls)
+        .map(|(m, f)| comp_to_sync(m, unit_len, &scatter_comp(m, unit_len, f)))
+        .collect();
+    allreduce_mean(&mut sync_shards);
+    let want: Vec<f32> = (0..k * unit_len)
+        .map(|i| (fulls[0][i] + fulls[1][i] + fulls[2][i]) / 3.0)
+        .collect();
+    for (m, s) in maps.iter().zip(&sync_shards) {
+        let got = gather_comp(m, unit_len, &sync_to_comp(m, unit_len, s));
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn sync_plan_volumes_match_paper_ratios() {
+    // §6.2: allreduce volume increases proportionally to the TP
+    // reduction.
+    let plan = SyncPlan::build(81_920, &[32, 32, 30]);
+    assert!((plan.allreduce_increase_factor(32) - 32.0 / 30.0).abs() < 1e-12);
+    // attention-head dimension of the same model
+    let heads = SyncPlan::build(128, &[32, 32, 30]);
+    assert_eq!(heads.sync_degree, 30);
+    // head imbalance at TP30: 5 vs 4 heads
+    let sizes = partition::partition_sizes(128, 30);
+    assert_eq!(*sizes.iter().max().unwrap(), 5);
+    assert_eq!(*sizes.iter().min().unwrap(), 4);
+}
+
+#[test]
+fn degenerate_and_extreme_cases() {
+    // No reduction.
+    let p = SyncPlan::build(100, &[10, 10]);
+    assert!(p.is_uniform());
+    // Reduction to a single shard.
+    let map = ShardMap::build(64, 8, 1);
+    let plan = ReshardPlan::from_map(&map);
+    assert_eq!(plan.received_by(0), 64 - 8);
+    // k == n1 (one unit per GPU).
+    let map = ShardMap::build(16, 16, 12);
+    let plan = ReshardPlan::from_map(&map);
+    let total_moved: usize = (0..16).map(|g| plan.sent_by(g)).sum();
+    assert_eq!(total_moved, 4); // the 4 offloaded units
+}

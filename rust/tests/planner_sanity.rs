@@ -1,0 +1,93 @@
+//! Integration: hybrid-parallel planner + iteration model consistency
+//! across the paper's cluster presets (the machinery behind Fig. 2).
+
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::parallel::{best_config, enumerate_legal, MemoryModel, ParallelConfig};
+use ntp::sim::{IterationModel, SimParams};
+
+fn work(seq: usize) -> WorkloadConfig {
+    WorkloadConfig { seq_len: seq, minibatch_tokens: 16 * 1024 * 1024, dtype: Dtype::BF16 }
+}
+
+#[test]
+fn fig2a_ordering_nvl_domain_sizes_at_32k() {
+    // Fig. 2a: at 32K GPUs, bigger NVL domains win; NVL32 leads NVL8 by
+    // a wide margin (paper: 87% vs 68% per-GPU utilization).
+    let model = presets::model("gpt-480b").unwrap();
+    let w = work(8192);
+    let p = SimParams::default();
+    let mut tputs = Vec::new();
+    for cl in ["paper-32k-nvl8", "paper-32k-nvl16", "paper-32k-nvl32"] {
+        let cluster = presets::cluster(cl).unwrap();
+        let cap = cluster.domain_size;
+        let best = best_config(&model, &w, &cluster, cap, p).unwrap();
+        tputs.push((cl, best.tokens_per_sec_per_gpu));
+    }
+    assert!(tputs[2].1 > tputs[1].1, "{tputs:?}");
+    assert!(tputs[1].1 > tputs[0].1, "{tputs:?}");
+    // NVL32 vs NVL8 gap should be substantial (>8%)
+    assert!(tputs[2].1 / tputs[0].1 > 1.08, "{tputs:?}");
+}
+
+#[test]
+fn fig14_breakdown_shifts_from_pp_to_tp() {
+    // Fig. 14: capping TP inflates the PP-bubble share; raising TP trades
+    // it for TP-comm share.
+    let model = presets::model("gpt-480b").unwrap();
+    let cluster = presets::cluster("paper-32k-nvl32").unwrap();
+    let w = work(16_384);
+    let p = SimParams::default();
+    let low = best_config(&model, &w, &cluster, 8, p).unwrap();
+    let high = best_config(&model, &w, &cluster, 32, p).unwrap();
+    let bubble_share_low = low.breakdown.pp_bubble / low.breakdown.total();
+    let bubble_share_high = high.breakdown.pp_bubble / high.breakdown.total();
+    assert!(
+        bubble_share_low > bubble_share_high,
+        "low {bubble_share_low} high {bubble_share_high}"
+    );
+    let tp_share_low = low.breakdown.tp_comm / low.breakdown.total();
+    let tp_share_high = high.breakdown.tp_comm / high.breakdown.total();
+    assert!(tp_share_high > tp_share_low);
+}
+
+#[test]
+fn all_legal_configs_fit_and_fill() {
+    let model = presets::model("gpt-175b").unwrap();
+    let cluster = presets::cluster("llama3-16k-nvl8").unwrap();
+    let w = work(4096);
+    let mm = MemoryModel::default();
+    let configs = enumerate_legal(&model, &w, &cluster, 8);
+    assert!(!configs.is_empty());
+    for cfg in &configs {
+        assert_eq!(cfg.n_gpus(), cluster.n_gpus);
+        assert!(mm.fits(&model, cfg, &w, cluster.gpu.hbm_gib), "{cfg:?}");
+        assert!(cfg.tp <= cluster.domain_size);
+    }
+}
+
+#[test]
+fn iteration_time_decreases_with_cluster_size_at_fixed_batch() {
+    // Same workload over more GPUs => shorter iterations (weak check
+    // that the pipeline/DP terms do not explode).
+    let model = presets::model("gpt-480b").unwrap();
+    let w = work(8192);
+    let p = SimParams::default();
+    let c32k = presets::cluster("paper-32k-nvl32").unwrap();
+    let sim = IterationModel::new(model.clone(), w.clone(), c32k.clone(), p);
+    let cfg_16k = ParallelConfig { tp: 32, pp: 8, dp: 64, microbatch: 1 };
+    let cfg_32k = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+    let t16 = sim.healthy_iteration(&cfg_16k).total();
+    let t32 = sim.healthy_iteration(&cfg_32k).total();
+    assert!(t32 < t16, "t32 {t32} vs t16 {t16}");
+}
+
+#[test]
+fn planner_prefers_fitting_memory_over_raw_speed() {
+    // The chosen best config must always fit; a hypothetical TP1/PP1
+    // config would be "fast" per-GPU but can't hold the model.
+    let model = presets::model("gpt-480b").unwrap();
+    let cluster = presets::cluster("paper-32k-nvl32").unwrap();
+    let w = work(8192);
+    let best = best_config(&model, &w, &cluster, 32, SimParams::default()).unwrap();
+    assert!(best.cfg.tp * best.cfg.pp >= 16, "chose {:?}", best.cfg);
+}
