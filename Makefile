@@ -1,0 +1,25 @@
+# One entry point for CI / future PRs.
+#
+#   make check       — tier-1 (build + tests) plus the perf smoke bench
+#   make build       — release build
+#   make test        — test suite
+#   make bench-perf  — full perf_hotpath run (writes BENCH_perf_hotpath.json)
+
+CARGO    ?= cargo
+MANIFEST := rust/Cargo.toml
+
+.PHONY: check build test bench-smoke bench-perf
+
+check: build test bench-smoke
+
+build:
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+
+test:
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+bench-smoke:
+	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick
+
+bench-perf:
+	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST)

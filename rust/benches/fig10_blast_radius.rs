@@ -15,6 +15,7 @@ use ntp::manager::{pack_domains, StrategyTable};
 use ntp::parallel::ParallelConfig;
 use ntp::power::RackDesign;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::par;
 use ntp::util::prng::Rng;
 use ntp::util::table::{pct, Table};
 
@@ -49,26 +50,39 @@ fn main() {
         ("8 GPUs", BlastRadius::Gpus(8)),
         ("domain (32)", BlastRadius::Domain),
     ] {
+        // One forked PRNG stream per trial; trials fan out over scoped
+        // threads, deterministic for any worker count.
+        let streams: Vec<Rng> = (0..samples).map(|i| rng.fork(i as u64)).collect();
+        let per_trial: Vec<([f64; 3], usize)> =
+            par::par_map(samples, par::num_threads(), |trial| {
+                let mut trial_rng = streams[trial].clone();
+                // n_events event epicenters, each expanded by the radius
+                let mut failed = vec![false; topo.n_gpus];
+                for _ in 0..n_events {
+                    let g = trial_rng.index(topo.n_gpus);
+                    for a in blast.affected(&topo, g) {
+                        failed[a] = true;
+                    }
+                }
+                let failed: Vec<usize> = (0..topo.n_gpus).filter(|&g| failed[g]).collect();
+                let n_down = failed.len();
+                let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
+                let a = pack_domains(&healthy, topo.domain_size, cfg.pp, true);
+                let mut out = [0.0f64; 3];
+                for (i, strat) in
+                    [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw].iter().enumerate()
+                {
+                    out[i] = 1.0 - table.group_throughput(&a.replica_tp, *strat);
+                }
+                (out, n_down)
+            });
         let mut losses = [0.0f64; 3];
         let mut down = 0usize;
-        for _ in 0..samples {
-            // n_events event epicenters, each expanded by the radius
-            let mut failed = vec![false; topo.n_gpus];
-            for _ in 0..n_events {
-                let g = rng.index(topo.n_gpus);
-                for a in blast.affected(&topo, g) {
-                    failed[a] = true;
-                }
+        for (l, d) in &per_trial {
+            for i in 0..3 {
+                losses[i] += l[i];
             }
-            let failed: Vec<usize> = (0..topo.n_gpus).filter(|&g| failed[g]).collect();
-            down += failed.len();
-            let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
-            let a = pack_domains(&healthy, topo.domain_size, cfg.pp, true);
-            for (i, strat) in
-                [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw].iter().enumerate()
-            {
-                losses[i] += 1.0 - table.group_throughput(&a.replica_tp, *strat);
-            }
+            down += d;
         }
         for l in &mut losses {
             *l /= samples as f64;

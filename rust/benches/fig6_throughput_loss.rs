@@ -12,6 +12,7 @@ use ntp::manager::{pack_domains, StrategyTable};
 use ntp::parallel::ParallelConfig;
 use ntp::power::RackDesign;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::par;
 use ntp::util::prng::Rng;
 use ntp::util::table::{pct, Table};
 
@@ -34,17 +35,30 @@ fn main() {
     let mut t = Table::new(&["failed frac", "DP-DROP loss", "NTP loss", "NTP-PW loss"]);
     let mut rng = Rng::new(6);
     let mut last = [0.0f64; 3];
+    let threads = par::num_threads();
     for &frac in &[0.0005, 0.001, 0.002, 0.003, 0.004] {
         let n_failed = (frac * topo.n_gpus as f64).round() as usize;
-        let mut losses = [0.0f64; 3];
-        for _ in 0..samples {
-            let failed = sample_failed_gpus(&topo, n_failed, BlastRadius::Single, &mut rng);
+        // One forked PRNG stream per Monte-Carlo trial so the fan-out is
+        // deterministic regardless of worker count.
+        let streams: Vec<Rng> = (0..samples).map(|i| rng.fork(i as u64)).collect();
+        let per_trial: Vec<[f64; 3]> = par::par_map(samples, threads, |trial| {
+            let mut trial_rng = streams[trial].clone();
+            let failed =
+                sample_failed_gpus(&topo, n_failed, BlastRadius::Single, &mut trial_rng);
             let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
             let a = pack_domains(&healthy, topo.domain_size, cfg.pp, true);
+            let mut out = [0.0f64; 3];
             for (i, strat) in
                 [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw].iter().enumerate()
             {
-                losses[i] += 1.0 - table.group_throughput(&a.replica_tp, *strat);
+                out[i] = 1.0 - table.group_throughput(&a.replica_tp, *strat);
+            }
+            out
+        });
+        let mut losses = [0.0f64; 3];
+        for trial_losses in &per_trial {
+            for i in 0..3 {
+                losses[i] += trial_losses[i];
             }
         }
         for l in &mut losses {

@@ -13,6 +13,7 @@ use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
 use ntp::parallel::ParallelConfig;
 use ntp::power::RackDesign;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::par;
 use ntp::util::prng::Rng;
 use ntp::util::table::{f4, pct, Table};
 
@@ -43,30 +44,39 @@ fn main() {
     println!("(paper: DP-DROP needs ~90 spares, NTP ~16, NTP-PW 0)\n");
     let mut t = Table::new(&["strategy", "spares", "tput/GPU", "paused"]);
     let mut first_ok: std::collections::BTreeMap<&str, Option<usize>> = Default::default();
-    for strategy in [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw] {
-        first_ok.insert(strategy.name(), None);
-        for &spares in &[0usize, 8, 16, 32, 64, 90, 96] {
-            let fs = FleetSim {
-                topo: &topo,
-                table: &table,
-                domains_per_replica: cfg.pp,
-                strategy,
-                spares: Some(SparePolicy { spare_domains: spares, min_tp: 28 }),
-                packed: true,
-                blast: BlastRadius::Single,
-            };
-            let stats = fs.run(&trace, 3.0);
-            t.row(&[
-                strategy.name().into(),
-                format!("{spares}"),
-                f4(stats.throughput_per_gpu),
-                pct(stats.paused_frac),
-            ]);
-            if stats.paused_frac == 0.0 {
-                let e = first_ok.get_mut(strategy.name()).unwrap();
-                if e.is_none() {
-                    *e = Some(spares);
-                }
+    // Every (strategy, spare-budget) sweep point is an independent
+    // trace integration — fan them out over scoped threads. Each run
+    // sweeps the trace once via the event-driven FleetReplayer.
+    let spare_budgets = [0usize, 8, 16, 32, 64, 90, 96];
+    let combos: Vec<(FtStrategy, usize)> = [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw]
+        .iter()
+        .flat_map(|&s| spare_budgets.iter().map(move |&sp| (s, sp)))
+        .collect();
+    let stats_per_combo = par::par_map(combos.len(), par::num_threads(), |i| {
+        let (strategy, spares) = combos[i];
+        let fs = FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            strategy,
+            spares: Some(SparePolicy { spare_domains: spares, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Single,
+        };
+        fs.run(&trace, 3.0)
+    });
+    for ((strategy, spares), stats) in combos.iter().zip(&stats_per_combo) {
+        first_ok.entry(strategy.name()).or_insert(None);
+        t.row(&[
+            strategy.name().into(),
+            format!("{spares}"),
+            f4(stats.throughput_per_gpu),
+            pct(stats.paused_frac),
+        ]);
+        if stats.paused_frac == 0.0 {
+            let e = first_ok.get_mut(strategy.name()).unwrap();
+            if e.is_none() {
+                *e = Some(*spares);
             }
         }
     }

@@ -1,87 +1,242 @@
 //! §Perf hot-path microbenchmarks (not a paper figure): quantifies every
-//! Rust-side cost in the training step so the optimization log in
-//! EXPERIMENTS.md §Perf has before/after numbers.
+//! Rust-side cost in the training step and the Monte-Carlo simulation
+//! loop so the optimization log in EXPERIMENTS.md §Perf has before/after
+//! numbers. Writes machine-readable results to
+//! `<repo root>/BENCH_perf_hotpath.json` so the perf trajectory is
+//! tracked across PRs.
 //!
-//! Components measured at e2e-20m scale (~21M params/replica):
-//!   * AdamW update (the optimizer loop)
-//!   * sync_grads (gather + weighted reduce + scatter across 2 replicas)
-//!   * explicit NTP reshard permutations (ntp::sync comp<->sync)
-//!   * Algorithm-1 plan construction (per reconfiguration, not per step)
+//! Pass `--quick` for a smoke-test-sized run (the Makefile `check`
+//! target).
+//!
+//! Components measured:
+//!   * fleet replay at paper scale (32K GPUs, 8-week trace, 1h samples):
+//!     event-driven `FleetSim::run` vs the per-step `replay_to` path
+//!   * Algorithm-1 plan construction: direct build vs `PlanCache` hit,
+//!     and the `ntp_iteration` call that rides the cache
+//!   * explicit NTP reshard permutations: per-unit vs coalesced CopyPlan
+//!   * AdamW update and weighted gradient reduce: 1 thread vs fan-out
 
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{BlastRadius, FailureModel, Trace};
+use ntp::manager::{FleetSim, StrategyTable};
+use ntp::ntp::cache::PlanCache;
 use ntp::ntp::shard_map::ShardMap;
-use ntp::ntp::sync::{comp_to_sync, scatter_comp, sync_to_comp};
+use ntp::ntp::sync::{comp_to_sync, scatter_comp, sync_to_comp, CopyPlan};
+use ntp::ntp::ReshardPlan;
+use ntp::parallel::ParallelConfig;
+use ntp::power::RackDesign;
+use ntp::sim::{FtStrategy, IterationModel, SimParams};
 use ntp::train::optimizer::AdamW;
-use ntp::util::bench::{bench_with, black_box, BenchConfig};
+use ntp::train::sync::weighted_accumulate;
+use ntp::util::bench::{bench_with, black_box, BenchConfig, JsonReport};
+use ntp::util::par;
 use ntp::util::prng::Rng;
 
-fn main() {
-    let mut rng = Rng::new(1);
-    let cfg = BenchConfig { max_iters: 30, ..BenchConfig::default() };
+/// Full runs write the cross-PR perf record; `--quick` smoke runs get
+/// their own file so `make check` never clobbers full-run numbers.
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf_hotpath.json");
+const OUT_PATH_QUICK: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf_hotpath_quick.json");
 
-    // ---- AdamW on ~21M params split into realistic tensor sizes ----
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut rng = Rng::new(1);
+    let mut report = JsonReport::new("perf_hotpath");
+    report.scalar("quick", if quick { 1.0 } else { 0.0 });
+    let threads = par::num_threads();
+    report.scalar("threads", threads as f64);
+
+    // =====================================================================
+    // Fleet replay at paper scale: event-driven sweep vs per-step rebuild
+    // =====================================================================
+    let weeks = if quick { 2.0 } else { 8.0 };
+    let model = presets::model("gpt-480b").unwrap();
+    let cluster = presets::cluster("paper-32k-nvl32").unwrap();
+    let work = WorkloadConfig {
+        seq_len: 16_384,
+        minibatch_tokens: 16 << 20,
+        dtype: Dtype::BF16,
+    };
+    let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+    let sim = IterationModel::new(model, work, cluster, SimParams::default());
+    let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
+    let topo = Topology::of(cfg.n_gpus(), 32, 4);
+    let horizon = weeks * 7.0 * 24.0;
+    let trace = Trace::generate(&topo, &FailureModel::llama3(), horizon, &mut rng);
+    println!(
+        "fleet replay: {} GPUs, {weeks}-week horizon, {} events, 1h sampling",
+        topo.n_gpus,
+        trace.events.len()
+    );
+    let fs = FleetSim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: cfg.pp,
+        strategy: FtStrategy::Ntp,
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+    };
+    // Bit-identical integration on both paths, by construction and here.
+    let stats_new = fs.run(&trace, 1.0);
+    let stats_old = fs.run_replay_per_step(&trace, 1.0);
+    assert_eq!(stats_new, stats_old, "event-driven replay must be bit-identical");
+
+    let cfg_replay = BenchConfig {
+        warmup_iters: 1,
+        min_iters: if quick { 3 } else { 5 },
+        max_iters: if quick { 5 } else { 9 },
+        max_time: std::time::Duration::from_secs(10),
+    };
+    let r_old = bench_with("fleet_run_replay_per_step_32k", cfg_replay, || {
+        black_box(fs.run_replay_per_step(&trace, 1.0));
+    });
+    println!("{}", r_old.line());
+    report.result(&r_old);
+    let r_new = bench_with("fleet_run_event_driven_32k", cfg_replay, || {
+        black_box(fs.run(&trace, 1.0));
+    });
+    println!("{}", r_new.line());
+    report.result(&r_new);
+    let speedup = r_old.secs.p50 / r_new.secs.p50;
+    println!("  -> event-driven replay speedup: {speedup:.1}x");
+    report.scalar("fleet_replay_speedup", speedup);
+    let floor = if quick { 5.0 } else { 10.0 };
+    assert!(
+        speedup >= floor,
+        "event-driven fleet replay should be >= {floor}x faster (got {speedup:.1}x)"
+    );
+
+    // =====================================================================
+    // Algorithm-1 plan construction: direct vs cached
+    // =====================================================================
+    let r_build = bench_with("alg1_build_k81920_tp32_to_30", BenchConfig::fast(), || {
+        let m = ShardMap::build(81_920, 32, 30);
+        let p = ReshardPlan::from_map(&m);
+        black_box((m, p));
+    });
+    println!("{}", r_build.line());
+    report.result(&r_build);
+
+    let cache = PlanCache::new();
+    cache.get(81_920, 32, 30); // prime
+    let r_hit = bench_with("alg1_plan_cache_hit", BenchConfig::fast(), || {
+        black_box(cache.get(81_920, 32, 30));
+    });
+    println!("{}", r_hit.line());
+    report.result(&r_hit);
+    let cache_speedup = r_build.secs.p50 / r_hit.secs.p50;
+    println!("  -> plan-cache speedup: {cache_speedup:.0}x");
+    report.scalar("plan_cache_speedup", cache_speedup);
+
+    // ntp_iteration rides the model's internal cache: after the first
+    // call this is pure arithmetic, no plan rebuild.
+    sim.ntp_iteration(&cfg, 30, 8, 1.0); // prime
+    let r_iter = bench_with("ntp_iteration_cached_tp30", BenchConfig::fast(), || {
+        black_box(sim.ntp_iteration(&cfg, 30, 8, 1.0).total());
+    });
+    println!("{}", r_iter.line());
+    report.result(&r_iter);
+
+    // =====================================================================
+    // Explicit reshard permutation: per-unit vs coalesced CopyPlan
+    // =====================================================================
+    let k = 2560; // ffn units of a TP4 shard at e2e-100m scale
+    let unit_len = 2 * 640; // wa+wb rows
+    let map = ShardMap::build(k, 4, 3);
+    let plan = CopyPlan::build(&map);
+    let full_t: Vec<f32> = rng.normal_vec_f32(k * unit_len, 1.0);
+    let comp = scatter_comp(&map, unit_len, &full_t);
+    let sync = comp_to_sync(&map, unit_len, &comp);
+    // exact equality between per-unit and coalesced paths
+    assert_eq!(plan.comp_to_sync(unit_len, &comp), sync);
+    assert_eq!(plan.sync_to_comp(unit_len, &sync), comp);
+
+    let cfg_mid = BenchConfig { max_iters: 30, ..BenchConfig::default() };
+    let r = bench_with("reshard_comp_to_sync_per_unit_3.3M", cfg_mid, || {
+        black_box(comp_to_sync(&map, unit_len, &comp));
+    });
+    println!("{}", r.line());
+    report.result(&r);
+    let r_coal = bench_with("reshard_comp_to_sync_coalesced_3.3M", cfg_mid, || {
+        black_box(plan.comp_to_sync(unit_len, &comp));
+    });
+    println!("{}", r_coal.line());
+    report.result(&r_coal);
+    report.scalar("reshard_coalesce_speedup", r.secs.p50 / r_coal.secs.p50);
+    println!("  -> coalesced reshard speedup: {:.1}x", r.secs.p50 / r_coal.secs.p50);
+
+    let r = bench_with("reshard_sync_to_comp_per_unit_3.3M", cfg_mid, || {
+        black_box(sync_to_comp(&map, unit_len, &sync));
+    });
+    println!("{}", r.line());
+    report.result(&r);
+    let r = bench_with("reshard_sync_to_comp_coalesced_3.3M", cfg_mid, || {
+        black_box(plan.sync_to_comp(unit_len, &sync));
+    });
+    println!("{}", r.line());
+    report.result(&r);
+
+    // =====================================================================
+    // AdamW on ~21M params split into realistic tensor sizes
+    // =====================================================================
+    let n_target = if quick { 4_000_000 } else { 21_000_000 };
     let sizes = [8192 * 320, 320 * 1280, 1280 * 320, 320, 1280];
     let mut params: Vec<Vec<f32>> = Vec::new();
-    while params.iter().map(|p| p.len()).sum::<usize>() < 21_000_000 {
+    while params.iter().map(|p| p.len()).sum::<usize>() < n_target {
         for &s in &sizes {
             params.push(rng.normal_vec_f32(s, 0.02));
         }
     }
-    let grads: Vec<Vec<f32>> = params.iter().map(|p| {
-        p.iter().map(|x| x * 0.01).collect()
-    }).collect();
+    let grads: Vec<Vec<f32>> = params.iter().map(|p| p.iter().map(|x| x * 0.01).collect()).collect();
     let mask = vec![true; params.len()];
-    let mut opt = AdamW::new(1e-3, &params);
     let n_elems: usize = params.iter().map(|p| p.len()).sum();
-    let r = bench_with("adamw_21M_params", cfg, || {
-        opt.update(&mut params, &grads, &mask);
+    let cfg_adam = BenchConfig { max_iters: if quick { 10 } else { 30 }, ..BenchConfig::default() };
+
+    let mut opt = AdamW::new(1e-3, &params);
+    let r_seq = bench_with("adamw_21M_1_thread", cfg_adam, || {
+        opt.update_with_threads(&mut params, &grads, &mask, 1);
         black_box(&params);
     });
-    println!("{}", r.line());
-    println!(
-        "  -> {:.1} M elems/s",
-        n_elems as f64 / r.secs.p50 / 1e6
-    );
+    println!("{}", r_seq.line());
+    println!("  -> {:.1} M elems/s", n_elems as f64 / r_seq.secs.p50 / 1e6);
+    report.result(&r_seq);
 
-    // ---- sync_grads at e2e-20m scale (via the fake-meta trick is
-    // complex; measure the underlying memory ops instead) ----
-    // gather+reduce+scatter over 21M f32 x 2 replicas:
-    let a: Vec<f32> = rng.normal_vec_f32(21_000_000, 1.0);
-    let b: Vec<f32> = rng.normal_vec_f32(21_000_000, 1.0);
-    let mut full = vec![0f32; 21_000_000];
-    let r = bench_with("weighted_reduce_2x21M", cfg, || {
-        for i in 0..full.len() {
-            full[i] = 0.5 * a[i] + 0.5 * b[i];
-        }
-        black_box(&full);
+    let r_par = bench_with(&format!("adamw_21M_{threads}_threads"), cfg_adam, || {
+        opt.update_with_threads(&mut params, &grads, &mask, threads);
+        black_box(&params);
     });
-    println!("{}", r.line());
-    println!(
-        "  -> {:.2} GB/s effective",
-        (2.0 * 21e6 * 4.0) / r.secs.p50 / 1e9
-    );
+    println!("{}", r_par.line());
+    println!("  -> {:.1} M elems/s", n_elems as f64 / r_par.secs.p50 / 1e6);
+    report.result(&r_par);
+    report.scalar("adamw_par_speedup", r_seq.secs.p50 / r_par.secs.p50);
 
-    // ---- explicit reshard permutation, paper-ish shard shapes ----
-    let k = 2560; // ffn units of a TP4 shard at e2e-100m scale
-    let unit_len = 2 * 640; // wa+wb rows
-    let map = ShardMap::build(k, 4, 3);
-    let full_t: Vec<f32> = rng.normal_vec_f32(k * unit_len, 1.0);
-    let comp = scatter_comp(&map, unit_len, &full_t);
-    let r = bench_with("reshard_comp_to_sync_3.3M_f32", cfg, || {
-        let sync = comp_to_sync(&map, unit_len, &comp);
-        black_box(sync);
+    // =====================================================================
+    // Weighted gradient reduce (sync_grads inner loop)
+    // =====================================================================
+    let n = n_target;
+    let src: Vec<f32> = rng.normal_vec_f32(n, 1.0);
+    let mut dst: Vec<f32> = rng.normal_vec_f32(n, 1.0);
+    let r_seq = bench_with("weighted_reduce_21M_1_thread", cfg_adam, || {
+        weighted_accumulate(&mut dst, &src, 0.5, 1);
+        black_box(&dst);
     });
-    println!("{}", r.line());
-    let sync = comp_to_sync(&map, unit_len, &comp);
-    let r = bench_with("reshard_sync_to_comp_3.3M_f32", cfg, || {
-        let back = sync_to_comp(&map, unit_len, &sync);
-        black_box(back);
+    println!("{}", r_seq.line());
+    println!("  -> {:.2} GB/s effective", (2.0 * n as f64 * 4.0) / r_seq.secs.p50 / 1e9);
+    report.result(&r_seq);
+    let r_par = bench_with(&format!("weighted_reduce_21M_{threads}_threads"), cfg_adam, || {
+        weighted_accumulate(&mut dst, &src, 0.5, threads);
+        black_box(&dst);
     });
-    println!("{}", r.line());
+    println!("{}", r_par.line());
+    println!("  -> {:.2} GB/s effective", (2.0 * n as f64 * 4.0) / r_par.secs.p50 / 1e9);
+    report.result(&r_par);
+    report.scalar("weighted_reduce_par_speedup", r_seq.secs.p50 / r_par.secs.p50);
 
-    // ---- Algorithm-1 plan construction at paper scale ----
-    let r = bench_with("alg1_build_k81920_tp32_to_30", BenchConfig::fast(), || {
-        let m = ShardMap::build(81_920, 32, 30);
-        black_box(m);
-    });
-    println!("{}", r.line());
+    let out = if quick { OUT_PATH_QUICK } else { OUT_PATH };
+    match report.write(out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nWARNING: could not write {out}: {e}"),
+    }
 }

@@ -26,6 +26,11 @@ pub struct FleetHealth {
     /// healthy-GPU count per domain (maintained incrementally).
     domain_healthy: Vec<usize>,
     n_failed: usize,
+    /// Bumped on every health *transition* (fail/recover/reset). Two
+    /// snapshots of the same `FleetHealth` with equal versions have
+    /// identical `domain_healthy_counts`, so consumers evaluating a
+    /// function of the counts (e.g. `FleetSim`) can skip recomputation.
+    version: u64,
 }
 
 impl FleetHealth {
@@ -38,7 +43,13 @@ impl FleetHealth {
             states: vec![GpuState::Healthy; n],
             domain_healthy: vec![ds; d],
             n_failed: 0,
+            version: 0,
         }
+    }
+
+    /// Monotone counter of health transitions (see field docs).
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     pub fn state(&self, gpu: usize) -> GpuState {
@@ -85,6 +96,7 @@ impl FleetHealth {
                 self.states[gpu] = GpuState::Failed { at_hours, until_hours };
                 self.domain_healthy[d] -= 1;
                 self.n_failed += 1;
+                self.version += 1;
             }
             GpuState::Failed { at_hours: prev_at, until_hours: prev_until } => {
                 self.states[gpu] = GpuState::Failed {
@@ -101,6 +113,7 @@ impl FleetHealth {
             self.states[gpu] = GpuState::Healthy;
             self.domain_healthy[self.topo.domain_of(gpu)] += 1;
             self.n_failed -= 1;
+            self.version += 1;
         }
     }
 
@@ -127,6 +140,7 @@ impl FleetHealth {
             *h = self.topo.domain_size;
         }
         self.n_failed = 0;
+        self.version += 1;
     }
 
     /// Internal consistency check (used by tests and debug assertions).

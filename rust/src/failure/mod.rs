@@ -4,10 +4,12 @@
 
 pub mod blast;
 pub mod rates;
+pub mod replayer;
 pub mod scenario;
 pub mod trace;
 
 pub use blast::BlastRadius;
 pub use rates::FailureModel;
+pub use replayer::FleetReplayer;
 pub use scenario::{sample_failed_gpus, Scenario};
 pub use trace::{FailureEvent, Trace};

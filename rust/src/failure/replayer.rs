@@ -1,0 +1,232 @@
+//! Event-driven incremental trace replay.
+//!
+//! [`Trace::replay_to`] rebuilds a fresh [`FleetHealth`] (one topology
+//! clone + a full event rescan) for *every* queried time — O(steps ×
+//! events) when a simulation samples a trace on a time grid. The
+//! [`FleetReplayer`] instead sweeps the trace once: an event cursor
+//! walks the (time-sorted) failure events, and a lazy-deletion min-heap
+//! schedules recoveries, both applied to one persistent `FleetHealth`.
+//! Advancing the replayer over a whole trace is O(events × blast ×
+//! log events) total, independent of how many times it is sampled.
+//!
+//! ## Equivalence with `replay_to`
+//!
+//! At every queried time `t`, the replayer's fleet agrees with
+//! `trace.replay_to(topo, blast, t)` on the health of every GPU, on
+//! `n_failed`, on `domain_healthy_counts`, and on the pending
+//! `until_hours` of every failed GPU (`rust/tests/replay_equivalence.rs`
+//! asserts this on randomized traces). The one intentional difference:
+//! for a GPU hit by *overlapping* events, `replay_to` re-derives
+//! `at_hours` from whichever events are still active at `t`, while the
+//! incremental sweep keeps the start of the uninterrupted outage —
+//! the physically meaningful value. Nothing downstream consumes
+//! `at_hours` of an ongoing failure, so every derived statistic
+//! (`FleetStats`, failed-GPU series, availability fractions) is
+//! bit-identical between the two paths.
+//!
+//! Tie-breaking matches `replay_to` exactly: a failure is active on
+//! `[at_hours, recover_at_hours)` — an event starting at exactly `t`
+//! counts as failed at `t`, a recovery due at exactly `t` has already
+//! happened at `t`.
+
+use super::blast::BlastRadius;
+use super::trace::Trace;
+use crate::cluster::{FleetHealth, GpuState, Topology};
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Total-order key over (finite) f64 times so they can live in a heap.
+#[derive(Clone, Copy, Debug)]
+struct TimeKey(f64);
+
+impl PartialEq for TimeKey {
+    fn eq(&self, other: &TimeKey) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+impl Eq for TimeKey {}
+impl PartialOrd for TimeKey {
+    fn partial_cmp(&self, other: &TimeKey) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimeKey {
+    fn cmp(&self, other: &TimeKey) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Incremental, forward-only replay of one trace against one topology.
+pub struct FleetReplayer<'a> {
+    trace: &'a Trace,
+    blast: BlastRadius,
+    fleet: FleetHealth,
+    /// Index of the first not-yet-applied event.
+    next_event: usize,
+    /// Min-heap of scheduled recoveries `(recover_at, gpu)`. Entries are
+    /// lazily deleted: a popped entry only triggers a recovery if the
+    /// GPU's *actual* `until_hours` has not been extended past it by an
+    /// overlapping later failure.
+    recoveries: BinaryHeap<Reverse<(TimeKey, usize)>>,
+    now: f64,
+}
+
+impl<'a> FleetReplayer<'a> {
+    /// Start a sweep at `t = 0` with an all-healthy fleet. `trace.events`
+    /// must be sorted by `at_hours` (all generators produce sorted
+    /// traces; `Trace::replay_to` silently assumes the same). Checked
+    /// loudly here — one O(events) scan per replayer — because an
+    /// out-of-order cursor would return wrong counts without it.
+    pub fn new(trace: &'a Trace, topo: &Topology, blast: BlastRadius) -> FleetReplayer<'a> {
+        assert!(
+            trace.events.windows(2).all(|w| w[0].at_hours <= w[1].at_hours),
+            "FleetReplayer requires time-sorted events"
+        );
+        FleetReplayer {
+            trace,
+            blast,
+            fleet: FleetHealth::new(topo.clone()),
+            next_event: 0,
+            recoveries: BinaryHeap::new(),
+            now: 0.0,
+        }
+    }
+
+    /// Current sweep time.
+    pub fn now_hours(&self) -> f64 {
+        self.now
+    }
+
+    /// The fleet state as of the last `advance`.
+    pub fn fleet(&self) -> &FleetHealth {
+        &self.fleet
+    }
+
+    /// Advance the sweep to `now_hours` (must be >= the current time) and
+    /// return the fleet state at that instant. Failure events and
+    /// recoveries are interleaved in time order; on a tie the recovery is
+    /// applied first (matching `replay_to`, where an event whose
+    /// `recover_at_hours == t` is already gone at `t`).
+    pub fn advance(&mut self, now_hours: f64) -> &FleetHealth {
+        assert!(
+            now_hours >= self.now,
+            "FleetReplayer::advance must move forward in time ({} -> {now_hours})",
+            self.now
+        );
+        loop {
+            let next_rec = self.recoveries.peek().map(|&Reverse((TimeKey(u), _))| u);
+            let next_ev = self.trace.events.get(self.next_event).map(|e| e.at_hours);
+            let rec_due = matches!(next_rec, Some(u) if u <= now_hours);
+            let ev_due = matches!(next_ev, Some(a) if a <= now_hours);
+            if rec_due && (!ev_due || next_rec.unwrap() <= next_ev.unwrap()) {
+                let Reverse((TimeKey(due), gpu)) = self.recoveries.pop().unwrap();
+                if let GpuState::Failed { until_hours, .. } = self.fleet.state(gpu) {
+                    // Stale entry if an overlapping failure pushed the
+                    // actual deadline past this one; the extending event
+                    // queued its own (later) entry.
+                    if until_hours <= due {
+                        self.fleet.recover(gpu);
+                    }
+                }
+            } else if ev_due {
+                let ev = self.trace.events[self.next_event];
+                self.next_event += 1;
+                for g in self.blast.affected(&self.fleet.topo, ev.gpu) {
+                    self.fleet.fail(g, ev.at_hours, ev.recover_at_hours);
+                    self.recoveries.push(Reverse((TimeKey(ev.recover_at_hours), g)));
+                }
+            } else {
+                break;
+            }
+        }
+        self.now = now_hours;
+        &self.fleet
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::failure::rates::FailureModel;
+    use crate::util::prng::Rng;
+
+    fn assert_matches_replay_to(trace: &Trace, topo: &Topology, blast: BlastRadius, times: &[f64]) {
+        let mut rep = FleetReplayer::new(trace, topo, blast);
+        for &t in times {
+            let inc = rep.advance(t);
+            let scratch = trace.replay_to(topo, blast, t);
+            assert_eq!(inc.n_failed(), scratch.n_failed(), "n_failed at t={t}");
+            assert_eq!(
+                inc.domain_healthy_counts(),
+                scratch.domain_healthy_counts(),
+                "domain counts at t={t}"
+            );
+            inc.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn matches_replay_to_on_dense_trace() {
+        let topo = Topology::of(256, 8, 4);
+        let model = FailureModel::llama3().scaled(200.0);
+        let mut rng = Rng::new(12);
+        let trace = Trace::generate(&topo, &model, 24.0 * 10.0, &mut rng);
+        let times: Vec<f64> = (0..200).map(|i| i as f64 * 1.2).collect();
+        assert_matches_replay_to(&trace, &topo, BlastRadius::Single, &times);
+    }
+
+    #[test]
+    fn matches_replay_to_with_blast_overlap() {
+        // Node blast makes overlapping multi-GPU outages common, which
+        // exercises the lazy-deletion / extension path.
+        let topo = Topology::of(128, 16, 4);
+        let model = FailureModel::llama3().scaled(400.0);
+        let mut rng = Rng::new(77);
+        let trace = Trace::generate(&topo, &model, 24.0 * 8.0, &mut rng);
+        let times: Vec<f64> = (0..300).map(|i| i as f64 * 0.7).collect();
+        assert_matches_replay_to(&trace, &topo, BlastRadius::Node, &times);
+    }
+
+    #[test]
+    fn sampling_exactly_on_event_edges() {
+        // Hand-built trace probing the inclusive/exclusive boundaries.
+        let topo = Topology::of(16, 8, 4);
+        let trace = Trace {
+            horizon_hours: 20.0,
+            events: vec![
+                crate::failure::FailureEvent {
+                    at_hours: 1.0,
+                    gpu: 3,
+                    is_hw: true,
+                    recover_at_hours: 5.0,
+                },
+                crate::failure::FailureEvent {
+                    at_hours: 5.0,
+                    gpu: 3,
+                    is_hw: false,
+                    recover_at_hours: 7.0,
+                },
+            ],
+        };
+        let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
+        assert_eq!(rep.advance(0.5).n_failed(), 0);
+        assert_eq!(rep.advance(1.0).n_failed(), 1); // failure at exactly t
+        assert_eq!(rep.advance(4.9).n_failed(), 1);
+        // at t=5: first outage recovers, second begins — still failed,
+        // same as replay_to
+        assert_eq!(rep.advance(5.0).n_failed(), 1);
+        assert_eq!(trace.replay_to(&topo, BlastRadius::Single, 5.0).n_failed(), 1);
+        assert_eq!(rep.advance(6.9).n_failed(), 1);
+        assert_eq!(rep.advance(7.0).n_failed(), 0); // recovery at exactly t
+    }
+
+    #[test]
+    #[should_panic(expected = "forward in time")]
+    fn rewinding_panics() {
+        let topo = Topology::of(16, 8, 4);
+        let trace = Trace { horizon_hours: 1.0, events: vec![] };
+        let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
+        rep.advance(1.0);
+        rep.advance(0.5);
+    }
+}

@@ -4,6 +4,7 @@
 
 use super::blast::BlastRadius;
 use super::rates::FailureModel;
+use super::replayer::FleetReplayer;
 use crate::cluster::{FleetHealth, Topology};
 use crate::util::prng::Rng;
 
@@ -56,60 +57,31 @@ impl Trace {
     /// granularity, applying `blast` expansion. Returns `(t, failed)`
     /// pairs. A GPU hit by overlapping events stays failed until the
     /// latest recovery.
+    ///
+    /// Implemented as one incremental [`FleetReplayer`] sweep —
+    /// O(events × blast × log events) total instead of re-deriving the
+    /// fleet state per sample.
     pub fn failed_series(
         &self,
         topo: &Topology,
         blast: BlastRadius,
         step_hours: f64,
     ) -> Vec<(f64, usize)> {
-        // Build per-GPU failure intervals.
-        #[derive(Clone, Copy)]
-        struct Interval {
-            start: f64,
-            end: f64,
-            gpu: usize,
-        }
-        let mut intervals: Vec<Interval> = Vec::new();
-        for ev in &self.events {
-            for g in blast.affected(topo, ev.gpu) {
-                intervals.push(Interval { start: ev.at_hours, end: ev.recover_at_hours, gpu: g });
-            }
-        }
-        // Sweep: at each sample point count GPUs with an active interval.
-        // Merge per-GPU overlapping intervals first.
-        intervals.sort_by(|a, b| (a.gpu, a.start).partial_cmp(&(b.gpu, b.start)).unwrap());
-        let mut merged: Vec<Interval> = Vec::new();
-        for iv in intervals {
-            match merged.last_mut() {
-                Some(last) if last.gpu == iv.gpu && iv.start <= last.end => {
-                    last.end = last.end.max(iv.end);
-                }
-                _ => merged.push(iv),
-            }
-        }
-        // Event-count sweep via start/end breakpoints.
-        let mut starts: Vec<f64> = merged.iter().map(|iv| iv.start).collect();
-        let mut ends: Vec<f64> = merged.iter().map(|iv| iv.end).collect();
-        starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mut out = Vec::new();
-        let mut si = 0;
-        let mut ei = 0;
+        let mut rep = FleetReplayer::new(self, topo, blast);
         let n_steps = (self.horizon_hours / step_hours).ceil() as usize;
+        let mut out = Vec::with_capacity(n_steps + 1);
         for step in 0..=n_steps {
             let t = step as f64 * step_hours;
-            while si < starts.len() && starts[si] <= t {
-                si += 1;
-            }
-            while ei < ends.len() && ends[ei] <= t {
-                ei += 1;
-            }
-            out.push((t, si - ei));
+            out.push((t, rep.advance(t).n_failed()));
         }
         out
     }
 
     /// Replay the trace into a fresh `FleetHealth` up to `now_hours`.
+    ///
+    /// O(events) *per call* — use [`FleetReplayer`] when sampling a trace
+    /// over a time grid. Kept as the straight-line reference
+    /// implementation the replayer's equivalence tests check against.
     pub fn replay_to(
         &self,
         topo: &Topology,
@@ -177,7 +149,9 @@ impl Trace {
         Trace { horizon_hours, events }
     }
 
-    /// Fraction of sampled time with failed fraction strictly above `thresh`.
+    /// Fraction of sampled time with failed fraction strictly above
+    /// `thresh`. Rides the same single-sweep replayer as
+    /// [`Trace::failed_series`].
     pub fn time_above_fraction(
         &self,
         topo: &Topology,

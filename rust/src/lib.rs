@@ -7,10 +7,13 @@
 //! The crate is organized as:
 //!
 //! * [`util`] / [`config`] / [`metrics`] — infrastructure substrates
-//!   (JSON, PRNG, stats, CLI, bench harness) built in-repo because the
-//!   offline vendor set has no serde/clap/criterion.
+//!   (JSON, PRNG, stats, CLI, bench harness, scoped-thread fan-out)
+//!   built in-repo because the offline vendor set has no
+//!   serde/clap/criterion/rayon.
 //! * [`cluster`] / [`failure`] — cluster topology and the failure engine
-//!   (Llama-3-calibrated rates, blast radius, Monte-Carlo scenarios).
+//!   (Llama-3-calibrated rates, blast radius, Monte-Carlo scenarios,
+//!   and the event-driven incremental trace replayer behind every
+//!   trace-integrated figure).
 //! * [`ntp`] — the paper's contribution: nonuniform partitioning,
 //!   Algorithm 1 shard mapping, all-to-all reshard plans, and the
 //!   bucketed gradient-sync orchestration.

@@ -3,10 +3,10 @@
 //! example). A precomputed [`StrategyTable`] makes per-event evaluation
 //! O(#replicas) instead of re-running the iteration model.
 
-use super::packing::pack_domains;
+use super::packing::packed_replica_tp;
 use super::spares::{apply_spares, meets_minibatch, SparePolicy};
 use crate::cluster::Topology;
-use crate::failure::{BlastRadius, Trace};
+use crate::failure::{BlastRadius, FleetReplayer, Trace};
 use crate::parallel::ParallelConfig;
 use crate::power::{min_boost_for, BoostDecision, RackDesign};
 use crate::sim::engine::{max_batch_within, min_supported_tp, FtStrategy};
@@ -97,7 +97,7 @@ impl StrategyTable {
 }
 
 /// Time-integrated fleet statistics.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct FleetStats {
     /// Time-weighted mean relative throughput.
     pub mean_throughput: f64,
@@ -125,7 +125,44 @@ pub struct FleetSim<'a> {
 
 impl<'a> FleetSim<'a> {
     /// Run the trace, sampling at `step_hours`, and integrate.
+    ///
+    /// The trace is swept *once* by a [`FleetReplayer`] — O(events)
+    /// instead of the O(steps × events) per-step
+    /// [`Trace::replay_to`] rebuild (kept as
+    /// [`FleetSim::run_replay_per_step`] for the equivalence tests and
+    /// the perf benches). Samples between which no failure/recovery
+    /// landed reuse the previous evaluation verbatim
+    /// ([`crate::cluster::FleetHealth::version`]), so the result is
+    /// bit-identical.
     pub fn run(&self, trace: &Trace, step_hours: f64) -> FleetStats {
+        let n_steps = (trace.horizon_hours / step_hours).ceil() as usize;
+        let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
+        let mut tput_sum = 0.0;
+        let mut paused = 0usize;
+        let mut spares_sum = 0.0;
+        let mut last: Option<(u64, (f64, bool, usize))> = None;
+        for step in 0..n_steps {
+            let t = step as f64 * step_hours;
+            let fleet = rep.advance(t);
+            let out = match last {
+                Some((version, out)) if version == fleet.version() => out,
+                _ => self.evaluate(fleet.domain_healthy_counts()),
+            };
+            last = Some((fleet.version(), out));
+            let (tput, pause, used) = out;
+            tput_sum += tput;
+            paused += usize::from(pause);
+            spares_sum += used as f64;
+        }
+        self.integrate(n_steps, tput_sum, paused, spares_sum)
+    }
+
+    /// Reference implementation of [`FleetSim::run`]: rebuild the fleet
+    /// state from scratch at every sample via [`Trace::replay_to`].
+    /// O(steps × events) — exists to demonstrate (tests) and measure
+    /// (benches/perf_hotpath.rs) the event-driven path's equivalence and
+    /// speedup.
+    pub fn run_replay_per_step(&self, trace: &Trace, step_hours: f64) -> FleetStats {
         let n_steps = (trace.horizon_hours / step_hours).ceil() as usize;
         let mut tput_sum = 0.0;
         let mut paused = 0usize;
@@ -139,6 +176,10 @@ impl<'a> FleetSim<'a> {
             paused += usize::from(pause);
             spares_sum += used as f64;
         }
+        self.integrate(n_steps, tput_sum, paused, spares_sum)
+    }
+
+    fn integrate(&self, n_steps: usize, tput_sum: f64, paused: usize, spares_sum: f64) -> FleetStats {
         let n = n_steps as f64;
         let spare_gpus = self
             .spares
@@ -158,13 +199,15 @@ impl<'a> FleetSim<'a> {
     pub fn evaluate(&self, domain_healthy: &[usize]) -> (f64, bool, usize) {
         match &self.spares {
             None => {
-                let a = pack_domains(
+                // Only the per-replica TP degrees matter here; skip
+                // building the full Assignment.
+                let replica_tp = packed_replica_tp(
                     domain_healthy,
                     self.topo.domain_size,
                     self.domains_per_replica,
                     self.packed,
                 );
-                (self.table.group_throughput(&a.replica_tp, self.strategy), false, 0)
+                (self.table.group_throughput(&replica_tp, self.strategy), false, 0)
             }
             Some(policy) => {
                 // Job domains are the leading ones; spares at the tail.
@@ -296,6 +339,39 @@ mod tests {
         let fs_drop = FleetSim { strategy: FtStrategy::DpDrop, ..fs };
         let stats_drop = fs_drop.run(&trace, 6.0);
         assert!(stats_drop.mean_throughput < stats.mean_throughput);
+    }
+
+    #[test]
+    fn event_driven_run_matches_per_step_replay() {
+        let (sim, cfg) = small_setup();
+        let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+        let table = StrategyTable::build(&sim, &cfg, &rack);
+        let topo = Topology::of(cfg.n_gpus(), 32, 4);
+        let model = FailureModel::llama3().scaled(40.0);
+        let mut rng = Rng::new(23);
+        let trace = Trace::generate(&topo, &model, 24.0 * 20.0, &mut rng);
+        for strategy in [FtStrategy::DpDrop, FtStrategy::Ntp] {
+            let fs = FleetSim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: cfg.pp,
+                strategy,
+                spares: None,
+                packed: true,
+                blast: BlastRadius::Single,
+            };
+            assert_eq!(fs.run(&trace, 2.0), fs.run_replay_per_step(&trace, 2.0));
+        }
+        let fs = FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            strategy: FtStrategy::Ntp,
+            spares: Some(SparePolicy { spare_domains: 4, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Node,
+        };
+        assert_eq!(fs.run(&trace, 2.0), fs.run_replay_per_step(&trace, 2.0));
     }
 
     #[test]

@@ -9,5 +9,5 @@ pub mod packing;
 pub mod spares;
 
 pub use fleet::{FleetSim, FleetStats, StrategyTable};
-pub use packing::{pack_domains, Assignment};
+pub use packing::{pack_domains, packed_replica_tp, Assignment};
 pub use spares::{SparePolicy, SpareOutcome};

@@ -66,6 +66,49 @@ pub fn pack_domains(
     Assignment { replicas, replica_tp, domain_size }
 }
 
+/// Just the per-replica TP degrees of [`pack_domains`] — the
+/// fleet-simulation hot path, which never looks at the replica→domain
+/// lists. Healthy counts are bounded by `domain_size`, so `packed`
+/// ordering is one counting sort (stable in domain index by
+/// construction, i.e. identical to `sort_by_key(|d| (healthy[d], d))`),
+/// and each replica's TP is the first element of its sorted chunk.
+/// Returns exactly `pack_domains(..).replica_tp`.
+pub fn packed_replica_tp(
+    domain_healthy: &[usize],
+    domain_size: usize,
+    domains_per_replica: usize,
+    packed: bool,
+) -> Vec<usize> {
+    assert!(domains_per_replica >= 1);
+    let n_replicas = domain_healthy.len() / domains_per_replica;
+    let used = n_replicas * domains_per_replica;
+    let mut replica_tp = Vec::with_capacity(n_replicas);
+    if !packed {
+        for r in 0..n_replicas {
+            let chunk = &domain_healthy[r * domains_per_replica..(r + 1) * domains_per_replica];
+            let tp = chunk.iter().copied().min().unwrap();
+            replica_tp.push(tp.min(domain_size));
+        }
+        return replica_tp;
+    }
+    let max_h = domain_healthy[..used].iter().copied().max().unwrap_or(0);
+    let mut counts = vec![0usize; max_h + 1];
+    for &h in &domain_healthy[..used] {
+        counts[h] += 1;
+    }
+    // Ascending healthy values; a replica's min is its chunk's first.
+    let mut sorted = Vec::with_capacity(used);
+    for (h, &c) in counts.iter().enumerate() {
+        for _ in 0..c {
+            sorted.push(h);
+        }
+    }
+    for r in 0..n_replicas {
+        replica_tp.push(sorted[r * domains_per_replica].min(domain_size));
+    }
+    replica_tp
+}
+
 /// Lower bound on impacted replicas: the partially/fully failed domains
 /// packed as densely as possible.
 pub fn optimal_impacted(domain_healthy: &[usize], domain_size: usize, per_replica: usize) -> usize {
@@ -123,6 +166,30 @@ mod tests {
                 optimal_impacted(&healthy, 32, per),
                 "healthy={healthy:?} per={per}"
             );
+        }
+    }
+
+    #[test]
+    fn fast_replica_tp_matches_pack_domains() {
+        let mut rng = Rng::new(91);
+        for _ in 0..300 {
+            let per = [1usize, 2, 4, 8][rng.index(4)];
+            let n_domains = per * (1 + rng.index(20));
+            let domain_size = [4usize, 8, 32][rng.index(3)];
+            let healthy: Vec<usize> = (0..n_domains)
+                .map(|_| {
+                    if rng.chance(0.3) {
+                        rng.index(domain_size + 1)
+                    } else {
+                        domain_size
+                    }
+                })
+                .collect();
+            for packed in [false, true] {
+                let full = pack_domains(&healthy, domain_size, per, packed);
+                let fast = packed_replica_tp(&healthy, domain_size, per, packed);
+                assert_eq!(full.replica_tp, fast, "healthy={healthy:?} per={per} packed={packed}");
+            }
         }
     }
 

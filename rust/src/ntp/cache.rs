@@ -1,0 +1,121 @@
+//! Memoized Algorithm-1 products.
+//!
+//! `ShardMap::build` is O(k) and `ReshardPlan::from_map` allocates
+//! O(n1 × n2) buffers — cheap once, ruinous when rebuilt on *every*
+//! `IterationModel::ntp_iteration` call (which `max_batch_within`,
+//! `StrategyTable::build` and every Monte-Carlo bench invoke in loops,
+//! always with the same handful of `(k, n1, n2)` shapes). The
+//! [`PlanCache`] builds each shape once per process and hands out
+//! `Arc`s; it is `Sync`, so one cache can serve the scoped-thread
+//! fan-outs in `util::par`.
+
+use super::reshard::ReshardPlan;
+use super::shard_map::ShardMap;
+use super::sync::CopyPlan;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Everything derived from one `(k, n1, n2)` shard-mapping instance.
+#[derive(Clone, Debug)]
+pub struct ReshardInfo {
+    pub map: ShardMap,
+    pub plan: ReshardPlan,
+    pub copy: CopyPlan,
+    /// `plan.max_bytes_per_gpu(unit_bytes) / unit_bytes` — the byte-free
+    /// per-GPU reshard burden the iteration model scales by its own
+    /// `unit_bytes`.
+    pub max_units_per_gpu: usize,
+}
+
+impl ReshardInfo {
+    pub fn build(k: usize, n1: usize, n2: usize) -> ReshardInfo {
+        let map = ShardMap::build(k, n1, n2);
+        let plan = ReshardPlan::from_map(&map);
+        let copy = CopyPlan::build(&map);
+        let max_units_per_gpu = plan.max_bytes_per_gpu(1);
+        ReshardInfo { map, plan, copy, max_units_per_gpu }
+    }
+}
+
+/// Thread-safe memo table keyed on `(k, n1, n2)`.
+#[derive(Default)]
+pub struct PlanCache {
+    inner: Mutex<HashMap<(usize, usize, usize), Arc<ReshardInfo>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Fetch (building on first use) the products for `(k, n1, n2)`.
+    pub fn get(&self, k: usize, n1: usize, n2: usize) -> Arc<ReshardInfo> {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .entry((k, n1, n2))
+            .or_insert_with(|| Arc::new(ReshardInfo::build(k, n1, n2)))
+            .clone()
+    }
+
+    /// Number of distinct shapes built so far.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PlanCache(len={})", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_hit_returns_same_arc() {
+        let cache = PlanCache::new();
+        let a = cache.get(128, 8, 6);
+        let b = cache.get(128, 8, 6);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+        let c = cache.get(128, 8, 7);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cached_products_match_direct_build() {
+        let cache = PlanCache::new();
+        let info = cache.get(12_288, 32, 30);
+        let map = ShardMap::build(12_288, 32, 30);
+        assert_eq!(info.map, map);
+        let plan = ReshardPlan::from_map(&map);
+        let unit_bytes = 2 * 12_288 * 2;
+        assert_eq!(
+            info.max_units_per_gpu * unit_bytes,
+            plan.max_bytes_per_gpu(unit_bytes)
+        );
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let cache = std::sync::Arc::new(PlanCache::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = cache.clone();
+                s.spawn(move || {
+                    let info = c.get(1000, 16, 12);
+                    assert_eq!(info.map.k, 1000);
+                });
+            }
+        });
+        assert_eq!(cache.len(), 1);
+    }
+}

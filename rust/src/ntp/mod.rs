@@ -13,13 +13,16 @@
 //! DP-group synchronization plan, and [`sync`] executes the permutations
 //! on real buffers for the training driver.
 
+pub mod cache;
 pub mod partition;
 pub mod plan;
 pub mod reshard;
 pub mod shard_map;
 pub mod sync;
 
+pub use cache::{PlanCache, ReshardInfo};
 pub use partition::{partition_ranges, partition_sizes, Partition};
 pub use plan::SyncPlan;
 pub use reshard::ReshardPlan;
 pub use shard_map::ShardMap;
+pub use sync::{CopyPlan, CopySegment};

@@ -9,6 +9,141 @@
 
 use super::shard_map::ShardMap;
 
+/// One run of units that moves as a single contiguous copy between the
+/// comp layout and the sync layout (all offsets in *units*, multiply by
+/// `unit_len` for floats). Consecutive units with the same comp GPU and
+/// sync shard are contiguous on both sides — comp buffers store a GPU's
+/// units in ascending id, sync blocks are ascending by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CopySegment {
+    /// Comp shard (GPU) holding the run.
+    pub comp_shard: usize,
+    /// Offset of the run inside that comp shard.
+    pub comp_off: usize,
+    /// Sync shard holding the run.
+    pub sync_shard: usize,
+    /// Offset of the run inside that sync shard.
+    pub sync_off: usize,
+    /// First global unit id of the run (offset into the full tensor).
+    pub unit_start: usize,
+    /// Run length in units.
+    pub len: usize,
+}
+
+/// Run-length-coalesced copy plan for one [`ShardMap`]: every layout
+/// permutation (`scatter_comp`, `gather_comp`, `comp_to_sync`,
+/// `sync_to_comp`) becomes one `copy_from_slice` per segment instead of
+/// one per unit. Build once per (k, n1, n2) — reconfigurations are rare —
+/// and reuse every iteration. The per-unit functions below remain as the
+/// straight-line reference implementations; `rust/tests/ntp_roundtrip.rs`
+/// asserts exact (bit-level) f32 equality between the two paths.
+#[derive(Clone, Debug)]
+pub struct CopyPlan {
+    pub k: usize,
+    pub n1: usize,
+    pub n2: usize,
+    pub segments: Vec<CopySegment>,
+    /// Units per comp shard (ascending GPU id).
+    pub comp_units: Vec<usize>,
+    /// Units per sync shard (ascending shard id).
+    pub sync_units: Vec<usize>,
+}
+
+impl CopyPlan {
+    pub fn build(map: &ShardMap) -> CopyPlan {
+        let mut comp_units = vec![0usize; map.n1];
+        let mut sync_units = vec![0usize; map.n2];
+        let mut sync_starts = vec![0usize; map.n2];
+        for s in 0..map.n2 {
+            let r = map.sync_units(s);
+            sync_starts[s] = r.start;
+            sync_units[s] = r.len();
+        }
+        let mut segments: Vec<CopySegment> = Vec::new();
+        let mut cursor = vec![0usize; map.n1];
+        for u in 0..map.k {
+            let g = map.comp_rank[u] as usize;
+            let s = map.sync_rank[u] as usize;
+            let comp_off = cursor[g];
+            let sync_off = u - sync_starts[s];
+            match segments.last_mut() {
+                Some(seg)
+                    if seg.comp_shard == g
+                        && seg.sync_shard == s
+                        && seg.unit_start + seg.len == u =>
+                {
+                    seg.len += 1;
+                }
+                _ => segments.push(CopySegment {
+                    comp_shard: g,
+                    comp_off,
+                    sync_shard: s,
+                    sync_off,
+                    unit_start: u,
+                    len: 1,
+                }),
+            }
+            cursor[g] += 1;
+            comp_units[g] += 1;
+        }
+        CopyPlan { k: map.k, n1: map.n1, n2: map.n2, segments, comp_units, sync_units }
+    }
+
+    /// Coalesced [`scatter_comp`].
+    pub fn scatter_comp(&self, unit_len: usize, full: &[f32]) -> Vec<Vec<f32>> {
+        assert_eq!(full.len(), self.k * unit_len);
+        let mut shards: Vec<Vec<f32>> =
+            self.comp_units.iter().map(|&n| vec![0f32; n * unit_len]).collect();
+        for seg in &self.segments {
+            let src = &full[seg.unit_start * unit_len..(seg.unit_start + seg.len) * unit_len];
+            shards[seg.comp_shard][seg.comp_off * unit_len..(seg.comp_off + seg.len) * unit_len]
+                .copy_from_slice(src);
+        }
+        shards
+    }
+
+    /// Coalesced [`gather_comp`].
+    pub fn gather_comp(&self, unit_len: usize, shards: &[Vec<f32>]) -> Vec<f32> {
+        assert_eq!(shards.len(), self.n1);
+        let mut full = vec![0f32; self.k * unit_len];
+        for seg in &self.segments {
+            let src = &shards[seg.comp_shard]
+                [seg.comp_off * unit_len..(seg.comp_off + seg.len) * unit_len];
+            full[seg.unit_start * unit_len..(seg.unit_start + seg.len) * unit_len]
+                .copy_from_slice(src);
+        }
+        full
+    }
+
+    /// Coalesced [`comp_to_sync`] (pre-sync reshard).
+    pub fn comp_to_sync(&self, unit_len: usize, comp: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        assert_eq!(comp.len(), self.n1);
+        let mut sync: Vec<Vec<f32>> =
+            self.sync_units.iter().map(|&n| vec![0f32; n * unit_len]).collect();
+        for seg in &self.segments {
+            let src = &comp[seg.comp_shard]
+                [seg.comp_off * unit_len..(seg.comp_off + seg.len) * unit_len];
+            sync[seg.sync_shard][seg.sync_off * unit_len..(seg.sync_off + seg.len) * unit_len]
+                .copy_from_slice(src);
+        }
+        sync
+    }
+
+    /// Coalesced [`sync_to_comp`] (post-sync reshard).
+    pub fn sync_to_comp(&self, unit_len: usize, sync: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        assert_eq!(sync.len(), self.n2);
+        let mut comp: Vec<Vec<f32>> =
+            self.comp_units.iter().map(|&n| vec![0f32; n * unit_len]).collect();
+        for seg in &self.segments {
+            let src = &sync[seg.sync_shard]
+                [seg.sync_off * unit_len..(seg.sync_off + seg.len) * unit_len];
+            comp[seg.comp_shard][seg.comp_off * unit_len..(seg.comp_off + seg.len) * unit_len]
+                .copy_from_slice(src);
+        }
+        comp
+    }
+}
+
 /// Scatter a full tensor (all `k` units) into comp shards per `map`.
 pub fn scatter_comp(map: &ShardMap, unit_len: usize, full: &[f32]) -> Vec<Vec<f32>> {
     assert_eq!(full.len(), map.k * unit_len);
@@ -228,6 +363,40 @@ mod tests {
             full_a.iter().zip(&full_b).map(|(x, y)| (x + y) / 2.0).collect();
         assert_eq!(got_a, expect);
         assert_eq!(got_b, expect);
+    }
+
+    #[test]
+    fn copy_plan_matches_per_unit_path_exactly() {
+        let mut rng = Rng::new(41);
+        for &(k, n1, n2, unit_len) in
+            &[(37usize, 8usize, 5usize, 3usize), (100, 8, 6, 4), (64, 8, 8, 2), (24, 6, 3, 1)]
+        {
+            let map = ShardMap::build(k, n1, n2);
+            let plan = CopyPlan::build(&map);
+            let full = random_full(&mut rng, k, unit_len);
+            let comp = scatter_comp(&map, unit_len, &full);
+            assert_eq!(plan.scatter_comp(unit_len, &full), comp);
+            assert_eq!(plan.gather_comp(unit_len, &comp), full);
+            let sync = comp_to_sync(&map, unit_len, &comp);
+            assert_eq!(plan.comp_to_sync(unit_len, &comp), sync);
+            assert_eq!(plan.sync_to_comp(unit_len, &sync), comp);
+        }
+    }
+
+    #[test]
+    fn copy_plan_coalesces_identity_to_few_segments() {
+        // n1 == n2: comp == sync, every shard is one contiguous run.
+        let map = ShardMap::build(64, 8, 8);
+        let plan = CopyPlan::build(&map);
+        assert_eq!(plan.segments.len(), 8);
+        // segment count is bounded by the number of (comp, sync) run
+        // boundaries, far below k for realistic shapes
+        let map2 = ShardMap::build(81_920, 32, 30);
+        let plan2 = CopyPlan::build(&map2);
+        assert!(plan2.segments.len() < 81_920 / 10, "{} segments", plan2.segments.len());
+        // every unit covered exactly once
+        let covered: usize = plan2.segments.iter().map(|s| s.len).sum();
+        assert_eq!(covered, 81_920);
     }
 
     #[test]

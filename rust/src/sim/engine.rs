@@ -87,6 +87,9 @@ pub fn evaluate_group(
     let full_tp = cfg_full.tp;
     let n_rep = replica_tp_raw.len();
     let full_local = (sim.work.global_batch() / cfg_full.dp.max(1)).max(1);
+    // Hoisted out of the per-replica loop and memoized inside the model,
+    // so scenario sweeps calling `evaluate_group` thousands of times pay
+    // for the healthy baseline once.
     let healthy_time = sim.healthy_iteration(cfg_full).total();
 
     let mut replica_tp = Vec::with_capacity(n_rep);
@@ -204,6 +207,12 @@ pub fn evaluate_group(
 /// A 0.5% tolerance is applied: the paper's own Table 1 accepts reduced
 /// replicas at relative iteration times of 1.002–1.003 (bulk-synchronous
 /// jitter absorbs sub-percent skew).
+///
+/// Iteration time is monotone nondecreasing in the batch size (compute,
+/// TP volume and pipeline depth all scale with the microbatch count), so
+/// the feasible set is a prefix `1..=b*` and binary search finds the
+/// same answer as the previous descending linear scan in O(log
+/// full_local) model evaluations instead of O(full_local).
 pub fn max_batch_within(
     sim: &IterationModel,
     cfg_full: &ParallelConfig,
@@ -213,14 +222,26 @@ pub fn max_batch_within(
     perf: f64,
 ) -> usize {
     let budget = target_secs * 1.005;
-    let mut best = 0;
-    for bs in (1..=full_local).rev() {
-        if sim.ntp_iteration(cfg_full, tp_reduced, bs, perf).total() <= budget {
-            best = bs;
-            break;
+    let fits =
+        |bs: usize| sim.ntp_iteration(cfg_full, tp_reduced, bs, perf).total() <= budget;
+    if full_local == 0 || !fits(1) {
+        return 0;
+    }
+    if fits(full_local) {
+        return full_local;
+    }
+    // Invariant: fits(lo) && !fits(hi).
+    let mut lo = 1usize;
+    let mut hi = full_local;
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
         }
     }
-    best
+    lo
 }
 
 #[cfg(test)]
@@ -300,6 +321,58 @@ mod tests {
         let tps = vec![32, 16]; // half the domain dead: below min TP
         let o = evaluate_group(&s, &cfg(), &tps, FtStrategy::Ntp, &RackDesign::default());
         assert_eq!(o.dropped, 1);
+    }
+
+    /// Reference descending scan the binary search replaced.
+    fn max_batch_linear(
+        sim: &IterationModel,
+        cfg_full: &ParallelConfig,
+        tp_reduced: usize,
+        full_local: usize,
+        target_secs: f64,
+        perf: f64,
+    ) -> usize {
+        let budget = target_secs * 1.005;
+        for bs in (1..=full_local).rev() {
+            if sim.ntp_iteration(cfg_full, tp_reduced, bs, perf).total() <= budget {
+                return bs;
+            }
+        }
+        0
+    }
+
+    #[test]
+    fn binary_search_batch_matches_linear_scan() {
+        let s = sim();
+        let c = cfg();
+        let full_local = (s.work.global_batch() / c.dp).max(1);
+        let healthy = s.healthy_iteration(&c).total();
+        for tp in [28usize, 29, 30, 31] {
+            for perf in [0.9, 1.0, 1.1] {
+                let fast = max_batch_within(&s, &c, tp, full_local, healthy, perf);
+                let slow = max_batch_linear(&s, &c, tp, full_local, healthy, perf);
+                assert_eq!(fast, slow, "tp={tp} perf={perf}");
+            }
+        }
+        // degenerate budgets
+        assert_eq!(max_batch_within(&s, &c, 28, full_local, 0.0, 1.0), 0);
+        assert_eq!(max_batch_within(&s, &c, 28, 0, healthy, 1.0), 0);
+    }
+
+    #[test]
+    fn iteration_time_monotone_in_batch() {
+        // The monotonicity assumption behind the binary search.
+        let s = sim();
+        let c = cfg();
+        let full_local = (s.work.global_batch() / c.dp).max(1);
+        for tp in [28usize, 30] {
+            let mut prev = 0.0;
+            for bs in 1..=full_local {
+                let t = s.ntp_iteration(&c, tp, bs, 1.0).total();
+                assert!(t >= prev, "tp={tp} bs={bs}: {t} < {prev}");
+                prev = t;
+            }
+        }
     }
 
     #[test]

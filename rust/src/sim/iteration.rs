@@ -7,8 +7,11 @@ use super::comm::{self, Link};
 use super::compute;
 use super::pipeline::PipelineTiming;
 use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
-use crate::ntp::{ReshardPlan, ShardMap};
+use crate::ntp::PlanCache;
 use crate::parallel::ParallelConfig;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
 
 /// Tunable simulator constants (fit once in [`super::calibrate`]).
 #[derive(Clone, Copy, Debug)]
@@ -60,13 +63,56 @@ impl Breakdown {
     }
 }
 
+/// Memo of healthy-iteration breakdowns keyed on the parallel config
+/// (the only variable input once the model/workload/cluster triple is
+/// fixed). `evaluate_group`, `StrategyTable::build` and the planner all
+/// re-derive the same healthy baseline in loops; this makes repeats a
+/// hash lookup.
+#[derive(Default)]
+struct HealthyMemo {
+    inner: Mutex<HashMap<(usize, usize, usize, usize), Breakdown>>,
+}
+
+impl fmt::Debug for HealthyMemo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "HealthyMemo(len={})", self.inner.lock().unwrap().len())
+    }
+}
+
 /// The iteration model for one (model, workload, cluster) triple.
-#[derive(Clone, Debug)]
+///
+/// Holds two process-lifetime caches: NTP shard-map/reshard plans keyed
+/// on `(k, n1, n2)` and healthy iteration breakdowns keyed on the
+/// parallel config. The healthy memo assumes the public config fields
+/// are not mutated after construction; `Clone` therefore hands the
+/// clone a *fresh* healthy memo, so the clone-then-tweak sweep pattern
+/// stays correct. The plan cache is shared across clones — its key
+/// fully determines the value regardless of any config field.
+#[derive(Debug)]
 pub struct IterationModel {
     pub model: ModelConfig,
     pub work: WorkloadConfig,
     pub cluster: ClusterConfig,
     pub params: SimParams,
+    plans: Arc<PlanCache>,
+    healthy_memo: Arc<HealthyMemo>,
+}
+
+impl Clone for IterationModel {
+    fn clone(&self) -> IterationModel {
+        IterationModel {
+            model: self.model.clone(),
+            work: self.work.clone(),
+            cluster: self.cluster.clone(),
+            params: self.params,
+            // Safe to share: keyed on (k, n1, n2) alone.
+            plans: Arc::clone(&self.plans),
+            // NOT safe to share: keyed on ParallelConfig only, so a
+            // clone whose model/work/cluster fields get tweaked must
+            // not see the original's memoized breakdowns.
+            healthy_memo: Arc::new(HealthyMemo::default()),
+        }
+    }
 }
 
 impl IterationModel {
@@ -76,7 +122,21 @@ impl IterationModel {
         cluster: ClusterConfig,
         params: SimParams,
     ) -> IterationModel {
-        IterationModel { model, work, cluster, params }
+        IterationModel {
+            model,
+            work,
+            cluster,
+            params,
+            plans: Arc::new(PlanCache::new()),
+            healthy_memo: Arc::new(HealthyMemo::default()),
+        }
+    }
+
+    /// The NTP plan cache backing [`IterationModel::ntp_iteration`]
+    /// (exposed for the perf benches and for sharing with a training
+    /// driver).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plans
     }
 
     fn nvlink(&self) -> Link {
@@ -155,10 +215,18 @@ impl IterationModel {
     }
 
     /// Healthy-replica iteration for a full config (local batch from the
-    /// workload's global batch).
+    /// workload's global batch). Memoized per parallel config — repeat
+    /// calls (the `evaluate_group` / `StrategyTable` hot path) are a
+    /// hash-map hit returning the identical `Breakdown`.
     pub fn healthy_iteration(&self, cfg: &ParallelConfig) -> Breakdown {
+        let key = (cfg.tp, cfg.pp, cfg.dp, cfg.microbatch);
+        if let Some(b) = self.healthy_memo.inner.lock().unwrap().get(&key) {
+            return *b;
+        }
         let local_batch = self.work.global_batch() / cfg.dp.max(1);
-        self.replica_iteration(cfg, local_batch.max(1), 1.0)
+        let b = self.replica_iteration(cfg, local_batch.max(1), 1.0);
+        self.healthy_memo.inner.lock().unwrap().insert(key, b);
+        b
     }
 
     /// Iteration of an NTP-reduced replica: TP degree `tp_reduced`,
@@ -181,12 +249,14 @@ impl IterationModel {
 
         // NTP overheads only exist when the group is nonuniform.
         if tp_reduced < cfg_full.tp {
-            let map = ShardMap::build(self.model.ffn, cfg_full.tp, tp_reduced);
-            let plan = ReshardPlan::from_map(&map);
+            // Algorithm-1 products are memoized per (k, n1, n2): this is
+            // called in loops by `max_batch_within` / `StrategyTable`,
+            // and the map is identical every time.
+            let info = self.plans.get(self.model.ffn, cfg_full.tp, tp_reduced);
             // one unit = one (A column + B row) pair per layer, bf16
             let unit_bytes = 2 * self.model.hidden * 2;
             let reshard_bytes =
-                plan.max_bytes_per_gpu(unit_bytes) as f64 * self.model.layers as f64
+                (info.max_units_per_gpu * unit_bytes) as f64 * self.model.layers as f64
                     / cfg_full.pp as f64;
             let t_reshard = reshard_bytes / (self.cluster.gpu.nvlink_gbs * 1e9);
             // Fig. 8: exposure fraction ~ linear in comm:comp ratio.
@@ -305,6 +375,52 @@ mod tests {
         let m = setup();
         let b = m.ntp_iteration(&cfg32k(), 32, 16, 1.0);
         assert_eq!(b.ntp_overhead, 0.0);
+    }
+
+    #[test]
+    fn plan_cache_populates_and_results_are_stable() {
+        let m = setup();
+        assert!(m.plan_cache().is_empty());
+        let a = m.ntp_iteration(&cfg32k(), 30, 14, 1.0);
+        assert_eq!(m.plan_cache().len(), 1);
+        // repeat calls hit the cache and reproduce bit-identical totals
+        let b = m.ntp_iteration(&cfg32k(), 30, 14, 1.0);
+        assert_eq!(a.total(), b.total());
+        assert_eq!(a.ntp_overhead, b.ntp_overhead);
+        m.ntp_iteration(&cfg32k(), 28, 14, 1.0);
+        assert_eq!(m.plan_cache().len(), 2);
+        // clones share the cache
+        let clone = m.clone();
+        clone.ntp_iteration(&cfg32k(), 30, 7, 1.0);
+        assert_eq!(m.plan_cache().len(), 2);
+    }
+
+    #[test]
+    fn cloned_model_with_tweaked_config_is_not_served_stale_memos() {
+        let m = setup();
+        let cfg = cfg32k();
+        let base = m.healthy_iteration(&cfg).total();
+        let mut heavier = m.clone();
+        heavier.work.minibatch_tokens *= 2;
+        let doubled = heavier.healthy_iteration(&cfg).total();
+        assert!(
+            doubled > base * 1.5,
+            "clone must recompute, not reuse the original's memo ({doubled} vs {base})"
+        );
+    }
+
+    #[test]
+    fn healthy_iteration_memo_is_transparent() {
+        let m = setup();
+        let cfg = cfg32k();
+        let first = m.healthy_iteration(&cfg);
+        let second = m.healthy_iteration(&cfg);
+        assert_eq!(first.total(), second.total());
+        assert_eq!(first.compute, second.compute);
+        // distinct configs get distinct entries
+        let other = ParallelConfig { tp: 8, pp: 16, dp: 256, microbatch: 1 };
+        let b = m.healthy_iteration(&other);
+        assert!(b.total() != first.total());
     }
 
     #[test]

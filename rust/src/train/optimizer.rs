@@ -4,6 +4,52 @@
 //! reconfiguration gathers and re-slices `m`/`v` the same way it does
 //! the weights (see `trainer::Trainer::reconfigure`).
 
+use crate::util::par::{self, PAR_MIN_ELEMS};
+
+/// The scalar AdamW recurrence over one tensor's slices.
+#[allow(clippy::too_many_arguments)]
+fn adamw_tensor(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    decay: f32,
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+) {
+    assert_eq!(p.len(), g.len());
+    for j in 0..p.len() {
+        let gj = g[j];
+        m[j] = b1 * m[j] + (1.0 - b1) * gj;
+        v[j] = b2 * v[j] + (1.0 - b2) * gj * gj;
+        let mhat = m[j] / bc1;
+        let vhat = v[j] / bc2;
+        p[j] -= lr * (mhat / (vhat.sqrt() + eps) + decay * p[j]);
+    }
+}
+
+/// Runs the recurrence over a slice of per-tensor work items (the unit
+/// handed to one worker thread).
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn run_items(
+    items: &mut [(&mut [f32], &[f32], &mut [f32], &mut [f32], f32)],
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+) {
+    for w in items.iter_mut() {
+        let decay = w.4;
+        adamw_tensor(w.0, w.1, w.2, w.3, decay, lr, b1, b2, bc1, bc2, eps);
+    }
+}
+
 /// AdamW hyperparameters + state.
 #[derive(Clone, Debug)]
 pub struct AdamW {
@@ -33,7 +79,24 @@ impl AdamW {
 
     /// One update step in place. `decay_mask[i] = false` exempts a tensor
     /// (norm scales/biases) from weight decay.
+    ///
+    /// Large updates fan out over scoped threads, one disjoint slice of
+    /// tensors per worker. Tensors are updated independently, so the
+    /// parallel result is bit-identical to the sequential one.
     pub fn update(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], decay_mask: &[bool]) {
+        let threads = par::num_threads();
+        self.update_with_threads(params, grads, decay_mask, threads);
+    }
+
+    /// [`AdamW::update`] with an explicit worker count (1 = sequential;
+    /// the perf benches compare the two).
+    pub fn update_with_threads(
+        &mut self,
+        params: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        decay_mask: &[bool],
+        threads: usize,
+    ) {
         assert_eq!(params.len(), grads.len());
         assert_eq!(params.len(), self.m.len());
         self.step += 1;
@@ -42,23 +105,32 @@ impl AdamW {
         let bc1 = 1.0 - b1.powi(self.step as i32);
         let bc2 = 1.0 - b2.powi(self.step as i32);
         let lr = self.lr;
-        for i in 0..params.len() {
-            let decay = if decay_mask[i] { self.weight_decay } else { 0.0 };
-            let (p, g, m, v) = (
-                &mut params[i][..],
-                &grads[i][..],
-                &mut self.m[i][..],
-                &mut self.v[i][..],
-            );
-            assert_eq!(p.len(), g.len());
-            for j in 0..p.len() {
-                let gj = g[j];
-                m[j] = b1 * m[j] + (1.0 - b1) * gj;
-                v[j] = b2 * v[j] + (1.0 - b2) * gj * gj;
-                let mhat = m[j] / bc1;
-                let vhat = v[j] / bc2;
-                p[j] -= lr * (mhat / (vhat.sqrt() + self.eps) + decay * p[j]);
-            }
+        let eps = self.eps;
+        let wd = self.weight_decay;
+        let total: usize = params.iter().map(|p| p.len()).sum();
+
+        // Per-tensor work items: (param, grad, m, v, decay).
+        let mut work: Vec<(&mut [f32], &[f32], &mut [f32], &mut [f32], f32)> = params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut())
+            .zip(self.v.iter_mut())
+            .enumerate()
+            .map(|(i, (((p, g), m), v))| {
+                let decay = if decay_mask[i] { wd } else { 0.0 };
+                (p.as_mut_slice(), g.as_slice(), m.as_mut_slice(), v.as_mut_slice(), decay)
+            })
+            .collect();
+
+        if threads > 1 && work.len() > 1 && total >= PAR_MIN_ELEMS {
+            // Balance chunks by element count, not tensor count — one
+            // oversized tensor must not gate the whole fan-out.
+            let weights: Vec<usize> = work.iter().map(|w| w.1.len()).collect();
+            par::par_chunks_weighted_mut(&mut work, &weights, threads, |_off, chunk| {
+                run_items(chunk, lr, b1, b2, bc1, bc2, eps)
+            });
+        } else {
+            run_items(&mut work, lr, b1, b2, bc1, bc2, eps);
         }
     }
 
@@ -117,6 +189,32 @@ mod tests {
             opt.update(&mut params, &g, &[true]);
         }
         assert!((params[0][0] - 3.0).abs() < 0.05, "x={}", params[0][0]);
+    }
+
+    #[test]
+    fn parallel_update_is_bit_identical_to_sequential() {
+        // Enough elements to clear PAR_MIN_ELEMS so the fan-out actually
+        // runs.
+        let n_tensors = 8;
+        let len = (super::PAR_MIN_ELEMS / n_tensors) + 7;
+        let mut rng = crate::util::prng::Rng::new(3);
+        let params: Vec<Vec<f32>> = (0..n_tensors).map(|_| rng.normal_vec_f32(len, 0.1)).collect();
+        let grads: Vec<Vec<f32>> =
+            params.iter().map(|p| p.iter().map(|x| x * 0.3 + 0.01).collect()).collect();
+        let mask: Vec<bool> = (0..n_tensors).map(|i| i % 2 == 0).collect();
+
+        let mut p_seq = params.clone();
+        let mut p_par = params;
+        let mut opt_seq = AdamW::new(1e-3, &p_seq);
+        let mut opt_par = AdamW::new(1e-3, &p_par);
+        for _ in 0..3 {
+            opt_seq.update_with_threads(&mut p_seq, &grads, &mask, 1);
+            opt_par.update_with_threads(&mut p_par, &grads, &mask, 4);
+        }
+        assert_eq!(p_seq, p_par);
+        assert_eq!(opt_seq.m, opt_par.m);
+        assert_eq!(opt_seq.v, opt_par.v);
+        assert_eq!(opt_seq.step, opt_par.step);
     }
 
     #[test]

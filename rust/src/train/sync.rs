@@ -15,8 +15,29 @@
 //! is the batch-size-weighted mean of per-replica mean-gradients.
 
 use crate::runtime::ProgramMeta;
+use crate::util::par::{self, PAR_MIN_ELEMS};
 use anyhow::Result;
 use std::time::Instant;
+
+/// `dst[i] += w * src[i]`, fanned out over disjoint contiguous chunks
+/// when the buffers are large. Element-independent, so the parallel
+/// result is bit-identical to the sequential loop. Public so the perf
+/// benches can compare explicit worker counts.
+pub fn weighted_accumulate(dst: &mut [f32], src: &[f32], w: f32, threads: usize) {
+    assert_eq!(dst.len(), src.len());
+    if threads > 1 && dst.len() >= PAR_MIN_ELEMS {
+        par::par_chunks_mut(dst, threads, |off, chunk| {
+            let src = &src[off..off + chunk.len()];
+            for (d, s) in chunk.iter_mut().zip(src) {
+                *d += w * *s;
+            }
+        });
+    } else {
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += w * *s;
+        }
+    }
+}
 
 /// Timing breakdown of one synchronization (for the Fig. 8/9 benches).
 #[derive(Clone, Copy, Debug, Default)]
@@ -95,6 +116,7 @@ pub fn sync_grads(
 
     let mut timing = SyncTiming::default();
     let mut full: Vec<f32> = Vec::new();
+    let threads = par::num_threads();
     for g in 0..n_groups {
         let total = group_tables[0][g].total_len;
         for (r, t) in group_tables.iter().enumerate() {
@@ -115,9 +137,7 @@ pub fn sync_grads(
             for &(pi, len) in &group_tables[0][g].members {
                 let src = &grads[0][pi];
                 debug_assert_eq!(src.len(), len);
-                for (dst, s) in full[off..off + len].iter_mut().zip(src) {
-                    *dst += w * s;
-                }
+                weighted_accumulate(&mut full[off..off + len], src, w, threads);
                 off += len;
             }
         }
@@ -130,9 +150,7 @@ pub fn sync_grads(
             for &(pi, len) in &group_tables[r][g].members {
                 let src = &grads[r][pi];
                 debug_assert_eq!(src.len(), len);
-                for (dst, s) in full[off..off + len].iter_mut().zip(src) {
-                    *dst += w * s;
-                }
+                weighted_accumulate(&mut full[off..off + len], src, w, threads);
                 off += len;
             }
         }
@@ -257,6 +275,19 @@ mod tests {
         let metas = vec![&m];
         sync_grads(&metas, &mut grads, &[1.0]).unwrap();
         assert_eq!(grads[0], orig);
+    }
+
+    #[test]
+    fn weighted_accumulate_parallel_matches_sequential() {
+        let mut rng = crate::util::prng::Rng::new(8);
+        let n = super::PAR_MIN_ELEMS + 11; // force the parallel branch
+        let src = rng.normal_vec_f32(n, 1.0);
+        let base = rng.normal_vec_f32(n, 1.0);
+        let mut seq = base.clone();
+        let mut par_buf = base;
+        weighted_accumulate(&mut seq, &src, 0.37, 1);
+        weighted_accumulate(&mut par_buf, &src, 0.37, 4);
+        assert_eq!(seq, par_buf);
     }
 
     #[test]

@@ -3,7 +3,13 @@
 //! iterations until a time or count budget is reached, and reports a
 //! `stats::Summary`. Used both by the per-figure benches and by the §Perf
 //! optimization loop in EXPERIMENTS.md.
+//!
+//! [`JsonReport`] additionally collects results and named scalars
+//! (speedup ratios, problem sizes) into a machine-readable JSON file —
+//! `benches/perf_hotpath.rs` writes `BENCH_perf_hotpath.json` so the
+//! perf trajectory is trackable across PRs.
 
+use crate::util::json::Value;
 use crate::util::stats::Summary;
 use std::time::{Duration, Instant};
 
@@ -116,6 +122,56 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
+/// Machine-readable collection of bench results + named scalars.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    name: String,
+    entries: Vec<Value>,
+    scalars: Vec<(String, f64)>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> JsonReport {
+        JsonReport { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Record one timed case.
+    pub fn result(&mut self, r: &BenchResult) {
+        self.entries.push(Value::obj(vec![
+            ("name", Value::Str(r.name.clone())),
+            ("iters", Value::Num(r.iters as f64)),
+            ("mean_secs", Value::Num(r.secs.mean)),
+            ("p50_secs", Value::Num(r.secs.p50)),
+            ("p95_secs", Value::Num(r.secs.p95)),
+            ("min_secs", Value::Num(r.secs.min)),
+            ("max_secs", Value::Num(r.secs.max)),
+        ]));
+    }
+
+    /// Record a named scalar (speedup ratio, problem size, ...).
+    pub fn scalar(&mut self, key: &str, value: f64) {
+        self.scalars.push((key.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("bench", Value::Str(self.name.clone())),
+            ("entries", Value::Arr(self.entries.clone())),
+            (
+                "scalars",
+                Value::Obj(
+                    self.scalars.iter().map(|(k, v)| (k.clone(), Value::Num(*v))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the report as pretty JSON to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty() + "\n")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +201,26 @@ mod tests {
         let (v, t) = time_once(|| 41 + 1);
         assert_eq!(v, 42);
         assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut rep = JsonReport::new("unit");
+        let r = BenchResult {
+            name: "case_a".into(),
+            iters: 4,
+            secs: Summary::of(&[0.5, 0.5, 0.5, 0.5]),
+        };
+        rep.result(&r);
+        rep.scalar("speedup", 12.5);
+        let v = rep.to_json();
+        let parsed = Value::parse(&v.pretty()).unwrap();
+        assert_eq!(parsed.get("bench").as_str(), Some("unit"));
+        let entries = parsed.get("entries").as_arr().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].get("name").as_str(), Some("case_a"));
+        assert_eq!(entries[0].get("mean_secs").as_f64(), Some(0.5));
+        assert_eq!(parsed.get("scalars").get("speedup").as_f64(), Some(12.5));
     }
 
     #[test]

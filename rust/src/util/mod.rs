@@ -5,6 +5,7 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod log;
+pub mod par;
 pub mod prng;
 pub mod prop;
 pub mod stats;

@@ -1,0 +1,192 @@
+//! Scoped-thread fan-out on `std::thread::scope` — no external deps (the
+//! offline vendor set has no rayon). Used by the Monte-Carlo benches
+//! (one PRNG stream per trial), the chunked AdamW update and the
+//! weighted gradient reduce.
+//!
+//! Everything here preserves result order and (for the mutable-chunk
+//! helper) partitions the buffer disjointly, so parallel execution is
+//! bit-identical to sequential execution for element-independent work.
+
+/// Below this many total elements a parallel numeric kernel is not
+/// worth the thread spawns (shared by AdamW and the gradient reduce).
+pub const PAR_MIN_ELEMS: usize = 1 << 20;
+
+/// Worker count: `NTP_THREADS` env override, else the machine's
+/// available parallelism, else 1. Resolved once per process (callers
+/// sit in hot loops; re-reading the env would take the process-wide
+/// env lock every call) — set `NTP_THREADS` before first use.
+pub fn num_threads() -> usize {
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("NTP_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Map `f` over `0..n_items` on up to `threads` scoped threads,
+/// returning results in index order. Items are split into contiguous
+/// index ranges (one per worker); with `threads <= 1` this is a plain
+/// sequential map with no thread spawned.
+pub fn par_map<U, F>(n_items: usize, threads: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    let t = threads.max(1).min(n_items.max(1));
+    if t <= 1 {
+        return (0..n_items).map(f).collect();
+    }
+    let chunk = n_items.div_ceil(t);
+    let fref = &f;
+    let mut parts: Vec<Vec<U>> = Vec::with_capacity(t);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..t)
+            .map(|ti| {
+                let lo = (ti * chunk).min(n_items);
+                let hi = ((ti + 1) * chunk).min(n_items);
+                s.spawn(move || (lo..hi).map(fref).collect::<Vec<U>>())
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("par_map worker panicked"));
+        }
+    });
+    let mut out = Vec::with_capacity(n_items);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+/// Split `buf` into up to `threads` contiguous chunks and run
+/// `f(chunk_offset, chunk)` on each concurrently. Chunks are disjoint,
+/// so any element-independent `f` produces the same buffer contents as
+/// one sequential pass. With `threads <= 1` runs inline.
+pub fn par_chunks_mut<T, F>(buf: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let t = threads.max(1).min(buf.len().max(1));
+    if t <= 1 {
+        f(0, buf);
+        return;
+    }
+    let chunk = buf.len().div_ceil(t);
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut rest: &mut [T] = buf;
+        let mut off = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            let o = off;
+            s.spawn(move || fref(o, head));
+            off += take;
+            rest = tail;
+        }
+    });
+}
+
+/// Like [`par_chunks_mut`], but chunk boundaries are chosen so each
+/// chunk carries a near-equal share of `weights[i]` (e.g. element
+/// counts of per-tensor work items) instead of a near-equal item
+/// count — one oversized item cannot gate the whole fan-out. Chunks
+/// stay contiguous and disjoint, so element-independent `f` remains
+/// bit-identical to a sequential pass.
+pub fn par_chunks_weighted_mut<T, F>(buf: &mut [T], weights: &[usize], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(buf.len(), weights.len());
+    let t = threads.max(1).min(buf.len().max(1));
+    if t <= 1 {
+        f(0, buf);
+        return;
+    }
+    let total: usize = weights.iter().sum();
+    let target = (total.div_ceil(t)).max(1);
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut rest: &mut [T] = buf;
+        let mut idx = 0usize; // global index of rest[0]
+        while !rest.is_empty() {
+            let mut take = 1usize;
+            let mut w = weights[idx];
+            while take < rest.len() && w < target {
+                w += weights[idx + take];
+                take += 1;
+            }
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            let off = idx;
+            s.spawn(move || fref(off, head));
+            idx += take;
+            rest = tail;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        for threads in [1usize, 2, 3, 8] {
+            let got = par_map(17, threads, |i| i * i);
+            let want: Vec<usize> = (0..17).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert!(par_map(0, 4, |i| i).is_empty());
+        assert_eq!(par_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_every_element_once() {
+        for threads in [1usize, 2, 5] {
+            let mut buf: Vec<u64> = vec![0; 103];
+            par_chunks_mut(&mut buf, threads, |off, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x += (off + i) as u64 + 1;
+                }
+            });
+            let want: Vec<u64> = (0..103).map(|i| i + 1).collect();
+            assert_eq!(buf, want, "threads={threads}");
+        }
+        // empty buffer is a no-op
+        let mut empty: Vec<u64> = Vec::new();
+        par_chunks_mut(&mut empty, 4, |_, _| {});
+    }
+
+    #[test]
+    fn weighted_chunks_cover_every_item_once_and_balance() {
+        for threads in [1usize, 2, 4] {
+            // one huge item among many small ones
+            let weights: Vec<usize> = (0..40).map(|i| if i == 7 { 10_000 } else { 10 }).collect();
+            let mut buf: Vec<u64> = vec![0; 40];
+            par_chunks_weighted_mut(&mut buf, &weights, threads, |off, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x += (off + i) as u64 + 1;
+                }
+            });
+            let want: Vec<u64> = (0..40).map(|i| i + 1).collect();
+            assert_eq!(buf, want, "threads={threads}");
+        }
+        // degenerate: single item, empty
+        let mut one = vec![0u64];
+        par_chunks_weighted_mut(&mut one, &[5], 4, |_, c| c[0] = 9);
+        assert_eq!(one, vec![9]);
+        let mut empty: Vec<u64> = Vec::new();
+        par_chunks_weighted_mut(&mut empty, &[], 4, |_, _| {});
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

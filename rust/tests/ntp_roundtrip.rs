@@ -2,9 +2,12 @@
 //! exercised across modules (shard_map → reshard → sync buffers).
 
 use ntp::ntp::shard_map::ShardMap;
-use ntp::ntp::sync::{allreduce_mean, comp_to_sync, gather_comp, scatter_comp, sync_to_comp};
-use ntp::ntp::{partition, ReshardPlan, SyncPlan};
+use ntp::ntp::sync::{
+    allreduce_mean, comp_to_sync, gather_comp, scatter_comp, sync_to_comp, CopyPlan,
+};
+use ntp::ntp::{partition, PlanCache, ReshardPlan, SyncPlan};
 use ntp::util::prng::Rng;
+use ntp::util::prop::{check, ShardInstanceGen};
 
 #[test]
 fn paper_scale_tp32_to_tp30_full_roundtrip() {
@@ -87,6 +90,58 @@ fn sync_plan_volumes_match_paper_ratios() {
     let sizes = partition::partition_sizes(128, 30);
     assert_eq!(*sizes.iter().max().unwrap(), 5);
     assert_eq!(*sizes.iter().min().unwrap(), 4);
+}
+
+#[test]
+fn coalesced_reshard_equals_per_unit_path_exactly() {
+    // Property: for random (k, n1, n2) instances, every CopyPlan
+    // permutation is exactly (bit-for-bit) the per-unit reference —
+    // both are pure copies, so f32 equality must be exact.
+    let gen = ShardInstanceGen { max_k: 800, max_n: 24 };
+    check(0xC0A1, 120, &gen, |&(k, n1, n2)| {
+        // data seed derived from the instance so the property is a pure Fn
+        let mut local =
+            Rng::new(((k as u64) << 32) ^ ((n1 as u64) << 16) ^ (n2 as u64) ^ 0xD00D);
+        let unit_len = 1 + local.index(5);
+        let map = ShardMap::build(k, n1, n2);
+        let plan = CopyPlan::build(&map);
+        let full: Vec<f32> = (0..k * unit_len).map(|_| local.f32() - 0.5).collect();
+        let comp = scatter_comp(&map, unit_len, &full);
+        if plan.scatter_comp(unit_len, &full) != comp {
+            return Err(format!("scatter_comp diverges (k={k} n1={n1} n2={n2})"));
+        }
+        if plan.gather_comp(unit_len, &comp) != full {
+            return Err(format!("gather_comp diverges (k={k} n1={n1} n2={n2})"));
+        }
+        let sync = comp_to_sync(&map, unit_len, &comp);
+        if plan.comp_to_sync(unit_len, &comp) != sync {
+            return Err(format!("comp_to_sync diverges (k={k} n1={n1} n2={n2})"));
+        }
+        if plan.sync_to_comp(unit_len, &sync) != comp {
+            return Err(format!("sync_to_comp diverges (k={k} n1={n1} n2={n2})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_cache_products_equal_direct_builds_at_paper_scale() {
+    let cache = PlanCache::new();
+    let info = cache.get(81_920, 32, 30);
+    let map = ShardMap::build(81_920, 32, 30);
+    assert_eq!(info.map, map);
+    let plan = ReshardPlan::from_map(&map);
+    for g in 0..32 {
+        assert_eq!(info.plan.sent_by(g), plan.sent_by(g));
+    }
+    let unit_bytes = 2 * 12_288 * 2;
+    assert_eq!(
+        info.max_units_per_gpu * unit_bytes,
+        plan.max_bytes_per_gpu(unit_bytes)
+    );
+    // CopyPlan covers each unit exactly once
+    let covered: usize = info.copy.segments.iter().map(|s| s.len).sum();
+    assert_eq!(covered, 81_920);
 }
 
 #[test]

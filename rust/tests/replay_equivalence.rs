@@ -1,0 +1,166 @@
+//! Property tests: the event-driven [`FleetReplayer`] sweep is
+//! equivalent to the O(steps × events) per-step [`Trace::replay_to`]
+//! rebuild — per-GPU health, domain counts, pending recovery deadlines,
+//! failed-GPU series, and the integrated `FleetStats` all agree on
+//! randomized traces, topologies and blast radii.
+
+use ntp::cluster::{GpuState, Topology};
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{BlastRadius, FailureModel, FleetReplayer, Trace};
+use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::power::RackDesign;
+use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::prng::Rng;
+use ntp::util::prop::{check, SeedGen};
+
+/// Compare the incremental fleet against a from-scratch replay at `t`:
+/// equal health per GPU, equal pending deadline for failed GPUs, equal
+/// aggregates. (`at_hours` of an *ongoing* overlapped outage is the one
+/// documented difference and is not consumed by anything downstream.)
+fn assert_states_match(
+    inc: &ntp::cluster::FleetHealth,
+    scratch: &ntp::cluster::FleetHealth,
+    topo: &Topology,
+    t: f64,
+) -> Result<(), String> {
+    if inc.n_failed() != scratch.n_failed() {
+        return Err(format!(
+            "n_failed {} != {} at t={t}",
+            inc.n_failed(),
+            scratch.n_failed()
+        ));
+    }
+    if inc.domain_healthy_counts() != scratch.domain_healthy_counts() {
+        return Err(format!("domain counts diverge at t={t}"));
+    }
+    for gpu in 0..topo.n_gpus {
+        match (inc.state(gpu), scratch.state(gpu)) {
+            (GpuState::Healthy, GpuState::Healthy) => {}
+            (
+                GpuState::Failed { until_hours: u1, .. },
+                GpuState::Failed { until_hours: u2, .. },
+            ) => {
+                if u1 != u2 {
+                    return Err(format!("gpu {gpu} until {u1} != {u2} at t={t}"));
+                }
+            }
+            (a, b) => return Err(format!("gpu {gpu} state {a:?} != {b:?} at t={t}")),
+        }
+    }
+    inc.check_invariants().map_err(|e| format!("invariants: {e}"))?;
+    Ok(())
+}
+
+#[test]
+fn replayer_equals_replay_to_on_random_traces() {
+    let gen = SeedGen;
+    check(0xF1EE7, 25, &gen, |&seed| {
+        let mut rng = Rng::new(seed);
+        // randomized instance
+        let domain_size = [8usize, 16, 32][rng.index(3)];
+        let n_domains = 4 + rng.index(12);
+        let topo = Topology::of(n_domains * domain_size, domain_size, 4.min(domain_size));
+        let blast = [
+            BlastRadius::Single,
+            BlastRadius::Gpus(2),
+            BlastRadius::Node,
+            BlastRadius::Domain,
+        ][rng.index(4)];
+        let scale = 20.0 + rng.f64() * 300.0; // dense failures, heavy overlap
+        let model = FailureModel::llama3().scaled(scale);
+        let horizon = 24.0 * (3.0 + rng.f64() * 12.0);
+        let trace = Trace::generate(&topo, &model, horizon, &mut rng);
+
+        // random monotone sample grid, including exact event edges
+        let mut times: Vec<f64> = (0..60).map(|_| rng.f64() * horizon * 1.1).collect();
+        for ev in trace.events.iter().take(20) {
+            times.push(ev.at_hours);
+            times.push(ev.recover_at_hours);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        let mut rep = FleetReplayer::new(&trace, &topo, blast);
+        for &t in &times {
+            let inc = rep.advance(t);
+            let scratch = trace.replay_to(&topo, blast, t);
+            assert_states_match(inc, &scratch, &topo, t)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn replayer_handles_spiky_traces() {
+    let topo = Topology::of(512, 16, 4);
+    let model = FailureModel::llama3().scaled(60.0);
+    let mut rng = Rng::new(99);
+    let trace =
+        Trace::generate_with_spikes(&topo, &model, 24.0 * 20.0, 7.0, 1.5, 10.0, &mut rng);
+    let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Node);
+    for step in 0..400 {
+        let t = step as f64 * 1.3;
+        let inc = rep.advance(t);
+        let scratch = trace.replay_to(&topo, BlastRadius::Node, t);
+        assert_states_match(inc, &scratch, &topo, t).unwrap();
+    }
+}
+
+#[test]
+fn failed_series_matches_replay_to_counts() {
+    let topo = Topology::of(1024, 8, 4);
+    let model = FailureModel::llama3().scaled(80.0);
+    let mut rng = Rng::new(17);
+    let trace = Trace::generate(&topo, &model, 24.0 * 12.0, &mut rng);
+    for blast in [BlastRadius::Single, BlastRadius::Node] {
+        let series = trace.failed_series(&topo, blast, 2.5);
+        assert_eq!(series.len(), (trace.horizon_hours / 2.5).ceil() as usize + 1);
+        for &(t, failed) in &series {
+            assert_eq!(
+                failed,
+                trace.replay_to(&topo, blast, t).n_failed(),
+                "blast {blast:?} t={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fleet_stats_bit_identical_across_strategies_and_spares() {
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 2 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: 32, pp: 4, dp: 16, microbatch: 1 };
+    let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    let topo = Topology::of(cfg.n_gpus(), 32, 4);
+    let model = FailureModel::llama3().scaled(35.0);
+    let mut rng = Rng::new(4);
+    let trace = Trace::generate(&topo, &model, 24.0 * 25.0, &mut rng);
+
+    for strategy in [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw] {
+        for spares in [None, Some(SparePolicy { spare_domains: 6, min_tp: 28 })] {
+            for blast in [BlastRadius::Single, BlastRadius::Gpus(2)] {
+                let fs = FleetSim {
+                    topo: &topo,
+                    table: &table,
+                    domains_per_replica: cfg.pp,
+                    strategy,
+                    spares,
+                    packed: true,
+                    blast,
+                };
+                let fast = fs.run(&trace, 1.5);
+                let slow = fs.run_replay_per_step(&trace, 1.5);
+                assert_eq!(fast, slow, "strategy {strategy:?} spares {spares:?} blast {blast:?}");
+            }
+        }
+    }
+}
