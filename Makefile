@@ -3,14 +3,19 @@
 #   make check       — tier-1 (build + tests) plus the perf smoke bench
 #   make build       — release build
 #   make test        — test suite
+#   make lint        — rustfmt --check + clippy -D warnings
 #   make bench-perf  — full perf_hotpath run (writes BENCH_perf_hotpath.json)
 
 CARGO    ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: check build test bench-smoke bench-perf
+.PHONY: check build test lint bench-smoke bench-perf
 
 check: build test bench-smoke
+
+lint:
+	$(CARGO) fmt --check --manifest-path $(MANIFEST)
+	$(CARGO) clippy --manifest-path $(MANIFEST) --all-targets -- -D warnings
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)

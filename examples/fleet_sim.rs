@@ -1,7 +1,9 @@
 //! Fleet-scale what-if: a 32K-GPU / NVL32 training job (the paper's §5.3
 //! setup) runs through a 15-day Llama-3-calibrated failure trace under
-//! DP-DROP, NTP and NTP-PW; reports time-integrated throughput, pauses
-//! and the spare budget each strategy needs — Figs. 6/7 as one narrative.
+//! every registered fault-tolerance policy — the paper's DP-DROP / NTP /
+//! NTP-PW trio plus the checkpoint-restart baseline and the
+//! spare-migration policy — with modeled reconfiguration downtime;
+//! reports time-integrated throughput, downtime, pauses and spare usage.
 //!
 //! Run: cargo run --release --example fleet_sim -- [--days 15] [--rate-x 1]
 
@@ -11,8 +13,9 @@ use ntp::failure::{BlastRadius, FailureModel, Trace};
 use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
 use ntp::metrics::Recorder;
 use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, TransitionCosts};
 use ntp::power::RackDesign;
-use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::sim::{IterationModel, SimParams};
 use ntp::util::cli::Args;
 use ntp::util::prng::Rng;
 use ntp::util::table::{f4, pct, Table};
@@ -38,6 +41,7 @@ fn main() -> anyhow::Result<()> {
     let rack = RackDesign::default();
     println!("# building strategy table (TP{} -> TP{}..)", cfg.tp, 28);
     let table = StrategyTable::build(&sim, &cfg, &rack);
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
 
     let topo = Topology::new(&cluster);
     let fmodel = FailureModel::llama3().scaled(rate_x);
@@ -47,14 +51,16 @@ fn main() -> anyhow::Result<()> {
     println!("# {} failure events", trace.events.len());
 
     let mut rec = Recorder::new("fleet_sim_32k");
-    let mut out = Table::new(&["strategy", "spares", "mean tput", "tput/GPU", "paused"]);
-    for strategy in [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw] {
+    let mut out = Table::new(&[
+        "policy", "spares", "mean tput", "downtime", "net tput", "tput/GPU", "paused",
+    ]);
+    for policy in registry::all() {
         for &spares in &[0usize, 16] {
             let fs = FleetSim {
                 topo: &topo,
                 table: &table,
                 domains_per_replica: cfg.pp,
-                strategy,
+                policy,
                 spares: if spares > 0 {
                     Some(SparePolicy { spare_domains: spares, min_tp: 28 })
                 } else {
@@ -62,18 +68,25 @@ fn main() -> anyhow::Result<()> {
                 },
                 packed: true,
                 blast: BlastRadius::Single,
+                transition,
             };
             let stats = fs.run(&trace, 3.0);
             out.row(&[
-                strategy.name().into(),
+                policy.name().into(),
                 format!("{spares}"),
                 f4(stats.mean_throughput),
+                pct(stats.downtime_frac),
+                f4(stats.net_throughput()),
                 f4(stats.throughput_per_gpu),
                 pct(stats.paused_frac),
             ]);
             rec.scalar(
-                &format!("{}_s{}_tput", strategy.name(), spares),
+                &format!("{}_s{}_tput", policy.name(), spares),
                 stats.mean_throughput,
+            );
+            rec.scalar(
+                &format!("{}_s{}_downtime", policy.name(), spares),
+                stats.downtime_frac,
             );
         }
     }

@@ -11,8 +11,9 @@ use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::scenario::scenario_from_failed;
 use ntp::failure::{sample_failed_gpus, BlastRadius};
-use ntp::manager::{pack_domains, StrategyTable};
+use ntp::manager::StrategyTable;
 use ntp::parallel::ParallelConfig;
+use ntp::policy::PolicyCtx;
 use ntp::power::RackDesign;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
 use ntp::util::par;
@@ -43,6 +44,19 @@ fn main() {
     let mut t = Table::new(&["blast", "gpus down", "DP-DROP loss", "NTP loss", "NTP-PW loss"]);
     let mut ntp_losses = Vec::new();
     let mut rng = Rng::new(10);
+    // The legacy trio evaluated through the policy-layer ports (the
+    // snapshot path of `FleetSim::evaluate`, no spares, no transitions).
+    let ctx = PolicyCtx {
+        table: &table,
+        domain_size: topo.domain_size,
+        domains_per_replica: cfg.pp,
+        packed: true,
+        spares: None,
+        n_gpus: topo.n_gpus,
+        transition: None,
+    };
+    let policies =
+        [FtStrategy::DpDrop.policy(), FtStrategy::Ntp.policy(), FtStrategy::NtpPw.policy()];
     for (label, blast) in [
         ("1 GPU", BlastRadius::Single),
         ("2 GPUs", BlastRadius::Gpus(2)),
@@ -67,12 +81,10 @@ fn main() {
                 let failed: Vec<usize> = (0..topo.n_gpus).filter(|&g| failed[g]).collect();
                 let n_down = failed.len();
                 let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
-                let a = pack_domains(&healthy, topo.domain_size, cfg.pp, true);
                 let mut out = [0.0f64; 3];
-                for (i, strat) in
-                    [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw].iter().enumerate()
-                {
-                    out[i] = 1.0 - table.group_throughput(&a.replica_tp, *strat);
+                for (i, policy) in policies.iter().enumerate() {
+                    let resp = policy.respond(&ctx, &healthy);
+                    out[i] = 1.0 - resp.throughput(table.full_local_batch);
                 }
                 (out, n_down)
             });

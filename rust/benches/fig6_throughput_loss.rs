@@ -7,14 +7,15 @@
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::scenario::scenario_from_failed;
-use ntp::failure::{sample_failed_gpus, BlastRadius};
-use ntp::manager::{pack_domains, StrategyTable};
+use ntp::failure::{sample_failed_gpus, BlastRadius, FailureModel, Trace};
+use ntp::manager::{pack_domains, FleetSim, StrategyTable};
 use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, TransitionCosts};
 use ntp::power::RackDesign;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
 use ntp::util::par;
 use ntp::util::prng::Rng;
-use ntp::util::table::{pct, Table};
+use ntp::util::table::{f4, pct, Table};
 
 fn main() {
     let model = presets::model("gpt-480b").unwrap();
@@ -81,4 +82,71 @@ fn main() {
     assert!(drop > 0.06, "DP-DROP should lose >6% at 4e-3 (paper ~12%)");
     assert!(ntp < 0.05, "NTP loss should stay small (paper ~3%)");
     assert!(pw < 0.015, "NTP-PW loss should be ~1% (paper <1%)");
+
+    // =====================================================================
+    // Policy layer: the same job over a failure *trace*, per registered
+    // policy, with modeled reconfiguration downtime accounted.
+    // =====================================================================
+    println!("\n=== Fig 6b: policies over a 15-day trace (downtime accounted) ===\n");
+    let fmodel = FailureModel::llama3().scaled(10.0);
+    let mut trace_rng = Rng::new(62);
+    let trace = Trace::generate(&topo, &fmodel, 15.0 * 24.0, &mut trace_rng);
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+    let policies = registry::all();
+    let stats_per_policy = par::par_map(policies.len(), threads, |i| {
+        let fs = FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            policy: policies[i],
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+        };
+        fs.run(&trace, 3.0)
+    });
+    let mut t2 = Table::new(&["policy", "mean tput", "downtime", "net tput", "transitions"]);
+    for (policy, stats) in policies.iter().zip(&stats_per_policy) {
+        t2.row(&[
+            policy.name().into(),
+            f4(stats.mean_throughput),
+            pct(stats.downtime_frac),
+            f4(stats.net_throughput()),
+            format!("{}", stats.transitions),
+        ]);
+    }
+    t2.print();
+    let by_name = |name: &str| {
+        policies
+            .iter()
+            .position(|p| p.name() == name)
+            .map(|i| stats_per_policy[i])
+            .unwrap()
+    };
+    let s_drop = by_name("DP-DROP");
+    let s_ntp = by_name("NTP");
+    let s_ckpt = by_name("CKPT-RESTART");
+    let s_mig = by_name("SPARE-MIG");
+    for s in &stats_per_policy {
+        assert!((0.0..=1.0).contains(&s.downtime_frac), "downtime {}", s.downtime_frac);
+        assert!(s.transitions > 0, "a 15-day 10x trace must show transitions");
+    }
+    // Checkpoint-restart restarts the whole fleet (plus rollback) on
+    // every change; NTP reshards only the affected replicas.
+    assert!(
+        s_ckpt.downtime_frac > s_drop.downtime_frac,
+        "ckpt downtime {} should exceed dp-drop restart downtime {}",
+        s_ckpt.downtime_frac,
+        s_drop.downtime_frac
+    );
+    assert!(
+        s_drop.downtime_frac > s_ntp.downtime_frac,
+        "dp-drop full restarts {} should exceed ntp reshards {}",
+        s_drop.downtime_frac,
+        s_ntp.downtime_frac
+    );
+    // Net of downtime, live reconfiguration beats checkpoint-restart.
+    assert!(s_ntp.net_throughput() > s_ckpt.net_throughput());
+    assert!(s_mig.net_throughput() > s_ckpt.net_throughput());
 }

@@ -11,8 +11,9 @@ use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{BlastRadius, FailureModel, Trace};
 use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
 use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, FtPolicy, TransitionCosts};
 use ntp::power::RackDesign;
-use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::sim::{IterationModel, SimParams};
 use ntp::util::par;
 use ntp::util::prng::Rng;
 use ntp::util::table::{f4, pct, Table};
@@ -41,40 +42,46 @@ fn main() {
     println!("trace: {} events over 15 days", trace.events.len());
 
     println!("\n=== Fig 7: throughput/GPU vs spare domains (fixed minibatch) ===");
-    println!("(paper: DP-DROP needs ~90 spares, NTP ~16, NTP-PW 0)\n");
-    let mut t = Table::new(&["strategy", "spares", "tput/GPU", "paused"]);
+    println!("(paper: DP-DROP needs ~90 spares, NTP ~16, NTP-PW 0;");
+    println!(" plus the policy layer's CKPT-RESTART and SPARE-MIG, downtime accounted)\n");
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+    let mut t =
+        Table::new(&["policy", "spares", "tput/GPU", "net tput/GPU", "downtime", "paused"]);
     let mut first_ok: std::collections::BTreeMap<&str, Option<usize>> = Default::default();
-    // Every (strategy, spare-budget) sweep point is an independent
+    // Every (policy, spare-budget) sweep point is an independent
     // trace integration — fan them out over scoped threads. Each run
     // sweeps the trace once via the event-driven FleetReplayer.
     let spare_budgets = [0usize, 8, 16, 32, 64, 90, 96];
-    let combos: Vec<(FtStrategy, usize)> = [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw]
+    let combos: Vec<(&'static dyn FtPolicy, usize)> = registry::all()
         .iter()
-        .flat_map(|&s| spare_budgets.iter().map(move |&sp| (s, sp)))
+        .flat_map(|&p| spare_budgets.iter().map(move |&sp| (p, sp)))
         .collect();
     let stats_per_combo = par::par_map(combos.len(), par::num_threads(), |i| {
-        let (strategy, spares) = combos[i];
+        let (policy, spares) = combos[i];
         let fs = FleetSim {
             topo: &topo,
             table: &table,
             domains_per_replica: cfg.pp,
-            strategy,
+            policy,
             spares: Some(SparePolicy { spare_domains: spares, min_tp: 28 }),
             packed: true,
             blast: BlastRadius::Single,
+            transition,
         };
         fs.run(&trace, 3.0)
     });
-    for ((strategy, spares), stats) in combos.iter().zip(&stats_per_combo) {
-        first_ok.entry(strategy.name()).or_insert(None);
+    for ((policy, spares), stats) in combos.iter().zip(&stats_per_combo) {
+        first_ok.entry(policy.name()).or_insert(None);
         t.row(&[
-            strategy.name().into(),
+            policy.name().into(),
             format!("{spares}"),
             f4(stats.throughput_per_gpu),
+            f4(stats.net_throughput_per_gpu()),
+            pct(stats.downtime_frac),
             pct(stats.paused_frac),
         ]);
         if stats.paused_frac == 0.0 {
-            let e = first_ok.get_mut(strategy.name()).unwrap();
+            let e = first_ok.get_mut(policy.name()).unwrap();
             if e.is_none() {
                 *e = Some(*spares);
             }
@@ -85,14 +92,35 @@ fn main() {
     println!("\nminimum spares for uninterrupted training:");
     for (name, s) in &first_ok {
         match s {
-            Some(s) => println!("  {name:<8} {s}"),
-            None => println!("  {name:<8} >96"),
+            Some(s) => println!("  {name:<12} {s}"),
+            None => println!("  {name:<12} >96"),
         }
     }
     let ntp_min = first_ok["NTP"].unwrap_or(97);
     let pw_min = first_ok["NTP-PW"].unwrap_or(97);
     let drop_min = first_ok["DP-DROP"].unwrap_or(97);
+    let mig_min = first_ok["SPARE-MIG"].unwrap_or(97);
     assert!(pw_min == 0, "NTP-PW should need zero spares (got {pw_min})");
     assert!(ntp_min <= 32, "NTP should need few spares (got {ntp_min})");
     assert!(drop_min > ntp_min, "DP-DROP must need more spares than NTP");
+    // Spare-migration redistributes the shortfall instead of pausing, so
+    // like NTP-PW it runs uninterrupted without any spares.
+    assert!(mig_min == 0, "SPARE-MIG should need zero spares (got {mig_min})");
+    // Checkpoint-restart inherits DP-drop's capacity response, so its
+    // pause behavior (and spare appetite) matches DP-DROP's...
+    assert_eq!(first_ok["CKPT-RESTART"], first_ok["DP-DROP"]);
+    // ...but pays for every reconfiguration in downtime where the live
+    // policies keep running.
+    let idx = |name: &str, sp: usize| {
+        combos.iter().position(|(p, s)| p.name() == name && *s == sp).unwrap()
+    };
+    let ckpt = stats_per_combo[idx("CKPT-RESTART", 96)];
+    let ntp96 = stats_per_combo[idx("NTP", 96)];
+    assert!(
+        ckpt.downtime_frac > ntp96.downtime_frac,
+        "ckpt downtime {} should exceed NTP's {}",
+        ckpt.downtime_frac,
+        ntp96.downtime_frac
+    );
+    assert!(ckpt.net_throughput_per_gpu() < ntp96.net_throughput_per_gpu());
 }

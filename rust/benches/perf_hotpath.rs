@@ -73,10 +73,11 @@ fn main() {
         topo: &topo,
         table: &table,
         domains_per_replica: cfg.pp,
-        strategy: FtStrategy::Ntp,
+        policy: FtStrategy::Ntp.policy(),
         spares: None,
         packed: true,
         blast: BlastRadius::Single,
+        transition: None,
     };
     // Bit-identical integration on both paths, by construction and here.
     let stats_new = fs.run(&trace, 1.0);

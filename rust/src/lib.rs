@@ -20,6 +20,10 @@
 //! * [`parallel`] / [`sim`] / [`power`] / [`manager`] — hybrid-parallel
 //!   planner, the performance simulator behind every large-scale figure,
 //!   the power-boost allocator (NTP-PW), and the fleet resource manager.
+//! * [`policy`] — the pluggable fault-tolerance policy layer: the
+//!   paper's DP-drop/NTP/NTP-PW trio as ports, plus checkpoint-restart
+//!   and spare-migration policies, each with modeled reconfiguration
+//!   downtime integrated by the fleet sweep.
 //! * [`runtime`] / [`train`] — PJRT execution of the AOT-compiled JAX
 //!   model and the real-numerics training driver (DP replicas at
 //!   nonuniform TP, reshard + allreduce in Rust memory).
@@ -34,5 +38,6 @@ pub mod parallel;
 pub mod sim;
 pub mod power;
 pub mod manager;
+pub mod policy;
 pub mod runtime;
 pub mod train;

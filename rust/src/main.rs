@@ -18,8 +18,10 @@ use ntp::failure::{sample_failed_gpus, scenario::scenario_from_failed, BlastRadi
 use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
 use ntp::ntp::{ReshardPlan, ShardMap};
 use ntp::parallel::{best_config, ParallelConfig};
+use ntp::policy::{registry, PolicyCtx, TransitionCosts};
 use ntp::power::{min_boost_for, BoostDecision, RackDesign};
-use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::sim::{IterationModel, SimParams};
+use ntp::util::bench::JsonReport;
 use ntp::util::cli::Args;
 use ntp::util::prng::Rng;
 use ntp::util::table::{f2, f3, f4, pct, Table};
@@ -59,12 +61,16 @@ USAGE: ntp <subcommand> [options]
   simulate      --model gpt-480b --cluster paper-32k-nvl32 --tp 32 --pp 8
                 --dp 128 [--seq 16384]
   availability  --cluster paper-32k-nvl32 --tp 8,16,32,64 [--samples 200]
+                [--policy ntp] (adds a throughput column under that policy)
+                [--model gpt-480b] (model for the policy column)
   trace         --cluster llama3-16k-nvl8 --days 15 [--rate-x 1.0]
   reshard-plan  --k 12288 --n1 32 --n2 30
   power         --model gpt-480b --cluster paper-32k-nvl32 --tp 32 --pp 8
                 --dp 128
-  fleet         --strategy ntp|ntp-pw|dp-drop --days 15 --spares 0
-                [--replicas 16] [--rate-x 10]
+  fleet         --strategy dp-drop,ntp,ntp-pw,ckpt-restart,spare-mig
+                (comma-separated list for side-by-side comparison)
+                --days 15 [--spares N] (fixed minibatch with N spare domains)
+                [--replicas 16] [--rate-x 10] [--json] [--no-transitions]
 ";
 
 fn cmd_train(args: &mut Args) -> Result<()> {
@@ -159,27 +165,77 @@ fn cmd_availability(args: &mut Args) -> Result<()> {
     let cluster = presets::cluster(&args.str_or("cluster", "paper-32k-nvl32"))?;
     let tps = args.usize_list_or("tp", &[8, 16, 32, 64]);
     let samples = args.usize_or("samples", 200);
+    let model_name = args.str_or("model", "gpt-480b");
+    let policy = args.opt_str("policy").map(|n| registry::parse(&n)).transpose()?;
     args.finish()?;
-    let mut t = Table::new(&["failed%", "TP", "avail(median)", "avail(min)"]);
+    let headers: &[&str] = if policy.is_some() {
+        &["failed%", "TP", "avail(median)", "avail(min)", "tput(policy)"]
+    } else {
+        &["failed%", "TP", "avail(median)", "avail(min)"]
+    };
+    let mut t = Table::new(headers);
     let mut rng = Rng::new(1);
     for &tp in &tps {
         let topo = Topology::of(cluster.n_gpus / tp * tp, tp, tp.min(4));
+        // Policy throughput needs a strategy table for this TP degree:
+        // one pipeline stage per 4 domains, DP over the rest.
+        let per_replica = 4.min(topo.n_domains());
+        let table = policy
+            .map(|_| -> Result<(StrategyTable, ParallelConfig)> {
+                let cfg = ParallelConfig {
+                    tp,
+                    pp: per_replica,
+                    dp: topo.n_domains() / per_replica,
+                    microbatch: 1,
+                };
+                let w = WorkloadConfig {
+                    seq_len: 16_384,
+                    minibatch_tokens: 16 << 20,
+                    dtype: Dtype::BF16,
+                };
+                let sim = IterationModel::new(
+                    presets::model(&model_name)?,
+                    w,
+                    cluster.clone(),
+                    SimParams::default(),
+                );
+                Ok((StrategyTable::build(&sim, &cfg, &RackDesign::default()), cfg))
+            })
+            .transpose()?;
         for &frac in &[0.0005, 0.001, 0.002, 0.004] {
             let n_failed = (frac * topo.n_gpus as f64) as usize;
-            let mut avails: Vec<f64> = (0..samples)
-                .map(|_| {
-                    let failed =
-                        sample_failed_gpus(&topo, n_failed, BlastRadius::Single, &mut rng);
-                    scenario_from_failed(&topo, &failed).availability_domain_drop()
-                })
-                .collect();
+            let mut avails = Vec::with_capacity(samples);
+            let mut tput_sum = 0.0;
+            for _ in 0..samples {
+                let failed =
+                    sample_failed_gpus(&topo, n_failed, BlastRadius::Single, &mut rng);
+                let scenario = scenario_from_failed(&topo, &failed);
+                if let (Some(p), Some((table, cfg))) = (policy, table.as_ref()) {
+                    let ctx = PolicyCtx {
+                        table,
+                        domain_size: topo.domain_size,
+                        domains_per_replica: cfg.pp,
+                        packed: true,
+                        spares: None,
+                        n_gpus: topo.n_gpus,
+                        transition: None,
+                    };
+                    let resp = p.respond(&ctx, &scenario.domain_healthy);
+                    tput_sum += resp.throughput(table.full_local_batch);
+                }
+                avails.push(scenario.availability_domain_drop());
+            }
             avails.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            t.row(&[
+            let mut row = vec![
                 pct(frac),
                 format!("{tp}"),
                 f4(avails[samples / 2]),
                 f4(avails[0]),
-            ]);
+            ];
+            if policy.is_some() {
+                row.push(f4(tput_sum / samples as f64));
+            }
+            t.row(&row);
         }
     }
     t.print();
@@ -273,12 +329,16 @@ fn cmd_power(args: &mut Args) -> Result<()> {
 }
 
 fn cmd_fleet(args: &mut Args) -> Result<()> {
-    let strategy = FtStrategy::parse(&args.str_or("strategy", "ntp"))?;
+    let policies = registry::parse_list(&args.str_or("strategy", "ntp"))?;
     let days = args.f64_or("days", 15.0);
-    let spares = args.usize_or("spares", 0);
+    // `--spares N` switches to fixed-minibatch mode with N spare
+    // domains; omitting it runs the flexible-minibatch semantics.
+    let spares = args.opt_usize("spares");
     let n_replicas = args.usize_or("replicas", 16);
     let rate_x = args.f64_or("rate-x", 10.0);
     let seed = args.u64_or("seed", 5);
+    let json = args.flag("json");
+    let no_transitions = args.flag("no-transitions");
     args.finish()?;
 
     let model = presets::model("gpt-480b")?;
@@ -288,29 +348,57 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let sim = IterationModel::new(model, w, cluster, SimParams::default());
     let rack = RackDesign::default();
     let table = StrategyTable::build(&sim, &cfg, &rack);
-    let n_domains = n_replicas * cfg.pp + spares;
+    let n_domains = n_replicas * cfg.pp + spares.unwrap_or(0);
     let topo = Topology::of(n_domains * 32, 32, 4);
     let fmodel = FailureModel::llama3().scaled(rate_x);
     let mut rng = Rng::new(seed);
     let trace = Trace::generate(&topo, &fmodel, days * 24.0, &mut rng);
-    let fs = FleetSim {
-        topo: &topo,
-        table: &table,
-        domains_per_replica: cfg.pp,
-        strategy,
-        spares: if spares > 0 || strategy != FtStrategy::Ntp {
-            Some(SparePolicy { spare_domains: spares, min_tp: 28 })
-        } else {
-            None
-        },
-        packed: true,
-        blast: BlastRadius::Single,
-    };
-    let stats = fs.run(&trace, 3.0);
-    println!("strategy {}: ", strategy.name());
-    println!("  mean throughput:      {}", f4(stats.mean_throughput));
-    println!("  throughput per GPU:   {}", f4(stats.throughput_per_gpu));
-    println!("  paused fraction:      {}", pct(stats.paused_frac));
-    println!("  mean spares used:     {}", f2(stats.mean_spares_used));
+    let transition =
+        if no_transitions { None } else { Some(TransitionCosts::model(&sim, &cfg)) };
+
+    let mut out = Table::new(&[
+        "policy", "mean tput", "net tput", "tput/GPU", "paused", "downtime", "spares used",
+        "transitions",
+    ]);
+    let mut rep = JsonReport::new("fleet");
+    rep.scalar("days", days);
+    rep.scalar("rate_x", rate_x);
+    rep.scalar("replicas", n_replicas as f64);
+    rep.scalar("spares", spares.unwrap_or(0) as f64);
+    for policy in &policies {
+        let fs = FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            policy: *policy,
+            spares: spares.map(|s| SparePolicy { spare_domains: s, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+        };
+        let stats = fs.run(&trace, 3.0);
+        out.row(&[
+            policy.name().into(),
+            f4(stats.mean_throughput),
+            f4(stats.net_throughput()),
+            f4(stats.throughput_per_gpu),
+            pct(stats.paused_frac),
+            pct(stats.downtime_frac),
+            f2(stats.mean_spares_used),
+            format!("{}", stats.transitions),
+        ]);
+        let key = policy.name().to_ascii_lowercase().replace('-', "_");
+        rep.scalar(&format!("{key}_mean_tput"), stats.mean_throughput);
+        rep.scalar(&format!("{key}_net_tput"), stats.net_throughput());
+        rep.scalar(&format!("{key}_tput_per_gpu"), stats.throughput_per_gpu);
+        rep.scalar(&format!("{key}_paused_frac"), stats.paused_frac);
+        rep.scalar(&format!("{key}_downtime_frac"), stats.downtime_frac);
+        rep.scalar(&format!("{key}_transitions"), stats.transitions as f64);
+    }
+    if json {
+        println!("{}", rep.to_json().pretty());
+    } else {
+        out.print();
+    }
     Ok(())
 }

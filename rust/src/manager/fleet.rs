@@ -3,13 +3,15 @@
 //! example). A precomputed [`StrategyTable`] makes per-event evaluation
 //! O(#replicas) instead of re-running the iteration model.
 
-use super::packing::packed_replica_tp;
-use super::spares::{apply_spares, meets_minibatch, SparePolicy};
+use super::spares::SparePolicy;
 use crate::cluster::Topology;
 use crate::failure::{BlastRadius, FleetReplayer, Trace};
 use crate::parallel::ParallelConfig;
+use crate::policy::{FtPolicy, PolicyCtx, TransitionCosts};
 use crate::power::{min_boost_for, BoostDecision, RackDesign};
-use crate::sim::engine::{max_batch_within, min_supported_tp, FtStrategy};
+use crate::sim::engine::{
+    healthy_reshard_factor, max_batch_within, min_supported_tp, FtStrategy,
+};
 use crate::sim::IterationModel;
 
 /// Precomputed per-TP-degree responses for one (sim, cfg, strategy).
@@ -24,6 +26,10 @@ pub struct StrategyTable {
     pub batch: Vec<usize>,
     pub power: Vec<Option<f64>>,
     pub batch_pw: Vec<usize>,
+    /// Healthy-replica throughput factor in a nonuniform group —
+    /// [`healthy_reshard_factor`] (CopyPlan traffic over the scale-up
+    /// link) instead of the former hard-coded `0.995`.
+    pub reshard_overhead: f64,
 }
 
 impl StrategyTable {
@@ -55,7 +61,15 @@ impl StrategyTable {
                 }
             }
         }
-        StrategyTable { full_tp, full_local_batch: full_local, min_tp, batch, power, batch_pw }
+        StrategyTable {
+            full_tp,
+            full_local_batch: full_local,
+            min_tp,
+            batch,
+            power,
+            batch_pw,
+            reshard_overhead: healthy_reshard_factor(sim, cfg),
+        }
     }
 
     /// Local batch a replica at TP `tp` contributes under `strategy`
@@ -89,7 +103,7 @@ impl StrategyTable {
         let nonuniform = strategy != FtStrategy::DpDrop
             && replica_tp.iter().any(|&t| t < self.full_tp && t >= self.min_tp);
         if nonuniform {
-            frac * 0.995 // healthy-replica reshard overhead (§6.2)
+            frac * self.reshard_overhead // healthy-replica reshard overhead (§6.2)
         } else {
             frac
         }
@@ -99,7 +113,8 @@ impl StrategyTable {
 /// Time-integrated fleet statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct FleetStats {
-    /// Time-weighted mean relative throughput.
+    /// Time-weighted mean relative throughput (steady-state, i.e. not
+    /// including transition downtime — see [`FleetStats::net_throughput`]).
     pub mean_throughput: f64,
     /// Fraction of time the job was paused (fixed minibatch unmet).
     pub paused_frac: f64,
@@ -107,20 +122,48 @@ pub struct FleetStats {
     pub mean_spares_used: f64,
     /// Throughput normalized per *provisioned* GPU (incl. spares).
     pub throughput_per_gpu: f64,
+    /// Fraction of fleet GPU-time lost to policy reconfiguration
+    /// transitions. Exactly `0.0` when the sim runs without a
+    /// [`TransitionCosts`] model.
+    pub downtime_frac: f64,
+    /// Sampled health changes that triggered a policy transition.
+    pub transitions: usize,
 }
 
-/// Fleet simulator over a failure trace.
+impl FleetStats {
+    /// Mean throughput net of modeled transition downtime (first-order:
+    /// transitions produce zero useful work while they last).
+    pub fn net_throughput(&self) -> f64 {
+        (self.mean_throughput * (1.0 - self.downtime_frac)).max(0.0)
+    }
+
+    /// Per-provisioned-GPU throughput net of transition downtime.
+    pub fn net_throughput_per_gpu(&self) -> f64 {
+        (self.throughput_per_gpu * (1.0 - self.downtime_frac)).max(0.0)
+    }
+}
+
+/// Fleet simulator over a failure trace: drives any [`FtPolicy`]
+/// through the event-driven sweep and integrates steady-state
+/// throughput plus modeled reconfiguration downtime.
 pub struct FleetSim<'a> {
     pub topo: &'a Topology,
     pub table: &'a StrategyTable,
     pub domains_per_replica: usize,
-    pub strategy: FtStrategy,
+    /// Fault-tolerance policy under evaluation (legacy strategies via
+    /// [`FtStrategy::policy`], new ones via [`crate::policy::registry`]).
+    pub policy: &'a dyn FtPolicy,
     /// `None` ⇒ flexible minibatch (Fig. 6 semantics: reduced replicas
     /// just shrink the batch). `Some(policy)` ⇒ fixed minibatch with
     /// spares + pausing (Fig. 7 semantics).
     pub spares: Option<SparePolicy>,
     pub packed: bool,
     pub blast: BlastRadius,
+    /// `Some` ⇒ charge each policy's transition cost whenever the
+    /// sampled per-domain health changes; `None` ⇒ reconfigurations are
+    /// free (the pre-policy-layer model, and the setting under which
+    /// the legacy ports are bit-identical to the old `FtStrategy` paths).
+    pub transition: Option<TransitionCosts>,
 }
 
 impl<'a> FleetSim<'a> {
@@ -137,24 +180,30 @@ impl<'a> FleetSim<'a> {
     pub fn run(&self, trace: &Trace, step_hours: f64) -> FleetStats {
         let n_steps = (trace.horizon_hours / step_hours).ceil() as usize;
         let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
-        let mut tput_sum = 0.0;
-        let mut paused = 0usize;
-        let mut spares_sum = 0.0;
+        let mut acc = Accum::default();
         let mut last: Option<(u64, (f64, bool, usize))> = None;
+        let mut prev_counts: Vec<usize> = Vec::new();
         for step in 0..n_steps {
             let t = step as f64 * step_hours;
             let fleet = rep.advance(t);
             let out = match last {
                 Some((version, out)) if version == fleet.version() => out,
-                _ => self.evaluate(fleet.domain_healthy_counts()),
+                _ => {
+                    let counts = fleet.domain_healthy_counts();
+                    if step == 0 {
+                        prev_counts = counts.to_vec();
+                    } else if counts != &prev_counts[..] {
+                        acc.charge_transition(self, &prev_counts, counts);
+                        prev_counts.clear();
+                        prev_counts.extend_from_slice(counts);
+                    }
+                    self.evaluate(counts)
+                }
             };
             last = Some((fleet.version(), out));
-            let (tput, pause, used) = out;
-            tput_sum += tput;
-            paused += usize::from(pause);
-            spares_sum += used as f64;
+            acc.sample(out);
         }
-        self.integrate(n_steps, tput_sum, paused, spares_sum)
+        self.integrate(n_steps, step_hours, acc)
     }
 
     /// Reference implementation of [`FleetSim::run`]: rebuild the fleet
@@ -164,34 +213,59 @@ impl<'a> FleetSim<'a> {
     /// speedup.
     pub fn run_replay_per_step(&self, trace: &Trace, step_hours: f64) -> FleetStats {
         let n_steps = (trace.horizon_hours / step_hours).ceil() as usize;
-        let mut tput_sum = 0.0;
-        let mut paused = 0usize;
-        let mut spares_sum = 0.0;
+        let mut acc = Accum::default();
+        let mut prev_counts: Vec<usize> = Vec::new();
         for step in 0..n_steps {
             let t = step as f64 * step_hours;
             let fleet = trace.replay_to(self.topo, self.blast, t);
             let healthy = fleet.domain_healthy_counts();
-            let (tput, pause, used) = self.evaluate(healthy);
-            tput_sum += tput;
-            paused += usize::from(pause);
-            spares_sum += used as f64;
+            if step == 0 {
+                prev_counts = healthy.to_vec();
+            } else if healthy != &prev_counts[..] {
+                acc.charge_transition(self, &prev_counts, healthy);
+                prev_counts.clear();
+                prev_counts.extend_from_slice(healthy);
+            }
+            acc.sample(self.evaluate(healthy));
         }
-        self.integrate(n_steps, tput_sum, paused, spares_sum)
+        self.integrate(n_steps, step_hours, acc)
     }
 
-    fn integrate(&self, n_steps: usize, tput_sum: f64, paused: usize, spares_sum: f64) -> FleetStats {
+    fn integrate(&self, n_steps: usize, step_hours: f64, acc: Accum) -> FleetStats {
         let n = n_steps as f64;
         let spare_gpus = self
             .spares
             .map(|p| p.spare_domains * self.topo.domain_size)
             .unwrap_or(0);
         let job_gpus = self.topo.n_gpus - spare_gpus;
-        let mean_tput = tput_sum / n;
+        let mean_tput = acc.tput_sum / n;
+        let horizon_secs = n * step_hours * 3600.0;
+        let downtime_frac = if horizon_secs > 0.0 {
+            (acc.cost_gpu_secs / (self.topo.n_gpus as f64 * horizon_secs)).min(1.0)
+        } else {
+            0.0
+        };
         FleetStats {
             mean_throughput: mean_tput,
-            paused_frac: paused as f64 / n,
-            mean_spares_used: spares_sum / n,
+            paused_frac: acc.paused as f64 / n,
+            mean_spares_used: acc.spares_sum / n,
             throughput_per_gpu: mean_tput * job_gpus as f64 / self.topo.n_gpus as f64,
+            downtime_frac,
+            transitions: acc.transitions,
+        }
+    }
+
+    /// The policy context for one evaluation. `live_spares` is the
+    /// fixed-minibatch pool after removing failed spare domains.
+    fn ctx(&self, live_spares: Option<SparePolicy>) -> PolicyCtx<'_> {
+        PolicyCtx {
+            table: self.table,
+            domain_size: self.topo.domain_size,
+            domains_per_replica: self.domains_per_replica,
+            packed: self.packed,
+            spares: live_spares,
+            n_gpus: self.topo.n_gpus,
+            transition: self.transition,
         }
     }
 
@@ -199,15 +273,8 @@ impl<'a> FleetSim<'a> {
     pub fn evaluate(&self, domain_healthy: &[usize]) -> (f64, bool, usize) {
         match &self.spares {
             None => {
-                // Only the per-replica TP degrees matter here; skip
-                // building the full Assignment.
-                let replica_tp = packed_replica_tp(
-                    domain_healthy,
-                    self.topo.domain_size,
-                    self.domains_per_replica,
-                    self.packed,
-                );
-                (self.table.group_throughput(&replica_tp, self.strategy), false, 0)
+                let resp = self.policy.respond(&self.ctx(None), domain_healthy);
+                (resp.throughput(self.table.full_local_batch), resp.paused, resp.spares_used)
             }
             Some(policy) => {
                 // Job domains are the leading ones; spares at the tail.
@@ -218,41 +285,41 @@ impl<'a> FleetSim<'a> {
                     .iter()
                     .filter(|&&h| h == self.topo.domain_size)
                     .count();
-                let policy = SparePolicy { spare_domains: live_spares, ..*policy };
-                let o = apply_spares(
-                    job_healthy,
-                    self.topo.domain_size,
-                    self.domains_per_replica,
-                    &policy,
-                );
-                let boosted = self.strategy == FtStrategy::NtpPw;
-                let ok = match self.strategy {
-                    FtStrategy::DpDrop => {
-                        meets_minibatch(&o.assignment, self.topo.domain_size, false)
-                    }
-                    FtStrategy::Ntp => {
-                        // Fixed-minibatch NTP: the paper's Fig. 7 NTP
-                        // curve counts the minibatch as met while the
-                        // total batch shortfall from reduced replicas is
-                        // below one replica's worth (NTP "never
-                        // experiences a throughput drop larger than the
-                        // equivalent of dropping two DP replicas" with 2
-                        // spare replicas' worth of slack).
-                        let frac = self
-                            .table
-                            .group_minibatch_frac(&o.assignment.replica_tp, self.strategy);
-                        let shortfall = (1.0 - frac) * o.assignment.replica_tp.len() as f64;
-                        shortfall < 1.0
-                    }
-                    FtStrategy::NtpPw => meets_minibatch(&o.assignment, policy.min_tp, boosted),
-                };
-                if !ok {
-                    return (0.0, true, o.spares_used);
-                }
-                let tput = self.table.group_throughput(&o.assignment.replica_tp, self.strategy);
-                (tput, false, o.spares_used)
+                let live = SparePolicy { spare_domains: live_spares, ..*policy };
+                let resp = self.policy.respond(&self.ctx(Some(live)), job_healthy);
+                (resp.throughput(self.table.full_local_batch), resp.paused, resp.spares_used)
             }
         }
+    }
+}
+
+/// Shared integration state of the two sweep implementations, so the
+/// event-driven and per-step paths stay operation-for-operation
+/// identical (the bit-identity the equivalence tests assert).
+#[derive(Default)]
+struct Accum {
+    tput_sum: f64,
+    paused: usize,
+    spares_sum: f64,
+    transitions: usize,
+    cost_gpu_secs: f64,
+}
+
+impl Accum {
+    fn sample(&mut self, out: (f64, bool, usize)) {
+        let (tput, pause, used) = out;
+        self.tput_sum += tput;
+        self.paused += usize::from(pause);
+        self.spares_sum += used as f64;
+    }
+
+    /// Charge the policy's transition cost for a sampled health change
+    /// (events landing between two samples collapse into one charge —
+    /// both sweep paths sample on the same grid, so both see the same
+    /// transitions).
+    fn charge_transition(&mut self, fs: &FleetSim, prev: &[usize], next: &[usize]) {
+        self.transitions += 1;
+        self.cost_gpu_secs += fs.policy.transition_cost(&fs.ctx(fs.spares), prev, next);
     }
 }
 
@@ -297,6 +364,9 @@ mod tests {
                 assert_eq!(t.batch_pw[i], t.full_local_batch);
             }
         }
+        // modeled reshard overhead is sub-percent, bounded by the
+        // retired 0.995 constant
+        assert!((0.995..1.0).contains(&t.reshard_overhead), "{}", t.reshard_overhead);
     }
 
     #[test]
@@ -326,17 +396,19 @@ mod tests {
             topo: &topo,
             table: &table,
             domains_per_replica: cfg.pp,
-            strategy: FtStrategy::Ntp,
+            policy: FtStrategy::Ntp.policy(),
             spares: None,
             packed: true,
             blast: BlastRadius::Single,
+            transition: None,
         };
         let stats = fs.run(&trace, 6.0);
         assert!(stats.mean_throughput > 0.5 && stats.mean_throughput <= 1.0);
         assert_eq!(stats.paused_frac, 0.0);
+        assert_eq!(stats.downtime_frac, 0.0);
 
         // DP-DROP must do worse on the same trace.
-        let fs_drop = FleetSim { strategy: FtStrategy::DpDrop, ..fs };
+        let fs_drop = FleetSim { policy: FtStrategy::DpDrop.policy(), ..fs };
         let stats_drop = fs_drop.run(&trace, 6.0);
         assert!(stats_drop.mean_throughput < stats.mean_throughput);
     }
@@ -355,10 +427,11 @@ mod tests {
                 topo: &topo,
                 table: &table,
                 domains_per_replica: cfg.pp,
-                strategy,
+                policy: strategy.policy(),
                 spares: None,
                 packed: true,
                 blast: BlastRadius::Single,
+                transition: None,
             };
             assert_eq!(fs.run(&trace, 2.0), fs.run_replay_per_step(&trace, 2.0));
         }
@@ -366,12 +439,23 @@ mod tests {
             topo: &topo,
             table: &table,
             domains_per_replica: cfg.pp,
-            strategy: FtStrategy::Ntp,
+            policy: FtStrategy::Ntp.policy(),
             spares: Some(SparePolicy { spare_domains: 4, min_tp: 28 }),
             packed: true,
             blast: BlastRadius::Node,
+            transition: None,
         };
         assert_eq!(fs.run(&trace, 2.0), fs.run_replay_per_step(&trace, 2.0));
+        // ... and with transition costs switched on, both sweep paths
+        // must still agree exactly (downtime included).
+        let fs_t = FleetSim {
+            transition: Some(crate::policy::TransitionCosts::model(&sim, &cfg)),
+            ..fs
+        };
+        let a = fs_t.run(&trace, 2.0);
+        let b = fs_t.run_replay_per_step(&trace, 2.0);
+        assert_eq!(a, b);
+        assert!(a.transitions > 0 && a.downtime_frac > 0.0);
     }
 
     #[test]
@@ -390,10 +474,11 @@ mod tests {
             topo: &topo,
             table: &table,
             domains_per_replica: 4,
-            strategy: FtStrategy::Ntp,
+            policy: FtStrategy::Ntp.policy(),
             spares: None,
             packed: true,
             blast: BlastRadius::Single,
+            transition: None,
         };
         let unpacked = FleetSim { packed: false, ..packed };
         let (tp_packed, _, _) = packed.evaluate(&healthy);

@@ -89,6 +89,37 @@ impl CopyPlan {
         CopyPlan { k: map.k, n1: map.n1, n2: map.n2, segments, comp_units, sync_units }
     }
 
+    /// Units that actually cross the fabric during pre-sync resharding
+    /// (comp shard != sync shard) — the traffic the fault-tolerance
+    /// policy layer charges for reconfiguration and the healthy-replica
+    /// overhead model prices per iteration. Equals
+    /// [`super::reshard::ReshardPlan::total_bytes`] at `unit_bytes = 1`.
+    pub fn moved_units(&self) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| s.comp_shard != s.sync_shard)
+            .map(|s| s.len)
+            .sum()
+    }
+
+    /// Busiest-shard reshard traffic in units: max over the send side
+    /// (per comp shard) and the receive side (per sync shard) of units
+    /// that cross the fabric. Equals
+    /// [`super::reshard::ReshardPlan::max_bytes_per_gpu`] at
+    /// `unit_bytes = 1` — the quantity that bounds reshard time on a
+    /// full-bisection scale-up link.
+    pub fn max_moved_units_per_shard(&self) -> usize {
+        let mut sent = vec![0usize; self.n1];
+        let mut recv = vec![0usize; self.n2];
+        for s in &self.segments {
+            if s.comp_shard != s.sync_shard {
+                sent[s.comp_shard] += s.len;
+                recv[s.sync_shard] += s.len;
+            }
+        }
+        sent.iter().chain(recv.iter()).copied().max().unwrap_or(0)
+    }
+
     /// Coalesced [`scatter_comp`].
     pub fn scatter_comp(&self, unit_len: usize, full: &[f32]) -> Vec<Vec<f32>> {
         assert_eq!(full.len(), self.k * unit_len);
@@ -381,6 +412,26 @@ mod tests {
             assert_eq!(plan.comp_to_sync(unit_len, &comp), sync);
             assert_eq!(plan.sync_to_comp(unit_len, &sync), comp);
         }
+    }
+
+    #[test]
+    fn copy_plan_traffic_matches_reshard_plan() {
+        use crate::ntp::reshard::ReshardPlan;
+        for &(k, n1, n2) in &[(37usize, 8usize, 5usize), (100, 8, 6), (64, 8, 8), (81_920, 32, 28)] {
+            let map = ShardMap::build(k, n1, n2);
+            let copy = CopyPlan::build(&map);
+            let plan = ReshardPlan::from_map(&map);
+            assert_eq!(copy.moved_units(), plan.total_bytes(1), "k={k} n1={n1} n2={n2}");
+            assert_eq!(
+                copy.max_moved_units_per_shard(),
+                plan.max_bytes_per_gpu(1),
+                "k={k} n1={n1} n2={n2}"
+            );
+        }
+        // identity mapping moves nothing
+        let id = CopyPlan::build(&ShardMap::build(64, 8, 8));
+        assert_eq!(id.moved_units(), 0);
+        assert_eq!(id.max_moved_units_per_shard(), 0);
     }
 
     #[test]

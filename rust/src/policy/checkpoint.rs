@@ -1,0 +1,74 @@
+//! Checkpoint–restart baseline (fleet-scale ByteDance-style operation).
+//!
+//! The classical response to a GPU failure: stop the whole job, roll
+//! back to the last checkpoint, and restart on the surviving hardware
+//! (spares substituted wholesale when available, otherwise the damaged
+//! replicas sit out — DP-drop capacity). Steady-state throughput is
+//! therefore the DP-drop response; what distinguishes the policy is the
+//! *transition* bill: every fleet-health change (failure **or**
+//! recovery rejoin) costs a full-job restart, and unplanned failures
+//! additionally lose half a checkpoint interval of work on average.
+
+use super::{degraded_domains, legacy, FtPolicy, PolicyCtx, PolicyResponse};
+use crate::manager::packing::packed_replica_tp;
+use crate::manager::spares::apply_spares;
+use crate::sim::engine::FtStrategy;
+
+/// Unit policy: all cost parameters come from
+/// [`super::TransitionCosts`] in the context.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CheckpointRestart;
+
+pub static CKPT_RESTART: CheckpointRestart = CheckpointRestart;
+
+impl FtPolicy for CheckpointRestart {
+    fn name(&self) -> &'static str {
+        "CKPT-RESTART"
+    }
+
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
+        let (replica_tp, spares_used) = match ctx.spares {
+            Some(pool) => {
+                let o = apply_spares(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    &pool,
+                );
+                (o.assignment.replica_tp, o.spares_used)
+            }
+            None => (
+                packed_replica_tp(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    ctx.packed,
+                ),
+                0,
+            ),
+        };
+        // After the restart, replicas containing failed GPUs sit out
+        // (uniform TP only); fixed minibatch pauses unless every
+        // replica came back at full TP.
+        let paused =
+            ctx.spares.is_some() && replica_tp.iter().any(|&tp| tp < ctx.domain_size);
+        PolicyResponse {
+            replicas: legacy::decisions(ctx.table, &replica_tp, FtStrategy::DpDrop),
+            paused,
+            spares_used,
+            overhead: 1.0,
+        }
+    }
+
+    fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        let Some(t) = ctx.transition else { return 0.0 };
+        // Any health change restarts the whole job; an unplanned
+        // failure also rolls back to the last checkpoint.
+        let rollback = if degraded_domains(prev, next) > 0 {
+            0.5 * t.checkpoint_interval_secs
+        } else {
+            0.0
+        };
+        ctx.n_gpus as f64 * (t.restart_secs + rollback)
+    }
+}

@@ -1,0 +1,152 @@
+//! Ports of the paper's three strategies onto the policy layer.
+//!
+//! Each port replays the exact decision sequence of the pre-policy
+//! `FleetSim::evaluate` / `StrategyTable` code (same calls, same
+//! floating-point operation order), so with transition costs disabled
+//! the integrated `FleetStats` are bit-identical to the legacy paths —
+//! asserted by `rust/tests/policy_conformance.rs`.
+
+use super::{
+    affected_gpus, changed_domains, FtPolicy, PolicyCtx, PolicyResponse, ReplicaDecision,
+};
+use crate::manager::packing::packed_replica_tp;
+use crate::manager::spares::{apply_spares, meets_minibatch};
+use crate::sim::engine::FtStrategy;
+
+/// One legacy strategy as a policy.
+#[derive(Clone, Copy, Debug)]
+pub struct LegacyPolicy {
+    pub strategy: FtStrategy,
+}
+
+pub static DP_DROP: LegacyPolicy = LegacyPolicy { strategy: FtStrategy::DpDrop };
+pub static NTP: LegacyPolicy = LegacyPolicy { strategy: FtStrategy::Ntp };
+pub static NTP_PW: LegacyPolicy = LegacyPolicy { strategy: FtStrategy::NtpPw };
+
+impl FtStrategy {
+    /// The policy-layer port of this strategy (zero transition cost
+    /// unless the sim supplies a `TransitionCosts` model).
+    pub fn policy(self) -> &'static dyn FtPolicy {
+        match self {
+            FtStrategy::DpDrop => &DP_DROP,
+            FtStrategy::Ntp => &NTP,
+            FtStrategy::NtpPw => &NTP_PW,
+        }
+    }
+}
+
+/// Per-replica decisions for a TP-degree vector under a legacy
+/// strategy, batches exactly as `StrategyTable::replica_batch`.
+pub fn decisions(
+    table: &crate::manager::StrategyTable,
+    replica_tp: &[usize],
+    strategy: FtStrategy,
+) -> Vec<ReplicaDecision> {
+    replica_tp
+        .iter()
+        .map(|&tp| {
+            let batch = table.replica_batch(tp, strategy);
+            let power = if batch == 0 {
+                0.0
+            } else if strategy == FtStrategy::NtpPw && tp < table.full_tp {
+                table.power[tp - table.min_tp].unwrap_or(1.0)
+            } else {
+                1.0
+            };
+            ReplicaDecision { tp, batch, power }
+        })
+        .collect()
+}
+
+/// Group overhead factor exactly as `StrategyTable::group_throughput`
+/// applies it: the modeled healthy-replica reshard factor when the
+/// group is nonuniform, else exactly `1.0`.
+pub fn overhead_for(
+    table: &crate::manager::StrategyTable,
+    replica_tp: &[usize],
+    strategy: FtStrategy,
+) -> f64 {
+    let nonuniform = strategy != FtStrategy::DpDrop
+        && replica_tp.iter().any(|&t| t < table.full_tp && t >= table.min_tp);
+    if nonuniform {
+        table.reshard_overhead
+    } else {
+        1.0
+    }
+}
+
+impl FtPolicy for LegacyPolicy {
+    fn name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
+        match ctx.spares {
+            None => {
+                // Flexible minibatch (Fig. 6 semantics).
+                let replica_tp = packed_replica_tp(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    ctx.packed,
+                );
+                let overhead = overhead_for(ctx.table, &replica_tp, self.strategy);
+                PolicyResponse {
+                    replicas: decisions(ctx.table, &replica_tp, self.strategy),
+                    paused: false,
+                    spares_used: 0,
+                    overhead,
+                }
+            }
+            Some(policy) => {
+                // Fixed minibatch with spares + pausing (Fig. 7
+                // semantics) — the pre-policy `FleetSim::evaluate` arm.
+                let o = apply_spares(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    &policy,
+                );
+                let boosted = self.strategy == FtStrategy::NtpPw;
+                let ok = match self.strategy {
+                    FtStrategy::DpDrop => {
+                        meets_minibatch(&o.assignment, ctx.domain_size, false)
+                    }
+                    FtStrategy::Ntp => {
+                        // Fig. 7 NTP curve: the minibatch counts as met
+                        // while the shortfall from reduced replicas stays
+                        // below one replica's worth.
+                        let frac = ctx
+                            .table
+                            .group_minibatch_frac(&o.assignment.replica_tp, self.strategy);
+                        let shortfall = (1.0 - frac) * o.assignment.replica_tp.len() as f64;
+                        shortfall < 1.0
+                    }
+                    FtStrategy::NtpPw => meets_minibatch(&o.assignment, policy.min_tp, boosted),
+                };
+                let overhead =
+                    overhead_for(ctx.table, &o.assignment.replica_tp, self.strategy);
+                PolicyResponse {
+                    replicas: decisions(ctx.table, &o.assignment.replica_tp, self.strategy),
+                    paused: !ok,
+                    spares_used: o.spares_used,
+                    overhead,
+                }
+            }
+        }
+    }
+
+    fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        let Some(t) = ctx.transition else { return 0.0 };
+        match self.strategy {
+            // Dropping / re-adding a DP replica repacks process-group
+            // ranks: a full-job restart.
+            FtStrategy::DpDrop => ctx.n_gpus as f64 * t.restart_secs,
+            // NTP reconfigures live: only replicas containing changed
+            // domains reshard their TP layout.
+            FtStrategy::Ntp | FtStrategy::NtpPw => {
+                affected_gpus(ctx, changed_domains(prev, next)) as f64 * t.reshard_secs
+            }
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Pluggable fault-tolerance policy layer.
+//!
+//! The paper's frozen three-way comparison (DP-drop vs NTP vs NTP-PW)
+//! generalizes here into a first-class abstraction: an [`FtPolicy`]
+//! decides, per fleet-health snapshot, what every DP replica does
+//! (TP degree, local batch, power) and what a *reconfiguration costs*
+//! (GPU-seconds of transition downtime) whenever the fleet's health
+//! changes. [`crate::manager::FleetSim`] drives any policy through the
+//! event-driven trace sweep and integrates both steady-state throughput
+//! and transition downtime into [`crate::manager::FleetStats`].
+//!
+//! Ports and new policies:
+//!
+//! * [`legacy`] — the paper's trio as zero-refactor-cost ports; with no
+//!   [`TransitionCosts`] in the context they are bit-identical to the
+//!   pre-policy-layer `FtStrategy` code paths
+//!   (`rust/tests/policy_conformance.rs`).
+//! * [`checkpoint`] — checkpoint–restart baseline (ByteDance-style
+//!   fleet operation): every health change stops the whole job, rolls
+//!   back to the last checkpoint and restarts on the surviving
+//!   hardware.
+//! * [`spare_migration`] — SPARe-inspired migrate-then-shrink: spare
+//!   domains are migrated into damaged slots and damage is stacked
+//!   (reordered) into the fewest replicas *before* any TP shrink;
+//!   residual shortfall is redistributed over survivors instead of
+//!   pausing.
+//!
+//! [`registry`] maps CLI names to policy instances; every registered
+//! policy is exercised by the conformance suite.
+
+pub mod checkpoint;
+pub mod legacy;
+pub mod registry;
+pub mod spare_migration;
+
+pub use checkpoint::CheckpointRestart;
+pub use spare_migration::SpareMigration;
+
+use crate::manager::{SparePolicy, StrategyTable};
+use crate::parallel::ParallelConfig;
+use crate::sim::engine::min_supported_tp;
+use crate::sim::IterationModel;
+
+/// Everything a policy may consult when responding to a snapshot.
+/// Cheap to build per evaluation (all borrows / `Copy` data).
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyCtx<'a> {
+    /// Precomputed per-TP-degree batch/power responses.
+    pub table: &'a StrategyTable,
+    /// Scale-up domain size (full TP degree).
+    pub domain_size: usize,
+    /// Domains per DP replica (= pipeline stages).
+    pub domains_per_replica: usize,
+    /// Whether the resource manager repacks damaged domains together.
+    pub packed: bool,
+    /// `Some` ⇒ fixed-minibatch mode with this (live-spare-adjusted)
+    /// pool; `None` ⇒ flexible minibatch.
+    pub spares: Option<SparePolicy>,
+    /// Total provisioned GPUs (job + spares) — the denominator for
+    /// transition-cost accounting.
+    pub n_gpus: usize,
+    /// `None` ⇒ reconfigurations are free (the pre-policy-layer model).
+    pub transition: Option<TransitionCosts>,
+}
+
+/// What one replica does under the policy's response.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicaDecision {
+    /// Effective TP degree (0 = replica dropped).
+    pub tp: usize,
+    /// Local batch contributed per iteration (samples).
+    pub batch: usize,
+    /// Power fraction (1.0 = nominal, 0.0 = dropped).
+    pub power: f64,
+}
+
+/// A policy's full response to one fleet-health snapshot.
+#[derive(Clone, Debug)]
+pub struct PolicyResponse {
+    pub replicas: Vec<ReplicaDecision>,
+    /// Fixed-minibatch pause: the group cannot make progress.
+    pub paused: bool,
+    pub spares_used: usize,
+    /// Multiplicative group-rate factor (healthy-replica reshard
+    /// overhead and kin); exactly `1.0` when nothing is nonuniform.
+    pub overhead: f64,
+}
+
+impl PolicyResponse {
+    /// Group relative throughput in `[0, 1]` (0 when paused).
+    pub fn throughput(&self, full_local_batch: usize) -> f64 {
+        if self.paused {
+            return 0.0;
+        }
+        let processed: usize = self.replicas.iter().map(|r| r.batch).sum();
+        let capacity = full_local_batch * self.replicas.len();
+        processed as f64 / capacity as f64 * self.overhead
+    }
+}
+
+/// A fault-tolerance policy: per-snapshot replica decisions plus the
+/// modeled cost of reconfiguring when the fleet's health changes.
+///
+/// Object-safe; [`crate::manager::FleetSim`] holds `&dyn FtPolicy`.
+pub trait FtPolicy: Send + Sync {
+    /// Display / CLI name.
+    fn name(&self) -> &'static str;
+
+    /// Respond to one snapshot. `job_healthy` is the per-domain healthy
+    /// count of the *job* domains (spare-pool tail already split off by
+    /// the caller; the live pool size is in `ctx.spares`).
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse;
+
+    /// GPU-seconds of downtime charged when the fleet's per-domain
+    /// health changes from `prev` to `next` (full fleet, spares
+    /// included). Must return `0.0` when `ctx.transition` is `None` —
+    /// that is what makes the legacy ports bit-identical to the
+    /// pre-policy-layer paths.
+    fn transition_cost(&self, _ctx: &PolicyCtx, _prev: &[usize], _next: &[usize]) -> f64 {
+        0.0
+    }
+}
+
+/// Modeled reconfiguration-cost inputs shared by all policies.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TransitionCosts {
+    /// Full-job restart latency (scheduler, process groups, checkpoint
+    /// load), seconds.
+    pub restart_secs: f64,
+    /// Checkpoint interval, seconds; an unplanned failure rolls back
+    /// half of it on average.
+    pub checkpoint_interval_secs: f64,
+    /// One NTP reshard reconfiguration of an affected replica, seconds
+    /// (CopyPlan traffic over the scale-up link, see
+    /// [`reshard_transition_secs`]).
+    pub reshard_secs: f64,
+    /// Streaming a replica shard's weights onto a migrated-in spare
+    /// domain, seconds.
+    pub spare_load_secs: f64,
+}
+
+impl TransitionCosts {
+    /// Defaults with the reshard term derived from the iteration
+    /// model's `CopyPlan` for the deepest supported reduction.
+    pub fn model(sim: &IterationModel, cfg: &ParallelConfig) -> TransitionCosts {
+        TransitionCosts {
+            restart_secs: 900.0,
+            checkpoint_interval_secs: 3600.0,
+            reshard_secs: reshard_transition_secs(sim, cfg),
+            spare_load_secs: 300.0,
+        }
+    }
+}
+
+/// Wall-clock seconds one replica needs to reconfigure its TP layout:
+/// the optimizer state behind every offloaded unit (weights, fp32
+/// master copy, two AdamW moments ≈ 6× the bf16 weight bytes) moves
+/// over the scale-up link, bounded by the busiest GPU of the
+/// [`crate::ntp::CopyPlan`] for the deepest supported reduction.
+pub fn reshard_transition_secs(sim: &IterationModel, cfg: &ParallelConfig) -> f64 {
+    let n2 = min_supported_tp(cfg.tp);
+    if n2 >= cfg.tp {
+        return 0.0;
+    }
+    let info = sim.plan_cache().get(sim.model.ffn, cfg.tp, n2);
+    let weight_unit_bytes = 2 * sim.model.hidden * 2;
+    let state_bytes_per_unit = 6 * weight_unit_bytes;
+    let bytes = (info.copy.max_moved_units_per_shard() * state_bytes_per_unit) as f64
+        * sim.model.layers as f64
+        / cfg.pp as f64;
+    bytes / (sim.cluster.gpu.nvlink_gbs * 1e9)
+}
+
+/// GPUs touched when `changed_domains` domains change health: every
+/// replica containing a changed domain re-plans, so charge whole
+/// replicas, capped at the fleet.
+pub(crate) fn affected_gpus(ctx: &PolicyCtx, changed_domains: usize) -> usize {
+    (changed_domains * ctx.domains_per_replica * ctx.domain_size).min(ctx.n_gpus)
+}
+
+/// Count of domains whose health differs between two snapshots.
+pub(crate) fn changed_domains(prev: &[usize], next: &[usize]) -> usize {
+    prev.iter().zip(next).filter(|(a, b)| a != b).count()
+}
+
+/// Count of domains that got *worse* (a new failure landed).
+pub(crate) fn degraded_domains(prev: &[usize], next: &[usize]) -> usize {
+    prev.iter().zip(next).filter(|(a, b)| b < a).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Dtype, WorkloadConfig};
+    use crate::sim::SimParams;
+
+    #[test]
+    fn reshard_transition_secs_is_small_but_positive() {
+        let sim = IterationModel::new(
+            presets::model("gpt-480b").unwrap(),
+            WorkloadConfig {
+                seq_len: 16_384,
+                minibatch_tokens: 16 << 20,
+                dtype: Dtype::BF16,
+            },
+            presets::cluster("paper-32k-nvl32").unwrap(),
+            SimParams::default(),
+        );
+        let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
+        let t = reshard_transition_secs(&sim, &cfg);
+        // moving ~GBs of optimizer state over NVLink: sub-second, not zero
+        assert!(t > 0.0 && t < 60.0, "reshard transition {t}s");
+        // nothing to reshard at TP1
+        let cfg1 = ParallelConfig { tp: 1, pp: 8, dp: 128, microbatch: 1 };
+        assert_eq!(reshard_transition_secs(&sim, &cfg1), 0.0);
+    }
+
+    #[test]
+    fn snapshot_helpers_count_changes() {
+        let prev = [32usize, 31, 32, 30];
+        let next = [32usize, 32, 31, 30];
+        assert_eq!(changed_domains(&prev, &next), 2);
+        assert_eq!(degraded_domains(&prev, &next), 1);
+        assert_eq!(changed_domains(&prev, &prev), 0);
+    }
+}

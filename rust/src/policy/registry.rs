@@ -1,0 +1,76 @@
+//! Name → policy registry: the single place new fault-tolerance
+//! policies are plugged in. CLI subcommands, benches and the
+//! conformance suite all enumerate or parse through here.
+
+use super::checkpoint::CKPT_RESTART;
+use super::legacy::{DP_DROP, NTP, NTP_PW};
+use super::spare_migration::SPARE_MIGRATION;
+use super::FtPolicy;
+
+/// Every registered policy with its default parameters (the
+/// conformance suite runs against exactly this list).
+pub fn all() -> [&'static dyn FtPolicy; 5] {
+    [&DP_DROP, &NTP, &NTP_PW, &CKPT_RESTART, &SPARE_MIGRATION]
+}
+
+/// Registered CLI names (canonical spellings).
+pub fn names() -> Vec<&'static str> {
+    all().iter().map(|p| p.name()).collect()
+}
+
+/// Parse a CLI name (accepts the legacy `FtStrategy` spellings plus
+/// the new policies' aliases).
+pub fn parse(name: &str) -> anyhow::Result<&'static dyn FtPolicy> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "dp-drop" | "dpdrop" | "drop" => &DP_DROP,
+        "ntp" => &NTP,
+        "ntp-pw" | "ntppw" | "pw" => &NTP_PW,
+        "ckpt-restart" | "ckpt" | "checkpoint" | "checkpoint-restart" => &CKPT_RESTART,
+        "spare-mig" | "spare-migration" | "stacked" => &SPARE_MIGRATION,
+        other => anyhow::bail!(
+            "unknown policy '{other}' (known: dp-drop, ntp, ntp-pw, ckpt-restart, spare-mig)"
+        ),
+    })
+}
+
+/// Parse a comma-separated policy list (the `fleet --strategy` syntax).
+pub fn parse_list(list: &str) -> anyhow::Result<Vec<&'static dyn FtPolicy>> {
+    list.split(',').map(|s| parse(s.trim())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_parse_back() {
+        for p in all() {
+            let again = parse(p.name()).unwrap();
+            assert_eq!(again.name(), p.name());
+        }
+    }
+
+    #[test]
+    fn aliases_and_lists() {
+        assert_eq!(parse("drop").unwrap().name(), "DP-DROP");
+        assert_eq!(parse("checkpoint").unwrap().name(), "CKPT-RESTART");
+        assert_eq!(parse("stacked").unwrap().name(), "SPARE-MIG");
+        let l = parse_list("ntp, ntp-pw,ckpt-restart").unwrap();
+        assert_eq!(
+            l.iter().map(|p| p.name()).collect::<Vec<_>>(),
+            vec!["NTP", "NTP-PW", "CKPT-RESTART"]
+        );
+        assert!(parse("nope").is_err());
+        assert!(parse_list("ntp,nope").is_err());
+    }
+
+    #[test]
+    fn registry_is_five_distinct_policies() {
+        let names = names();
+        assert_eq!(names.len(), 5);
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 5);
+    }
+}

@@ -1,0 +1,73 @@
+//! SPARe-inspired spare-migration / stacked policy.
+//!
+//! Ordering matters: the policy first *migrates* spare domains into the
+//! most-damaged slots and *reorders* (stacks) the remaining damage into
+//! the fewest replicas, and only then shrinks TP on the replicas still
+//! carrying failures. Residual batch shortfall is redistributed over
+//! the surviving replicas via gradient accumulation, so a
+//! fixed-minibatch job keeps its global batch (at stretched iteration
+//! time) instead of pausing — it only pauses when surviving capacity
+//! falls below [`SpareMigration::min_capacity_frac`].
+
+use super::{
+    affected_gpus, changed_domains, degraded_domains, legacy, FtPolicy, PolicyCtx,
+    PolicyResponse,
+};
+use crate::manager::packing::packed_replica_tp;
+use crate::manager::spares::apply_spares;
+use crate::sim::engine::FtStrategy;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SpareMigration {
+    /// Below this surviving-capacity fraction the redistribution stops
+    /// making progress and the job pauses (fixed-minibatch mode).
+    pub min_capacity_frac: f64,
+}
+
+pub static SPARE_MIGRATION: SpareMigration = SpareMigration { min_capacity_frac: 0.5 };
+
+impl FtPolicy for SpareMigration {
+    fn name(&self) -> &'static str {
+        "SPARE-MIG"
+    }
+
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
+        // 1) Migrate spares into the worst domains first.
+        let (healthy, spares_used) = match ctx.spares {
+            Some(pool) => {
+                let o = apply_spares(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    &pool,
+                );
+                (o.effective_healthy, o.spares_used)
+            }
+            None => (job_healthy.to_vec(), 0),
+        };
+        // 2) Stack residual damage into the fewest replicas (always
+        //    reordered, regardless of ctx.packed), then NTP-shrink them.
+        let replica_tp =
+            packed_replica_tp(&healthy, ctx.domain_size, ctx.domains_per_replica, true);
+        let replicas = legacy::decisions(ctx.table, &replica_tp, FtStrategy::Ntp);
+        let overhead = legacy::overhead_for(ctx.table, &replica_tp, FtStrategy::Ntp);
+        // 3) Redistribute the shortfall: survivors absorb the missing
+        //    samples by gradient accumulation, so the fixed minibatch
+        //    stays met while enough capacity survives.
+        let processed: usize = replicas.iter().map(|r| r.batch).sum();
+        let capacity = ctx.table.full_local_batch * replicas.len().max(1);
+        let frac = processed as f64 / capacity as f64;
+        let paused = ctx.spares.is_some() && frac < self.min_capacity_frac;
+        PolicyResponse { replicas, paused, spares_used, overhead }
+    }
+
+    fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        let Some(t) = ctx.transition else { return 0.0 };
+        // Affected replicas reshard their TP layout; each freshly
+        // damaged domain additionally pulls a weight copy onto the
+        // spare domain migrated into its place.
+        let reshard = affected_gpus(ctx, changed_domains(prev, next)) as f64 * t.reshard_secs;
+        let migrations = degraded_domains(prev, next) * ctx.domain_size;
+        reshard + migrations as f64 * t.spare_load_secs
+    }
+}

@@ -63,6 +63,18 @@ impl Breakdown {
     }
 }
 
+/// Fig. 8 exposure law, shared by the reduced-replica overhead model
+/// ([`IterationModel::ntp_iteration`]) and the healthy-replica reshard
+/// factor ([`super::engine::healthy_reshard_factor`]): the pre-sync
+/// reshard overlaps the backward pass, and the exposed fraction grows
+/// linearly in the reshard:backward ratio. Keeping it in one place
+/// keeps the two overhead models consistent when the law is
+/// recalibrated.
+pub(crate) fn exposed_reshard_secs(t_reshard: f64, t_bwd: f64) -> f64 {
+    let ratio = (t_reshard / t_bwd.max(1e-12)).min(1.0);
+    t_reshard * (0.05 + 0.5 * ratio).min(1.0)
+}
+
 /// Memo of healthy-iteration breakdowns keyed on the parallel config
 /// (the only variable input once the model/workload/cluster triple is
 /// fixed). `evaluate_group`, `StrategyTable::build` and the planner all
@@ -259,10 +271,7 @@ impl IterationModel {
                 (info.max_units_per_gpu * unit_bytes) as f64 * self.model.layers as f64
                     / cfg_full.pp as f64;
             let t_reshard = reshard_bytes / (self.cluster.gpu.nvlink_gbs * 1e9);
-            // Fig. 8: exposure fraction ~ linear in comm:comp ratio.
-            let t_bwd_total = 2.0 / 3.0 * b.compute;
-            let ratio = (t_reshard / t_bwd_total.max(1e-12)).min(1.0);
-            let exposed_reshard = t_reshard * (0.05 + 0.5 * ratio).min(1.0);
+            let exposed_reshard = exposed_reshard_secs(t_reshard, 2.0 / 3.0 * b.compute);
 
             // allreduce volume increase on sync GPUs: n_full / n_reduced
             let grad_bytes = self.model.params() as f64

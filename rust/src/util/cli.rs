@@ -61,14 +61,18 @@ impl Args {
         self.opt_str(name).unwrap_or_else(|| default.to_string())
     }
 
+    /// `Some(parsed)` when the option is present, `None` when absent —
+    /// for flags whose *presence* changes behavior (e.g. `fleet
+    /// --spares N` opting into fixed-minibatch mode).
+    pub fn opt_usize(&mut self, name: &str) -> Option<usize> {
+        self.opt_str(name).map(|v| {
+            v.parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+        })
+    }
+
     pub fn usize_or(&mut self, name: &str, default: usize) -> usize {
-        self.opt_str(name)
-            .map(|v| {
-                v.parse().unwrap_or_else(|_| {
-                    panic!("--{name} expects an integer, got '{v}'")
-                })
-            })
-            .unwrap_or(default)
+        self.opt_usize(name).unwrap_or(default)
     }
 
     pub fn u64_or(&mut self, name: &str, default: u64) -> u64 {
@@ -162,6 +166,9 @@ mod tests {
         assert_eq!(a.usize_or("steps", 7), 7);
         assert_eq!(a.str_or("name", "d"), "d");
         assert_eq!(a.usize_list_or("l", &[1, 2]), vec![1, 2]);
+        assert_eq!(a.opt_usize("spares"), None);
+        let mut b = parse("x --spares 0");
+        assert_eq!(b.opt_usize("spares"), Some(0));
     }
 
     #[test]

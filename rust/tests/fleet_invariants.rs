@@ -136,15 +136,16 @@ fn fixed_minibatch_needs_fewer_spares_with_ntp_pw() {
     let trace = Trace::generate(&topo, &model, 24.0 * 10.0, &mut rng);
     let policy = SparePolicy { spare_domains: spares, min_tp: 28 };
 
-    let run = |strategy| {
+    let run = |strategy: FtStrategy| {
         let fs = FleetSim {
             topo: &topo,
             table: &table,
             domains_per_replica: cfg.pp,
-            strategy,
+            policy: strategy.policy(),
             spares: Some(policy),
             packed: true,
             blast: BlastRadius::Single,
+            transition: None,
         };
         fs.run(&trace, 6.0)
     };

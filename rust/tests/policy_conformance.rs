@@ -1,0 +1,288 @@
+//! Policy-layer conformance suite.
+//!
+//! * The three legacy ports are **bit-identical** to the pre-refactor
+//!   `FtStrategy` evaluation paths (a verbatim copy of the old
+//!   `FleetSim::evaluate` is kept below as the oracle) when transition
+//!   costs are disabled.
+//! * Every registered policy keeps `throughput_frac` in `[0, 1]`,
+//!   respects the spare pool, and charges zero transition cost without
+//!   a `TransitionCosts` model.
+//! * `StrategyTable` invariants: batch nondecreasing in TP,
+//!   `batch_pw >= batch`, and the modeled reshard overhead bounded by
+//!   the retired `0.995` constant.
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::BlastRadius;
+use ntp::manager::packing::pack_domains;
+use ntp::manager::spares::{apply_spares, meets_minibatch};
+use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, PolicyCtx, TransitionCosts};
+use ntp::power::RackDesign;
+use ntp::sim::engine::healthy_reshard_factor;
+use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::prng::Rng;
+
+const DOMAIN_SIZE: usize = 32;
+const PER_REPLICA: usize = 4;
+const JOB_DOMAINS: usize = 24;
+const SPARE_DOMAINS: usize = 6;
+
+fn setup() -> (IterationModel, ParallelConfig, StrategyTable) {
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 2 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: 32, pp: PER_REPLICA, dp: 16, microbatch: 1 };
+    let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    (sim, cfg, table)
+}
+
+/// Random per-domain healthy counts: mostly full, some partially or
+/// fully failed (including below-min-TP damage).
+fn random_healthy(rng: &mut Rng, n: usize) -> Vec<usize> {
+    (0..n)
+        .map(|_| {
+            if rng.chance(0.35) {
+                DOMAIN_SIZE - 1 - rng.index(8) // 23..=31: spans min_tp
+            } else if rng.chance(0.05) {
+                0
+            } else {
+                DOMAIN_SIZE
+            }
+        })
+        .collect()
+}
+
+/// Copy of the pre-policy-layer `FleetSim::evaluate` — the oracle the
+/// legacy ports must reproduce bit-for-bit. One deliberate difference
+/// for independence: the flexible arm goes through the `pack_domains`
+/// reference implementation rather than the `packed_replica_tp` fast
+/// path the live code uses (they are equivalence-tested against each
+/// other in `manager::packing`), so a regression in the fast path
+/// cannot cancel out of this comparison.
+fn pre_refactor_evaluate(
+    table: &StrategyTable,
+    domain_size: usize,
+    domains_per_replica: usize,
+    packed: bool,
+    strategy: FtStrategy,
+    spares: Option<SparePolicy>,
+    domain_healthy: &[usize],
+) -> (f64, bool, usize) {
+    match &spares {
+        None => {
+            let replica_tp =
+                pack_domains(domain_healthy, domain_size, domains_per_replica, packed)
+                    .replica_tp;
+            (table.group_throughput(&replica_tp, strategy), false, 0)
+        }
+        Some(policy) => {
+            let n_job = domain_healthy.len() - policy.spare_domains;
+            let job_healthy = &domain_healthy[..n_job];
+            let live_spares =
+                domain_healthy[n_job..].iter().filter(|&&h| h == domain_size).count();
+            let policy = SparePolicy { spare_domains: live_spares, ..*policy };
+            let o = apply_spares(job_healthy, domain_size, domains_per_replica, &policy);
+            let boosted = strategy == FtStrategy::NtpPw;
+            let ok = match strategy {
+                FtStrategy::DpDrop => meets_minibatch(&o.assignment, domain_size, false),
+                FtStrategy::Ntp => {
+                    let frac =
+                        table.group_minibatch_frac(&o.assignment.replica_tp, strategy);
+                    let shortfall = (1.0 - frac) * o.assignment.replica_tp.len() as f64;
+                    shortfall < 1.0
+                }
+                FtStrategy::NtpPw => meets_minibatch(&o.assignment, policy.min_tp, boosted),
+            };
+            if !ok {
+                return (0.0, true, o.spares_used);
+            }
+            let tput = table.group_throughput(&o.assignment.replica_tp, strategy);
+            (tput, false, o.spares_used)
+        }
+    }
+}
+
+#[test]
+fn legacy_ports_bit_identical_to_pre_refactor_paths() {
+    let (_sim, _cfg, table) = setup();
+    let topo = Topology::of((JOB_DOMAINS + SPARE_DOMAINS) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let mut rng = Rng::new(0x90);
+    for trial in 0..300 {
+        let healthy = random_healthy(&mut rng, JOB_DOMAINS + SPARE_DOMAINS);
+        for strategy in [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw] {
+            for spares in
+                [None, Some(SparePolicy { spare_domains: SPARE_DOMAINS, min_tp: 28 })]
+            {
+                for packed in [false, true] {
+                    let fs = FleetSim {
+                        topo: &topo,
+                        table: &table,
+                        domains_per_replica: PER_REPLICA,
+                        policy: strategy.policy(),
+                        spares,
+                        packed,
+                        blast: BlastRadius::Single,
+                        transition: None, // costs disabled => bit-identical
+                    };
+                    let got = fs.evaluate(&healthy);
+                    let want = pre_refactor_evaluate(
+                        &table,
+                        DOMAIN_SIZE,
+                        PER_REPLICA,
+                        packed,
+                        strategy,
+                        spares,
+                        &healthy,
+                    );
+                    assert_eq!(
+                        got, want,
+                        "trial {trial} {strategy:?} spares {spares:?} packed {packed}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_policy_keeps_throughput_in_unit_interval() {
+    let (_sim, _cfg, table) = setup();
+    let mut rng = Rng::new(0x91);
+    for trial in 0..200 {
+        let job = random_healthy(&mut rng, JOB_DOMAINS);
+        for policy in registry::all() {
+            for spares in [None, Some(SparePolicy { spare_domains: 3, min_tp: 28 })] {
+                let ctx = PolicyCtx {
+                    table: &table,
+                    domain_size: DOMAIN_SIZE,
+                    domains_per_replica: PER_REPLICA,
+                    packed: true,
+                    spares,
+                    n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
+                    transition: None,
+                };
+                let resp = policy.respond(&ctx, &job);
+                let tput = resp.throughput(table.full_local_batch);
+                assert!(
+                    (0.0..=1.0 + 1e-12).contains(&tput),
+                    "trial {trial} {}: throughput {tput}",
+                    policy.name()
+                );
+                assert_eq!(resp.replicas.len(), JOB_DOMAINS / PER_REPLICA, "{}", policy.name());
+                let pool = spares.map(|p| p.spare_domains).unwrap_or(0);
+                assert!(
+                    resp.spares_used <= pool,
+                    "trial {trial} {}: used {} of {pool}",
+                    policy.name(),
+                    resp.spares_used
+                );
+                for r in &resp.replicas {
+                    assert!(r.batch <= table.full_local_batch, "{}", policy.name());
+                }
+                // overhead is a rate factor, never a boost
+                assert!(resp.overhead > 0.0 && resp.overhead <= 1.0, "{}", policy.name());
+                // paused implies zero integrated throughput
+                if resp.paused {
+                    assert_eq!(tput, 0.0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn healthy_fleet_is_lossless_under_every_policy() {
+    let (_sim, _cfg, table) = setup();
+    let job = vec![DOMAIN_SIZE; JOB_DOMAINS];
+    for policy in registry::all() {
+        let ctx = PolicyCtx {
+            table: &table,
+            domain_size: DOMAIN_SIZE,
+            domains_per_replica: PER_REPLICA,
+            packed: true,
+            spares: None,
+            n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
+            transition: None,
+        };
+        let resp = policy.respond(&ctx, &job);
+        assert!(!resp.paused, "{}", policy.name());
+        assert_eq!(resp.spares_used, 0, "{}", policy.name());
+        let tput = resp.throughput(table.full_local_batch);
+        assert!((tput - 1.0).abs() < 1e-12, "{}: {tput}", policy.name());
+    }
+}
+
+#[test]
+fn transition_costs_zero_without_model_and_sane_with() {
+    let (sim, cfg, table) = setup();
+    let prev = vec![DOMAIN_SIZE; JOB_DOMAINS];
+    let mut next = prev.clone();
+    next[3] = DOMAIN_SIZE - 1; // one domain degraded
+    let base_ctx = PolicyCtx {
+        table: &table,
+        domain_size: DOMAIN_SIZE,
+        domains_per_replica: PER_REPLICA,
+        packed: true,
+        spares: None,
+        n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
+        transition: None,
+    };
+    for policy in registry::all() {
+        assert_eq!(
+            policy.transition_cost(&base_ctx, &prev, &next),
+            0.0,
+            "{} must be free without a TransitionCosts model",
+            policy.name()
+        );
+    }
+    let ctx = PolicyCtx {
+        transition: Some(TransitionCosts::model(&sim, &cfg)),
+        ..base_ctx
+    };
+    let cost = |name: &str| registry::parse(name).unwrap().transition_cost(&ctx, &prev, &next);
+    let ntp = cost("ntp");
+    let drop = cost("dp-drop");
+    let ckpt = cost("ckpt-restart");
+    let mig = cost("spare-mig");
+    assert!(ntp > 0.0 && mig > 0.0);
+    // full-job restart dwarfs a live reshard of one replica; rollback on
+    // top of the restart dwarfs the restart
+    assert!(drop > ntp, "restart {drop} vs reshard {ntp}");
+    assert!(ckpt > drop, "ckpt {ckpt} vs restart {drop}");
+    // a pure recovery (health restored) costs ckpt-restart no rollback
+    let recover = registry::parse("ckpt-restart")
+        .unwrap()
+        .transition_cost(&ctx, &next, &prev);
+    assert!(recover < ckpt && recover > 0.0);
+}
+
+#[test]
+fn strategy_table_monotonicity_invariants() {
+    let (sim, cfg, table) = setup();
+    // batch nondecreasing in TP degree
+    for w in table.batch.windows(2) {
+        assert!(w[0] <= w[1], "batch not monotone: {:?}", table.batch);
+    }
+    // power boosting never does worse than plain NTP at the same TP
+    for (b, bpw) in table.batch.iter().zip(&table.batch_pw) {
+        assert!(bpw >= b, "batch_pw {bpw} < batch {b}");
+    }
+    // the table's modeled reshard overhead is exactly the engine's and
+    // is bounded by the retired 0.995 constant
+    assert_eq!(table.reshard_overhead, healthy_reshard_factor(&sim, &cfg));
+    assert!(
+        (0.995..1.0).contains(&table.reshard_overhead),
+        "reshard overhead {} outside the old constant's bound",
+        table.reshard_overhead
+    );
+}

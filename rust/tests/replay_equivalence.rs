@@ -9,8 +9,9 @@ use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{BlastRadius, FailureModel, FleetReplayer, Trace};
 use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
 use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, TransitionCosts};
 use ntp::power::RackDesign;
-use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::sim::{IterationModel, SimParams};
 use ntp::util::prng::Rng;
 use ntp::util::prop::{check, SeedGen};
 
@@ -126,7 +127,7 @@ fn failed_series_matches_replay_to_counts() {
 }
 
 #[test]
-fn fleet_stats_bit_identical_across_strategies_and_spares() {
+fn fleet_stats_bit_identical_for_every_policy_and_spares() {
     let sim = IterationModel::new(
         presets::model("gpt-480b").unwrap(),
         WorkloadConfig {
@@ -145,21 +146,36 @@ fn fleet_stats_bit_identical_across_strategies_and_spares() {
     let mut rng = Rng::new(4);
     let trace = Trace::generate(&topo, &model, 24.0 * 25.0, &mut rng);
 
-    for strategy in [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw] {
+    // Every registered policy (legacy ports and the new ones), with and
+    // without modeled transition costs: the event-driven sweep and the
+    // per-step replay must produce bit-identical FleetStats, downtime
+    // accounting included.
+    for policy in registry::all() {
         for spares in [None, Some(SparePolicy { spare_domains: 6, min_tp: 28 })] {
             for blast in [BlastRadius::Single, BlastRadius::Gpus(2)] {
-                let fs = FleetSim {
-                    topo: &topo,
-                    table: &table,
-                    domains_per_replica: cfg.pp,
-                    strategy,
-                    spares,
-                    packed: true,
-                    blast,
-                };
-                let fast = fs.run(&trace, 1.5);
-                let slow = fs.run_replay_per_step(&trace, 1.5);
-                assert_eq!(fast, slow, "strategy {strategy:?} spares {spares:?} blast {blast:?}");
+                for transition in [None, Some(TransitionCosts::model(&sim, &cfg))] {
+                    let fs = FleetSim {
+                        topo: &topo,
+                        table: &table,
+                        domains_per_replica: cfg.pp,
+                        policy,
+                        spares,
+                        packed: true,
+                        blast,
+                        transition,
+                    };
+                    let fast = fs.run(&trace, 1.5);
+                    let slow = fs.run_replay_per_step(&trace, 1.5);
+                    assert_eq!(
+                        fast,
+                        slow,
+                        "policy {} spares {spares:?} blast {blast:?} transition {transition:?}",
+                        policy.name()
+                    );
+                    if transition.is_none() {
+                        assert_eq!(fast.downtime_frac, 0.0, "{}", policy.name());
+                    }
+                }
             }
         }
     }
