@@ -13,7 +13,7 @@ use ntp::failure::scenario::scenario_from_failed;
 use ntp::failure::{sample_failed_gpus, BlastRadius};
 use ntp::manager::StrategyTable;
 use ntp::parallel::ParallelConfig;
-use ntp::policy::PolicyCtx;
+use ntp::policy::{EvalScratch, PolicyCtx};
 use ntp::power::RackDesign;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
 use ntp::util::par;
@@ -82,9 +82,22 @@ fn main() {
                 let n_down = failed.len();
                 let healthy = scenario_from_failed(&topo, &failed).domain_healthy;
                 let mut out = [0.0f64; 3];
+                // The allocation-free respond_with path (one scratch
+                // per trial, reused across the three policies); spot-
+                // checked against the full respond on trial 0.
+                let mut scratch = EvalScratch::default();
                 for (i, policy) in policies.iter().enumerate() {
-                    let resp = policy.respond(&ctx, &healthy);
-                    out[i] = 1.0 - resp.throughput(table.full_local_batch);
+                    let (tput, _, _) = policy.respond_with(&ctx, &healthy, &mut scratch);
+                    if trial == 0 {
+                        let resp = policy.respond(&ctx, &healthy);
+                        assert_eq!(
+                            tput,
+                            resp.throughput(table.full_local_batch),
+                            "respond_with must match respond ({})",
+                            policy.name()
+                        );
+                    }
+                    out[i] = 1.0 - tput;
                 }
                 (out, n_down)
             });

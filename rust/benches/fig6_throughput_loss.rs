@@ -8,7 +8,7 @@ use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::scenario::scenario_from_failed;
 use ntp::failure::{sample_failed_gpus, BlastRadius, FailureModel, Trace};
-use ntp::manager::{pack_domains, FleetSim, StrategyTable};
+use ntp::manager::{pack_domains, MultiPolicySim, StrategyTable};
 use ntp::parallel::ParallelConfig;
 use ntp::policy::{registry, TransitionCosts};
 use ntp::power::RackDesign;
@@ -93,19 +93,27 @@ fn main() {
     let trace = Trace::generate(&topo, &fmodel, 15.0 * 24.0, &mut trace_rng);
     let transition = Some(TransitionCosts::model(&sim, &cfg));
     let policies = registry::all();
-    let stats_per_policy = par::par_map(policies.len(), threads, |i| {
-        let fs = FleetSim {
-            topo: &topo,
-            table: &table,
-            domains_per_replica: cfg.pp,
-            policy: policies[i],
-            spares: None,
-            packed: true,
-            blast: BlastRadius::Single,
-            transition,
-        };
-        fs.run(&trace, 3.0)
-    });
+    // One shared sweep instead of one trace replay per policy: all five
+    // policies ride a single FleetReplayer pass, with repeated damage
+    // signatures memoized (bit-identical to the per-policy runs, see
+    // rust/tests/multi_policy_sweep.rs).
+    let msim = MultiPolicySim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: cfg.pp,
+        policies: &policies,
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition,
+    };
+    let mut memo = msim.memo();
+    let stats_per_policy = msim.run_with(&trace, 3.0, &mut memo);
+    println!(
+        "shared sweep: {} snapshot-memo lookups, {:.0}% hit rate\n",
+        memo.hits() + memo.misses(),
+        memo.hit_rate() * 100.0
+    );
     let mut t2 = Table::new(&["policy", "mean tput", "downtime", "net tput", "transitions"]);
     for (policy, stats) in policies.iter().zip(&stats_per_policy) {
         t2.row(&[

@@ -19,7 +19,8 @@
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{BlastRadius, FailureModel, Trace};
-use ntp::manager::{FleetSim, StrategyTable};
+use ntp::manager::{FleetSim, FleetStats, MultiPolicySim, StrategyTable};
+use ntp::policy::registry;
 use ntp::ntp::cache::PlanCache;
 use ntp::ntp::shard_map::ShardMap;
 use ntp::ntp::sync::{comp_to_sync, scatter_comp, sync_to_comp, CopyPlan};
@@ -107,6 +108,108 @@ fn main() {
     assert!(
         speedup >= floor,
         "event-driven fleet replay should be >= {floor}x faster (got {speedup:.1}x)"
+    );
+
+    // =====================================================================
+    // Shared-sweep multi-policy engine at SPARe scale (100K GPUs, NVL72):
+    // one trace replay + signature-memoized responses for all 5 policies
+    // vs the per-policy FleetSim::run loop
+    // =====================================================================
+    let days_100k = if quick { 5.0 } else { 15.0 };
+    let cluster_100k = presets::cluster("paper-100k-nvl72").unwrap();
+    let tp_100k = cluster_100k.domain_size; // 72
+    let cfg_100k = ParallelConfig { tp: tp_100k, pp: 4, dp: 350, microbatch: 1 };
+    let sim_100k = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig { seq_len: 16_384, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 },
+        cluster_100k.clone(),
+        SimParams::default(),
+    );
+    let table_100k = StrategyTable::build(&sim_100k, &cfg_100k, &RackDesign::default());
+    let topo_100k = Topology::of(cfg_100k.n_gpus(), tp_100k, cluster_100k.gpus_per_node);
+    let trace_100k =
+        Trace::generate(&topo_100k, &FailureModel::llama3(), days_100k * 24.0, &mut rng);
+    let policies = registry::all();
+    println!(
+        "\nmulti-policy sweep: {} GPUs (NVL{tp_100k}), {days_100k}-day trace, {} events, \
+         {} policies",
+        topo_100k.n_gpus,
+        trace_100k.events.len(),
+        policies.len()
+    );
+    let run_per_policy = || -> Vec<FleetStats> {
+        policies
+            .iter()
+            .map(|&policy| {
+                FleetSim {
+                    topo: &topo_100k,
+                    table: &table_100k,
+                    domains_per_replica: cfg_100k.pp,
+                    policy,
+                    spares: None,
+                    packed: true,
+                    blast: BlastRadius::Single,
+                    transition: None,
+                }
+                .run(&trace_100k, 1.0)
+            })
+            .collect()
+    };
+    let msim = MultiPolicySim {
+        topo: &topo_100k,
+        table: &table_100k,
+        domains_per_replica: cfg_100k.pp,
+        policies: &policies,
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition: None,
+    };
+    // Bit-identical per-policy stats, and the memo hit rate of one sweep.
+    let mut memo = msim.memo();
+    let shared_stats = msim.run_with(&trace_100k, 1.0, &mut memo);
+    assert_eq!(
+        shared_stats,
+        run_per_policy(),
+        "shared sweep must be bit-identical to the per-policy loop"
+    );
+    println!(
+        "  memo: {:.1}% hit rate, {} unique entries",
+        memo.hit_rate() * 100.0,
+        memo.unique_entries()
+    );
+    report.scalar("snapshot_memo_hit_rate", memo.hit_rate());
+    report.scalar("snapshot_memo_entries", memo.unique_entries() as f64);
+
+    let r_per_policy = bench_with("fleet_5policy_per_policy_100k", cfg_replay, || {
+        black_box(run_per_policy());
+    });
+    println!("{}", r_per_policy.line());
+    report.result(&r_per_policy);
+    // Cold sweep: fresh memo every iteration (the honest comparison).
+    let r_shared = bench_with("fleet_5policy_shared_sweep_100k", cfg_replay, || {
+        black_box(msim.run(&trace_100k, 1.0));
+    });
+    println!("{}", r_shared.line());
+    report.result(&r_shared);
+    // Warm sweep: memo shared across iterations, the Monte-Carlo /
+    // sweep-point steady state.
+    let mut warm = msim.memo();
+    let r_warm = bench_with("fleet_5policy_shared_sweep_warm_100k", cfg_replay, || {
+        black_box(msim.run_with(&trace_100k, 1.0, &mut warm));
+    });
+    println!("{}", r_warm.line());
+    report.result(&r_warm);
+    let sweep_speedup = r_per_policy.secs.p50 / r_shared.secs.p50;
+    let warm_speedup = r_per_policy.secs.p50 / r_warm.secs.p50;
+    println!("  -> shared-sweep speedup: {sweep_speedup:.1}x (warm memo: {warm_speedup:.1}x)");
+    report.scalar("multi_policy_sweep_speedup", sweep_speedup);
+    report.scalar("multi_policy_sweep_warm_speedup", warm_speedup);
+    let sweep_floor = if quick { 3.0 } else { 5.0 };
+    assert!(
+        sweep_speedup >= sweep_floor,
+        "5-policy shared sweep should be >= {sweep_floor}x faster than the per-policy loop \
+         (got {sweep_speedup:.1}x)"
     );
 
     // =====================================================================

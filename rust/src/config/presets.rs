@@ -99,6 +99,8 @@ pub fn gpu(name: &str) -> Result<GpuSpec> {
 ///
 /// * `paper-32k-nvl32` — §5.3 main simulation target: 32K B200, NVL32.
 /// * `paper-32k-nvl{8,16,72}` — Fig. 2a NVL-domain sweep.
+/// * `paper-100k-nvl72` — SPARe-scale fleet (100,800 B200 = 1400 NVL72
+///   domains) for the shared multi-policy sweep engine.
 /// * `llama3-16k-nvl8` — Fig. 4 failure-trace cluster (16K H100, DGX).
 /// * `dgx-a100-2` — §5.1 prototype: 2 DGX-A100 (16 GPUs).
 pub fn cluster(name: &str) -> Result<ClusterConfig> {
@@ -127,6 +129,15 @@ pub fn cluster(name: &str) -> Result<ClusterConfig> {
         "paper-32k-nvl72" => ClusterConfig {
             name: name.to_string(),
             n_gpus: 32_256, // 448 NVL72 domains
+            domain_size: 72,
+            gpus_per_node: 4,
+            gpu: gpu("b200")?,
+        },
+        // SPARe-scale fleet (arXiv 2603.00357 argues 100K+ GPUs is the
+        // regime where sweep cost explodes): 1400 NVL72 domains.
+        "paper-100k-nvl72" => ClusterConfig {
+            name: name.to_string(),
+            n_gpus: 100_800,
             domain_size: 72,
             gpus_per_node: 4,
             gpu: gpu("b200")?,
@@ -163,6 +174,7 @@ pub fn cluster_names() -> &'static [&'static str] {
         "paper-32k-nvl8",
         "paper-32k-nvl16",
         "paper-32k-nvl72",
+        "paper-100k-nvl72",
         "llama3-16k-nvl8",
         "dgx-a100-2",
     ]
@@ -203,6 +215,15 @@ mod tests {
             assert_eq!(m.heads * m.head_dim, m.hidden, "{name}");
             assert_eq!(m.ffn, 4 * m.hidden, "{name}");
         }
+    }
+
+    #[test]
+    fn spare_scale_cluster_is_100k_nvl72() {
+        let c = cluster("paper-100k-nvl72").unwrap();
+        assert_eq!(c.n_gpus, 100_800);
+        assert_eq!(c.domain_size, 72);
+        assert_eq!(c.n_gpus / c.domain_size, 1400);
+        assert_eq!(c.gpu.name, "b200");
     }
 
     #[test]

@@ -97,6 +97,30 @@ impl<'a> FleetReplayer<'a> {
         self.now
     }
 
+    /// Horizon of the trace under replay (hours).
+    pub fn horizon_hours(&self) -> f64 {
+        self.trace.horizon_hours
+    }
+
+    /// Rewind to `t = 0` on a (possibly different) trace, reusing the
+    /// fleet-health allocation — at 100K-GPU scale the per-GPU state
+    /// vector dominates replayer construction, so Monte-Carlo trial
+    /// loops ([`crate::manager::MultiPolicySim::run_trials`]) reset one
+    /// replayer instead of building one per trace. The topology and
+    /// blast radius are unchanged; the same sortedness requirement as
+    /// [`FleetReplayer::new`] applies.
+    pub fn reset(&mut self, trace: &'a Trace) {
+        assert!(
+            trace.events.windows(2).all(|w| w[0].at_hours <= w[1].at_hours),
+            "FleetReplayer requires time-sorted events"
+        );
+        self.trace = trace;
+        self.fleet.reset();
+        self.next_event = 0;
+        self.recoveries.clear();
+        self.now = 0.0;
+    }
+
     /// The fleet state as of the last `advance`.
     pub fn fleet(&self) -> &FleetHealth {
         &self.fleet
@@ -218,6 +242,35 @@ mod tests {
         assert_eq!(trace.replay_to(&topo, BlastRadius::Single, 5.0).n_failed(), 1);
         assert_eq!(rep.advance(6.9).n_failed(), 1);
         assert_eq!(rep.advance(7.0).n_failed(), 0); // recovery at exactly t
+    }
+
+    #[test]
+    fn reset_replays_a_new_trace_from_scratch() {
+        let topo = Topology::of(256, 8, 4);
+        let model = FailureModel::llama3().scaled(150.0);
+        let mut rng = Rng::new(41);
+        let trace_a = Trace::generate(&topo, &model, 24.0 * 6.0, &mut rng);
+        let trace_b = Trace::generate(&topo, &model, 24.0 * 9.0, &mut rng);
+        let times: Vec<f64> = (0..120).map(|i| i as f64 * 1.1).collect();
+        let mut rep = FleetReplayer::new(&trace_a, &topo, BlastRadius::Node);
+        for &t in &times {
+            rep.advance(t);
+        }
+        // Reset onto trace B mid-flight: must match a fresh sweep of B.
+        rep.reset(&trace_b);
+        assert_eq!(rep.now_hours(), 0.0);
+        assert_eq!(rep.horizon_hours(), trace_b.horizon_hours);
+        assert_matches_replay_to(&trace_b, &topo, BlastRadius::Node, &times);
+        for &t in &times {
+            let inc = rep.advance(t);
+            let scratch = trace_b.replay_to(&topo, BlastRadius::Node, t);
+            assert_eq!(inc.n_failed(), scratch.n_failed(), "after reset, t={t}");
+            assert_eq!(
+                inc.domain_healthy_counts(),
+                scratch.domain_healthy_counts(),
+                "after reset, t={t}"
+            );
+        }
     }
 
     #[test]

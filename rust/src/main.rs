@@ -14,12 +14,15 @@
 use anyhow::Result;
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
-use ntp::failure::{sample_failed_gpus, scenario::scenario_from_failed, BlastRadius, FailureModel, Trace};
-use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
+use ntp::failure::{
+    sample_failed_gpus, scenario::scenario_from_failed, BlastRadius, FailureModel, Trace,
+};
+use ntp::manager::{MultiPolicySim, SparePolicy, StrategyTable};
 use ntp::ntp::{ReshardPlan, ShardMap};
 use ntp::parallel::{best_config, ParallelConfig};
-use ntp::policy::{registry, PolicyCtx, TransitionCosts};
+use ntp::policy::{registry, reshard_transition_secs_over, PolicyCtx, TransitionCosts};
 use ntp::power::{min_boost_for, BoostDecision, RackDesign};
+use ntp::sim::engine::min_supported_tp;
 use ntp::sim::{IterationModel, SimParams};
 use ntp::util::bench::JsonReport;
 use ntp::util::cli::Args;
@@ -68,9 +71,15 @@ USAGE: ntp <subcommand> [options]
   power         --model gpt-480b --cluster paper-32k-nvl32 --tp 32 --pp 8
                 --dp 128
   fleet         --strategy dp-drop,ntp,ntp-pw,ckpt-restart,spare-mig
-                (comma-separated list for side-by-side comparison)
+                (comma-separated list, evaluated in ONE shared trace sweep)
                 --days 15 [--spares N] (fixed minibatch with N spare domains)
                 [--replicas 16] [--rate-x 10] [--json] [--no-transitions]
+                [--cluster paper-32k-nvl32|paper-100k-nvl72|...] [--pp 8]
+                transition-cost calibration (defaults are the modeled
+                TransitionCosts, see EXPERIMENTS.md §Policies):
+                [--restart-secs 900] [--ckpt-interval 3600]
+                [--spare-load-secs 300] [--reshard-secs <modeled>]
+                [--reshard-gbs <NVLink GB/s for the reshard model>]
 ";
 
 fn cmd_train(args: &mut Args) -> Result<()> {
@@ -339,22 +348,81 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let seed = args.u64_or("seed", 5);
     let json = args.flag("json");
     let no_transitions = args.flag("no-transitions");
+    let cluster_name = args.str_or("cluster", "paper-32k-nvl32");
+    let pp = args.usize_or("pp", 8);
+    // Transition-cost calibration knobs (defaults: the modeled
+    // TransitionCosts — see EXPERIMENTS.md §Policies for the published
+    // latencies the defaults are calibrated against).
+    let restart_secs = args.opt_f64("restart-secs");
+    let ckpt_interval = args.opt_f64("ckpt-interval");
+    let spare_load_secs = args.opt_f64("spare-load-secs");
+    let reshard_secs = args.opt_f64("reshard-secs");
+    let reshard_gbs = args.opt_f64("reshard-gbs");
     args.finish()?;
+    anyhow::ensure!(
+        !(no_transitions
+            && [restart_secs, ckpt_interval, spare_load_secs, reshard_secs, reshard_gbs]
+                .iter()
+                .any(|o| o.is_some())),
+        "--no-transitions conflicts with transition-cost flags \
+         (--restart-secs/--ckpt-interval/--spare-load-secs/--reshard-secs/--reshard-gbs)"
+    );
+    anyhow::ensure!(
+        !(reshard_secs.is_some() && reshard_gbs.is_some()),
+        "--reshard-secs and --reshard-gbs both set the reshard cost; pass one or the other"
+    );
 
     let model = presets::model("gpt-480b")?;
-    let cluster = presets::cluster("paper-32k-nvl32")?;
+    let cluster = presets::cluster(&cluster_name)?;
+    let tp = cluster.domain_size;
     let w = WorkloadConfig { seq_len: 16_384, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 };
-    let cfg = ParallelConfig { tp: 32, pp: 8, dp: n_replicas, microbatch: 1 };
+    let cfg = ParallelConfig { tp, pp, dp: n_replicas, microbatch: 1 };
+    let gpus_per_node = cluster.gpus_per_node;
     let sim = IterationModel::new(model, w, cluster, SimParams::default());
     let rack = RackDesign::default();
     let table = StrategyTable::build(&sim, &cfg, &rack);
     let n_domains = n_replicas * cfg.pp + spares.unwrap_or(0);
-    let topo = Topology::of(n_domains * 32, 32, 4);
+    let topo = Topology::of(n_domains * tp, tp, gpus_per_node);
     let fmodel = FailureModel::llama3().scaled(rate_x);
     let mut rng = Rng::new(seed);
     let trace = Trace::generate(&topo, &fmodel, days * 24.0, &mut rng);
-    let transition =
-        if no_transitions { None } else { Some(TransitionCosts::model(&sim, &cfg)) };
+    let transition = if no_transitions {
+        None
+    } else {
+        let mut t = TransitionCosts::model(&sim, &cfg);
+        if let Some(gbs) = reshard_gbs {
+            t.reshard_secs = reshard_transition_secs_over(&sim, &cfg, gbs);
+        }
+        if let Some(s) = reshard_secs {
+            t.reshard_secs = s;
+        }
+        if let Some(s) = restart_secs {
+            t.restart_secs = s;
+        }
+        if let Some(s) = ckpt_interval {
+            t.checkpoint_interval_secs = s;
+        }
+        if let Some(s) = spare_load_secs {
+            t.spare_load_secs = s;
+        }
+        Some(t)
+    };
+
+    // One shared-sweep pass evaluates every requested policy: the trace
+    // is replayed once and repeated damage signatures are memoized.
+    let min_tp = min_supported_tp(tp);
+    let msim = MultiPolicySim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: cfg.pp,
+        policies: &policies,
+        spares: spares.map(|s| SparePolicy { spare_domains: s, min_tp }),
+        packed: true,
+        blast: BlastRadius::Single,
+        transition,
+    };
+    let mut memo = msim.memo();
+    let all_stats = msim.run_with(&trace, 3.0, &mut memo);
 
     let mut out = Table::new(&[
         "policy", "mean tput", "net tput", "tput/GPU", "paused", "downtime", "spares used",
@@ -365,18 +433,10 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     rep.scalar("rate_x", rate_x);
     rep.scalar("replicas", n_replicas as f64);
     rep.scalar("spares", spares.unwrap_or(0) as f64);
-    for policy in &policies {
-        let fs = FleetSim {
-            topo: &topo,
-            table: &table,
-            domains_per_replica: cfg.pp,
-            policy: *policy,
-            spares: spares.map(|s| SparePolicy { spare_domains: s, min_tp: 28 }),
-            packed: true,
-            blast: BlastRadius::Single,
-            transition,
-        };
-        let stats = fs.run(&trace, 3.0);
+    rep.scalar("n_gpus", topo.n_gpus as f64);
+    rep.scalar("memo_hit_rate", memo.hit_rate());
+    rep.scalar("memo_entries", memo.unique_entries() as f64);
+    for (policy, stats) in policies.iter().zip(&all_stats) {
         out.row(&[
             policy.name().into(),
             f4(stats.mean_throughput),

@@ -193,7 +193,12 @@ impl<'a> FleetSim<'a> {
                     if step == 0 {
                         prev_counts = counts.to_vec();
                     } else if counts != &prev_counts[..] {
-                        acc.charge_transition(self, &prev_counts, counts);
+                        acc.charge(
+                            self.policy,
+                            &self.ctx(self.live_spares_in(counts)),
+                            &prev_counts,
+                            counts,
+                        );
                         prev_counts.clear();
                         prev_counts.extend_from_slice(counts);
                     }
@@ -222,7 +227,12 @@ impl<'a> FleetSim<'a> {
             if step == 0 {
                 prev_counts = healthy.to_vec();
             } else if healthy != &prev_counts[..] {
-                acc.charge_transition(self, &prev_counts, healthy);
+                acc.charge(
+                    self.policy,
+                    &self.ctx(self.live_spares_in(healthy)),
+                    &prev_counts,
+                    healthy,
+                );
                 prev_counts.clear();
                 prev_counts.extend_from_slice(healthy);
             }
@@ -232,32 +242,16 @@ impl<'a> FleetSim<'a> {
     }
 
     fn integrate(&self, n_steps: usize, step_hours: f64, acc: Accum) -> FleetStats {
-        let n = n_steps as f64;
         let spare_gpus = self
             .spares
             .map(|p| p.spare_domains * self.topo.domain_size)
             .unwrap_or(0);
-        let job_gpus = self.topo.n_gpus - spare_gpus;
-        let mean_tput = acc.tput_sum / n;
-        let horizon_secs = n * step_hours * 3600.0;
-        let downtime_frac = if horizon_secs > 0.0 {
-            (acc.cost_gpu_secs / (self.topo.n_gpus as f64 * horizon_secs)).min(1.0)
-        } else {
-            0.0
-        };
-        FleetStats {
-            mean_throughput: mean_tput,
-            paused_frac: acc.paused as f64 / n,
-            mean_spares_used: acc.spares_sum / n,
-            throughput_per_gpu: mean_tput * job_gpus as f64 / self.topo.n_gpus as f64,
-            downtime_frac,
-            transitions: acc.transitions,
-        }
+        acc.finalize(n_steps, step_hours, self.topo.n_gpus, spare_gpus)
     }
 
     /// The policy context for one evaluation. `live_spares` is the
     /// fixed-minibatch pool after removing failed spare domains.
-    fn ctx(&self, live_spares: Option<SparePolicy>) -> PolicyCtx<'_> {
+    pub(crate) fn ctx(&self, live_spares: Option<SparePolicy>) -> PolicyCtx<'_> {
         PolicyCtx {
             table: self.table,
             domain_size: self.topo.domain_size,
@@ -269,23 +263,31 @@ impl<'a> FleetSim<'a> {
         }
     }
 
+    /// The live-spare-adjusted pool for one *full-fleet* snapshot —
+    /// [`super::spares::split_job_spares`], which both the steady-state
+    /// evaluation and the transition charge (and the shared-sweep
+    /// engine) derive the policy context through, so a failed spare
+    /// domain is reflected identically in throughput and in the charged
+    /// reconfiguration cost.
+    pub(crate) fn live_spares_in(&self, domain_healthy: &[usize]) -> Option<SparePolicy> {
+        self.spares.map(|pool| {
+            super::spares::split_job_spares(domain_healthy, self.topo.domain_size, &pool).1
+        })
+    }
+
     /// Evaluate one snapshot: returns (throughput, paused, spares used).
     pub fn evaluate(&self, domain_healthy: &[usize]) -> (f64, bool, usize) {
-        match &self.spares {
+        match self.spares {
             None => {
                 let resp = self.policy.respond(&self.ctx(None), domain_healthy);
                 (resp.throughput(self.table.full_local_batch), resp.paused, resp.spares_used)
             }
-            Some(policy) => {
-                // Job domains are the leading ones; spares at the tail.
-                let n_job = domain_healthy.len() - policy.spare_domains;
-                let job_healthy = &domain_healthy[..n_job];
-                // Spares that are themselves failed shrink the pool.
-                let live_spares = domain_healthy[n_job..]
-                    .iter()
-                    .filter(|&&h| h == self.topo.domain_size)
-                    .count();
-                let live = SparePolicy { spare_domains: live_spares, ..*policy };
+            Some(pool) => {
+                let (job_healthy, live) = super::spares::split_job_spares(
+                    domain_healthy,
+                    self.topo.domain_size,
+                    &pool,
+                );
                 let resp = self.policy.respond(&self.ctx(Some(live)), job_healthy);
                 (resp.throughput(self.table.full_local_batch), resp.paused, resp.spares_used)
             }
@@ -293,11 +295,12 @@ impl<'a> FleetSim<'a> {
     }
 }
 
-/// Shared integration state of the two sweep implementations, so the
-/// event-driven and per-step paths stay operation-for-operation
+/// Shared integration state of every sweep implementation
+/// (event-driven, per-step, and the shared multi-policy engine in
+/// [`super::sweep`]), so all paths stay operation-for-operation
 /// identical (the bit-identity the equivalence tests assert).
-#[derive(Default)]
-struct Accum {
+#[derive(Clone, Default)]
+pub(crate) struct Accum {
     tput_sum: f64,
     paused: usize,
     spares_sum: f64,
@@ -306,7 +309,7 @@ struct Accum {
 }
 
 impl Accum {
-    fn sample(&mut self, out: (f64, bool, usize)) {
+    pub(crate) fn sample(&mut self, out: (f64, bool, usize)) {
         let (tput, pause, used) = out;
         self.tput_sum += tput;
         self.paused += usize::from(pause);
@@ -315,11 +318,47 @@ impl Accum {
 
     /// Charge the policy's transition cost for a sampled health change
     /// (events landing between two samples collapse into one charge —
-    /// both sweep paths sample on the same grid, so both see the same
-    /// transitions).
-    fn charge_transition(&mut self, fs: &FleetSim, prev: &[usize], next: &[usize]) {
+    /// all sweep paths sample on the same grid, so all see the same
+    /// transitions). `ctx` must carry the live-spare-adjusted pool of
+    /// the `next` snapshot ([`FleetSim::live_spares_in`]).
+    pub(crate) fn charge(
+        &mut self,
+        policy: &dyn FtPolicy,
+        ctx: &PolicyCtx,
+        prev: &[usize],
+        next: &[usize],
+    ) {
         self.transitions += 1;
-        self.cost_gpu_secs += fs.policy.transition_cost(&fs.ctx(fs.spares), prev, next);
+        self.cost_gpu_secs += policy.transition_cost(ctx, prev, next);
+    }
+
+    /// Integrate the accumulated samples into a [`FleetStats`]
+    /// (verbatim the former `FleetSim::integrate` body, shared so every
+    /// sweep path produces bit-identical statistics).
+    pub(crate) fn finalize(
+        &self,
+        n_steps: usize,
+        step_hours: f64,
+        n_gpus: usize,
+        spare_gpus: usize,
+    ) -> FleetStats {
+        let n = n_steps as f64;
+        let job_gpus = n_gpus - spare_gpus;
+        let mean_tput = self.tput_sum / n;
+        let horizon_secs = n * step_hours * 3600.0;
+        let downtime_frac = if horizon_secs > 0.0 {
+            (self.cost_gpu_secs / (n_gpus as f64 * horizon_secs)).min(1.0)
+        } else {
+            0.0
+        };
+        FleetStats {
+            mean_throughput: mean_tput,
+            paused_frac: self.paused as f64 / n,
+            mean_spares_used: self.spares_sum / n,
+            throughput_per_gpu: mean_tput * job_gpus as f64 / n_gpus as f64,
+            downtime_frac,
+            transitions: self.transitions,
+        }
     }
 }
 
@@ -456,6 +495,65 @@ mod tests {
         let b = fs_t.run_replay_per_step(&trace, 2.0);
         assert_eq!(a, b);
         assert!(a.transitions > 0 && a.downtime_frac > 0.0);
+    }
+
+    #[test]
+    fn transition_charge_uses_live_spare_pool() {
+        // Regression for the configured-vs-live spare mismatch: the
+        // charge path used to build its PolicyCtx from the *configured*
+        // `fs.spares` while `evaluate` used the live-adjusted pool. Both
+        // now go through `live_spares_in`, so a failed spare domain
+        // shrinks the pool seen by `transition_cost` — observable with
+        // SPARE-MIG, whose migration bill is capped by the live pool.
+        let (sim, cfg) = small_setup();
+        let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+        let table = StrategyTable::build(&sim, &cfg, &rack);
+        // 16 job domains (4 replicas x 4) + 2 spare domains.
+        let topo = Topology::of(18 * 32, 32, 4);
+        let fs = FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: 4,
+            policy: crate::policy::registry::parse("spare-mig").unwrap(),
+            spares: Some(SparePolicy { spare_domains: 2, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Single,
+            transition: Some(crate::policy::TransitionCosts::model(&sim, &cfg)),
+        };
+        let prev = vec![32usize; 18];
+        // Three fresh job-domain failures, and the last spare domain
+        // also fails: live pool 1, configured pool 2.
+        let mut next = prev.clone();
+        next[0] = 31;
+        next[4] = 31;
+        next[8] = 31;
+        next[17] = 31;
+        let live = fs.live_spares_in(&next).unwrap();
+        assert_eq!(live.spare_domains, 1);
+        let charged = fs.policy.transition_cost(&fs.ctx(Some(live)), &prev, &next);
+        let misconfigured = fs.policy.transition_cost(&fs.ctx(fs.spares), &prev, &next);
+        // 4 degraded domains: the live pool migrates 1, the configured
+        // pool would have billed 2 — the old derivation overcharged.
+        assert!(
+            charged < misconfigured,
+            "live-pool charge {charged} should be below configured-pool {misconfigured}"
+        );
+        // With every spare alive, the two derivations agree.
+        let mut next_spares_ok = prev.clone();
+        next_spares_ok[0] = 31;
+        next_spares_ok[4] = 31;
+        next_spares_ok[8] = 31;
+        let live_ok = fs.live_spares_in(&next_spares_ok).unwrap();
+        assert_eq!(live_ok.spare_domains, 2);
+        assert_eq!(
+            fs.policy.transition_cost(&fs.ctx(Some(live_ok)), &prev, &next_spares_ok),
+            fs.policy.transition_cost(&fs.ctx(fs.spares), &prev, &next_spares_ok),
+        );
+        // And the two sweep paths still agree bit-for-bit with the fix.
+        let model = FailureModel::llama3().scaled(60.0);
+        let mut rng = Rng::new(9);
+        let trace = Trace::generate(&topo, &model, 24.0 * 20.0, &mut rng);
+        assert_eq!(fs.run(&trace, 2.0), fs.run_replay_per_step(&trace, 2.0));
     }
 
     #[test]

@@ -7,7 +7,9 @@ pub mod fleet;
 pub mod lowpri;
 pub mod packing;
 pub mod spares;
+pub mod sweep;
 
 pub use fleet::{FleetSim, FleetStats, StrategyTable};
 pub use packing::{pack_domains, packed_replica_tp, Assignment};
 pub use spares::{SparePolicy, SpareOutcome};
+pub use sweep::{MultiPolicySim, ResponseMemo, SnapshotSig};

@@ -66,6 +66,15 @@ pub fn pack_domains(
     Assignment { replicas, replica_tp, domain_size }
 }
 
+/// Reusable buffers for [`packed_replica_tp_into`] so the fleet-sweep
+/// hot path performs no allocation in steady state (capacities grow to
+/// the instance size once, then stick).
+#[derive(Clone, Debug, Default)]
+pub struct PackScratch {
+    /// Healthy-count histogram (`counts[h]` = domains with `h` healthy).
+    counts: Vec<usize>,
+}
+
 /// Just the per-replica TP degrees of [`pack_domains`] — the
 /// fleet-simulation hot path, which never looks at the replica→domain
 /// lists. Healthy counts are bounded by `domain_size`, so `packed`
@@ -79,34 +88,68 @@ pub fn packed_replica_tp(
     domains_per_replica: usize,
     packed: bool,
 ) -> Vec<usize> {
+    let mut out = Vec::new();
+    packed_replica_tp_into(
+        domain_healthy,
+        domain_size,
+        domains_per_replica,
+        packed,
+        &mut PackScratch::default(),
+        &mut out,
+    );
+    out
+}
+
+/// Allocation-free [`packed_replica_tp`]: writes the per-replica TP
+/// degrees into `out` (cleared first), reusing `scratch` buffers. The
+/// sorted expansion of the counting sort is never materialized — a
+/// replica's min is the value at position `r * domains_per_replica` of
+/// the (virtual) ascending sequence, found by walking the histogram
+/// with a running index. Produces exactly `pack_domains(..).replica_tp`.
+pub fn packed_replica_tp_into(
+    domain_healthy: &[usize],
+    domain_size: usize,
+    domains_per_replica: usize,
+    packed: bool,
+    scratch: &mut PackScratch,
+    out: &mut Vec<usize>,
+) {
     assert!(domains_per_replica >= 1);
     let n_replicas = domain_healthy.len() / domains_per_replica;
     let used = n_replicas * domains_per_replica;
-    let mut replica_tp = Vec::with_capacity(n_replicas);
+    out.clear();
+    out.reserve(n_replicas);
     if !packed {
         for r in 0..n_replicas {
             let chunk = &domain_healthy[r * domains_per_replica..(r + 1) * domains_per_replica];
             let tp = chunk.iter().copied().min().unwrap();
-            replica_tp.push(tp.min(domain_size));
+            out.push(tp.min(domain_size));
         }
-        return replica_tp;
+        return;
     }
     let max_h = domain_healthy[..used].iter().copied().max().unwrap_or(0);
-    let mut counts = vec![0usize; max_h + 1];
+    scratch.counts.clear();
+    scratch.counts.resize(max_h + 1, 0);
     for &h in &domain_healthy[..used] {
-        counts[h] += 1;
+        scratch.counts[h] += 1;
     }
-    // Ascending healthy values; a replica's min is its chunk's first.
-    let mut sorted = Vec::with_capacity(used);
-    for (h, &c) in counts.iter().enumerate() {
-        for _ in 0..c {
-            sorted.push(h);
+    // Ascending healthy values; a replica's min sits at index r*per of
+    // the sorted sequence. `idx` tracks where each histogram bucket
+    // starts in that sequence; bucket `h` covers [idx, idx + c).
+    let mut idx = 0usize;
+    for (h, &c) in scratch.counts.iter().enumerate() {
+        if c == 0 {
+            continue;
         }
+        // First replica-start position (multiple of per) inside the bucket.
+        let mut pos = idx.div_ceil(domains_per_replica) * domains_per_replica;
+        while pos < idx + c {
+            out.push(h.min(domain_size));
+            pos += domains_per_replica;
+        }
+        idx += c;
     }
-    for r in 0..n_replicas {
-        replica_tp.push(sorted[r * domains_per_replica].min(domain_size));
-    }
-    replica_tp
+    debug_assert_eq!(out.len(), n_replicas);
 }
 
 /// Lower bound on impacted replicas: the partially/fully failed domains
@@ -189,6 +232,37 @@ mod tests {
                 let full = pack_domains(&healthy, domain_size, per, packed);
                 let fast = packed_replica_tp(&healthy, domain_size, per, packed);
                 assert_eq!(full.replica_tp, fast, "healthy={healthy:?} per={per} packed={packed}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_varied_instances() {
+        // One PackScratch + one out vec reused across instances of
+        // different sizes/shapes must keep matching the reference.
+        let mut rng = Rng::new(123);
+        let mut scratch = PackScratch::default();
+        let mut out = Vec::new();
+        for _ in 0..200 {
+            let per = [1usize, 2, 4][rng.index(3)];
+            let n_domains = per * (1 + rng.index(16));
+            let domain_size = [8usize, 32, 72][rng.index(3)];
+            let healthy: Vec<usize> = (0..n_domains)
+                .map(|_| {
+                    if rng.chance(0.4) {
+                        rng.index(domain_size + 1)
+                    } else {
+                        domain_size
+                    }
+                })
+                .collect();
+            for packed in [false, true] {
+                packed_replica_tp_into(&healthy, domain_size, per, packed, &mut scratch, &mut out);
+                assert_eq!(
+                    out,
+                    pack_domains(&healthy, domain_size, per, packed).replica_tp,
+                    "healthy={healthy:?} per={per} packed={packed}"
+                );
             }
         }
     }

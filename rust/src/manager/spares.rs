@@ -59,6 +59,60 @@ pub fn apply_spares(
     SpareOutcome { effective_healthy: effective, spares_used: used, assignment }
 }
 
+/// Split a *full-fleet* snapshot into its job-domain slice and the
+/// live-adjusted spare pool: job domains lead, the spare tail is the
+/// last `pool.spare_domains` entries, and spares that are themselves
+/// failed shrink the pool. This is the ONE derivation shared by
+/// `FleetSim` (steady-state evaluation *and* transition charges) and
+/// the shared-sweep `MultiPolicySim` — keeping them from drifting apart
+/// is exactly the configured-vs-live bug class fixed in PR 3.
+pub fn split_job_spares<'h>(
+    domain_healthy: &'h [usize],
+    domain_size: usize,
+    pool: &SparePolicy,
+) -> (&'h [usize], SparePolicy) {
+    let n_job = domain_healthy.len() - pool.spare_domains;
+    let live = domain_healthy[n_job..].iter().filter(|&&h| h == domain_size).count();
+    (&domain_healthy[..n_job], SparePolicy { spare_domains: live, ..*pool })
+}
+
+/// Allocation-free [`apply_spares`] for the sweep hot path: substitutes
+/// spares into `effective` (cleared and rebuilt from `domain_healthy`)
+/// and returns the spares consumed. No [`Assignment`] is built — callers
+/// derive the replica TP degrees with
+/// [`super::packing::packed_replica_tp_into`] (always `packed = true`,
+/// matching [`apply_spares`]'s internal `pack_domains` call).
+///
+/// Substitution picks the most-damaged domains first. Ties at the
+/// substitution boundary are broken by `sort_unstable` rather than the
+/// reference's stable sort, which can substitute a *different* domain of
+/// equal health — the resulting health **multiset** (and therefore
+/// every packed-mode response and `spares_used`) is identical.
+pub fn apply_spares_into(
+    domain_healthy: &[usize],
+    domain_size: usize,
+    policy: &SparePolicy,
+    effective: &mut Vec<usize>,
+    order: &mut Vec<usize>,
+) -> usize {
+    effective.clear();
+    effective.extend_from_slice(domain_healthy);
+    order.clear();
+    order.extend(0..effective.len());
+    order.sort_unstable_by_key(|&d| effective[d]);
+    let mut used = 0;
+    for &d in order.iter() {
+        if used >= policy.spare_domains {
+            break;
+        }
+        if effective[d] < domain_size {
+            effective[d] = domain_size;
+            used += 1;
+        }
+    }
+    used
+}
+
 /// Can the job process its full minibatch? With NTP, replicas at
 /// `tp >= min_tp` still deliver *reduced* batch; the group meets the full
 /// minibatch only if the shortfall is zero — i.e. every replica is at
@@ -69,11 +123,22 @@ pub fn meets_minibatch(
     min_tp: usize,
     power_boosted: bool,
 ) -> bool {
-    assignment.replica_tp.iter().all(|&tp| {
+    meets_minibatch_tp(&assignment.replica_tp, assignment.domain_size, min_tp, power_boosted)
+}
+
+/// [`meets_minibatch`] over a bare replica-TP slice (the sweep hot path
+/// has no [`Assignment`]).
+pub fn meets_minibatch_tp(
+    replica_tp: &[usize],
+    domain_size: usize,
+    min_tp: usize,
+    power_boosted: bool,
+) -> bool {
+    replica_tp.iter().all(|&tp| {
         if power_boosted {
             tp >= min_tp
         } else {
-            tp >= assignment.domain_size
+            tp >= domain_size
         }
     })
 }
@@ -109,6 +174,32 @@ mod tests {
         assert!(!meets_minibatch(&o.assignment, 28, false));
         // ... but power boosting saves it (tp 31 >= min 28, full batch)
         assert!(meets_minibatch(&o.assignment, 28, true));
+    }
+
+    #[test]
+    fn apply_spares_into_matches_reference_multiset() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(55);
+        let mut effective = Vec::new();
+        let mut order = Vec::new();
+        for _ in 0..300 {
+            let n = 4 + rng.index(24);
+            let domain_size = [8usize, 32][rng.index(2)];
+            let healthy: Vec<usize> = (0..n)
+                .map(|_| if rng.chance(0.4) { rng.index(domain_size + 1) } else { domain_size })
+                .collect();
+            let policy = SparePolicy { spare_domains: rng.index(6), min_tp: 7 };
+            let reference = apply_spares(&healthy, domain_size, 1, &policy);
+            let used =
+                apply_spares_into(&healthy, domain_size, &policy, &mut effective, &mut order);
+            assert_eq!(used, reference.spares_used, "healthy={healthy:?}");
+            // Same health multiset (tie-breaking may differ by index).
+            let mut a = effective.clone();
+            let mut b = reference.effective_healthy.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "healthy={healthy:?} policy={policy:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,607 @@
+//! Shared-sweep multi-policy fleet engine.
+//!
+//! After the policy layer (PR 2), every bench and the `fleet` CLI
+//! compared P policies by replaying the same failure trace P times —
+//! one [`super::FleetSim::run`] per policy, each re-evaluating every
+//! changed snapshot from scratch. The paper's headline claims (§7,
+//! Figs. 6/7) are statistical: they only emerge from fleets of
+//! 32K–100K+ GPUs swept over many Monte-Carlo traces × many policies,
+//! and at SPARe scale (100K+ GPUs, arXiv 2603.00357) the per-policy
+//! sweep cost explodes. This module turns a P-policy sweep into **one**
+//! trace replay:
+//!
+//! * [`MultiPolicySim`] — one [`FleetReplayer`] pass per trace; every
+//!   unique snapshot version is evaluated for *all* requested policies,
+//!   with one accumulator per policy. Transition charges and
+//!   integration reuse the exact `FleetSim` machinery, so the
+//!   per-policy [`FleetStats`] are bit-identical to P separate
+//!   `FleetSim::run` calls (`rust/tests/multi_policy_sweep.rs`).
+//! * [`SnapshotSig`] — failures are rare, so a snapshot is keyed by the
+//!   sorted multiset of *damaged* domains only, as `(deficit, count)`
+//!   pairs with inline storage (no heap below
+//!   [`SIG_INLINE`] distinct deficit values). In packed mode —
+//!   and in fixed-minibatch mode, whose spare substitution and packing
+//!   always reorder — every in-tree policy's response is a pure
+//!   function of this signature (property-tested in
+//!   `rust/tests/multi_policy_sweep.rs`; unpacked flexible mode is
+//!   position-dependent and bypasses the memo).
+//! * [`ResponseMemo`] — a signature-keyed response cache (each unique
+//!   key holds every policy's response, so a snapshot costs one hash),
+//!   shared across snapshots, trials and sweep points, carrying the
+//!   [`EvalScratch`] buffers so the steady-state sweep allocates
+//!   nothing: a repeated damage pattern costs one hash lookup instead
+//!   of a full pack + table walk per policy.
+
+use super::fleet::{Accum, FleetStats, StrategyTable};
+use super::spares::SparePolicy;
+use crate::cluster::Topology;
+use crate::failure::{BlastRadius, FleetReplayer, Trace};
+use crate::policy::{EvalScratch, FtPolicy, PolicyCtx, TransitionCosts};
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+/// Distinct deficit values a [`SnapshotSig`] stores without touching
+/// the heap. Failures are rare and quantized (most damaged domains are
+/// missing exactly one GPU), so real sweeps essentially never spill.
+pub const SIG_INLINE: usize = 8;
+
+/// Sparse snapshot signature: the sorted multiset of damaged domains,
+/// run-length encoded as `(deficit, count)` pairs in ascending deficit
+/// order (`deficit = domain_size - healthy`, only `deficit > 0`
+/// domains appear). Two snapshots with equal signatures have equal
+/// damaged-domain multisets — and therefore equal packed-mode policy
+/// responses, which is what makes [`ResponseMemo`] sound.
+#[derive(Clone, Debug)]
+pub struct SnapshotSig {
+    /// Logical number of `(deficit, count)` pairs.
+    len: u32,
+    /// Inline pair storage (valid for `len <= SIG_INLINE`).
+    inline: [(u32, u32); SIG_INLINE],
+    /// Spill storage holding *all* pairs once `len > SIG_INLINE`.
+    spill: Vec<(u32, u32)>,
+}
+
+impl SnapshotSig {
+    pub fn new() -> SnapshotSig {
+        SnapshotSig { len: 0, inline: [(0, 0); SIG_INLINE], spill: Vec::new() }
+    }
+
+    /// The `(deficit, count)` pairs, ascending in deficit.
+    pub fn pairs(&self) -> &[(u32, u32)] {
+        if self.len as usize <= SIG_INLINE {
+            &self.inline[..self.len as usize]
+        } else {
+            &self.spill
+        }
+    }
+
+    /// Total damaged domains in the snapshot.
+    pub fn n_damaged(&self) -> usize {
+        self.pairs().iter().map(|&(_, c)| c as usize).sum()
+    }
+
+    /// Whether the signature lives entirely in inline storage.
+    pub fn is_inline(&self) -> bool {
+        self.len as usize <= SIG_INLINE
+    }
+
+    /// Rebuild in place from per-domain healthy counts. `deficits` is
+    /// caller-owned scratch (reused capacity ⇒ no steady-state
+    /// allocation).
+    pub fn rebuild(&mut self, counts: &[usize], domain_size: usize, deficits: &mut Vec<u32>) {
+        deficits.clear();
+        for &h in counts {
+            if h < domain_size {
+                deficits.push((domain_size - h) as u32);
+            }
+        }
+        deficits.sort_unstable();
+        self.len = 0;
+        self.spill.clear();
+        let mut i = 0;
+        while i < deficits.len() {
+            let d = deficits[i];
+            let mut c = 1usize;
+            while i + c < deficits.len() && deficits[i + c] == d {
+                c += 1;
+            }
+            self.push((d, c as u32));
+            i += c;
+        }
+    }
+
+    fn push(&mut self, pair: (u32, u32)) {
+        let len = self.len as usize;
+        if len < SIG_INLINE {
+            self.inline[len] = pair;
+        } else {
+            if len == SIG_INLINE {
+                // First spill: move the inline prefix over.
+                self.spill.extend_from_slice(&self.inline);
+            }
+            self.spill.push(pair);
+        }
+        self.len += 1;
+    }
+}
+
+impl Default for SnapshotSig {
+    fn default() -> Self {
+        SnapshotSig::new()
+    }
+}
+
+impl PartialEq for SnapshotSig {
+    fn eq(&self, other: &SnapshotSig) -> bool {
+        self.pairs() == other.pairs()
+    }
+}
+impl Eq for SnapshotSig {}
+impl Hash for SnapshotSig {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.pairs().hash(state);
+    }
+}
+
+/// Memo key: the damage signature plus the two snapshot-dependent
+/// scalars a response may consult — the job-domain count (sweep points
+/// trade job domains for spares) and the live spare pool.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct MemoKey {
+    sig: SnapshotSig,
+    n_job: u32,
+    /// Live spare-domain pool; `u32::MAX` ⇒ flexible-minibatch mode.
+    live_spares: u32,
+}
+
+/// Sweep-configuration fingerprint: a [`ResponseMemo`] is only valid
+/// for one evaluation context (same table *contents*, packing mode,
+/// replica shape, spare `min_tp`). [`MultiPolicySim`] binds the memo on
+/// first use and panics if it is later reused with an incompatible
+/// config — the table is fingerprinted by its response-defining
+/// contents ([`table_fingerprint`]), so e.g. two tables built for
+/// different `RackDesign`s (identical shapes, different `batch_pw`)
+/// are correctly rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct MemoCtx {
+    domain_size: usize,
+    domains_per_replica: usize,
+    packed: bool,
+    spare_min_tp: usize,
+    table_fingerprint: u64,
+}
+
+/// Content hash of everything in a [`StrategyTable`] that a policy
+/// response can depend on. f64 values hash by bit pattern.
+fn table_fingerprint(table: &StrategyTable) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    let mut h = DefaultHasher::new();
+    table.full_tp.hash(&mut h);
+    table.min_tp.hash(&mut h);
+    table.full_local_batch.hash(&mut h);
+    table.batch.hash(&mut h);
+    table.batch_pw.hash(&mut h);
+    for p in &table.power {
+        match p {
+            None => 0u64.hash(&mut h),
+            Some(v) => (1u64, v.to_bits()).hash(&mut h),
+        }
+    }
+    table.reshard_overhead.to_bits().hash(&mut h);
+    h.finish()
+}
+
+/// Signature-keyed response cache — each unique snapshot key maps to
+/// the responses of **every** policy in the sweep's list (one hash +
+/// one key per snapshot, not per policy) — plus the scratch buffers
+/// threaded through every evaluation. Create once and pass to
+/// [`MultiPolicySim::run_with`] / [`MultiPolicySim::run_trials`] to
+/// share memoized responses across snapshots, Monte-Carlo trials and
+/// sweep points. The memo is bound on first use to one evaluation
+/// context (table contents fingerprinted) **and one policy list**
+/// (order included); reuse with a different config or list panics
+/// instead of silently serving one policy's cached responses as
+/// another's. Limitation: policies are identified by [`FtPolicy::name`]
+/// — two instances of the same policy type with different *parameters*
+/// but the same name would alias, so give parameterized policy variants
+/// distinct names (every in-tree registry policy is a parameterless
+/// singleton).
+pub struct ResponseMemo {
+    map: HashMap<MemoKey, Box<[(f64, bool, usize)]>>,
+    n_policies: usize,
+    policy_names: Vec<&'static str>,
+    ctx: Option<MemoCtx>,
+    hits: u64,
+    misses: u64,
+    // Scratch shared by every evaluation driven through this memo.
+    sig: SnapshotSig,
+    deficits: Vec<u32>,
+    scratch: EvalScratch,
+}
+
+impl ResponseMemo {
+    pub fn new(n_policies: usize) -> ResponseMemo {
+        ResponseMemo {
+            map: HashMap::new(),
+            n_policies,
+            policy_names: Vec::new(),
+            ctx: None,
+            hits: 0,
+            misses: 0,
+            sig: SnapshotSig::new(),
+            deficits: Vec::new(),
+            scratch: EvalScratch::default(),
+        }
+    }
+
+    /// Snapshot lookups served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Snapshot lookups that fell through to policy evaluations.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Fraction of snapshot lookups served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Unique snapshot keys cached (each holds all policies' responses).
+    pub fn unique_entries(&self) -> usize {
+        self.map.len()
+    }
+
+    fn bind(&mut self, expect: MemoCtx, policies: &[&dyn FtPolicy]) {
+        assert_eq!(
+            self.n_policies,
+            policies.len(),
+            "ResponseMemo built for a different policy count"
+        );
+        match self.ctx {
+            None => {
+                self.ctx = Some(expect);
+                self.policy_names = policies.iter().map(|p| p.name()).collect();
+            }
+            Some(have) => {
+                assert_eq!(
+                    have, expect,
+                    "ResponseMemo reused across incompatible sweep configurations"
+                );
+                assert!(
+                    self.policy_names.iter().zip(policies).all(|(&n, p)| n == p.name()),
+                    "ResponseMemo reused across a different policy list \
+                     (have {:?}, got {:?})",
+                    self.policy_names,
+                    policies.iter().map(|p| p.name()).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+}
+
+/// One-replay-per-trace sweep over many fault-tolerance policies: the
+/// shared-sweep counterpart of [`super::FleetSim`] (which remains the
+/// per-policy reference implementation). Field semantics are identical
+/// to `FleetSim`, with `policies` replacing the single `policy`.
+pub struct MultiPolicySim<'a> {
+    pub topo: &'a Topology,
+    pub table: &'a StrategyTable,
+    pub domains_per_replica: usize,
+    /// Policies evaluated per snapshot; output order matches.
+    pub policies: &'a [&'a dyn FtPolicy],
+    pub spares: Option<SparePolicy>,
+    pub packed: bool,
+    pub blast: BlastRadius,
+    pub transition: Option<TransitionCosts>,
+}
+
+impl<'a> MultiPolicySim<'a> {
+    /// A fresh memo sized for this sim's policy list.
+    pub fn memo(&self) -> ResponseMemo {
+        ResponseMemo::new(self.policies.len())
+    }
+
+    /// Sweep one trace with a private memo. Returns one [`FleetStats`]
+    /// per policy, bit-identical to running [`super::FleetSim::run`]
+    /// once per policy.
+    pub fn run(&self, trace: &Trace, step_hours: f64) -> Vec<FleetStats> {
+        self.run_with(trace, step_hours, &mut self.memo())
+    }
+
+    /// Sweep one trace, sharing `memo` with other sweeps of the same
+    /// evaluation context (same table / packing / replica shape) and
+    /// the same policy list — both enforced by the memo's bind check.
+    pub fn run_with(
+        &self,
+        trace: &Trace,
+        step_hours: f64,
+        memo: &mut ResponseMemo,
+    ) -> Vec<FleetStats> {
+        let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
+        self.sweep(&mut rep, step_hours, memo)
+    }
+
+    /// Sweep many traces (Monte-Carlo trials) reusing one replayer
+    /// ([`FleetReplayer::reset`] keeps the fleet-health allocation) and
+    /// one shared memo. Returns per-trace, per-policy stats.
+    pub fn run_trials(
+        &self,
+        traces: &[Trace],
+        step_hours: f64,
+        memo: &mut ResponseMemo,
+    ) -> Vec<Vec<FleetStats>> {
+        let mut out = Vec::with_capacity(traces.len());
+        let Some(first) = traces.first() else {
+            return out;
+        };
+        let mut rep = FleetReplayer::new(first, self.topo, self.blast);
+        out.push(self.sweep(&mut rep, step_hours, memo));
+        for trace in &traces[1..] {
+            rep.reset(trace);
+            out.push(self.sweep(&mut rep, step_hours, memo));
+        }
+        out
+    }
+
+    /// Core sweep: mirrors `FleetSim::run` step-for-step (same sample
+    /// grid, same version-gated evaluation, same transition charges) so
+    /// the integrated stats are bit-identical per policy.
+    fn sweep(
+        &self,
+        rep: &mut FleetReplayer<'_>,
+        step_hours: f64,
+        memo: &mut ResponseMemo,
+    ) -> Vec<FleetStats> {
+        let n_policies = self.policies.len();
+        memo.bind(self.memo_ctx(), self.policies);
+        let n_steps = (rep.horizon_hours() / step_hours).ceil() as usize;
+        let mut accs = vec![Accum::default(); n_policies];
+        let mut outs: Vec<(f64, bool, usize)> = vec![(0.0, false, 0); n_policies];
+        let mut last_version: Option<u64> = None;
+        let mut prev_counts: Vec<usize> = Vec::new();
+        for step in 0..n_steps {
+            let t = step as f64 * step_hours;
+            let fleet = rep.advance(t);
+            let version = fleet.version();
+            if last_version != Some(version) {
+                let counts = fleet.domain_healthy_counts();
+                if step == 0 {
+                    prev_counts.clear();
+                    prev_counts.extend_from_slice(counts);
+                } else if counts != &prev_counts[..] {
+                    let ctx = self.ctx(self.live_spares_in(counts));
+                    for (acc, &policy) in accs.iter_mut().zip(self.policies) {
+                        acc.charge(policy, &ctx, &prev_counts, counts);
+                    }
+                    prev_counts.clear();
+                    prev_counts.extend_from_slice(counts);
+                }
+                self.evaluate_all(counts, memo, &mut outs);
+                last_version = Some(version);
+            }
+            for (acc, &out) in accs.iter_mut().zip(&outs) {
+                acc.sample(out);
+            }
+        }
+        let spare_gpus = self
+            .spares
+            .map(|p| p.spare_domains * self.topo.domain_size)
+            .unwrap_or(0);
+        accs.iter()
+            .map(|acc| acc.finalize(n_steps, step_hours, self.topo.n_gpus, spare_gpus))
+            .collect()
+    }
+
+    /// Evaluate one snapshot for every policy, through the memo when
+    /// sound. Job/spare split and live-pool derivation are verbatim
+    /// `FleetSim::evaluate` / `FleetSim::live_spares_in`.
+    fn evaluate_all(
+        &self,
+        counts: &[usize],
+        memo: &mut ResponseMemo,
+        outs: &mut [(f64, bool, usize)],
+    ) {
+        let (job_healthy, live, live_key) = match self.spares {
+            None => (counts, None, u32::MAX),
+            Some(pool) => {
+                let (job, live) = super::spares::split_job_spares(
+                    counts,
+                    self.topo.domain_size,
+                    &pool,
+                );
+                let live_key = live.spare_domains as u32;
+                (job, Some(live), live_key)
+            }
+        };
+        let ctx = self.ctx(live);
+        // Memoization is sound iff the response is a pure function of
+        // the damaged-domain multiset: packed mode, or fixed-minibatch
+        // mode (spare substitution + packing always reorder). Unpacked
+        // flexible mode keys replicas by domain *position* and must
+        // bypass the memo (see the counterexample test in
+        // rust/tests/multi_policy_sweep.rs).
+        if !(self.packed || self.spares.is_some()) {
+            for (out, &policy) in outs.iter_mut().zip(self.policies) {
+                *out = policy.respond_with(&ctx, job_healthy, &mut memo.scratch);
+            }
+            return;
+        }
+        // One key + one hash per snapshot: the cached entry holds every
+        // policy's response in list order (the bind check guarantees the
+        // memo's list matches this sim's).
+        memo.sig.rebuild(job_healthy, self.topo.domain_size, &mut memo.deficits);
+        let key = MemoKey {
+            sig: memo.sig.clone(),
+            n_job: job_healthy.len() as u32,
+            live_spares: live_key,
+        };
+        if let Some(cached) = memo.map.get(&key) {
+            memo.hits += 1;
+            outs.copy_from_slice(cached);
+        } else {
+            memo.misses += 1;
+            for (out, &policy) in outs.iter_mut().zip(self.policies) {
+                *out = policy.respond_with(&ctx, job_healthy, &mut memo.scratch);
+            }
+            memo.map.insert(key, outs.to_vec().into_boxed_slice());
+        }
+    }
+
+    fn ctx(&self, live_spares: Option<SparePolicy>) -> PolicyCtx<'_> {
+        PolicyCtx {
+            table: self.table,
+            domain_size: self.topo.domain_size,
+            domains_per_replica: self.domains_per_replica,
+            packed: self.packed,
+            spares: live_spares,
+            n_gpus: self.topo.n_gpus,
+            transition: self.transition,
+        }
+    }
+
+    /// [`super::spares::split_job_spares`] — the one live-pool
+    /// derivation shared with `FleetSim`.
+    fn live_spares_in(&self, domain_healthy: &[usize]) -> Option<SparePolicy> {
+        self.spares.map(|pool| {
+            super::spares::split_job_spares(domain_healthy, self.topo.domain_size, &pool).1
+        })
+    }
+
+    fn memo_ctx(&self) -> MemoCtx {
+        MemoCtx {
+            domain_size: self.topo.domain_size,
+            domains_per_replica: self.domains_per_replica,
+            packed: self.packed,
+            spare_min_tp: self.spares.map(|p| p.min_tp).unwrap_or(0),
+            table_fingerprint: table_fingerprint(self.table),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn sig_of(counts: &[usize], domain_size: usize) -> SnapshotSig {
+        let mut sig = SnapshotSig::new();
+        let mut scratch = Vec::new();
+        sig.rebuild(counts, domain_size, &mut scratch);
+        sig
+    }
+
+    #[test]
+    fn signature_encodes_damage_multiset() {
+        let sig = sig_of(&[32, 31, 32, 29, 31, 0], 32);
+        // deficits: 1, 3, 1, 32 -> sorted RLE: (1,2), (3,1), (32,1)
+        assert_eq!(sig.pairs(), &[(1, 2), (3, 1), (32, 1)]);
+        assert_eq!(sig.n_damaged(), 4);
+        assert!(sig.is_inline());
+        // healthy snapshot: empty signature
+        let healthy = sig_of(&[32; 64], 32);
+        assert_eq!(healthy.pairs(), &[]);
+        assert_eq!(healthy.n_damaged(), 0);
+    }
+
+    #[test]
+    fn signature_is_permutation_invariant() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let n = 8 + rng.index(40);
+            let counts: Vec<usize> = (0..n)
+                .map(|_| if rng.chance(0.3) { rng.index(33) } else { 32 })
+                .collect();
+            let mut shuffled = counts.clone();
+            // Fisher-Yates
+            for i in (1..shuffled.len()).rev() {
+                let j = rng.index(i + 1);
+                shuffled.swap(i, j);
+            }
+            let a = sig_of(&counts, 32);
+            let b = sig_of(&shuffled, 32);
+            assert_eq!(a, b, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn signature_spills_beyond_inline_capacity() {
+        // 10 distinct deficit values: 1..=10 -> spills past SIG_INLINE.
+        let counts: Vec<usize> = (1..=10).map(|d| 32 - d).collect();
+        let sig = sig_of(&counts, 32);
+        assert!(!sig.is_inline());
+        assert_eq!(sig.pairs().len(), 10);
+        assert_eq!(sig.pairs()[0], (1, 1));
+        assert_eq!(sig.pairs()[9], (10, 1));
+        // rebuilding the same storage back to a small signature works
+        let mut sig = sig;
+        let mut scratch = Vec::new();
+        sig.rebuild(&[32, 30], 32, &mut scratch);
+        assert!(sig.is_inline());
+        assert_eq!(sig.pairs(), &[(2, 1)]);
+    }
+
+    #[test]
+    fn distinct_damage_distinct_signatures() {
+        let a = sig_of(&[31, 31, 32, 32], 32);
+        let b = sig_of(&[30, 32, 32, 32], 32);
+        let c = sig_of(&[31, 32, 32, 32], 32);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn memo_counts_hits_and_misses() {
+        let mut memo = ResponseMemo::new(2);
+        assert_eq!(memo.hit_rate(), 0.0);
+        assert_eq!(memo.unique_entries(), 0);
+        memo.hits = 3;
+        memo.misses = 1;
+        assert!((memo.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    fn test_memo_ctx() -> MemoCtx {
+        MemoCtx {
+            domain_size: 32,
+            domains_per_replica: 4,
+            packed: true,
+            spare_min_tp: 0,
+            table_fingerprint: 0xFEED,
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different policy list")]
+    fn memo_rejects_a_different_policy_list() {
+        use crate::policy::registry;
+        let a = [registry::parse("ntp").unwrap(), registry::parse("dp-drop").unwrap()];
+        let b = [
+            registry::parse("ckpt-restart").unwrap(),
+            registry::parse("spare-mig").unwrap(),
+        ];
+        let mut memo = ResponseMemo::new(2);
+        memo.bind(test_memo_ctx(), &a);
+        memo.bind(test_memo_ctx(), &a); // same list: fine
+        memo.bind(test_memo_ctx(), &b); // different policies: must panic
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible sweep configurations")]
+    fn memo_rejects_an_incompatible_context() {
+        use crate::policy::registry;
+        let a = [registry::parse("ntp").unwrap()];
+        let mut memo = ResponseMemo::new(1);
+        memo.bind(test_memo_ctx(), &a);
+        // a different table fingerprint (e.g. same-shaped tables built
+        // for different RackDesigns) must be rejected
+        memo.bind(MemoCtx { table_fingerprint: 0xBEEF, ..test_memo_ctx() }, &a);
+    }
+}

@@ -9,9 +9,9 @@
 //! recovery rejoin) costs a full-job restart, and unplanned failures
 //! additionally lose half a checkpoint interval of work on average.
 
-use super::{degraded_domains, legacy, FtPolicy, PolicyCtx, PolicyResponse};
-use crate::manager::packing::packed_replica_tp;
-use crate::manager::spares::apply_spares;
+use super::{degraded_domains, legacy, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse};
+use crate::manager::packing::{packed_replica_tp, packed_replica_tp_into};
+use crate::manager::spares::{apply_spares, apply_spares_into};
 use crate::sim::engine::FtStrategy;
 
 /// Unit policy: all cost parameters come from
@@ -58,6 +58,59 @@ impl FtPolicy for CheckpointRestart {
             spares_used,
             overhead: 1.0,
         }
+    }
+
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        s: &mut EvalScratch,
+    ) -> (f64, bool, usize) {
+        let spares_used = match ctx.spares {
+            Some(pool) => {
+                let used = apply_spares_into(
+                    job_healthy,
+                    ctx.domain_size,
+                    &pool,
+                    &mut s.effective,
+                    &mut s.order,
+                );
+                packed_replica_tp_into(
+                    &s.effective,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    true,
+                    &mut s.pack,
+                    &mut s.replica_tp,
+                );
+                used
+            }
+            None => {
+                packed_replica_tp_into(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    ctx.packed,
+                    &mut s.pack,
+                    &mut s.replica_tp,
+                );
+                0
+            }
+        };
+        let paused =
+            ctx.spares.is_some() && s.replica_tp.iter().any(|&tp| tp < ctx.domain_size);
+        if paused {
+            return (0.0, true, spares_used);
+        }
+        let processed: usize = s
+            .replica_tp
+            .iter()
+            .map(|&tp| ctx.table.replica_batch(tp, FtStrategy::DpDrop))
+            .sum();
+        let capacity = ctx.table.full_local_batch * s.replica_tp.len();
+        // overhead is exactly 1.0 (uniform TP after restart): multiplying
+        // by it is a bitwise no-op, so it is omitted here.
+        (processed as f64 / capacity as f64, false, spares_used)
     }
 
     fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {

@@ -7,10 +7,11 @@
 //! asserted by `rust/tests/policy_conformance.rs`.
 
 use super::{
-    affected_gpus, changed_domains, FtPolicy, PolicyCtx, PolicyResponse, ReplicaDecision,
+    affected_gpus, changed_domains, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse,
+    ReplicaDecision,
 };
-use crate::manager::packing::packed_replica_tp;
-use crate::manager::spares::{apply_spares, meets_minibatch};
+use crate::manager::packing::{packed_replica_tp, packed_replica_tp_into};
+use crate::manager::spares::{apply_spares, apply_spares_into, meets_minibatch, meets_minibatch_tp};
 use crate::sim::engine::FtStrategy;
 
 /// One legacy strategy as a policy.
@@ -132,6 +133,77 @@ impl FtPolicy for LegacyPolicy {
                     spares_used: o.spares_used,
                     overhead,
                 }
+            }
+        }
+    }
+
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        s: &mut EvalScratch,
+    ) -> (f64, bool, usize) {
+        match ctx.spares {
+            None => {
+                packed_replica_tp_into(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    ctx.packed,
+                    &mut s.pack,
+                    &mut s.replica_tp,
+                );
+                let processed: usize = s
+                    .replica_tp
+                    .iter()
+                    .map(|&tp| ctx.table.replica_batch(tp, self.strategy))
+                    .sum();
+                let capacity = ctx.table.full_local_batch * s.replica_tp.len();
+                let overhead = overhead_for(ctx.table, &s.replica_tp, self.strategy);
+                (processed as f64 / capacity as f64 * overhead, false, 0)
+            }
+            Some(policy) => {
+                let spares_used = apply_spares_into(
+                    job_healthy,
+                    ctx.domain_size,
+                    &policy,
+                    &mut s.effective,
+                    &mut s.order,
+                );
+                // apply_spares packs with `packed = true` internally.
+                packed_replica_tp_into(
+                    &s.effective,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    true,
+                    &mut s.pack,
+                    &mut s.replica_tp,
+                );
+                let ok = match self.strategy {
+                    FtStrategy::DpDrop => {
+                        meets_minibatch_tp(&s.replica_tp, ctx.domain_size, ctx.domain_size, false)
+                    }
+                    FtStrategy::Ntp => {
+                        let frac =
+                            ctx.table.group_minibatch_frac(&s.replica_tp, self.strategy);
+                        let shortfall = (1.0 - frac) * s.replica_tp.len() as f64;
+                        shortfall < 1.0
+                    }
+                    FtStrategy::NtpPw => {
+                        meets_minibatch_tp(&s.replica_tp, ctx.domain_size, policy.min_tp, true)
+                    }
+                };
+                if !ok {
+                    return (0.0, true, spares_used);
+                }
+                let processed: usize = s
+                    .replica_tp
+                    .iter()
+                    .map(|&tp| ctx.table.replica_batch(tp, self.strategy))
+                    .sum();
+                let capacity = ctx.table.full_local_batch * s.replica_tp.len();
+                let overhead = overhead_for(ctx.table, &s.replica_tp, self.strategy);
+                (processed as f64 / capacity as f64 * overhead, false, spares_used)
             }
         }
     }

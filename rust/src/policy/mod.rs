@@ -36,6 +36,7 @@ pub mod spare_migration;
 pub use checkpoint::CheckpointRestart;
 pub use spare_migration::SpareMigration;
 
+use crate::manager::packing::PackScratch;
 use crate::manager::{SparePolicy, StrategyTable};
 use crate::parallel::ParallelConfig;
 use crate::sim::engine::min_supported_tp;
@@ -98,6 +99,22 @@ impl PolicyResponse {
     }
 }
 
+/// Reusable buffers threaded through [`FtPolicy::respond_with`] so the
+/// steady-state fleet sweep ([`crate::manager::MultiPolicySim`])
+/// allocates nothing: every vector grows to the instance size once and
+/// is then reused across snapshots, policies, trials and sweep points.
+#[derive(Debug, Default)]
+pub struct EvalScratch {
+    /// Per-replica TP degrees of the current snapshot.
+    pub replica_tp: Vec<usize>,
+    /// Spare-substituted per-domain healthy counts (fixed-minibatch mode).
+    pub effective: Vec<usize>,
+    /// Domain permutation used by the spare substitution.
+    pub order: Vec<usize>,
+    /// Counting-sort histogram for the packing fast path.
+    pub pack: PackScratch,
+}
+
 /// A fault-tolerance policy: per-snapshot replica decisions plus the
 /// modeled cost of reconfiguring when the fleet's health changes.
 ///
@@ -110,6 +127,26 @@ pub trait FtPolicy: Send + Sync {
     /// count of the *job* domains (spare-pool tail already split off by
     /// the caller; the live pool size is in `ctx.spares`).
     fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse;
+
+    /// Allocation-free evaluation of one snapshot, returning only the
+    /// integrated quantities `(throughput, paused, spares_used)` —
+    /// exactly `respond(..)` collapsed through
+    /// [`PolicyResponse::throughput`], without materializing the
+    /// per-replica decision vector. The fleet-sweep hot path
+    /// ([`crate::manager::MultiPolicySim`]) calls this behind its
+    /// snapshot-signature memo; the default implementation delegates to
+    /// [`FtPolicy::respond`], and every in-tree policy overrides it with
+    /// a scratch-buffer version (equivalence asserted in
+    /// `rust/tests/policy_conformance.rs`).
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        _scratch: &mut EvalScratch,
+    ) -> (f64, bool, usize) {
+        let resp = self.respond(ctx, job_healthy);
+        (resp.throughput(ctx.table.full_local_batch), resp.paused, resp.spares_used)
+    }
 
     /// GPU-seconds of downtime charged when the fleet's per-domain
     /// health changes from `prev` to `next` (full fleet, spares
@@ -158,6 +195,17 @@ impl TransitionCosts {
 /// over the scale-up link, bounded by the busiest GPU of the
 /// [`crate::ntp::CopyPlan`] for the deepest supported reduction.
 pub fn reshard_transition_secs(sim: &IterationModel, cfg: &ParallelConfig) -> f64 {
+    reshard_transition_secs_over(sim, cfg, sim.cluster.gpu.nvlink_gbs)
+}
+
+/// [`reshard_transition_secs`] over an explicit scale-up link bandwidth
+/// (GB/s) instead of the cluster's NVLink spec — the `fleet
+/// --reshard-gbs` calibration knob.
+pub fn reshard_transition_secs_over(
+    sim: &IterationModel,
+    cfg: &ParallelConfig,
+    link_gbs: f64,
+) -> f64 {
     let n2 = min_supported_tp(cfg.tp);
     if n2 >= cfg.tp {
         return 0.0;
@@ -168,7 +216,7 @@ pub fn reshard_transition_secs(sim: &IterationModel, cfg: &ParallelConfig) -> f6
     let bytes = (info.copy.max_moved_units_per_shard() * state_bytes_per_unit) as f64
         * sim.model.layers as f64
         / cfg.pp as f64;
-    bytes / (sim.cluster.gpu.nvlink_gbs * 1e9)
+    bytes / (link_gbs * 1e9)
 }
 
 /// GPUs touched when `changed_domains` domains change health: every

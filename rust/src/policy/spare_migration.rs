@@ -10,11 +10,11 @@
 //! falls below [`SpareMigration::min_capacity_frac`].
 
 use super::{
-    affected_gpus, changed_domains, degraded_domains, legacy, FtPolicy, PolicyCtx,
+    affected_gpus, changed_domains, degraded_domains, legacy, EvalScratch, FtPolicy, PolicyCtx,
     PolicyResponse,
 };
-use crate::manager::packing::packed_replica_tp;
-use crate::manager::spares::apply_spares;
+use crate::manager::packing::{packed_replica_tp, packed_replica_tp_into};
+use crate::manager::spares::{apply_spares, apply_spares_into};
 use crate::sim::engine::FtStrategy;
 
 #[derive(Clone, Copy, Debug)]
@@ -61,13 +61,71 @@ impl FtPolicy for SpareMigration {
         PolicyResponse { replicas, paused, spares_used, overhead }
     }
 
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        s: &mut EvalScratch,
+    ) -> (f64, bool, usize) {
+        // 1) Migrate spares into the worst domains first.
+        let (spares_used, packed_from_effective) = match ctx.spares {
+            Some(pool) => (
+                apply_spares_into(
+                    job_healthy,
+                    ctx.domain_size,
+                    &pool,
+                    &mut s.effective,
+                    &mut s.order,
+                ),
+                true,
+            ),
+            None => (0, false),
+        };
+        // 2) Stack residual damage into the fewest replicas (always
+        //    reordered, regardless of ctx.packed), then NTP-shrink them.
+        let healthy: &[usize] =
+            if packed_from_effective { &s.effective } else { job_healthy };
+        packed_replica_tp_into(
+            healthy,
+            ctx.domain_size,
+            ctx.domains_per_replica,
+            true,
+            &mut s.pack,
+            &mut s.replica_tp,
+        );
+        let overhead = legacy::overhead_for(ctx.table, &s.replica_tp, FtStrategy::Ntp);
+        // 3) Redistribute the shortfall (gradient accumulation) — pause
+        //    only below the minimum surviving-capacity fraction.
+        let processed: usize = s
+            .replica_tp
+            .iter()
+            .map(|&tp| ctx.table.replica_batch(tp, FtStrategy::Ntp))
+            .sum();
+        let capacity = ctx.table.full_local_batch * s.replica_tp.len().max(1);
+        let frac = processed as f64 / capacity as f64;
+        let paused = ctx.spares.is_some() && frac < self.min_capacity_frac;
+        if paused {
+            return (0.0, true, spares_used);
+        }
+        let throughput_capacity = ctx.table.full_local_batch * s.replica_tp.len();
+        (processed as f64 / throughput_capacity as f64 * overhead, false, spares_used)
+    }
+
     fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
         let Some(t) = ctx.transition else { return 0.0 };
         // Affected replicas reshard their TP layout; each freshly
         // damaged domain additionally pulls a weight copy onto the
-        // spare domain migrated into its place.
+        // spare domain migrated into its place. Migrations are bounded
+        // by the *live* spare pool (failed spare domains cannot be
+        // migrated in — `ctx.spares` carries the live-adjusted pool, see
+        // `FleetSim::live_spares_in`); with no pool configured the term
+        // models pulling in warm standbys, one per fresh failure.
         let reshard = affected_gpus(ctx, changed_domains(prev, next)) as f64 * t.reshard_secs;
-        let migrations = degraded_domains(prev, next) * ctx.domain_size;
-        reshard + migrations as f64 * t.spare_load_secs
+        let degraded = degraded_domains(prev, next);
+        let migrated = match ctx.spares {
+            Some(pool) => degraded.min(pool.spare_domains),
+            None => degraded,
+        };
+        reshard + (migrated * ctx.domain_size) as f64 * t.spare_load_secs
     }
 }

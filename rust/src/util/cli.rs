@@ -84,13 +84,18 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `Some(parsed)` when the option is present, `None` when absent —
+    /// for numeric overrides whose default is computed elsewhere (e.g.
+    /// the modeled `fleet --reshard-secs`).
+    pub fn opt_f64(&mut self, name: &str) -> Option<f64> {
+        self.opt_str(name).map(|v| {
+            v.parse()
+                .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+        })
+    }
+
     pub fn f64_or(&mut self, name: &str, default: f64) -> f64 {
-        self.opt_str(name)
-            .map(|v| {
-                v.parse()
-                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
-            })
-            .unwrap_or(default)
+        self.opt_f64(name).unwrap_or(default)
     }
 
     /// Comma-separated usize list, e.g. `--tp 8,16,32`.

@@ -1,0 +1,288 @@
+//! Shared-sweep engine equivalence and memoization-soundness suite.
+//!
+//! * [`MultiPolicySim`] produces **bit-identical** per-policy
+//!   [`FleetStats`] to running the per-policy reference
+//!   `FleetSim::run` once per policy — property-tested over random
+//!   traces, spares on/off, transitions on/off, packed on/off.
+//! * Memo soundness: in packed mode (and in fixed-minibatch mode,
+//!   whose spare substitution + packing always reorder), every
+//!   registered policy's `(throughput, paused, spares_used)` is a pure
+//!   function of the damaged-domain **multiset** — permuting domains
+//!   never changes the response.
+//! * The counterexample that keeps the memo honest: in *unpacked*
+//!   flexible mode the response depends on domain **positions**, so two
+//!   snapshots with equal damage multisets can evaluate differently —
+//!   which is exactly why `MultiPolicySim` bypasses the memo there.
+//! * Sharing one [`ResponseMemo`] across trials and sweep points gives
+//!   the same stats as fresh memos.
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{BlastRadius, FailureModel, Trace};
+use ntp::manager::{
+    FleetSim, FleetStats, MultiPolicySim, ResponseMemo, SparePolicy, StrategyTable,
+};
+use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, EvalScratch, PolicyCtx, TransitionCosts};
+use ntp::power::RackDesign;
+use ntp::sim::{IterationModel, SimParams};
+use ntp::util::prng::Rng;
+use ntp::util::prop::{check, SeedGen};
+
+const DOMAIN_SIZE: usize = 32;
+const PER_REPLICA: usize = 4;
+
+fn setup() -> (IterationModel, ParallelConfig, StrategyTable) {
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 2 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: DOMAIN_SIZE, pp: PER_REPLICA, dp: 16, microbatch: 1 };
+    let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    (sim, cfg, table)
+}
+
+fn random_healthy(rng: &mut Rng, n: usize) -> Vec<usize> {
+    (0..n)
+        .map(|_| {
+            if rng.chance(0.35) {
+                DOMAIN_SIZE - 1 - rng.index(8)
+            } else if rng.chance(0.05) {
+                0
+            } else {
+                DOMAIN_SIZE
+            }
+        })
+        .collect()
+}
+
+fn shuffle(v: &mut [usize], rng: &mut Rng) {
+    for i in (1..v.len()).rev() {
+        let j = rng.index(i + 1);
+        v.swap(i, j);
+    }
+}
+
+#[test]
+fn shared_sweep_bit_identical_to_per_policy_runs() {
+    let (sim, cfg, table) = setup();
+    let policies = registry::all();
+    let gen = SeedGen;
+    check(0x5EE9, 8, &gen, |&seed| {
+        let mut rng = Rng::new(seed);
+        let spare_domains = [0usize, 4, 6][rng.index(3)];
+        let job_domains = PER_REPLICA * (8 + rng.index(12));
+        let topo =
+            Topology::of((job_domains + spare_domains) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+        let model = FailureModel::llama3().scaled(20.0 + rng.f64() * 60.0);
+        let horizon = 24.0 * (8.0 + rng.f64() * 15.0);
+        let trace = Trace::generate(&topo, &model, horizon, &mut rng);
+        let blast = [BlastRadius::Single, BlastRadius::Node][rng.index(2)];
+        let spares = if spare_domains > 0 {
+            Some(SparePolicy { spare_domains, min_tp: 28 })
+        } else {
+            // also exercises flexible mode (and unpacked flexible,
+            // where the memo is bypassed entirely)
+            None
+        };
+        for packed in [true, false] {
+            for transition in [None, Some(TransitionCosts::model(&sim, &cfg))] {
+                let msim = MultiPolicySim {
+                    topo: &topo,
+                    table: &table,
+                    domains_per_replica: PER_REPLICA,
+                    policies: &policies,
+                    spares,
+                    packed,
+                    blast,
+                    transition,
+                };
+                let shared = msim.run(&trace, 2.0);
+                for (i, &policy) in policies.iter().enumerate() {
+                    let fs = FleetSim {
+                        topo: &topo,
+                        table: &table,
+                        domains_per_replica: PER_REPLICA,
+                        policy,
+                        spares,
+                        packed,
+                        blast,
+                        transition,
+                    };
+                    let reference = fs.run(&trace, 2.0);
+                    if shared[i] != reference {
+                        return Err(format!(
+                            "policy {} packed {packed} spares {spares:?} transition \
+                             {:?}: shared {:?} != reference {reference:?}",
+                            policy.name(),
+                            transition.is_some(),
+                            shared[i]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn memo_shared_across_trials_and_sweep_points_is_sound() {
+    let (_sim, _cfg, table) = setup();
+    let policies = registry::all();
+    let job_domains = 24usize;
+    let max_spares = 6usize;
+    let topo = Topology::of((job_domains + max_spares) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(45.0);
+    let mut rng = Rng::new(0xA11);
+    let traces: Vec<Trace> = (0..3)
+        .map(|i| {
+            let mut r = rng.fork(i as u64);
+            Trace::generate(&topo, &model, 24.0 * 12.0, &mut r)
+        })
+        .collect();
+    // One memo shared across 3 trials x 3 spare budgets must reproduce
+    // what fresh memos produce: sweep points share the topology, and the
+    // pool size enters the memo key only through the live-spare count
+    // and the job-domain count (fig7-style sweeps rely on this).
+    let mut shared_memo = ResponseMemo::new(policies.len());
+    let mut with_shared: Vec<Vec<FleetStats>> = Vec::new();
+    let mut with_fresh: Vec<Vec<FleetStats>> = Vec::new();
+    for &spare_domains in &[0usize, 3, max_spares] {
+        let msim = MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policies: &policies,
+            spares: Some(SparePolicy { spare_domains, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Single,
+            transition: Some(TransitionCosts {
+                restart_secs: 900.0,
+                checkpoint_interval_secs: 3600.0,
+                reshard_secs: 2.0,
+                spare_load_secs: 300.0,
+            }),
+        };
+        with_shared.extend(msim.run_trials(&traces, 1.5, &mut shared_memo));
+        for trace in &traces {
+            with_fresh.push(msim.run(trace, 1.5));
+        }
+    }
+    assert_eq!(with_shared, with_fresh);
+    assert!(
+        shared_memo.hits() > 0,
+        "sharing across trials/sweep points should produce memo hits"
+    );
+}
+
+#[test]
+fn packed_responses_depend_only_on_damage_multiset() {
+    let (_sim, _cfg, table) = setup();
+    let policies = registry::all();
+    let job_domains = 24usize;
+    let spare_domains = 5usize;
+    let mut rng = Rng::new(0xB0B);
+    let mut scratch = EvalScratch::default();
+    for trial in 0..250 {
+        let job = random_healthy(&mut rng, job_domains);
+        let spare_tail = random_healthy(&mut rng, spare_domains);
+        // Permute the job domains: equal damage multiset, different
+        // positions. (Permuting the spare tail is covered implicitly —
+        // only its live count enters the evaluation, and counts are
+        // permutation-invariant.)
+        let mut job_perm = job.clone();
+        shuffle(&mut job_perm, &mut rng);
+        // The live pool exactly as the sweep derives it from the tail.
+        let live = spare_tail.iter().filter(|&&h| h == DOMAIN_SIZE).count();
+        for spares in [None, Some(SparePolicy { spare_domains: live, min_tp: 28 })] {
+            let ctx = PolicyCtx {
+                table: &table,
+                domain_size: DOMAIN_SIZE,
+                domains_per_replica: PER_REPLICA,
+                packed: true,
+                spares,
+                n_gpus: (job_domains + spare_domains) * DOMAIN_SIZE,
+                transition: None,
+            };
+            for policy in policies {
+                let a = policy.respond_with(&ctx, &job, &mut scratch);
+                let b = policy.respond_with(&ctx, &job_perm, &mut scratch);
+                assert_eq!(
+                    a,
+                    b,
+                    "trial {trial} {} spares {spares:?}: permuting domains changed \
+                     the packed-mode response (job={job:?})",
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+/// Why unpacked flexible mode must bypass the memo: without the
+/// resource manager's rank reassignment, a replica's TP is the min over
+/// its *positional* domain chunk, so the same damage multiset spread
+/// across chunks vs concentrated in one chunk gives different
+/// throughput. This is the documented counterexample — the memo would
+/// return the wrong cached value for the second snapshot.
+#[test]
+fn unpacked_mode_is_position_dependent_and_must_bypass_memo() {
+    let (_sim, _cfg, table) = setup();
+    let job_domains = 16usize; // 4 replicas x 4 domains
+    let ctx = PolicyCtx {
+        table: &table,
+        domain_size: DOMAIN_SIZE,
+        domains_per_replica: PER_REPLICA,
+        packed: false,
+        spares: None,
+        n_gpus: job_domains * DOMAIN_SIZE,
+        transition: None,
+    };
+    // Same multiset {31, 31, 31, 31, 32 x 12}: spread hits 4 replicas,
+    // concentrated hits 1.
+    let mut spread = vec![DOMAIN_SIZE; job_domains];
+    spread[0] = 31;
+    spread[4] = 31;
+    spread[8] = 31;
+    spread[12] = 31;
+    let mut packed_damage = vec![DOMAIN_SIZE; job_domains];
+    packed_damage[0] = 31;
+    packed_damage[1] = 31;
+    packed_damage[2] = 31;
+    packed_damage[3] = 31;
+    let mut scratch = EvalScratch::default();
+    let mut saw_difference = false;
+    for policy in registry::all() {
+        let a = policy.respond_with(&ctx, &spread, &mut scratch);
+        let b = policy.respond_with(&ctx, &packed_damage, &mut scratch);
+        // SPARE-MIG always restacks (ignores ctx.packed), so it agrees;
+        // the positional policies must not.
+        if policy.name() == "SPARE-MIG" {
+            assert_eq!(a, b, "SPARE-MIG restacks regardless of packing");
+        } else if a != b {
+            saw_difference = true;
+        }
+    }
+    assert!(
+        saw_difference,
+        "expected at least one policy to be position-dependent in unpacked mode"
+    );
+    // ... and in packed mode the very same snapshots agree for all.
+    let packed_ctx = PolicyCtx { packed: true, ..ctx };
+    for policy in registry::all() {
+        assert_eq!(
+            policy.respond_with(&packed_ctx, &spread, &mut scratch),
+            policy.respond_with(&packed_ctx, &packed_damage, &mut scratch),
+            "{}",
+            policy.name()
+        );
+    }
+}

@@ -18,7 +18,7 @@ use ntp::manager::packing::pack_domains;
 use ntp::manager::spares::{apply_spares, meets_minibatch};
 use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
 use ntp::parallel::ParallelConfig;
-use ntp::policy::{registry, PolicyCtx, TransitionCosts};
+use ntp::policy::{registry, EvalScratch, PolicyCtx, TransitionCosts};
 use ntp::power::RackDesign;
 use ntp::sim::engine::healthy_reshard_factor;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
@@ -147,6 +147,45 @@ fn legacy_ports_bit_identical_to_pre_refactor_paths() {
                     assert_eq!(
                         got, want,
                         "trial {trial} {strategy:?} spares {spares:?} packed {packed}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn respond_with_matches_respond_for_every_policy() {
+    // The allocation-free scratch path must collapse to exactly what
+    // `respond` + `PolicyResponse::throughput` produce — it is what the
+    // shared sweep memoizes, so any drift would silently poison every
+    // multi-policy result.
+    let (_sim, _cfg, table) = setup();
+    let mut rng = Rng::new(0x92);
+    let mut scratch = EvalScratch::default();
+    for trial in 0..200 {
+        let job = random_healthy(&mut rng, JOB_DOMAINS);
+        for policy in registry::all() {
+            for spares in [None, Some(SparePolicy { spare_domains: 3, min_tp: 28 })] {
+                for packed in [false, true] {
+                    let ctx = PolicyCtx {
+                        table: &table,
+                        domain_size: DOMAIN_SIZE,
+                        domains_per_replica: PER_REPLICA,
+                        packed,
+                        spares,
+                        n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
+                        transition: None,
+                    };
+                    let resp = policy.respond(&ctx, &job);
+                    let want =
+                        (resp.throughput(table.full_local_batch), resp.paused, resp.spares_used);
+                    let got = policy.respond_with(&ctx, &job, &mut scratch);
+                    assert_eq!(
+                        got,
+                        want,
+                        "trial {trial} {} spares {spares:?} packed {packed}",
+                        policy.name()
                     );
                 }
             }
