@@ -1,15 +1,17 @@
 # One entry point for CI / future PRs.
 #
-#   make check       — tier-1 (build + tests) plus the perf smoke bench
-#   make build       — release build
-#   make test        — test suite
-#   make lint        — rustfmt --check + clippy -D warnings
-#   make bench-perf  — full perf_hotpath run (writes BENCH_perf_hotpath.json)
+#   make check        — tier-1 (build + tests) plus the perf smoke bench
+#   make build        — release build
+#   make test         — test suite (debug)
+#   make test-release — test suite under --release (optimizer-dependent
+#                       numeric behavior; its own CI job)
+#   make lint         — rustfmt --check + clippy -D warnings
+#   make bench-perf   — full perf_hotpath run (writes BENCH_perf_hotpath.json)
 
 CARGO    ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: check build test lint bench-smoke bench-perf
+.PHONY: check build test test-release lint bench-smoke bench-perf
 
 check: build test bench-smoke
 
@@ -22,6 +24,9 @@ build:
 
 test:
 	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+test-release:
+	$(CARGO) test --release -q --manifest-path $(MANIFEST)
 
 bench-smoke:
 	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick

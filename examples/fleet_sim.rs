@@ -1,9 +1,11 @@
 //! Fleet-scale what-if: a 32K-GPU / NVL32 training job (the paper's §5.3
 //! setup) runs through a 15-day Llama-3-calibrated failure trace under
 //! every registered fault-tolerance policy — the paper's DP-DROP / NTP /
-//! NTP-PW trio plus the checkpoint-restart baseline and the
-//! spare-migration policy — with modeled reconfiguration downtime;
-//! reports time-integrated throughput, downtime, pauses and spare usage.
+//! NTP-PW trio plus checkpoint / partial / rate-adaptive restarts,
+//! spare migration, dark power-capped spares and low-priority donation
+//! — with modeled reconfiguration downtime; reports time-integrated
+//! throughput, downtime, pauses, spare usage and the secondary
+//! (donated) capacity channel.
 //!
 //! Run: cargo run --release --example fleet_sim -- [--days 15] [--rate-x 1]
 
@@ -41,7 +43,6 @@ fn main() -> anyhow::Result<()> {
     let rack = RackDesign::default();
     println!("# building strategy table (TP{} -> TP{}..)", cfg.tp, 28);
     let table = StrategyTable::build(&sim, &cfg, &rack);
-    let transition = Some(TransitionCosts::model(&sim, &cfg));
 
     let topo = Topology::new(&cluster);
     let fmodel = FailureModel::llama3().scaled(rate_x);
@@ -49,10 +50,15 @@ fn main() -> anyhow::Result<()> {
     println!("# generating {days}-day failure trace ({}x Llama-3 rate)", rate_x);
     let trace = Trace::generate(&topo, &fmodel, days * 24.0, &mut rng);
     println!("# {} failure events", trace.events.len());
+    // The trace's observed event rate feeds CKPT-ADAPTIVE's Young/Daly
+    // interval — without it the adaptive rows would just duplicate
+    // CKPT-RESTART.
+    let transition = Some(TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace));
 
     let mut rec = Recorder::new("fleet_sim_32k");
     let mut out = Table::new(&[
         "policy", "spares", "mean tput", "downtime", "net tput", "tput/GPU", "paused",
+        "donated",
     ]);
     for policy in registry::all() {
         for &spares in &[0usize, 16] {
@@ -79,6 +85,7 @@ fn main() -> anyhow::Result<()> {
                 f4(stats.net_throughput()),
                 f4(stats.throughput_per_gpu),
                 pct(stats.paused_frac),
+                f4(stats.mean_donated),
             ]);
             rec.scalar(
                 &format!("{}_s{}_tput", policy.name(), spares),

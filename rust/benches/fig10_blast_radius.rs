@@ -87,7 +87,7 @@ fn main() {
                 // checked against the full respond on trial 0.
                 let mut scratch = EvalScratch::default();
                 for (i, policy) in policies.iter().enumerate() {
-                    let (tput, _, _) = policy.respond_with(&ctx, &healthy, &mut scratch);
+                    let tput = policy.respond_with(&ctx, &healthy, &mut scratch).tput;
                     if trial == 0 {
                         let resp = policy.respond(&ctx, &healthy);
                         assert_eq!(

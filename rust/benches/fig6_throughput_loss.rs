@@ -93,10 +93,10 @@ fn main() {
     let trace = Trace::generate(&topo, &fmodel, 15.0 * 24.0, &mut trace_rng);
     let transition = Some(TransitionCosts::model(&sim, &cfg));
     let policies = registry::all();
-    // One shared sweep instead of one trace replay per policy: all five
-    // policies ride a single FleetReplayer pass, with repeated damage
-    // signatures memoized (bit-identical to the per-policy runs, see
-    // rust/tests/multi_policy_sweep.rs).
+    // One shared sweep instead of one trace replay per policy: all nine
+    // registered policies ride a single FleetReplayer pass, with
+    // repeated damage signatures memoized (bit-identical to the
+    // per-policy runs, see rust/tests/multi_policy_sweep.rs).
     let msim = MultiPolicySim {
         topo: &topo,
         table: &table,
@@ -110,17 +110,22 @@ fn main() {
     let mut memo = msim.memo();
     let stats_per_policy = msim.run_with(&trace, 3.0, &mut memo);
     println!(
-        "shared sweep: {} snapshot-memo lookups, {:.0}% hit rate\n",
+        "shared sweep: {} snapshot-memo lookups, {:.0}% hit rate; \
+         {} transition-memo lookups, {:.0}% hit rate\n",
         memo.hits() + memo.misses(),
-        memo.hit_rate() * 100.0
+        memo.hit_rate() * 100.0,
+        memo.transition_hits() + memo.transition_misses(),
+        memo.transition_hit_rate() * 100.0
     );
-    let mut t2 = Table::new(&["policy", "mean tput", "downtime", "net tput", "transitions"]);
+    let mut t2 =
+        Table::new(&["policy", "mean tput", "downtime", "net tput", "donated", "transitions"]);
     for (policy, stats) in policies.iter().zip(&stats_per_policy) {
         t2.row(&[
             policy.name().into(),
             f4(stats.mean_throughput),
             pct(stats.downtime_frac),
             f4(stats.net_throughput()),
+            f4(stats.mean_donated),
             format!("{}", stats.transitions),
         ]);
     }
@@ -136,6 +141,10 @@ fn main() {
     let s_ntp = by_name("NTP");
     let s_ckpt = by_name("CKPT-RESTART");
     let s_mig = by_name("SPARE-MIG");
+    let s_lowpri = by_name("LOWPRI-DONATE");
+    let s_partial = by_name("PARTIAL-RESTART");
+    let s_power = by_name("POWER-SPARES");
+    let s_adaptive = by_name("CKPT-ADAPTIVE");
     for s in &stats_per_policy {
         assert!((0.0..=1.0).contains(&s.downtime_frac), "downtime {}", s.downtime_frac);
         assert!(s.transitions > 0, "a 15-day 10x trace must show transitions");
@@ -157,4 +166,72 @@ fn main() {
     // Net of downtime, live reconfiguration beats checkpoint-restart.
     assert!(s_ntp.net_throughput() > s_ckpt.net_throughput());
     assert!(s_mig.net_throughput() > s_ckpt.net_throughput());
+    // LOWPRI-DONATE is plain NTP for the primary job (bit-identical
+    // throughput and downtime), with a strictly positive secondary
+    // channel that NTP leaves at zero.
+    assert_eq!(s_lowpri.mean_throughput, s_ntp.mean_throughput);
+    assert_eq!(s_lowpri.downtime_frac, s_ntp.downtime_frac);
+    assert_eq!(s_ntp.mean_donated, 0.0);
+    assert!(
+        s_lowpri.mean_donated > 0.0,
+        "a damaged trace must leave donatable idle GPUs (got {})",
+        s_lowpri.mean_donated
+    );
+    // PARTIAL-RESTART: replica-scoped restarts land between NTP's live
+    // reshard and the global checkpoint stop.
+    assert!(
+        s_partial.downtime_frac > s_ntp.downtime_frac
+            && s_partial.downtime_frac < s_ckpt.downtime_frac,
+        "partial-restart downtime {} should sit between ntp {} and ckpt {}",
+        s_partial.downtime_frac,
+        s_ntp.downtime_frac,
+        s_ckpt.downtime_frac
+    );
+    assert!(s_partial.net_throughput() > s_ckpt.net_throughput());
+    // POWER-SPARES delegates SPARE-MIG's capacity response; in flexible
+    // mode (no pool) there is nothing dark to credit, and waking warm
+    // standbys costs at least the migration bill.
+    assert_eq!(s_power.mean_throughput, s_mig.mean_throughput);
+    assert_eq!(s_power.mean_donated, 0.0);
+    assert!(s_power.downtime_frac >= s_mig.downtime_frac);
+    // With no observed failure rate there is nothing to adapt to:
+    // CKPT-ADAPTIVE is bit-identical to CKPT-RESTART.
+    assert_eq!(s_adaptive, s_ckpt);
+
+    // ... and with the trace's observed rate fed in, the Young/Daly
+    // interval beats the fixed 3600 s on rollback (less downtime) while
+    // honestly charging the checkpoint-write overhead the fixed
+    // baseline ignores (lower steady-state throughput).
+    let observed = TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace);
+    assert!(observed.failure_rate_per_hour > 0.0);
+    let adaptive_pair = [
+        registry::parse("ckpt-restart").unwrap(),
+        registry::parse("ckpt-adaptive").unwrap(),
+    ];
+    let msim_obs = MultiPolicySim {
+        policies: &adaptive_pair,
+        transition: Some(observed),
+        ..msim
+    };
+    let obs_stats = msim_obs.run(&trace, 3.0);
+    let (o_ckpt, o_adaptive) = (obs_stats[0], obs_stats[1]);
+    println!(
+        "\nobserved rate {:.2}/h: CKPT-ADAPTIVE downtime {} (fixed {}), \
+         mean tput {} (fixed {})",
+        observed.failure_rate_per_hour,
+        pct(o_adaptive.downtime_frac),
+        pct(o_ckpt.downtime_frac),
+        f4(o_adaptive.mean_throughput),
+        f4(o_ckpt.mean_throughput)
+    );
+    assert!(
+        o_adaptive.downtime_frac < o_ckpt.downtime_frac,
+        "adaptive rollback {} should undercut the fixed interval's {}",
+        o_adaptive.downtime_frac,
+        o_ckpt.downtime_frac
+    );
+    assert!(
+        o_adaptive.mean_throughput < o_ckpt.mean_throughput,
+        "adaptive must pay the checkpoint-write overhead in steady state"
+    );
 }

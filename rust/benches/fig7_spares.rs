@@ -44,13 +44,17 @@ fn main() {
 
     println!("\n=== Fig 7: throughput/GPU vs spare domains (fixed minibatch) ===");
     println!("(paper: DP-DROP needs ~90 spares, NTP ~16, NTP-PW 0;");
-    println!(" plus the policy layer's CKPT-RESTART and SPARE-MIG, downtime accounted)\n");
-    let transition = Some(TransitionCosts::model(&sim, &cfg));
+    println!(" plus the policy layer's full registry — checkpoint/partial/adaptive");
+    println!(" restarts, spare migration, dark spares, low-pri donation — downtime");
+    println!(" accounted)\n");
+    // Observed event rate -> CKPT-ADAPTIVE's Young/Daly interval (at
+    // rate 0 its rows would just duplicate CKPT-RESTART's).
+    let transition = Some(TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace));
     let mut t =
         Table::new(&["policy", "spares", "tput/GPU", "net tput/GPU", "downtime", "paused"]);
     let mut first_ok: std::collections::BTreeMap<&str, Option<usize>> = Default::default();
-    // Every spare-budget sweep point evaluates all five policies in ONE
-    // shared trace sweep. One memo (map + scratch buffers) is carried
+    // Every spare-budget sweep point evaluates every registered policy
+    // in ONE shared trace sweep. One memo (map + scratch buffers) is carried
     // across sweep points — sound because the pool size enters the memo
     // key through the live-spare count and the job-domain count; note
     // that since each budget changes n_job, actual cache *hits* come
@@ -122,6 +126,25 @@ fn main() {
     // Checkpoint-restart inherits DP-drop's capacity response, so its
     // pause behavior (and spare appetite) matches DP-DROP's...
     assert_eq!(first_ok["CKPT-RESTART"], first_ok["DP-DROP"]);
+    // The restart family shares one capacity response, so partial
+    // restarts and the adaptive interval change the *bill*, never the
+    // spare appetite; the donation and dark-spare policies inherit their
+    // hosts' pause behavior (NTP and SPARE-MIG respectively).
+    assert_eq!(first_ok["PARTIAL-RESTART"], first_ok["DP-DROP"]);
+    assert_eq!(first_ok["CKPT-ADAPTIVE"], first_ok["CKPT-RESTART"]);
+    assert_eq!(first_ok["LOWPRI-DONATE"], first_ok["NTP"]);
+    assert_eq!(first_ok["POWER-SPARES"], first_ok["SPARE-MIG"]);
+    // Dark spares only credit power while a pool exists and idles: the
+    // 96-spare point must show a positive saved-power channel.
+    let power96 = stats_per_combo[combos
+        .iter()
+        .position(|(p, s)| p.name() == "POWER-SPARES" && *s == 96)
+        .unwrap()];
+    assert!(
+        power96.mean_donated > 0.0,
+        "a 96-domain dark pool must credit saved rack power (got {})",
+        power96.mean_donated
+    );
     // ...but pays for every reconfiguration in downtime where the live
     // policies keep running.
     let idx = |name: &str, sp: usize| {
@@ -140,7 +163,7 @@ fn main() {
     // =====================================================================
     // SPARe scale: the same fixed-minibatch sweep at 100K GPUs / NVL72
     // (paper-100k-nvl72), over Monte-Carlo failure traces. 3 budgets x
-    // 4 trials x 5 policies = 60 trace integrations — tractable only
+    // 4 trials x 9 policies = 108 trace integrations — tractable only
     // because each trial replays the trace once for all policies, one
     // replayer is reset across trials, and damage signatures repeat
     // heavily within each budget's four trials (budgets change the
@@ -161,7 +184,6 @@ fn main() {
     let table_100k = StrategyTable::build(&sim_100k, &cfg_100k, &RackDesign::default());
     let n_domains_100k = cfg_100k.dp * cfg_100k.pp + max_spares_100k;
     let topo_100k = Topology::of(n_domains_100k * tp, tp, cluster_100k.gpus_per_node);
-    let transition_100k = Some(TransitionCosts::model(&sim_100k, &cfg_100k));
     let mut trace_rng = Rng::new(71);
     let n_trials = 4usize;
     let traces: Vec<Trace> = (0..n_trials)
@@ -170,6 +192,10 @@ fn main() {
             Trace::generate(&topo_100k, &fmodel, 15.0 * 24.0, &mut r)
         })
         .collect();
+    // One cost model for the whole Monte-Carlo batch (a prerequisite of
+    // sharing the memo), calibrated on the first trial's observed rate.
+    let transition_100k =
+        Some(TransitionCosts::model(&sim_100k, &cfg_100k).with_observed_rate(&traces[0]));
     let min_tp_100k = min_supported_tp(tp);
     let mut memo_100k = ResponseMemo::new(policies.len());
     let mut t100k = Table::new(&["policy", "spares", "tput/GPU (mean)", "net tput/GPU", "paused"]);

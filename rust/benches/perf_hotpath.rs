@@ -112,8 +112,8 @@ fn main() {
 
     // =====================================================================
     // Shared-sweep multi-policy engine at SPARe scale (100K GPUs, NVL72):
-    // one trace replay + signature-memoized responses for all 5 policies
-    // vs the per-policy FleetSim::run loop
+    // one trace replay + signature-memoized responses for every
+    // registered policy vs the per-policy FleetSim::run loop
     // =====================================================================
     let days_100k = if quick { 5.0 } else { 15.0 };
     let cluster_100k = presets::cluster("paper-100k-nvl72").unwrap();
@@ -137,7 +137,7 @@ fn main() {
         trace_100k.events.len(),
         policies.len()
     );
-    let run_per_policy = || -> Vec<FleetStats> {
+    let run_per_policy_with = |transition| -> Vec<FleetStats> {
         policies
             .iter()
             .map(|&policy| {
@@ -149,12 +149,13 @@ fn main() {
                     spares: None,
                     packed: true,
                     blast: BlastRadius::Single,
-                    transition: None,
+                    transition,
                 }
                 .run(&trace_100k, 1.0)
             })
             .collect()
     };
+    let run_per_policy = || run_per_policy_with(None);
     let msim = MultiPolicySim {
         topo: &topo_100k,
         table: &table_100k,
@@ -181,13 +182,13 @@ fn main() {
     report.scalar("snapshot_memo_hit_rate", memo.hit_rate());
     report.scalar("snapshot_memo_entries", memo.unique_entries() as f64);
 
-    let r_per_policy = bench_with("fleet_5policy_per_policy_100k", cfg_replay, || {
+    let r_per_policy = bench_with("fleet_9policy_per_policy_100k", cfg_replay, || {
         black_box(run_per_policy());
     });
     println!("{}", r_per_policy.line());
     report.result(&r_per_policy);
     // Cold sweep: fresh memo every iteration (the honest comparison).
-    let r_shared = bench_with("fleet_5policy_shared_sweep_100k", cfg_replay, || {
+    let r_shared = bench_with("fleet_9policy_shared_sweep_100k", cfg_replay, || {
         black_box(msim.run(&trace_100k, 1.0));
     });
     println!("{}", r_shared.line());
@@ -195,7 +196,7 @@ fn main() {
     // Warm sweep: memo shared across iterations, the Monte-Carlo /
     // sweep-point steady state.
     let mut warm = msim.memo();
-    let r_warm = bench_with("fleet_5policy_shared_sweep_warm_100k", cfg_replay, || {
+    let r_warm = bench_with("fleet_9policy_shared_sweep_warm_100k", cfg_replay, || {
         black_box(msim.run_with(&trace_100k, 1.0, &mut warm));
     });
     println!("{}", r_warm.line());
@@ -208,8 +209,36 @@ fn main() {
     let sweep_floor = if quick { 3.0 } else { 5.0 };
     assert!(
         sweep_speedup >= sweep_floor,
-        "5-policy shared sweep should be >= {sweep_floor}x faster than the per-policy loop \
+        "9-policy shared sweep should be >= {sweep_floor}x faster than the per-policy loop \
          (got {sweep_speedup:.1}x)"
+    );
+
+    // With transition costs on, the count-keyed transition memo kicks
+    // in: repeated (changed, degraded) patterns across the trace skip
+    // the per-policy prev/next scan. Bit-identity against the
+    // unmemoized per-policy reference is the soundness check.
+    let transition_100k = Some(
+        ntp::policy::TransitionCosts::model(&sim_100k, &cfg_100k)
+            .with_observed_rate(&trace_100k),
+    );
+    let msim_t = MultiPolicySim { transition: transition_100k, ..msim };
+    let mut memo_t = msim_t.memo();
+    let shared_t = msim_t.run_with(&trace_100k, 1.0, &mut memo_t);
+    assert_eq!(
+        shared_t,
+        run_per_policy_with(transition_100k),
+        "memoized transition charges must be bit-identical to the per-policy loop"
+    );
+    assert!(memo_t.transition_hits() > 0, "transition memo never hit");
+    println!(
+        "  transition memo: {:.1}% hit rate over {} charges",
+        memo_t.transition_hit_rate() * 100.0,
+        memo_t.transition_hits() + memo_t.transition_misses()
+    );
+    report.scalar("transition_memo_hit_rate", memo_t.transition_hit_rate());
+    report.scalar(
+        "transition_memo_lookups",
+        (memo_t.transition_hits() + memo_t.transition_misses()) as f64,
     );
 
     // =====================================================================

@@ -21,9 +21,11 @@
 //!   planner, the performance simulator behind every large-scale figure,
 //!   the power-boost allocator (NTP-PW), and the fleet resource manager.
 //! * [`policy`] — the pluggable fault-tolerance policy layer: the
-//!   paper's DP-drop/NTP/NTP-PW trio as ports, plus checkpoint-restart
-//!   and spare-migration policies, each with modeled reconfiguration
-//!   downtime integrated by the fleet sweep.
+//!   paper's DP-drop/NTP/NTP-PW trio as ports, plus checkpoint /
+//!   partial / rate-adaptive (Young/Daly) restarts, spare migration,
+//!   dark power-capped spares and low-priority donation — each with
+//!   modeled reconfiguration downtime and a secondary (donated)
+//!   capacity channel integrated by the fleet sweep.
 //! * [`runtime`] / [`train`] — PJRT execution of the AOT-compiled JAX
 //!   model and the real-numerics training driver (DP replicas at
 //!   nonuniform TP, reshard + allreduce in Rust memory).

@@ -70,16 +70,23 @@ USAGE: ntp <subcommand> [options]
   reshard-plan  --k 12288 --n1 32 --n2 30
   power         --model gpt-480b --cluster paper-32k-nvl32 --tp 32 --pp 8
                 --dp 128
-  fleet         --strategy dp-drop,ntp,ntp-pw,ckpt-restart,spare-mig
-                (comma-separated list, evaluated in ONE shared trace sweep)
+  fleet         --strategy dp-drop,ntp,ntp-pw,ckpt-restart,spare-mig,
+                lowpri-donate,partial-restart,power-spares,ckpt-adaptive
+                (comma-separated list, evaluated in ONE shared trace sweep;
+                LOWPRI-DONATE/POWER-SPARES report the secondary channel in
+                the 'donated' column)
                 --days 15 [--spares N] (fixed minibatch with N spare domains)
                 [--replicas 16] [--rate-x 10] [--json] [--no-transitions]
                 [--cluster paper-32k-nvl32|paper-100k-nvl72|...] [--pp 8]
                 transition-cost calibration (defaults are the modeled
-                TransitionCosts, see EXPERIMENTS.md §Policies):
+                TransitionCosts with the trace's observed failure rate,
+                see EXPERIMENTS.md §Policies):
                 [--restart-secs 900] [--ckpt-interval 3600]
                 [--spare-load-secs 300] [--reshard-secs <modeled>]
                 [--reshard-gbs <NVLink GB/s for the reshard model>]
+                [--ckpt-write-secs 120] [--power-ramp-secs 60]
+                [--failure-rate <events/hour, overrides the observed rate
+                CKPT-ADAPTIVE optimizes its Young/Daly interval against>]
 ";
 
 fn cmd_train(args: &mut Args) -> Result<()> {
@@ -358,14 +365,27 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let spare_load_secs = args.opt_f64("spare-load-secs");
     let reshard_secs = args.opt_f64("reshard-secs");
     let reshard_gbs = args.opt_f64("reshard-gbs");
+    let ckpt_write_secs = args.opt_f64("ckpt-write-secs");
+    let power_ramp_secs = args.opt_f64("power-ramp-secs");
+    let failure_rate = args.opt_f64("failure-rate");
     args.finish()?;
     anyhow::ensure!(
         !(no_transitions
-            && [restart_secs, ckpt_interval, spare_load_secs, reshard_secs, reshard_gbs]
-                .iter()
-                .any(|o| o.is_some())),
+            && [
+                restart_secs,
+                ckpt_interval,
+                spare_load_secs,
+                reshard_secs,
+                reshard_gbs,
+                ckpt_write_secs,
+                power_ramp_secs,
+                failure_rate,
+            ]
+            .iter()
+            .any(|o| o.is_some())),
         "--no-transitions conflicts with transition-cost flags \
-         (--restart-secs/--ckpt-interval/--spare-load-secs/--reshard-secs/--reshard-gbs)"
+         (--restart-secs/--ckpt-interval/--spare-load-secs/--reshard-secs/--reshard-gbs/\
+          --ckpt-write-secs/--power-ramp-secs/--failure-rate)"
     );
     anyhow::ensure!(
         !(reshard_secs.is_some() && reshard_gbs.is_some()),
@@ -389,7 +409,9 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let transition = if no_transitions {
         None
     } else {
-        let mut t = TransitionCosts::model(&sim, &cfg);
+        // The observed event rate of THIS trace feeds CKPT-ADAPTIVE's
+        // Young/Daly interval (override with --failure-rate).
+        let mut t = TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace);
         if let Some(gbs) = reshard_gbs {
             t.reshard_secs = reshard_transition_secs_over(&sim, &cfg, gbs);
         }
@@ -404,6 +426,15 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         }
         if let Some(s) = spare_load_secs {
             t.spare_load_secs = s;
+        }
+        if let Some(s) = ckpt_write_secs {
+            t.ckpt_write_secs = s;
+        }
+        if let Some(s) = power_ramp_secs {
+            t.power_ramp_secs = s;
+        }
+        if let Some(r) = failure_rate {
+            t.failure_rate_per_hour = r;
         }
         Some(t)
     };
@@ -425,8 +456,8 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let all_stats = msim.run_with(&trace, 3.0, &mut memo);
 
     let mut out = Table::new(&[
-        "policy", "mean tput", "net tput", "tput/GPU", "paused", "downtime", "spares used",
-        "transitions",
+        "policy", "mean tput", "net tput", "tput/GPU", "paused", "downtime", "donated",
+        "spares used", "transitions",
     ]);
     let mut rep = JsonReport::new("fleet");
     rep.scalar("days", days);
@@ -436,6 +467,10 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     rep.scalar("n_gpus", topo.n_gpus as f64);
     rep.scalar("memo_hit_rate", memo.hit_rate());
     rep.scalar("memo_entries", memo.unique_entries() as f64);
+    rep.scalar("transition_memo_hit_rate", memo.transition_hit_rate());
+    if let Some(t) = &transition {
+        rep.scalar("observed_failure_rate_per_hour", t.failure_rate_per_hour);
+    }
     for (policy, stats) in policies.iter().zip(&all_stats) {
         out.row(&[
             policy.name().into(),
@@ -444,6 +479,7 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
             f4(stats.throughput_per_gpu),
             pct(stats.paused_frac),
             pct(stats.downtime_frac),
+            f4(stats.mean_donated),
             f2(stats.mean_spares_used),
             format!("{}", stats.transitions),
         ]);
@@ -453,6 +489,7 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         rep.scalar(&format!("{key}_tput_per_gpu"), stats.throughput_per_gpu);
         rep.scalar(&format!("{key}_paused_frac"), stats.paused_frac);
         rep.scalar(&format!("{key}_downtime_frac"), stats.downtime_frac);
+        rep.scalar(&format!("{key}_donated"), stats.mean_donated);
         rep.scalar(&format!("{key}_transitions"), stats.transitions as f64);
     }
     if json {

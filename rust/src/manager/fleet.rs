@@ -7,7 +7,7 @@ use super::spares::SparePolicy;
 use crate::cluster::Topology;
 use crate::failure::{BlastRadius, FleetReplayer, Trace};
 use crate::parallel::ParallelConfig;
-use crate::policy::{FtPolicy, PolicyCtx, TransitionCosts};
+use crate::policy::{EvalOut, FtPolicy, PolicyCtx, TransitionCosts};
 use crate::power::{min_boost_for, BoostDecision, RackDesign};
 use crate::sim::engine::{
     healthy_reshard_factor, max_batch_within, min_supported_tp, FtStrategy,
@@ -128,6 +128,11 @@ pub struct FleetStats {
     pub downtime_frac: f64,
     /// Sampled health changes that triggered a policy transition.
     pub transitions: usize,
+    /// Mean secondary-channel capacity fraction
+    /// ([`crate::policy::PolicyResponse::donated`]): low-priority
+    /// donation or saved dark-spare power, per provisioned GPU. Exactly
+    /// `0.0` for policies with no secondary channel.
+    pub mean_donated: f64,
 }
 
 impl FleetStats {
@@ -181,7 +186,7 @@ impl<'a> FleetSim<'a> {
         let n_steps = (trace.horizon_hours / step_hours).ceil() as usize;
         let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
         let mut acc = Accum::default();
-        let mut last: Option<(u64, (f64, bool, usize))> = None;
+        let mut last: Option<(u64, EvalOut)> = None;
         let mut prev_counts: Vec<usize> = Vec::new();
         for step in 0..n_steps {
             let t = step as f64 * step_hours;
@@ -275,12 +280,12 @@ impl<'a> FleetSim<'a> {
         })
     }
 
-    /// Evaluate one snapshot: returns (throughput, paused, spares used).
-    pub fn evaluate(&self, domain_healthy: &[usize]) -> (f64, bool, usize) {
+    /// Evaluate one snapshot: the integrated [`EvalOut`] quantities.
+    pub fn evaluate(&self, domain_healthy: &[usize]) -> EvalOut {
         match self.spares {
             None => {
                 let resp = self.policy.respond(&self.ctx(None), domain_healthy);
-                (resp.throughput(self.table.full_local_batch), resp.paused, resp.spares_used)
+                EvalOut::of(&resp, self.table.full_local_batch)
             }
             Some(pool) => {
                 let (job_healthy, live) = super::spares::split_job_spares(
@@ -289,7 +294,7 @@ impl<'a> FleetSim<'a> {
                     &pool,
                 );
                 let resp = self.policy.respond(&self.ctx(Some(live)), job_healthy);
-                (resp.throughput(self.table.full_local_batch), resp.paused, resp.spares_used)
+                EvalOut::of(&resp, self.table.full_local_batch)
             }
         }
     }
@@ -304,16 +309,17 @@ pub(crate) struct Accum {
     tput_sum: f64,
     paused: usize,
     spares_sum: f64,
+    donated_sum: f64,
     transitions: usize,
     cost_gpu_secs: f64,
 }
 
 impl Accum {
-    pub(crate) fn sample(&mut self, out: (f64, bool, usize)) {
-        let (tput, pause, used) = out;
-        self.tput_sum += tput;
-        self.paused += usize::from(pause);
-        self.spares_sum += used as f64;
+    pub(crate) fn sample(&mut self, out: EvalOut) {
+        self.tput_sum += out.tput;
+        self.paused += usize::from(out.paused);
+        self.spares_sum += out.spares_used as f64;
+        self.donated_sum += out.donated;
     }
 
     /// Charge the policy's transition cost for a sampled health change
@@ -328,8 +334,16 @@ impl Accum {
         prev: &[usize],
         next: &[usize],
     ) {
+        self.charge_cost(policy.transition_cost(ctx, prev, next));
+    }
+
+    /// [`Accum::charge`] with the cost already computed — the shared
+    /// sweep's count-keyed transition memo
+    /// ([`crate::manager::ResponseMemo`]) lands here, so the memoized
+    /// and direct paths add the identical `f64`.
+    pub(crate) fn charge_cost(&mut self, cost_gpu_secs: f64) {
         self.transitions += 1;
-        self.cost_gpu_secs += policy.transition_cost(ctx, prev, next);
+        self.cost_gpu_secs += cost_gpu_secs;
     }
 
     /// Integrate the accumulated samples into a [`FleetStats`]
@@ -358,6 +372,7 @@ impl Accum {
             throughput_per_gpu: mean_tput * job_gpus as f64 / n_gpus as f64,
             downtime_frac,
             transitions: self.transitions,
+            mean_donated: self.donated_sum / n,
         }
     }
 }
@@ -579,8 +594,8 @@ mod tests {
             transition: None,
         };
         let unpacked = FleetSim { packed: false, ..packed };
-        let (tp_packed, _, _) = packed.evaluate(&healthy);
-        let (tp_unpacked, _, _) = unpacked.evaluate(&healthy);
+        let tp_packed = packed.evaluate(&healthy).tput;
+        let tp_unpacked = unpacked.evaluate(&healthy).tput;
         assert!(tp_packed >= tp_unpacked);
     }
 }

@@ -30,13 +30,20 @@
 //!   shared across snapshots, trials and sweep points, carrying the
 //!   [`EvalScratch`] buffers so the steady-state sweep allocates
 //!   nothing: a repeated damage pattern costs one hash lookup instead
-//!   of a full pack + table walk per policy.
+//!   of a full pack + table walk per policy. It also carries a
+//!   count-keyed **transition-cost memo**: for policies declaring
+//!   [`FtPolicy::transition_cost_is_count_pure`], the charge is a pure
+//!   function of `(changed, degraded, live spares, n_gpus)` under one
+//!   cost model, so repeated change patterns skip the prev/next scan
+//!   (hit counters in `fleet --json` and `perf_hotpath`).
 
 use super::fleet::{Accum, FleetStats, StrategyTable};
 use super::spares::SparePolicy;
 use crate::cluster::Topology;
 use crate::failure::{BlastRadius, FleetReplayer, Trace};
-use crate::policy::{EvalScratch, FtPolicy, PolicyCtx, TransitionCosts};
+use crate::policy::{
+    changed_domains, degraded_domains, EvalOut, EvalScratch, FtPolicy, PolicyCtx, TransitionCosts,
+};
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 
@@ -156,19 +163,60 @@ struct MemoKey {
 
 /// Sweep-configuration fingerprint: a [`ResponseMemo`] is only valid
 /// for one evaluation context (same table *contents*, packing mode,
-/// replica shape, spare `min_tp`). [`MultiPolicySim`] binds the memo on
-/// first use and panics if it is later reused with an incompatible
-/// config — the table is fingerprinted by its response-defining
-/// contents ([`table_fingerprint`]), so e.g. two tables built for
-/// different `RackDesign`s (identical shapes, different `batch_pw`)
-/// are correctly rejected.
+/// replica shape, spare `min_tp`, transition-cost model).
+/// [`MultiPolicySim`] binds the memo on first use and panics if it is
+/// later reused with an incompatible config — the table is
+/// fingerprinted by its response-defining contents
+/// ([`table_fingerprint`]), so e.g. two tables built for different
+/// `RackDesign`s (identical shapes, different `batch_pw`) are correctly
+/// rejected, and the [`TransitionCosts`] are fingerprinted too because
+/// both the transition memo and `CKPT-ADAPTIVE`'s steady-state
+/// write-overhead factor depend on them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 struct MemoCtx {
     domain_size: usize,
     domains_per_replica: usize,
     packed: bool,
     spare_min_tp: usize,
+    /// Total provisioned GPUs: the donated-channel fractions cached in
+    /// each `EvalOut` are normalized by `ctx.n_gpus`, so two sims with
+    /// different GPU totals must not share cached responses even when
+    /// every other field (and the memo key) coincides.
+    n_gpus: usize,
     table_fingerprint: u64,
+    transition_fingerprint: u64,
+}
+
+/// Content hash of the sweep's transition-cost model (bit patterns; `0`
+/// reserved for "no model").
+fn transition_fingerprint(transition: &Option<TransitionCosts>) -> u64 {
+    use std::collections::hash_map::DefaultHasher;
+    let Some(t) = transition else { return 0 };
+    // Exhaustive destructuring on purpose: adding a field to
+    // `TransitionCosts` without updating this fingerprint would be a
+    // silent memo-aliasing hazard — make it a compile error instead.
+    let TransitionCosts {
+        restart_secs,
+        checkpoint_interval_secs,
+        reshard_secs,
+        spare_load_secs,
+        ckpt_write_secs,
+        power_ramp_secs,
+        failure_rate_per_hour,
+    } = *t;
+    let mut h = DefaultHasher::new();
+    for v in [
+        restart_secs,
+        checkpoint_interval_secs,
+        reshard_secs,
+        spare_load_secs,
+        ckpt_write_secs,
+        power_ramp_secs,
+        failure_rate_per_hour,
+    ] {
+        v.to_bits().hash(&mut h);
+    }
+    h.finish().max(1)
 }
 
 /// Content hash of everything in a [`StrategyTable`] that a policy
@@ -207,17 +255,31 @@ fn table_fingerprint(table: &StrategyTable) -> u64 {
 /// distinct names (every in-tree registry policy is a parameterless
 /// singleton).
 pub struct ResponseMemo {
-    map: HashMap<MemoKey, Box<[(f64, bool, usize)]>>,
+    map: HashMap<MemoKey, Box<[EvalOut]>>,
     n_policies: usize,
     policy_names: Vec<&'static str>,
     ctx: Option<MemoCtx>,
     hits: u64,
     misses: u64,
+    // Count-keyed transition-cost memo: every in-tree policy's
+    // `transition_cost` is a pure function of `(changed domains,
+    // degraded domains, live spare pool, total GPUs)` given one cost
+    // model ([`crate::policy::FtPolicy::transition_cost_is_count_pure`];
+    // the model itself is pinned by `MemoCtx::transition_fingerprint`),
+    // so a repeated change pattern costs one hash instead of a
+    // prev/next scan per policy.
+    tmap: HashMap<TransKey, f64>,
+    thits: u64,
+    tmisses: u64,
     // Scratch shared by every evaluation driven through this memo.
     sig: SnapshotSig,
     deficits: Vec<u32>,
     scratch: EvalScratch,
 }
+
+/// Transition-memo key: `(policy index, changed, degraded, live spare
+/// pool, total provisioned GPUs)`.
+type TransKey = (u32, u32, u32, u32, u64);
 
 impl ResponseMemo {
     pub fn new(n_policies: usize) -> ResponseMemo {
@@ -228,6 +290,9 @@ impl ResponseMemo {
             ctx: None,
             hits: 0,
             misses: 0,
+            tmap: HashMap::new(),
+            thits: 0,
+            tmisses: 0,
             sig: SnapshotSig::new(),
             deficits: Vec::new(),
             scratch: EvalScratch::default(),
@@ -257,6 +322,52 @@ impl ResponseMemo {
     /// Unique snapshot keys cached (each holds all policies' responses).
     pub fn unique_entries(&self) -> usize {
         self.map.len()
+    }
+
+    /// Transition-cost lookups served from the count-keyed memo.
+    pub fn transition_hits(&self) -> u64 {
+        self.thits
+    }
+
+    /// Transition-cost lookups that fell through to
+    /// [`FtPolicy::transition_cost`].
+    pub fn transition_misses(&self) -> u64 {
+        self.tmisses
+    }
+
+    /// Fraction of transition charges served from the memo.
+    pub fn transition_hit_rate(&self) -> f64 {
+        let total = self.thits + self.tmisses;
+        if total == 0 {
+            0.0
+        } else {
+            self.thits as f64 / total as f64
+        }
+    }
+
+    /// Memoized [`FtPolicy::transition_cost`]: served from the
+    /// count-keyed cache for count-pure policies, computed directly
+    /// otherwise (and when reconfigurations are free — the zero-cost
+    /// contract stays with the policy).
+    fn transition_cost(
+        &mut self,
+        key: TransKey,
+        policy: &dyn FtPolicy,
+        ctx: &PolicyCtx,
+        prev: &[usize],
+        next: &[usize],
+    ) -> f64 {
+        if ctx.transition.is_none() || !policy.transition_cost_is_count_pure() {
+            return policy.transition_cost(ctx, prev, next);
+        }
+        if let Some(&cost) = self.tmap.get(&key) {
+            self.thits += 1;
+            return cost;
+        }
+        self.tmisses += 1;
+        let cost = policy.transition_cost(ctx, prev, next);
+        self.tmap.insert(key, cost);
+        cost
     }
 
     fn bind(&mut self, expect: MemoCtx, policies: &[&dyn FtPolicy]) {
@@ -364,7 +475,7 @@ impl<'a> MultiPolicySim<'a> {
         memo.bind(self.memo_ctx(), self.policies);
         let n_steps = (rep.horizon_hours() / step_hours).ceil() as usize;
         let mut accs = vec![Accum::default(); n_policies];
-        let mut outs: Vec<(f64, bool, usize)> = vec![(0.0, false, 0); n_policies];
+        let mut outs: Vec<EvalOut> = vec![EvalOut::default(); n_policies];
         let mut last_version: Option<u64> = None;
         let mut prev_counts: Vec<usize> = Vec::new();
         for step in 0..n_steps {
@@ -378,8 +489,20 @@ impl<'a> MultiPolicySim<'a> {
                     prev_counts.extend_from_slice(counts);
                 } else if counts != &prev_counts[..] {
                     let ctx = self.ctx(self.live_spares_in(counts));
-                    for (acc, &policy) in accs.iter_mut().zip(self.policies) {
-                        acc.charge(policy, &ctx, &prev_counts, counts);
+                    let changed = changed_domains(&prev_counts, counts) as u32;
+                    let degraded = degraded_domains(&prev_counts, counts) as u32;
+                    let live = match ctx.spares {
+                        Some(pool) => pool.spare_domains as u32,
+                        None => u32::MAX,
+                    };
+                    for (i, (acc, &policy)) in
+                        accs.iter_mut().zip(self.policies).enumerate()
+                    {
+                        let key =
+                            (i as u32, changed, degraded, live, self.topo.n_gpus as u64);
+                        let cost =
+                            memo.transition_cost(key, policy, &ctx, &prev_counts, counts);
+                        acc.charge_cost(cost);
                     }
                     prev_counts.clear();
                     prev_counts.extend_from_slice(counts);
@@ -407,7 +530,7 @@ impl<'a> MultiPolicySim<'a> {
         &self,
         counts: &[usize],
         memo: &mut ResponseMemo,
-        outs: &mut [(f64, bool, usize)],
+        outs: &mut [EvalOut],
     ) {
         let (job_healthy, live, live_key) = match self.spares {
             None => (counts, None, u32::MAX),
@@ -481,7 +604,9 @@ impl<'a> MultiPolicySim<'a> {
             domains_per_replica: self.domains_per_replica,
             packed: self.packed,
             spare_min_tp: self.spares.map(|p| p.min_tp).unwrap_or(0),
+            n_gpus: self.topo.n_gpus,
             table_fingerprint: table_fingerprint(self.table),
+            transition_fingerprint: transition_fingerprint(&self.transition),
         }
     }
 }
@@ -574,8 +699,22 @@ mod tests {
             domains_per_replica: 4,
             packed: true,
             spare_min_tp: 0,
+            n_gpus: 1024,
             table_fingerprint: 0xFEED,
+            transition_fingerprint: 0,
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible sweep configurations")]
+    fn memo_rejects_a_different_gpu_total() {
+        use crate::policy::registry;
+        // Cached donated fractions are normalized by n_gpus, so two sims
+        // differing only in fleet size must not share a memo.
+        let a = [registry::parse("power-spares").unwrap()];
+        let mut memo = ResponseMemo::new(1);
+        memo.bind(test_memo_ctx(), &a);
+        memo.bind(MemoCtx { n_gpus: 896, ..test_memo_ctx() }, &a);
     }
 
     #[test]
@@ -603,5 +742,40 @@ mod tests {
         // a different table fingerprint (e.g. same-shaped tables built
         // for different RackDesigns) must be rejected
         memo.bind(MemoCtx { table_fingerprint: 0xBEEF, ..test_memo_ctx() }, &a);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible sweep configurations")]
+    fn memo_rejects_a_different_transition_model() {
+        use crate::policy::registry;
+        let a = [registry::parse("ckpt-adaptive").unwrap()];
+        let mut memo = ResponseMemo::new(1);
+        memo.bind(test_memo_ctx(), &a);
+        // CKPT-ADAPTIVE's steady state depends on the cost model (rate,
+        // write cost), so two sweeps differing only in TransitionCosts
+        // must not share a memo.
+        memo.bind(MemoCtx { transition_fingerprint: 7, ..test_memo_ctx() }, &a);
+    }
+
+    #[test]
+    fn transition_fingerprints_distinguish_models() {
+        assert_eq!(transition_fingerprint(&None), 0);
+        let t = TransitionCosts {
+            restart_secs: 900.0,
+            checkpoint_interval_secs: 3600.0,
+            reshard_secs: 2.0,
+            spare_load_secs: 300.0,
+            ckpt_write_secs: 120.0,
+            power_ramp_secs: 60.0,
+            failure_rate_per_hour: 0.0,
+        };
+        let a = transition_fingerprint(&Some(t));
+        assert_ne!(a, 0);
+        assert_eq!(a, transition_fingerprint(&Some(t)));
+        let b = transition_fingerprint(&Some(TransitionCosts {
+            failure_rate_per_hour: 1.5,
+            ..t
+        }));
+        assert_ne!(a, b);
     }
 }

@@ -1,0 +1,111 @@
+//! Rate-adaptive checkpoint–restart (Young/Daly).
+//!
+//! `CKPT-RESTART` rolls back half of a *fixed* 3600 s interval per
+//! failure. This policy instead sets the interval to the Young/Daly
+//! optimum `τ* = sqrt(2 δ M)` for the trace's **observed** failure rate
+//! ([`super::TransitionCosts::failure_rate_per_hour`], set via
+//! [`super::TransitionCosts::with_observed_rate`]) and checkpoint-write
+//! cost `δ` ([`super::TransitionCosts::ckpt_write_secs`]). Two effects,
+//! both modeled:
+//!
+//! * failures roll back `τ*/2` instead of half the fixed interval —
+//!   cheaper whenever failures are frequent enough that `τ* < 3600 s`;
+//! * writing checkpoints every `τ*` costs `δ/τ*` of steady-state
+//!   throughput, charged through [`PolicyResponse::overhead`] — the
+//!   honest price the fixed-interval baseline silently ignores.
+//!
+//! With no observed rate (`failure_rate_per_hour == 0`, the default of
+//! [`super::TransitionCosts::model`]) there is nothing to adapt to and
+//! the policy is **bit-identical** to `CKPT-RESTART` — asserted by the
+//! fig6 bench. The interval math lives in
+//! [`crate::train::checkpoint::young_daly_interval_secs`], unit-tested
+//! against a brute-force minimization.
+
+use super::checkpoint::{restart_capacity_respond, restart_capacity_respond_with};
+use super::{
+    degraded_domains, EvalOut, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse, TransitionCosts,
+};
+use crate::train::checkpoint::young_daly_interval_secs;
+
+/// Unit policy: all cost parameters come from
+/// [`super::TransitionCosts`] in the context.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdaptiveCheckpoint;
+
+pub static CKPT_ADAPTIVE: AdaptiveCheckpoint = AdaptiveCheckpoint;
+
+impl AdaptiveCheckpoint {
+    /// The checkpoint interval in force: the Young/Daly optimum for the
+    /// observed failure rate, or the fixed interval when no rate was
+    /// observed (`failure_rate_per_hour == 0`).
+    pub fn interval_secs(costs: &TransitionCosts) -> f64 {
+        if costs.failure_rate_per_hour > 0.0 {
+            young_daly_interval_secs(
+                costs.ckpt_write_secs,
+                3600.0 / costs.failure_rate_per_hour,
+            )
+        } else {
+            costs.checkpoint_interval_secs
+        }
+    }
+
+    /// Steady-state rate factor for writing a checkpoint every `τ*`
+    /// seconds: `1 − δ/τ*`, exactly `1.0` when there is no observed
+    /// rate to adapt to (the `CKPT-RESTART`-identical regime) or when
+    /// checkpoints are free.
+    fn write_overhead_factor(ctx: &PolicyCtx) -> f64 {
+        match ctx.transition {
+            Some(t) if t.failure_rate_per_hour > 0.0 => {
+                let tau = Self::interval_secs(&t);
+                if tau.is_finite() && tau > 0.0 {
+                    (1.0 - t.ckpt_write_secs / tau).max(0.0)
+                } else {
+                    1.0
+                }
+            }
+            _ => 1.0,
+        }
+    }
+}
+
+impl FtPolicy for AdaptiveCheckpoint {
+    fn name(&self) -> &'static str {
+        "CKPT-ADAPTIVE"
+    }
+
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
+        let mut resp = restart_capacity_respond(ctx, job_healthy);
+        resp.overhead = Self::write_overhead_factor(ctx);
+        resp
+    }
+
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        s: &mut EvalScratch,
+    ) -> EvalOut {
+        let mut out = restart_capacity_respond_with(ctx, job_healthy, s);
+        // `x * 1.0` is a bitwise no-op, so the no-rate regime stays
+        // bit-identical to CKPT-RESTART (and a paused 0.0 stays 0.0).
+        out.tput *= Self::write_overhead_factor(ctx);
+        out
+    }
+
+    fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        let Some(t) = ctx.transition else { return 0.0 };
+        // Full-job restart on any change (same fleet operation as
+        // CKPT-RESTART); failures roll back half the *optimized*
+        // interval.
+        let rollback = if degraded_domains(prev, next) > 0 {
+            0.5 * Self::interval_secs(&t)
+        } else {
+            0.0
+        };
+        ctx.n_gpus as f64 * (t.restart_secs + rollback)
+    }
+
+    fn transition_cost_is_count_pure(&self) -> bool {
+        true
+    }
+}

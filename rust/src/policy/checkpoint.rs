@@ -8,8 +8,15 @@
 //! *transition* bill: every fleet-health change (failure **or**
 //! recovery rejoin) costs a full-job restart, and unplanned failures
 //! additionally lose half a checkpoint interval of work on average.
+//!
+//! The capacity response is shared by the whole restart family
+//! ([`restart_capacity_respond`] / [`restart_capacity_respond_with`]):
+//! `CKPT-RESTART`, [`super::partial_restart::PartialRestart`] and
+//! [`super::adaptive_checkpoint::AdaptiveCheckpoint`] differ only in
+//! what a reconfiguration costs (and, for the adaptive policy, the
+//! checkpoint-write overhead charged against steady state).
 
-use super::{degraded_domains, legacy, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse};
+use super::{degraded_domains, legacy, EvalOut, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse};
 use crate::manager::packing::{packed_replica_tp, packed_replica_tp_into};
 use crate::manager::spares::{apply_spares, apply_spares_into};
 use crate::sim::engine::FtStrategy;
@@ -21,43 +28,107 @@ pub struct CheckpointRestart;
 
 pub static CKPT_RESTART: CheckpointRestart = CheckpointRestart;
 
+/// Post-restart capacity: uniform TP only — replicas containing failed
+/// GPUs sit out (DP-drop), spares substituted wholesale first; fixed
+/// minibatch pauses unless every replica came back at full TP.
+pub(crate) fn restart_capacity_respond(
+    ctx: &PolicyCtx,
+    job_healthy: &[usize],
+) -> PolicyResponse {
+    let (replica_tp, spares_used) = match ctx.spares {
+        Some(pool) => {
+            let o = apply_spares(
+                job_healthy,
+                ctx.domain_size,
+                ctx.domains_per_replica,
+                &pool,
+            );
+            (o.assignment.replica_tp, o.spares_used)
+        }
+        None => (
+            packed_replica_tp(
+                job_healthy,
+                ctx.domain_size,
+                ctx.domains_per_replica,
+                ctx.packed,
+            ),
+            0,
+        ),
+    };
+    let paused = ctx.spares.is_some() && replica_tp.iter().any(|&tp| tp < ctx.domain_size);
+    PolicyResponse {
+        replicas: legacy::decisions(ctx.table, &replica_tp, FtStrategy::DpDrop),
+        paused,
+        spares_used,
+        overhead: 1.0,
+        donated: 0.0,
+    }
+}
+
+/// Allocation-free [`restart_capacity_respond`].
+pub(crate) fn restart_capacity_respond_with(
+    ctx: &PolicyCtx,
+    job_healthy: &[usize],
+    s: &mut EvalScratch,
+) -> EvalOut {
+    let spares_used = match ctx.spares {
+        Some(pool) => {
+            let used = apply_spares_into(
+                job_healthy,
+                ctx.domain_size,
+                &pool,
+                &mut s.effective,
+                &mut s.order,
+            );
+            packed_replica_tp_into(
+                &s.effective,
+                ctx.domain_size,
+                ctx.domains_per_replica,
+                true,
+                &mut s.pack,
+                &mut s.replica_tp,
+            );
+            used
+        }
+        None => {
+            packed_replica_tp_into(
+                job_healthy,
+                ctx.domain_size,
+                ctx.domains_per_replica,
+                ctx.packed,
+                &mut s.pack,
+                &mut s.replica_tp,
+            );
+            0
+        }
+    };
+    let paused = ctx.spares.is_some() && s.replica_tp.iter().any(|&tp| tp < ctx.domain_size);
+    if paused {
+        return EvalOut { tput: 0.0, paused: true, spares_used, donated: 0.0 };
+    }
+    let processed: usize = s
+        .replica_tp
+        .iter()
+        .map(|&tp| ctx.table.replica_batch(tp, FtStrategy::DpDrop))
+        .sum();
+    let capacity = ctx.table.full_local_batch * s.replica_tp.len();
+    // overhead is exactly 1.0 (uniform TP after restart): multiplying
+    // by it is a bitwise no-op, so it is omitted here.
+    EvalOut {
+        tput: processed as f64 / capacity as f64,
+        paused: false,
+        spares_used,
+        donated: 0.0,
+    }
+}
+
 impl FtPolicy for CheckpointRestart {
     fn name(&self) -> &'static str {
         "CKPT-RESTART"
     }
 
     fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
-        let (replica_tp, spares_used) = match ctx.spares {
-            Some(pool) => {
-                let o = apply_spares(
-                    job_healthy,
-                    ctx.domain_size,
-                    ctx.domains_per_replica,
-                    &pool,
-                );
-                (o.assignment.replica_tp, o.spares_used)
-            }
-            None => (
-                packed_replica_tp(
-                    job_healthy,
-                    ctx.domain_size,
-                    ctx.domains_per_replica,
-                    ctx.packed,
-                ),
-                0,
-            ),
-        };
-        // After the restart, replicas containing failed GPUs sit out
-        // (uniform TP only); fixed minibatch pauses unless every
-        // replica came back at full TP.
-        let paused =
-            ctx.spares.is_some() && replica_tp.iter().any(|&tp| tp < ctx.domain_size);
-        PolicyResponse {
-            replicas: legacy::decisions(ctx.table, &replica_tp, FtStrategy::DpDrop),
-            paused,
-            spares_used,
-            overhead: 1.0,
-        }
+        restart_capacity_respond(ctx, job_healthy)
     }
 
     fn respond_with(
@@ -65,52 +136,8 @@ impl FtPolicy for CheckpointRestart {
         ctx: &PolicyCtx,
         job_healthy: &[usize],
         s: &mut EvalScratch,
-    ) -> (f64, bool, usize) {
-        let spares_used = match ctx.spares {
-            Some(pool) => {
-                let used = apply_spares_into(
-                    job_healthy,
-                    ctx.domain_size,
-                    &pool,
-                    &mut s.effective,
-                    &mut s.order,
-                );
-                packed_replica_tp_into(
-                    &s.effective,
-                    ctx.domain_size,
-                    ctx.domains_per_replica,
-                    true,
-                    &mut s.pack,
-                    &mut s.replica_tp,
-                );
-                used
-            }
-            None => {
-                packed_replica_tp_into(
-                    job_healthy,
-                    ctx.domain_size,
-                    ctx.domains_per_replica,
-                    ctx.packed,
-                    &mut s.pack,
-                    &mut s.replica_tp,
-                );
-                0
-            }
-        };
-        let paused =
-            ctx.spares.is_some() && s.replica_tp.iter().any(|&tp| tp < ctx.domain_size);
-        if paused {
-            return (0.0, true, spares_used);
-        }
-        let processed: usize = s
-            .replica_tp
-            .iter()
-            .map(|&tp| ctx.table.replica_batch(tp, FtStrategy::DpDrop))
-            .sum();
-        let capacity = ctx.table.full_local_batch * s.replica_tp.len();
-        // overhead is exactly 1.0 (uniform TP after restart): multiplying
-        // by it is a bitwise no-op, so it is omitted here.
-        (processed as f64 / capacity as f64, false, spares_used)
+    ) -> EvalOut {
+        restart_capacity_respond_with(ctx, job_healthy, s)
     }
 
     fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
@@ -123,5 +150,9 @@ impl FtPolicy for CheckpointRestart {
             0.0
         };
         ctx.n_gpus as f64 * (t.restart_secs + rollback)
+    }
+
+    fn transition_cost_is_count_pure(&self) -> bool {
+        true
     }
 }

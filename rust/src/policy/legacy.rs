@@ -7,7 +7,7 @@
 //! asserted by `rust/tests/policy_conformance.rs`.
 
 use super::{
-    affected_gpus, changed_domains, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse,
+    affected_gpus, changed_domains, EvalOut, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse,
     ReplicaDecision,
 };
 use crate::manager::packing::{packed_replica_tp, packed_replica_tp_into};
@@ -97,6 +97,7 @@ impl FtPolicy for LegacyPolicy {
                     paused: false,
                     spares_used: 0,
                     overhead,
+                    donated: 0.0,
                 }
             }
             Some(policy) => {
@@ -132,6 +133,7 @@ impl FtPolicy for LegacyPolicy {
                     paused: !ok,
                     spares_used: o.spares_used,
                     overhead,
+                    donated: 0.0,
                 }
             }
         }
@@ -142,7 +144,7 @@ impl FtPolicy for LegacyPolicy {
         ctx: &PolicyCtx,
         job_healthy: &[usize],
         s: &mut EvalScratch,
-    ) -> (f64, bool, usize) {
+    ) -> EvalOut {
         match ctx.spares {
             None => {
                 packed_replica_tp_into(
@@ -160,7 +162,12 @@ impl FtPolicy for LegacyPolicy {
                     .sum();
                 let capacity = ctx.table.full_local_batch * s.replica_tp.len();
                 let overhead = overhead_for(ctx.table, &s.replica_tp, self.strategy);
-                (processed as f64 / capacity as f64 * overhead, false, 0)
+                EvalOut {
+                    tput: processed as f64 / capacity as f64 * overhead,
+                    paused: false,
+                    spares_used: 0,
+                    donated: 0.0,
+                }
             }
             Some(policy) => {
                 let spares_used = apply_spares_into(
@@ -194,7 +201,7 @@ impl FtPolicy for LegacyPolicy {
                     }
                 };
                 if !ok {
-                    return (0.0, true, spares_used);
+                    return EvalOut { tput: 0.0, paused: true, spares_used, donated: 0.0 };
                 }
                 let processed: usize = s
                     .replica_tp
@@ -203,7 +210,12 @@ impl FtPolicy for LegacyPolicy {
                     .sum();
                 let capacity = ctx.table.full_local_batch * s.replica_tp.len();
                 let overhead = overhead_for(ctx.table, &s.replica_tp, self.strategy);
-                (processed as f64 / capacity as f64 * overhead, false, spares_used)
+                EvalOut {
+                    tput: processed as f64 / capacity as f64 * overhead,
+                    paused: false,
+                    spares_used,
+                    donated: 0.0,
+                }
             }
         }
     }
@@ -220,5 +232,9 @@ impl FtPolicy for LegacyPolicy {
                 affected_gpus(ctx, changed_domains(prev, next)) as f64 * t.reshard_secs
             }
         }
+    }
+
+    fn transition_cost_is_count_pure(&self) -> bool {
+        true
     }
 }

@@ -1,0 +1,143 @@
+//! Low-priority donation policy (paper §3.3).
+//!
+//! The NTP capacity response leaves healthy GPUs idle wherever a
+//! replica runs below its domain's healthy count (and leaves *every*
+//! healthy GPU of a dropped or paused replica idle). The paper notes
+//! those GPUs "can be made available to run other workloads rather than
+//! remain idle" — [`crate::manager::lowpri`] models that inventory and
+//! scheduler, and this policy lifts it into the [`FtPolicy`] layer: the
+//! primary job's throughput is **bit-identical** to plain NTP, and the
+//! capacity recovered by hosting best-effort low-priority work flows
+//! through the secondary accounting channel
+//! ([`PolicyResponse::donated`] → `FleetStats::mean_donated`, the
+//! `donated` column of `fleet --json`).
+//!
+//! The reference [`FtPolicy::respond`] path builds the donatable
+//! inventory and drives it through the real best-fit scheduler
+//! ([`crate::manager::lowpri::schedule`], saturating best-effort
+//! demand: one job per idle block); the allocation-free
+//! [`FtPolicy::respond_with`] computes the same donation in closed form
+//! — every idle block places exactly, so both are the same integer sum
+//! (equivalence asserted by the conformance suite).
+
+use super::legacy::NTP;
+use super::{EvalOut, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse};
+use crate::manager::lowpri::{self, LowPriJob};
+use crate::manager::packing::pack_domains;
+use crate::manager::spares::apply_spares;
+use crate::sim::engine::FtStrategy;
+
+/// Unit policy: NTP capacity + saturating low-priority donation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LowpriDonate;
+
+pub static LOWPRI_DONATE: LowpriDonate = LowpriDonate;
+
+impl FtPolicy for LowpriDonate {
+    fn name(&self) -> &'static str {
+        "LOWPRI-DONATE"
+    }
+
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
+        let mut resp = NTP.respond(ctx, job_healthy);
+        // Rebuild the exact assignment the NTP response derived from
+        // (same calls, deterministic), to know which domain backs which
+        // replica.
+        let (healthy, assignment) = match ctx.spares {
+            Some(pool) => {
+                let o = apply_spares(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    &pool,
+                );
+                (o.effective_healthy, o.assignment)
+            }
+            None => (
+                job_healthy.to_vec(),
+                pack_domains(job_healthy, ctx.domain_size, ctx.domains_per_replica, ctx.packed),
+            ),
+        };
+        // Donatable inventory: idle healthy GPUs of running replicas
+        // (healthy − TP per domain), every healthy GPU of dropped
+        // replicas, and — when the whole job is paused — everything.
+        let mut in_replica = vec![false; healthy.len()];
+        let mut inventory: Vec<(usize, usize)> = Vec::new();
+        for (r, doms) in assignment.replicas.iter().enumerate() {
+            let running = !resp.paused && resp.replicas[r].batch > 0;
+            let tp = if running { assignment.replica_tp[r] } else { 0 };
+            for &d in doms {
+                in_replica[d] = true;
+                // tp <= min healthy of the chunk for every in-tree
+                // assignment; saturate (as lowpri::idle_inventory does)
+                // so an exotic future assignment degrades to "no idle"
+                // instead of panicking.
+                let idle = healthy[d].saturating_sub(tp);
+                if idle > 0 {
+                    inventory.push((d, idle));
+                }
+            }
+        }
+        // Domains backing no replica (possible only when the domain
+        // count is not a replica multiple) are fully idle.
+        for (d, &h) in healthy.iter().enumerate() {
+            if !in_replica[d] && h > 0 {
+                inventory.push((d, h));
+            }
+        }
+        inventory.sort_unstable();
+        // Saturating best-effort demand: one job per idle block. Every
+        // job exact-fits some block, so the best-fit-decreasing
+        // scheduler places all of them.
+        let jobs: Vec<LowPriJob> = inventory
+            .iter()
+            .enumerate()
+            .map(|(id, &(_, idle))| LowPriJob { id, gpus: idle })
+            .collect();
+        let (placements, unplaced) = lowpri::schedule(&inventory, &jobs);
+        debug_assert!(unplaced.is_empty(), "exact-fit low-pri jobs must all place");
+        resp.donated = lowpri::recovered_fraction(&placements, ctx.n_gpus);
+        resp
+    }
+
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        s: &mut EvalScratch,
+    ) -> EvalOut {
+        let mut out = NTP.respond_with(ctx, job_healthy, s);
+        // `s.replica_tp` (and, in fixed-minibatch mode, `s.effective`)
+        // still hold this evaluation's state. Closed form of the
+        // scheduler above: total healthy minus the GPUs actively
+        // computing (running replicas only; a paused job computes on
+        // nothing).
+        let healthy_sum: usize = if ctx.spares.is_some() {
+            s.effective.iter().sum()
+        } else {
+            job_healthy.iter().sum()
+        };
+        let used: usize = if out.paused {
+            0
+        } else {
+            s.replica_tp
+                .iter()
+                .filter(|&&tp| ctx.table.replica_batch(tp, FtStrategy::Ntp) > 0)
+                .map(|&tp| tp * ctx.domains_per_replica)
+                .sum()
+        };
+        out.donated = healthy_sum.saturating_sub(used) as f64 / ctx.n_gpus as f64;
+        out
+    }
+
+    fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        // The primary job reconfigures exactly as NTP does; low-pri
+        // preemption/launch is the best-effort tier's cost, not the
+        // primary job's.
+        NTP.transition_cost(ctx, prev, next)
+    }
+
+    fn transition_cost_is_count_pure(&self) -> bool {
+        true
+    }
+}

@@ -24,16 +24,41 @@
 //!   (reordered) into the fewest replicas *before* any TP shrink;
 //!   residual shortfall is redistributed over survivors instead of
 //!   pausing.
+//! * [`lowpri_donation`] — NTP capacity response with idle healthy GPUs
+//!   donated to low-priority jobs (paper §3.3, lifted from
+//!   [`crate::manager::lowpri`]); the donated capacity flows through the
+//!   secondary accounting channel ([`PolicyResponse::donated`]).
+//! * [`partial_restart`] — ByteDance-style partial recovery: only the
+//!   DP replicas containing changed domains restart (with per-replica
+//!   rollback), the rest of the fleet keeps running — between NTP's
+//!   live reshard and `ckpt-restart`'s global stop.
+//! * [`power_spares`] — spare domains kept dark (power-capped via
+//!   [`crate::power::RackDesign`]) until migrated in; transitions pay a
+//!   ramp-up on top of the weight load, steady state credits the saved
+//!   rack power through the secondary channel.
+//! * [`adaptive_checkpoint`] — `ckpt-restart` with the checkpoint
+//!   interval set by the Young/Daly optimum for the trace's *observed*
+//!   failure rate instead of the fixed 3600 s (and the checkpoint-write
+//!   overhead it implies charged against steady-state throughput).
 //!
 //! [`registry`] maps CLI names to policy instances; every registered
-//! policy is exercised by the conformance suite.
+//! policy is exercised by the registry-driven conformance suite
+//! (`rust/tests/policy_conformance.rs`) with zero per-policy test code.
 
+pub mod adaptive_checkpoint;
 pub mod checkpoint;
 pub mod legacy;
+pub mod lowpri_donation;
+pub mod partial_restart;
+pub mod power_spares;
 pub mod registry;
 pub mod spare_migration;
 
+pub use adaptive_checkpoint::AdaptiveCheckpoint;
 pub use checkpoint::CheckpointRestart;
+pub use lowpri_donation::LowpriDonate;
+pub use partial_restart::PartialRestart;
+pub use power_spares::PowerSpares;
 pub use spare_migration::SpareMigration;
 
 use crate::manager::packing::PackScratch;
@@ -85,6 +110,12 @@ pub struct PolicyResponse {
     /// Multiplicative group-rate factor (healthy-replica reshard
     /// overhead and kin); exactly `1.0` when nothing is nonuniform.
     pub overhead: f64,
+    /// Secondary accounting channel, as a fraction of provisioned GPUs:
+    /// capacity the policy recovers *outside* the primary job — idle
+    /// healthy GPUs hosting low-priority work (`LOWPRI-DONATE`) or
+    /// dark-spare rack power saved (`POWER-SPARES`). Exactly `0.0` for
+    /// policies with no secondary channel.
+    pub donated: f64,
 }
 
 impl PolicyResponse {
@@ -96,6 +127,34 @@ impl PolicyResponse {
         let processed: usize = self.replicas.iter().map(|r| r.batch).sum();
         let capacity = full_local_batch * self.replicas.len();
         processed as f64 / capacity as f64 * self.overhead
+    }
+}
+
+/// The integrated quantities of one snapshot evaluation — what the
+/// fleet sweeps accumulate per sample. [`FtPolicy::respond_with`]
+/// returns this directly; [`EvalOut::of`] collapses a full
+/// [`PolicyResponse`] to it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EvalOut {
+    /// Group relative throughput in `[0, 1]` (0 when paused).
+    pub tput: f64,
+    /// Fixed-minibatch pause: the group cannot make progress.
+    pub paused: bool,
+    /// Spares consumed by this snapshot's response.
+    pub spares_used: usize,
+    /// Secondary-channel capacity fraction ([`PolicyResponse::donated`]).
+    pub donated: f64,
+}
+
+impl EvalOut {
+    /// Collapse a full response to its integrated quantities.
+    pub fn of(resp: &PolicyResponse, full_local_batch: usize) -> EvalOut {
+        EvalOut {
+            tput: resp.throughput(full_local_batch),
+            paused: resp.paused,
+            spares_used: resp.spares_used,
+            donated: resp.donated,
+        }
     }
 }
 
@@ -129,9 +188,8 @@ pub trait FtPolicy: Send + Sync {
     fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse;
 
     /// Allocation-free evaluation of one snapshot, returning only the
-    /// integrated quantities `(throughput, paused, spares_used)` —
-    /// exactly `respond(..)` collapsed through
-    /// [`PolicyResponse::throughput`], without materializing the
+    /// integrated [`EvalOut`] quantities — exactly `respond(..)`
+    /// collapsed through [`EvalOut::of`], without materializing the
     /// per-replica decision vector. The fleet-sweep hot path
     /// ([`crate::manager::MultiPolicySim`]) calls this behind its
     /// snapshot-signature memo; the default implementation delegates to
@@ -143,9 +201,8 @@ pub trait FtPolicy: Send + Sync {
         ctx: &PolicyCtx,
         job_healthy: &[usize],
         _scratch: &mut EvalScratch,
-    ) -> (f64, bool, usize) {
-        let resp = self.respond(ctx, job_healthy);
-        (resp.throughput(ctx.table.full_local_batch), resp.paused, resp.spares_used)
+    ) -> EvalOut {
+        EvalOut::of(&self.respond(ctx, job_healthy), ctx.table.full_local_batch)
     }
 
     /// GPU-seconds of downtime charged when the fleet's per-domain
@@ -155,6 +212,19 @@ pub trait FtPolicy: Send + Sync {
     /// pre-policy-layer paths.
     fn transition_cost(&self, _ctx: &PolicyCtx, _prev: &[usize], _next: &[usize]) -> f64 {
         0.0
+    }
+
+    /// Whether [`FtPolicy::transition_cost`] is a pure function of the
+    /// *counts* `(changed domains, degraded domains)` plus the context
+    /// (live spare pool, total GPUs, cost model) — i.e. independent of
+    /// *which* domains changed and by how much. The shared sweep
+    /// ([`crate::manager::MultiPolicySim`]) memoizes transition charges
+    /// per count tuple only when this returns `true`. Every in-tree
+    /// policy is count-pure (asserted by the conformance suite); the
+    /// conservative default is `false` so out-of-tree policies must opt
+    /// in explicitly.
+    fn transition_cost_is_count_pure(&self) -> bool {
+        false
     }
 }
 
@@ -174,6 +244,18 @@ pub struct TransitionCosts {
     /// Streaming a replica shard's weights onto a migrated-in spare
     /// domain, seconds.
     pub spare_load_secs: f64,
+    /// Writing one checkpoint, seconds (the Young/Daly δ that
+    /// `CKPT-ADAPTIVE` optimizes its interval against).
+    pub ckpt_write_secs: f64,
+    /// Ramping a dark (power-capped) spare domain back to full power
+    /// and stable clocks, seconds per domain (`POWER-SPARES`).
+    pub power_ramp_secs: f64,
+    /// Observed job-stopping failure rate, events per hour. `0.0` means
+    /// "not observed": `CKPT-ADAPTIVE` then falls back to the fixed
+    /// [`TransitionCosts::checkpoint_interval_secs`] and behaves exactly
+    /// like `CKPT-RESTART`. Set from a trace via
+    /// [`TransitionCosts::with_observed_rate`].
+    pub failure_rate_per_hour: f64,
 }
 
 impl TransitionCosts {
@@ -185,7 +267,22 @@ impl TransitionCosts {
             checkpoint_interval_secs: 3600.0,
             reshard_secs: reshard_transition_secs(sim, cfg),
             spare_load_secs: 300.0,
+            ckpt_write_secs: 120.0,
+            power_ramp_secs: 60.0,
+            failure_rate_per_hour: 0.0,
         }
+    }
+
+    /// The same costs with [`TransitionCosts::failure_rate_per_hour`]
+    /// set to the trace's *observed* event rate — what `CKPT-ADAPTIVE`
+    /// feeds the Young/Daly optimum instead of assuming an interval.
+    pub fn with_observed_rate(self, trace: &crate::failure::Trace) -> TransitionCosts {
+        let rate = if trace.horizon_hours > 0.0 {
+            trace.events.len() as f64 / trace.horizon_hours
+        } else {
+            0.0
+        };
+        TransitionCosts { failure_rate_per_hour: rate, ..self }
     }
 }
 
@@ -261,6 +358,34 @@ mod tests {
         // nothing to reshard at TP1
         let cfg1 = ParallelConfig { tp: 1, pp: 8, dp: 128, microbatch: 1 };
         assert_eq!(reshard_transition_secs(&sim, &cfg1), 0.0);
+    }
+
+    #[test]
+    fn observed_rate_is_events_per_hour() {
+        use crate::failure::{FailureEvent, Trace};
+        let mk = |gpu| FailureEvent {
+            at_hours: 1.0,
+            gpu,
+            is_hw: false,
+            recover_at_hours: 2.0,
+        };
+        let trace = Trace { horizon_hours: 48.0, events: vec![mk(0), mk(1), mk(2)] };
+        let base = TransitionCosts {
+            restart_secs: 900.0,
+            checkpoint_interval_secs: 3600.0,
+            reshard_secs: 1.0,
+            spare_load_secs: 300.0,
+            ckpt_write_secs: 120.0,
+            power_ramp_secs: 60.0,
+            failure_rate_per_hour: 0.0,
+        };
+        let t = base.with_observed_rate(&trace);
+        assert!((t.failure_rate_per_hour - 3.0 / 48.0).abs() < 1e-15);
+        // everything else untouched
+        assert_eq!(t.restart_secs, base.restart_secs);
+        assert_eq!(t.ckpt_write_secs, base.ckpt_write_secs);
+        let empty = Trace { horizon_hours: 0.0, events: vec![] };
+        assert_eq!(base.with_observed_rate(&empty).failure_rate_per_hour, 0.0);
     }
 
     #[test]

@@ -1,0 +1,64 @@
+//! Partial (replica-scoped) restart — ByteDance-style partial recovery.
+//!
+//! Sits between NTP's live reshard and `ckpt-restart`'s global stop:
+//! when a domain's health changes, only the DP replicas *containing*
+//! that domain stop, restart their process groups on the surviving
+//! hardware and roll back to their last checkpoint shard; the rest of
+//! the fleet keeps training. Steady-state capacity is therefore the
+//! same post-restart uniform-TP response as `ckpt-restart`
+//! ([`super::checkpoint::restart_capacity_respond`]) — what changes is
+//! the transition bill, which scales with the *affected* GPUs instead
+//! of the whole fleet.
+//!
+//! First-order model: the unaffected replicas are assumed to keep
+//! making progress through the replica restart (gradient contributions
+//! of the restarting replica are skipped, as in partial-recovery
+//! systems), so only the restarting replicas' GPU-seconds are charged.
+
+use super::checkpoint::{restart_capacity_respond, restart_capacity_respond_with};
+use super::{
+    affected_gpus, changed_domains, degraded_domains, EvalOut, EvalScratch, FtPolicy, PolicyCtx,
+    PolicyResponse,
+};
+
+/// Unit policy: all cost parameters come from
+/// [`super::TransitionCosts`] in the context.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PartialRestart;
+
+pub static PARTIAL_RESTART: PartialRestart = PartialRestart;
+
+impl FtPolicy for PartialRestart {
+    fn name(&self) -> &'static str {
+        "PARTIAL-RESTART"
+    }
+
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
+        restart_capacity_respond(ctx, job_healthy)
+    }
+
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        s: &mut EvalScratch,
+    ) -> EvalOut {
+        restart_capacity_respond_with(ctx, job_healthy, s)
+    }
+
+    fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        let Some(t) = ctx.transition else { return 0.0 };
+        // Every replica containing a changed domain restarts; replicas
+        // containing a freshly *degraded* domain additionally roll back
+        // to their last checkpoint shard (half an interval on average).
+        let restart = affected_gpus(ctx, changed_domains(prev, next)) as f64 * t.restart_secs;
+        let rollback = affected_gpus(ctx, degraded_domains(prev, next)) as f64
+            * 0.5
+            * t.checkpoint_interval_secs;
+        restart + rollback
+    }
+
+    fn transition_cost_is_count_pure(&self) -> bool {
+        true
+    }
+}

@@ -1,0 +1,91 @@
+//! Power-aware dark spares.
+//!
+//! Provisioning spare scale-up domains costs rack power even while they
+//! idle. This policy keeps the spare pool **dark** — power-capped to a
+//! standby fraction of TDP via the [`crate::power::RackDesign`] budget
+//! model — until a failure migrates one in. The capacity response is
+//! exactly [`super::spare_migration::SpareMigration`]'s
+//! migrate-then-stack-then-shrink (delegated, so the primary job's
+//! throughput is bit-identical to `SPARE-MIG`); what changes:
+//!
+//! * steady state credits the rack budget freed by the *unused* dark
+//!   domains — provisioned at [`RackDesign::rack_budget_frac`] × TDP
+//!   per GPU, drawing only `standby_power_frac` while dark — through
+//!   the secondary accounting channel ([`PolicyResponse::donated`]),
+//!   per provisioned GPU;
+//! * each migrated-in domain pays a power **ramp-up**
+//!   ([`super::TransitionCosts::power_ramp_secs`]) on top of the weight
+//!   load before it can serve traffic.
+
+use super::spare_migration::{migrated_domains, SPARE_MIGRATION};
+use super::{EvalOut, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse};
+use crate::power::RackDesign;
+
+#[derive(Clone, Debug)]
+pub struct PowerSpares {
+    /// Rack budget model the dark pool is capped under.
+    pub rack: RackDesign,
+    /// Standby power of a dark spare domain as a fraction of TDP
+    /// (VR/HBM retention + fabric keep-alive).
+    pub standby_power_frac: f64,
+}
+
+pub static POWER_SPARES: PowerSpares = PowerSpares {
+    rack: RackDesign { gpu_boost_cap: 1.3, rack_budget_frac: 1.3 },
+    standby_power_frac: 0.15,
+};
+
+impl PowerSpares {
+    /// Saved-rack-power credit of the dark (unused) spare domains, in
+    /// units of nominal (TDP) GPU power per provisioned GPU. A spare
+    /// domain is provisioned for `rack_budget_frac × TDP` per GPU (the
+    /// flexible rack's oversubscribed budget, §3.2) but draws only the
+    /// standby fraction while dark — the difference is budget the row
+    /// can redistribute (boost headroom for NTP-PW neighbors), which is
+    /// what makes the rack design, not just the standby cap, shape the
+    /// credit: a traditional rack (`rack_budget_frac = 1.0`) frees
+    /// strictly less than the paper's 1.3× flexible rack.
+    fn dark_credit(&self, ctx: &PolicyCtx, spares_used: usize) -> f64 {
+        let Some(pool) = ctx.spares else { return 0.0 };
+        let dark_gpus = pool.spare_domains.saturating_sub(spares_used) * ctx.domain_size;
+        let freed_budget = (self.rack.rack_budget_frac - self.standby_power_frac).max(0.0);
+        dark_gpus as f64 * freed_budget / ctx.n_gpus as f64
+    }
+}
+
+impl FtPolicy for PowerSpares {
+    fn name(&self) -> &'static str {
+        "POWER-SPARES"
+    }
+
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
+        let mut resp = SPARE_MIGRATION.respond(ctx, job_healthy);
+        resp.donated = self.dark_credit(ctx, resp.spares_used);
+        resp
+    }
+
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        s: &mut EvalScratch,
+    ) -> EvalOut {
+        let mut out = SPARE_MIGRATION.respond_with(ctx, job_healthy, s);
+        out.donated = self.dark_credit(ctx, out.spares_used);
+        out
+    }
+
+    fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        let Some(t) = ctx.transition else { return 0.0 };
+        // Exactly SPARE-MIG's bill (affected replicas reshard,
+        // migrated-in domains stream weights — delegated, so the two
+        // policies cannot drift apart) plus the power ramp of waking
+        // each migrated domain from standby.
+        SPARE_MIGRATION.transition_cost(ctx, prev, next)
+            + (migrated_domains(ctx, prev, next) * ctx.domain_size) as f64 * t.power_ramp_secs
+    }
+
+    fn transition_cost_is_count_pure(&self) -> bool {
+        true
+    }
+}

@@ -1,16 +1,34 @@
 //! Name → policy registry: the single place new fault-tolerance
 //! policies are plugged in. CLI subcommands, benches and the
-//! conformance suite all enumerate or parse through here.
+//! registry-driven conformance suite all enumerate or parse through
+//! here — adding an entry to [`all`] is what buys a new policy its
+//! automatic property coverage (`rust/tests/policy_conformance.rs`),
+//! shared-sweep bit-identity (`rust/tests/multi_policy_sweep.rs`) and
+//! golden-trace pin (`rust/tests/golden_trace.rs`).
 
+use super::adaptive_checkpoint::CKPT_ADAPTIVE;
 use super::checkpoint::CKPT_RESTART;
 use super::legacy::{DP_DROP, NTP, NTP_PW};
+use super::lowpri_donation::LOWPRI_DONATE;
+use super::partial_restart::PARTIAL_RESTART;
+use super::power_spares::POWER_SPARES;
 use super::spare_migration::SPARE_MIGRATION;
 use super::FtPolicy;
 
 /// Every registered policy with its default parameters (the
 /// conformance suite runs against exactly this list).
-pub fn all() -> [&'static dyn FtPolicy; 5] {
-    [&DP_DROP, &NTP, &NTP_PW, &CKPT_RESTART, &SPARE_MIGRATION]
+pub fn all() -> [&'static dyn FtPolicy; 9] {
+    [
+        &DP_DROP,
+        &NTP,
+        &NTP_PW,
+        &CKPT_RESTART,
+        &SPARE_MIGRATION,
+        &LOWPRI_DONATE,
+        &PARTIAL_RESTART,
+        &POWER_SPARES,
+        &CKPT_ADAPTIVE,
+    ]
 }
 
 /// Registered CLI names (canonical spellings).
@@ -27,8 +45,13 @@ pub fn parse(name: &str) -> anyhow::Result<&'static dyn FtPolicy> {
         "ntp-pw" | "ntppw" | "pw" => &NTP_PW,
         "ckpt-restart" | "ckpt" | "checkpoint" | "checkpoint-restart" => &CKPT_RESTART,
         "spare-mig" | "spare-migration" | "stacked" => &SPARE_MIGRATION,
+        "lowpri-donate" | "lowpri" | "donate" => &LOWPRI_DONATE,
+        "partial-restart" | "partial" => &PARTIAL_RESTART,
+        "power-spares" | "dark-spares" => &POWER_SPARES,
+        "ckpt-adaptive" | "adaptive" | "young-daly" => &CKPT_ADAPTIVE,
         other => anyhow::bail!(
-            "unknown policy '{other}' (known: dp-drop, ntp, ntp-pw, ckpt-restart, spare-mig)"
+            "unknown policy '{other}' (known: dp-drop, ntp, ntp-pw, ckpt-restart, \
+             spare-mig, lowpri-donate, partial-restart, power-spares, ckpt-adaptive)"
         ),
     })
 }
@@ -55,22 +78,26 @@ mod tests {
         assert_eq!(parse("drop").unwrap().name(), "DP-DROP");
         assert_eq!(parse("checkpoint").unwrap().name(), "CKPT-RESTART");
         assert_eq!(parse("stacked").unwrap().name(), "SPARE-MIG");
-        let l = parse_list("ntp, ntp-pw,ckpt-restart").unwrap();
+        assert_eq!(parse("lowpri").unwrap().name(), "LOWPRI-DONATE");
+        assert_eq!(parse("partial").unwrap().name(), "PARTIAL-RESTART");
+        assert_eq!(parse("dark-spares").unwrap().name(), "POWER-SPARES");
+        assert_eq!(parse("young-daly").unwrap().name(), "CKPT-ADAPTIVE");
+        let l = parse_list("ntp, ntp-pw,ckpt-adaptive").unwrap();
         assert_eq!(
             l.iter().map(|p| p.name()).collect::<Vec<_>>(),
-            vec!["NTP", "NTP-PW", "CKPT-RESTART"]
+            vec!["NTP", "NTP-PW", "CKPT-ADAPTIVE"]
         );
         assert!(parse("nope").is_err());
         assert!(parse_list("ntp,nope").is_err());
     }
 
     #[test]
-    fn registry_is_five_distinct_policies() {
+    fn registry_is_nine_distinct_policies() {
         let names = names();
-        assert_eq!(names.len(), 5);
+        assert_eq!(names.len(), 9);
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();
-        assert_eq!(dedup.len(), 5);
+        assert_eq!(dedup.len(), 9);
     }
 }

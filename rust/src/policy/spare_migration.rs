@@ -10,8 +10,8 @@
 //! falls below [`SpareMigration::min_capacity_frac`].
 
 use super::{
-    affected_gpus, changed_domains, degraded_domains, legacy, EvalScratch, FtPolicy, PolicyCtx,
-    PolicyResponse,
+    affected_gpus, changed_domains, degraded_domains, legacy, EvalOut, EvalScratch, FtPolicy,
+    PolicyCtx, PolicyResponse,
 };
 use crate::manager::packing::{packed_replica_tp, packed_replica_tp_into};
 use crate::manager::spares::{apply_spares, apply_spares_into};
@@ -25,6 +25,20 @@ pub struct SpareMigration {
 }
 
 pub static SPARE_MIGRATION: SpareMigration = SpareMigration { min_capacity_frac: 0.5 };
+
+/// Spare domains migrated in by one health change: one per freshly
+/// degraded domain, bounded by the *live* pool (failed spare domains
+/// cannot be migrated in — `ctx.spares` carries the live-adjusted pool,
+/// see `FleetSim::live_spares_in`); with no pool configured the count
+/// models pulling in warm standbys, one per fresh failure. Shared by
+/// `SPARE-MIG` and the dark-pool `POWER-SPARES` bill.
+pub(crate) fn migrated_domains(ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> usize {
+    let degraded = degraded_domains(prev, next);
+    match ctx.spares {
+        Some(pool) => degraded.min(pool.spare_domains),
+        None => degraded,
+    }
+}
 
 impl FtPolicy for SpareMigration {
     fn name(&self) -> &'static str {
@@ -58,7 +72,7 @@ impl FtPolicy for SpareMigration {
         let capacity = ctx.table.full_local_batch * replicas.len().max(1);
         let frac = processed as f64 / capacity as f64;
         let paused = ctx.spares.is_some() && frac < self.min_capacity_frac;
-        PolicyResponse { replicas, paused, spares_used, overhead }
+        PolicyResponse { replicas, paused, spares_used, overhead, donated: 0.0 }
     }
 
     fn respond_with(
@@ -66,7 +80,7 @@ impl FtPolicy for SpareMigration {
         ctx: &PolicyCtx,
         job_healthy: &[usize],
         s: &mut EvalScratch,
-    ) -> (f64, bool, usize) {
+    ) -> EvalOut {
         // 1) Migrate spares into the worst domains first.
         let (spares_used, packed_from_effective) = match ctx.spares {
             Some(pool) => (
@@ -105,27 +119,28 @@ impl FtPolicy for SpareMigration {
         let frac = processed as f64 / capacity as f64;
         let paused = ctx.spares.is_some() && frac < self.min_capacity_frac;
         if paused {
-            return (0.0, true, spares_used);
+            return EvalOut { tput: 0.0, paused: true, spares_used, donated: 0.0 };
         }
         let throughput_capacity = ctx.table.full_local_batch * s.replica_tp.len();
-        (processed as f64 / throughput_capacity as f64 * overhead, false, spares_used)
+        EvalOut {
+            tput: processed as f64 / throughput_capacity as f64 * overhead,
+            paused: false,
+            spares_used,
+            donated: 0.0,
+        }
     }
 
     fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
         let Some(t) = ctx.transition else { return 0.0 };
         // Affected replicas reshard their TP layout; each freshly
         // damaged domain additionally pulls a weight copy onto the
-        // spare domain migrated into its place. Migrations are bounded
-        // by the *live* spare pool (failed spare domains cannot be
-        // migrated in — `ctx.spares` carries the live-adjusted pool, see
-        // `FleetSim::live_spares_in`); with no pool configured the term
-        // models pulling in warm standbys, one per fresh failure.
+        // spare domain migrated into its place ([`migrated_domains`]).
         let reshard = affected_gpus(ctx, changed_domains(prev, next)) as f64 * t.reshard_secs;
-        let degraded = degraded_domains(prev, next);
-        let migrated = match ctx.spares {
-            Some(pool) => degraded.min(pool.spare_domains),
-            None => degraded,
-        };
+        let migrated = migrated_domains(ctx, prev, next);
         reshard + (migrated * ctx.domain_size) as f64 * t.spare_load_secs
+    }
+
+    fn transition_cost_is_count_pure(&self) -> bool {
+        true
     }
 }

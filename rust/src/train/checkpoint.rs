@@ -17,6 +17,29 @@ use std::io::{Read, Write};
 /// Magic + version for the binary blob.
 const MAGIC: &[u8; 8] = b"NTPCKPT1";
 
+/// Young/Daly optimal checkpoint interval, seconds: `τ* = sqrt(2 δ M)`
+/// for checkpoint-write cost `δ` and mean time between failures `M` —
+/// the closed-form minimizer of [`checkpoint_overhead_frac`]. Edge
+/// cases: an infinite MTBF (no failures observed) returns `∞` (never
+/// checkpoint), a zero MTBF or zero write cost returns `0`
+/// (checkpoint continuously / for free).
+pub fn young_daly_interval_secs(write_secs: f64, mtbf_secs: f64) -> f64 {
+    assert!(write_secs >= 0.0 && mtbf_secs >= 0.0, "negative checkpoint inputs");
+    if mtbf_secs.is_infinite() {
+        return f64::INFINITY;
+    }
+    (2.0 * write_secs * mtbf_secs).sqrt()
+}
+
+/// First-order expected overhead fraction of checkpointing every
+/// `interval_secs` (Young's model): the write cost amortized per
+/// interval, plus the expected rollback of half an interval once per
+/// MTBF. Minimized exactly at [`young_daly_interval_secs`].
+pub fn checkpoint_overhead_frac(interval_secs: f64, write_secs: f64, mtbf_secs: f64) -> f64 {
+    assert!(interval_secs > 0.0, "interval must be positive");
+    write_secs / interval_secs + interval_secs / (2.0 * mtbf_secs)
+}
+
 /// A checkpoint: named full tensors + optimizer state + step counter.
 pub struct Checkpoint {
     pub step: u64,
@@ -169,6 +192,63 @@ mod tests {
     #[test]
     fn missing_file_errors() {
         assert!(Checkpoint::load("/nonexistent/ck").is_err());
+    }
+
+    #[test]
+    fn young_daly_matches_brute_force_minimization() {
+        // The closed form must land on (or beat, up to grid resolution)
+        // a brute-force numeric minimization of the overhead model over
+        // a fine interval grid, across disparate (δ, M) regimes.
+        for &(write, mtbf) in &[
+            (120.0, 50_000.0), // hourly-ish optimum
+            (120.0, 500.0),    // brutal failure rate: τ* < 10 min
+            (10.0, 3.0e6),     // cheap writes, rare failures
+            (600.0, 86_400.0), // slow writes, daily failures
+        ] {
+            let tau = young_daly_interval_secs(write, mtbf);
+            assert!((tau - (2.0 * write * mtbf).sqrt()).abs() < 1e-9);
+            let f = |t: f64| checkpoint_overhead_frac(t, write, mtbf);
+            // Grid search over [tau/50, tau*50] at 0.1% resolution.
+            let (mut best_t, mut best_f) = (tau / 50.0, f(tau / 50.0));
+            let mut t = tau / 50.0;
+            while t < tau * 50.0 {
+                let v = f(t);
+                if v < best_f {
+                    best_f = v;
+                    best_t = t;
+                }
+                t *= 1.001;
+            }
+            assert!(
+                f(tau) <= best_f + 1e-12,
+                "closed form τ={tau} (overhead {}) beaten by grid t={best_t} ({best_f}) \
+                 for δ={write} M={mtbf}",
+                f(tau)
+            );
+            assert!(
+                (best_t / tau - 1.0).abs() < 0.01,
+                "grid argmin {best_t} far from closed form {tau} (δ={write} M={mtbf})"
+            );
+        }
+    }
+
+    #[test]
+    fn young_daly_edge_cases() {
+        // zero failure rate (infinite MTBF): never checkpoint
+        assert_eq!(young_daly_interval_secs(120.0, f64::INFINITY), f64::INFINITY);
+        // rate -> ∞ (MTBF -> 0): checkpoint continuously
+        assert_eq!(young_daly_interval_secs(120.0, 0.0), 0.0);
+        let tiny = young_daly_interval_secs(120.0, 1e-9);
+        assert!(tiny > 0.0 && tiny < 1e-3);
+        // free checkpoints: τ* = 0 regardless of MTBF
+        assert_eq!(young_daly_interval_secs(0.0, 50_000.0), 0.0);
+        // interval monotone in both δ and M
+        assert!(
+            young_daly_interval_secs(120.0, 1000.0) < young_daly_interval_secs(120.0, 4000.0)
+        );
+        assert!(
+            young_daly_interval_secs(30.0, 1000.0) < young_daly_interval_secs(120.0, 1000.0)
+        );
     }
 
     #[test]

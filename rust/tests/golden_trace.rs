@@ -1,0 +1,175 @@
+//! Golden-trace regression pin: one fixed-seed trace × every registered
+//! policy × transitions on/off × spares on/off, with the integrated
+//! [`FleetStats`] pinned **bit-exactly** (f64s compared by bit pattern,
+//! serialized as hex) against `tests/golden/fleet_stats_v1.json`.
+//!
+//! Purpose: catch silent numeric drift across refactors — a reordered
+//! float expression, a changed accumulation order, a "harmless"
+//! simplification — that every tolerance-based assertion would wave
+//! through.
+//!
+//! Bless protocol: when the golden file is absent (first run on a new
+//! checkout) the test writes it and passes, printing a notice; commit
+//! the file to pin the numbers. After an *intentional* numeric change,
+//! re-bless with `UPDATE_GOLDEN=1 cargo test --test golden_trace`.
+//!
+//! Independent of the file, every entry is cross-checked in-run against
+//! the per-step replay path and the shared multi-policy sweep, so all
+//! three integration paths must agree bit-for-bit on the golden trace
+//! before anything is compared or blessed.
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{BlastRadius, FailureModel, Trace};
+use ntp::manager::{FleetSim, FleetStats, MultiPolicySim, SparePolicy, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, TransitionCosts};
+use ntp::power::RackDesign;
+use ntp::sim::{IterationModel, SimParams};
+use ntp::util::json::Value;
+use ntp::util::prng::Rng;
+
+const DOMAIN_SIZE: usize = 32;
+const PER_REPLICA: usize = 4;
+const JOB_DOMAINS: usize = 24;
+const SPARE_DOMAINS: usize = 4;
+const GOLDEN_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/fleet_stats_v1.json");
+
+fn hex(x: f64) -> Value {
+    Value::Str(format!("{:016x}", x.to_bits()))
+}
+
+/// Bit-exact, human-auditable serialization: every f64 as its hex bit
+/// pattern plus a lossy decimal echo for the reviewer.
+fn stats_value(s: &FleetStats) -> Value {
+    Value::obj(vec![
+        ("mean_throughput", hex(s.mean_throughput)),
+        ("paused_frac", hex(s.paused_frac)),
+        ("mean_spares_used", hex(s.mean_spares_used)),
+        ("throughput_per_gpu", hex(s.throughput_per_gpu)),
+        ("downtime_frac", hex(s.downtime_frac)),
+        ("mean_donated", hex(s.mean_donated)),
+        ("transitions", s.transitions.into()),
+        ("echo_mean_throughput", Value::Str(format!("{:.6}", s.mean_throughput))),
+    ])
+}
+
+#[test]
+fn golden_trace_pins_fleet_stats_for_every_policy() {
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 2 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: DOMAIN_SIZE, pp: PER_REPLICA, dp: 16, microbatch: 1 };
+    let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    let topo = Topology::of((JOB_DOMAINS + SPARE_DOMAINS) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    // THE golden trace: fixed seed, fixed rate, fixed horizon. Any
+    // change here invalidates the pinned file by design.
+    let model = FailureModel::llama3().scaled(40.0);
+    let mut rng = Rng::new(0x601D);
+    let trace = Trace::generate(&topo, &model, 24.0 * 20.0, &mut rng);
+    assert!(!trace.events.is_empty(), "golden trace generated no events");
+    let observed = TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace);
+
+    let policies = registry::all();
+    let mut entries: Vec<(String, FleetStats)> = Vec::new();
+    for transition in [None, Some(observed)] {
+        for spares in [None, Some(SparePolicy { spare_domains: SPARE_DOMAINS, min_tp: 28 })] {
+            // Cross-check all three integration paths on this config
+            // before pinning anything: shared sweep == event-driven
+            // per-policy run == per-step replay, bit for bit.
+            let msim = MultiPolicySim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: PER_REPLICA,
+                policies: &policies,
+                spares,
+                packed: true,
+                blast: BlastRadius::Single,
+                transition,
+            };
+            let shared = msim.run(&trace, 2.0);
+            for (i, &policy) in policies.iter().enumerate() {
+                let fs = FleetSim {
+                    topo: &topo,
+                    table: &table,
+                    domains_per_replica: PER_REPLICA,
+                    policy,
+                    spares,
+                    packed: true,
+                    blast: BlastRadius::Single,
+                    transition,
+                };
+                let stats = fs.run(&trace, 2.0);
+                assert_eq!(
+                    stats,
+                    fs.run_replay_per_step(&trace, 2.0),
+                    "{}: event-driven vs per-step drift on the golden trace",
+                    policy.name()
+                );
+                assert_eq!(
+                    stats,
+                    shared[i],
+                    "{}: shared-sweep drift on the golden trace",
+                    policy.name()
+                );
+                let key = format!(
+                    "{}|spares={}|transitions={}",
+                    policy.name(),
+                    spares.map(|p| p.spare_domains).unwrap_or(0),
+                    transition.is_some()
+                );
+                entries.push((key, stats));
+            }
+        }
+    }
+
+    let got = Value::Obj(
+        entries
+            .iter()
+            .map(|(k, s)| (k.clone(), stats_value(s)))
+            .collect(),
+    );
+    let rebless = std::env::var("UPDATE_GOLDEN").is_ok();
+    match std::fs::read_to_string(GOLDEN_PATH) {
+        Ok(text) if !rebless => {
+            let want = Value::parse(&text)
+                .unwrap_or_else(|e| panic!("golden file is not valid JSON: {e}"));
+            let want_map = want.as_obj().expect("golden file must be a JSON object");
+            assert_eq!(
+                want_map.len(),
+                entries.len(),
+                "golden entry count changed (policies or grid changed?) — \
+                 re-bless with UPDATE_GOLDEN=1 if intentional"
+            );
+            for (key, stats) in &entries {
+                assert_eq!(
+                    want.get(key),
+                    &stats_value(stats),
+                    "FleetStats drifted from the golden record for '{key}'.\n\
+                     If this change is intentional, re-bless with:\n\
+                     UPDATE_GOLDEN=1 cargo test --test golden_trace"
+                );
+            }
+        }
+        _ => {
+            if let Some(dir) = std::path::Path::new(GOLDEN_PATH).parent() {
+                std::fs::create_dir_all(dir).expect("creating tests/golden");
+            }
+            std::fs::write(GOLDEN_PATH, got.pretty()).expect("writing golden file");
+            eprintln!(
+                "golden_trace: {} {GOLDEN_PATH} with {} entries — commit it to pin",
+                if rebless { "re-blessed" } else { "blessed" },
+                entries.len()
+            );
+        }
+    }
+}

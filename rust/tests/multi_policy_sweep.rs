@@ -6,9 +6,10 @@
 //!   traces, spares on/off, transitions on/off, packed on/off.
 //! * Memo soundness: in packed mode (and in fixed-minibatch mode,
 //!   whose spare substitution + packing always reorder), every
-//!   registered policy's `(throughput, paused, spares_used)` is a pure
-//!   function of the damaged-domain **multiset** — permuting domains
-//!   never changes the response.
+//!   registered policy's `EvalOut` (throughput, pause, spares used,
+//!   donated channel) is a pure function of the damaged-domain
+//!   **multiset** — permuting domains never changes the response. The
+//!   count-keyed transition memo rides the same bit-identity property.
 //! * The counterexample that keeps the memo honest: in *unpacked*
 //!   flexible mode the response depends on domain **positions**, so two
 //!   snapshots with equal damage multisets can evaluate differently —
@@ -92,8 +93,12 @@ fn shared_sweep_bit_identical_to_per_policy_runs() {
             // where the memo is bypassed entirely)
             None
         };
+        // The observed rate makes CKPT-ADAPTIVE genuinely adaptive
+        // (Young/Daly interval + steady-state write overhead), so its
+        // memoized responses and transition charges are exercised too.
+        let observed = TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace);
         for packed in [true, false] {
-            for transition in [None, Some(TransitionCosts::model(&sim, &cfg))] {
+            for transition in [None, Some(observed)] {
                 let msim = MultiPolicySim {
                     topo: &topo,
                     table: &table,
@@ -169,6 +174,11 @@ fn memo_shared_across_trials_and_sweep_points_is_sound() {
                 checkpoint_interval_secs: 3600.0,
                 reshard_secs: 2.0,
                 spare_load_secs: 300.0,
+                ckpt_write_secs: 120.0,
+                power_ramp_secs: 60.0,
+                // nonzero: CKPT-ADAPTIVE's rate-dependent responses and
+                // charges must also memo-share soundly
+                failure_rate_per_hour: 0.8,
             }),
         };
         with_shared.extend(msim.run_trials(&traces, 1.5, &mut shared_memo));
@@ -181,6 +191,73 @@ fn memo_shared_across_trials_and_sweep_points_is_sound() {
         shared_memo.hits() > 0,
         "sharing across trials/sweep points should produce memo hits"
     );
+    assert!(
+        shared_memo.transition_hits() > 0,
+        "repeated (changed, degraded) patterns should hit the transition memo"
+    );
+}
+
+/// The count-keyed transition memo must serve **bit-identical** charges:
+/// a warm shared sweep (second pass over the same trace, memo fully
+/// primed — every charge a cache hit) against the per-policy
+/// `FleetSim::run` reference, which never memoizes. This is the
+/// ROADMAP "memoize transition_cost per (policy, changed, degraded,
+/// live_spares)" follow-on made safe.
+#[test]
+fn transition_memo_charges_are_bit_identical() {
+    let (sim, cfg, table) = setup();
+    let policies = registry::all();
+    let job_domains = 24usize;
+    let spare_domains = 4usize;
+    let topo = Topology::of((job_domains + spare_domains) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(50.0);
+    let mut rng = Rng::new(0xC0DE);
+    let trace = Trace::generate(&topo, &model, 24.0 * 18.0, &mut rng);
+    let transition = Some(TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace));
+    for spares in [None, Some(SparePolicy { spare_domains, min_tp: 28 })] {
+        let msim = MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policies: &policies,
+            spares,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+        };
+        let mut memo = msim.memo();
+        let cold = msim.run_with(&trace, 2.0, &mut memo);
+        let cold_hits = memo.transition_hits();
+        let warm = msim.run_with(&trace, 2.0, &mut memo);
+        assert_eq!(cold, warm, "a fully warm transition memo changed the stats");
+        assert!(
+            memo.transition_misses() > 0,
+            "transitions never charged — the trace is too quiet for this test"
+        );
+        assert!(
+            memo.transition_hits() > cold_hits,
+            "second pass should be served from the transition memo"
+        );
+        for (i, &policy) in policies.iter().enumerate() {
+            let reference = FleetSim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: PER_REPLICA,
+                policy,
+                spares,
+                packed: true,
+                blast: BlastRadius::Single,
+                transition,
+            }
+            .run(&trace, 2.0);
+            assert_eq!(
+                cold[i],
+                reference,
+                "memoized charges for {} diverge from the unmemoized reference",
+                policy.name()
+            );
+        }
+    }
 }
 
 #[test]
@@ -263,10 +340,11 @@ fn unpacked_mode_is_position_dependent_and_must_bypass_memo() {
     for policy in registry::all() {
         let a = policy.respond_with(&ctx, &spread, &mut scratch);
         let b = policy.respond_with(&ctx, &packed_damage, &mut scratch);
-        // SPARE-MIG always restacks (ignores ctx.packed), so it agrees;
-        // the positional policies must not.
-        if policy.name() == "SPARE-MIG" {
-            assert_eq!(a, b, "SPARE-MIG restacks regardless of packing");
+        // SPARE-MIG — and POWER-SPARES, which delegates its capacity
+        // response to it — always restacks (ignores ctx.packed), so
+        // they agree; the positional policies must not.
+        if matches!(policy.name(), "SPARE-MIG" | "POWER-SPARES") {
+            assert_eq!(a, b, "{} restacks regardless of packing", policy.name());
         } else if a != b {
             saw_difference = true;
         }

@@ -1,12 +1,19 @@
-//! Policy-layer conformance suite.
+//! Registry-driven policy conformance suite.
+//!
+//! Every property below iterates `policy::registry::all()` over a grid
+//! of evaluation contexts, so a newly registered policy gets its full
+//! coverage — throughput ∈ [0, 1], secondary-channel bounds,
+//! `respond_with == respond`, multiset-permutation purity,
+//! transition-cost sanity and count-purity — by adding one registry
+//! entry, with **zero per-policy test code**. Cross-policy claims (the
+//! transition-cost ordering, the legacy-oracle bit-identity) are the
+//! only policy-named assertions, because they are claims *about*
+//! specific policies rather than per-policy boilerplate.
 //!
 //! * The three legacy ports are **bit-identical** to the pre-refactor
 //!   `FtStrategy` evaluation paths (a verbatim copy of the old
 //!   `FleetSim::evaluate` is kept below as the oracle) when transition
 //!   costs are disabled.
-//! * Every registered policy keeps `throughput_frac` in `[0, 1]`,
-//!   respects the spare pool, and charges zero transition cost without
-//!   a `TransitionCosts` model.
 //! * `StrategyTable` invariants: batch nondecreasing in TP,
 //!   `batch_pw >= batch`, and the modeled reshard overhead bounded by
 //!   the retired `0.995` constant.
@@ -18,7 +25,7 @@ use ntp::manager::packing::pack_domains;
 use ntp::manager::spares::{apply_spares, meets_minibatch};
 use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
 use ntp::parallel::ParallelConfig;
-use ntp::policy::{registry, EvalScratch, PolicyCtx, TransitionCosts};
+use ntp::policy::{registry, EvalOut, EvalScratch, PolicyCtx, TransitionCosts};
 use ntp::power::RackDesign;
 use ntp::sim::engine::healthy_reshard_factor;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
@@ -60,6 +67,38 @@ fn random_healthy(rng: &mut Rng, n: usize) -> Vec<usize> {
             }
         })
         .collect()
+}
+
+fn shuffle(v: &mut [usize], rng: &mut Rng) {
+    for i in (1..v.len()).rev() {
+        let j = rng.index(i + 1);
+        v.swap(i, j);
+    }
+}
+
+/// The evaluation-context grid every registry property runs over:
+/// spares on/off × packed on/off × each supplied transition model.
+fn ctx_grid<'a>(
+    table: &'a StrategyTable,
+    transitions: &[Option<TransitionCosts>],
+) -> Vec<PolicyCtx<'a>> {
+    let mut out = Vec::new();
+    for spares in [None, Some(SparePolicy { spare_domains: 3, min_tp: 28 })] {
+        for packed in [false, true] {
+            for &transition in transitions {
+                out.push(PolicyCtx {
+                    table,
+                    domain_size: DOMAIN_SIZE,
+                    domains_per_replica: PER_REPLICA,
+                    packed,
+                    spares,
+                    n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
+                    transition,
+                });
+            }
+        }
+    }
+    out
 }
 
 /// Copy of the pre-policy-layer `FleetSim::evaluate` — the oracle the
@@ -145,47 +184,107 @@ fn legacy_ports_bit_identical_to_pre_refactor_paths() {
                         &healthy,
                     );
                     assert_eq!(
-                        got, want,
+                        (got.tput, got.paused, got.spares_used),
+                        want,
                         "trial {trial} {strategy:?} spares {spares:?} packed {packed}"
                     );
+                    assert_eq!(got.donated, 0.0, "legacy ports have no secondary channel");
                 }
             }
         }
     }
 }
 
+/// The one registry-driven property pass: for every registered policy,
+/// over the full context grid and randomized snapshots —
+///
+/// * `respond_with` (the memoized sweep hot path) equals `respond`
+///   collapsed through `EvalOut::of`, exactly;
+/// * throughput and the secondary (donated) channel stay in `[0, 1]`,
+///   the spare pool is respected, `paused` implies zero throughput,
+///   the overhead factor is a rate factor in `(0, 1]`, and per-replica
+///   batches never exceed the full local batch;
+/// * in packed mode (and fixed-minibatch mode, which always repacks),
+///   the response is a pure function of the damage **multiset** — the
+///   soundness contract of the shared sweep's snapshot memo.
 #[test]
-fn respond_with_matches_respond_for_every_policy() {
-    // The allocation-free scratch path must collapse to exactly what
-    // `respond` + `PolicyResponse::throughput` produce — it is what the
-    // shared sweep memoizes, so any drift would silently poison every
-    // multi-policy result.
-    let (_sim, _cfg, table) = setup();
+fn registry_properties_hold_for_every_policy() {
+    let (sim, cfg, table) = setup();
+    let transitions = [
+        None,
+        Some(TransitionCosts::model(&sim, &cfg)),
+        // an observed failure rate, so rate-adaptive behavior is
+        // exercised (Young/Daly interval + write-overhead factor)
+        Some(TransitionCosts {
+            failure_rate_per_hour: 1.5,
+            ..TransitionCosts::model(&sim, &cfg)
+        }),
+    ];
     let mut rng = Rng::new(0x92);
     let mut scratch = EvalScratch::default();
-    for trial in 0..200 {
+    let grid = ctx_grid(&table, &transitions);
+    for trial in 0..120 {
         let job = random_healthy(&mut rng, JOB_DOMAINS);
-        for policy in registry::all() {
-            for spares in [None, Some(SparePolicy { spare_domains: 3, min_tp: 28 })] {
-                for packed in [false, true] {
-                    let ctx = PolicyCtx {
-                        table: &table,
-                        domain_size: DOMAIN_SIZE,
-                        domains_per_replica: PER_REPLICA,
-                        packed,
-                        spares,
-                        n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
-                        transition: None,
-                    };
-                    let resp = policy.respond(&ctx, &job);
-                    let want =
-                        (resp.throughput(table.full_local_batch), resp.paused, resp.spares_used);
-                    let got = policy.respond_with(&ctx, &job, &mut scratch);
+        let mut perm = job.clone();
+        shuffle(&mut perm, &mut rng);
+        for ctx in &grid {
+            for policy in registry::all() {
+                let name = policy.name();
+                let resp = policy.respond(ctx, &job);
+                let want = EvalOut::of(&resp, table.full_local_batch);
+                let got = policy.respond_with(ctx, &job, &mut scratch);
+                assert_eq!(
+                    got, want,
+                    "trial {trial} {name}: respond_with drifted from respond \
+                     (spares {:?} packed {} transition {})",
+                    ctx.spares,
+                    ctx.packed,
+                    ctx.transition.is_some()
+                );
+
+                assert!(
+                    (0.0..=1.0 + 1e-12).contains(&got.tput),
+                    "trial {trial} {name}: throughput {}",
+                    got.tput
+                );
+                assert!(
+                    (0.0..=1.0 + 1e-12).contains(&got.donated),
+                    "trial {trial} {name}: donated {}",
+                    got.donated
+                );
+                let pool = ctx.spares.map(|p| p.spare_domains).unwrap_or(0);
+                assert!(
+                    got.spares_used <= pool,
+                    "trial {trial} {name}: used {} of {pool}",
+                    got.spares_used
+                );
+                if got.paused {
+                    assert_eq!(got.tput, 0.0, "{name}: paused must mean zero throughput");
+                }
+                assert!(
+                    resp.overhead > 0.0 && resp.overhead <= 1.0,
+                    "{name}: overhead {} is not a rate factor",
+                    resp.overhead
+                );
+                assert_eq!(
+                    resp.replicas.len(),
+                    JOB_DOMAINS / PER_REPLICA,
+                    "{name}: wrong replica count"
+                );
+                for r in &resp.replicas {
+                    assert!(
+                        r.batch <= table.full_local_batch,
+                        "{name}: replica batch above full"
+                    );
+                }
+
+                // Multiset purity — the snapshot-memo soundness contract.
+                if ctx.packed || ctx.spares.is_some() {
+                    let got_perm = policy.respond_with(ctx, &perm, &mut scratch);
                     assert_eq!(
-                        got,
-                        want,
-                        "trial {trial} {} spares {spares:?} packed {packed}",
-                        policy.name()
+                        got, got_perm,
+                        "trial {trial} {name}: permuting domains changed the \
+                         packed-mode response (job={job:?})"
                     );
                 }
             }
@@ -193,116 +292,198 @@ fn respond_with_matches_respond_for_every_policy() {
     }
 }
 
+/// Every registered policy on a fully healthy fleet: no pause, no
+/// spares, unit throughput (transition model absent or rate-free — an
+/// *observed* failure rate legitimately costs CKPT-ADAPTIVE its
+/// checkpoint-write overhead even when healthy).
 #[test]
-fn every_policy_keeps_throughput_in_unit_interval() {
-    let (_sim, _cfg, table) = setup();
-    let mut rng = Rng::new(0x91);
-    for trial in 0..200 {
-        let job = random_healthy(&mut rng, JOB_DOMAINS);
+fn healthy_fleet_is_lossless_under_every_policy() {
+    let (sim, cfg, table) = setup();
+    let job = vec![DOMAIN_SIZE; JOB_DOMAINS];
+    for transition in [None, Some(TransitionCosts::model(&sim, &cfg))] {
         for policy in registry::all() {
-            for spares in [None, Some(SparePolicy { spare_domains: 3, min_tp: 28 })] {
-                let ctx = PolicyCtx {
-                    table: &table,
-                    domain_size: DOMAIN_SIZE,
-                    domains_per_replica: PER_REPLICA,
-                    packed: true,
-                    spares,
-                    n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
-                    transition: None,
-                };
-                let resp = policy.respond(&ctx, &job);
-                let tput = resp.throughput(table.full_local_batch);
-                assert!(
-                    (0.0..=1.0 + 1e-12).contains(&tput),
-                    "trial {trial} {}: throughput {tput}",
-                    policy.name()
+            let ctx = PolicyCtx {
+                table: &table,
+                domain_size: DOMAIN_SIZE,
+                domains_per_replica: PER_REPLICA,
+                packed: true,
+                spares: None,
+                n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
+                transition,
+            };
+            let resp = policy.respond(&ctx, &job);
+            assert!(!resp.paused, "{}", policy.name());
+            assert_eq!(resp.spares_used, 0, "{}", policy.name());
+            assert_eq!(resp.donated, 0.0, "{}: nothing to donate when healthy", policy.name());
+            let tput = resp.throughput(table.full_local_batch);
+            assert!((tput - 1.0).abs() < 1e-12, "{}: {tput}", policy.name());
+        }
+    }
+}
+
+/// Build a `(prev, next)` health-change pair with exactly `k_deg`
+/// degraded and `k_imp` improved domains at randomized positions and
+/// magnitudes.
+fn random_change_pair(
+    rng: &mut Rng,
+    n: usize,
+    k_deg: usize,
+    k_imp: usize,
+) -> (Vec<usize>, Vec<usize>) {
+    assert!(k_deg + k_imp <= n);
+    let mut order: Vec<usize> = (0..n).collect();
+    shuffle(&mut order, rng);
+    let mut prev = vec![DOMAIN_SIZE; n];
+    let mut next = vec![DOMAIN_SIZE; n];
+    for &d in order.iter().take(k_deg) {
+        next[d] = DOMAIN_SIZE - 1 - rng.index(4); // fresh failure
+    }
+    for &d in order.iter().skip(k_deg).take(k_imp) {
+        prev[d] = DOMAIN_SIZE - 1 - rng.index(4); // recovery
+    }
+    (prev, next)
+}
+
+/// Registry-driven transition-cost properties: free without a model;
+/// nonnegative and finite with one; monotone in damage (more changed
+/// domains never cost less, for fixed context); and — for policies
+/// declaring `transition_cost_is_count_pure` (all in-tree ones) — equal
+/// for any two change pairs with equal `(changed, degraded)` counts,
+/// which is exactly what makes the shared sweep's transition memo
+/// sound.
+#[test]
+fn transition_cost_properties_for_every_policy() {
+    let (sim, cfg, table) = setup();
+    let model = TransitionCosts {
+        failure_rate_per_hour: 1.5,
+        ..TransitionCosts::model(&sim, &cfg)
+    };
+    let free_grid = ctx_grid(&table, &[None]);
+    let cost_grid = ctx_grid(&table, &[Some(model)]);
+    let mut rng = Rng::new(0x94);
+    for _trial in 0..60 {
+        let k_deg = rng.index(4);
+        let k_imp = rng.index(4);
+        let (prev, next) = random_change_pair(&mut rng, JOB_DOMAINS, k_deg, k_imp);
+        let (prev2, next2) = random_change_pair(&mut rng, JOB_DOMAINS, k_deg, k_imp);
+        for policy in registry::all() {
+            let name = policy.name();
+            assert!(
+                policy.transition_cost_is_count_pure(),
+                "{name}: every in-tree policy must be count-pure (or the shared \
+                 sweep loses its transition memo)"
+            );
+            for ctx in &free_grid {
+                assert_eq!(
+                    policy.transition_cost(ctx, &prev, &next),
+                    0.0,
+                    "{name} must be free without a TransitionCosts model"
                 );
-                assert_eq!(resp.replicas.len(), JOB_DOMAINS / PER_REPLICA, "{}", policy.name());
-                let pool = spares.map(|p| p.spare_domains).unwrap_or(0);
+            }
+            for ctx in &cost_grid {
+                let cost = policy.transition_cost(ctx, &prev, &next);
                 assert!(
-                    resp.spares_used <= pool,
-                    "trial {trial} {}: used {} of {pool}",
-                    policy.name(),
-                    resp.spares_used
+                    cost.is_finite() && cost >= 0.0,
+                    "{name}: transition cost {cost}"
                 );
-                for r in &resp.replicas {
-                    assert!(r.batch <= table.full_local_batch, "{}", policy.name());
-                }
-                // overhead is a rate factor, never a boost
-                assert!(resp.overhead > 0.0 && resp.overhead <= 1.0, "{}", policy.name());
-                // paused implies zero integrated throughput
-                if resp.paused {
-                    assert_eq!(tput, 0.0);
+                // Count purity: same (changed, degraded) counts at
+                // different positions/magnitudes, same bill.
+                assert_eq!(
+                    cost,
+                    policy.transition_cost(ctx, &prev2, &next2),
+                    "{name}: cost depends on positions/magnitudes, not counts \
+                     (k_deg={k_deg} k_imp={k_imp})"
+                );
+                // Monotone in damage: one extra degraded domain on top of
+                // the same change never lowers the bill.
+                if k_deg + k_imp < JOB_DOMAINS {
+                    let mut next_worse = next.clone();
+                    let extra = (0..JOB_DOMAINS)
+                        .find(|&d| prev[d] == DOMAIN_SIZE && next[d] == DOMAIN_SIZE)
+                        .unwrap();
+                    next_worse[extra] = DOMAIN_SIZE - 1;
+                    assert!(
+                        policy.transition_cost(ctx, &prev, &next_worse) >= cost,
+                        "{name}: extra damage lowered the transition bill"
+                    );
                 }
             }
         }
     }
 }
 
+/// The cross-policy cost ordering under the default calibrated model,
+/// for a single freshly degraded domain: live resharders (NTP family)
+/// < spare migration < dark-spare wake-up < replica-scoped restart <
+/// full restart < full restart + rollback; and the adaptive interval
+/// degenerates to the fixed one without an observed rate, undercuts it
+/// with one.
 #[test]
-fn healthy_fleet_is_lossless_under_every_policy() {
-    let (_sim, _cfg, table) = setup();
-    let job = vec![DOMAIN_SIZE; JOB_DOMAINS];
-    for policy in registry::all() {
-        let ctx = PolicyCtx {
-            table: &table,
-            domain_size: DOMAIN_SIZE,
-            domains_per_replica: PER_REPLICA,
-            packed: true,
-            spares: None,
-            n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
-            transition: None,
-        };
-        let resp = policy.respond(&ctx, &job);
-        assert!(!resp.paused, "{}", policy.name());
-        assert_eq!(resp.spares_used, 0, "{}", policy.name());
-        let tput = resp.throughput(table.full_local_batch);
-        assert!((tput - 1.0).abs() < 1e-12, "{}: {tput}", policy.name());
-    }
-}
-
-#[test]
-fn transition_costs_zero_without_model_and_sane_with() {
+fn transition_cost_ordering_across_policies() {
     let (sim, cfg, table) = setup();
     let prev = vec![DOMAIN_SIZE; JOB_DOMAINS];
     let mut next = prev.clone();
     next[3] = DOMAIN_SIZE - 1; // one domain degraded
-    let base_ctx = PolicyCtx {
+    let ctx = PolicyCtx {
         table: &table,
         domain_size: DOMAIN_SIZE,
         domains_per_replica: PER_REPLICA,
         packed: true,
         spares: None,
         n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
-        transition: None,
-    };
-    for policy in registry::all() {
-        assert_eq!(
-            policy.transition_cost(&base_ctx, &prev, &next),
-            0.0,
-            "{} must be free without a TransitionCosts model",
-            policy.name()
-        );
-    }
-    let ctx = PolicyCtx {
         transition: Some(TransitionCosts::model(&sim, &cfg)),
-        ..base_ctx
     };
     let cost = |name: &str| registry::parse(name).unwrap().transition_cost(&ctx, &prev, &next);
     let ntp = cost("ntp");
+    let pw = cost("ntp-pw");
+    let lowpri = cost("lowpri-donate");
     let drop = cost("dp-drop");
     let ckpt = cost("ckpt-restart");
+    let adaptive = cost("ckpt-adaptive");
     let mig = cost("spare-mig");
+    let power = cost("power-spares");
+    let partial = cost("partial-restart");
     assert!(ntp > 0.0 && mig > 0.0);
-    // full-job restart dwarfs a live reshard of one replica; rollback on
-    // top of the restart dwarfs the restart
-    assert!(drop > ntp, "restart {drop} vs reshard {ntp}");
+    // The NTP family reshards only the affected replica; donation adds
+    // no primary-job cost.
+    assert_eq!(ntp, pw);
+    assert_eq!(ntp, lowpri);
+    // Migration streams weights on top of the reshard; waking a dark
+    // domain adds the power ramp on top of that.
+    assert!(mig > ntp, "mig {mig} vs ntp {ntp}");
+    assert!(power > mig, "power {power} vs mig {mig}");
+    // Replica-scoped restart+rollback beats stopping the world...
+    assert!(partial > power, "partial {partial} vs power {power}");
+    assert!(drop > partial, "full restart {drop} vs partial {partial}");
+    // ...and the checkpoint rollback on top of the restart dwarfs both.
     assert!(ckpt > drop, "ckpt {ckpt} vs restart {drop}");
-    // a pure recovery (health restored) costs ckpt-restart no rollback
+    // No observed rate -> the adaptive interval IS the fixed interval.
+    assert_eq!(adaptive, ckpt);
+    // a pure recovery (health restored) costs the restart family no
+    // rollback
     let recover = registry::parse("ckpt-restart")
         .unwrap()
         .transition_cost(&ctx, &next, &prev);
     assert!(recover < ckpt && recover > 0.0);
+    // With an observed rate making the Young/Daly interval shorter than
+    // the fixed 3600 s, the adaptive rollback is strictly cheaper.
+    let observed = PolicyCtx {
+        transition: Some(TransitionCosts {
+            failure_rate_per_hour: 2.0, // MTBF 1800 s => tau* ~ 657 s
+            ..TransitionCosts::model(&sim, &cfg)
+        }),
+        ..ctx
+    };
+    let adaptive_obs = registry::parse("ckpt-adaptive")
+        .unwrap()
+        .transition_cost(&observed, &prev, &next);
+    let ckpt_obs = registry::parse("ckpt-restart")
+        .unwrap()
+        .transition_cost(&observed, &prev, &next);
+    assert!(
+        adaptive_obs < ckpt_obs,
+        "adaptive {adaptive_obs} should undercut fixed-interval {ckpt_obs}"
+    );
 }
 
 #[test]
