@@ -7,11 +7,15 @@
 #                       numeric behavior; its own CI job)
 #   make lint         — rustfmt --check + clippy -D warnings
 #   make bench-perf   — full perf_hotpath run (writes BENCH_perf_hotpath.json)
+#   make bench-quick  — parallel-Monte-Carlo-only smoke: run_trials_par
+#                       at 100K scale, asserting N-thread results are
+#                       bit-identical to 1 thread (writes
+#                       BENCH_perf_hotpath_trials.json)
 
 CARGO    ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: check build test test-release lint bench-smoke bench-perf
+.PHONY: check build test test-release lint bench-smoke bench-perf bench-quick
 
 check: build test bench-smoke
 
@@ -33,3 +37,6 @@ bench-smoke:
 
 bench-perf:
 	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST)
+
+bench-quick:
+	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick --trials-only

@@ -8,11 +8,12 @@
 //! (donated) capacity channel.
 //!
 //! Run: cargo run --release --example fleet_sim -- [--days 15] [--rate-x 1]
+//!      [--grid-hours H]  (default: exact event-boundary integration)
 
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{BlastRadius, FailureModel, Trace};
-use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
+use ntp::manager::{FleetSim, SparePolicy, StepMode, StrategyTable};
 use ntp::metrics::Recorder;
 use ntp::parallel::ParallelConfig;
 use ntp::policy::{registry, TransitionCosts};
@@ -27,6 +28,13 @@ fn main() -> anyhow::Result<()> {
     let days = args.f64_or("days", 15.0);
     let rate_x = args.f64_or("rate-x", 1.0);
     let seed = args.u64_or("seed", 2026);
+    // Exact event-boundary integration by default: the stats are a pure
+    // function of the trace, with every reconfiguration charged at its
+    // event time. `--grid-hours H` opts back into fixed-grid sampling.
+    let mode = match args.opt_f64("grid-hours") {
+        Some(h) => StepMode::Grid(h),
+        None => StepMode::Exact,
+    };
     args.finish()?;
 
     // The paper's main simulation target: 480B model, 32K B200, NVL32,
@@ -76,7 +84,7 @@ fn main() -> anyhow::Result<()> {
                 blast: BlastRadius::Single,
                 transition,
             };
-            let stats = fs.run(&trace, 3.0);
+            let stats = fs.run(&trace, mode);
             out.row(&[
                 policy.name().into(),
                 format!("{spares}"),

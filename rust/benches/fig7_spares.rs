@@ -16,6 +16,7 @@ use ntp::power::RackDesign;
 use ntp::sim::engine::min_supported_tp;
 use ntp::sim::{IterationModel, SimParams};
 use ntp::util::bench::time_once;
+use ntp::util::par;
 use ntp::util::prng::Rng;
 use ntp::util::table::{f4, pct, Table};
 
@@ -50,6 +51,8 @@ fn main() {
     // Observed event rate -> CKPT-ADAPTIVE's Young/Daly interval (at
     // rate 0 its rows would just duplicate CKPT-RESTART's).
     let transition = Some(TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace));
+    let mode = ntp::util::bench::step_mode_from_args();
+    println!("(stepping: {mode:?})");
     let mut t =
         Table::new(&["policy", "spares", "tput/GPU", "net tput/GPU", "downtime", "paused"]);
     let mut first_ok: std::collections::BTreeMap<&str, Option<usize>> = Default::default();
@@ -75,7 +78,7 @@ fn main() {
             blast: BlastRadius::Single,
             transition,
         };
-        let stats = msim.run_with(&trace, 3.0, &mut memo);
+        let stats = msim.run_with(&trace, mode, &mut memo);
         for (&policy, s) in policies.iter().zip(stats) {
             combos.push((policy, spares));
             stats_per_combo.push(s);
@@ -163,11 +166,13 @@ fn main() {
     // =====================================================================
     // SPARe scale: the same fixed-minibatch sweep at 100K GPUs / NVL72
     // (paper-100k-nvl72), over Monte-Carlo failure traces. 3 budgets x
-    // 4 trials x 9 policies = 108 trace integrations — tractable only
-    // because each trial replays the trace once for all policies, one
-    // replayer is reset across trials, and damage signatures repeat
-    // heavily within each budget's four trials (budgets change the
-    // job-domain count, so hits never cross budgets).
+    // 4 trials x 9 policies = 108 trace integrations — tractable
+    // because each trial replays the trace once for all policies
+    // (exact stepping bounds the work by the event count), trial
+    // batches fan out over scoped threads via run_trials_par
+    // (bit-identical to 1 thread), and damage signatures repeat heavily
+    // within each worker's batch (budgets change the job-domain count,
+    // so hits never cross budgets).
     // =====================================================================
     println!("\n=== Fig 7b: SPARe scale — 100,800 GPUs, NVL72, fixed minibatch ===\n");
     let cluster_100k = presets::cluster("paper-100k-nvl72").unwrap();
@@ -193,11 +198,19 @@ fn main() {
         })
         .collect();
     // One cost model for the whole Monte-Carlo batch (a prerequisite of
-    // sharing the memo), calibrated on the first trial's observed rate.
+    // sharing any memo), calibrated on the batch's pooled observed rate.
     let transition_100k =
-        Some(TransitionCosts::model(&sim_100k, &cfg_100k).with_observed_rate(&traces[0]));
+        Some(TransitionCosts::model(&sim_100k, &cfg_100k).with_observed_rate_over(&traces));
     let min_tp_100k = min_supported_tp(tp);
-    let mut memo_100k = ResponseMemo::new(policies.len());
+    // Cap at 2 workers: each then sweeps >= 2 of the 4 trials, so
+    // cross-trial signature hits survive inside every worker's memo and
+    // the merged hit-rate assert below stays core-count-independent
+    // (per-worker memos cannot share hits across batches; on a
+    // many-core box 4 workers x 1 trace would leave only intra-trace
+    // repeats). perf_hotpath / make bench-quick exercise the full
+    // fan-out width.
+    let threads = par::num_threads().min(2);
+    let mut merged = ntp::manager::MemoStats::default();
     let mut t100k = Table::new(&["policy", "spares", "tput/GPU (mean)", "net tput/GPU", "paused"]);
     let (_, total_secs) = time_once(|| {
         for &spares in &[0usize, 16, 32] {
@@ -211,7 +224,11 @@ fn main() {
                 blast: BlastRadius::Single,
                 transition: transition_100k,
             };
-            let per_trial = msim.run_trials(&traces, 3.0, &mut memo_100k);
+            // Parallel Monte-Carlo: trial batches over scoped threads,
+            // one replayer + memo per worker, bit-identical to 1 thread
+            // (asserted in perf_hotpath / make bench-quick).
+            let (per_trial, memo_stats) = msim.run_trials_par(&traces, mode, threads);
+            merged.merge(&memo_stats);
             for (pi, &policy) in policies.iter().enumerate() {
                 let n = per_trial.len() as f64;
                 let mean_tpg: f64 =
@@ -232,17 +249,20 @@ fn main() {
     });
     t100k.print();
     println!(
-        "100K sweep: {:.2}s wall, {} memo lookups, {:.1}% hit rate, {} unique entries",
+        "100K sweep: {:.2}s wall on {} threads, {} memo lookups, {:.1}% merged hit rate, \
+         {} unique entries across workers",
         total_secs,
-        memo_100k.hits() + memo_100k.misses(),
-        memo_100k.hit_rate() * 100.0,
-        memo_100k.unique_entries()
+        threads,
+        merged.hits + merged.misses,
+        merged.hit_rate() * 100.0,
+        merged.unique_entries
     );
     // Failure damage repeats heavily at this scale: the signature memo
-    // must be doing the work that makes the sweep tractable.
+    // must be doing the work that makes the sweep tractable, even with
+    // per-worker memos that cannot share hits across batches.
     assert!(
-        memo_100k.hit_rate() > 0.5,
+        merged.hit_rate() > 0.5,
         "expected a warm snapshot memo at 100K scale, got {:.2}",
-        memo_100k.hit_rate()
+        merged.hit_rate()
     );
 }

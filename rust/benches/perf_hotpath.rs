@@ -6,11 +6,21 @@
 //! tracked across PRs.
 //!
 //! Pass `--quick` for a smoke-test-sized run (the Makefile `check`
-//! target).
+//! target), `--trials-only` to run just the parallel Monte-Carlo
+//! trials section (the `make bench-quick` smoke: asserts N-thread
+//! `run_trials_par` is bit-identical to 1 thread). Plain `--quick`
+//! skips the trials section — CI runs it as its own `bench-quick`
+//! step, so the two smoke steps partition the workload instead of
+//! repeating it; full runs cover everything.
 //!
 //! Components measured:
-//!   * fleet replay at paper scale (32K GPUs, 8-week trace, 1h samples):
-//!     event-driven `FleetSim::run` vs the per-step `replay_to` path
+//!   * fleet trace integration at paper scale (32K GPUs, 8-week trace):
+//!     event-driven `FleetSim::run` vs the per-step `replay_to` path on
+//!     the legacy 1h grid, plus exact event-boundary integration and
+//!     the exact-vs-grid quantization error at 1h / 0.25h
+//!   * shared multi-policy sweep at 100K scale (exact stepping)
+//!   * parallel Monte-Carlo trials over `util::par` (per-thread memos,
+//!     merged hit rates, 1-thread bit-identity)
 //!   * Algorithm-1 plan construction: direct build vs `PlanCache` hit,
 //!     and the `ntp_iteration` call that rides the cache
 //!   * explicit NTP reshard permutations: per-unit vs coalesced CopyPlan
@@ -19,38 +29,49 @@
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{BlastRadius, FailureModel, Trace};
-use ntp::manager::{FleetSim, FleetStats, MultiPolicySim, StrategyTable};
-use ntp::policy::registry;
+use ntp::manager::{FleetSim, FleetStats, MultiPolicySim, StepMode, StrategyTable};
 use ntp::ntp::cache::PlanCache;
 use ntp::ntp::shard_map::ShardMap;
 use ntp::ntp::sync::{comp_to_sync, scatter_comp, sync_to_comp, CopyPlan};
 use ntp::ntp::ReshardPlan;
 use ntp::parallel::ParallelConfig;
+use ntp::policy::registry;
 use ntp::power::RackDesign;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
 use ntp::train::optimizer::AdamW;
 use ntp::train::sync::weighted_accumulate;
-use ntp::util::bench::{bench_with, black_box, BenchConfig, JsonReport};
+use ntp::util::bench::{arg_flag, bench_with, black_box, BenchConfig, JsonReport};
 use ntp::util::par;
 use ntp::util::prng::Rng;
 
 /// Full runs write the cross-PR perf record; `--quick` smoke runs get
-/// their own file so `make check` never clobbers full-run numbers.
+/// their own file so `make check` never clobbers full-run numbers, and
+/// `--trials-only` gets a third so the parallel-trials smoke never
+/// clobbers either.
 const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf_hotpath.json");
 const OUT_PATH_QUICK: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf_hotpath_quick.json");
+const OUT_PATH_TRIALS: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf_hotpath_trials.json");
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let quick = arg_flag("--quick");
+    let trials_only = arg_flag("--trials-only");
     let mut rng = Rng::new(1);
     let mut report = JsonReport::new("perf_hotpath");
     report.scalar("quick", if quick { 1.0 } else { 0.0 });
+    report.scalar("trials_only", if trials_only { 1.0 } else { 0.0 });
     let threads = par::num_threads();
     report.scalar("threads", threads as f64);
 
-    // =====================================================================
-    // Fleet replay at paper scale: event-driven sweep vs per-step rebuild
-    // =====================================================================
+    let cfg_replay = BenchConfig {
+        warmup_iters: 1,
+        min_iters: if quick { 3 } else { 5 },
+        max_iters: if quick { 5 } else { 9 },
+        max_time: std::time::Duration::from_secs(10),
+    };
+
+    // 32K setup (section 1 + the plan-cache section ride the same sim).
     let weeks = if quick { 2.0 } else { 8.0 };
     let model = presets::model("gpt-480b").unwrap();
     let cluster = presets::cluster("paper-32k-nvl32").unwrap();
@@ -61,59 +82,81 @@ fn main() {
     };
     let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
     let sim = IterationModel::new(model, work, cluster, SimParams::default());
-    let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
-    let topo = Topology::of(cfg.n_gpus(), 32, 4);
-    let horizon = weeks * 7.0 * 24.0;
-    let trace = Trace::generate(&topo, &FailureModel::llama3(), horizon, &mut rng);
-    println!(
-        "fleet replay: {} GPUs, {weeks}-week horizon, {} events, 1h sampling",
-        topo.n_gpus,
-        trace.events.len()
-    );
-    let fs = FleetSim {
-        topo: &topo,
-        table: &table,
-        domains_per_replica: cfg.pp,
-        policy: FtStrategy::Ntp.policy(),
-        spares: None,
-        packed: true,
-        blast: BlastRadius::Single,
-        transition: None,
-    };
-    // Bit-identical integration on both paths, by construction and here.
-    let stats_new = fs.run(&trace, 1.0);
-    let stats_old = fs.run_replay_per_step(&trace, 1.0);
-    assert_eq!(stats_new, stats_old, "event-driven replay must be bit-identical");
 
-    let cfg_replay = BenchConfig {
-        warmup_iters: 1,
-        min_iters: if quick { 3 } else { 5 },
-        max_iters: if quick { 5 } else { 9 },
-        max_time: std::time::Duration::from_secs(10),
-    };
-    let r_old = bench_with("fleet_run_replay_per_step_32k", cfg_replay, || {
-        black_box(fs.run_replay_per_step(&trace, 1.0));
-    });
-    println!("{}", r_old.line());
-    report.result(&r_old);
-    let r_new = bench_with("fleet_run_event_driven_32k", cfg_replay, || {
-        black_box(fs.run(&trace, 1.0));
-    });
-    println!("{}", r_new.line());
-    report.result(&r_new);
-    let speedup = r_old.secs.p50 / r_new.secs.p50;
-    println!("  -> event-driven replay speedup: {speedup:.1}x");
-    report.scalar("fleet_replay_speedup", speedup);
-    let floor = if quick { 5.0 } else { 10.0 };
-    assert!(
-        speedup >= floor,
-        "event-driven fleet replay should be >= {floor}x faster (got {speedup:.1}x)"
-    );
+    if !trials_only {
+        // =================================================================
+        // Fleet trace integration at paper scale: event-driven sweep vs
+        // per-step rebuild on the legacy 1h grid, plus exact stepping
+        // =================================================================
+        let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
+        let topo = Topology::of(cfg.n_gpus(), 32, 4);
+        let horizon = weeks * 7.0 * 24.0;
+        let trace = Trace::generate(&topo, &FailureModel::llama3(), horizon, &mut rng);
+        println!(
+            "fleet replay: {} GPUs, {weeks}-week horizon, {} events, 1h grid vs exact",
+            topo.n_gpus,
+            trace.events.len()
+        );
+        let fs = FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            policy: FtStrategy::Ntp.policy(),
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition: None,
+        };
+        // Bit-identical integration on both paths, by construction and here
+        // — in grid AND exact mode.
+        let stats_new = fs.run(&trace, StepMode::Grid(1.0));
+        let stats_old = fs.run_replay_per_step(&trace, StepMode::Grid(1.0));
+        assert_eq!(stats_new, stats_old, "event-driven replay must be bit-identical");
+        let stats_exact = fs.run(&trace, StepMode::Exact);
+        assert_eq!(
+            stats_exact,
+            fs.run_replay_per_step(&trace, StepMode::Exact),
+            "exact event-boundary integration must be bit-identical across paths"
+        );
+        // Quantization error of the legacy grid against the exact
+        // integral (EXPERIMENTS.md §Perf PR 5 table).
+        let err_1h = (stats_new.mean_throughput - stats_exact.mean_throughput).abs();
+        let err_q = (fs.run(&trace, StepMode::Grid(0.25)).mean_throughput
+            - stats_exact.mean_throughput)
+            .abs();
+        println!("  grid-vs-exact mean-tput error: {err_1h:.2e} at 1h, {err_q:.2e} at 0.25h");
+        report.scalar("grid_1h_tput_abs_err", err_1h);
+        report.scalar("grid_0p25h_tput_abs_err", err_q);
+
+        let r_old = bench_with("fleet_run_replay_per_step_32k", cfg_replay, || {
+            black_box(fs.run_replay_per_step(&trace, StepMode::Grid(1.0)));
+        });
+        println!("{}", r_old.line());
+        report.result(&r_old);
+        let r_new = bench_with("fleet_run_event_driven_32k", cfg_replay, || {
+            black_box(fs.run(&trace, StepMode::Grid(1.0)));
+        });
+        println!("{}", r_new.line());
+        report.result(&r_new);
+        let r_exact = bench_with("fleet_run_exact_32k", cfg_replay, || {
+            black_box(fs.run(&trace, StepMode::Exact));
+        });
+        println!("{}", r_exact.line());
+        report.result(&r_exact);
+        let speedup = r_old.secs.p50 / r_new.secs.p50;
+        println!("  -> event-driven replay speedup: {speedup:.1}x");
+        report.scalar("fleet_replay_speedup", speedup);
+        report.scalar("exact_vs_grid1h_speedup", r_new.secs.p50 / r_exact.secs.p50);
+        let floor = if quick { 5.0 } else { 10.0 };
+        assert!(
+            speedup >= floor,
+            "event-driven fleet replay should be >= {floor}x faster (got {speedup:.1}x)"
+        );
+    }
 
     // =====================================================================
-    // Shared-sweep multi-policy engine at SPARe scale (100K GPUs, NVL72):
-    // one trace replay + signature-memoized responses for every
-    // registered policy vs the per-policy FleetSim::run loop
+    // 100K / NVL72 setup (SPARe scale) — shared by the multi-policy
+    // sweep section and the parallel Monte-Carlo trials section
     // =====================================================================
     let days_100k = if quick { 5.0 } else { 15.0 };
     let cluster_100k = presets::cluster("paper-100k-nvl72").unwrap();
@@ -127,35 +170,7 @@ fn main() {
     );
     let table_100k = StrategyTable::build(&sim_100k, &cfg_100k, &RackDesign::default());
     let topo_100k = Topology::of(cfg_100k.n_gpus(), tp_100k, cluster_100k.gpus_per_node);
-    let trace_100k =
-        Trace::generate(&topo_100k, &FailureModel::llama3(), days_100k * 24.0, &mut rng);
     let policies = registry::all();
-    println!(
-        "\nmulti-policy sweep: {} GPUs (NVL{tp_100k}), {days_100k}-day trace, {} events, \
-         {} policies",
-        topo_100k.n_gpus,
-        trace_100k.events.len(),
-        policies.len()
-    );
-    let run_per_policy_with = |transition| -> Vec<FleetStats> {
-        policies
-            .iter()
-            .map(|&policy| {
-                FleetSim {
-                    topo: &topo_100k,
-                    table: &table_100k,
-                    domains_per_replica: cfg_100k.pp,
-                    policy,
-                    spares: None,
-                    packed: true,
-                    blast: BlastRadius::Single,
-                    transition,
-                }
-                .run(&trace_100k, 1.0)
-            })
-            .collect()
-    };
-    let run_per_policy = || run_per_policy_with(None);
     let msim = MultiPolicySim {
         topo: &topo_100k,
         table: &table_100k,
@@ -166,208 +181,334 @@ fn main() {
         blast: BlastRadius::Single,
         transition: None,
     };
-    // Bit-identical per-policy stats, and the memo hit rate of one sweep.
-    let mut memo = msim.memo();
-    let shared_stats = msim.run_with(&trace_100k, 1.0, &mut memo);
-    assert_eq!(
-        shared_stats,
-        run_per_policy(),
-        "shared sweep must be bit-identical to the per-policy loop"
-    );
-    println!(
-        "  memo: {:.1}% hit rate, {} unique entries",
-        memo.hit_rate() * 100.0,
-        memo.unique_entries()
-    );
-    report.scalar("snapshot_memo_hit_rate", memo.hit_rate());
-    report.scalar("snapshot_memo_entries", memo.unique_entries() as f64);
 
-    let r_per_policy = bench_with("fleet_9policy_per_policy_100k", cfg_replay, || {
-        black_box(run_per_policy());
-    });
-    println!("{}", r_per_policy.line());
-    report.result(&r_per_policy);
-    // Cold sweep: fresh memo every iteration (the honest comparison).
-    let r_shared = bench_with("fleet_9policy_shared_sweep_100k", cfg_replay, || {
-        black_box(msim.run(&trace_100k, 1.0));
-    });
-    println!("{}", r_shared.line());
-    report.result(&r_shared);
-    // Warm sweep: memo shared across iterations, the Monte-Carlo /
-    // sweep-point steady state.
-    let mut warm = msim.memo();
-    let r_warm = bench_with("fleet_9policy_shared_sweep_warm_100k", cfg_replay, || {
-        black_box(msim.run_with(&trace_100k, 1.0, &mut warm));
-    });
-    println!("{}", r_warm.line());
-    report.result(&r_warm);
-    let sweep_speedup = r_per_policy.secs.p50 / r_shared.secs.p50;
-    let warm_speedup = r_per_policy.secs.p50 / r_warm.secs.p50;
-    println!("  -> shared-sweep speedup: {sweep_speedup:.1}x (warm memo: {warm_speedup:.1}x)");
-    report.scalar("multi_policy_sweep_speedup", sweep_speedup);
-    report.scalar("multi_policy_sweep_warm_speedup", warm_speedup);
-    let sweep_floor = if quick { 3.0 } else { 5.0 };
-    assert!(
-        sweep_speedup >= sweep_floor,
-        "9-policy shared sweep should be >= {sweep_floor}x faster than the per-policy loop \
-         (got {sweep_speedup:.1}x)"
-    );
+    if !trials_only {
+        // =================================================================
+        // Shared-sweep multi-policy engine at SPARe scale, exact stepping:
+        // one event-bounded trace replay + signature-memoized responses
+        // for every registered policy vs the per-policy FleetSim::run loop
+        // =================================================================
+        let trace_100k =
+            Trace::generate(&topo_100k, &FailureModel::llama3(), days_100k * 24.0, &mut rng);
+        println!(
+            "\nmulti-policy sweep: {} GPUs (NVL{tp_100k}), {days_100k}-day trace, {} events, \
+             {} policies, exact stepping",
+            topo_100k.n_gpus,
+            trace_100k.events.len(),
+            policies.len()
+        );
+        let run_per_policy_with = |transition| -> Vec<FleetStats> {
+            policies
+                .iter()
+                .map(|&policy| {
+                    FleetSim {
+                        topo: &topo_100k,
+                        table: &table_100k,
+                        domains_per_replica: cfg_100k.pp,
+                        policy,
+                        spares: None,
+                        packed: true,
+                        blast: BlastRadius::Single,
+                        transition,
+                    }
+                    .run(&trace_100k, StepMode::Exact)
+                })
+                .collect()
+        };
+        let run_per_policy = || run_per_policy_with(None);
+        // Bit-identical per-policy stats, and the memo hit rate of one sweep.
+        let mut memo = msim.memo();
+        let shared_stats = msim.run_with(&trace_100k, StepMode::Exact, &mut memo);
+        assert_eq!(
+            shared_stats,
+            run_per_policy(),
+            "shared sweep must be bit-identical to the per-policy loop"
+        );
+        println!(
+            "  memo: {:.1}% hit rate, {} unique entries",
+            memo.hit_rate() * 100.0,
+            memo.unique_entries()
+        );
+        report.scalar("snapshot_memo_hit_rate", memo.hit_rate());
+        report.scalar("snapshot_memo_entries", memo.unique_entries() as f64);
 
-    // With transition costs on, the count-keyed transition memo kicks
-    // in: repeated (changed, degraded) patterns across the trace skip
-    // the per-policy prev/next scan. Bit-identity against the
-    // unmemoized per-policy reference is the soundness check.
-    let transition_100k = Some(
-        ntp::policy::TransitionCosts::model(&sim_100k, &cfg_100k)
-            .with_observed_rate(&trace_100k),
-    );
-    let msim_t = MultiPolicySim { transition: transition_100k, ..msim };
-    let mut memo_t = msim_t.memo();
-    let shared_t = msim_t.run_with(&trace_100k, 1.0, &mut memo_t);
-    assert_eq!(
-        shared_t,
-        run_per_policy_with(transition_100k),
-        "memoized transition charges must be bit-identical to the per-policy loop"
-    );
-    assert!(memo_t.transition_hits() > 0, "transition memo never hit");
-    println!(
-        "  transition memo: {:.1}% hit rate over {} charges",
-        memo_t.transition_hit_rate() * 100.0,
-        memo_t.transition_hits() + memo_t.transition_misses()
-    );
-    report.scalar("transition_memo_hit_rate", memo_t.transition_hit_rate());
-    report.scalar(
-        "transition_memo_lookups",
-        (memo_t.transition_hits() + memo_t.transition_misses()) as f64,
-    );
+        let r_per_policy = bench_with("fleet_9policy_per_policy_100k", cfg_replay, || {
+            black_box(run_per_policy());
+        });
+        println!("{}", r_per_policy.line());
+        report.result(&r_per_policy);
+        // Cold sweep: fresh memo every iteration (the honest comparison).
+        let r_shared = bench_with("fleet_9policy_shared_sweep_100k", cfg_replay, || {
+            black_box(msim.run(&trace_100k, StepMode::Exact));
+        });
+        println!("{}", r_shared.line());
+        report.result(&r_shared);
+        // Warm sweep: memo shared across iterations, the Monte-Carlo /
+        // sweep-point steady state.
+        let mut warm = msim.memo();
+        let r_warm = bench_with("fleet_9policy_shared_sweep_warm_100k", cfg_replay, || {
+            black_box(msim.run_with(&trace_100k, StepMode::Exact, &mut warm));
+        });
+        println!("{}", r_warm.line());
+        report.result(&r_warm);
+        let sweep_speedup = r_per_policy.secs.p50 / r_shared.secs.p50;
+        let warm_speedup = r_per_policy.secs.p50 / r_warm.secs.p50;
+        println!(
+            "  -> shared-sweep speedup: {sweep_speedup:.1}x (warm memo: {warm_speedup:.1}x)"
+        );
+        report.scalar("multi_policy_sweep_speedup", sweep_speedup);
+        report.scalar("multi_policy_sweep_warm_speedup", warm_speedup);
+        let sweep_floor = if quick { 3.0 } else { 5.0 };
+        assert!(
+            sweep_speedup >= sweep_floor,
+            "9-policy shared sweep should be >= {sweep_floor}x faster than the per-policy loop \
+             (got {sweep_speedup:.1}x)"
+        );
 
-    // =====================================================================
-    // Algorithm-1 plan construction: direct vs cached
-    // =====================================================================
-    let r_build = bench_with("alg1_build_k81920_tp32_to_30", BenchConfig::fast(), || {
-        let m = ShardMap::build(81_920, 32, 30);
-        let p = ReshardPlan::from_map(&m);
-        black_box((m, p));
-    });
-    println!("{}", r_build.line());
-    report.result(&r_build);
-
-    let cache = PlanCache::new();
-    cache.get(81_920, 32, 30); // prime
-    let r_hit = bench_with("alg1_plan_cache_hit", BenchConfig::fast(), || {
-        black_box(cache.get(81_920, 32, 30));
-    });
-    println!("{}", r_hit.line());
-    report.result(&r_hit);
-    let cache_speedup = r_build.secs.p50 / r_hit.secs.p50;
-    println!("  -> plan-cache speedup: {cache_speedup:.0}x");
-    report.scalar("plan_cache_speedup", cache_speedup);
-
-    // ntp_iteration rides the model's internal cache: after the first
-    // call this is pure arithmetic, no plan rebuild.
-    sim.ntp_iteration(&cfg, 30, 8, 1.0); // prime
-    let r_iter = bench_with("ntp_iteration_cached_tp30", BenchConfig::fast(), || {
-        black_box(sim.ntp_iteration(&cfg, 30, 8, 1.0).total());
-    });
-    println!("{}", r_iter.line());
-    report.result(&r_iter);
-
-    // =====================================================================
-    // Explicit reshard permutation: per-unit vs coalesced CopyPlan
-    // =====================================================================
-    let k = 2560; // ffn units of a TP4 shard at e2e-100m scale
-    let unit_len = 2 * 640; // wa+wb rows
-    let map = ShardMap::build(k, 4, 3);
-    let plan = CopyPlan::build(&map);
-    let full_t: Vec<f32> = rng.normal_vec_f32(k * unit_len, 1.0);
-    let comp = scatter_comp(&map, unit_len, &full_t);
-    let sync = comp_to_sync(&map, unit_len, &comp);
-    // exact equality between per-unit and coalesced paths
-    assert_eq!(plan.comp_to_sync(unit_len, &comp), sync);
-    assert_eq!(plan.sync_to_comp(unit_len, &sync), comp);
-
-    let cfg_mid = BenchConfig { max_iters: 30, ..BenchConfig::default() };
-    let r = bench_with("reshard_comp_to_sync_per_unit_3.3M", cfg_mid, || {
-        black_box(comp_to_sync(&map, unit_len, &comp));
-    });
-    println!("{}", r.line());
-    report.result(&r);
-    let r_coal = bench_with("reshard_comp_to_sync_coalesced_3.3M", cfg_mid, || {
-        black_box(plan.comp_to_sync(unit_len, &comp));
-    });
-    println!("{}", r_coal.line());
-    report.result(&r_coal);
-    report.scalar("reshard_coalesce_speedup", r.secs.p50 / r_coal.secs.p50);
-    println!("  -> coalesced reshard speedup: {:.1}x", r.secs.p50 / r_coal.secs.p50);
-
-    let r = bench_with("reshard_sync_to_comp_per_unit_3.3M", cfg_mid, || {
-        black_box(sync_to_comp(&map, unit_len, &sync));
-    });
-    println!("{}", r.line());
-    report.result(&r);
-    let r = bench_with("reshard_sync_to_comp_coalesced_3.3M", cfg_mid, || {
-        black_box(plan.sync_to_comp(unit_len, &sync));
-    });
-    println!("{}", r.line());
-    report.result(&r);
+        // With transition costs on, the count-keyed transition memo kicks
+        // in: repeated (changed, degraded) patterns across the trace skip
+        // the per-policy prev/next scan — now once per actual event
+        // boundary. Bit-identity against the unmemoized per-policy
+        // reference is the soundness check.
+        let transition_100k = Some(
+            ntp::policy::TransitionCosts::model(&sim_100k, &cfg_100k)
+                .with_observed_rate(&trace_100k),
+        );
+        let msim_t = MultiPolicySim { transition: transition_100k, ..msim };
+        let mut memo_t = msim_t.memo();
+        let shared_t = msim_t.run_with(&trace_100k, StepMode::Exact, &mut memo_t);
+        assert_eq!(
+            shared_t,
+            run_per_policy_with(transition_100k),
+            "memoized transition charges must be bit-identical to the per-policy loop"
+        );
+        assert!(memo_t.transition_hits() > 0, "transition memo never hit");
+        println!(
+            "  transition memo: {:.1}% hit rate over {} charges",
+            memo_t.transition_hit_rate() * 100.0,
+            memo_t.transition_hits() + memo_t.transition_misses()
+        );
+        report.scalar("transition_memo_hit_rate", memo_t.transition_hit_rate());
+        report.scalar(
+            "transition_memo_lookups",
+            (memo_t.transition_hits() + memo_t.transition_misses()) as f64,
+        );
+    }
 
     // =====================================================================
-    // AdamW on ~21M params split into realistic tensor sizes
+    // Parallel Monte-Carlo trials over util::par: run_trials_par fans
+    // contiguous trace batches across scoped threads, one replayer +
+    // one ResponseMemo per worker, merged MemoStats. Determinism
+    // contract: bit-identical to 1 thread (and to the sequential
+    // shared-memo run_trials), for any thread count.
+    //
+    // Skipped on plain `--quick` (the `make check` smoke): CI runs this
+    // section as its own `make bench-quick` step (`--quick
+    // --trials-only`), so executing it in both steps would double the
+    // most expensive bench workload per push. Full runs always include
+    // it.
     // =====================================================================
-    let n_target = if quick { 4_000_000 } else { 21_000_000 };
-    let sizes = [8192 * 320, 320 * 1280, 1280 * 320, 320, 1280];
-    let mut params: Vec<Vec<f32>> = Vec::new();
-    while params.iter().map(|p| p.len()).sum::<usize>() < n_target {
-        for &s in &sizes {
-            params.push(rng.normal_vec_f32(s, 0.02));
+    if trials_only || !quick {
+        let n_trials = if quick { 4 } else { 8 };
+        // Per-trial forked PRNG streams: trace i is the same regardless
+        // of trial count or worker count.
+        let mut trial_rng = Rng::new(0x7121A15);
+        let traces: Vec<Trace> = (0..n_trials)
+            .map(|i| {
+                let mut r = trial_rng.fork(i as u64);
+                Trace::generate(&topo_100k, &FailureModel::llama3(), days_100k * 24.0, &mut r)
+            })
+            .collect();
+        println!(
+            "\nparallel Monte-Carlo: {} trials x {} GPUs, {} threads, exact stepping",
+            n_trials, topo_100k.n_gpus, threads
+        );
+        let (stats_1t, memo_1t) = msim.run_trials_par(&traces, StepMode::Exact, 1);
+        let (stats_nt, memo_nt) = msim.run_trials_par(&traces, StepMode::Exact, threads);
+        assert_eq!(
+            stats_1t, stats_nt,
+            "parallel run_trials must be bit-identical to 1 thread"
+        );
+        // ... and to the sequential one-memo run_trials reference.
+        let mut seq_memo = msim.memo();
+        let seq_stats = msim.run_trials(&traces, StepMode::Exact, &mut seq_memo);
+        assert_eq!(
+            seq_stats, stats_1t,
+            "run_trials_par(1 thread) must match the shared-memo run_trials"
+        );
+        println!(
+            "  memo hit rate: {:.1}% at 1 thread, {:.1}% merged over {} threads \
+             ({} unique entries total)",
+            memo_1t.hit_rate() * 100.0,
+            memo_nt.hit_rate() * 100.0,
+            threads,
+            memo_nt.unique_entries
+        );
+        report.scalar("trials_memo_hit_rate_1thread", memo_1t.hit_rate());
+        report.scalar("trials_memo_hit_rate_nthread", memo_nt.hit_rate());
+        report.scalar("trials_memo_entries_nthread", memo_nt.unique_entries as f64);
+
+        let r_seq_trials = bench_with("fleet_trials_100k_1_thread", cfg_replay, || {
+            black_box(msim.run_trials_par(&traces, StepMode::Exact, 1));
+        });
+        println!("{}", r_seq_trials.line());
+        report.result(&r_seq_trials);
+        let par_name = format!("fleet_trials_100k_{threads}_threads");
+        let r_par_trials = bench_with(&par_name, cfg_replay, || {
+            black_box(msim.run_trials_par(&traces, StepMode::Exact, threads));
+        });
+        println!("{}", r_par_trials.line());
+        report.result(&r_par_trials);
+        let trials_speedup = r_seq_trials.secs.p50 / r_par_trials.secs.p50;
+        println!("  -> parallel-trials speedup: {trials_speedup:.1}x over 1 thread");
+        report.scalar("parallel_trials_speedup", trials_speedup);
+        if threads >= 4 {
+            let trials_floor = if quick { 2.0 } else { 3.0 };
+            assert!(
+                trials_speedup >= trials_floor,
+                "parallel run_trials should be >= {trials_floor}x over 1 thread with \
+                 {threads} workers (got {trials_speedup:.1}x)"
+            );
         }
     }
-    let grads: Vec<Vec<f32>> = params.iter().map(|p| p.iter().map(|x| x * 0.01).collect()).collect();
-    let mask = vec![true; params.len()];
-    let n_elems: usize = params.iter().map(|p| p.len()).sum();
-    let cfg_adam = BenchConfig { max_iters: if quick { 10 } else { 30 }, ..BenchConfig::default() };
 
-    let mut opt = AdamW::new(1e-3, &params);
-    let r_seq = bench_with("adamw_21M_1_thread", cfg_adam, || {
-        opt.update_with_threads(&mut params, &grads, &mask, 1);
-        black_box(&params);
-    });
-    println!("{}", r_seq.line());
-    println!("  -> {:.1} M elems/s", n_elems as f64 / r_seq.secs.p50 / 1e6);
-    report.result(&r_seq);
+    if !trials_only {
+        // =================================================================
+        // Algorithm-1 plan construction: direct vs cached
+        // =================================================================
+        let r_build = bench_with("alg1_build_k81920_tp32_to_30", BenchConfig::fast(), || {
+            let m = ShardMap::build(81_920, 32, 30);
+            let p = ReshardPlan::from_map(&m);
+            black_box((m, p));
+        });
+        println!("{}", r_build.line());
+        report.result(&r_build);
 
-    let r_par = bench_with(&format!("adamw_21M_{threads}_threads"), cfg_adam, || {
-        opt.update_with_threads(&mut params, &grads, &mask, threads);
-        black_box(&params);
-    });
-    println!("{}", r_par.line());
-    println!("  -> {:.1} M elems/s", n_elems as f64 / r_par.secs.p50 / 1e6);
-    report.result(&r_par);
-    report.scalar("adamw_par_speedup", r_seq.secs.p50 / r_par.secs.p50);
+        let cache = PlanCache::new();
+        cache.get(81_920, 32, 30); // prime
+        let r_hit = bench_with("alg1_plan_cache_hit", BenchConfig::fast(), || {
+            black_box(cache.get(81_920, 32, 30));
+        });
+        println!("{}", r_hit.line());
+        report.result(&r_hit);
+        let cache_speedup = r_build.secs.p50 / r_hit.secs.p50;
+        println!("  -> plan-cache speedup: {cache_speedup:.0}x");
+        report.scalar("plan_cache_speedup", cache_speedup);
 
-    // =====================================================================
-    // Weighted gradient reduce (sync_grads inner loop)
-    // =====================================================================
-    let n = n_target;
-    let src: Vec<f32> = rng.normal_vec_f32(n, 1.0);
-    let mut dst: Vec<f32> = rng.normal_vec_f32(n, 1.0);
-    let r_seq = bench_with("weighted_reduce_21M_1_thread", cfg_adam, || {
-        weighted_accumulate(&mut dst, &src, 0.5, 1);
-        black_box(&dst);
-    });
-    println!("{}", r_seq.line());
-    println!("  -> {:.2} GB/s effective", (2.0 * n as f64 * 4.0) / r_seq.secs.p50 / 1e9);
-    report.result(&r_seq);
-    let r_par = bench_with(&format!("weighted_reduce_21M_{threads}_threads"), cfg_adam, || {
-        weighted_accumulate(&mut dst, &src, 0.5, threads);
-        black_box(&dst);
-    });
-    println!("{}", r_par.line());
-    println!("  -> {:.2} GB/s effective", (2.0 * n as f64 * 4.0) / r_par.secs.p50 / 1e9);
-    report.result(&r_par);
-    report.scalar("weighted_reduce_par_speedup", r_seq.secs.p50 / r_par.secs.p50);
+        // ntp_iteration rides the model's internal cache: after the first
+        // call this is pure arithmetic, no plan rebuild.
+        sim.ntp_iteration(&cfg, 30, 8, 1.0); // prime
+        let r_iter = bench_with("ntp_iteration_cached_tp30", BenchConfig::fast(), || {
+            black_box(sim.ntp_iteration(&cfg, 30, 8, 1.0).total());
+        });
+        println!("{}", r_iter.line());
+        report.result(&r_iter);
 
-    let out = if quick { OUT_PATH_QUICK } else { OUT_PATH };
+        // =================================================================
+        // Explicit reshard permutation: per-unit vs coalesced CopyPlan
+        // =================================================================
+        let k = 2560; // ffn units of a TP4 shard at e2e-100m scale
+        let unit_len = 2 * 640; // wa+wb rows
+        let map = ShardMap::build(k, 4, 3);
+        let plan = CopyPlan::build(&map);
+        let full_t: Vec<f32> = rng.normal_vec_f32(k * unit_len, 1.0);
+        let comp = scatter_comp(&map, unit_len, &full_t);
+        let sync = comp_to_sync(&map, unit_len, &comp);
+        // exact equality between per-unit and coalesced paths
+        assert_eq!(plan.comp_to_sync(unit_len, &comp), sync);
+        assert_eq!(plan.sync_to_comp(unit_len, &sync), comp);
+
+        let cfg_mid = BenchConfig { max_iters: 30, ..BenchConfig::default() };
+        let r = bench_with("reshard_comp_to_sync_per_unit_3.3M", cfg_mid, || {
+            black_box(comp_to_sync(&map, unit_len, &comp));
+        });
+        println!("{}", r.line());
+        report.result(&r);
+        let r_coal = bench_with("reshard_comp_to_sync_coalesced_3.3M", cfg_mid, || {
+            black_box(plan.comp_to_sync(unit_len, &comp));
+        });
+        println!("{}", r_coal.line());
+        report.result(&r_coal);
+        report.scalar("reshard_coalesce_speedup", r.secs.p50 / r_coal.secs.p50);
+        println!("  -> coalesced reshard speedup: {:.1}x", r.secs.p50 / r_coal.secs.p50);
+
+        let r = bench_with("reshard_sync_to_comp_per_unit_3.3M", cfg_mid, || {
+            black_box(sync_to_comp(&map, unit_len, &sync));
+        });
+        println!("{}", r.line());
+        report.result(&r);
+        let r = bench_with("reshard_sync_to_comp_coalesced_3.3M", cfg_mid, || {
+            black_box(plan.sync_to_comp(unit_len, &sync));
+        });
+        println!("{}", r.line());
+        report.result(&r);
+
+        // =================================================================
+        // AdamW on ~21M params split into realistic tensor sizes
+        // =================================================================
+        let n_target = if quick { 4_000_000 } else { 21_000_000 };
+        let sizes = [8192 * 320, 320 * 1280, 1280 * 320, 320, 1280];
+        let mut params: Vec<Vec<f32>> = Vec::new();
+        while params.iter().map(|p| p.len()).sum::<usize>() < n_target {
+            for &s in &sizes {
+                params.push(rng.normal_vec_f32(s, 0.02));
+            }
+        }
+        let grads: Vec<Vec<f32>> =
+            params.iter().map(|p| p.iter().map(|x| x * 0.01).collect()).collect();
+        let mask = vec![true; params.len()];
+        let n_elems: usize = params.iter().map(|p| p.len()).sum();
+        let cfg_adam =
+            BenchConfig { max_iters: if quick { 10 } else { 30 }, ..BenchConfig::default() };
+
+        let mut opt = AdamW::new(1e-3, &params);
+        let r_seq = bench_with("adamw_21M_1_thread", cfg_adam, || {
+            opt.update_with_threads(&mut params, &grads, &mask, 1);
+            black_box(&params);
+        });
+        println!("{}", r_seq.line());
+        println!("  -> {:.1} M elems/s", n_elems as f64 / r_seq.secs.p50 / 1e6);
+        report.result(&r_seq);
+
+        let r_par = bench_with(&format!("adamw_21M_{threads}_threads"), cfg_adam, || {
+            opt.update_with_threads(&mut params, &grads, &mask, threads);
+            black_box(&params);
+        });
+        println!("{}", r_par.line());
+        println!("  -> {:.1} M elems/s", n_elems as f64 / r_par.secs.p50 / 1e6);
+        report.result(&r_par);
+        report.scalar("adamw_par_speedup", r_seq.secs.p50 / r_par.secs.p50);
+
+        // =================================================================
+        // Weighted gradient reduce (sync_grads inner loop)
+        // =================================================================
+        let n = n_target;
+        let src: Vec<f32> = rng.normal_vec_f32(n, 1.0);
+        let mut dst: Vec<f32> = rng.normal_vec_f32(n, 1.0);
+        let r_seq = bench_with("weighted_reduce_21M_1_thread", cfg_adam, || {
+            weighted_accumulate(&mut dst, &src, 0.5, 1);
+            black_box(&dst);
+        });
+        println!("{}", r_seq.line());
+        println!("  -> {:.2} GB/s effective", (2.0 * n as f64 * 4.0) / r_seq.secs.p50 / 1e9);
+        report.result(&r_seq);
+        let r_par = bench_with(&format!("weighted_reduce_21M_{threads}_threads"), cfg_adam, || {
+            weighted_accumulate(&mut dst, &src, 0.5, threads);
+            black_box(&dst);
+        });
+        println!("{}", r_par.line());
+        println!("  -> {:.2} GB/s effective", (2.0 * n as f64 * 4.0) / r_par.secs.p50 / 1e9);
+        report.result(&r_par);
+        report.scalar("weighted_reduce_par_speedup", r_seq.secs.p50 / r_par.secs.p50);
+    }
+
+    let out = if trials_only {
+        OUT_PATH_TRIALS
+    } else if quick {
+        OUT_PATH_QUICK
+    } else {
+        OUT_PATH
+    };
     match report.write(out) {
         Ok(()) => println!("\nwrote {out}"),
         Err(e) => eprintln!("\nWARNING: could not write {out}: {e}"),

@@ -126,6 +126,29 @@ impl<'a> FleetReplayer<'a> {
         &self.fleet
     }
 
+    /// The next instant (strictly after the current sweep time) at
+    /// which the fleet state *may* change: the earlier of the next
+    /// failure arrival and the earliest scheduled recovery. `None`
+    /// once the trace is exhausted and every outage has resolved.
+    ///
+    /// This is the cursor exact event-boundary integration
+    /// ([`crate::manager::StepMode::Exact`]) steps on. Lazily-deleted
+    /// (stale) recovery entries can surface as candidates; at such a
+    /// time the fleet provably does NOT change (the extending event
+    /// queued its own, later entry), so sweeps that close integration
+    /// intervals only on an *observed* health change stay exact — a
+    /// stale boundary is just a no-op advance.
+    pub fn next_change_hours(&self) -> Option<f64> {
+        let ev = self.trace.events.get(self.next_event).map(|e| e.at_hours);
+        let rec = self.recoveries.peek().map(|&Reverse((TimeKey(u), _))| u);
+        match (ev, rec) {
+            (None, None) => None,
+            (Some(a), None) => Some(a),
+            (None, Some(b)) => Some(b),
+            (Some(a), Some(b)) => Some(a.min(b)),
+        }
+    }
+
     /// Advance the sweep to `now_hours` (must be >= the current time) and
     /// return the fleet state at that instant. Failure events and
     /// recoveries are interleaved in time order; on a tie the recovery is
@@ -271,6 +294,56 @@ mod tests {
                 "after reset, t={t}"
             );
         }
+    }
+
+    #[test]
+    fn next_change_hours_walks_every_boundary() {
+        let topo = Topology::of(16, 8, 4);
+        let trace = Trace {
+            horizon_hours: 20.0,
+            events: vec![
+                crate::failure::FailureEvent {
+                    at_hours: 1.0,
+                    gpu: 3,
+                    is_hw: true,
+                    recover_at_hours: 5.0,
+                },
+                crate::failure::FailureEvent {
+                    at_hours: 2.0,
+                    gpu: 9,
+                    is_hw: false,
+                    recover_at_hours: 4.0,
+                },
+                // overlapping re-failure of gpu 3: extends to 7.0, the
+                // 5.0 recovery entry goes stale (a no-op boundary)
+                crate::failure::FailureEvent {
+                    at_hours: 3.0,
+                    gpu: 3,
+                    is_hw: false,
+                    recover_at_hours: 7.0,
+                },
+            ],
+        };
+        let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
+        rep.advance(0.0);
+        let mut boundaries = Vec::new();
+        let mut failed = Vec::new();
+        while let Some(t) = rep.next_change_hours() {
+            boundaries.push(t);
+            failed.push(rep.advance(t).n_failed());
+        }
+        // arrivals 1,2,3; recoveries 4 (gpu 9), 5 (stale), 7 (gpu 3)
+        assert_eq!(boundaries, vec![1.0, 2.0, 3.0, 4.0, 5.0, 7.0]);
+        assert_eq!(failed, vec![1, 2, 2, 1, 1, 0]);
+        // every boundary matches the from-scratch replay
+        for (&t, &f) in boundaries.iter().zip(&failed) {
+            assert_eq!(trace.replay_to(&topo, BlastRadius::Single, t).n_failed(), f);
+        }
+        assert_eq!(rep.next_change_hours(), None);
+        // empty trace: no boundaries at all
+        let quiet = Trace { horizon_hours: 5.0, events: vec![] };
+        let rep = FleetReplayer::new(&quiet, &topo, BlastRadius::Single);
+        assert_eq!(rep.next_change_hours(), None);
     }
 
     #[test]

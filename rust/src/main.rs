@@ -17,7 +17,7 @@ use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{
     sample_failed_gpus, scenario::scenario_from_failed, BlastRadius, FailureModel, Trace,
 };
-use ntp::manager::{MultiPolicySim, SparePolicy, StrategyTable};
+use ntp::manager::{FleetStats, MultiPolicySim, SparePolicy, StepMode, StrategyTable};
 use ntp::ntp::{ReshardPlan, ShardMap};
 use ntp::parallel::{best_config, ParallelConfig};
 use ntp::policy::{registry, reshard_transition_secs_over, PolicyCtx, TransitionCosts};
@@ -78,6 +78,13 @@ USAGE: ntp <subcommand> [options]
                 --days 15 [--spares N] (fixed minibatch with N spare domains)
                 [--replicas 16] [--rate-x 10] [--json] [--no-transitions]
                 [--cluster paper-32k-nvl32|paper-100k-nvl72|...] [--pp 8]
+                [--exact] (default: exact event-boundary integration —
+                stats are exact for the trace, transitions charged per
+                event) | [--grid-hours H] (legacy fixed-grid sampling)
+                [--trials N] (Monte-Carlo traces, per-trial forked PRNG
+                streams; table/JSON report per-policy means over trials)
+                [--threads T] (parallel trial batches over scoped
+                threads, bit-identical to 1 thread; default: all cores)
                 transition-cost calibration (defaults are the modeled
                 TransitionCosts with the trace's observed failure rate,
                 see EXPERIMENTS.md §Policies):
@@ -357,6 +364,17 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let no_transitions = args.flag("no-transitions");
     let cluster_name = args.str_or("cluster", "paper-32k-nvl32");
     let pp = args.usize_or("pp", 8);
+    // Time stepping: exact event-boundary integration is the default;
+    // --grid-hours opts back into the legacy fixed-grid sampling.
+    let exact_flag = args.flag("exact");
+    let grid_hours = args.opt_f64("grid-hours");
+    // Monte-Carlo: N independent traces (per-trial forked PRNG
+    // streams), batched over scoped threads.
+    let trials = args.usize_or("trials", 1).max(1);
+    let threads = match args.opt_usize("threads") {
+        Some(t) => t.max(1),
+        None => ntp::util::par::num_threads(),
+    };
     // Transition-cost calibration knobs (defaults: the modeled
     // TransitionCosts — see EXPERIMENTS.md §Policies for the published
     // latencies the defaults are calibrated against).
@@ -391,6 +409,17 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         !(reshard_secs.is_some() && reshard_gbs.is_some()),
         "--reshard-secs and --reshard-gbs both set the reshard cost; pass one or the other"
     );
+    anyhow::ensure!(
+        !(exact_flag && grid_hours.is_some()),
+        "--exact (the default) conflicts with --grid-hours; pass one or the other"
+    );
+    let mode = match grid_hours {
+        Some(h) => {
+            anyhow::ensure!(h > 0.0, "--grid-hours must be positive");
+            StepMode::Grid(h)
+        }
+        None => StepMode::Exact,
+    };
 
     let model = presets::model("gpt-480b")?;
     let cluster = presets::cluster(&cluster_name)?;
@@ -404,14 +433,23 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let n_domains = n_replicas * cfg.pp + spares.unwrap_or(0);
     let topo = Topology::of(n_domains * tp, tp, gpus_per_node);
     let fmodel = FailureModel::llama3().scaled(rate_x);
+    // One forked PRNG stream per Monte-Carlo trial: trace i is the same
+    // for any --trials >= i+1 and any --threads.
     let mut rng = Rng::new(seed);
-    let trace = Trace::generate(&topo, &fmodel, days * 24.0, &mut rng);
+    let traces: Vec<Trace> = (0..trials)
+        .map(|i| {
+            let mut r = rng.fork(i as u64);
+            Trace::generate(&topo, &fmodel, days * 24.0, &mut r)
+        })
+        .collect();
     let transition = if no_transitions {
         None
     } else {
-        // The observed event rate of THIS trace feeds CKPT-ADAPTIVE's
-        // Young/Daly interval (override with --failure-rate).
-        let mut t = TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace);
+        // The observed event rate of the generated trace batch feeds
+        // CKPT-ADAPTIVE's Young/Daly interval (override with
+        // --failure-rate). One pooled rate: the whole batch must share
+        // one cost model to share one response memo.
+        let mut t = TransitionCosts::model(&sim, &cfg).with_observed_rate_over(&traces);
         if let Some(gbs) = reshard_gbs {
             t.reshard_secs = reshard_transition_secs_over(&sim, &cfg, gbs);
         }
@@ -439,8 +477,10 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         Some(t)
     };
 
-    // One shared-sweep pass evaluates every requested policy: the trace
-    // is replayed once and repeated damage signatures are memoized.
+    // One shared-sweep pass per trace evaluates every requested policy
+    // (the trace is replayed once and repeated damage signatures are
+    // memoized); trial batches fan out over scoped threads with
+    // per-thread memos, bit-identical to a single-thread run.
     let min_tp = min_supported_tp(tp);
     let msim = MultiPolicySim {
         topo: &topo,
@@ -452,8 +492,7 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         blast: BlastRadius::Single,
         transition,
     };
-    let mut memo = msim.memo();
-    let all_stats = msim.run_with(&trace, 3.0, &mut memo);
+    let (per_trial, memo) = msim.run_trials_par(&traces, mode, threads);
 
     let mut out = Table::new(&[
         "policy", "mean tput", "net tput", "tput/GPU", "paused", "downtime", "donated",
@@ -465,32 +504,57 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     rep.scalar("replicas", n_replicas as f64);
     rep.scalar("spares", spares.unwrap_or(0) as f64);
     rep.scalar("n_gpus", topo.n_gpus as f64);
+    rep.scalar("trials", trials as f64);
+    rep.scalar("threads", threads as f64);
+    rep.scalar("exact", if grid_hours.is_none() { 1.0 } else { 0.0 });
+    if let Some(h) = grid_hours {
+        rep.scalar("grid_hours", h);
+    }
+    // Merged across per-thread memos (MemoStats::merge).
     rep.scalar("memo_hit_rate", memo.hit_rate());
-    rep.scalar("memo_entries", memo.unique_entries() as f64);
+    rep.scalar("memo_entries", memo.unique_entries as f64);
     rep.scalar("transition_memo_hit_rate", memo.transition_hit_rate());
     if let Some(t) = &transition {
         rep.scalar("observed_failure_rate_per_hour", t.failure_rate_per_hour);
     }
-    for (policy, stats) in policies.iter().zip(&all_stats) {
+    // Per-policy Monte-Carlo means over the trial batch (for
+    // --trials 1 these are exactly the single trace's stats).
+    let n = per_trial.len() as f64;
+    let mean_over = |f: &dyn Fn(&FleetStats) -> f64, pi: usize| -> f64 {
+        per_trial.iter().map(|trial| f(&trial[pi])).sum::<f64>() / n
+    };
+    for (pi, policy) in policies.iter().enumerate() {
+        let mean_tput = mean_over(&|s| s.mean_throughput, pi);
+        let net_tput = mean_over(&|s| s.net_throughput(), pi);
+        let tput_per_gpu = mean_over(&|s| s.throughput_per_gpu, pi);
+        let paused = mean_over(&|s| s.paused_frac, pi);
+        let downtime = mean_over(&|s| s.downtime_frac, pi);
+        let donated = mean_over(&|s| s.mean_donated, pi);
+        let spares_used = mean_over(&|s| s.mean_spares_used, pi);
+        let transitions = mean_over(&|s| s.transitions as f64, pi);
         out.row(&[
             policy.name().into(),
-            f4(stats.mean_throughput),
-            f4(stats.net_throughput()),
-            f4(stats.throughput_per_gpu),
-            pct(stats.paused_frac),
-            pct(stats.downtime_frac),
-            f4(stats.mean_donated),
-            f2(stats.mean_spares_used),
-            format!("{}", stats.transitions),
+            f4(mean_tput),
+            f4(net_tput),
+            f4(tput_per_gpu),
+            pct(paused),
+            pct(downtime),
+            f4(donated),
+            f2(spares_used),
+            if trials == 1 {
+                format!("{}", transitions as usize)
+            } else {
+                f2(transitions)
+            },
         ]);
         let key = policy.name().to_ascii_lowercase().replace('-', "_");
-        rep.scalar(&format!("{key}_mean_tput"), stats.mean_throughput);
-        rep.scalar(&format!("{key}_net_tput"), stats.net_throughput());
-        rep.scalar(&format!("{key}_tput_per_gpu"), stats.throughput_per_gpu);
-        rep.scalar(&format!("{key}_paused_frac"), stats.paused_frac);
-        rep.scalar(&format!("{key}_downtime_frac"), stats.downtime_frac);
-        rep.scalar(&format!("{key}_donated"), stats.mean_donated);
-        rep.scalar(&format!("{key}_transitions"), stats.transitions as f64);
+        rep.scalar(&format!("{key}_mean_tput"), mean_tput);
+        rep.scalar(&format!("{key}_net_tput"), net_tput);
+        rep.scalar(&format!("{key}_tput_per_gpu"), tput_per_gpu);
+        rep.scalar(&format!("{key}_paused_frac"), paused);
+        rep.scalar(&format!("{key}_downtime_frac"), downtime);
+        rep.scalar(&format!("{key}_donated"), donated);
+        rep.scalar(&format!("{key}_transitions"), transitions);
     }
     if json {
         println!("{}", rep.to_json().pretty());

@@ -2,6 +2,16 @@
 //! integrate throughput over time (Figs. 4, 6, 7 and the fleet_sim
 //! example). A precomputed [`StrategyTable`] makes per-event evaluation
 //! O(#replicas) instead of re-running the iteration model.
+//!
+//! Integration is **exact** by default ([`StepMode::Exact`]): the sweep
+//! steps the [`FleetReplayer`] from one health-change boundary to the
+//! next and weights every evaluation by the *duration* the snapshot was
+//! live, so the integrated [`FleetStats`] carry no sampling
+//! quantization at all — the result is a pure function of the trace.
+//! The legacy fixed-grid sampling survives as [`StepMode::Grid`] (with
+//! its former partial-last-step bias fixed by clamping the final
+//! interval to the horizon) and converges to the exact stats as
+//! `step_hours → 0` (`rust/tests/exact_integration.rs`).
 
 use super::spares::SparePolicy;
 use crate::cluster::Topology;
@@ -148,6 +158,63 @@ impl FleetStats {
     }
 }
 
+/// How a fleet sweep steps through time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepMode {
+    /// Exact event-boundary integration: evaluate once per actual
+    /// health change, weight by the interval the snapshot was live.
+    /// The integrated [`FleetStats`] are a pure function of the trace —
+    /// no sampling grid, no quantization, and invariant to any added
+    /// sampling refinement ([`FleetSim::run_exact_with_refinement`]).
+    Exact,
+    /// Legacy fixed-grid sampling every `.0` hours: events landing
+    /// between two samples collapse into one observed change (one
+    /// transition charge), and state changes are only seen at sample
+    /// times. Kept for convergence tests and step-size studies;
+    /// converges to [`StepMode::Exact`] as the step shrinks.
+    Grid(f64),
+}
+
+/// Start time and clamped duration of grid step `step`, or `None` once
+/// the step would begin at/after the horizon. The final interval is
+/// clamped to `horizon_hours`: the former `n_steps =
+/// ceil(horizon/step)` loop integrated a full step past the horizon,
+/// overweighting whatever state the last sample happened to see
+/// (regression-tested in `rust/tests/exact_integration.rs`).
+pub(crate) fn grid_step(step: usize, step_hours: f64, horizon_hours: f64) -> Option<(f64, f64)> {
+    assert!(step_hours > 0.0, "grid step must be positive (got {step_hours})");
+    let t = step as f64 * step_hours;
+    if t >= horizon_hours {
+        return None;
+    }
+    let end = ((step + 1) as f64 * step_hours).min(horizon_hours);
+    Some((t, end - t))
+}
+
+/// Candidate state-change times of a trace within `(0, horizon)`:
+/// every failure arrival and recovery deadline, time-sorted and
+/// deduplicated — the boundary set the per-step exact reference
+/// ([`FleetSim::run_replay_per_step`]) walks. The event-driven sweep
+/// discovers the same set incrementally via
+/// [`FleetReplayer::next_change_hours`] (its lazily-deleted recovery
+/// entries are a subset of the `recover_at_hours` values collected
+/// here, and boundaries where nothing actually changes are no-ops in
+/// both paths).
+pub(crate) fn exact_boundaries(trace: &Trace) -> Vec<f64> {
+    let mut ts: Vec<f64> = Vec::with_capacity(trace.events.len() * 2);
+    for ev in &trace.events {
+        if ev.at_hours > 0.0 && ev.at_hours < trace.horizon_hours {
+            ts.push(ev.at_hours);
+        }
+        if ev.recover_at_hours > 0.0 && ev.recover_at_hours < trace.horizon_hours {
+            ts.push(ev.recover_at_hours);
+        }
+    }
+    ts.sort_by(f64::total_cmp);
+    ts.dedup();
+    ts
+}
+
 /// Fleet simulator over a failure trace: drives any [`FtPolicy`]
 /// through the event-driven sweep and integrates steady-state
 /// throughput plus modeled reconfiguration downtime.
@@ -172,24 +239,98 @@ pub struct FleetSim<'a> {
 }
 
 impl<'a> FleetSim<'a> {
-    /// Run the trace, sampling at `step_hours`, and integrate.
+    /// Run the trace under `mode` and integrate.
     ///
     /// The trace is swept *once* by a [`FleetReplayer`] — O(events)
     /// instead of the O(steps × events) per-step
     /// [`Trace::replay_to`] rebuild (kept as
     /// [`FleetSim::run_replay_per_step`] for the equivalence tests and
-    /// the perf benches). Samples between which no failure/recovery
-    /// landed reuse the previous evaluation verbatim
-    /// ([`crate::cluster::FleetHealth::version`]), so the result is
-    /// bit-identical.
-    pub fn run(&self, trace: &Trace, step_hours: f64) -> FleetStats {
-        let n_steps = (trace.horizon_hours / step_hours).ceil() as usize;
+    /// the perf benches). In [`StepMode::Exact`] the sweep jumps from
+    /// one health-change boundary to the next
+    /// ([`FleetReplayer::next_change_hours`]), evaluates once per
+    /// actual change, and weights every evaluation by the interval it
+    /// was live — the stats are exact for the trace and every
+    /// transition is charged at the event that caused it. In
+    /// [`StepMode::Grid`] the legacy fixed-grid semantics apply
+    /// (samples between which no failure/recovery landed reuse the
+    /// previous evaluation verbatim via
+    /// [`crate::cluster::FleetHealth::version`]).
+    pub fn run(&self, trace: &Trace, mode: StepMode) -> FleetStats {
+        match mode {
+            StepMode::Exact => self.run_exact(trace, &[]),
+            StepMode::Grid(step_hours) => self.run_grid(trace, step_hours),
+        }
+    }
+
+    /// [`StepMode::Exact`] with extra *refinement* sample times merged
+    /// into the boundary stream (must be sorted ascending). The result
+    /// is bit-identical to `run(trace, StepMode::Exact)` for ANY
+    /// refinement: integration intervals close only when the per-domain
+    /// health actually changes, so an added sample evaluates to the
+    /// state already live and contributes nothing — the invariance
+    /// property `rust/tests/exact_integration.rs` pins.
+    pub fn run_exact_with_refinement(&self, trace: &Trace, extra: &[f64]) -> FleetStats {
+        self.run_exact(trace, extra)
+    }
+
+    fn run_exact(&self, trace: &Trace, extra: &[f64]) -> FleetStats {
+        assert!(
+            extra.windows(2).all(|w| w[0] <= w[1]),
+            "refinement times must be sorted ascending"
+        );
+        let horizon = trace.horizon_hours;
+        let mut acc = Accum::default();
+        if horizon <= 0.0 {
+            return self.integrate(acc);
+        }
+        let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
+        let mut prev_counts = rep.advance(0.0).domain_healthy_counts().to_vec();
+        let mut out = self.evaluate(&prev_counts);
+        let mut seg_start = 0.0;
+        let mut ei = 0usize;
+        loop {
+            // Refinement times already behind the sweep are no-ops.
+            while ei < extra.len() && extra[ei] <= rep.now_hours() {
+                ei += 1;
+            }
+            let change = rep.next_change_hours().filter(|&t| t < horizon);
+            let refine = extra.get(ei).copied().filter(|&t| t < horizon);
+            let t = match (change, refine) {
+                (None, None) => break,
+                (Some(c), None) => c,
+                (None, Some(r)) => r,
+                (Some(c), Some(r)) => c.min(r),
+            };
+            let fleet = rep.advance(t);
+            if fleet.domain_healthy_counts() != &prev_counts[..] {
+                // Close the interval the previous snapshot was live
+                // for, charge the reconfiguration at its actual event
+                // time, and evaluate the new snapshot.
+                acc.sample(out, t - seg_start);
+                let counts = fleet.domain_healthy_counts();
+                acc.charge(
+                    self.policy,
+                    &self.ctx(self.live_spares_in(counts)),
+                    &prev_counts,
+                    counts,
+                );
+                prev_counts.clear();
+                prev_counts.extend_from_slice(counts);
+                out = self.evaluate(&prev_counts);
+                seg_start = t;
+            }
+        }
+        acc.sample(out, horizon - seg_start);
+        self.integrate(acc)
+    }
+
+    fn run_grid(&self, trace: &Trace, step_hours: f64) -> FleetStats {
         let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
         let mut acc = Accum::default();
         let mut last: Option<(u64, EvalOut)> = None;
         let mut prev_counts: Vec<usize> = Vec::new();
-        for step in 0..n_steps {
-            let t = step as f64 * step_hours;
+        let mut step = 0usize;
+        while let Some((t, dt)) = grid_step(step, step_hours, trace.horizon_hours) {
             let fleet = rep.advance(t);
             let out = match last {
                 Some((version, out)) if version == fleet.version() => out,
@@ -211,22 +352,30 @@ impl<'a> FleetSim<'a> {
                 }
             };
             last = Some((fleet.version(), out));
-            acc.sample(out);
+            acc.sample(out, dt);
+            step += 1;
         }
-        self.integrate(n_steps, step_hours, acc)
+        self.integrate(acc)
     }
 
     /// Reference implementation of [`FleetSim::run`]: rebuild the fleet
     /// state from scratch at every sample via [`Trace::replay_to`].
-    /// O(steps × events) — exists to demonstrate (tests) and measure
-    /// (benches/perf_hotpath.rs) the event-driven path's equivalence and
-    /// speedup.
-    pub fn run_replay_per_step(&self, trace: &Trace, step_hours: f64) -> FleetStats {
-        let n_steps = (trace.horizon_hours / step_hours).ceil() as usize;
+    /// O(steps × events) in grid mode, O(boundaries × events) in exact
+    /// mode — exists to demonstrate (tests) and measure
+    /// (benches/perf_hotpath.rs) the event-driven path's equivalence
+    /// and speedup.
+    pub fn run_replay_per_step(&self, trace: &Trace, mode: StepMode) -> FleetStats {
+        match mode {
+            StepMode::Exact => self.run_exact_per_step(trace),
+            StepMode::Grid(step_hours) => self.run_grid_per_step(trace, step_hours),
+        }
+    }
+
+    fn run_grid_per_step(&self, trace: &Trace, step_hours: f64) -> FleetStats {
         let mut acc = Accum::default();
         let mut prev_counts: Vec<usize> = Vec::new();
-        for step in 0..n_steps {
-            let t = step as f64 * step_hours;
+        let mut step = 0usize;
+        while let Some((t, dt)) = grid_step(step, step_hours, trace.horizon_hours) {
             let fleet = trace.replay_to(self.topo, self.blast, t);
             let healthy = fleet.domain_healthy_counts();
             if step == 0 {
@@ -241,17 +390,51 @@ impl<'a> FleetSim<'a> {
                 prev_counts.clear();
                 prev_counts.extend_from_slice(healthy);
             }
-            acc.sample(self.evaluate(healthy));
+            acc.sample(self.evaluate(healthy), dt);
+            step += 1;
         }
-        self.integrate(n_steps, step_hours, acc)
+        self.integrate(acc)
     }
 
-    fn integrate(&self, n_steps: usize, step_hours: f64, acc: Accum) -> FleetStats {
+    fn run_exact_per_step(&self, trace: &Trace) -> FleetStats {
+        let horizon = trace.horizon_hours;
+        let mut acc = Accum::default();
+        if horizon <= 0.0 {
+            return self.integrate(acc);
+        }
+        let mut prev_counts = trace
+            .replay_to(self.topo, self.blast, 0.0)
+            .domain_healthy_counts()
+            .to_vec();
+        let mut out = self.evaluate(&prev_counts);
+        let mut seg_start = 0.0;
+        for &t in &exact_boundaries(trace) {
+            let fleet = trace.replay_to(self.topo, self.blast, t);
+            let counts = fleet.domain_healthy_counts();
+            if counts != &prev_counts[..] {
+                acc.sample(out, t - seg_start);
+                acc.charge(
+                    self.policy,
+                    &self.ctx(self.live_spares_in(counts)),
+                    &prev_counts,
+                    counts,
+                );
+                prev_counts.clear();
+                prev_counts.extend_from_slice(counts);
+                out = self.evaluate(&prev_counts);
+                seg_start = t;
+            }
+        }
+        acc.sample(out, horizon - seg_start);
+        self.integrate(acc)
+    }
+
+    fn integrate(&self, acc: Accum) -> FleetStats {
         let spare_gpus = self
             .spares
             .map(|p| p.spare_domains * self.topo.domain_size)
             .unwrap_or(0);
-        acc.finalize(n_steps, step_hours, self.topo.n_gpus, spare_gpus)
+        acc.finalize(self.topo.n_gpus, spare_gpus)
     }
 
     /// The policy context for one evaluation. `live_spares` is the
@@ -304,29 +487,52 @@ impl<'a> FleetSim<'a> {
 /// (event-driven, per-step, and the shared multi-policy engine in
 /// [`super::sweep`]), so all paths stay operation-for-operation
 /// identical (the bit-identity the equivalence tests assert).
+///
+/// Integration is duration-weighted: every sampled [`EvalOut`] carries
+/// the hours the snapshot was live, so the exact event-boundary sweep
+/// (one sample per health change, arbitrary interval lengths) and the
+/// fixed grid (uniform intervals, clamped at the horizon) ride the
+/// same accumulator. A helpful bit-level property falls out: when a
+/// quantity is constant (e.g. `tput == 1.0` on a healthy fleet),
+/// `out.tput * dt == dt` exactly, so its mean divides two bitwise-equal
+/// sums and is exactly that constant regardless of how the horizon was
+/// partitioned.
 #[derive(Clone, Default)]
 pub(crate) struct Accum {
+    /// ∫ tput dt (hours).
     tput_sum: f64,
-    paused: usize,
+    /// ∫ dt — total integrated hours (the normalization denominator).
+    time_hours: f64,
+    /// Hours spent paused.
+    paused_hours: f64,
+    /// ∫ spares_used dt.
     spares_sum: f64,
+    /// ∫ donated dt.
     donated_sum: f64,
     transitions: usize,
     cost_gpu_secs: f64,
 }
 
 impl Accum {
-    pub(crate) fn sample(&mut self, out: EvalOut) {
-        self.tput_sum += out.tput;
-        self.paused += usize::from(out.paused);
-        self.spares_sum += out.spares_used as f64;
-        self.donated_sum += out.donated;
+    /// Integrate one snapshot evaluation over the `dt_hours` it was
+    /// live.
+    pub(crate) fn sample(&mut self, out: EvalOut, dt_hours: f64) {
+        self.tput_sum += out.tput * dt_hours;
+        self.time_hours += dt_hours;
+        if out.paused {
+            self.paused_hours += dt_hours;
+        }
+        self.spares_sum += out.spares_used as f64 * dt_hours;
+        self.donated_sum += out.donated * dt_hours;
     }
 
-    /// Charge the policy's transition cost for a sampled health change
-    /// (events landing between two samples collapse into one charge —
-    /// all sweep paths sample on the same grid, so all see the same
-    /// transitions). `ctx` must carry the live-spare-adjusted pool of
-    /// the `next` snapshot ([`FleetSim::live_spares_in`]).
+    /// Charge the policy's transition cost for an observed health
+    /// change. In [`StepMode::Exact`] every change boundary charges at
+    /// its actual event time; in [`StepMode::Grid`] events landing
+    /// between two samples collapse into one charge (all grid paths
+    /// sample the same grid, so all see the same transitions). `ctx`
+    /// must carry the live-spare-adjusted pool of the `next` snapshot
+    /// ([`FleetSim::live_spares_in`]).
     pub(crate) fn charge(
         &mut self,
         policy: &dyn FtPolicy,
@@ -346,33 +552,28 @@ impl Accum {
         self.cost_gpu_secs += cost_gpu_secs;
     }
 
-    /// Integrate the accumulated samples into a [`FleetStats`]
-    /// (verbatim the former `FleetSim::integrate` body, shared so every
-    /// sweep path produces bit-identical statistics).
-    pub(crate) fn finalize(
-        &self,
-        n_steps: usize,
-        step_hours: f64,
-        n_gpus: usize,
-        spare_gpus: usize,
-    ) -> FleetStats {
-        let n = n_steps as f64;
+    /// Integrate the accumulated duration-weighted samples into a
+    /// [`FleetStats`] (shared by every sweep path so all produce
+    /// bit-identical statistics). Normalizes by the integrated time —
+    /// not a step count — so partial final intervals carry exactly
+    /// their duration's weight.
+    pub(crate) fn finalize(&self, n_gpus: usize, spare_gpus: usize) -> FleetStats {
+        let t = self.time_hours;
+        if t <= 0.0 {
+            return FleetStats { transitions: self.transitions, ..FleetStats::default() };
+        }
         let job_gpus = n_gpus - spare_gpus;
-        let mean_tput = self.tput_sum / n;
-        let horizon_secs = n * step_hours * 3600.0;
-        let downtime_frac = if horizon_secs > 0.0 {
-            (self.cost_gpu_secs / (n_gpus as f64 * horizon_secs)).min(1.0)
-        } else {
-            0.0
-        };
+        let mean_tput = self.tput_sum / t;
+        let horizon_secs = t * 3600.0;
+        let downtime_frac = (self.cost_gpu_secs / (n_gpus as f64 * horizon_secs)).min(1.0);
         FleetStats {
             mean_throughput: mean_tput,
-            paused_frac: self.paused as f64 / n,
-            mean_spares_used: self.spares_sum / n,
+            paused_frac: self.paused_hours / t,
+            mean_spares_used: self.spares_sum / t,
             throughput_per_gpu: mean_tput * job_gpus as f64 / n_gpus as f64,
             downtime_frac,
             transitions: self.transitions,
-            mean_donated: self.donated_sum / n,
+            mean_donated: self.donated_sum / t,
         }
     }
 }
@@ -456,15 +657,59 @@ mod tests {
             blast: BlastRadius::Single,
             transition: None,
         };
-        let stats = fs.run(&trace, 6.0);
+        let stats = fs.run(&trace, StepMode::Grid(6.0));
         assert!(stats.mean_throughput > 0.5 && stats.mean_throughput <= 1.0);
         assert_eq!(stats.paused_frac, 0.0);
         assert_eq!(stats.downtime_frac, 0.0);
 
-        // DP-DROP must do worse on the same trace.
+        // Exact integration agrees qualitatively and stays in range.
+        let exact = fs.run(&trace, StepMode::Exact);
+        assert!(exact.mean_throughput > 0.5 && exact.mean_throughput <= 1.0);
+        assert!((exact.mean_throughput - stats.mean_throughput).abs() < 0.05);
+
+        // DP-DROP must do worse on the same trace in both modes.
         let fs_drop = FleetSim { policy: FtStrategy::DpDrop.policy(), ..fs };
-        let stats_drop = fs_drop.run(&trace, 6.0);
-        assert!(stats_drop.mean_throughput < stats.mean_throughput);
+        assert!(fs_drop.run(&trace, StepMode::Grid(6.0)).mean_throughput < stats.mean_throughput);
+        assert!(fs_drop.run(&trace, StepMode::Exact).mean_throughput < exact.mean_throughput);
+    }
+
+    #[test]
+    fn grid_step_clamps_the_final_interval() {
+        // horizon 10, step 4: intervals [0,4) [4,8) [8,10).
+        assert_eq!(grid_step(0, 4.0, 10.0), Some((0.0, 4.0)));
+        assert_eq!(grid_step(1, 4.0, 10.0), Some((4.0, 4.0)));
+        assert_eq!(grid_step(2, 4.0, 10.0), Some((8.0, 2.0)));
+        assert_eq!(grid_step(3, 4.0, 10.0), None);
+        // exactly divisible horizon: no partial step, no overshoot
+        assert_eq!(grid_step(1, 5.0, 10.0), Some((5.0, 5.0)));
+        assert_eq!(grid_step(2, 5.0, 10.0), None);
+        // degenerate horizon
+        assert_eq!(grid_step(0, 1.0, 0.0), None);
+    }
+
+    #[test]
+    fn accum_integrates_by_duration() {
+        let half = EvalOut { tput: 0.5, paused: false, spares_used: 2, donated: 0.25 };
+        let paused = EvalOut { tput: 0.0, paused: true, spares_used: 0, donated: 0.0 };
+        let mut acc = Accum::default();
+        acc.sample(half, 6.0);
+        acc.sample(paused, 2.0);
+        let s = acc.finalize(100, 10);
+        assert!((s.mean_throughput - 3.0 / 8.0).abs() < 1e-15);
+        assert!((s.paused_frac - 0.25).abs() < 1e-15);
+        assert!((s.mean_spares_used - 12.0 / 8.0).abs() < 1e-15);
+        assert!((s.mean_donated - 1.5 / 8.0).abs() < 1e-15);
+        assert_eq!(s.transitions, 0);
+        // zero integrated time: all-default stats, no NaNs
+        let empty = Accum::default().finalize(100, 0);
+        assert_eq!(empty, FleetStats::default());
+        // a constant tput of exactly 1.0 survives any partition exactly
+        let one = EvalOut { tput: 1.0, paused: false, spares_used: 0, donated: 0.0 };
+        let mut acc = Accum::default();
+        for dt in [0.3, 1.7, 0.125, 4.0] {
+            acc.sample(one, dt);
+        }
+        assert_eq!(acc.finalize(64, 0).mean_throughput, 1.0);
     }
 
     #[test]
@@ -476,40 +721,46 @@ mod tests {
         let model = FailureModel::llama3().scaled(40.0);
         let mut rng = Rng::new(23);
         let trace = Trace::generate(&topo, &model, 24.0 * 20.0, &mut rng);
-        for strategy in [FtStrategy::DpDrop, FtStrategy::Ntp] {
+        for mode in [StepMode::Grid(2.0), StepMode::Exact] {
+            for strategy in [FtStrategy::DpDrop, FtStrategy::Ntp] {
+                let fs = FleetSim {
+                    topo: &topo,
+                    table: &table,
+                    domains_per_replica: cfg.pp,
+                    policy: strategy.policy(),
+                    spares: None,
+                    packed: true,
+                    blast: BlastRadius::Single,
+                    transition: None,
+                };
+                assert_eq!(
+                    fs.run(&trace, mode),
+                    fs.run_replay_per_step(&trace, mode),
+                    "{mode:?}"
+                );
+            }
             let fs = FleetSim {
                 topo: &topo,
                 table: &table,
                 domains_per_replica: cfg.pp,
-                policy: strategy.policy(),
-                spares: None,
+                policy: FtStrategy::Ntp.policy(),
+                spares: Some(SparePolicy { spare_domains: 4, min_tp: 28 }),
                 packed: true,
-                blast: BlastRadius::Single,
+                blast: BlastRadius::Node,
                 transition: None,
             };
-            assert_eq!(fs.run(&trace, 2.0), fs.run_replay_per_step(&trace, 2.0));
+            assert_eq!(fs.run(&trace, mode), fs.run_replay_per_step(&trace, mode), "{mode:?}");
+            // ... and with transition costs switched on, both sweep
+            // paths must still agree exactly (downtime included).
+            let fs_t = FleetSim {
+                transition: Some(crate::policy::TransitionCosts::model(&sim, &cfg)),
+                ..fs
+            };
+            let a = fs_t.run(&trace, mode);
+            let b = fs_t.run_replay_per_step(&trace, mode);
+            assert_eq!(a, b, "{mode:?}");
+            assert!(a.transitions > 0 && a.downtime_frac > 0.0, "{mode:?}");
         }
-        let fs = FleetSim {
-            topo: &topo,
-            table: &table,
-            domains_per_replica: cfg.pp,
-            policy: FtStrategy::Ntp.policy(),
-            spares: Some(SparePolicy { spare_domains: 4, min_tp: 28 }),
-            packed: true,
-            blast: BlastRadius::Node,
-            transition: None,
-        };
-        assert_eq!(fs.run(&trace, 2.0), fs.run_replay_per_step(&trace, 2.0));
-        // ... and with transition costs switched on, both sweep paths
-        // must still agree exactly (downtime included).
-        let fs_t = FleetSim {
-            transition: Some(crate::policy::TransitionCosts::model(&sim, &cfg)),
-            ..fs
-        };
-        let a = fs_t.run(&trace, 2.0);
-        let b = fs_t.run_replay_per_step(&trace, 2.0);
-        assert_eq!(a, b);
-        assert!(a.transitions > 0 && a.downtime_frac > 0.0);
     }
 
     #[test]
@@ -568,7 +819,9 @@ mod tests {
         let model = FailureModel::llama3().scaled(60.0);
         let mut rng = Rng::new(9);
         let trace = Trace::generate(&topo, &model, 24.0 * 20.0, &mut rng);
-        assert_eq!(fs.run(&trace, 2.0), fs.run_replay_per_step(&trace, 2.0));
+        for mode in [StepMode::Grid(2.0), StepMode::Exact] {
+            assert_eq!(fs.run(&trace, mode), fs.run_replay_per_step(&trace, mode), "{mode:?}");
+        }
     }
 
     #[test]

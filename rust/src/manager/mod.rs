@@ -9,7 +9,7 @@ pub mod packing;
 pub mod spares;
 pub mod sweep;
 
-pub use fleet::{FleetSim, FleetStats, StrategyTable};
+pub use fleet::{FleetSim, FleetStats, StepMode, StrategyTable};
 pub use packing::{pack_domains, packed_replica_tp, Assignment};
 pub use spares::{SparePolicy, SpareOutcome};
-pub use sweep::{MultiPolicySim, ResponseMemo, SnapshotSig};
+pub use sweep::{MemoStats, MultiPolicySim, ResponseMemo, SnapshotSig};

@@ -13,9 +13,15 @@
 //! * [`MultiPolicySim`] — one [`FleetReplayer`] pass per trace; every
 //!   unique snapshot version is evaluated for *all* requested policies,
 //!   with one accumulator per policy. Transition charges and
-//!   integration reuse the exact `FleetSim` machinery, so the
-//!   per-policy [`FleetStats`] are bit-identical to P separate
-//!   `FleetSim::run` calls (`rust/tests/multi_policy_sweep.rs`).
+//!   integration reuse the exact `FleetSim` machinery — including the
+//!   [`StepMode`] dispatch, so exact event-boundary integration and the
+//!   legacy grid both come out bit-identical to P separate
+//!   `FleetSim::run` calls (`rust/tests/multi_policy_sweep.rs`). Under
+//!   [`StepMode::Exact`] the sweep is bounded by the trace's *event
+//!   count*, not a sample grid, and
+//!   [`MultiPolicySim::run_trials_par`] fans Monte-Carlo batches over
+//!   `util::par` (per-thread memos, merged [`MemoStats`], bit-identical
+//!   to one thread).
 //! * [`SnapshotSig`] — failures are rare, so a snapshot is keyed by the
 //!   sorted multiset of *damaged* domains only, as `(deficit, count)`
 //!   pairs with inline storage (no heap below
@@ -37,13 +43,14 @@
 //!   cost model, so repeated change patterns skip the prev/next scan
 //!   (hit counters in `fleet --json` and `perf_hotpath`).
 
-use super::fleet::{Accum, FleetStats, StrategyTable};
+use super::fleet::{grid_step, Accum, FleetStats, StepMode, StrategyTable};
 use super::spares::SparePolicy;
 use crate::cluster::Topology;
 use crate::failure::{BlastRadius, FleetReplayer, Trace};
 use crate::policy::{
     changed_domains, degraded_domains, EvalOut, EvalScratch, FtPolicy, PolicyCtx, TransitionCosts,
 };
+use crate::util::par;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 
@@ -370,6 +377,18 @@ impl ResponseMemo {
         cost
     }
 
+    /// Counter snapshot for reporting and for merging across the
+    /// per-thread memos of [`MultiPolicySim::run_trials_par`].
+    pub fn stats(&self) -> MemoStats {
+        MemoStats {
+            hits: self.hits,
+            misses: self.misses,
+            transition_hits: self.thits,
+            transition_misses: self.tmisses,
+            unique_entries: self.map.len(),
+        }
+    }
+
     fn bind(&mut self, expect: MemoCtx, policies: &[&dyn FtPolicy]) {
         assert_eq!(
             self.n_policies,
@@ -398,6 +417,55 @@ impl ResponseMemo {
     }
 }
 
+/// Mergeable snapshot of a [`ResponseMemo`]'s hit/miss counters.
+/// [`MultiPolicySim::run_trials_par`] gives each worker thread its own
+/// memo and merges their counters into one fleet-wide view (the
+/// `memo_hit_rate` / `transition_memo_hit_rate` the `fleet --json`
+/// report carries for parallel Monte-Carlo runs).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemoStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub transition_hits: u64,
+    pub transition_misses: u64,
+    /// Unique snapshot keys cached. Merged across per-thread memos this
+    /// *sums* — threads do not share entries, so a signature cached by
+    /// two workers counts twice (duplicated work is exactly what the
+    /// number then shows).
+    pub unique_entries: usize,
+}
+
+impl MemoStats {
+    /// Accumulate another memo's counters into this one.
+    pub fn merge(&mut self, other: &MemoStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.transition_hits += other.transition_hits;
+        self.transition_misses += other.transition_misses;
+        self.unique_entries += other.unique_entries;
+    }
+
+    /// Fraction of snapshot lookups served from cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of transition charges served from the count-keyed memo.
+    pub fn transition_hit_rate(&self) -> f64 {
+        let total = self.transition_hits + self.transition_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.transition_hits as f64 / total as f64
+        }
+    }
+}
+
 /// One-replay-per-trace sweep over many fault-tolerance policies: the
 /// shared-sweep counterpart of [`super::FleetSim`] (which remains the
 /// per-policy reference implementation). Field semantics are identical
@@ -422,9 +490,9 @@ impl<'a> MultiPolicySim<'a> {
 
     /// Sweep one trace with a private memo. Returns one [`FleetStats`]
     /// per policy, bit-identical to running [`super::FleetSim::run`]
-    /// once per policy.
-    pub fn run(&self, trace: &Trace, step_hours: f64) -> Vec<FleetStats> {
-        self.run_with(trace, step_hours, &mut self.memo())
+    /// once per policy under the same [`StepMode`].
+    pub fn run(&self, trace: &Trace, mode: StepMode) -> Vec<FleetStats> {
+        self.run_with(trace, mode, &mut self.memo())
     }
 
     /// Sweep one trace, sharing `memo` with other sweeps of the same
@@ -433,11 +501,11 @@ impl<'a> MultiPolicySim<'a> {
     pub fn run_with(
         &self,
         trace: &Trace,
-        step_hours: f64,
+        mode: StepMode,
         memo: &mut ResponseMemo,
     ) -> Vec<FleetStats> {
         let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
-        self.sweep(&mut rep, step_hours, memo)
+        self.sweep(&mut rep, mode, memo)
     }
 
     /// Sweep many traces (Monte-Carlo trials) reusing one replayer
@@ -446,7 +514,7 @@ impl<'a> MultiPolicySim<'a> {
     pub fn run_trials(
         &self,
         traces: &[Trace],
-        step_hours: f64,
+        mode: StepMode,
         memo: &mut ResponseMemo,
     ) -> Vec<Vec<FleetStats>> {
         let mut out = Vec::with_capacity(traces.len());
@@ -454,32 +522,127 @@ impl<'a> MultiPolicySim<'a> {
             return out;
         };
         let mut rep = FleetReplayer::new(first, self.topo, self.blast);
-        out.push(self.sweep(&mut rep, step_hours, memo));
+        out.push(self.sweep(&mut rep, mode, memo));
         for trace in &traces[1..] {
             rep.reset(trace);
-            out.push(self.sweep(&mut rep, step_hours, memo));
+            out.push(self.sweep(&mut rep, mode, memo));
         }
         out
     }
 
-    /// Core sweep: mirrors `FleetSim::run` step-for-step (same sample
-    /// grid, same version-gated evaluation, same transition charges) so
-    /// the integrated stats are bit-identical per policy.
+    /// Parallel Monte-Carlo: fan [`MultiPolicySim::run_trials`] batches
+    /// across up to `threads` scoped threads (`util::par`, no external
+    /// deps). Traces are split into contiguous batches; each worker
+    /// sweeps its batch with its own [`FleetReplayer`] and its own
+    /// [`ResponseMemo`], and the per-trace, per-policy stats come back
+    /// in input order with the per-thread memo counters merged.
+    ///
+    /// **Determinism contract:** the result is bit-identical to
+    /// `run_trials` with one thread (and to any other thread count).
+    /// Each trace's integration touches only that trace plus the sim
+    /// configuration, and memoization is exact — a cached response or
+    /// transition charge is the identical `f64`s a recompute would
+    /// produce (`rust/tests/multi_policy_sweep.rs`) — so how traces are
+    /// batched across workers (or across per-trial forked PRNG streams
+    /// at generation time) cannot change any stat. Only the merged
+    /// [`MemoStats`] depend on the batching: per-thread memos cannot
+    /// share hits across batches.
+    pub fn run_trials_par(
+        &self,
+        traces: &[Trace],
+        mode: StepMode,
+        threads: usize,
+    ) -> (Vec<Vec<FleetStats>>, MemoStats) {
+        let t = threads.max(1).min(traces.len().max(1));
+        if t <= 1 {
+            let mut memo = self.memo();
+            let stats = self.run_trials(traces, mode, &mut memo);
+            return (stats, memo.stats());
+        }
+        let chunk = traces.len().div_ceil(t);
+        let parts = par::par_map(t, t, |ti| {
+            let lo = (ti * chunk).min(traces.len());
+            let hi = ((ti + 1) * chunk).min(traces.len());
+            let mut memo = self.memo();
+            let stats = self.run_trials(&traces[lo..hi], mode, &mut memo);
+            (stats, memo.stats())
+        });
+        let mut all = Vec::with_capacity(traces.len());
+        let mut merged = MemoStats::default();
+        for (stats, ms) in parts {
+            all.extend(stats);
+            merged.merge(&ms);
+        }
+        (all, merged)
+    }
+
+    /// Core sweep dispatch: mirrors `FleetSim::run` operation-for-
+    /// operation in both modes, so the integrated stats are
+    /// bit-identical per policy.
     fn sweep(
+        &self,
+        rep: &mut FleetReplayer<'_>,
+        mode: StepMode,
+        memo: &mut ResponseMemo,
+    ) -> Vec<FleetStats> {
+        memo.bind(self.memo_ctx(), self.policies);
+        match mode {
+            StepMode::Exact => self.sweep_exact(rep, memo),
+            StepMode::Grid(step_hours) => self.sweep_grid(rep, step_hours, memo),
+        }
+    }
+
+    /// Exact event-boundary sweep: one evaluation per actual health
+    /// change, duration-weighted, every change charged at its event
+    /// time — `FleetSim::run(.., StepMode::Exact)` for all policies in
+    /// one replay.
+    fn sweep_exact(&self, rep: &mut FleetReplayer<'_>, memo: &mut ResponseMemo) -> Vec<FleetStats> {
+        let n_policies = self.policies.len();
+        let horizon = rep.horizon_hours();
+        let mut accs = vec![Accum::default(); n_policies];
+        if horizon <= 0.0 {
+            return self.finalize_all(&accs);
+        }
+        let mut outs: Vec<EvalOut> = vec![EvalOut::default(); n_policies];
+        let mut prev_counts: Vec<usize> = rep.advance(0.0).domain_healthy_counts().to_vec();
+        self.evaluate_all(&prev_counts, memo, &mut outs);
+        let mut seg_start = 0.0;
+        while let Some(t) = rep.next_change_hours().filter(|&t| t < horizon) {
+            rep.advance(t);
+            let counts = rep.fleet().domain_healthy_counts();
+            if counts != &prev_counts[..] {
+                for (acc, &out) in accs.iter_mut().zip(&outs) {
+                    acc.sample(out, t - seg_start);
+                }
+                self.charge_all(memo, &mut accs, &prev_counts, counts);
+                prev_counts.clear();
+                prev_counts.extend_from_slice(counts);
+                self.evaluate_all(&prev_counts, memo, &mut outs);
+                seg_start = t;
+            }
+        }
+        for (acc, &out) in accs.iter_mut().zip(&outs) {
+            acc.sample(out, horizon - seg_start);
+        }
+        self.finalize_all(&accs)
+    }
+
+    /// Legacy fixed-grid sweep (clamped final interval), version-gated
+    /// evaluation identical to `FleetSim::run(.., StepMode::Grid(..))`.
+    fn sweep_grid(
         &self,
         rep: &mut FleetReplayer<'_>,
         step_hours: f64,
         memo: &mut ResponseMemo,
     ) -> Vec<FleetStats> {
         let n_policies = self.policies.len();
-        memo.bind(self.memo_ctx(), self.policies);
-        let n_steps = (rep.horizon_hours() / step_hours).ceil() as usize;
         let mut accs = vec![Accum::default(); n_policies];
         let mut outs: Vec<EvalOut> = vec![EvalOut::default(); n_policies];
         let mut last_version: Option<u64> = None;
         let mut prev_counts: Vec<usize> = Vec::new();
-        for step in 0..n_steps {
-            let t = step as f64 * step_hours;
+        let horizon = rep.horizon_hours();
+        let mut step = 0usize;
+        while let Some((t, dt)) = grid_step(step, step_hours, horizon) {
             let fleet = rep.advance(t);
             let version = fleet.version();
             if last_version != Some(version) {
@@ -488,39 +651,53 @@ impl<'a> MultiPolicySim<'a> {
                     prev_counts.clear();
                     prev_counts.extend_from_slice(counts);
                 } else if counts != &prev_counts[..] {
-                    let ctx = self.ctx(self.live_spares_in(counts));
-                    let changed = changed_domains(&prev_counts, counts) as u32;
-                    let degraded = degraded_domains(&prev_counts, counts) as u32;
-                    let live = match ctx.spares {
-                        Some(pool) => pool.spare_domains as u32,
-                        None => u32::MAX,
-                    };
-                    for (i, (acc, &policy)) in
-                        accs.iter_mut().zip(self.policies).enumerate()
-                    {
-                        let key =
-                            (i as u32, changed, degraded, live, self.topo.n_gpus as u64);
-                        let cost =
-                            memo.transition_cost(key, policy, &ctx, &prev_counts, counts);
-                        acc.charge_cost(cost);
-                    }
+                    self.charge_all(memo, &mut accs, &prev_counts, counts);
                     prev_counts.clear();
                     prev_counts.extend_from_slice(counts);
                 }
-                self.evaluate_all(counts, memo, &mut outs);
+                self.evaluate_all(&prev_counts, memo, &mut outs);
                 last_version = Some(version);
             }
             for (acc, &out) in accs.iter_mut().zip(&outs) {
-                acc.sample(out);
+                acc.sample(out, dt);
             }
+            step += 1;
         }
+        self.finalize_all(&accs)
+    }
+
+    /// Charge every policy's transition cost for one observed health
+    /// change, through the count-keyed memo where sound — verbatim what
+    /// `FleetSim` charges via `Accum::charge` (same ctx derivation from
+    /// the live-spare-adjusted pool of `next`), so memoized and direct
+    /// paths add identical `f64`s.
+    fn charge_all(
+        &self,
+        memo: &mut ResponseMemo,
+        accs: &mut [Accum],
+        prev: &[usize],
+        next: &[usize],
+    ) {
+        let ctx = self.ctx(self.live_spares_in(next));
+        let changed = changed_domains(prev, next) as u32;
+        let degraded = degraded_domains(prev, next) as u32;
+        let live = match ctx.spares {
+            Some(pool) => pool.spare_domains as u32,
+            None => u32::MAX,
+        };
+        for (i, (acc, &policy)) in accs.iter_mut().zip(self.policies).enumerate() {
+            let key = (i as u32, changed, degraded, live, self.topo.n_gpus as u64);
+            let cost = memo.transition_cost(key, policy, &ctx, prev, next);
+            acc.charge_cost(cost);
+        }
+    }
+
+    fn finalize_all(&self, accs: &[Accum]) -> Vec<FleetStats> {
         let spare_gpus = self
             .spares
             .map(|p| p.spare_domains * self.topo.domain_size)
             .unwrap_or(0);
-        accs.iter()
-            .map(|acc| acc.finalize(n_steps, step_hours, self.topo.n_gpus, spare_gpus))
-            .collect()
+        accs.iter().map(|acc| acc.finalize(self.topo.n_gpus, spare_gpus)).collect()
     }
 
     /// Evaluate one snapshot for every policy, through the memo when

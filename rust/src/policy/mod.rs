@@ -207,9 +207,12 @@ pub trait FtPolicy: Send + Sync {
 
     /// GPU-seconds of downtime charged when the fleet's per-domain
     /// health changes from `prev` to `next` (full fleet, spares
-    /// included). Must return `0.0` when `ctx.transition` is `None` —
-    /// that is what makes the legacy ports bit-identical to the
-    /// pre-policy-layer paths.
+    /// included). Under exact event-boundary integration
+    /// ([`crate::manager::StepMode::Exact`], the default) this is
+    /// charged once per actual change boundary; grid sweeps collapse
+    /// the events between two samples into one net change. Must return
+    /// `0.0` when `ctx.transition` is `None` — that is what makes the
+    /// legacy ports bit-identical to the pre-policy-layer paths.
     fn transition_cost(&self, _ctx: &PolicyCtx, _prev: &[usize], _next: &[usize]) -> f64 {
         0.0
     }
@@ -277,8 +280,19 @@ impl TransitionCosts {
     /// set to the trace's *observed* event rate — what `CKPT-ADAPTIVE`
     /// feeds the Young/Daly optimum instead of assuming an interval.
     pub fn with_observed_rate(self, trace: &crate::failure::Trace) -> TransitionCosts {
-        let rate = if trace.horizon_hours > 0.0 {
-            trace.events.len() as f64 / trace.horizon_hours
+        self.with_observed_rate_over(std::slice::from_ref(trace))
+    }
+
+    /// [`TransitionCosts::with_observed_rate`] pooled over a
+    /// Monte-Carlo batch: total events over total horizon hours. A
+    /// shared sweep over many trials needs ONE cost model (the
+    /// response memo fingerprints it), so the rate is estimated from
+    /// the whole batch instead of any single trace; for a one-trace
+    /// batch this is exactly `with_observed_rate`.
+    pub fn with_observed_rate_over(self, traces: &[crate::failure::Trace]) -> TransitionCosts {
+        let total_hours: f64 = traces.iter().map(|t| t.horizon_hours).sum();
+        let rate = if total_hours > 0.0 {
+            traces.iter().map(|t| t.events.len()).sum::<usize>() as f64 / total_hours
         } else {
             0.0
         };
@@ -386,6 +400,14 @@ mod tests {
         assert_eq!(t.ckpt_write_secs, base.ckpt_write_secs);
         let empty = Trace { horizon_hours: 0.0, events: vec![] };
         assert_eq!(base.with_observed_rate(&empty).failure_rate_per_hour, 0.0);
+        // pooled over a batch: total events / total hours
+        let other = Trace { horizon_hours: 12.0, events: vec![mk(5), mk(6), mk(7)] };
+        let pooled = base.with_observed_rate_over(&[
+            Trace { horizon_hours: 48.0, events: vec![mk(0), mk(1), mk(2)] },
+            other,
+        ]);
+        assert!((pooled.failure_rate_per_hour - 6.0 / 60.0).abs() < 1e-15);
+        assert_eq!(base.with_observed_rate_over(&[]).failure_rate_per_hour, 0.0);
     }
 
     #[test]

@@ -20,6 +20,53 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Whether `--name` appears in the bench binary's argv (the
+/// `harness = false` mains parse their own flags; cargo forwards
+/// everything after `--`).
+pub fn arg_flag(name: &str) -> bool {
+    std::env::args().any(|a| a == name)
+}
+
+/// Value of `--name value` / `--name=value` from the bench binary's
+/// argv, if present.
+pub fn arg_value(name: &str) -> Option<String> {
+    let eq = format!("{name}=");
+    let mut it = std::env::args();
+    while let Some(a) = it.next() {
+        if a == name {
+            return it.next();
+        }
+        if let Some(rest) = a.strip_prefix(&eq) {
+            return Some(rest.to_string());
+        }
+    }
+    None
+}
+
+/// The shared `--exact` / `--grid-hours H` bench-argv convention
+/// (fig6/fig7 and kin): exact event-boundary integration by default,
+/// `--grid-hours H` opts back into the legacy fixed grid, passing both
+/// is an error — mirroring the `fleet` CLI's flags. Lives here (not on
+/// [`crate::manager::StepMode`] itself) because it reads process-global
+/// argv and panics on malformed flags — bench-main behavior, not
+/// simulation-core behavior.
+pub fn step_mode_from_args() -> crate::manager::StepMode {
+    use crate::manager::StepMode;
+    let grid = arg_value("--grid-hours");
+    assert!(
+        !(arg_flag("--exact") && grid.is_some()),
+        "--exact (the default) conflicts with --grid-hours"
+    );
+    match grid {
+        Some(v) => {
+            let h: f64 = v.parse().expect("--grid-hours expects hours");
+            assert!(h > 0.0, "--grid-hours must be positive");
+            StepMode::Grid(h)
+        }
+        None => StepMode::Exact,
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct BenchConfig {
     pub warmup_iters: usize,

@@ -1,0 +1,288 @@
+//! Exact event-boundary integration suite (the PR 5 tentpole's
+//! contract):
+//!
+//! * **Refinement invariance** — [`StepMode::Exact`] stats are a pure
+//!   function of the trace: merging ANY extra sample times into the
+//!   boundary stream (`FleetSim::run_exact_with_refinement`) leaves
+//!   every [`FleetStats`] field bit-identical, for every registered
+//!   policy. (A per-sample-mean integrator would fail this instantly —
+//!   added samples would reweight the average.)
+//! * **Grid convergence** — the legacy fixed grid converges to the
+//!   exact stats as `step_hours → 0`, for every registered policy, and
+//!   never observes more transitions than actually happened.
+//! * **Partial-last-step regression** — the former
+//!   `n_steps = ceil(horizon/step)` loop integrated a full step past
+//!   `trace.horizon_hours`; the clamped grid weights the final partial
+//!   interval by exactly its duration (hand-computed oracle).
+//! * **Per-event charges** — exact mode charges each health-change
+//!   boundary individually, where the grid collapses the events
+//!   between two samples into one net charge.
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{BlastRadius, FailureEvent, FailureModel, Trace};
+use ntp::manager::{FleetSim, MultiPolicySim, SparePolicy, StepMode, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, TransitionCosts};
+use ntp::power::RackDesign;
+use ntp::sim::{FtStrategy, IterationModel, SimParams};
+use ntp::util::prng::Rng;
+
+const DOMAIN_SIZE: usize = 32;
+const PER_REPLICA: usize = 4;
+
+fn setup() -> (IterationModel, ParallelConfig, StrategyTable) {
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 2 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: DOMAIN_SIZE, pp: PER_REPLICA, dp: 16, microbatch: 1 };
+    let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    (sim, cfg, table)
+}
+
+#[test]
+fn exact_mode_is_invariant_to_any_refinement() {
+    let (sim, cfg, table) = setup();
+    let job_domains = 16usize;
+    let spare_domains = 4usize;
+    let topo = Topology::of((job_domains + spare_domains) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(30.0);
+    let mut rng = Rng::new(0xE7AC7);
+    let trace = Trace::generate(&topo, &model, 24.0 * 12.0, &mut rng);
+    assert!(!trace.events.is_empty());
+    let horizon = trace.horizon_hours;
+    let transition = Some(TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace));
+
+    // Three refinement families: a dense uniform grid, the event
+    // edges themselves plus off-boundary midpoints, and random times.
+    let uniform: Vec<f64> = (1..2000).map(|i| i as f64 * (horizon / 2000.0)).collect();
+    let mut edges: Vec<f64> = trace
+        .events
+        .iter()
+        .flat_map(|e| [e.at_hours, e.recover_at_hours, e.at_hours + 0.1237])
+        .filter(|&t| t > 0.0 && t < horizon)
+        .collect();
+    edges.sort_by(f64::total_cmp);
+    let mut random: Vec<f64> = (0..500).map(|_| rng.f64() * horizon).collect();
+    random.sort_by(f64::total_cmp);
+
+    for policy in registry::all() {
+        for spares in [None, Some(SparePolicy { spare_domains, min_tp: 28 })] {
+            let fs = FleetSim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: PER_REPLICA,
+                policy,
+                spares,
+                packed: true,
+                blast: BlastRadius::Single,
+                transition,
+            };
+            let base = fs.run(&trace, StepMode::Exact);
+            assert_eq!(base, fs.run_exact_with_refinement(&trace, &[]), "{}", policy.name());
+            for (label, extra) in
+                [("uniform", &uniform), ("edges", &edges), ("random", &random)]
+            {
+                assert_eq!(
+                    base,
+                    fs.run_exact_with_refinement(&trace, extra),
+                    "{} spares {spares:?}: {label} refinement changed the exact stats",
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_converges_to_exact_for_every_policy() {
+    let (sim, cfg, table) = setup();
+    let job_domains = 24usize;
+    let spare_domains = 4usize;
+    let topo = Topology::of((job_domains + spare_domains) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    // Moderate rate so downtime stays far from the 1.0 cap and the
+    // quantization error has real dynamic range.
+    let model = FailureModel::llama3().scaled(5.0);
+    let mut rng = Rng::new(0xC0471);
+    let trace = Trace::generate(&topo, &model, 24.0 * 12.0, &mut rng);
+    assert!(trace.events.len() > 10, "trace too quiet: {}", trace.events.len());
+    let transition = Some(TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace));
+    let policies = registry::all();
+    let msim = MultiPolicySim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: PER_REPLICA,
+        policies: &policies,
+        spares: Some(SparePolicy { spare_domains, min_tp: 28 }),
+        packed: true,
+        blast: BlastRadius::Single,
+        transition,
+    };
+    let exact = msim.run(&trace, StepMode::Exact);
+    let coarse = msim.run(&trace, StepMode::Grid(6.0));
+    let fine = msim.run(&trace, StepMode::Grid(0.25));
+    for (pi, &policy) in policies.iter().enumerate() {
+        let name = policy.name();
+        let err = |g: &ntp::manager::FleetStats| {
+            (g.mean_throughput - exact[pi].mean_throughput).abs()
+        };
+        let (e_coarse, e_fine) = (err(&coarse[pi]), err(&fine[pi]));
+        // Absolute convergence at the fine step, and no blow-up at the
+        // coarse one (quantization error is statistical, so the fine
+        // grid gets a small slack floor rather than strict ordering).
+        assert!(e_fine < 0.02, "{name}: fine-grid tput error {e_fine}");
+        assert!(e_coarse < 0.2, "{name}: coarse-grid tput error {e_coarse}");
+        assert!(
+            e_fine <= e_coarse + 0.01,
+            "{name}: refining the grid made the error worse ({e_coarse} -> {e_fine})"
+        );
+        let d_fine = (fine[pi].downtime_frac - exact[pi].downtime_frac).abs();
+        assert!(d_fine < 0.02, "{name}: fine-grid downtime error {d_fine}");
+        let p_fine = (fine[pi].paused_frac - exact[pi].paused_frac).abs();
+        assert!(p_fine < 0.05, "{name}: fine-grid paused error {p_fine}");
+        // Collapsing events between samples can only *lose* observed
+        // transitions, never invent them.
+        assert!(coarse[pi].transitions <= exact[pi].transitions, "{name}");
+        assert!(fine[pi].transitions <= exact[pi].transitions, "{name}");
+        assert!(exact[pi].transitions > 0, "{name}");
+    }
+}
+
+/// Satellite regression: `n_steps = ceil(horizon/step)` used to
+/// integrate a full step past `trace.horizon_hours`, overweighting
+/// whatever the last sample saw (1/n of the mean instead of the true
+/// `(horizon - t_last)/horizon`). The clamped grid weights every state
+/// by exactly the time it was sampled for — checked against a
+/// hand-computed oracle on a non-divisible horizon.
+#[test]
+fn grid_clamps_the_partial_final_step() {
+    let (_sim, _cfg, table) = setup();
+    let job_domains = 16usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    // Horizon 10h, step 4h: samples at 0, 4, 8 with weights 4, 4, 2.
+    // One failure at t = 7.5 (seen by the t = 8 sample), never
+    // recovering within the horizon.
+    let trace = Trace {
+        horizon_hours: 10.0,
+        events: vec![FailureEvent {
+            at_hours: 7.5,
+            gpu: 0,
+            is_hw: true,
+            recover_at_hours: 100.0,
+        }],
+    };
+    let fs = FleetSim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: PER_REPLICA,
+        policy: FtStrategy::Ntp.policy(),
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition: None,
+    };
+    let mut degraded = vec![DOMAIN_SIZE; job_domains];
+    degraded[0] = DOMAIN_SIZE - 1;
+    let x = fs.evaluate(&degraded).tput;
+    assert!(x < 1.0);
+
+    let grid = fs.run(&trace, StepMode::Grid(4.0));
+    // Same accumulation order as the sweep: healthy 4h + healthy 4h +
+    // degraded 2h, normalized by the 10h of integrated time.
+    let expected_grid = (1.0 * 4.0 + 1.0 * 4.0 + x * 2.0) / 10.0;
+    assert_eq!(grid.mean_throughput, expected_grid);
+    // The old ceil loop would have charged the degraded state 1/3 of
+    // the mean (a full 4h step); the clamp weights it 2h/10h.
+    let old_bias = (1.0 + 1.0 + x) / 3.0;
+    assert!(grid.mean_throughput > old_bias);
+
+    // Exact mode: the failure is weighted from 7.5h, not from the 8h
+    // sample that first saw it.
+    let exact = fs.run(&trace, StepMode::Exact);
+    let expected_exact = (1.0 * 7.5 + x * 2.5) / 10.0;
+    assert_eq!(exact.mean_throughput, expected_exact);
+    assert!(exact.mean_throughput < grid.mean_throughput);
+
+    // All-healthy fleet on a non-divisible horizon: exactly 1.0 in
+    // both modes (constant integrands survive any partition bit-for-bit).
+    let quiet = Trace { horizon_hours: 10.0, events: vec![] };
+    assert_eq!(fs.run(&quiet, StepMode::Grid(3.0)).mean_throughput, 1.0);
+    assert_eq!(fs.run(&quiet, StepMode::Exact).mean_throughput, 1.0);
+    // ... and the per-step reference clamps identically.
+    assert_eq!(grid, fs.run_replay_per_step(&trace, StepMode::Grid(4.0)));
+    assert_eq!(exact, fs.run_replay_per_step(&trace, StepMode::Exact));
+}
+
+#[test]
+fn exact_mode_charges_each_event_at_its_boundary() {
+    let (_sim, _cfg, table) = setup();
+    let job_domains = 16usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    // Two failures in distinct domains, both inside the first 6h grid
+    // step, neither recovering within the horizon.
+    let trace = Trace {
+        horizon_hours: 12.0,
+        events: vec![
+            FailureEvent { at_hours: 1.0, gpu: 0, is_hw: true, recover_at_hours: 50.0 },
+            FailureEvent {
+                at_hours: 2.0,
+                gpu: DOMAIN_SIZE, // first GPU of domain 1
+                is_hw: true,
+                recover_at_hours: 50.0,
+            },
+        ],
+    };
+    let costs = TransitionCosts {
+        restart_secs: 900.0,
+        checkpoint_interval_secs: 3600.0,
+        reshard_secs: 2.0,
+        spare_load_secs: 300.0,
+        ckpt_write_secs: 120.0,
+        power_ramp_secs: 60.0,
+        failure_rate_per_hour: 0.0,
+    };
+    let run = |strategy: FtStrategy, mode: StepMode| {
+        FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policy: strategy.policy(),
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition: Some(costs),
+        }
+        .run(&trace, mode)
+    };
+    // Grid(6h): both events collapse into the t = 6 sample — ONE net
+    // change. Exact: two boundaries, two charges.
+    let grid = run(FtStrategy::DpDrop, StepMode::Grid(6.0));
+    let exact = run(FtStrategy::DpDrop, StepMode::Exact);
+    assert_eq!(grid.transitions, 1);
+    assert_eq!(exact.transitions, 2);
+    // DP-DROP pays a full-job restart per charge, so the exact bill is
+    // twice the collapsed one.
+    assert!(grid.downtime_frac > 0.0);
+    assert!(
+        (exact.downtime_frac - 2.0 * grid.downtime_frac).abs() < 1e-12,
+        "exact {} vs 2x grid {}",
+        exact.downtime_frac,
+        grid.downtime_frac
+    );
+    // NTP's bill scales linearly with the changed-domain count, so
+    // one collapsed charge of 2 domains equals two charges of 1 —
+    // same total, different transition counts.
+    let grid_ntp = run(FtStrategy::Ntp, StepMode::Grid(6.0));
+    let exact_ntp = run(FtStrategy::Ntp, StepMode::Exact);
+    assert_eq!(grid_ntp.transitions, 1);
+    assert_eq!(exact_ntp.transitions, 2);
+    assert!((exact_ntp.downtime_frac - grid_ntp.downtime_frac).abs() < 1e-15);
+}

@@ -5,7 +5,7 @@
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{sample_failed_gpus, scenario::scenario_from_failed, BlastRadius, FailureModel, Trace};
-use ntp::manager::{pack_domains, FleetSim, SparePolicy, StrategyTable};
+use ntp::manager::{pack_domains, FleetSim, SparePolicy, StepMode, StrategyTable};
 use ntp::parallel::ParallelConfig;
 use ntp::power::RackDesign;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
@@ -147,7 +147,7 @@ fn fixed_minibatch_needs_fewer_spares_with_ntp_pw() {
             blast: BlastRadius::Single,
             transition: None,
         };
-        fs.run(&trace, 6.0)
+        fs.run(&trace, StepMode::Exact)
     };
     let drop = run(FtStrategy::DpDrop);
     let pw = run(FtStrategy::NtpPw);

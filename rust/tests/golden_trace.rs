@@ -1,5 +1,6 @@
 //! Golden-trace regression pin: one fixed-seed trace × every registered
-//! policy × transitions on/off × spares on/off, with the integrated
+//! policy × step mode (exact event-boundary + legacy grid) ×
+//! transitions on/off × spares on/off, with the integrated
 //! [`FleetStats`] pinned **bit-exactly** (f64s compared by bit pattern,
 //! serialized as hex) against `tests/golden/fleet_stats_v1.json`.
 //!
@@ -12,6 +13,9 @@
 //! checkout) the test writes it and passes, printing a notice; commit
 //! the file to pin the numbers. After an *intentional* numeric change,
 //! re-bless with `UPDATE_GOLDEN=1 cargo test --test golden_trace`.
+//! Once the file IS committed, CI runs with `GOLDEN_VERIFY=1`, which
+//! turns a missing file into a hard failure instead of a bless — the
+//! verify-only mode that makes the pin bite on every checkout.
 //!
 //! Independent of the file, every entry is cross-checked in-run against
 //! the per-step replay path and the shared multi-policy sweep, so all
@@ -21,7 +25,7 @@
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{BlastRadius, FailureModel, Trace};
-use ntp::manager::{FleetSim, FleetStats, MultiPolicySim, SparePolicy, StrategyTable};
+use ntp::manager::{FleetSim, FleetStats, MultiPolicySim, SparePolicy, StepMode, StrategyTable};
 use ntp::parallel::ParallelConfig;
 use ntp::policy::{registry, TransitionCosts};
 use ntp::power::RackDesign;
@@ -81,53 +85,60 @@ fn golden_trace_pins_fleet_stats_for_every_policy() {
 
     let policies = registry::all();
     let mut entries: Vec<(String, FleetStats)> = Vec::new();
-    for transition in [None, Some(observed)] {
-        for spares in [None, Some(SparePolicy { spare_domains: SPARE_DOMAINS, min_tp: 28 })] {
-            // Cross-check all three integration paths on this config
-            // before pinning anything: shared sweep == event-driven
-            // per-policy run == per-step replay, bit for bit.
-            let msim = MultiPolicySim {
-                topo: &topo,
-                table: &table,
-                domains_per_replica: PER_REPLICA,
-                policies: &policies,
-                spares,
-                packed: true,
-                blast: BlastRadius::Single,
-                transition,
-            };
-            let shared = msim.run(&trace, 2.0);
-            for (i, &policy) in policies.iter().enumerate() {
-                let fs = FleetSim {
+    // Exact event-boundary integration is pinned first (the default
+    // semantics every caller now gets); the legacy 2h grid rides along
+    // so the clamped-final-interval arithmetic is frozen too.
+    for (mode_key, mode) in [("exact", StepMode::Exact), ("grid2h", StepMode::Grid(2.0))] {
+        for transition in [None, Some(observed)] {
+            for spares in
+                [None, Some(SparePolicy { spare_domains: SPARE_DOMAINS, min_tp: 28 })]
+            {
+                // Cross-check all three integration paths on this config
+                // before pinning anything: shared sweep == event-driven
+                // per-policy run == per-step replay, bit for bit.
+                let msim = MultiPolicySim {
                     topo: &topo,
                     table: &table,
                     domains_per_replica: PER_REPLICA,
-                    policy,
+                    policies: &policies,
                     spares,
                     packed: true,
                     blast: BlastRadius::Single,
                     transition,
                 };
-                let stats = fs.run(&trace, 2.0);
-                assert_eq!(
-                    stats,
-                    fs.run_replay_per_step(&trace, 2.0),
-                    "{}: event-driven vs per-step drift on the golden trace",
-                    policy.name()
-                );
-                assert_eq!(
-                    stats,
-                    shared[i],
-                    "{}: shared-sweep drift on the golden trace",
-                    policy.name()
-                );
-                let key = format!(
-                    "{}|spares={}|transitions={}",
-                    policy.name(),
-                    spares.map(|p| p.spare_domains).unwrap_or(0),
-                    transition.is_some()
-                );
-                entries.push((key, stats));
+                let shared = msim.run(&trace, mode);
+                for (i, &policy) in policies.iter().enumerate() {
+                    let fs = FleetSim {
+                        topo: &topo,
+                        table: &table,
+                        domains_per_replica: PER_REPLICA,
+                        policy,
+                        spares,
+                        packed: true,
+                        blast: BlastRadius::Single,
+                        transition,
+                    };
+                    let stats = fs.run(&trace, mode);
+                    assert_eq!(
+                        stats,
+                        fs.run_replay_per_step(&trace, mode),
+                        "{} ({mode_key}): event-driven vs per-step drift on the golden trace",
+                        policy.name()
+                    );
+                    assert_eq!(
+                        stats,
+                        shared[i],
+                        "{} ({mode_key}): shared-sweep drift on the golden trace",
+                        policy.name()
+                    );
+                    let key = format!(
+                        "{}|mode={mode_key}|spares={}|transitions={}",
+                        policy.name(),
+                        spares.map(|p| p.spare_domains).unwrap_or(0),
+                        transition.is_some()
+                    );
+                    entries.push((key, stats));
+                }
             }
         }
     }
@@ -139,6 +150,21 @@ fn golden_trace_pins_fleet_stats_for_every_policy() {
             .collect(),
     );
     let rebless = std::env::var("UPDATE_GOLDEN").is_ok();
+    // Verify-only mode (CI sets GOLDEN_VERIFY=1 once the golden file is
+    // committed): a missing file is a failure, never a silent bless.
+    let verify_only = std::env::var("GOLDEN_VERIFY").map(|v| !v.is_empty()).unwrap_or(false);
+    if verify_only {
+        assert!(
+            !rebless,
+            "GOLDEN_VERIFY and UPDATE_GOLDEN are mutually exclusive \
+             (re-bless locally, then commit the diff)"
+        );
+        assert!(
+            std::path::Path::new(GOLDEN_PATH).exists(),
+            "GOLDEN_VERIFY=1 but {GOLDEN_PATH} is missing — the golden pin must be \
+             committed before the verify-only CI mode is enabled"
+        );
+    }
     match std::fs::read_to_string(GOLDEN_PATH) {
         Ok(text) if !rebless => {
             let want = Value::parse(&text)

@@ -21,7 +21,7 @@ use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{BlastRadius, FailureModel, Trace};
 use ntp::manager::{
-    FleetSim, FleetStats, MultiPolicySim, ResponseMemo, SparePolicy, StrategyTable,
+    FleetSim, FleetStats, MultiPolicySim, ResponseMemo, SparePolicy, StepMode, StrategyTable,
 };
 use ntp::parallel::ParallelConfig;
 use ntp::policy::{registry, EvalScratch, PolicyCtx, TransitionCosts};
@@ -97,6 +97,11 @@ fn shared_sweep_bit_identical_to_per_policy_runs() {
         // (Young/Daly interval + steady-state write overhead), so its
         // memoized responses and transition charges are exercised too.
         let observed = TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace);
+        // Exact event-boundary integration and the legacy grid must
+        // both come out bit-identical to the per-policy reference;
+        // alternating per case keeps the property-run cost flat while
+        // both modes appear across the seeds.
+        let mode = [StepMode::Grid(2.0), StepMode::Exact][rng.index(2)];
         for packed in [true, false] {
             for transition in [None, Some(observed)] {
                 let msim = MultiPolicySim {
@@ -109,7 +114,7 @@ fn shared_sweep_bit_identical_to_per_policy_runs() {
                     blast,
                     transition,
                 };
-                let shared = msim.run(&trace, 2.0);
+                let shared = msim.run(&trace, mode);
                 for (i, &policy) in policies.iter().enumerate() {
                     let fs = FleetSim {
                         topo: &topo,
@@ -121,11 +126,11 @@ fn shared_sweep_bit_identical_to_per_policy_runs() {
                         blast,
                         transition,
                     };
-                    let reference = fs.run(&trace, 2.0);
+                    let reference = fs.run(&trace, mode);
                     if shared[i] != reference {
                         return Err(format!(
-                            "policy {} packed {packed} spares {spares:?} transition \
-                             {:?}: shared {:?} != reference {reference:?}",
+                            "policy {} mode {mode:?} packed {packed} spares {spares:?} \
+                             transition {:?}: shared {:?} != reference {reference:?}",
                             policy.name(),
                             transition.is_some(),
                             shared[i]
@@ -181,9 +186,20 @@ fn memo_shared_across_trials_and_sweep_points_is_sound() {
                 failure_rate_per_hour: 0.8,
             }),
         };
-        with_shared.extend(msim.run_trials(&traces, 1.5, &mut shared_memo));
+        with_shared.extend(msim.run_trials(&traces, StepMode::Exact, &mut shared_memo));
         for trace in &traces {
-            with_fresh.push(msim.run(trace, 1.5));
+            with_fresh.push(msim.run(trace, StepMode::Exact));
+        }
+        // ... and the parallel fan-out (per-thread memos) must be
+        // bit-identical to all of the above, for any worker count.
+        for threads in [1usize, 2, 5] {
+            let (par_stats, memo_stats) = msim.run_trials_par(&traces, StepMode::Exact, threads);
+            assert_eq!(
+                par_stats,
+                &with_fresh[with_fresh.len() - traces.len()..],
+                "run_trials_par({threads}) diverged at spares={spare_domains}"
+            );
+            assert!(memo_stats.hits + memo_stats.misses > 0);
         }
     }
     assert_eq!(with_shared, with_fresh);
@@ -226,9 +242,9 @@ fn transition_memo_charges_are_bit_identical() {
             transition,
         };
         let mut memo = msim.memo();
-        let cold = msim.run_with(&trace, 2.0, &mut memo);
+        let cold = msim.run_with(&trace, StepMode::Exact, &mut memo);
         let cold_hits = memo.transition_hits();
-        let warm = msim.run_with(&trace, 2.0, &mut memo);
+        let warm = msim.run_with(&trace, StepMode::Exact, &mut memo);
         assert_eq!(cold, warm, "a fully warm transition memo changed the stats");
         assert!(
             memo.transition_misses() > 0,
@@ -249,7 +265,7 @@ fn transition_memo_charges_are_bit_identical() {
                 blast: BlastRadius::Single,
                 transition,
             }
-            .run(&trace, 2.0);
+            .run(&trace, StepMode::Exact);
             assert_eq!(
                 cold[i],
                 reference,

@@ -7,7 +7,7 @@
 use ntp::cluster::{GpuState, Topology};
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{BlastRadius, FailureModel, FleetReplayer, Trace};
-use ntp::manager::{FleetSim, SparePolicy, StrategyTable};
+use ntp::manager::{FleetSim, SparePolicy, StepMode, StrategyTable};
 use ntp::parallel::ParallelConfig;
 use ntp::policy::{registry, TransitionCosts};
 use ntp::power::RackDesign;
@@ -145,35 +145,46 @@ fn fleet_stats_bit_identical_for_every_policy_and_spares() {
     let model = FailureModel::llama3().scaled(35.0);
     let mut rng = Rng::new(4);
     let trace = Trace::generate(&topo, &model, 24.0 * 25.0, &mut rng);
+    // The exact-mode per-step reference is O(boundaries × events) —
+    // quadratic in the event count — so its leg runs a shorter trace
+    // to keep the 72-combination sweep debug-friendly.
+    let trace_short = Trace::generate(&topo, &model, 24.0 * 7.0, &mut rng);
 
     // Every registered policy (legacy ports and the new ones), with and
-    // without modeled transition costs: the event-driven sweep and the
-    // per-step replay must produce bit-identical FleetStats, downtime
-    // accounting included.
-    for policy in registry::all() {
-        for spares in [None, Some(SparePolicy { spare_domains: 6, min_tp: 28 })] {
-            for blast in [BlastRadius::Single, BlastRadius::Gpus(2)] {
-                for transition in [None, Some(TransitionCosts::model(&sim, &cfg))] {
-                    let fs = FleetSim {
-                        topo: &topo,
-                        table: &table,
-                        domains_per_replica: cfg.pp,
-                        policy,
-                        spares,
-                        packed: true,
-                        blast,
-                        transition,
-                    };
-                    let fast = fs.run(&trace, 1.5);
-                    let slow = fs.run_replay_per_step(&trace, 1.5);
-                    assert_eq!(
-                        fast,
-                        slow,
-                        "policy {} spares {spares:?} blast {blast:?} transition {transition:?}",
-                        policy.name()
-                    );
-                    if transition.is_none() {
-                        assert_eq!(fast.downtime_frac, 0.0, "{}", policy.name());
+    // without modeled transition costs, in BOTH step modes: the
+    // event-driven sweep and the per-step replay must produce
+    // bit-identical FleetStats, downtime accounting included. In exact
+    // mode the per-step reference walks the trace's sorted
+    // arrival/recovery boundaries and rebuilds the fleet from scratch
+    // at each, so the event cursor + lazy recovery heap is checked
+    // against straight-line replay_to on the exact timeline too.
+    for (mode, trace) in [(StepMode::Grid(1.5), &trace), (StepMode::Exact, &trace_short)] {
+        for policy in registry::all() {
+            for spares in [None, Some(SparePolicy { spare_domains: 6, min_tp: 28 })] {
+                for blast in [BlastRadius::Single, BlastRadius::Gpus(2)] {
+                    for transition in [None, Some(TransitionCosts::model(&sim, &cfg))] {
+                        let fs = FleetSim {
+                            topo: &topo,
+                            table: &table,
+                            domains_per_replica: cfg.pp,
+                            policy,
+                            spares,
+                            packed: true,
+                            blast,
+                            transition,
+                        };
+                        let fast = fs.run(trace, mode);
+                        let slow = fs.run_replay_per_step(trace, mode);
+                        assert_eq!(
+                            fast,
+                            slow,
+                            "mode {mode:?} policy {} spares {spares:?} blast {blast:?} \
+                             transition {transition:?}",
+                            policy.name()
+                        );
+                        if transition.is_none() {
+                            assert_eq!(fast.downtime_frac, 0.0, "{}", policy.name());
+                        }
                     }
                 }
             }
