@@ -10,7 +10,11 @@
 #   make bench-quick  — parallel-Monte-Carlo-only smoke: run_trials_par
 #                       at 100K scale, asserting N-thread results are
 #                       bit-identical to 1 thread (writes
-#                       BENCH_perf_hotpath_trials.json)
+#                       BENCH_perf_hotpath_trials.json), plus the
+#                       scenario smoke: a correlated + straggler quick
+#                       sweep asserting generator throughput and
+#                       1-vs-N-thread bit-identity (writes
+#                       BENCH_scenarios_quick.json)
 
 CARGO    ?= cargo
 MANIFEST := rust/Cargo.toml
@@ -40,3 +44,4 @@ bench-perf:
 
 bench-quick:
 	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick --trials-only
+	$(CARGO) bench --bench fig12_scenarios --manifest-path $(MANIFEST) -- --quick

@@ -1,0 +1,338 @@
+//! Fig. 12 (extension): scenario diversity over failure traces —
+//! correlated rack/switch blasts, degraded-but-alive stragglers and
+//! silent data corruption, each driven end-to-end through the shared
+//! multi-policy sweep.
+//!
+//! Pins three headline behaviors of the scenario engine:
+//!
+//! * correlated blasts amplify DP-DROP's capacity loss strictly more
+//!   than NTP's — a whole-node/-domain outage costs replica dropping a
+//!   whole replica, but resharding only the blasted GPUs;
+//! * the straggler-evict / straggler-tolerate crossover: evicting
+//!   (reshard the straggler away, pay the transition) wins under deep
+//!   slowdowns, tolerating (eat the TP-group drag) wins under mild
+//!   ones;
+//! * SDC detection-lag rollback grows with the validation interval —
+//!   corruption is invisible until the next sweep, so rarer sweeps
+//!   waste more work per corruption.
+//!
+//! `--quick` runs the scenario smoke instead (Makefile `bench-quick`):
+//! a correlated + straggler sweep at reduced scale, asserting generator
+//! throughput and 1-thread-vs-N-thread bit-identity, and writing
+//! `BENCH_scenarios_quick.json` (uploaded as a CI artifact).
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{
+    generate_scenario, BlastRadius, FailureModel, ScenarioConfig, ScenarioKind, Trace,
+};
+use ntp::manager::{FleetStats, MultiPolicySim, StepMode, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, TransitionCosts};
+use ntp::power::RackDesign;
+use ntp::sim::{IterationModel, SimParams};
+use ntp::util::bench::{arg_flag, time_once, JsonReport};
+use ntp::util::par;
+use ntp::util::prng::Rng;
+use ntp::util::table::{f4, pct, Table};
+
+const SEED: u64 = 12;
+const DAYS: f64 = 15.0;
+const TRIALS: usize = 4;
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fig12_scenarios.json");
+const QUICK_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scenarios_quick.json");
+
+/// gpt-480b on a 2048-GPU NVL32 slice: 16 replicas of TP32 x PP4 —
+/// small enough for a fast sweep, large enough for every blast shape.
+fn setup() -> (IterationModel, ParallelConfig, StrategyTable, Topology) {
+    let model = presets::model("gpt-480b").unwrap();
+    let cluster = presets::cluster("paper-32k-nvl32").unwrap();
+    let w = WorkloadConfig { seq_len: 16_384, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 };
+    let cfg = ParallelConfig { tp: 32, pp: 4, dp: 16, microbatch: 1 };
+    let sim = IterationModel::new(model, w, cluster.clone(), SimParams::default());
+    let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
+    let topo = Topology::of(cfg.dp * cfg.pp * cfg.tp, cfg.tp, cluster.gpus_per_node);
+    (sim, cfg, table, topo)
+}
+
+/// One forked PRNG stream per trial (trace i identical for any trial
+/// count), so scenario batches sharing `seed` share base events.
+fn gen_traces(
+    topo: &Topology,
+    fmodel: &FailureModel,
+    scen: &ScenarioConfig,
+    days: f64,
+    trials: usize,
+    seed: u64,
+) -> Vec<Trace> {
+    let mut rng = Rng::new(seed);
+    (0..trials)
+        .map(|i| {
+            let mut r = rng.fork(i as u64);
+            generate_scenario(topo, fmodel, scen, days * 24.0, &mut r)
+        })
+        .collect()
+}
+
+fn mean_over(per_trial: &[Vec<FleetStats>], pi: usize, f: impl Fn(&FleetStats) -> f64) -> f64 {
+    per_trial.iter().map(|t| f(&t[pi])).sum::<f64>() / per_trial.len() as f64
+}
+
+fn main() {
+    if arg_flag("--quick") {
+        quick_smoke();
+        return;
+    }
+    let (sim, cfg, table, topo) = setup();
+    let fmodel = FailureModel::llama3().scaled(1.5);
+    let costs = TransitionCosts::model(&sim, &cfg);
+    let mut report = JsonReport::new("fig12_scenarios");
+    report.scalar("seed", SEED as f64);
+    report.scalar("days", DAYS);
+    report.scalar("trials", TRIALS as f64);
+    report.scalar("n_gpus", topo.n_gpus as f64);
+
+    // =====================================================================
+    // (a) Correlated blasts vs replica dropping: transitions off so the
+    // comparison is pure capacity, same per-trial base events for both
+    // scenario kinds (shared fork seeds).
+    // =====================================================================
+    println!("\n=== Fig 12a: correlated blasts hit DP-DROP harder than NTP ===\n");
+    let indep = ScenarioConfig::new(ScenarioKind::Independent);
+    let mut corr = ScenarioConfig::new(ScenarioKind::Correlated);
+    corr.correlated = corr.correlated.scaled(150.0);
+    report.scalar("corr_node_events_per_node_day", corr.correlated.node_events_per_node_day);
+    report.scalar(
+        "corr_domain_events_per_domain_day",
+        corr.correlated.domain_events_per_domain_day,
+    );
+    let pair = [registry::parse("dp-drop").unwrap(), registry::parse("ntp").unwrap()];
+    let msim = MultiPolicySim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: cfg.pp,
+        policies: &pair,
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition: None,
+    };
+    let mut t = Table::new(&["scenario", "DP-DROP tput", "NTP tput"]);
+    let mut tputs = [[0.0f64; 2]; 2]; // [indep, corr] x [drop, ntp]
+    for (si, scen) in [&indep, &corr].into_iter().enumerate() {
+        let traces = gen_traces(&topo, &fmodel, scen, DAYS, TRIALS, SEED);
+        let per_trial = msim.run_trials(&traces, StepMode::Exact, &mut msim.memo());
+        for pi in 0..2 {
+            tputs[si][pi] = mean_over(&per_trial, pi, |s| s.mean_throughput);
+        }
+        t.row(&[scen.kind.name().into(), f4(tputs[si][0]), f4(tputs[si][1])]);
+    }
+    t.print();
+    let [indep_tputs, corr_tputs] = tputs;
+    let delta_drop = indep_tputs[0] - corr_tputs[0];
+    let delta_ntp = indep_tputs[1] - corr_tputs[1];
+    println!(
+        "\ncorrelated-blast capacity cost: DP-DROP {} | NTP {}",
+        f4(delta_drop),
+        f4(delta_ntp)
+    );
+    assert!(
+        corr_tputs[1] > corr_tputs[0],
+        "NTP {} must beat DP-DROP {} on correlated traces",
+        corr_tputs[1],
+        corr_tputs[0]
+    );
+    assert!(
+        delta_drop > delta_ntp && delta_ntp >= 0.0,
+        "correlated blasts must cost DP-DROP ({delta_drop}) strictly more than NTP ({delta_ntp})"
+    );
+    report.scalar("corr_capacity_cost_dp_drop", delta_drop);
+    report.scalar("corr_capacity_cost_ntp", delta_ntp);
+
+    // =====================================================================
+    // (b) Straggler policy crossover: transitions ON so eviction pays
+    // its reshard bill; only the slowdown range differs between runs.
+    // =====================================================================
+    println!("\n=== Fig 12b: straggler evict/tolerate crossover ===\n");
+    let straggler_pair = [
+        registry::parse("straggler-evict").unwrap(),
+        registry::parse("straggler-tolerate").unwrap(),
+    ];
+    let msim_straggler = MultiPolicySim {
+        policies: &straggler_pair,
+        transition: Some(costs),
+        ..msim
+    };
+    let mut straggler_memo = msim_straggler.memo();
+    let mut t = Table::new(&["slowdown", "EVICT net tput", "TOLERATE net tput", "winner"]);
+    let mut nets = [[0.0f64; 2]; 2]; // [deep, mild] x [evict, tolerate]
+    for (si, (lo, hi)) in [(0.3, 0.5), (0.97, 0.995)].into_iter().enumerate() {
+        let mut scen = ScenarioConfig::new(ScenarioKind::Straggler);
+        scen.straggler = scen.straggler.scaled(50.0);
+        scen.straggler.slowdown = (lo, hi);
+        let traces = gen_traces(&topo, &fmodel, &scen, DAYS, TRIALS, SEED);
+        let per_trial = msim_straggler.run_trials(&traces, StepMode::Exact, &mut straggler_memo);
+        for pi in 0..2 {
+            nets[si][pi] = mean_over(&per_trial, pi, FleetStats::net_throughput);
+        }
+        let winner = if nets[si][0] > nets[si][1] { "evict" } else { "tolerate" };
+        t.row(&[format!("{lo}..{hi}"), f4(nets[si][0]), f4(nets[si][1]), winner.into()]);
+    }
+    t.print();
+    let [deep, mild] = nets;
+    assert!(
+        deep[0] > deep[1],
+        "deep slowdowns: evicting ({}) must beat tolerating ({})",
+        deep[0],
+        deep[1]
+    );
+    assert!(
+        mild[1] > mild[0],
+        "mild slowdowns: tolerating ({}) must beat evicting ({})",
+        mild[1],
+        mild[0]
+    );
+    report.scalar("straggler_deep_evict_net", deep[0]);
+    report.scalar("straggler_deep_tolerate_net", deep[1]);
+    report.scalar("straggler_mild_evict_net", mild[0]);
+    report.scalar("straggler_mild_tolerate_net", mild[1]);
+
+    // =====================================================================
+    // (c) SDC rollback grows with the validation interval. The sweep
+    // periods form a divisor chain (2 | 6 | 24), so for any corruption
+    // time the detection lag is pointwise non-decreasing in the period.
+    // =====================================================================
+    println!("\n=== Fig 12c: SDC rollback vs validation interval ===\n");
+    let ntp_only = [registry::parse("ntp").unwrap()];
+    let msim_sdc = MultiPolicySim { policies: &ntp_only, transition: Some(costs), ..msim };
+    let indep_traces = gen_traces(&topo, &fmodel, &indep, DAYS, TRIALS, SEED);
+    let indep_trials = msim_sdc.run_trials(&indep_traces, StepMode::Exact, &mut msim_sdc.memo());
+    let base_downtime = mean_over(&indep_trials, 0, |s| s.downtime_frac);
+    let mut t = Table::new(&["validation interval", "NTP downtime"]);
+    t.row(&["(no SDC)".into(), pct(base_downtime)]);
+    let mut downtimes = Vec::new();
+    let mut scen = ScenarioConfig::new(ScenarioKind::Sdc);
+    scen.sdc = scen.sdc.scaled(20.0);
+    report.scalar("sdc_events_per_gpu_day", scen.sdc.events_per_gpu_day);
+    for v in [2.0, 6.0, 24.0] {
+        scen.sdc.validation_interval_hours = v;
+        let traces = gen_traces(&topo, &fmodel, &scen, DAYS, TRIALS, SEED);
+        let per_trial = msim_sdc.run_trials(&traces, StepMode::Exact, &mut msim_sdc.memo());
+        let downtime = mean_over(&per_trial, 0, |s| s.downtime_frac);
+        t.row(&[format!("{v}h"), pct(downtime)]);
+        report.scalar(&format!("sdc_downtime_v{v}"), downtime);
+        downtimes.push(downtime);
+    }
+    t.print();
+    for w in downtimes.windows(2) {
+        assert!(
+            w[1] > w[0],
+            "SDC downtime must grow with the validation interval (got {downtimes:?})"
+        );
+    }
+    assert!(
+        downtimes[0] > base_downtime,
+        "SDC rollback must cost more than the SDC-free baseline ({} vs {base_downtime})",
+        downtimes[0]
+    );
+    assert!(
+        downtimes.iter().all(|&d| d < 1.0),
+        "SDC downtime must not saturate the cap (got {downtimes:?})"
+    );
+
+    match report.write(OUT_PATH) {
+        Ok(()) => println!("\nwrote {OUT_PATH}"),
+        Err(e) => eprintln!("\nWARNING: could not write {OUT_PATH}: {e}"),
+    }
+}
+
+/// The `make bench-quick` scenario smoke: correlated + straggler
+/// batches at reduced scale through the shared sweep, with generator
+/// throughput and parallel bit-identity hard-asserted.
+fn quick_smoke() {
+    println!("\n=== scenario smoke (--quick): correlated + straggler ===\n");
+    let (sim, cfg, table, topo) = setup();
+    let fmodel = FailureModel::llama3().scaled(1.5);
+    let days = 5.0;
+    let trials = 8;
+    let mut corr = ScenarioConfig::new(ScenarioKind::Correlated);
+    corr.correlated = corr.correlated.scaled(150.0);
+    let mut straggler = ScenarioConfig::new(ScenarioKind::Straggler);
+    straggler.straggler = straggler.straggler.scaled(50.0);
+    straggler.straggler.slowdown = (0.3, 0.5);
+
+    let (batches, gen_secs) = time_once(|| {
+        [&corr, &straggler].map(|scen| gen_traces(&topo, &fmodel, scen, days, trials, SEED))
+    });
+    let n_events: usize =
+        batches.iter().flat_map(|b| b.iter().map(|t| t.events.len())).sum();
+    let events_per_sec = n_events as f64 / gen_secs.max(1e-12);
+    println!(
+        "generated {n_events} events across {} traces in {gen_secs:.4}s \
+         ({events_per_sec:.0} events/s)",
+        2 * trials
+    );
+    assert!(n_events > 0, "smoke batches generated no events");
+    assert!(
+        events_per_sec > 5_000.0,
+        "scenario generators too slow: {events_per_sec:.0} events/s"
+    );
+
+    let policies = [
+        registry::parse("dp-drop").unwrap(),
+        registry::parse("ntp").unwrap(),
+        registry::parse("straggler-evict").unwrap(),
+        registry::parse("straggler-tolerate").unwrap(),
+    ];
+    let msim = MultiPolicySim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: cfg.pp,
+        policies: &policies,
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition: Some(TransitionCosts::model(&sim, &cfg)),
+    };
+    let threads = par::num_threads().max(2);
+    let mut report = JsonReport::new("scenarios_quick");
+    report.label("scenarios", "correlated+straggler");
+    report.scalar("seed", SEED as f64);
+    report.scalar("days", days);
+    report.scalar("trials", trials as f64);
+    report.scalar("n_gpus", topo.n_gpus as f64);
+    report.scalar("events", n_events as f64);
+    report.scalar("events_per_sec", events_per_sec);
+    report.scalar("threads", threads as f64);
+    report.scalar("corr_node_events_per_node_day", corr.correlated.node_events_per_node_day);
+    report.scalar(
+        "corr_domain_events_per_domain_day",
+        corr.correlated.domain_events_per_domain_day,
+    );
+    report.scalar("straggler_events_per_gpu_day", straggler.straggler.events_per_gpu_day);
+    report.scalar("straggler_slowdown_lo", straggler.straggler.slowdown.0);
+    report.scalar("straggler_slowdown_hi", straggler.straggler.slowdown.1);
+    for (scen, traces) in [&corr, &straggler].into_iter().zip(&batches) {
+        let ((serial, _), serial_secs) =
+            time_once(|| msim.run_trials_par(traces, StepMode::Exact, 1));
+        let ((parallel, _), par_secs) =
+            time_once(|| msim.run_trials_par(traces, StepMode::Exact, threads));
+        assert_eq!(
+            serial, parallel,
+            "{}: {threads}-thread sweep must be bit-identical to 1 thread",
+            scen.kind.name()
+        );
+        println!(
+            "{:<12} sweep: 1 thread {serial_secs:.3}s, {threads} threads {par_secs:.3}s \
+             (bit-identical)",
+            scen.kind.name()
+        );
+        report.scalar(&format!("{}_sweep_1t_secs", scen.kind.name()), serial_secs);
+        report.scalar(&format!("{}_sweep_nt_secs", scen.kind.name()), par_secs);
+    }
+    report.scalar("bit_identical", 1.0);
+    match report.write(QUICK_PATH) {
+        Ok(()) => println!("\nwrote {QUICK_PATH}"),
+        Err(e) => eprintln!("\nWARNING: could not write {QUICK_PATH}: {e}"),
+    }
+}

@@ -101,8 +101,8 @@ fn main() {
     let trace = Trace::generate(&topo, &fmodel, 15.0 * 24.0, &mut trace_rng);
     let transition = Some(TransitionCosts::model(&sim, &cfg));
     let policies = registry::all();
-    // One shared sweep instead of one trace replay per policy: all nine
-    // registered policies ride a single FleetReplayer pass, with
+    // One shared sweep instead of one trace replay per policy: every
+    // registered policy rides a single FleetReplayer pass, with
     // repeated damage signatures memoized (bit-identical to the
     // per-policy runs, see rust/tests/multi_policy_sweep.rs).
     let msim = MultiPolicySim {

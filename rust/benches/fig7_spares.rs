@@ -166,7 +166,7 @@ fn main() {
     // =====================================================================
     // SPARe scale: the same fixed-minibatch sweep at 100K GPUs / NVL72
     // (paper-100k-nvl72), over Monte-Carlo failure traces. 3 budgets x
-    // 4 trials x 9 policies = 108 trace integrations — tractable
+    // 4 trials x 11 policies = 132 trace integrations — tractable
     // because each trial replays the trace once for all policies
     // (exact stepping bounds the work by the event count), trial
     // batches fan out over scoped threads via run_trials_par

@@ -8,6 +8,9 @@ use super::topology::Topology;
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum GpuState {
     Healthy,
+    /// Degraded-but-alive at `slowdown` × healthy speed since `at_hours`,
+    /// expected back to full speed at `until_hours` (sim time).
+    Degraded { slowdown: f64, at_hours: f64, until_hours: f64 },
     /// Failed at `at_hours`, expected back at `until_hours` (sim time).
     Failed { at_hours: f64, until_hours: f64 },
 }
@@ -16,18 +19,48 @@ impl GpuState {
     pub fn is_healthy(&self) -> bool {
         matches!(self, GpuState::Healthy)
     }
+
+    /// Healthy or degraded — i.e. still participating in training.
+    pub fn is_alive(&self) -> bool {
+        !matches!(self, GpuState::Failed { .. })
+    }
 }
 
 /// Mutable fleet health snapshot.
+///
+/// Health is tracked as two independent per-GPU layers — the hard-fail
+/// layer (`states`) and the degrade overlay (`degrades`). The effective
+/// state reported by [`FleetHealth::state`] is `Failed` if the fail
+/// layer is active, else `Degraded` if the overlay is, else `Healthy`.
+/// Each layer merges overlapping events order-independently, so replay
+/// order never matters.
 #[derive(Clone, Debug)]
 pub struct FleetHealth {
     pub topo: Topology,
     states: Vec<GpuState>,
-    /// healthy-GPU count per domain (maintained incrementally).
+    /// Degrade overlay: the `(slowdown, at_hours, until_hours)` entries
+    /// currently active on each GPU. A list (not a merged scalar) so
+    /// that expiring the shorter of two overlapping degradations
+    /// restores the survivor's slowdown exactly — the effective values
+    /// are order-independent set functions (min slowdown, max deadline)
+    /// of the active entries, which keeps incremental replay
+    /// bit-identical to a from-scratch rebuild. Independent of the fail
+    /// layer — a GPU can be degraded *and* failed (fail wins in the
+    /// effective state).
+    degrades: Vec<Vec<(f64, f64, f64)>>,
+    /// healthy-GPU count per domain (maintained incrementally; a
+    /// degraded-but-alive GPU still counts as healthy here).
     domain_healthy: Vec<usize>,
+    /// per-domain count of GPUs that are degraded *and alive*.
+    domain_degraded: Vec<usize>,
+    /// worst (minimum) slowdown among degraded-and-alive GPUs per
+    /// domain; `1.0` when none.
+    domain_slowdown: Vec<f64>,
     n_failed: usize,
-    /// Bumped on every health *transition* (fail/recover/reset). Two
-    /// snapshots of the same `FleetHealth` with equal versions have
+    /// Total degrade-overlay entries (active or shadowed by a failure).
+    n_degrades: usize,
+    /// Bumped on every health *transition* (fail/recover/degrade/reset).
+    /// Two snapshots of the same `FleetHealth` with equal versions have
     /// identical `domain_healthy_counts`, so consumers evaluating a
     /// function of the counts (e.g. `FleetSim`) can skip recomputation.
     version: u64,
@@ -41,8 +74,12 @@ impl FleetHealth {
         FleetHealth {
             topo,
             states: vec![GpuState::Healthy; n],
+            degrades: vec![Vec::new(); n],
             domain_healthy: vec![ds; d],
+            domain_degraded: vec![0; d],
+            domain_slowdown: vec![1.0; d],
             n_failed: 0,
+            n_degrades: 0,
             version: 0,
         }
     }
@@ -52,8 +89,39 @@ impl FleetHealth {
         self.version
     }
 
+    /// Effective state of one GPU: fail layer wins over the degrade
+    /// overlay, which wins over healthy. A degraded GPU reports the
+    /// worst slowdown, earliest onset and latest deadline among its
+    /// active overlay entries.
     pub fn state(&self, gpu: usize) -> GpuState {
-        self.states[gpu]
+        match self.states[gpu] {
+            GpuState::Healthy => {
+                let entries = &self.degrades[gpu];
+                if entries.is_empty() {
+                    GpuState::Healthy
+                } else {
+                    let mut slowdown = f64::INFINITY;
+                    let mut at_hours = f64::INFINITY;
+                    let mut until_hours = f64::NEG_INFINITY;
+                    for &(s, at, until) in entries {
+                        slowdown = slowdown.min(s);
+                        at_hours = at_hours.min(at);
+                        until_hours = until_hours.max(until);
+                    }
+                    GpuState::Degraded { slowdown, at_hours, until_hours }
+                }
+            }
+            failed => failed,
+        }
+    }
+
+    /// The degrade overlay's latest pending recovery deadline, if any —
+    /// independent of whether a failure currently shadows it.
+    pub fn degrade_until(&self, gpu: usize) -> Option<f64> {
+        self.degrades[gpu]
+            .iter()
+            .map(|&(_, _, until)| until)
+            .fold(None, |acc: Option<f64>, u| Some(acc.map_or(u, |a| a.max(u))))
     }
 
     pub fn n_failed(&self) -> usize {
@@ -69,9 +137,27 @@ impl FleetHealth {
         self.domain_healthy[d]
     }
 
-    /// Per-domain healthy counts (for the packing manager).
+    /// Per-domain healthy counts (for the packing manager). Degraded
+    /// GPUs are alive and still counted here.
     pub fn domain_healthy_counts(&self) -> &[usize] {
         &self.domain_healthy
+    }
+
+    /// Per-domain count of degraded-and-alive GPUs.
+    pub fn domain_degraded_counts(&self) -> &[usize] {
+        &self.domain_degraded
+    }
+
+    /// Per-domain worst (minimum) slowdown among degraded-and-alive
+    /// GPUs; `1.0` for domains with none. Because the TP group syncs at
+    /// every layer, the slowest member sets the group's pace.
+    pub fn domain_slowdowns(&self) -> &[f64] {
+        &self.domain_slowdown
+    }
+
+    /// Total degraded-and-alive GPUs.
+    pub fn n_degraded(&self) -> usize {
+        self.domain_degraded.iter().sum()
     }
 
     /// Number of domains with at least one failure but not fully dead.
@@ -87,6 +173,24 @@ impl FleetHealth {
         self.domain_healthy.iter().filter(|&&h| h == self.topo.domain_size).count()
     }
 
+    /// Recompute domain `d`'s degraded-and-alive count and worst
+    /// slowdown from the layers. O(domain_size), called only when a
+    /// mutation could change the domain's degrade view.
+    fn rescan_degraded(&mut self, d: usize) {
+        let mut count = 0;
+        let mut worst = 1.0f64;
+        for g in self.topo.domain_gpus(d) {
+            if !self.degrades[g].is_empty() && self.states[g].is_healthy() {
+                count += 1;
+                for &(s, _, _) in &self.degrades[g] {
+                    worst = worst.min(s);
+                }
+            }
+        }
+        self.domain_degraded[d] = count;
+        self.domain_slowdown[d] = worst;
+    }
+
     /// Mark a GPU failed. Idempotent (re-failing a failed GPU extends its
     /// recovery time).
     pub fn fail(&mut self, gpu: usize, at_hours: f64, until_hours: f64) {
@@ -97,6 +201,10 @@ impl FleetHealth {
                 self.domain_healthy[d] -= 1;
                 self.n_failed += 1;
                 self.version += 1;
+                if self.n_degrades > 0 && !self.degrades[gpu].is_empty() {
+                    // a failure shadows this GPU's degradation
+                    self.rescan_degraded(d);
+                }
             }
             GpuState::Failed { at_hours: prev_at, until_hours: prev_until } => {
                 self.states[gpu] = GpuState::Failed {
@@ -104,20 +212,80 @@ impl FleetHealth {
                     until_hours: prev_until.max(until_hours),
                 };
             }
+            GpuState::Degraded { .. } => unreachable!("fail layer never holds Degraded"),
         }
     }
 
-    /// Mark a GPU recovered.
+    /// Mark a GPU recovered (fail layer only; any degrade overlay with a
+    /// later deadline resurfaces).
     pub fn recover(&mut self, gpu: usize) {
         if let GpuState::Failed { .. } = self.states[gpu] {
+            let d = self.topo.domain_of(gpu);
             self.states[gpu] = GpuState::Healthy;
-            self.domain_healthy[self.topo.domain_of(gpu)] += 1;
+            self.domain_healthy[d] += 1;
             self.n_failed -= 1;
             self.version += 1;
+            if self.n_degrades > 0 && !self.degrades[gpu].is_empty() {
+                self.rescan_degraded(d);
+            }
         }
     }
 
-    /// Recover everything due by `now_hours`; returns how many recovered.
+    /// Mark a GPU degraded-but-alive at `slowdown` × healthy speed.
+    /// Overlapping degradations stack: each keeps its own deadline, and
+    /// the effective slowdown is the worst among the active entries.
+    pub fn degrade(&mut self, gpu: usize, slowdown: f64, at_hours: f64, until_hours: f64) {
+        debug_assert!(
+            slowdown > 0.0 && slowdown <= 1.0,
+            "slowdown {slowdown} outside (0, 1]"
+        );
+        let d = self.topo.domain_of(gpu);
+        if self.degrades[gpu].is_empty() {
+            self.n_degrades += 1;
+        }
+        self.degrades[gpu].push((slowdown, at_hours, until_hours));
+        self.version += 1;
+        if self.states[gpu].is_healthy() {
+            self.rescan_degraded(d);
+        }
+    }
+
+    /// Clear a GPU's degrade overlay entirely.
+    pub fn recover_degrade(&mut self, gpu: usize) {
+        if !self.degrades[gpu].is_empty() {
+            let was_alive = self.states[gpu].is_healthy();
+            self.degrades[gpu].clear();
+            self.n_degrades -= 1;
+            self.version += 1;
+            if was_alive {
+                self.rescan_degraded(self.topo.domain_of(gpu));
+            }
+        }
+    }
+
+    /// Expire the degrade-overlay entries on `gpu` whose deadline is
+    /// `<= now_hours`. A surviving overlapping entry keeps the GPU
+    /// degraded at its own slowdown.
+    pub fn recover_degrade_due(&mut self, gpu: usize, now_hours: f64) {
+        if self.degrades[gpu].is_empty() {
+            return;
+        }
+        let before = self.degrades[gpu].len();
+        self.degrades[gpu].retain(|&(_, _, until)| until > now_hours);
+        if self.degrades[gpu].len() == before {
+            return;
+        }
+        if self.degrades[gpu].is_empty() {
+            self.n_degrades -= 1;
+        }
+        self.version += 1;
+        if self.states[gpu].is_healthy() {
+            self.rescan_degraded(self.topo.domain_of(gpu));
+        }
+    }
+
+    /// Recover everything due by `now_hours` — both layers; returns how
+    /// many *failures* recovered (degrade expiries are not counted).
     pub fn recover_due(&mut self, now_hours: f64) -> usize {
         let mut n = 0;
         for gpu in 0..self.states.len() {
@@ -127,6 +295,7 @@ impl FleetHealth {
                     n += 1;
                 }
             }
+            self.recover_degrade_due(gpu, now_hours);
         }
         n
     }
@@ -136,16 +305,27 @@ impl FleetHealth {
         for s in &mut self.states {
             *s = GpuState::Healthy;
         }
+        for dg in &mut self.degrades {
+            dg.clear();
+        }
         for h in &mut self.domain_healthy {
             *h = self.topo.domain_size;
         }
+        for c in &mut self.domain_degraded {
+            *c = 0;
+        }
+        for s in &mut self.domain_slowdown {
+            *s = 1.0;
+        }
         self.n_failed = 0;
+        self.n_degrades = 0;
         self.version += 1;
     }
 
     /// Internal consistency check (used by tests and debug assertions).
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut failed = 0;
+        let mut degrades = 0;
         for d in 0..self.topo.n_domains() {
             let healthy = self
                 .topo
@@ -159,9 +339,40 @@ impl FleetHealth {
                 ));
             }
             failed += self.topo.domain_size - healthy;
+            let mut degraded = 0;
+            let mut worst = 1.0f64;
+            for g in self.topo.domain_gpus(d) {
+                if !self.degrades[g].is_empty() {
+                    degrades += 1;
+                    if self.states[g].is_healthy() {
+                        degraded += 1;
+                        for &(s, _, _) in &self.degrades[g] {
+                            worst = worst.min(s);
+                        }
+                    }
+                }
+            }
+            if degraded != self.domain_degraded[d] {
+                return Err(format!(
+                    "domain {d}: cached degraded {} != actual {degraded}",
+                    self.domain_degraded[d]
+                ));
+            }
+            if worst != self.domain_slowdown[d] {
+                return Err(format!(
+                    "domain {d}: cached slowdown {} != actual {worst}",
+                    self.domain_slowdown[d]
+                ));
+            }
         }
         if failed != self.n_failed {
             return Err(format!("cached n_failed {} != actual {failed}", self.n_failed));
+        }
+        if degrades != self.n_degrades {
+            return Err(format!(
+                "cached n_degrades {} != actual {degrades}",
+                self.n_degrades
+            ));
         }
         Ok(())
     }
@@ -229,9 +440,62 @@ mod tests {
         let mut f = fleet();
         f.fail(0, 0.0, 1.0);
         f.fail(31, 0.0, 1.0);
+        f.degrade(5, 0.5, 0.0, 1.0);
         f.reset();
         assert_eq!(f.n_failed(), 0);
+        assert_eq!(f.n_degraded(), 0);
         assert_eq!(f.n_full_domains(), 4);
+        assert!(f.domain_slowdowns().iter().all(|&s| s == 1.0));
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn degrade_layer_tracks_worst_slowdown() {
+        let mut f = fleet();
+        f.degrade(0, 0.8, 0.0, 10.0);
+        f.degrade(1, 0.5, 1.0, 5.0);
+        assert_eq!(f.n_degraded(), 2);
+        assert_eq!(f.domain_degraded_counts()[0], 2);
+        assert_eq!(f.domain_slowdowns()[0], 0.5);
+        assert_eq!(f.n_failed(), 0); // degraded GPUs are alive
+        assert_eq!(f.domain_healthy(0), 8);
+        // overlapping degrades stack; domain worst is still gpu1's 0.5
+        f.degrade(0, 0.6, 2.0, 4.0);
+        assert_eq!(f.n_degraded(), 2);
+        assert_eq!(f.domain_slowdowns()[0], 0.5);
+        assert!(matches!(f.state(0), GpuState::Degraded { slowdown, .. } if slowdown == 0.6));
+        f.check_invariants().unwrap();
+        // at t=6, gpu1 (until 5) and gpu0's stacked 0.6 entry (until 4)
+        // expire; gpu0's original 0.8 degrade (until 10) survives
+        f.recover_due(6.0);
+        assert_eq!(f.n_degraded(), 1);
+        assert_eq!(f.domain_slowdowns()[0], 0.8);
+        f.recover_due(11.0);
+        assert_eq!(f.n_degraded(), 0);
+        assert_eq!(f.domain_slowdowns()[0], 1.0);
+        f.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn failure_shadows_degradation() {
+        let mut f = fleet();
+        f.degrade(3, 0.4, 0.0, 20.0);
+        assert!(matches!(f.state(3), GpuState::Degraded { slowdown, .. } if slowdown == 0.4));
+        // a hard failure wins over the overlay...
+        f.fail(3, 1.0, 5.0);
+        assert!(matches!(f.state(3), GpuState::Failed { .. }));
+        assert_eq!(f.n_degraded(), 0);
+        assert_eq!(f.domain_slowdowns()[0], 1.0);
+        assert_eq!(f.degrade_until(3), Some(20.0));
+        f.check_invariants().unwrap();
+        // ...and the overlay resurfaces when the failure recovers
+        f.recover(3);
+        assert!(matches!(f.state(3), GpuState::Degraded { slowdown, .. } if slowdown == 0.4));
+        assert_eq!(f.n_degraded(), 1);
+        assert_eq!(f.domain_slowdowns()[0], 0.4);
+        f.recover_degrade(3);
+        assert!(f.state(3).is_healthy());
+        assert!(f.state(3).is_alive());
         f.check_invariants().unwrap();
     }
 }

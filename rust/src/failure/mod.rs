@@ -1,6 +1,8 @@
 //! Failure engine: rate models calibrated to the Llama-3 training report,
-//! blast-radius expansion, synthetic failure traces (Fig. 4) and
-//! Monte-Carlo failure-placement scenarios (Figs. 3, 6, 10).
+//! blast-radius expansion, synthetic failure traces (Fig. 4),
+//! Monte-Carlo failure-placement scenarios (Figs. 3, 6, 10), and the
+//! scenario-diversity trace generators (correlated rack/switch blasts,
+//! degraded-but-alive stragglers, silent data corruption).
 
 pub mod blast;
 pub mod rates;
@@ -9,7 +11,7 @@ pub mod scenario;
 pub mod trace;
 
 pub use blast::BlastRadius;
-pub use rates::FailureModel;
+pub use rates::{CorrelatedRates, FailureModel, SdcRates, StragglerRates};
 pub use replayer::FleetReplayer;
-pub use scenario::{sample_failed_gpus, Scenario};
-pub use trace::{FailureEvent, Trace};
+pub use scenario::{generate_scenario, sample_failed_gpus, Scenario, ScenarioConfig, ScenarioKind};
+pub use trace::{EventKind, FailureEvent, Trace};

@@ -73,6 +73,111 @@ impl FailureModel {
     }
 }
 
+/// Correlated-failure process parameters: Poisson superposition of
+/// node-level (rack power / host) and domain-level (scale-up switch)
+/// events layered over the per-GPU base process. Calibrated to the
+/// ByteDance 100K-scale infrastructure report: correlated events are
+/// one to two orders of magnitude rarer than single-GPU failures, but
+/// each takes out 8–72 GPUs at once.
+#[derive(Clone, Debug)]
+pub struct CorrelatedRates {
+    /// Whole-node (rack) events per node-day.
+    pub node_events_per_node_day: f64,
+    /// Whole-domain (scale-up switch) events per domain-day.
+    pub domain_events_per_domain_day: f64,
+    /// Recovery time range for correlated events, hours — a switch
+    /// reboot or rack power cycle, not a multi-day part swap.
+    pub recovery_hours: (f64, f64),
+}
+
+impl CorrelatedRates {
+    /// ByteDance-report order of magnitude: a given rack sees an outage
+    /// about every ~14 node-years, a scale-up switch about every
+    /// ~55 domain-years; both recover in 0.5–4 hours.
+    pub fn bytedance() -> CorrelatedRates {
+        CorrelatedRates {
+            node_events_per_node_day: 2.0e-4,
+            domain_events_per_domain_day: 5.0e-5,
+            recovery_hours: (0.5, 4.0),
+        }
+    }
+
+    /// Scale both correlated rates (for sweeps).
+    pub fn scaled(&self, factor: f64) -> CorrelatedRates {
+        let mut r = self.clone();
+        r.node_events_per_node_day *= factor;
+        r.domain_events_per_domain_day *= factor;
+        r
+    }
+}
+
+/// Straggler (degraded-but-alive) process parameters: GPUs that keep
+/// running but drag their TP group — thermal throttling, a flaky
+/// NVLink lane, ECC retirement storms. The FailSafe paper motivates
+/// these as the hard resilience case: they are invisible to liveness
+/// checks yet slow the slowest-member-paced group.
+#[derive(Clone, Debug)]
+pub struct StragglerRates {
+    /// Degradation onsets per GPU-day.
+    pub events_per_gpu_day: f64,
+    /// Uniform slowdown-factor range, each in `(0, 1]` (fraction of
+    /// healthy speed the degraded GPU still delivers).
+    pub slowdown: (f64, f64),
+    /// Mean degradation duration, hours (exponential).
+    pub mean_duration_hours: f64,
+}
+
+impl StragglerRates {
+    /// ByteDance-report order of magnitude: straggler onsets are
+    /// roughly half as frequent as hard failures, run at 30–90% of
+    /// healthy speed, and persist ~6 hours until remediation.
+    pub fn bytedance() -> StragglerRates {
+        StragglerRates {
+            events_per_gpu_day: 2.5e-4,
+            slowdown: (0.3, 0.9),
+            mean_duration_hours: 6.0,
+        }
+    }
+
+    /// Scale the onset rate (for sweeps).
+    pub fn scaled(&self, factor: f64) -> StragglerRates {
+        let mut r = self.clone();
+        r.events_per_gpu_day *= factor;
+        r
+    }
+}
+
+/// Silent-data-corruption process parameters: corruptions are invisible
+/// until the next periodic validation sweep fires, so every detection
+/// carries `detection lag + rollback to the last checkpoint` of wasted
+/// work.
+#[derive(Clone, Debug)]
+pub struct SdcRates {
+    /// Silent corruptions per GPU-day.
+    pub events_per_gpu_day: f64,
+    /// Period of the validation sweep that detects them, hours.
+    pub validation_interval_hours: f64,
+}
+
+impl SdcRates {
+    /// Fleet-scale SDC studies (Meta / Google: "one in a few thousand
+    /// machines") put silent corruptions one to two orders below hard
+    /// failures; validation sweeps every 6 hours.
+    pub fn bytedance() -> SdcRates {
+        SdcRates {
+            events_per_gpu_day: 1.5e-5,
+            validation_interval_hours: 6.0,
+        }
+    }
+
+    /// Scale the corruption rate (for sweeps).
+    pub fn scaled(&self, factor: f64) -> SdcRates {
+        let mut r = self.clone();
+        r.events_per_gpu_day *= factor;
+        r
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +226,29 @@ mod tests {
         assert!((r2 / r1 - 2.0).abs() < 1e-12);
         // ~8.6 failures/day on the Llama-3 cluster.
         assert!((r1 * 24.0 - 8.63).abs() < 0.1);
+    }
+
+    #[test]
+    fn scenario_rates_are_calibrated_sanely() {
+        let c = CorrelatedRates::bytedance();
+        // correlated events are rarer per blast anchor than per-GPU
+        // failures, but never zero
+        let per_gpu = FailureModel::llama3().failures_per_gpu_day;
+        assert!(c.node_events_per_node_day > 0.0);
+        assert!(c.node_events_per_node_day < per_gpu);
+        assert!(c.domain_events_per_domain_day < c.node_events_per_node_day);
+        assert!(c.recovery_hours.0 > 0.0 && c.recovery_hours.1 > c.recovery_hours.0);
+        let c2 = c.scaled(2.0);
+        assert!((c2.node_events_per_node_day / c.node_events_per_node_day - 2.0).abs() < 1e-12);
+
+        let s = StragglerRates::bytedance();
+        assert!(s.events_per_gpu_day > 0.0 && s.events_per_gpu_day < per_gpu);
+        assert!(s.slowdown.0 > 0.0 && s.slowdown.1 <= 1.0 && s.slowdown.0 < s.slowdown.1);
+        assert!(s.mean_duration_hours > 0.0);
+
+        let d = SdcRates::bytedance();
+        assert!(d.events_per_gpu_day > 0.0 && d.events_per_gpu_day < per_gpu / 10.0);
+        assert!(d.validation_interval_hours > 0.0);
+        assert!((d.scaled(3.0).events_per_gpu_day / d.events_per_gpu_day - 3.0).abs() < 1e-12);
     }
 }

@@ -30,7 +30,7 @@
 //! happened at `t`.
 
 use super::blast::BlastRadius;
-use super::trace::Trace;
+use super::trace::{EventKind, Trace};
 use crate::cluster::{FleetHealth, GpuState, Topology};
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
@@ -63,11 +63,11 @@ pub struct FleetReplayer<'a> {
     fleet: FleetHealth,
     /// Index of the first not-yet-applied event.
     next_event: usize,
-    /// Min-heap of scheduled recoveries `(recover_at, gpu)`. Entries are
-    /// lazily deleted: a popped entry only triggers a recovery if the
-    /// GPU's *actual* `until_hours` has not been extended past it by an
-    /// overlapping later failure.
-    recoveries: BinaryHeap<Reverse<(TimeKey, usize)>>,
+    /// Min-heap of scheduled recoveries `(recover_at, gpu, is_degrade)`.
+    /// Entries are lazily deleted: a popped entry only triggers a
+    /// recovery if the GPU's *actual* deadline in the tagged layer has
+    /// not been extended past it by an overlapping later event.
+    recoveries: BinaryHeap<Reverse<(TimeKey, usize, bool)>>,
     now: f64,
 }
 
@@ -100,6 +100,12 @@ impl<'a> FleetReplayer<'a> {
     /// Horizon of the trace under replay (hours).
     pub fn horizon_hours(&self) -> f64 {
         self.trace.horizon_hours
+    }
+
+    /// The trace under replay — the shared multi-policy sweep charges
+    /// trace-global costs (SDC detection-lag rollback) from it.
+    pub fn trace(&self) -> &'a Trace {
+        self.trace
     }
 
     /// Rewind to `t = 0` on a (possibly different) trace, reusing the
@@ -140,7 +146,7 @@ impl<'a> FleetReplayer<'a> {
     /// stale boundary is just a no-op advance.
     pub fn next_change_hours(&self) -> Option<f64> {
         let ev = self.trace.events.get(self.next_event).map(|e| e.at_hours);
-        let rec = self.recoveries.peek().map(|&Reverse((TimeKey(u), _))| u);
+        let rec = self.recoveries.peek().map(|&Reverse((TimeKey(u), _, _))| u);
         match (ev, rec) {
             (None, None) => None,
             (Some(a), None) => Some(a),
@@ -161,13 +167,17 @@ impl<'a> FleetReplayer<'a> {
             self.now
         );
         loop {
-            let next_rec = self.recoveries.peek().map(|&Reverse((TimeKey(u), _))| u);
+            let next_rec = self.recoveries.peek().map(|&Reverse((TimeKey(u), _, _))| u);
             let next_ev = self.trace.events.get(self.next_event).map(|e| e.at_hours);
             let rec_due = matches!(next_rec, Some(u) if u <= now_hours);
             let ev_due = matches!(next_ev, Some(a) if a <= now_hours);
             if rec_due && (!ev_due || next_rec.unwrap() <= next_ev.unwrap()) {
-                let Reverse((TimeKey(due), gpu)) = self.recoveries.pop().unwrap();
-                if let GpuState::Failed { until_hours, .. } = self.fleet.state(gpu) {
+                let Reverse((TimeKey(due), gpu, is_degrade)) = self.recoveries.pop().unwrap();
+                if is_degrade {
+                    // Degrade entries stack per GPU: expire the ones due
+                    // by this boundary, surviving overlaps stay active.
+                    self.fleet.recover_degrade_due(gpu, due);
+                } else if let GpuState::Failed { until_hours, .. } = self.fleet.state(gpu) {
                     // Stale entry if an overlapping failure pushed the
                     // actual deadline past this one; the extending event
                     // queued its own (later) entry.
@@ -178,9 +188,27 @@ impl<'a> FleetReplayer<'a> {
             } else if ev_due {
                 let ev = self.trace.events[self.next_event];
                 self.next_event += 1;
-                for g in self.blast.affected(&self.fleet.topo, ev.gpu) {
-                    self.fleet.fail(g, ev.at_hours, ev.recover_at_hours);
-                    self.recoveries.push(Reverse((TimeKey(ev.recover_at_hours), g)));
+                match ev.kind {
+                    EventKind::Degrade { slowdown } => {
+                        for g in self.blast.affected(&self.fleet.topo, ev.gpu) {
+                            self.fleet.degrade(g, slowdown, ev.at_hours, ev.recover_at_hours);
+                            self.recoveries.push(Reverse((
+                                TimeKey(ev.recover_at_hours),
+                                g,
+                                true,
+                            )));
+                        }
+                    }
+                    EventKind::Fail | EventKind::Sdc { .. } => {
+                        for g in self.blast.affected(&self.fleet.topo, ev.gpu) {
+                            self.fleet.fail(g, ev.at_hours, ev.recover_at_hours);
+                            self.recoveries.push(Reverse((
+                                TimeKey(ev.recover_at_hours),
+                                g,
+                                false,
+                            )));
+                        }
+                    }
                 }
             } else {
                 break;
@@ -246,12 +274,14 @@ mod tests {
                     gpu: 3,
                     is_hw: true,
                     recover_at_hours: 5.0,
+                    kind: EventKind::Fail,
                 },
                 crate::failure::FailureEvent {
                     at_hours: 5.0,
                     gpu: 3,
                     is_hw: false,
                     recover_at_hours: 7.0,
+                    kind: EventKind::Fail,
                 },
             ],
         };
@@ -307,12 +337,14 @@ mod tests {
                     gpu: 3,
                     is_hw: true,
                     recover_at_hours: 5.0,
+                    kind: EventKind::Fail,
                 },
                 crate::failure::FailureEvent {
                     at_hours: 2.0,
                     gpu: 9,
                     is_hw: false,
                     recover_at_hours: 4.0,
+                    kind: EventKind::Fail,
                 },
                 // overlapping re-failure of gpu 3: extends to 7.0, the
                 // 5.0 recovery entry goes stale (a no-op boundary)
@@ -321,6 +353,7 @@ mod tests {
                     gpu: 3,
                     is_hw: false,
                     recover_at_hours: 7.0,
+                    kind: EventKind::Fail,
                 },
             ],
         };
@@ -344,6 +377,67 @@ mod tests {
         let quiet = Trace { horizon_hours: 5.0, events: vec![] };
         let rep = FleetReplayer::new(&quiet, &topo, BlastRadius::Single);
         assert_eq!(rep.next_change_hours(), None);
+    }
+
+    #[test]
+    fn degrade_and_fail_layers_replay_independently() {
+        let topo = Topology::of(16, 8, 4);
+        let trace = Trace {
+            horizon_hours: 20.0,
+            events: vec![
+                // degrade gpu 3 on [1, 9)
+                crate::failure::FailureEvent {
+                    at_hours: 1.0,
+                    gpu: 3,
+                    is_hw: false,
+                    recover_at_hours: 9.0,
+                    kind: EventKind::Degrade { slowdown: 0.5 },
+                },
+                // hard-fail the same gpu on [2, 6): shadows the degrade
+                crate::failure::FailureEvent {
+                    at_hours: 2.0,
+                    gpu: 3,
+                    is_hw: true,
+                    recover_at_hours: 6.0,
+                    kind: EventKind::Fail,
+                },
+                // deeper overlapping degrade, ends before the first
+                crate::failure::FailureEvent {
+                    at_hours: 3.0,
+                    gpu: 3,
+                    is_hw: false,
+                    recover_at_hours: 5.0,
+                    kind: EventKind::Degrade { slowdown: 0.25 },
+                },
+            ],
+        };
+        let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
+        let expect = |t: f64, failed: usize, degraded: usize, slow: f64| {
+            let scratch = trace.replay_to(&topo, BlastRadius::Single, t);
+            assert_eq!(scratch.n_failed(), failed, "replay_to failed at t={t}");
+            assert_eq!(scratch.n_degraded(), degraded, "replay_to degraded at t={t}");
+            assert_eq!(scratch.domain_slowdowns()[0], slow, "replay_to slow at t={t}");
+            scratch.check_invariants().unwrap();
+        };
+        assert_eq!(rep.advance(1.5).n_degraded(), 1);
+        expect(1.5, 0, 1, 0.5);
+        // failure shadows the degrade
+        assert_eq!(rep.advance(2.5).n_failed(), 1);
+        assert_eq!(rep.fleet().n_degraded(), 0);
+        expect(2.5, 1, 0, 1.0);
+        // at 4 the deeper 0.25 degrade is active but shadowed
+        expect(4.0, 1, 0, 1.0);
+        // at 6 the failure recovers; the 0.25 entry expired at 5, so the
+        // surviving 0.5 degrade resurfaces at its own slowdown
+        assert_eq!(rep.advance(6.0).n_failed(), 0);
+        assert_eq!(rep.fleet().n_degraded(), 1);
+        assert_eq!(rep.fleet().domain_slowdowns()[0], 0.5);
+        expect(6.0, 0, 1, 0.5);
+        // last degrade entry expires at 9
+        assert_eq!(rep.advance(9.0).n_degraded(), 0);
+        assert_eq!(rep.fleet().domain_slowdowns()[0], 1.0);
+        expect(9.0, 0, 0, 1.0);
+        rep.fleet().check_invariants().unwrap();
     }
 
     #[test]

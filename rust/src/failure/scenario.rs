@@ -2,8 +2,17 @@
 //! failed GPUs uniformly at random (with blast-radius expansion) and
 //! summarize the per-domain damage — the input to the availability and
 //! throughput-loss computations.
+//!
+//! Also home to the scenario-diversity trace generators: correlated
+//! rack/switch blasts, degraded-but-alive stragglers, and silent data
+//! corruption detected by periodic validation sweeps. All emit the same
+//! timestamped-event contract as [`Trace::generate`], so the exact
+//! event-boundary integrator and the incremental replayer work on them
+//! unchanged.
 
 use super::blast::BlastRadius;
+use super::rates::{CorrelatedRates, FailureModel, SdcRates, StragglerRates};
+use super::trace::{EventKind, FailureEvent, Trace};
 use crate::cluster::Topology;
 use crate::util::prng::Rng;
 
@@ -114,6 +123,186 @@ pub fn expected_availability_domain_drop(n_gpus: usize, domain_size: usize, n_fa
     p
 }
 
+/// Which failure process a trace generator draws from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Independent per-GPU Poisson failures (the paper's Fig-4 base case).
+    Independent,
+    /// Base process plus rack- and scale-up-switch-level events that
+    /// fail a whole node / domain at once — the blast radius becomes
+    /// endogenous to the trace instead of a replay-time parameter.
+    Correlated,
+    /// Base process plus degraded-but-alive straggler onsets.
+    Straggler,
+    /// Base process plus silent corruptions that surface only at the
+    /// next periodic validation sweep.
+    Sdc,
+}
+
+impl ScenarioKind {
+    pub fn parse(s: &str) -> anyhow::Result<ScenarioKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "independent" | "iid" => ScenarioKind::Independent,
+            "correlated" | "blast" => ScenarioKind::Correlated,
+            "straggler" | "stragglers" => ScenarioKind::Straggler,
+            "sdc" => ScenarioKind::Sdc,
+            other => anyhow::bail!(
+                "unknown scenario '{other}' (expected independent, correlated, straggler or sdc)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::Independent => "independent",
+            ScenarioKind::Correlated => "correlated",
+            ScenarioKind::Straggler => "straggler",
+            ScenarioKind::Sdc => "sdc",
+        }
+    }
+}
+
+/// Full parameterization of one scenario generator. Only the section
+/// matching `kind` is consumed; the others ride along so one config can
+/// be threaded through CLI / bench plumbing unconditionally.
+#[derive(Clone, Debug)]
+pub struct ScenarioConfig {
+    pub kind: ScenarioKind,
+    pub correlated: CorrelatedRates,
+    pub straggler: StragglerRates,
+    pub sdc: SdcRates,
+}
+
+impl ScenarioConfig {
+    /// Calibrated (ByteDance-report) defaults for every process.
+    pub fn new(kind: ScenarioKind) -> ScenarioConfig {
+        ScenarioConfig {
+            kind,
+            correlated: CorrelatedRates::bytedance(),
+            straggler: StragglerRates::bytedance(),
+            sdc: SdcRates::bytedance(),
+        }
+    }
+}
+
+/// Homogeneous Poisson arrival stream at `rate` events/hour over
+/// `[0, horizon_hours)`.
+fn poisson_arrivals(
+    rate: f64,
+    horizon_hours: f64,
+    rng: &mut Rng,
+    mut emit: impl FnMut(&mut Rng, f64),
+) {
+    if rate <= 0.0 {
+        return;
+    }
+    let mut t = 0.0;
+    loop {
+        t += rng.exponential(rate);
+        if t >= horizon_hours {
+            break;
+        }
+        emit(rng, t);
+    }
+}
+
+/// Generate a scenario trace: the independent per-GPU base process from
+/// `model`, superposed with the extra process selected by `cfg.kind`.
+/// The result satisfies the generator contract every consumer relies
+/// on: events time-sorted by `at_hours`, all within the horizon, and
+/// `recover_at_hours > at_hours` for every event.
+pub fn generate_scenario(
+    topo: &Topology,
+    model: &FailureModel,
+    cfg: &ScenarioConfig,
+    horizon_hours: f64,
+    rng: &mut Rng,
+) -> Trace {
+    let mut trace = Trace::generate(topo, model, horizon_hours, rng);
+    match cfg.kind {
+        ScenarioKind::Independent => {}
+        ScenarioKind::Correlated => {
+            // Correlated events are expanded into per-GPU failures at
+            // generation time (sharing one arrival and one recovery), so
+            // a replay with `BlastRadius::Single` still sees whole-node /
+            // whole-domain outages — the blast radius is in the trace.
+            let r = &cfg.correlated;
+            let (lo, hi) = r.recovery_hours;
+            let node_rate = r.node_events_per_node_day * topo.n_nodes() as f64 / 24.0;
+            poisson_arrivals(node_rate, horizon_hours, rng, |rng, t| {
+                let anchor = rng.index(topo.n_nodes()) * topo.gpus_per_node;
+                let rec = rng.range_f64(lo, hi);
+                for g in BlastRadius::Node.affected(topo, anchor) {
+                    trace.events.push(FailureEvent {
+                        at_hours: t,
+                        gpu: g,
+                        is_hw: true,
+                        recover_at_hours: t + rec,
+                        kind: EventKind::Fail,
+                    });
+                }
+            });
+            let domain_rate = r.domain_events_per_domain_day * topo.n_domains() as f64 / 24.0;
+            poisson_arrivals(domain_rate, horizon_hours, rng, |rng, t| {
+                let anchor = rng.index(topo.n_domains()) * topo.domain_size;
+                let rec = rng.range_f64(lo, hi);
+                for g in BlastRadius::Domain.affected(topo, anchor) {
+                    trace.events.push(FailureEvent {
+                        at_hours: t,
+                        gpu: g,
+                        is_hw: true,
+                        recover_at_hours: t + rec,
+                        kind: EventKind::Fail,
+                    });
+                }
+            });
+        }
+        ScenarioKind::Straggler => {
+            let r = &cfg.straggler;
+            let rate = r.events_per_gpu_day * topo.n_gpus as f64 / 24.0;
+            let (lo, hi) = r.slowdown;
+            poisson_arrivals(rate, horizon_hours, rng, |rng, t| {
+                let gpu = rng.index(topo.n_gpus);
+                let slowdown = rng.range_f64(lo, hi);
+                let duration = rng.exponential(1.0 / r.mean_duration_hours);
+                trace.events.push(FailureEvent {
+                    at_hours: t,
+                    gpu,
+                    is_hw: false,
+                    recover_at_hours: t + duration,
+                    kind: EventKind::Degrade { slowdown },
+                });
+            });
+        }
+        ScenarioKind::Sdc => {
+            let r = &cfg.sdc;
+            let rate = r.events_per_gpu_day * topo.n_gpus as f64 / 24.0;
+            let v = r.validation_interval_hours;
+            poisson_arrivals(rate, horizon_hours, rng, |rng, t| {
+                // Corrupted at t, invisible until the next validation
+                // sweep: the trace event lives at the detection boundary
+                // and carries the corruption time so the integrator can
+                // charge the detection-lag rollback.
+                let detected = ((t / v).floor() + 1.0) * v;
+                if detected >= horizon_hours {
+                    return;
+                }
+                let gpu = rng.index(topo.n_gpus);
+                let (is_hw, rec) = model.draw_recovery_hours(rng);
+                trace.events.push(FailureEvent {
+                    at_hours: detected,
+                    gpu,
+                    is_hw,
+                    recover_at_hours: detected + rec,
+                    kind: EventKind::Sdc { corrupt_at_hours: t },
+                });
+            });
+        }
+    }
+    trace.events.sort_by(|a, b| a.at_hours.total_cmp(&b.at_hours));
+    trace
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +371,131 @@ mod tests {
         for n in 0..topo.n_nodes() {
             let in_node = topo.node_gpus(n).filter(|g| failed.contains(g)).count();
             assert!(in_node == 0 || in_node == topo.gpus_per_node);
+        }
+    }
+
+    fn all_kinds() -> [ScenarioKind; 4] {
+        [
+            ScenarioKind::Independent,
+            ScenarioKind::Correlated,
+            ScenarioKind::Straggler,
+            ScenarioKind::Sdc,
+        ]
+    }
+
+    /// Amplified config so short test horizons see plenty of each
+    /// event kind.
+    fn hot_config(kind: ScenarioKind) -> ScenarioConfig {
+        let mut cfg = ScenarioConfig::new(kind);
+        cfg.correlated = cfg.correlated.scaled(2_000.0);
+        cfg.straggler = cfg.straggler.scaled(200.0);
+        cfg.sdc = cfg.sdc.scaled(2_000.0);
+        cfg
+    }
+
+    #[test]
+    fn every_generator_satisfies_the_event_contract() {
+        let topo = Topology::of(512, 16, 4);
+        let model = FailureModel::llama3().scaled(30.0);
+        let horizon = 24.0 * 10.0;
+        for kind in all_kinds() {
+            let mut rng = Rng::new(0xC0FFEE);
+            let trace = generate_scenario(&topo, &model, &hot_config(kind), horizon, &mut rng);
+            assert!(!trace.events.is_empty(), "{kind:?} produced no events");
+            for w in trace.events.windows(2) {
+                assert!(w[0].at_hours <= w[1].at_hours, "{kind:?} unsorted");
+            }
+            for ev in &trace.events {
+                assert!(ev.at_hours >= 0.0 && ev.at_hours < horizon, "{kind:?} out of horizon");
+                assert!(ev.recover_at_hours > ev.at_hours, "{kind:?} non-positive outage");
+                assert!(ev.gpu < topo.n_gpus);
+            }
+        }
+    }
+
+    #[test]
+    fn correlated_traces_contain_whole_domain_blasts() {
+        let topo = Topology::of(512, 16, 4);
+        // silence the base process so only correlated events remain
+        let model = FailureModel::llama3().scaled(1e-9);
+        let mut cfg = ScenarioConfig::new(ScenarioKind::Correlated);
+        cfg.correlated = cfg.correlated.scaled(3_000.0);
+        let mut rng = Rng::new(8);
+        let trace = generate_scenario(&topo, &model, &cfg, 24.0 * 10.0, &mut rng);
+        assert!(!trace.events.is_empty());
+        // every correlated event group fails a whole node or domain at
+        // one shared instant — visible under a Single-GPU replay
+        let mut saw_domain_blast = false;
+        let mut i = 0;
+        while i < trace.events.len() {
+            let t = trace.events[i].at_hours;
+            let mut j = i;
+            while j < trace.events.len() && trace.events[j].at_hours == t {
+                j += 1;
+            }
+            let group = j - i;
+            assert!(
+                group == topo.gpus_per_node || group == topo.domain_size,
+                "correlated group of {group} GPUs at t={t}"
+            );
+            if group == topo.domain_size {
+                saw_domain_blast = true;
+                let fleet = trace.replay_to(&topo, BlastRadius::Single, t);
+                let d = topo.domain_of(trace.events[i].gpu);
+                assert_eq!(fleet.domain_healthy(d), 0, "domain {d} not fully down at t={t}");
+            }
+            i = j;
+        }
+        assert!(saw_domain_blast, "no domain-level blast in the trace");
+    }
+
+    #[test]
+    fn straggler_generator_degrades_but_does_not_kill() {
+        let topo = Topology::of(512, 16, 4);
+        let model = FailureModel::llama3().scaled(1e-9);
+        let cfg = hot_config(ScenarioKind::Straggler);
+        let mut rng = Rng::new(5);
+        let horizon = 24.0 * 10.0;
+        let trace = generate_scenario(&topo, &model, &cfg, horizon, &mut rng);
+        assert!(!trace.events.is_empty());
+        let (lo, hi) = cfg.straggler.slowdown;
+        for ev in &trace.events {
+            match ev.kind {
+                EventKind::Degrade { slowdown } => {
+                    assert!((lo..hi).contains(&slowdown), "slowdown {slowdown}");
+                }
+                other => panic!("unexpected event kind {other:?} under a silent base process"),
+            }
+        }
+        // degraded GPUs stay alive: replay shows degradation, no deaths
+        let mut degraded_seen = 0;
+        for step in 0..100 {
+            let fleet = trace.replay_to(&topo, BlastRadius::Single, horizon * step as f64 / 100.0);
+            assert_eq!(fleet.n_failed(), 0);
+            degraded_seen += fleet.n_degraded();
+            fleet.check_invariants().unwrap();
+        }
+        assert!(degraded_seen > 0, "no degradation ever observed");
+    }
+
+    #[test]
+    fn sdc_detection_aligns_with_validation_sweeps() {
+        let topo = Topology::of(512, 16, 4);
+        let model = FailureModel::llama3().scaled(1e-9);
+        let cfg = hot_config(ScenarioKind::Sdc);
+        let v = cfg.sdc.validation_interval_hours;
+        let mut rng = Rng::new(13);
+        let trace = generate_scenario(&topo, &model, &cfg, 24.0 * 10.0, &mut rng);
+        assert!(!trace.events.is_empty());
+        for ev in &trace.events {
+            let EventKind::Sdc { corrupt_at_hours } = ev.kind else {
+                panic!("unexpected event kind {:?} under a silent base process", ev.kind);
+            };
+            // detected at the first sweep strictly after the corruption
+            assert!(ev.at_hours > corrupt_at_hours);
+            assert!(ev.at_hours - corrupt_at_hours <= v + 1e-9);
+            let sweeps = ev.at_hours / v;
+            assert!((sweeps - sweeps.round()).abs() < 1e-9, "off-sweep detection at {}", ev.at_hours);
         }
     }
 }

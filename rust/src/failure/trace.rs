@@ -8,6 +8,26 @@ use super::replayer::FleetReplayer;
 use crate::cluster::{FleetHealth, Topology};
 use crate::util::prng::Rng;
 
+/// What a trace event does to the GPUs in its blast radius.
+///
+/// All kinds share the same timestamped contract the exact integrator
+/// relies on: the effect starts at `at_hours` and ends at
+/// `recover_at_hours`, both event boundaries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// Hard failure: the GPU is gone until `recover_at_hours`.
+    Fail,
+    /// Degraded-but-alive (straggler): the GPU keeps running at
+    /// `slowdown` × healthy speed (in `(0, 1]`) until it recovers.
+    Degrade { slowdown: f64 },
+    /// Silent data corruption: the GPU corrupted state at
+    /// `corrupt_at_hours` but the event is invisible until a validation
+    /// sweep fires at `at_hours` — from then on it behaves like a hard
+    /// failure, and the detection lag (`at_hours - corrupt_at_hours`)
+    /// is charged as rollback through the transition-cost machinery.
+    Sdc { corrupt_at_hours: f64 },
+}
+
 /// One failure event in a trace.
 #[derive(Clone, Copy, Debug)]
 pub struct FailureEvent {
@@ -15,6 +35,7 @@ pub struct FailureEvent {
     pub gpu: usize,
     pub is_hw: bool,
     pub recover_at_hours: f64,
+    pub kind: EventKind,
 }
 
 /// A generated failure trace over a time horizon.
@@ -48,6 +69,7 @@ impl Trace {
                 gpu,
                 is_hw,
                 recover_at_hours: t + rec,
+                kind: EventKind::Fail,
             });
         }
         Trace { horizon_hours, events }
@@ -94,8 +116,19 @@ impl Trace {
                 break;
             }
             if ev.recover_at_hours > now_hours {
-                for g in blast.affected(topo, ev.gpu) {
-                    fleet.fail(g, ev.at_hours, ev.recover_at_hours);
+                match ev.kind {
+                    EventKind::Degrade { slowdown } => {
+                        for g in blast.affected(topo, ev.gpu) {
+                            fleet.degrade(g, slowdown, ev.at_hours, ev.recover_at_hours);
+                        }
+                    }
+                    // An SDC behaves like a hard failure from its
+                    // detection boundary on (which is `at_hours`).
+                    EventKind::Fail | EventKind::Sdc { .. } => {
+                        for g in blast.affected(topo, ev.gpu) {
+                            fleet.fail(g, ev.at_hours, ev.recover_at_hours);
+                        }
+                    }
                 }
             }
         }
@@ -144,7 +177,13 @@ impl Trace {
             }
             let gpu = rng.index(topo.n_gpus);
             let (is_hw, rec) = model.draw_recovery_hours(rng);
-            events.push(FailureEvent { at_hours: t, gpu, is_hw, recover_at_hours: t + rec });
+            events.push(FailureEvent {
+                at_hours: t,
+                gpu,
+                is_hw,
+                recover_at_hours: t + rec,
+                kind: EventKind::Fail,
+            });
         }
         Trace { horizon_hours, events }
     }

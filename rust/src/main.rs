@@ -15,7 +15,8 @@ use anyhow::Result;
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{
-    sample_failed_gpus, scenario::scenario_from_failed, BlastRadius, FailureModel, Trace,
+    generate_scenario, sample_failed_gpus, scenario::scenario_from_failed, BlastRadius,
+    EventKind, FailureModel, ScenarioConfig, ScenarioKind, Trace,
 };
 use ntp::manager::{FleetStats, MultiPolicySim, SparePolicy, StepMode, StrategyTable};
 use ntp::ntp::{ReshardPlan, ShardMap};
@@ -67,16 +68,31 @@ USAGE: ntp <subcommand> [options]
                 [--policy ntp] (adds a throughput column under that policy)
                 [--model gpt-480b] (model for the policy column)
   trace         --cluster llama3-16k-nvl8 --days 15 [--rate-x 1.0]
+                [--scenario independent|correlated|straggler|sdc]
+                (scenario generator knobs, shared with `fleet`:)
+                [--corr-x 1.0] (scale the correlated rack/switch rates)
+                [--straggler-x 1.0] (scale the straggler onset rate)
+                [--slowdown-lo 0.3] [--slowdown-hi 0.9] (straggler speed
+                as a fraction of healthy, uniform in [lo, hi])
+                [--sdc-x 1.0] (scale the silent-corruption rate)
+                [--validation-hours 6] (SDC validation-sweep period)
   reshard-plan  --k 12288 --n1 32 --n2 30
   power         --model gpt-480b --cluster paper-32k-nvl32 --tp 32 --pp 8
                 --dp 128
   fleet         --strategy dp-drop,ntp,ntp-pw,ckpt-restart,spare-mig,
-                lowpri-donate,partial-restart,power-spares,ckpt-adaptive
+                lowpri-donate,partial-restart,power-spares,ckpt-adaptive,
+                straggler-evict,straggler-tolerate
                 (comma-separated list, evaluated in ONE shared trace sweep;
                 LOWPRI-DONATE/POWER-SPARES report the secondary channel in
-                the 'donated' column)
+                the 'donated' column; STRAGGLER-* differ only on degraded
+                snapshots, i.e. under --scenario straggler)
                 --days 15 [--spares N] (fixed minibatch with N spare domains)
                 [--replicas 16] [--rate-x 10] [--json] [--no-transitions]
+                [--scenario independent|correlated|straggler|sdc] plus the
+                generator knobs listed under `trace` (--corr-x,
+                --straggler-x, --slowdown-lo/-hi, --sdc-x,
+                --validation-hours); --json records seed, scenario kind
+                and generator parameters for reproducibility
                 [--cluster paper-32k-nvl32|paper-100k-nvl72|...] [--pp 8]
                 [--exact] (default: exact event-boundary integration —
                 stats are exact for the trace, transitions charged per
@@ -265,20 +281,93 @@ fn cmd_availability(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the scenario-generator flags shared by `trace` and `fleet`:
+/// `--scenario` picks the generator, the rest scale or override the
+/// calibrated [`ScenarioConfig`] defaults.
+fn scenario_from_args(args: &mut Args) -> Result<ScenarioConfig> {
+    let kind = ScenarioKind::parse(&args.str_or("scenario", "independent"))?;
+    let mut cfg = ScenarioConfig::new(kind);
+    cfg.correlated = cfg.correlated.scaled(args.f64_or("corr-x", 1.0));
+    cfg.straggler = cfg.straggler.scaled(args.f64_or("straggler-x", 1.0));
+    cfg.sdc = cfg.sdc.scaled(args.f64_or("sdc-x", 1.0));
+    if let Some(lo) = args.opt_f64("slowdown-lo") {
+        cfg.straggler.slowdown.0 = lo;
+    }
+    if let Some(hi) = args.opt_f64("slowdown-hi") {
+        cfg.straggler.slowdown.1 = hi;
+    }
+    if let Some(v) = args.opt_f64("validation-hours") {
+        cfg.sdc.validation_interval_hours = v;
+    }
+    let (lo, hi) = cfg.straggler.slowdown;
+    anyhow::ensure!(
+        lo > 0.0 && lo <= hi && hi <= 1.0,
+        "straggler slowdown range must satisfy 0 < --slowdown-lo <= --slowdown-hi <= 1 \
+         (got {lo}..{hi})"
+    );
+    anyhow::ensure!(
+        cfg.sdc.validation_interval_hours > 0.0,
+        "--validation-hours must be positive"
+    );
+    Ok(cfg)
+}
+
+/// Record a scenario's kind and generator parameters into a
+/// [`JsonReport`] (the reproducibility block `fleet --json` and the
+/// fig12 bench both carry).
+fn scenario_report(rep: &mut JsonReport, scen: &ScenarioConfig) {
+    rep.label("scenario", scen.kind.name());
+    match scen.kind {
+        ScenarioKind::Independent => {}
+        ScenarioKind::Correlated => {
+            rep.scalar("corr_node_events_per_node_day", scen.correlated.node_events_per_node_day);
+            rep.scalar(
+                "corr_domain_events_per_domain_day",
+                scen.correlated.domain_events_per_domain_day,
+            );
+            rep.scalar("corr_recovery_hours_lo", scen.correlated.recovery_hours.0);
+            rep.scalar("corr_recovery_hours_hi", scen.correlated.recovery_hours.1);
+        }
+        ScenarioKind::Straggler => {
+            rep.scalar("straggler_events_per_gpu_day", scen.straggler.events_per_gpu_day);
+            rep.scalar("straggler_slowdown_lo", scen.straggler.slowdown.0);
+            rep.scalar("straggler_slowdown_hi", scen.straggler.slowdown.1);
+            rep.scalar("straggler_mean_duration_hours", scen.straggler.mean_duration_hours);
+        }
+        ScenarioKind::Sdc => {
+            rep.scalar("sdc_events_per_gpu_day", scen.sdc.events_per_gpu_day);
+            rep.scalar("sdc_validation_interval_hours", scen.sdc.validation_interval_hours);
+        }
+    }
+}
+
 fn cmd_trace(args: &mut Args) -> Result<()> {
     let cluster = presets::cluster(&args.str_or("cluster", "llama3-16k-nvl8"))?;
     let days = args.f64_or("days", 15.0);
     let rate_x = args.f64_or("rate-x", 1.0);
     let seed = args.u64_or("seed", 7);
+    let scen = scenario_from_args(args)?;
     args.finish()?;
     let topo = Topology::new(&cluster);
     let model = FailureModel::llama3().scaled(rate_x);
     let mut rng = Rng::new(seed);
-    let trace = Trace::generate(&topo, &model, days * 24.0, &mut rng);
+    let trace = generate_scenario(&topo, &model, &scen, days * 24.0, &mut rng);
     let series = trace.failed_series(&topo, BlastRadius::Single, 1.0);
     let fracs: Vec<f64> =
         series.iter().map(|&(_, f)| f as f64 / topo.n_gpus as f64).collect();
-    println!("events: {}", trace.events.len());
+    let (mut fails, mut degrades, mut sdcs) = (0usize, 0usize, 0usize);
+    for ev in &trace.events {
+        match ev.kind {
+            EventKind::Fail => fails += 1,
+            EventKind::Degrade { .. } => degrades += 1,
+            EventKind::Sdc { .. } => sdcs += 1,
+        }
+    }
+    println!("scenario: {}", scen.kind.name());
+    println!(
+        "events: {} (fail {fails}, degrade {degrades}, sdc {sdcs})",
+        trace.events.len()
+    );
     println!("peak failed fraction: {}", pct(fracs.iter().cloned().fold(0.0, f64::max)));
     println!(
         "time above 0.1% failed: {}",
@@ -386,6 +475,9 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let ckpt_write_secs = args.opt_f64("ckpt-write-secs");
     let power_ramp_secs = args.opt_f64("power-ramp-secs");
     let failure_rate = args.opt_f64("failure-rate");
+    // Scenario diversity: which failure process the trace generator
+    // draws from (independent per-GPU Poisson by default).
+    let scen = scenario_from_args(args)?;
     args.finish()?;
     anyhow::ensure!(
         !(no_transitions
@@ -439,7 +531,7 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let traces: Vec<Trace> = (0..trials)
         .map(|i| {
             let mut r = rng.fork(i as u64);
-            Trace::generate(&topo, &fmodel, days * 24.0, &mut r)
+            generate_scenario(&topo, &fmodel, &scen, days * 24.0, &mut r)
         })
         .collect();
     let transition = if no_transitions {
@@ -501,6 +593,10 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let mut rep = JsonReport::new("fleet");
     rep.scalar("days", days);
     rep.scalar("rate_x", rate_x);
+    // Reproducibility block: the PRNG seed, the scenario kind and the
+    // generator parameters that produced the trace batch.
+    rep.scalar("seed", seed as f64);
+    scenario_report(&mut rep, &scen);
     rep.scalar("replicas", n_replicas as f64);
     rep.scalar("spares", spares.unwrap_or(0) as f64);
     rep.scalar("n_gpus", topo.n_gpus as f64);

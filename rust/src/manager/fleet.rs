@@ -15,7 +15,7 @@
 
 use super::spares::SparePolicy;
 use crate::cluster::Topology;
-use crate::failure::{BlastRadius, FleetReplayer, Trace};
+use crate::failure::{BlastRadius, EventKind, FleetReplayer, Trace};
 use crate::parallel::ParallelConfig;
 use crate::policy::{EvalOut, FtPolicy, PolicyCtx, TransitionCosts};
 use crate::power::{min_boost_for, BoostDecision, RackDesign};
@@ -40,6 +40,13 @@ pub struct StrategyTable {
     /// [`healthy_reshard_factor`] (CopyPlan traffic over the scale-up
     /// link) instead of the former hard-coded `0.995`.
     pub reshard_overhead: f64,
+    /// Perf-sensitive fraction of the healthy iteration
+    /// ([`IterationModel::perf_sensitive_fraction`]): the share of
+    /// iteration time that stretches when a straggler paces its TP
+    /// group. Exposed comm terms are insensitive, so a group paced by a
+    /// GPU at slowdown `s` runs at `1/((1-phi) + phi/s)` of healthy
+    /// speed ([`StrategyTable::straggler_drag`]).
+    pub straggler_phi: f64,
 }
 
 impl StrategyTable {
@@ -79,6 +86,41 @@ impl StrategyTable {
             power,
             batch_pw,
             reshard_overhead: healthy_reshard_factor(sim, cfg),
+            straggler_phi: sim.perf_sensitive_fraction(cfg, full_local),
+        }
+    }
+
+    /// Throughput multiplier of a TP group paced by a member delivering
+    /// slowdown-fraction `s` of nominal speed: the perf-sensitive share
+    /// of the iteration stretches by `1/s`, the exposed-communication
+    /// remainder does not. Exactly `1.0` at `s = 1` (the guard keeps
+    /// the no-straggler case bit-exact regardless of how
+    /// `straggler_phi` rounds).
+    pub fn straggler_drag(&self, slowdown: f64) -> f64 {
+        if slowdown >= 1.0 {
+            return 1.0;
+        }
+        let phi = self.straggler_phi;
+        1.0 / ((1.0 - phi) + phi / slowdown.max(1e-9))
+    }
+
+    /// Capacity-weighted mean TP-group drag over a snapshot:
+    /// `Σ_d healthy_d · drag(slowdown_d) / Σ_d healthy_d`. Each domain's
+    /// group paces at its own slowest member (the flexible-minibatch
+    /// model already lets groups contribute independently), so domains
+    /// with no degraded member contribute drag exactly `1.0`.
+    pub fn group_drag(&self, domain_healthy: &[usize], domain_slowdowns: &[f64]) -> f64 {
+        let mut capacity = 0.0;
+        let mut weighted = 0.0;
+        for (&h, &s) in domain_healthy.iter().zip(domain_slowdowns) {
+            let w = h as f64;
+            capacity += w;
+            weighted += w * self.straggler_drag(s);
+        }
+        if capacity <= 0.0 {
+            1.0
+        } else {
+            weighted / capacity
         }
     }
 
@@ -215,6 +257,29 @@ pub(crate) fn exact_boundaries(trace: &Trace) -> Vec<f64> {
     ts
 }
 
+/// Detection-lag rollback bill of every SDC event in the trace,
+/// GPU-seconds. A silent corruption at `corrupt_at_hours` is invisible
+/// until the validation sweep detects it at `at_hours`; the whole job
+/// then discards the work done during the detection lag plus (on
+/// average) half a checkpoint interval to roll back behind the
+/// corruption. Policy-independent — every policy trusts the validation
+/// sweep, so all sweep paths (single-policy, per-step reference and the
+/// shared multi-policy engine) charge the identical `f64` via
+/// [`Accum::charge_rollback`]. Zero for traces without SDC events and
+/// when reconfigurations are free (no [`TransitionCosts`] model).
+pub(crate) fn sdc_rollback_gpu_secs(trace: &Trace, costs: &TransitionCosts, n_gpus: usize) -> f64 {
+    let mut total = 0.0;
+    for ev in &trace.events {
+        if let EventKind::Sdc { corrupt_at_hours } = ev.kind {
+            if ev.at_hours > 0.0 && ev.at_hours < trace.horizon_hours {
+                let lag_secs = (ev.at_hours - corrupt_at_hours) * 3600.0;
+                total += (lag_secs + 0.5 * costs.checkpoint_interval_secs) * n_gpus as f64;
+            }
+        }
+    }
+    total
+}
+
 /// Fleet simulator over a failure trace: drives any [`FtPolicy`]
 /// through the event-driven sweep and integrates steady-state
 /// throughput plus modeled reconfiguration downtime.
@@ -284,8 +349,11 @@ impl<'a> FleetSim<'a> {
             return self.integrate(acc);
         }
         let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
-        let mut prev_counts = rep.advance(0.0).domain_healthy_counts().to_vec();
-        let mut out = self.evaluate(&prev_counts);
+        let start = rep.advance(0.0);
+        let mut prev_counts = start.domain_healthy_counts().to_vec();
+        let mut prev_degraded = start.domain_degraded_counts().to_vec();
+        let mut prev_slow = start.domain_slowdowns().to_vec();
+        let mut out = self.evaluate_degraded(&prev_counts, &prev_degraded, &prev_slow);
         let mut seg_start = 0.0;
         let mut ei = 0usize;
         loop {
@@ -302,26 +370,33 @@ impl<'a> FleetSim<'a> {
                 (Some(c), Some(r)) => c.min(r),
             };
             let fleet = rep.advance(t);
-            if fleet.domain_healthy_counts() != &prev_counts[..] {
+            let changed = fleet.domain_healthy_counts() != &prev_counts[..]
+                || fleet.domain_degraded_counts() != &prev_degraded[..]
+                || fleet.domain_slowdowns() != &prev_slow[..];
+            if changed {
                 // Close the interval the previous snapshot was live
                 // for, charge the reconfiguration at its actual event
                 // time, and evaluate the new snapshot.
                 acc.sample(out, t - seg_start);
-                let counts = fleet.domain_healthy_counts();
-                acc.charge(
-                    self.policy,
-                    &self.ctx(self.live_spares_in(counts)),
+                self.charge_boundary(
+                    &mut acc,
                     &prev_counts,
-                    counts,
+                    fleet.domain_healthy_counts(),
+                    &prev_degraded,
+                    fleet.domain_degraded_counts(),
                 );
                 prev_counts.clear();
-                prev_counts.extend_from_slice(counts);
-                out = self.evaluate(&prev_counts);
+                prev_counts.extend_from_slice(fleet.domain_healthy_counts());
+                prev_degraded.clear();
+                prev_degraded.extend_from_slice(fleet.domain_degraded_counts());
+                prev_slow.clear();
+                prev_slow.extend_from_slice(fleet.domain_slowdowns());
+                out = self.evaluate_degraded(&prev_counts, &prev_degraded, &prev_slow);
                 seg_start = t;
             }
         }
         acc.sample(out, horizon - seg_start);
-        self.integrate(acc)
+        self.integrate_with_rollback(acc, trace)
     }
 
     fn run_grid(&self, trace: &Trace, step_hours: f64) -> FleetStats {
@@ -329,6 +404,7 @@ impl<'a> FleetSim<'a> {
         let mut acc = Accum::default();
         let mut last: Option<(u64, EvalOut)> = None;
         let mut prev_counts: Vec<usize> = Vec::new();
+        let mut prev_degraded: Vec<usize> = Vec::new();
         let mut step = 0usize;
         while let Some((t, dt)) = grid_step(step, step_hours, trace.horizon_hours) {
             let fleet = rep.advance(t);
@@ -336,26 +412,25 @@ impl<'a> FleetSim<'a> {
                 Some((version, out)) if version == fleet.version() => out,
                 _ => {
                     let counts = fleet.domain_healthy_counts();
+                    let degraded = fleet.domain_degraded_counts();
                     if step == 0 {
                         prev_counts = counts.to_vec();
-                    } else if counts != &prev_counts[..] {
-                        acc.charge(
-                            self.policy,
-                            &self.ctx(self.live_spares_in(counts)),
-                            &prev_counts,
-                            counts,
-                        );
+                        prev_degraded = degraded.to_vec();
+                    } else if counts != &prev_counts[..] || degraded != &prev_degraded[..] {
+                        self.charge_boundary(&mut acc, &prev_counts, counts, &prev_degraded, degraded);
                         prev_counts.clear();
                         prev_counts.extend_from_slice(counts);
+                        prev_degraded.clear();
+                        prev_degraded.extend_from_slice(degraded);
                     }
-                    self.evaluate(counts)
+                    self.evaluate_degraded(counts, degraded, fleet.domain_slowdowns())
                 }
             };
             last = Some((fleet.version(), out));
             acc.sample(out, dt);
             step += 1;
         }
-        self.integrate(acc)
+        self.integrate_with_rollback(acc, trace)
     }
 
     /// Reference implementation of [`FleetSim::run`]: rebuild the fleet
@@ -374,26 +449,29 @@ impl<'a> FleetSim<'a> {
     fn run_grid_per_step(&self, trace: &Trace, step_hours: f64) -> FleetStats {
         let mut acc = Accum::default();
         let mut prev_counts: Vec<usize> = Vec::new();
+        let mut prev_degraded: Vec<usize> = Vec::new();
         let mut step = 0usize;
         while let Some((t, dt)) = grid_step(step, step_hours, trace.horizon_hours) {
             let fleet = trace.replay_to(self.topo, self.blast, t);
             let healthy = fleet.domain_healthy_counts();
+            let degraded = fleet.domain_degraded_counts();
             if step == 0 {
                 prev_counts = healthy.to_vec();
-            } else if healthy != &prev_counts[..] {
-                acc.charge(
-                    self.policy,
-                    &self.ctx(self.live_spares_in(healthy)),
-                    &prev_counts,
-                    healthy,
-                );
+                prev_degraded = degraded.to_vec();
+            } else if healthy != &prev_counts[..] || degraded != &prev_degraded[..] {
+                self.charge_boundary(&mut acc, &prev_counts, healthy, &prev_degraded, degraded);
                 prev_counts.clear();
                 prev_counts.extend_from_slice(healthy);
+                prev_degraded.clear();
+                prev_degraded.extend_from_slice(degraded);
             }
-            acc.sample(self.evaluate(healthy), dt);
+            acc.sample(
+                self.evaluate_degraded(healthy, degraded, fleet.domain_slowdowns()),
+                dt,
+            );
             step += 1;
         }
-        self.integrate(acc)
+        self.integrate_with_rollback(acc, trace)
     }
 
     fn run_exact_per_step(&self, trace: &Trace) -> FleetStats {
@@ -402,30 +480,88 @@ impl<'a> FleetSim<'a> {
         if horizon <= 0.0 {
             return self.integrate(acc);
         }
-        let mut prev_counts = trace
-            .replay_to(self.topo, self.blast, 0.0)
-            .domain_healthy_counts()
-            .to_vec();
-        let mut out = self.evaluate(&prev_counts);
+        let start = trace.replay_to(self.topo, self.blast, 0.0);
+        let mut prev_counts = start.domain_healthy_counts().to_vec();
+        let mut prev_degraded = start.domain_degraded_counts().to_vec();
+        let mut prev_slow = start.domain_slowdowns().to_vec();
+        let mut out = self.evaluate_degraded(&prev_counts, &prev_degraded, &prev_slow);
         let mut seg_start = 0.0;
         for &t in &exact_boundaries(trace) {
             let fleet = trace.replay_to(self.topo, self.blast, t);
-            let counts = fleet.domain_healthy_counts();
-            if counts != &prev_counts[..] {
+            let changed = fleet.domain_healthy_counts() != &prev_counts[..]
+                || fleet.domain_degraded_counts() != &prev_degraded[..]
+                || fleet.domain_slowdowns() != &prev_slow[..];
+            if changed {
                 acc.sample(out, t - seg_start);
-                acc.charge(
-                    self.policy,
-                    &self.ctx(self.live_spares_in(counts)),
+                self.charge_boundary(
+                    &mut acc,
                     &prev_counts,
-                    counts,
+                    fleet.domain_healthy_counts(),
+                    &prev_degraded,
+                    fleet.domain_degraded_counts(),
                 );
                 prev_counts.clear();
-                prev_counts.extend_from_slice(counts);
-                out = self.evaluate(&prev_counts);
+                prev_counts.extend_from_slice(fleet.domain_healthy_counts());
+                prev_degraded.clear();
+                prev_degraded.extend_from_slice(fleet.domain_degraded_counts());
+                prev_slow.clear();
+                prev_slow.extend_from_slice(fleet.domain_slowdowns());
+                out = self.evaluate_degraded(&prev_counts, &prev_degraded, &prev_slow);
                 seg_start = t;
             }
         }
         acc.sample(out, horizon - seg_start);
+        self.integrate_with_rollback(acc, trace)
+    }
+
+    /// Close one observed change boundary: charge whichever transition
+    /// kinds actually changed — healthy counts through
+    /// [`FtPolicy::transition_cost`], degraded counts through
+    /// [`FtPolicy::degrade_transition_cost`] — as **one** transition
+    /// event. Fail-only traces never change the degraded counts, so
+    /// they charge exactly the pre-straggler cost (the second term is
+    /// never added, keeping those paths bit-identical); slowdown-only
+    /// boundaries (a deeper degrade landing on an already-degraded GPU)
+    /// re-evaluate throughput but reconfigure nothing and are not
+    /// charged. The shared multi-policy sweep
+    /// ([`super::MultiPolicySim`]) mirrors this structure
+    /// operation-for-operation.
+    fn charge_boundary(
+        &self,
+        acc: &mut Accum,
+        prev_counts: &[usize],
+        next_counts: &[usize],
+        prev_degraded: &[usize],
+        next_degraded: &[usize],
+    ) {
+        let counts_changed = prev_counts != next_counts;
+        let degraded_changed = prev_degraded != next_degraded;
+        if !(counts_changed || degraded_changed) {
+            return;
+        }
+        let ctx = self.ctx(self.live_spares_in(next_counts));
+        let mut cost = 0.0;
+        if counts_changed {
+            cost += self.policy.transition_cost(&ctx, prev_counts, next_counts);
+        }
+        if degraded_changed {
+            cost += self.policy.degrade_transition_cost(&ctx, prev_degraded, next_degraded);
+        }
+        acc.charge_cost(cost);
+    }
+
+    /// [`FleetSim::integrate`] with the trace-global SDC rollback bill
+    /// ([`sdc_rollback_gpu_secs`]) charged first — every sweep path
+    /// funnels through here so all add the identical `f64`. Free when
+    /// reconfigurations are free (`transition: None`), like every other
+    /// downtime charge.
+    fn integrate_with_rollback(&self, mut acc: Accum, trace: &Trace) -> FleetStats {
+        if let Some(costs) = &self.transition {
+            let bill = sdc_rollback_gpu_secs(trace, costs, self.topo.n_gpus);
+            if bill > 0.0 {
+                acc.charge_rollback(bill);
+            }
+        }
         self.integrate(acc)
     }
 
@@ -481,6 +617,54 @@ impl<'a> FleetSim<'a> {
             }
         }
     }
+
+    /// [`FleetSim::evaluate`] for a snapshot that carries degradation
+    /// info ([`crate::cluster::FleetHealth::domain_degraded_counts`] /
+    /// [`crate::cluster::FleetHealth::domain_slowdowns`]). Snapshots
+    /// with no degraded *job* domain short-circuit to the plain
+    /// [`FleetSim::evaluate`] path — fail-only traces never see the
+    /// degrade-aware machinery, which is what keeps their stats
+    /// bit-identical to the pre-straggler engine. Degraded GPUs in
+    /// *spare* domains are ignored: a degraded spare is still alive and
+    /// still counts toward the live pool; it only drags once migrated
+    /// into the job (a second-order effect this model does not charge).
+    pub fn evaluate_degraded(
+        &self,
+        domain_healthy: &[usize],
+        domain_degraded: &[usize],
+        domain_slowdowns: &[f64],
+    ) -> EvalOut {
+        match self.spares {
+            None => {
+                if domain_degraded.iter().all(|&d| d == 0) {
+                    return self.evaluate(domain_healthy);
+                }
+                self.policy.eval_degraded(
+                    &self.ctx(None),
+                    domain_healthy,
+                    domain_degraded,
+                    domain_slowdowns,
+                )
+            }
+            Some(pool) => {
+                let (job_healthy, live) = super::spares::split_job_spares(
+                    domain_healthy,
+                    self.topo.domain_size,
+                    &pool,
+                );
+                let n_job = job_healthy.len();
+                if domain_degraded[..n_job].iter().all(|&d| d == 0) {
+                    return self.evaluate(domain_healthy);
+                }
+                self.policy.eval_degraded(
+                    &self.ctx(Some(live)),
+                    job_healthy,
+                    &domain_degraded[..n_job],
+                    &domain_slowdowns[..n_job],
+                )
+            }
+        }
+    }
 }
 
 /// Shared integration state of every sweep implementation
@@ -526,29 +710,26 @@ impl Accum {
         self.donated_sum += out.donated * dt_hours;
     }
 
-    /// Charge the policy's transition cost for an observed health
-    /// change. In [`StepMode::Exact`] every change boundary charges at
-    /// its actual event time; in [`StepMode::Grid`] events landing
-    /// between two samples collapse into one charge (all grid paths
-    /// sample the same grid, so all see the same transitions). `ctx`
-    /// must carry the live-spare-adjusted pool of the `next` snapshot
-    /// ([`FleetSim::live_spares_in`]).
-    pub(crate) fn charge(
-        &mut self,
-        policy: &dyn FtPolicy,
-        ctx: &PolicyCtx,
-        prev: &[usize],
-        next: &[usize],
-    ) {
-        self.charge_cost(policy.transition_cost(ctx, prev, next));
-    }
-
-    /// [`Accum::charge`] with the cost already computed — the shared
-    /// sweep's count-keyed transition memo
-    /// ([`crate::manager::ResponseMemo`]) lands here, so the memoized
-    /// and direct paths add the identical `f64`.
+    /// Charge one observed change boundary's transition cost. In
+    /// [`StepMode::Exact`] every change boundary charges at its actual
+    /// event time; in [`StepMode::Grid`] events landing between two
+    /// samples collapse into one charge (all grid paths sample the same
+    /// grid, so all see the same transitions). The cost arrives already
+    /// computed — `FleetSim::charge_boundary` and the shared sweep's
+    /// count-keyed transition memo ([`crate::manager::ResponseMemo`])
+    /// both land here, so the memoized and direct paths add the
+    /// identical `f64`.
     pub(crate) fn charge_cost(&mut self, cost_gpu_secs: f64) {
         self.transitions += 1;
+        self.cost_gpu_secs += cost_gpu_secs;
+    }
+
+    /// Charge downtime that is *not* a reconfiguration transition —
+    /// the SDC detection-lag rollback bill
+    /// ([`sdc_rollback_gpu_secs`]): adds GPU-seconds to the downtime
+    /// pool without bumping the transition counter (the job did not
+    /// reconfigure, it rolled back and replayed).
+    pub(crate) fn charge_rollback(&mut self, cost_gpu_secs: f64) {
         self.cost_gpu_secs += cost_gpu_secs;
     }
 
@@ -622,6 +803,32 @@ mod tests {
         // modeled reshard overhead is sub-percent, bounded by the
         // retired 0.995 constant
         assert!((0.995..1.0).contains(&t.reshard_overhead), "{}", t.reshard_overhead);
+    }
+
+    #[test]
+    fn straggler_drag_interpolates_between_comm_and_compute_bound() {
+        let (sim, cfg) = small_setup();
+        let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+        let t = StrategyTable::build(&sim, &cfg, &rack);
+        // the paper's workload is strongly compute-bound, so most of
+        // the iteration stretches with a slow member
+        assert!(
+            t.straggler_phi > 0.5 && t.straggler_phi <= 1.0,
+            "phi {}",
+            t.straggler_phi
+        );
+        // no straggler: exactly no drag (bit-exact guard)
+        assert_eq!(t.straggler_drag(1.0), 1.0);
+        // deeper slowdown drags harder, bounded below by the slowdown
+        // itself (only the perf-sensitive share stretches)
+        assert!(t.straggler_drag(0.5) < t.straggler_drag(0.9));
+        let half = t.straggler_drag(0.5);
+        assert!((0.5..1.0).contains(&half), "drag(0.5) = {half}");
+        // capacity-weighted aggregate: one dragged domain out of four
+        let drag = t.group_drag(&[32, 32, 32, 32], &[1.0, 1.0, 0.5, 1.0]);
+        assert!((drag - (3.0 + half) / 4.0).abs() < 1e-12, "drag {drag} half {half}");
+        // all-healthy snapshot: exactly 1.0
+        assert_eq!(t.group_drag(&[32; 4], &[1.0; 4]), 1.0);
     }
 
     #[test]

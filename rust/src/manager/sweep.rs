@@ -30,7 +30,9 @@
 //!   always reorder — every in-tree policy's response is a pure
 //!   function of this signature (property-tested in
 //!   `rust/tests/multi_policy_sweep.rs`; unpacked flexible mode is
-//!   position-dependent and bypasses the memo).
+//!   position-dependent and bypasses the memo, as do snapshots with
+//!   degraded job domains — TP-group drag is position-weighted, so a
+//!   degraded response is not a function of the damage multiset).
 //! * [`ResponseMemo`] — a signature-keyed response cache (each unique
 //!   key holds every policy's response, so a snapshot costs one hash),
 //!   shared across snapshots, trials and sweep points, carrying the
@@ -243,6 +245,7 @@ fn table_fingerprint(table: &StrategyTable) -> u64 {
         }
     }
     table.reshard_overhead.to_bits().hash(&mut h);
+    table.straggler_phi.to_bits().hash(&mut h);
     h.finish()
 }
 
@@ -604,26 +607,44 @@ impl<'a> MultiPolicySim<'a> {
             return self.finalize_all(&accs);
         }
         let mut outs: Vec<EvalOut> = vec![EvalOut::default(); n_policies];
-        let mut prev_counts: Vec<usize> = rep.advance(0.0).domain_healthy_counts().to_vec();
-        self.evaluate_all(&prev_counts, memo, &mut outs);
+        let start = rep.advance(0.0);
+        let mut prev_counts = start.domain_healthy_counts().to_vec();
+        let mut prev_degraded = start.domain_degraded_counts().to_vec();
+        let mut prev_slow = start.domain_slowdowns().to_vec();
+        self.evaluate_all(&prev_counts, &prev_degraded, &prev_slow, memo, &mut outs);
         let mut seg_start = 0.0;
         while let Some(t) = rep.next_change_hours().filter(|&t| t < horizon) {
             rep.advance(t);
-            let counts = rep.fleet().domain_healthy_counts();
-            if counts != &prev_counts[..] {
+            let fleet = rep.fleet();
+            let changed = fleet.domain_healthy_counts() != &prev_counts[..]
+                || fleet.domain_degraded_counts() != &prev_degraded[..]
+                || fleet.domain_slowdowns() != &prev_slow[..];
+            if changed {
                 for (acc, &out) in accs.iter_mut().zip(&outs) {
                     acc.sample(out, t - seg_start);
                 }
-                self.charge_all(memo, &mut accs, &prev_counts, counts);
+                self.charge_all(
+                    memo,
+                    &mut accs,
+                    &prev_counts,
+                    fleet.domain_healthy_counts(),
+                    &prev_degraded,
+                    fleet.domain_degraded_counts(),
+                );
                 prev_counts.clear();
-                prev_counts.extend_from_slice(counts);
-                self.evaluate_all(&prev_counts, memo, &mut outs);
+                prev_counts.extend_from_slice(fleet.domain_healthy_counts());
+                prev_degraded.clear();
+                prev_degraded.extend_from_slice(fleet.domain_degraded_counts());
+                prev_slow.clear();
+                prev_slow.extend_from_slice(fleet.domain_slowdowns());
+                self.evaluate_all(&prev_counts, &prev_degraded, &prev_slow, memo, &mut outs);
                 seg_start = t;
             }
         }
         for (acc, &out) in accs.iter_mut().zip(&outs) {
             acc.sample(out, horizon - seg_start);
         }
+        self.charge_rollback_all(rep.trace(), &mut accs);
         self.finalize_all(&accs)
     }
 
@@ -640,6 +661,7 @@ impl<'a> MultiPolicySim<'a> {
         let mut outs: Vec<EvalOut> = vec![EvalOut::default(); n_policies];
         let mut last_version: Option<u64> = None;
         let mut prev_counts: Vec<usize> = Vec::new();
+        let mut prev_degraded: Vec<usize> = Vec::new();
         let horizon = rep.horizon_hours();
         let mut step = 0usize;
         while let Some((t, dt)) = grid_step(step, step_hours, horizon) {
@@ -647,15 +669,26 @@ impl<'a> MultiPolicySim<'a> {
             let version = fleet.version();
             if last_version != Some(version) {
                 let counts = fleet.domain_healthy_counts();
+                let degraded = fleet.domain_degraded_counts();
                 if step == 0 {
                     prev_counts.clear();
                     prev_counts.extend_from_slice(counts);
-                } else if counts != &prev_counts[..] {
-                    self.charge_all(memo, &mut accs, &prev_counts, counts);
+                    prev_degraded.clear();
+                    prev_degraded.extend_from_slice(degraded);
+                } else if counts != &prev_counts[..] || degraded != &prev_degraded[..] {
+                    self.charge_all(memo, &mut accs, &prev_counts, counts, &prev_degraded, degraded);
                     prev_counts.clear();
                     prev_counts.extend_from_slice(counts);
+                    prev_degraded.clear();
+                    prev_degraded.extend_from_slice(degraded);
                 }
-                self.evaluate_all(&prev_counts, memo, &mut outs);
+                self.evaluate_all(
+                    &prev_counts,
+                    &prev_degraded,
+                    fleet.domain_slowdowns(),
+                    memo,
+                    &mut outs,
+                );
                 last_version = Some(version);
             }
             for (acc, &out) in accs.iter_mut().zip(&outs) {
@@ -663,21 +696,31 @@ impl<'a> MultiPolicySim<'a> {
             }
             step += 1;
         }
+        self.charge_rollback_all(rep.trace(), &mut accs);
         self.finalize_all(&accs)
     }
 
-    /// Charge every policy's transition cost for one observed health
-    /// change, through the count-keyed memo where sound — verbatim what
-    /// `FleetSim` charges via `Accum::charge` (same ctx derivation from
-    /// the live-spare-adjusted pool of `next`), so memoized and direct
-    /// paths add identical `f64`s.
+    /// Charge every policy for one observed boundary, through the
+    /// count-keyed memo where sound — verbatim what `FleetSim` charges
+    /// via `charge_boundary` (same ctx derivation from the
+    /// live-spare-adjusted pool of `next`, same fail-layer + degrade
+    /// split), so memoized and direct paths add identical `f64`s.
+    /// Degrade charges stay outside the transition memo: they are cheap
+    /// to compute and only two registry policies make them nonzero.
     fn charge_all(
         &self,
         memo: &mut ResponseMemo,
         accs: &mut [Accum],
         prev: &[usize],
         next: &[usize],
+        prev_degraded: &[usize],
+        next_degraded: &[usize],
     ) {
+        let counts_changed = prev != next;
+        let degraded_changed = prev_degraded != next_degraded;
+        if !(counts_changed || degraded_changed) {
+            return;
+        }
         let ctx = self.ctx(self.live_spares_in(next));
         let changed = changed_domains(prev, next) as u32;
         let degraded = degraded_domains(prev, next) as u32;
@@ -686,9 +729,31 @@ impl<'a> MultiPolicySim<'a> {
             None => u32::MAX,
         };
         for (i, (acc, &policy)) in accs.iter_mut().zip(self.policies).enumerate() {
-            let key = (i as u32, changed, degraded, live, self.topo.n_gpus as u64);
-            let cost = memo.transition_cost(key, policy, &ctx, prev, next);
+            let mut cost = 0.0;
+            if counts_changed {
+                let key = (i as u32, changed, degraded, live, self.topo.n_gpus as u64);
+                cost += memo.transition_cost(key, policy, &ctx, prev, next);
+            }
+            if degraded_changed {
+                cost += policy.degrade_transition_cost(&ctx, prev_degraded, next_degraded);
+            }
             acc.charge_cost(cost);
+        }
+    }
+
+    /// Trace-global SDC detection-lag rollback, billed identically into
+    /// every policy's accumulator — verbatim
+    /// `FleetSim::integrate_with_rollback` (corruption is invisible
+    /// until the validation sweep fires, so no policy can dodge the
+    /// recompute).
+    fn charge_rollback_all(&self, trace: &Trace, accs: &mut [Accum]) {
+        if let Some(costs) = &self.transition {
+            let bill = super::fleet::sdc_rollback_gpu_secs(trace, costs, self.topo.n_gpus);
+            if bill > 0.0 {
+                for acc in accs.iter_mut() {
+                    acc.charge_rollback(bill);
+                }
+            }
         }
     }
 
@@ -702,10 +767,14 @@ impl<'a> MultiPolicySim<'a> {
 
     /// Evaluate one snapshot for every policy, through the memo when
     /// sound. Job/spare split and live-pool derivation are verbatim
-    /// `FleetSim::evaluate` / `FleetSim::live_spares_in`.
+    /// `FleetSim::evaluate` / `FleetSim::live_spares_in`; snapshots with
+    /// degraded job domains take the degradation-aware path, verbatim
+    /// `FleetSim::evaluate_degraded`.
     fn evaluate_all(
         &self,
         counts: &[usize],
+        degraded: &[usize],
+        slowdowns: &[f64],
         memo: &mut ResponseMemo,
         outs: &mut [EvalOut],
     ) {
@@ -722,6 +791,27 @@ impl<'a> MultiPolicySim<'a> {
             }
         };
         let ctx = self.ctx(live);
+        // Degraded snapshots BYPASS the response memo: `group_drag` sums
+        // drag in domain-position order, so a degraded response is NOT a
+        // pure function of the damage multiset the signature encodes —
+        // memoizing would serve another permutation's bits. Failures are
+        // the common case and stragglers heal, so fail-only traces (and
+        // fail-only stretches of mixed traces) keep the full memo.
+        // Degraded SPARE domains are ignored, like `FleetSim`: a slow
+        // spare is still alive and still counts in the live pool.
+        let n_job = job_healthy.len();
+        if degraded[..n_job].iter().any(|&d| d > 0) {
+            for (out, &policy) in outs.iter_mut().zip(self.policies) {
+                *out = policy.eval_degraded_with(
+                    &ctx,
+                    job_healthy,
+                    &degraded[..n_job],
+                    &slowdowns[..n_job],
+                    &mut memo.scratch,
+                );
+            }
+            return;
+        }
         // Memoization is sound iff the response is a pure function of
         // the damaged-domain multiset: packed mode, or fixed-minibatch
         // mode (spare substitution + packing always reorder). Unpacked

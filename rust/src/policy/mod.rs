@@ -40,6 +40,10 @@
 //!   interval set by the Young/Daly optimum for the trace's *observed*
 //!   failure rate instead of the fixed 3600 s (and the checkpoint-write
 //!   overhead it implies charged against steady-state throughput).
+//! * [`straggler`] — detection-aware responses to degraded-but-alive
+//!   GPUs: `straggler-evict` reshards stragglers away like failures
+//!   (NTP on degradation-adjusted counts, paying reshard transitions),
+//!   `straggler-tolerate` keeps them and eats the TP-group drag.
 //!
 //! [`registry`] maps CLI names to policy instances; every registered
 //! policy is exercised by the registry-driven conformance suite
@@ -53,6 +57,7 @@ pub mod partial_restart;
 pub mod power_spares;
 pub mod registry;
 pub mod spare_migration;
+pub mod straggler;
 
 pub use adaptive_checkpoint::AdaptiveCheckpoint;
 pub use checkpoint::CheckpointRestart;
@@ -60,6 +65,7 @@ pub use lowpri_donation::LowpriDonate;
 pub use partial_restart::PartialRestart;
 pub use power_spares::PowerSpares;
 pub use spare_migration::SpareMigration;
+pub use straggler::{StragglerEvict, StragglerTolerate};
 
 use crate::manager::packing::PackScratch;
 use crate::manager::{SparePolicy, StrategyTable};
@@ -172,6 +178,9 @@ pub struct EvalScratch {
     pub order: Vec<usize>,
     /// Counting-sort histogram for the packing fast path.
     pub pack: PackScratch,
+    /// Degradation-adjusted healthy counts (`STRAGGLER-EVICT` treats
+    /// degraded GPUs as failed before delegating to the NTP response).
+    pub degrade_eff: Vec<usize>,
 }
 
 /// A fault-tolerance policy: per-snapshot replica decisions plus the
@@ -214,6 +223,60 @@ pub trait FtPolicy: Send + Sync {
     /// `0.0` when `ctx.transition` is `None` — that is what makes the
     /// legacy ports bit-identical to the pre-policy-layer paths.
     fn transition_cost(&self, _ctx: &PolicyCtx, _prev: &[usize], _next: &[usize]) -> f64 {
+        0.0
+    }
+
+    /// Evaluate one snapshot that carries *degradation* information:
+    /// `job_degraded[d]` GPUs of job domain `d` are alive but slow, the
+    /// slowest delivering fraction `job_slowdowns[d]` of nominal speed
+    /// (exactly `1.0` where none are degraded). The default keeps the
+    /// degraded GPUs in place: it responds to the plain healthy counts
+    /// and multiplies throughput by the capacity-weighted TP-group drag
+    /// ([`StrategyTable::group_drag`] — the slowest member paces its
+    /// group). With no degraded domain the drag factor is exactly `1.0`
+    /// and this collapses bit-exactly to the plain respond path.
+    /// `STRAGGLER-EVICT` overrides it to treat degraded GPUs as failed
+    /// instead (reshard away the straggler, keep full group pace).
+    fn eval_degraded(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        job_degraded: &[usize],
+        job_slowdowns: &[f64],
+    ) -> EvalOut {
+        let _ = job_degraded;
+        let mut out = EvalOut::of(&self.respond(ctx, job_healthy), ctx.table.full_local_batch);
+        out.tput *= ctx.table.group_drag(job_healthy, job_slowdowns);
+        out
+    }
+
+    /// Allocation-free [`FtPolicy::eval_degraded`] — the shared-sweep
+    /// hot path ([`crate::manager::MultiPolicySim`]); must agree
+    /// bit-for-bit with it, exactly as [`FtPolicy::respond_with`] must
+    /// agree with [`FtPolicy::respond`] (both pinned by the conformance
+    /// suite).
+    fn eval_degraded_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        job_degraded: &[usize],
+        job_slowdowns: &[f64],
+        scratch: &mut EvalScratch,
+    ) -> EvalOut {
+        let _ = job_degraded;
+        let mut out = self.respond_with(ctx, job_healthy, scratch);
+        out.tput *= ctx.table.group_drag(job_healthy, job_slowdowns);
+        out
+    }
+
+    /// GPU-seconds of downtime charged when the per-domain *degraded*
+    /// counts change (straggler onset or remediation) — the
+    /// degradation-layer counterpart of [`FtPolicy::transition_cost`],
+    /// charged by the sweeps only when the degraded counts actually
+    /// differ. Defaults to `0.0`: policies that keep stragglers in
+    /// place reconfigure nothing when one appears. Must return `0.0`
+    /// when `ctx.transition` is `None`.
+    fn degrade_transition_cost(&self, _ctx: &PolicyCtx, _prev: &[usize], _next: &[usize]) -> f64 {
         0.0
     }
 
@@ -376,12 +439,13 @@ mod tests {
 
     #[test]
     fn observed_rate_is_events_per_hour() {
-        use crate::failure::{FailureEvent, Trace};
+        use crate::failure::{EventKind, FailureEvent, Trace};
         let mk = |gpu| FailureEvent {
             at_hours: 1.0,
             gpu,
             is_hw: false,
             recover_at_hours: 2.0,
+            kind: EventKind::Fail,
         };
         let trace = Trace { horizon_hours: 48.0, events: vec![mk(0), mk(1), mk(2)] };
         let base = TransitionCosts {

@@ -13,11 +13,12 @@ use super::lowpri_donation::LOWPRI_DONATE;
 use super::partial_restart::PARTIAL_RESTART;
 use super::power_spares::POWER_SPARES;
 use super::spare_migration::SPARE_MIGRATION;
+use super::straggler::{STRAGGLER_EVICT, STRAGGLER_TOLERATE};
 use super::FtPolicy;
 
 /// Every registered policy with its default parameters (the
 /// conformance suite runs against exactly this list).
-pub fn all() -> [&'static dyn FtPolicy; 9] {
+pub fn all() -> [&'static dyn FtPolicy; 11] {
     [
         &DP_DROP,
         &NTP,
@@ -28,6 +29,8 @@ pub fn all() -> [&'static dyn FtPolicy; 9] {
         &PARTIAL_RESTART,
         &POWER_SPARES,
         &CKPT_ADAPTIVE,
+        &STRAGGLER_EVICT,
+        &STRAGGLER_TOLERATE,
     ]
 }
 
@@ -49,9 +52,12 @@ pub fn parse(name: &str) -> anyhow::Result<&'static dyn FtPolicy> {
         "partial-restart" | "partial" => &PARTIAL_RESTART,
         "power-spares" | "dark-spares" => &POWER_SPARES,
         "ckpt-adaptive" | "adaptive" | "young-daly" => &CKPT_ADAPTIVE,
+        "straggler-evict" | "evict" => &STRAGGLER_EVICT,
+        "straggler-tolerate" | "tolerate" => &STRAGGLER_TOLERATE,
         other => anyhow::bail!(
             "unknown policy '{other}' (known: dp-drop, ntp, ntp-pw, ckpt-restart, \
-             spare-mig, lowpri-donate, partial-restart, power-spares, ckpt-adaptive)"
+             spare-mig, lowpri-donate, partial-restart, power-spares, ckpt-adaptive, \
+             straggler-evict, straggler-tolerate)"
         ),
     })
 }
@@ -82,6 +88,8 @@ mod tests {
         assert_eq!(parse("partial").unwrap().name(), "PARTIAL-RESTART");
         assert_eq!(parse("dark-spares").unwrap().name(), "POWER-SPARES");
         assert_eq!(parse("young-daly").unwrap().name(), "CKPT-ADAPTIVE");
+        assert_eq!(parse("evict").unwrap().name(), "STRAGGLER-EVICT");
+        assert_eq!(parse("tolerate").unwrap().name(), "STRAGGLER-TOLERATE");
         let l = parse_list("ntp, ntp-pw,ckpt-adaptive").unwrap();
         assert_eq!(
             l.iter().map(|p| p.name()).collect::<Vec<_>>(),
@@ -92,12 +100,12 @@ mod tests {
     }
 
     #[test]
-    fn registry_is_nine_distinct_policies() {
+    fn registry_is_eleven_distinct_policies() {
         let names = names();
-        assert_eq!(names.len(), 9);
+        assert_eq!(names.len(), 11);
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();
-        assert_eq!(dedup.len(), 9);
+        assert_eq!(dedup.len(), 11);
     }
 }

@@ -1,0 +1,276 @@
+//! Detection-aware straggler policies: what to do with a GPU that is
+//! alive but slow (thermal throttling, a flaky NVLink lane, ECC
+//! retirement storms — the degraded-but-alive events the straggler
+//! scenario generator emits).
+//!
+//! Both policies are exactly NTP on plain health counts — a straggler
+//! is invisible to liveness checks, so a policy that only sees healthy
+//! counts cannot react to it (and the registry-driven conformance
+//! suite drives plain counts through every policy). They differ only
+//! in the degradation-aware evaluation path:
+//!
+//! * [`STRAGGLER_EVICT`] — treat a degraded GPU as failed: reshard the
+//!   affected replicas down one TP degree (the NTP response to the
+//!   degradation-adjusted counts) and keep full group pace. Pays an
+//!   NTP-style reshard transition every time the degraded counts
+//!   change, wins when the slowdown is deep.
+//! * [`STRAGGLER_TOLERATE`] — keep the straggler and eat the TP-group
+//!   drag (the [`FtPolicy::eval_degraded`] default: the slowest member
+//!   paces its group). Reconfigures nothing, wins when the slowdown is
+//!   mild. The crossover slowdown between the two is the quantity the
+//!   `fig12_scenarios` bench pins.
+
+use super::legacy::NTP;
+use super::{
+    affected_gpus, changed_domains, EvalOut, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse,
+};
+
+/// Evict stragglers: degraded GPUs are resharded away like failures.
+#[derive(Clone, Copy, Debug)]
+pub struct StragglerEvict;
+
+/// Tolerate stragglers: degraded GPUs stay and drag their TP group.
+#[derive(Clone, Copy, Debug)]
+pub struct StragglerTolerate;
+
+pub static STRAGGLER_EVICT: StragglerEvict = StragglerEvict;
+pub static STRAGGLER_TOLERATE: StragglerTolerate = StragglerTolerate;
+
+impl FtPolicy for StragglerEvict {
+    fn name(&self) -> &'static str {
+        "STRAGGLER-EVICT"
+    }
+
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
+        NTP.respond(ctx, job_healthy)
+    }
+
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        scratch: &mut EvalScratch,
+    ) -> EvalOut {
+        NTP.respond_with(ctx, job_healthy, scratch)
+    }
+
+    fn eval_degraded(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        job_degraded: &[usize],
+        job_slowdowns: &[f64],
+    ) -> EvalOut {
+        // Degraded GPUs count as failed; the evicted group runs at full
+        // pace, so the slowdown factors are irrelevant here.
+        let _ = job_slowdowns;
+        let effective: Vec<usize> = job_healthy
+            .iter()
+            .zip(job_degraded)
+            .map(|(&h, &d)| h.saturating_sub(d))
+            .collect();
+        EvalOut::of(&NTP.respond(ctx, &effective), ctx.table.full_local_batch)
+    }
+
+    fn eval_degraded_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        job_degraded: &[usize],
+        job_slowdowns: &[f64],
+        scratch: &mut EvalScratch,
+    ) -> EvalOut {
+        let _ = job_slowdowns;
+        // Take the buffer out so the NTP delegate may use the rest of
+        // the scratch; element-wise identical to `eval_degraded`'s
+        // `effective`, so both paths stay bit-identical.
+        let mut eff = std::mem::take(&mut scratch.degrade_eff);
+        eff.clear();
+        eff.extend(job_healthy.iter().zip(job_degraded).map(|(&h, &d)| h.saturating_sub(d)));
+        let out = NTP.respond_with(ctx, &eff, scratch);
+        scratch.degrade_eff = eff;
+        out
+    }
+
+    fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        NTP.transition_cost(ctx, prev, next)
+    }
+
+    fn degrade_transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        let Some(t) = ctx.transition else { return 0.0 };
+        // Evicting (or readmitting) a straggler reshards the replicas
+        // containing its domain — the same live TP reconfiguration an
+        // NTP health transition pays.
+        affected_gpus(ctx, changed_domains(prev, next)) as f64 * t.reshard_secs
+    }
+
+    fn transition_cost_is_count_pure(&self) -> bool {
+        true
+    }
+}
+
+impl FtPolicy for StragglerTolerate {
+    fn name(&self) -> &'static str {
+        "STRAGGLER-TOLERATE"
+    }
+
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
+        NTP.respond(ctx, job_healthy)
+    }
+
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        scratch: &mut EvalScratch,
+    ) -> EvalOut {
+        NTP.respond_with(ctx, job_healthy, scratch)
+    }
+
+    // eval_degraded / eval_degraded_with: the trait defaults — respond
+    // to plain counts, multiply by the TP-group drag. That IS the
+    // tolerate policy; degrade_transition_cost stays the default 0.0
+    // (nothing reconfigures when a straggler appears or heals).
+
+    fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        NTP.transition_cost(ctx, prev, next)
+    }
+
+    fn transition_cost_is_count_pure(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, Dtype, WorkloadConfig};
+    use crate::manager::StrategyTable;
+    use crate::parallel::ParallelConfig;
+    use crate::policy::TransitionCosts;
+    use crate::power::RackDesign;
+    use crate::sim::{IterationModel, SimParams};
+
+    fn setup() -> (IterationModel, ParallelConfig, StrategyTable) {
+        let sim = IterationModel::new(
+            presets::model("gpt-480b").unwrap(),
+            WorkloadConfig {
+                seq_len: 16_384,
+                minibatch_tokens: 2 * 1024 * 1024,
+                dtype: Dtype::BF16,
+            },
+            presets::cluster("paper-32k-nvl32").unwrap(),
+            SimParams::default(),
+        );
+        let cfg = ParallelConfig { tp: 32, pp: 4, dp: 16, microbatch: 1 };
+        let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+        let table = StrategyTable::build(&sim, &cfg, &rack);
+        (sim, cfg, table)
+    }
+
+    fn ctx<'a>(
+        table: &'a StrategyTable,
+        transition: Option<TransitionCosts>,
+    ) -> PolicyCtx<'a> {
+        PolicyCtx {
+            table,
+            domain_size: 32,
+            domains_per_replica: 4,
+            packed: true,
+            spares: None,
+            n_gpus: 2048,
+            transition,
+        }
+    }
+
+    #[test]
+    fn plain_counts_are_exactly_ntp() {
+        let (_sim, _cfg, table) = setup();
+        let c = ctx(&table, None);
+        let mut healthy = vec![32usize; 64];
+        healthy[3] = 31;
+        healthy[17] = 30;
+        for policy in [&STRAGGLER_EVICT as &dyn FtPolicy, &STRAGGLER_TOLERATE] {
+            let ours = policy.respond(&c, &healthy);
+            let ntp = NTP.respond(&c, &healthy);
+            assert_eq!(ours.replicas, ntp.replicas, "{}", policy.name());
+            assert_eq!(ours.paused, ntp.paused);
+            assert_eq!(ours.overhead, ntp.overhead);
+            let mut s = EvalScratch::default();
+            assert_eq!(
+                policy.respond_with(&c, &healthy, &mut s),
+                EvalOut::of(&ours, table.full_local_batch),
+            );
+        }
+    }
+
+    #[test]
+    fn evict_reshards_tolerate_drags() {
+        let (_sim, _cfg, table) = setup();
+        let c = ctx(&table, None);
+        let healthy = vec![32usize; 64];
+        let mut degraded = vec![0usize; 64];
+        degraded[5] = 1;
+        let mut slow = vec![1.0f64; 64];
+        slow[5] = 0.4;
+
+        // Evict responds as if domain 5 lost a GPU: same as NTP on the
+        // adjusted counts, full pace, slowdown ignored.
+        let mut eff = healthy.clone();
+        eff[5] = 31;
+        let evict = STRAGGLER_EVICT.eval_degraded(&c, &healthy, &degraded, &slow);
+        assert_eq!(evict, STRAGGLER_EVICT.evaluate_reference(&c, &eff));
+        // Tolerate keeps full counts but eats the group drag.
+        let tol = STRAGGLER_TOLERATE.eval_degraded(&c, &healthy, &degraded, &slow);
+        let drag = table.group_drag(&healthy, &slow);
+        assert!(drag < 1.0);
+        assert!((tol.tput - drag).abs() < 1e-12, "tol {} drag {drag}", tol.tput);
+
+        // Deep slowdown: evicting wins. Mild slowdown: tolerating wins.
+        slow[5] = 0.3;
+        let tol_deep = STRAGGLER_TOLERATE.eval_degraded(&c, &healthy, &degraded, &slow);
+        assert!(evict.tput > tol_deep.tput, "evict {} tol {}", evict.tput, tol_deep.tput);
+        slow[5] = 0.98;
+        let tol_mild = STRAGGLER_TOLERATE.eval_degraded(&c, &healthy, &degraded, &slow);
+        assert!(tol_mild.tput > evict.tput, "evict {} tol {}", evict.tput, tol_mild.tput);
+
+        // Scratch variants agree bit-for-bit with the allocating ones.
+        let mut s = EvalScratch::default();
+        assert_eq!(
+            STRAGGLER_EVICT.eval_degraded_with(&c, &healthy, &degraded, &slow, &mut s),
+            STRAGGLER_EVICT.eval_degraded(&c, &healthy, &degraded, &slow),
+        );
+        assert_eq!(
+            STRAGGLER_TOLERATE.eval_degraded_with(&c, &healthy, &degraded, &slow, &mut s),
+            STRAGGLER_TOLERATE.eval_degraded(&c, &healthy, &degraded, &slow),
+        );
+    }
+
+    #[test]
+    fn degrade_transitions_charge_evict_only() {
+        let (sim, cfg, table) = setup();
+        let costs = TransitionCosts::model(&sim, &cfg);
+        let c = ctx(&table, Some(costs));
+        let prev = vec![0usize; 64];
+        let mut next = prev.clone();
+        next[2] = 1;
+        let evict = STRAGGLER_EVICT.degrade_transition_cost(&c, &prev, &next);
+        let expect = affected_gpus(&c, 1) as f64 * costs.reshard_secs;
+        assert!(evict > 0.0 && (evict - expect).abs() < 1e-9, "evict {evict}");
+        assert_eq!(STRAGGLER_TOLERATE.degrade_transition_cost(&c, &prev, &next), 0.0);
+        // zero-cost contract without a transition model
+        let free = ctx(&table, None);
+        assert_eq!(STRAGGLER_EVICT.degrade_transition_cost(&free, &prev, &next), 0.0);
+        // no change, no charge
+        assert_eq!(STRAGGLER_EVICT.degrade_transition_cost(&c, &prev, &prev), 0.0);
+    }
+}
+
+#[cfg(test)]
+impl StragglerEvict {
+    /// Test helper: the plain-counts evaluation `eval_degraded` must
+    /// reduce to when eviction is applied by hand.
+    fn evaluate_reference(&self, ctx: &PolicyCtx, counts: &[usize]) -> EvalOut {
+        EvalOut::of(&NTP.respond(ctx, counts), ctx.table.full_local_batch)
+    }
+}

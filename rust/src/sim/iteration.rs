@@ -241,6 +241,24 @@ impl IterationModel {
         b
     }
 
+    /// Fraction of the healthy iteration that scales with single-GPU
+    /// speed — the lever a straggler pulls. Probes
+    /// [`Self::replica_iteration`] at perf 1.0 and 0.5: compute-bound
+    /// terms double at half speed while exposed-communication terms stay
+    /// fixed, so `phi = (t(0.5) - t(1.0)) / t(1.0)` recovers the
+    /// perf-sensitive share. A TP group paced by a member delivering
+    /// slowdown-fraction `s` of nominal speed then runs at
+    /// `1 / ((1 - phi) + phi / s)` of healthy throughput
+    /// (exactly 1 at `s = 1`).
+    pub fn perf_sensitive_fraction(&self, cfg: &ParallelConfig, local_batch: usize) -> f64 {
+        let t1 = self.replica_iteration(cfg, local_batch, 1.0).total();
+        if t1 <= 0.0 {
+            return 0.0;
+        }
+        let t_half = self.replica_iteration(cfg, local_batch, 0.5).total();
+        ((t_half - t1) / t1).clamp(0.0, 1.0)
+    }
+
     /// Iteration of an NTP-reduced replica: TP degree `tp_reduced`,
     /// local batch `local_batch`, optional power boost, including the
     /// NTP synchronization overheads (§6.2):

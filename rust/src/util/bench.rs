@@ -175,6 +175,7 @@ pub struct JsonReport {
     name: String,
     entries: Vec<Value>,
     scalars: Vec<(String, f64)>,
+    labels: Vec<(String, String)>,
 }
 
 impl JsonReport {
@@ -200,6 +201,13 @@ impl JsonReport {
         self.scalars.push((key.to_string(), value));
     }
 
+    /// Record a named string (scenario kind, policy list, ...) — the
+    /// provenance a reproducibility record needs but a scalar can't
+    /// carry. Emitted as a separate `labels` object.
+    pub fn label(&mut self, key: &str, value: &str) {
+        self.labels.push((key.to_string(), value.to_string()));
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("bench", Value::Str(self.name.clone())),
@@ -208,6 +216,15 @@ impl JsonReport {
                 "scalars",
                 Value::Obj(
                     self.scalars.iter().map(|(k, v)| (k.clone(), Value::Num(*v))).collect(),
+                ),
+            ),
+            (
+                "labels",
+                Value::Obj(
+                    self.labels
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Value::Str(v.clone())))
+                        .collect(),
                 ),
             ),
         ])
@@ -260,6 +277,7 @@ mod tests {
         };
         rep.result(&r);
         rep.scalar("speedup", 12.5);
+        rep.label("scenario", "correlated");
         let v = rep.to_json();
         let parsed = Value::parse(&v.pretty()).unwrap();
         assert_eq!(parsed.get("bench").as_str(), Some("unit"));
@@ -268,6 +286,7 @@ mod tests {
         assert_eq!(entries[0].get("name").as_str(), Some("case_a"));
         assert_eq!(entries[0].get("mean_secs").as_f64(), Some(0.5));
         assert_eq!(parsed.get("scalars").get("speedup").as_f64(), Some(12.5));
+        assert_eq!(parsed.get("labels").get("scenario").as_str(), Some("correlated"));
     }
 
     #[test]

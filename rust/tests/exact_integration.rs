@@ -17,10 +17,18 @@
 //! * **Per-event charges** — exact mode charges each health-change
 //!   boundary individually, where the grid collapses the events
 //!   between two samples into one net charge.
+//! * **Scenario generators** — every [`generate_scenario`] kind emits
+//!   the timestamped-event contract (time-sorted, in-horizon,
+//!   `recover_at_hours > at_hours`), and exact-mode stats over
+//!   correlated / straggler / SDC traces stay refinement-invariant for
+//!   every registered policy.
 
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
-use ntp::failure::{BlastRadius, FailureEvent, FailureModel, Trace};
+use ntp::failure::{
+    generate_scenario, BlastRadius, EventKind, FailureEvent, FailureModel, ScenarioConfig,
+    ScenarioKind, Trace,
+};
 use ntp::manager::{FleetSim, MultiPolicySim, SparePolicy, StepMode, StrategyTable};
 use ntp::parallel::ParallelConfig;
 use ntp::policy::{registry, TransitionCosts};
@@ -177,6 +185,7 @@ fn grid_clamps_the_partial_final_step() {
             gpu: 0,
             is_hw: true,
             recover_at_hours: 100.0,
+            kind: EventKind::Fail,
         }],
     };
     let fs = FleetSim {
@@ -231,12 +240,19 @@ fn exact_mode_charges_each_event_at_its_boundary() {
     let trace = Trace {
         horizon_hours: 12.0,
         events: vec![
-            FailureEvent { at_hours: 1.0, gpu: 0, is_hw: true, recover_at_hours: 50.0 },
+            FailureEvent {
+                at_hours: 1.0,
+                gpu: 0,
+                is_hw: true,
+                recover_at_hours: 50.0,
+                kind: EventKind::Fail,
+            },
             FailureEvent {
                 at_hours: 2.0,
                 gpu: DOMAIN_SIZE, // first GPU of domain 1
                 is_hw: true,
                 recover_at_hours: 50.0,
+                kind: EventKind::Fail,
             },
         ],
     };
@@ -285,4 +301,131 @@ fn exact_mode_charges_each_event_at_its_boundary() {
     assert_eq!(grid_ntp.transitions, 1);
     assert_eq!(exact_ntp.transitions, 2);
     assert!((exact_ntp.downtime_frac - grid_ntp.downtime_frac).abs() < 1e-15);
+}
+
+/// One config per generator kind, each scaled hot enough that a 6-day
+/// trace on a small cluster carries all its event types.
+fn hot_scenarios() -> Vec<ScenarioConfig> {
+    let mut corr = ScenarioConfig::new(ScenarioKind::Correlated);
+    corr.correlated = corr.correlated.scaled(500.0);
+    let mut strag = ScenarioConfig::new(ScenarioKind::Straggler);
+    strag.straggler = strag.straggler.scaled(200.0);
+    let mut sdc = ScenarioConfig::new(ScenarioKind::Sdc);
+    sdc.sdc = sdc.sdc.scaled(500.0);
+    vec![ScenarioConfig::new(ScenarioKind::Independent), corr, strag, sdc]
+}
+
+/// Every generator kind emits the contract the exact integrator and the
+/// incremental replayer rely on: time-sorted events, onsets inside the
+/// horizon, strictly later recoveries, valid GPU ids, and kind-specific
+/// payloads (slowdowns in `(0, 1]`, corruption strictly before its
+/// detection boundary).
+#[test]
+fn scenario_generators_satisfy_the_event_contract() {
+    let topo = Topology::of(18 * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(10.0);
+    let horizon = 24.0 * 6.0;
+    for scen in hot_scenarios() {
+        let name = scen.kind.name();
+        let mut rng = Rng::new(0x5CE4);
+        let trace = generate_scenario(&topo, &model, &scen, horizon, &mut rng);
+        assert!(!trace.events.is_empty(), "{name}: empty trace");
+        assert_eq!(trace.horizon_hours, horizon);
+        for pair in trace.events.windows(2) {
+            assert!(pair[0].at_hours <= pair[1].at_hours, "{name}: events out of order");
+        }
+        let mut extra = 0usize;
+        for e in &trace.events {
+            assert!(e.at_hours >= 0.0 && e.at_hours < horizon, "{name}: onset {}", e.at_hours);
+            assert!(
+                e.recover_at_hours > e.at_hours,
+                "{name}: recovery {} not after onset {}",
+                e.recover_at_hours,
+                e.at_hours
+            );
+            assert!(e.gpu < topo.n_gpus, "{name}: gpu {} out of range", e.gpu);
+            match e.kind {
+                EventKind::Fail => {}
+                EventKind::Degrade { slowdown } => {
+                    extra += 1;
+                    assert_eq!(scen.kind, ScenarioKind::Straggler, "{name}");
+                    assert!(slowdown > 0.0 && slowdown <= 1.0, "{name}: slowdown {slowdown}");
+                }
+                EventKind::Sdc { corrupt_at_hours } => {
+                    extra += 1;
+                    assert_eq!(scen.kind, ScenarioKind::Sdc, "{name}");
+                    assert!(
+                        corrupt_at_hours >= 0.0 && corrupt_at_hours < e.at_hours,
+                        "{name}: corruption {corrupt_at_hours} not before detection {}",
+                        e.at_hours
+                    );
+                }
+            }
+        }
+        match scen.kind {
+            ScenarioKind::Straggler | ScenarioKind::Sdc => {
+                assert!(extra > 0, "{name}: no scenario-specific events");
+            }
+            _ => assert_eq!(extra, 0, "{name}: unexpected non-Fail events"),
+        }
+    }
+    // The correlated superposition strictly adds (Fail) events over the
+    // same-seed independent base process.
+    let scens = hot_scenarios();
+    let base = generate_scenario(&topo, &model, &scens[0], horizon, &mut Rng::new(7));
+    let corr = generate_scenario(&topo, &model, &scens[1], horizon, &mut Rng::new(7));
+    assert!(corr.events.len() > base.events.len());
+}
+
+/// Refinement invariance extends to every scenario generator: merging
+/// arbitrary extra sample times into a correlated / straggler / SDC
+/// boundary stream leaves the exact stats bit-identical for every
+/// registered policy — including slowdown-only boundaries (which change
+/// drag but not counts) and SDC rollback charges.
+#[test]
+fn exact_mode_is_refinement_invariant_on_scenario_traces() {
+    let (sim, cfg, table) = setup();
+    let job_domains = 16usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(10.0);
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+    for scen in hot_scenarios() {
+        let mut rng = Rng::new(0x5EED);
+        let trace = generate_scenario(&topo, &model, &scen, 24.0 * 6.0, &mut rng);
+        let horizon = trace.horizon_hours;
+        let uniform: Vec<f64> = (1..400).map(|i| i as f64 * (horizon / 400.0)).collect();
+        let mut edges: Vec<f64> = trace
+            .events
+            .iter()
+            .flat_map(|e| [e.at_hours, e.recover_at_hours, e.at_hours + 0.1237])
+            .filter(|&t| t > 0.0 && t < horizon)
+            .collect();
+        edges.sort_by(f64::total_cmp);
+        let mut random: Vec<f64> = (0..200).map(|_| rng.f64() * horizon).collect();
+        random.sort_by(f64::total_cmp);
+        for policy in registry::all() {
+            let fs = FleetSim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: PER_REPLICA,
+                policy,
+                spares: None,
+                packed: true,
+                blast: BlastRadius::Single,
+                transition,
+            };
+            let base = fs.run(&trace, StepMode::Exact);
+            for (label, extra) in
+                [("uniform", &uniform), ("edges", &edges), ("random", &random)]
+            {
+                assert_eq!(
+                    base,
+                    fs.run_exact_with_refinement(&trace, extra),
+                    "{} on {}: {label} refinement changed the exact stats",
+                    policy.name(),
+                    scen.kind.name()
+                );
+            }
+        }
+    }
 }

@@ -4,9 +4,12 @@
 //! of evaluation contexts, so a newly registered policy gets its full
 //! coverage — throughput ∈ [0, 1], secondary-channel bounds,
 //! `respond_with == respond`, multiset-permutation purity,
-//! transition-cost sanity and count-purity — by adding one registry
-//! entry, with **zero per-policy test code**. Cross-policy claims (the
-//! transition-cost ordering, the legacy-oracle bit-identity) are the
+//! transition-cost sanity and count-purity, and the degradation layer
+//! (`eval_degraded_with == eval_degraded`, zero-degradation collapse to
+//! the plain respond path, `degrade_transition_cost` sanity) — by
+//! adding one registry entry, with **zero per-policy test code**.
+//! Cross-policy claims (the transition-cost ordering, the legacy-oracle
+//! bit-identity, the straggler evict-vs-tolerate crossover) are the
 //! only policy-named assertions, because they are claims *about*
 //! specific policies rather than per-policy boilerplate.
 //!
@@ -317,6 +320,136 @@ fn healthy_fleet_is_lossless_under_every_policy() {
             assert_eq!(resp.donated, 0.0, "{}: nothing to donate when healthy", policy.name());
             let tput = resp.throughput(table.full_local_batch);
             assert!((tput - 1.0).abs() < 1e-12, "{}: {tput}", policy.name());
+        }
+    }
+}
+
+/// Registry-driven degradation-layer properties, for every policy over
+/// the full context grid and randomized straggler snapshots:
+///
+/// * `eval_degraded_with` (the sweeps' memo-bypassing hot path) equals
+///   `eval_degraded`, exactly;
+/// * zero degradation collapses **bit-identically** to the plain
+///   respond path — the `slowdown >= 1.0` guard in `straggler_drag`
+///   makes the multiply a bitwise no-op, so fail-only traces cannot
+///   drift when a policy routes through the degradation entry point;
+/// * the degraded response respects the same bounds as the healthy one
+///   (throughput and donation in `[0, 1]`, pool respected, paused means
+///   zero throughput);
+/// * `degrade_transition_cost` is free without a cost model, free when
+///   the degraded counts did not change, and finite/nonnegative
+///   otherwise.
+#[test]
+fn degraded_path_properties_for_every_policy() {
+    let (sim, cfg, table) = setup();
+    let transitions = [None, Some(TransitionCosts::model(&sim, &cfg))];
+    let grid = ctx_grid(&table, &transitions);
+    let zero_deg = vec![0usize; JOB_DOMAINS];
+    let unit_slow = vec![1.0f64; JOB_DOMAINS];
+    let mut rng = Rng::new(0x96);
+    let mut scratch = EvalScratch::default();
+    for trial in 0..120 {
+        let job = random_healthy(&mut rng, JOB_DOMAINS);
+        // Straggler overlay: degraded GPUs are alive (still inside the
+        // healthy count), each degraded domain paced by its slowest.
+        let deg: Vec<usize> = job
+            .iter()
+            .map(|&h| if h > 0 && rng.chance(0.4) { 1 + rng.index(h.min(3)) } else { 0 })
+            .collect();
+        let slow: Vec<f64> =
+            deg.iter().map(|&d| if d > 0 { 0.05 + rng.f64() * 0.9 } else { 1.0 }).collect();
+        let mut prev_deg = deg.clone();
+        shuffle(&mut prev_deg, &mut rng);
+        for ctx in &grid {
+            for policy in registry::all() {
+                let name = policy.name();
+                let want = policy.eval_degraded(ctx, &job, &deg, &slow);
+                let got = policy.eval_degraded_with(ctx, &job, &deg, &slow, &mut scratch);
+                assert_eq!(
+                    got, want,
+                    "trial {trial} {name}: eval_degraded_with drifted from \
+                     eval_degraded (spares {:?} packed {})",
+                    ctx.spares, ctx.packed
+                );
+                assert!(
+                    (0.0..=1.0 + 1e-12).contains(&got.tput),
+                    "trial {trial} {name}: degraded throughput {}",
+                    got.tput
+                );
+                assert!(
+                    (0.0..=1.0 + 1e-12).contains(&got.donated),
+                    "trial {trial} {name}: degraded donated {}",
+                    got.donated
+                );
+                let pool = ctx.spares.map(|p| p.spare_domains).unwrap_or(0);
+                assert!(got.spares_used <= pool, "trial {trial} {name}");
+                if got.paused {
+                    assert_eq!(got.tput, 0.0, "{name}: paused must mean zero throughput");
+                }
+
+                // No stragglers => exactly the plain respond path.
+                let collapsed = policy.eval_degraded(ctx, &job, &zero_deg, &unit_slow);
+                assert_eq!(
+                    collapsed,
+                    EvalOut::of(&policy.respond(ctx, &job), table.full_local_batch),
+                    "trial {trial} {name}: zero degradation did not collapse to respond"
+                );
+                assert_eq!(
+                    policy.eval_degraded_with(ctx, &job, &zero_deg, &unit_slow, &mut scratch),
+                    policy.respond_with(ctx, &job, &mut scratch),
+                    "trial {trial} {name}: zero degradation did not collapse to \
+                     respond_with"
+                );
+
+                let cost = policy.degrade_transition_cost(ctx, &prev_deg, &deg);
+                if ctx.transition.is_none() {
+                    assert_eq!(cost, 0.0, "{name} must be free without a cost model");
+                } else {
+                    assert!(cost.is_finite() && cost >= 0.0, "{name}: degrade cost {cost}");
+                }
+                assert_eq!(
+                    policy.degrade_transition_cost(ctx, &deg, &deg),
+                    0.0,
+                    "{name}: unchanged degraded counts must charge nothing"
+                );
+            }
+        }
+    }
+}
+
+/// The cross-policy straggler claim the fig12 bench rests on, at the
+/// single-snapshot level: four domains each paced by a deep straggler
+/// favor STRAGGLER-EVICT (reshard the slow GPUs away, pay a small
+/// capacity loss), while near-healthy stragglers favor
+/// STRAGGLER-TOLERATE (the drag is cheaper than any capacity loss).
+#[test]
+fn straggler_evict_tolerate_crossover() {
+    let (_sim, _cfg, table) = setup();
+    let ctx = PolicyCtx {
+        table: &table,
+        domain_size: DOMAIN_SIZE,
+        domains_per_replica: PER_REPLICA,
+        packed: true,
+        spares: None,
+        n_gpus: JOB_DOMAINS * DOMAIN_SIZE,
+        transition: None,
+    };
+    let evict = registry::parse("straggler-evict").unwrap();
+    let tolerate = registry::parse("straggler-tolerate").unwrap();
+    let job = vec![DOMAIN_SIZE; JOB_DOMAINS];
+    let mut deg = vec![0usize; JOB_DOMAINS];
+    for d in 0..4 {
+        deg[d * PER_REPLICA] = 1;
+    }
+    for (slowdown, evict_wins) in [(0.1, true), (0.999, false)] {
+        let slow: Vec<f64> =
+            deg.iter().map(|&d| if d > 0 { slowdown } else { 1.0 }).collect();
+        let e = evict.eval_degraded(&ctx, &job, &deg, &slow).tput;
+        let t = tolerate.eval_degraded(&ctx, &job, &deg, &slow).tput;
+        if evict_wins {
+            assert!(e > t, "slowdown {slowdown}: evict {e} should beat tolerate {t}");
+        } else {
+            assert!(t > e, "slowdown {slowdown}: tolerate {t} should beat evict {e}");
         }
     }
 }

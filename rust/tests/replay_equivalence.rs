@@ -1,13 +1,17 @@
 //! Property tests: the event-driven [`FleetReplayer`] sweep is
 //! equivalent to the O(steps × events) per-step [`Trace::replay_to`]
-//! rebuild — per-GPU health, domain counts, pending recovery deadlines,
-//! failed-GPU series, and the integrated `FleetStats` all agree on
-//! randomized traces, topologies and blast radii.
+//! rebuild — per-GPU health, domain counts, degradation overlays,
+//! pending recovery deadlines, failed-GPU series, and the integrated
+//! `FleetStats` all agree on randomized traces (every scenario
+//! generator included), topologies and blast radii.
 
 use ntp::cluster::{GpuState, Topology};
 use ntp::config::{presets, Dtype, WorkloadConfig};
-use ntp::failure::{BlastRadius, FailureModel, FleetReplayer, Trace};
-use ntp::manager::{FleetSim, SparePolicy, StepMode, StrategyTable};
+use ntp::failure::{
+    generate_scenario, BlastRadius, FailureModel, FleetReplayer, ScenarioConfig, ScenarioKind,
+    Trace,
+};
+use ntp::manager::{FleetSim, MultiPolicySim, SparePolicy, StepMode, StrategyTable};
 use ntp::parallel::ParallelConfig;
 use ntp::policy::{registry, TransitionCosts};
 use ntp::power::RackDesign;
@@ -35,6 +39,12 @@ fn assert_states_match(
     if inc.domain_healthy_counts() != scratch.domain_healthy_counts() {
         return Err(format!("domain counts diverge at t={t}"));
     }
+    if inc.domain_degraded_counts() != scratch.domain_degraded_counts() {
+        return Err(format!("degraded counts diverge at t={t}"));
+    }
+    if inc.domain_slowdowns() != scratch.domain_slowdowns() {
+        return Err(format!("domain slowdowns diverge at t={t}"));
+    }
     for gpu in 0..topo.n_gpus {
         match (inc.state(gpu), scratch.state(gpu)) {
             (GpuState::Healthy, GpuState::Healthy) => {}
@@ -44,6 +54,16 @@ fn assert_states_match(
             ) => {
                 if u1 != u2 {
                     return Err(format!("gpu {gpu} until {u1} != {u2} at t={t}"));
+                }
+            }
+            (
+                GpuState::Degraded { slowdown: s1, until_hours: u1, .. },
+                GpuState::Degraded { slowdown: s2, until_hours: u2, .. },
+            ) => {
+                if s1 != s2 || u1 != u2 {
+                    return Err(format!(
+                        "gpu {gpu} degraded ({s1}, {u1}) != ({s2}, {u2}) at t={t}"
+                    ));
                 }
             }
             (a, b) => return Err(format!("gpu {gpu} state {a:?} != {b:?} at t={t}")),
@@ -91,6 +111,53 @@ fn replayer_equals_replay_to_on_random_traces() {
     });
 }
 
+/// Same property over the scenario generators: correlated blasts
+/// (expanded in the trace itself), straggler degradation overlays, and
+/// SDC detection-boundary failures all replay identically through the
+/// incremental and from-scratch paths.
+#[test]
+fn replayer_equals_replay_to_on_scenario_traces() {
+    let gen = SeedGen;
+    check(0x5CE2A10, 20, &gen, |&seed| {
+        let mut rng = Rng::new(seed);
+        let domain_size = [8usize, 16, 32][rng.index(3)];
+        let n_domains = 4 + rng.index(12);
+        let topo = Topology::of(n_domains * domain_size, domain_size, 4.min(domain_size));
+        let kind = [
+            ScenarioKind::Independent,
+            ScenarioKind::Correlated,
+            ScenarioKind::Straggler,
+            ScenarioKind::Sdc,
+        ][rng.index(4)];
+        // Hot enough that small clusters still see dense overlap.
+        let mut scen = ScenarioConfig::new(kind);
+        scen.correlated = scen.correlated.scaled(500.0 + rng.f64() * 2000.0);
+        scen.straggler = scen.straggler.scaled(100.0 + rng.f64() * 400.0);
+        scen.sdc = scen.sdc.scaled(500.0 + rng.f64() * 2000.0);
+        let model = FailureModel::llama3().scaled(10.0 + rng.f64() * 100.0);
+        let horizon = 24.0 * (3.0 + rng.f64() * 9.0);
+        let trace = generate_scenario(&topo, &model, &scen, horizon, &mut rng);
+
+        let mut times: Vec<f64> = (0..60).map(|_| rng.f64() * horizon * 1.1).collect();
+        for ev in trace.events.iter().take(20) {
+            times.push(ev.at_hours);
+            times.push(ev.recover_at_hours);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        // Scenario traces carry their own blast expansion, so they are
+        // replayed with the per-GPU radius.
+        let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
+        for &t in &times {
+            let inc = rep.advance(t);
+            let scratch = trace.replay_to(&topo, BlastRadius::Single, t);
+            assert_states_match(inc, &scratch, &topo, t)
+                .map_err(|e| format!("{}: {e}", kind.name()))?;
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn replayer_handles_spiky_traces() {
     let topo = Topology::of(512, 16, 4);
@@ -121,6 +188,86 @@ fn failed_series_matches_replay_to_counts() {
                 failed,
                 trace.replay_to(&topo, blast, t).n_failed(),
                 "blast {blast:?} t={t}"
+            );
+        }
+    }
+}
+
+/// Scenario traces (correlated / straggler / SDC) flow through three
+/// independent execution paths — the event-driven `FleetSim::run`, the
+/// per-boundary `run_replay_per_step` reference that rebuilds the fleet
+/// from scratch at every boundary, and the shared `MultiPolicySim`
+/// sweep — and all three must produce bit-identical `FleetStats` for
+/// every registered policy, degradation drag, SDC rollback charges and
+/// transition accounting included.
+#[test]
+fn fleet_stats_bit_identical_on_scenario_traces() {
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 2 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: 32, pp: 4, dp: 16, microbatch: 1 };
+    let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    let topo = Topology::of(cfg.n_gpus(), 32, 4);
+    let model = FailureModel::llama3().scaled(35.0);
+    let policies = registry::all();
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+
+    let mut scenarios = Vec::new();
+    let mut corr = ScenarioConfig::new(ScenarioKind::Correlated);
+    corr.correlated = corr.correlated.scaled(500.0);
+    scenarios.push(corr);
+    let mut strag = ScenarioConfig::new(ScenarioKind::Straggler);
+    strag.straggler = strag.straggler.scaled(200.0);
+    scenarios.push(strag);
+    let mut sdc = ScenarioConfig::new(ScenarioKind::Sdc);
+    sdc.sdc = sdc.sdc.scaled(500.0);
+    scenarios.push(sdc);
+
+    let mut rng = Rng::new(0x5D);
+    for scen in &scenarios {
+        // Short horizon: the per-step reference is quadratic in the
+        // event count, and hot scenario traces are dense.
+        let trace = generate_scenario(&topo, &model, scen, 24.0 * 7.0, &mut rng);
+        assert!(!trace.events.is_empty(), "{} trace is empty", scen.kind.name());
+        let msim = MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            policies: &policies,
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+        };
+        let swept = msim.run(&trace, StepMode::Exact);
+        for (pi, &policy) in policies.iter().enumerate() {
+            let fs = FleetSim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: cfg.pp,
+                policy,
+                spares: None,
+                packed: true,
+                blast: BlastRadius::Single,
+                transition,
+            };
+            let fast = fs.run(&trace, StepMode::Exact);
+            let slow = fs.run_replay_per_step(&trace, StepMode::Exact);
+            assert_eq!(fast, slow, "{} policy {}", scen.kind.name(), policy.name());
+            assert_eq!(
+                fast,
+                swept[pi],
+                "{} policy {}: shared sweep diverged",
+                scen.kind.name(),
+                policy.name()
             );
         }
     }
