@@ -10,9 +10,14 @@
 #   make bench-quick  — parallel-Monte-Carlo-only smoke: run_trials_par
 #                       at 100K scale, asserting N-thread results are
 #                       bit-identical to 1 thread (writes
-#                       BENCH_perf_hotpath_trials.json), plus the
-#                       scenario smoke: a correlated + straggler quick
-#                       sweep asserting generator throughput and
+#                       BENCH_perf_hotpath_trials.json); the streaming
+#                       smoke: stream-vs-materialized bit-identity, the
+#                       O(1)-memory-per-trial allocation contract, the
+#                       incremental-signature speedup floor and the
+#                       100-point memo-shared grid (writes
+#                       BENCH_streaming_quick.json); plus the scenario
+#                       smoke: a correlated + straggler quick sweep
+#                       asserting generator throughput and
 #                       1-vs-N-thread bit-identity (writes
 #                       BENCH_scenarios_quick.json)
 
@@ -44,4 +49,5 @@ bench-perf:
 
 bench-quick:
 	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick --trials-only
+	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick --streaming-only
 	$(CARGO) bench --bench fig12_scenarios --manifest-path $(MANIFEST) -- --quick

@@ -40,12 +40,22 @@ fn main() {
             let mut rng = Rng::new(1000 + seed);
             let trace = Trace::generate(&topo, &model, days * 24.0, &mut rng);
             events += trace.events.len() as f64;
-            let series = trace.failed_series(&topo, BlastRadius::Single, 1.0);
-            let fracs: Vec<f64> =
-                series.iter().map(|&(_, f)| f as f64 / topo.n_gpus as f64).collect();
-            means.push(stats::mean(&fracs));
-            peak_fracs.push(stats::max(&fracs));
-            above.push(trace.time_above_fraction(&topo, BlastRadius::Single, 1.0, 0.001));
+            // Exact step-function series: one breakpoint per actual
+            // change in the concurrent-failure count (no sampling
+            // grid), and the duration-weighted mean/time-above are
+            // exact for the trace.
+            let series = trace.failed_series_exact(&topo, BlastRadius::Single);
+            let mut mean_frac = 0.0;
+            let mut peak = 0.0f64;
+            for (i, &(t0, failed)) in series.iter().enumerate() {
+                let t1 = series.get(i + 1).map(|&(t, _)| t).unwrap_or(trace.horizon_hours);
+                let frac = failed as f64 / topo.n_gpus as f64;
+                mean_frac += frac * (t1 - t0) / trace.horizon_hours;
+                peak = peak.max(frac);
+            }
+            means.push(mean_frac);
+            peak_fracs.push(peak);
+            above.push(trace.time_above_fraction_exact(&topo, BlastRadius::Single, 0.001));
         }
         let peak = stats::mean(&peak_fracs);
         peaks.push(peak);

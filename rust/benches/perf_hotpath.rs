@@ -8,10 +8,13 @@
 //! Pass `--quick` for a smoke-test-sized run (the Makefile `check`
 //! target), `--trials-only` to run just the parallel Monte-Carlo
 //! trials section (the `make bench-quick` smoke: asserts N-thread
-//! `run_trials_par` is bit-identical to 1 thread). Plain `--quick`
-//! skips the trials section — CI runs it as its own `bench-quick`
-//! step, so the two smoke steps partition the workload instead of
-//! repeating it; full runs cover everything.
+//! `run_trials_par` is bit-identical to 1 thread), `--streaming-only`
+//! to run just the streaming-trials / incremental-signature / grid-memo
+//! section (the second `make bench-quick` smoke — writes
+//! `BENCH_streaming_quick.json`). Plain `--quick` skips both of those
+//! sections — CI runs each as its own `bench-quick` step, so the smoke
+//! steps partition the workload instead of repeating it; full runs
+//! cover everything.
 //!
 //! Components measured:
 //!   * fleet trace integration at paper scale (32K GPUs, 8-week trace):
@@ -21,6 +24,11 @@
 //!   * shared multi-policy sweep at 100K scale (exact stepping)
 //!   * parallel Monte-Carlo trials over `util::par` (per-thread memos,
 //!     merged hit rates, 1-thread bit-identity)
+//!   * streaming Monte-Carlo over `TrialGen` (bit-identity to the
+//!     materialized path at every thread count, O(1)-memory contract
+//!     via a counting allocator), the incremental snapshot-signature
+//!     sweep vs its from-scratch rebuild oracle, and a 100-point
+//!     memo-shared parameter grid (cross-point hit rate > 0)
 //!   * Algorithm-1 plan construction: direct build vs `PlanCache` hit,
 //!     and the `ntp_iteration` call that rides the cache
 //!   * explicit NTP reshard permutations: per-unit vs coalesced CopyPlan
@@ -28,8 +36,12 @@
 
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
-use ntp::failure::{BlastRadius, FailureModel, Trace};
-use ntp::manager::{FleetSim, FleetStats, MultiPolicySim, StepMode, StrategyTable};
+use ntp::failure::{
+    BlastRadius, FailureModel, ScenarioConfig, ScenarioKind, Trace, TrialGen,
+};
+use ntp::manager::{
+    FleetSim, FleetStats, MultiPolicySim, ResponseMemo, SparePolicy, StepMode, StrategyTable,
+};
 use ntp::ntp::cache::PlanCache;
 use ntp::ntp::shard_map::ShardMap;
 use ntp::ntp::sync::{comp_to_sync, scatter_comp, sync_to_comp, CopyPlan};
@@ -46,21 +58,68 @@ use ntp::util::prng::Rng;
 
 /// Full runs write the cross-PR perf record; `--quick` smoke runs get
 /// their own file so `make check` never clobbers full-run numbers, and
-/// `--trials-only` gets a third so the parallel-trials smoke never
-/// clobbers either.
+/// `--trials-only` / `--streaming-only` get their own so neither smoke
+/// clobbers the others.
 const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf_hotpath.json");
 const OUT_PATH_QUICK: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf_hotpath_quick.json");
 const OUT_PATH_TRIALS: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf_hotpath_trials.json");
+const OUT_PATH_STREAMING: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_streaming_quick.json");
+
+/// Cumulative-allocation meter behind the global allocator: counts every
+/// heap byte *requested* (allocations plus realloc growth; frees are not
+/// subtracted). Cumulative demand — not live bytes — is the quantity the
+/// streaming O(1)-memory contract bounds: a path that allocates a fresh
+/// `Trace` per trial shows up here even though it frees it again.
+mod alloc_counter {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub struct CountingAlloc;
+
+    static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let grown = new_size.saturating_sub(layout.size());
+            ALLOCATED.fetch_add(grown as u64, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    pub fn bytes_allocated() -> u64 {
+        ALLOCATED.load(Ordering::Relaxed)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: alloc_counter::CountingAlloc = alloc_counter::CountingAlloc;
 
 fn main() {
     let quick = arg_flag("--quick");
     let trials_only = arg_flag("--trials-only");
+    let streaming_only = arg_flag("--streaming-only");
     let mut rng = Rng::new(1);
     let mut report = JsonReport::new("perf_hotpath");
     report.scalar("quick", if quick { 1.0 } else { 0.0 });
     report.scalar("trials_only", if trials_only { 1.0 } else { 0.0 });
+    report.scalar("streaming_only", if streaming_only { 1.0 } else { 0.0 });
     let threads = par::num_threads();
     report.scalar("threads", threads as f64);
 
@@ -83,7 +142,7 @@ fn main() {
     let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
     let sim = IterationModel::new(model, work, cluster, SimParams::default());
 
-    if !trials_only {
+    if !trials_only && !streaming_only {
         // =================================================================
         // Fleet trace integration at paper scale: event-driven sweep vs
         // per-step rebuild on the legacy 1h grid, plus exact stepping
@@ -182,7 +241,7 @@ fn main() {
         transition: None,
     };
 
-    if !trials_only {
+    if !trials_only && !streaming_only {
         // =================================================================
         // Shared-sweep multi-policy engine at SPARe scale, exact stepping:
         // one event-bounded trace replay + signature-memoized responses
@@ -308,7 +367,7 @@ fn main() {
     // most expensive bench workload per push. Full runs always include
     // it.
     // =====================================================================
-    if trials_only || !quick {
+    if (trials_only || !quick) && !streaming_only {
         let n_trials = if quick { 4 } else { 8 };
         // Per-trial forked PRNG streams: trace i is the same regardless
         // of trial count or worker count.
@@ -372,7 +431,242 @@ fn main() {
         }
     }
 
-    if !trials_only {
+    // =====================================================================
+    // Streaming Monte-Carlo, incremental snapshot signatures, and the
+    // memo-shared parameter grid (EXPERIMENTS.md §Perf PR 7).
+    // `--quick --streaming-only` is the second `make bench-quick` smoke
+    // and writes BENCH_streaming_quick.json.
+    // =====================================================================
+    if streaming_only || (!quick && !trials_only) {
+        let n_trials = if quick { 4 } else { 6 };
+        let scen_ind = ScenarioConfig::new(ScenarioKind::Independent);
+        // ~10x llama-3 rates so each trial carries thousands of events:
+        // the materialized path's per-trial `Trace` allocation has to be
+        // clearly visible against fixed per-run state.
+        let fmodel_s = FailureModel::llama3().scaled(10.0);
+        let horizon_s = days_100k * 24.0;
+        let gen = TrialGen::new(&topo_100k, &fmodel_s, &scen_ind, horizon_s, 0xBEEF, n_trials);
+        println!(
+            "\nstreaming Monte-Carlo: {n_trials} trials x {} GPUs, {horizon_s:.0}h horizon, \
+             exact stepping",
+            topo_100k.n_gpus
+        );
+
+        // (a) Bit-identity to the materialized path at every thread
+        // count, including 1 and one exceeding the trial count (the
+        // empty-trailing-batch case).
+        let traces_s = gen.traces();
+        let (mat_stats, _) = msim.run_trials_par(&traces_s, StepMode::Exact, threads);
+        for t in [1, threads, n_trials + 3] {
+            let (st, _) = msim.run_trials_stream_par(&gen, StepMode::Exact, t);
+            assert_eq!(
+                st, mat_stats,
+                "streaming trials must be bit-identical to the materialized path at {t} threads"
+            );
+        }
+        println!("  stream == materialized at 1/{}/{} threads", threads, n_trials + 3);
+        drop(traces_s);
+
+        // (b) O(1)-memory contract. The marginal heap demand per extra
+        // trial — bytes(2n trials) minus bytes(n trials), which cancels
+        // the replayer's fixed per-run fleet state — must be flat when
+        // the horizon doubles on the stream path (no per-trial `Trace`,
+        // no per-event growth), while the materialized path's marginal
+        // scales with the event count. A 20-day base horizon puts the
+        // failure process well past its steady state, so the stream's
+        // in-flight recovery heap peaks identically at 1x and 2x.
+        let mem_horizon = 20.0 * 24.0;
+        let gen_1x = TrialGen::new(&topo_100k, &fmodel_s, &scen_ind, mem_horizon, 0xBEEF, n_trials);
+        let gen_1x2n =
+            TrialGen::new(&topo_100k, &fmodel_s, &scen_ind, mem_horizon, 0xBEEF, 2 * n_trials);
+        let gen_2x =
+            TrialGen::new(&topo_100k, &fmodel_s, &scen_ind, 2.0 * mem_horizon, 0xBEEF, n_trials);
+        let gen_2x2n = TrialGen::new(
+            &topo_100k,
+            &fmodel_s,
+            &scen_ind,
+            2.0 * mem_horizon,
+            0xBEEF,
+            2 * n_trials,
+        );
+        let mut memo_mem = msim.memo();
+        // Warm: populate the memo and every reusable allocation once so
+        // the measured runs see only per-call costs.
+        black_box(msim.run_trials_stream(&gen_2x2n, StepMode::Exact, &mut memo_mem));
+        black_box(msim.run_trials_stream(&gen_1x2n, StepMode::Exact, &mut memo_mem));
+        black_box(msim.run_trials(&gen_2x2n.traces(), StepMode::Exact, &mut memo_mem));
+        let mut stream_bytes = |g: &TrialGen| -> u64 {
+            let b0 = alloc_counter::bytes_allocated();
+            black_box(msim.run_trials_stream(g, StepMode::Exact, &mut memo_mem));
+            alloc_counter::bytes_allocated() - b0
+        };
+        let s_1x = stream_bytes(&gen_1x);
+        let s_1x2n = stream_bytes(&gen_1x2n);
+        let s_2x = stream_bytes(&gen_2x);
+        let s_2x2n = stream_bytes(&gen_2x2n);
+        let mut mat_bytes = |g: &TrialGen| -> u64 {
+            let b0 = alloc_counter::bytes_allocated();
+            let tr = g.traces();
+            black_box(msim.run_trials(&tr, StepMode::Exact, &mut memo_mem));
+            alloc_counter::bytes_allocated() - b0
+        };
+        let m_2x = mat_bytes(&gen_2x);
+        let m_2x2n = mat_bytes(&gen_2x2n);
+        let marginal = |hi: u64, lo: u64| hi.saturating_sub(lo) as f64 / n_trials as f64;
+        let s_marg_1x = marginal(s_1x2n, s_1x);
+        let s_marg_2x = marginal(s_2x2n, s_2x);
+        let m_marg_2x = marginal(m_2x2n, m_2x);
+        println!(
+            "  marginal heap bytes/trial: stream {s_marg_1x:.0} at 1x horizon, {s_marg_2x:.0} \
+             at 2x; materialized {m_marg_2x:.0} at 2x"
+        );
+        report.scalar("stream_bytes_per_trial_1x", s_marg_1x);
+        report.scalar("stream_bytes_per_trial_2x", s_marg_2x);
+        report.scalar("materialized_bytes_per_trial_2x", m_marg_2x);
+        assert!(
+            s_marg_2x <= 1.5 * s_marg_1x + 16_384.0,
+            "stream path must be O(1) memory per trial: doubling the horizon grew the marginal \
+             from {s_marg_1x:.0} to {s_marg_2x:.0} bytes/trial"
+        );
+        assert!(
+            2.0 * s_marg_2x < m_marg_2x,
+            "stream path should allocate < half the materialized path's bytes/trial (stream \
+             {s_marg_2x:.0}, materialized {m_marg_2x:.0})"
+        );
+
+        // Wall-clock comparison (the stream path also skips the upfront
+        // generation pass; no floor asserted — the win is memory).
+        if !quick {
+            let r_mat = bench_with("trials_materialized_100k_1_thread", cfg_replay, || {
+                let tr = gen.traces();
+                black_box(msim.run_trials_par(&tr, StepMode::Exact, 1));
+            });
+            println!("{}", r_mat.line());
+            report.result(&r_mat);
+            let r_str = bench_with("trials_streaming_100k_1_thread", cfg_replay, || {
+                black_box(msim.run_trials_stream_par(&gen, StepMode::Exact, 1));
+            });
+            println!("{}", r_str.line());
+            report.result(&r_str);
+            report.scalar(
+                "streaming_vs_materialized_speedup",
+                r_mat.secs.p50 / r_str.secs.p50,
+            );
+        }
+
+        // (c) Incremental snapshot-signature maintenance: the exact
+        // sweep keeps the deficit histogram and dirty-domain set up to
+        // date event-by-event; the rebuild oracle re-derives both from
+        // the full domain slice at every boundary. Same boundaries,
+        // bit-identical stats, so the speedup is pure signature upkeep.
+        let trace_inc = Trace::generate(
+            &topo_100k,
+            &FailureModel::llama3().scaled(3.0),
+            days_100k * 24.0,
+            &mut rng,
+        );
+        let mut memo_inc = msim.memo();
+        let mut memo_reb = msim.memo();
+        assert_eq!(
+            msim.run_with(&trace_inc, StepMode::Exact, &mut memo_inc),
+            msim.run_rebuild(&trace_inc, &mut memo_reb),
+            "incremental exact sweep must be bit-identical to the from-scratch rebuild"
+        );
+        let r_inc = bench_with("sweep_exact_incremental_100k", cfg_replay, || {
+            black_box(msim.run_with(&trace_inc, StepMode::Exact, &mut memo_inc));
+        });
+        println!("{}", r_inc.line());
+        report.result(&r_inc);
+        let r_reb = bench_with("sweep_exact_rebuild_100k", cfg_replay, || {
+            black_box(msim.run_rebuild(&trace_inc, &mut memo_reb));
+        });
+        println!("{}", r_reb.line());
+        report.result(&r_reb);
+        let inc_speedup = r_reb.secs.p50 / r_inc.secs.p50;
+        let boundaries = trace_inc.events.len() as f64;
+        println!(
+            "  -> incremental snapshot-sig speedup: {inc_speedup:.1}x ({:.0} vs {:.0} event \
+             boundaries/s)",
+            boundaries / r_inc.secs.p50,
+            boundaries / r_reb.secs.p50
+        );
+        report.scalar("incremental_sig_speedup", inc_speedup);
+        report.scalar("incremental_boundaries_per_sec", boundaries / r_inc.secs.p50);
+        let inc_floor = if quick { 1.2 } else { 2.0 };
+        assert!(
+            inc_speedup >= inc_floor,
+            "incremental snapshot-sig sweep should be >= {inc_floor}x over the from-scratch \
+             rebuild (got {inc_speedup:.1}x)"
+        );
+
+        // (d) Memo-shared parameter grid: one ResponseMemo across a
+        // (rate x scenario-scale x spares) grid at a 1.3K-GPU scale.
+        // Points differing only in spare budget replay identical
+        // streams over a shared topology, so later points re-hit
+        // snapshot and transition entries populated by earlier ones —
+        // the cross-point hit rate the `sweep` CLI reports.
+        let cluster_g = presets::cluster("paper-32k-nvl32").unwrap();
+        let tp_g = cluster_g.domain_size;
+        let cfg_g = ParallelConfig { tp: tp_g, pp: 4, dp: 8, microbatch: 1 };
+        let sim_g = IterationModel::new(
+            presets::model("gpt-480b").unwrap(),
+            WorkloadConfig { seq_len: 16_384, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 },
+            cluster_g.clone(),
+            SimParams::default(),
+        );
+        let table_g = StrategyTable::build(&sim_g, &cfg_g, &RackDesign::default());
+        let rates_g = [1.0, 2.0, 5.0, 10.0, 20.0];
+        let scen_scales_g = [0.5, 1.0, 2.0, 4.0];
+        let spares_g = [0usize, 2, 4, 6, 8];
+        let max_spares = spares_g.iter().copied().max().unwrap();
+        let n_domains_g = cfg_g.pp * cfg_g.dp + max_spares;
+        let topo_g = Topology::of(n_domains_g * tp_g, tp_g, cluster_g.gpus_per_node);
+        // Pinned cost model (no per-point observed rate: that would
+        // change the transition fingerprint and panic the bind check).
+        let costs_g = Some(ntp::policy::TransitionCosts::model(&sim_g, &cfg_g));
+        let grid_days = if quick { 2.0 } else { 5.0 };
+        let mut grid_memo = ResponseMemo::new(policies.len());
+        let mut grid_points = 0usize;
+        for &rate_x in &rates_g {
+            let fm = FailureModel::llama3().scaled(rate_x);
+            for &scen_x in &scen_scales_g {
+                let mut scen = ScenarioConfig::new(ScenarioKind::Correlated);
+                scen.correlated = scen.correlated.scaled(scen_x);
+                let gen_g = TrialGen::new(&topo_g, &fm, &scen, grid_days * 24.0, 77, 1);
+                for &spare_domains in &spares_g {
+                    grid_memo.begin_point();
+                    let msim_g = MultiPolicySim {
+                        topo: &topo_g,
+                        table: &table_g,
+                        domains_per_replica: cfg_g.pp,
+                        policies: &policies,
+                        spares: Some(SparePolicy { spare_domains, min_tp: tp_g - 4 }),
+                        packed: true,
+                        blast: BlastRadius::Single,
+                        transition: costs_g,
+                    };
+                    black_box(msim_g.run_trials_stream(&gen_g, StepMode::Exact, &mut grid_memo));
+                    grid_points += 1;
+                }
+            }
+        }
+        let gs = grid_memo.stats();
+        assert!(grid_points >= 100, "grid must cover >= 100 points (got {grid_points})");
+        assert!(
+            gs.cross_hit_rate() > 0.0,
+            "a memo shared across grid points must score cross-point hits"
+        );
+        println!(
+            "  grid: {grid_points} points, memo hit rate {:.1}%, cross-point hit rate {:.1}%",
+            gs.hit_rate() * 100.0,
+            gs.cross_hit_rate() * 100.0
+        );
+        report.scalar("grid_points", grid_points as f64);
+        report.scalar("grid_memo_hit_rate", gs.hit_rate());
+        report.scalar("grid_cross_point_hit_rate", gs.cross_hit_rate());
+    }
+
+    if !trials_only && !streaming_only {
         // =================================================================
         // Algorithm-1 plan construction: direct vs cached
         // =================================================================
@@ -502,7 +796,9 @@ fn main() {
         report.scalar("weighted_reduce_par_speedup", r_seq.secs.p50 / r_par.secs.p50);
     }
 
-    let out = if trials_only {
+    let out = if streaming_only {
+        OUT_PATH_STREAMING
+    } else if trials_only {
         OUT_PATH_TRIALS
     } else if quick {
         OUT_PATH_QUICK

@@ -48,12 +48,20 @@ impl BlastRadius {
     /// the scale-out network) and aligned to blocks of `size` so whole
     /// trays/domains are discarded cleanly.
     pub fn affected(&self, t: &Topology, gpu: usize) -> Vec<usize> {
+        self.affected_range(t, gpu).collect()
+    }
+
+    /// Allocation-free [`BlastRadius::affected`]: the affected set is
+    /// always one contiguous aligned block, so the replay and streaming
+    /// hot paths iterate the range directly instead of materializing a
+    /// `Vec` per event.
+    pub fn affected_range(&self, t: &Topology, gpu: usize) -> std::ops::Range<usize> {
         let k = self.size(t);
         let domain_start = t.domain_of(gpu) * t.domain_size;
         // Align to k-sized blocks within the domain.
         let offset = (gpu - domain_start) / k * k;
         let start = domain_start + offset;
-        (start..start + k).collect()
+        start..start + k
     }
 }
 

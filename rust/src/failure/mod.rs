@@ -8,10 +8,12 @@ pub mod blast;
 pub mod rates;
 pub mod replayer;
 pub mod scenario;
+pub mod stream;
 pub mod trace;
 
 pub use blast::BlastRadius;
 pub use rates::{CorrelatedRates, FailureModel, SdcRates, StragglerRates};
-pub use replayer::FleetReplayer;
+pub use replayer::{EventSource, FleetReplayer, ReplayCore, TraceCursor};
 pub use scenario::{generate_scenario, sample_failed_gpus, Scenario, ScenarioConfig, ScenarioKind};
+pub use stream::{TraceStream, TrialGen};
 pub use trace::{EventKind, FailureEvent, Trace};

@@ -9,6 +9,33 @@
 //! Advancing the replayer over a whole trace is O(events × blast ×
 //! log events) total, independent of how many times it is sampled.
 //!
+//! ## Event sources
+//!
+//! The replay core ([`ReplayCore`]) is generic over where events come
+//! from ([`EventSource`]): a [`TraceCursor`] walking a materialized
+//! `&Trace` (the classic [`FleetReplayer`], now a type alias), or a
+//! lazily drawn [`TraceStream`](super::stream::TraceStream) — the
+//! streaming Monte-Carlo path that never materializes a trace. One
+//! event of lookahead is held so `next_change_hours` stays `&self`.
+//!
+//! While events apply, the core maintains three incremental aggregates
+//! the shared multi-policy sweep used to recompute per boundary:
+//!
+//! * the damaged-domain **deficit histogram** over the job-domain
+//!   prefix (the `SnapshotSig` multiset, updated by delta instead of
+//!   re-sorting `domain_healthy_counts`),
+//! * the **live-spare count** (tail domains at full health) and the
+//!   count of job domains with an active degrade, and
+//! * a **dirty-domain list** — exactly the domains whose
+//!   `(healthy, degraded, slowdown)` view changed since the last
+//!   [`ReplayCore::clear_dirty`], so change detection is O(touched)
+//!   instead of O(domains).
+//!
+//! SDC detection-lag billing is accumulated here too: `(at, corrupt)`
+//! pairs are recorded in pull order as events stream past, which makes
+//! the rollback bill identical bit-for-bit to the trace-order scan of
+//! `sdc_rollback_gpu_secs` without requiring a materialized trace.
+//!
 //! ## Equivalence with `replay_to`
 //!
 //! At every queried time `t`, the replayer's fleet agrees with
@@ -30,7 +57,7 @@
 //! happened at `t`.
 
 use super::blast::BlastRadius;
-use super::trace::{EventKind, Trace};
+use super::trace::{EventKind, FailureEvent, Trace};
 use crate::cluster::{FleetHealth, GpuState, Topology};
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
@@ -56,56 +83,99 @@ impl Ord for TimeKey {
     }
 }
 
-/// Incremental, forward-only replay of one trace against one topology.
-pub struct FleetReplayer<'a> {
+/// Where a replay's failure events come from: a materialized trace
+/// cursor or a live generator stream. Events must be handed out in
+/// non-decreasing `at_hours` order (checked incrementally as they are
+/// pulled).
+pub trait EventSource {
+    /// Horizon of the event source (hours).
+    fn horizon_hours(&self) -> f64;
+    /// The next event in time order, `None` once exhausted.
+    fn next_event(&mut self) -> Option<FailureEvent>;
+}
+
+/// [`EventSource`] over a materialized `&Trace`.
+pub struct TraceCursor<'a> {
     trace: &'a Trace,
+    next: usize,
+}
+
+impl<'a> TraceCursor<'a> {
+    /// `trace.events` must be sorted by `at_hours` (all generators
+    /// produce sorted traces; `Trace::replay_to` silently assumes the
+    /// same). Checked loudly here — one O(events) scan per cursor —
+    /// because an out-of-order cursor would return wrong counts.
+    pub fn new(trace: &'a Trace) -> TraceCursor<'a> {
+        assert!(
+            trace.events.windows(2).all(|w| w[0].at_hours <= w[1].at_hours),
+            "FleetReplayer requires time-sorted events"
+        );
+        TraceCursor { trace, next: 0 }
+    }
+}
+
+impl<'a> EventSource for TraceCursor<'a> {
+    fn horizon_hours(&self) -> f64 {
+        self.trace.horizon_hours
+    }
+
+    fn next_event(&mut self) -> Option<FailureEvent> {
+        let ev = self.trace.events.get(self.next).copied();
+        if ev.is_some() {
+            self.next += 1;
+        }
+        ev
+    }
+}
+
+/// Incremental, forward-only replay of one event source against one
+/// topology. See the module docs for the aggregates maintained.
+pub struct ReplayCore<S> {
+    source: S,
+    /// One-event lookahead so `next_change_hours` can peek without
+    /// pulling from the (mutable) source.
+    pending: Option<FailureEvent>,
+    /// Monotonicity watermark over pulled events.
+    last_pulled_at: f64,
+    horizon: f64,
     blast: BlastRadius,
     fleet: FleetHealth,
-    /// Index of the first not-yet-applied event.
-    next_event: usize,
     /// Min-heap of scheduled recoveries `(recover_at, gpu, is_degrade)`.
     /// Entries are lazily deleted: a popped entry only triggers a
     /// recovery if the GPU's *actual* deadline in the tagged layer has
     /// not been extended past it by an overlapping later event.
     recoveries: BinaryHeap<Reverse<(TimeKey, usize, bool)>>,
     now: f64,
+    /// In-horizon SDC `(at_hours, corrupt_at_hours)` pairs in pull
+    /// order — the streaming replacement for scanning the whole trace
+    /// when billing detection-lag rollback.
+    sdc_pairs: Vec<(f64, f64)>,
+    /// Job-domain prefix length for the damage aggregates (domains
+    /// `>= n_job` are the spare tail). Defaults to every domain.
+    n_job: usize,
+    /// `deficit_hist[k]` = number of job domains missing exactly `k`
+    /// GPUs (`k in 1..=domain_size`; index 0 unused). An ascending scan
+    /// reproduces the sorted `(deficit, count)` RLE of `SnapshotSig`.
+    deficit_hist: Vec<u32>,
+    /// Spare-tail domains currently at full health (= live spares).
+    tail_full: usize,
+    /// Job domains with at least one degraded-and-alive GPU.
+    job_degraded: usize,
+    /// Domains whose `(healthy, degraded, slowdown)` view changed since
+    /// the last `clear_dirty`, each listed once.
+    dirty: Vec<u32>,
+    dirty_epoch: Vec<u64>,
+    epoch: u64,
 }
 
-impl<'a> FleetReplayer<'a> {
-    /// Start a sweep at `t = 0` with an all-healthy fleet. `trace.events`
-    /// must be sorted by `at_hours` (all generators produce sorted
-    /// traces; `Trace::replay_to` silently assumes the same). Checked
-    /// loudly here — one O(events) scan per replayer — because an
-    /// out-of-order cursor would return wrong counts without it.
+/// The classic materialized-trace replayer.
+pub type FleetReplayer<'a> = ReplayCore<TraceCursor<'a>>;
+
+impl<'a> ReplayCore<TraceCursor<'a>> {
+    /// Start a sweep at `t = 0` with an all-healthy fleet over a
+    /// materialized trace.
     pub fn new(trace: &'a Trace, topo: &Topology, blast: BlastRadius) -> FleetReplayer<'a> {
-        assert!(
-            trace.events.windows(2).all(|w| w[0].at_hours <= w[1].at_hours),
-            "FleetReplayer requires time-sorted events"
-        );
-        FleetReplayer {
-            trace,
-            blast,
-            fleet: FleetHealth::new(topo.clone()),
-            next_event: 0,
-            recoveries: BinaryHeap::new(),
-            now: 0.0,
-        }
-    }
-
-    /// Current sweep time.
-    pub fn now_hours(&self) -> f64 {
-        self.now
-    }
-
-    /// Horizon of the trace under replay (hours).
-    pub fn horizon_hours(&self) -> f64 {
-        self.trace.horizon_hours
-    }
-
-    /// The trace under replay — the shared multi-policy sweep charges
-    /// trace-global costs (SDC detection-lag rollback) from it.
-    pub fn trace(&self) -> &'a Trace {
-        self.trace
+        ReplayCore::from_source(TraceCursor::new(trace), topo, blast)
     }
 
     /// Rewind to `t = 0` on a (possibly different) trace, reusing the
@@ -116,15 +186,77 @@ impl<'a> FleetReplayer<'a> {
     /// blast radius are unchanged; the same sortedness requirement as
     /// [`FleetReplayer::new`] applies.
     pub fn reset(&mut self, trace: &'a Trace) {
-        assert!(
-            trace.events.windows(2).all(|w| w[0].at_hours <= w[1].at_hours),
-            "FleetReplayer requires time-sorted events"
-        );
-        self.trace = trace;
+        self.reset_source(TraceCursor::new(trace));
+    }
+
+    /// The trace under replay — reference paths charge trace-global
+    /// costs (SDC detection-lag rollback) from it; the streaming path
+    /// uses [`ReplayCore::sdc_pairs`] instead.
+    pub fn trace(&self) -> &'a Trace {
+        self.source.trace
+    }
+}
+
+impl<S: EventSource> ReplayCore<S> {
+    /// Start a sweep at `t = 0` with an all-healthy fleet over any
+    /// event source (e.g. a live
+    /// [`TraceStream`](super::stream::TraceStream)).
+    pub fn from_source(source: S, topo: &Topology, blast: BlastRadius) -> ReplayCore<S> {
+        let n_domains = topo.n_domains();
+        let mut core = ReplayCore {
+            source,
+            pending: None,
+            last_pulled_at: f64::NEG_INFINITY,
+            horizon: 0.0,
+            blast,
+            fleet: FleetHealth::new(topo.clone()),
+            recoveries: BinaryHeap::new(),
+            now: 0.0,
+            sdc_pairs: Vec::new(),
+            n_job: n_domains,
+            deficit_hist: vec![0; topo.domain_size + 1],
+            tail_full: 0,
+            job_degraded: 0,
+            dirty: Vec::new(),
+            dirty_epoch: vec![0; n_domains],
+            epoch: 1,
+        };
+        core.horizon = core.source.horizon_hours();
+        core.pull();
+        core
+    }
+
+    /// Rewind to `t = 0` on a new event source, reusing every
+    /// allocation (fleet state, recovery heap, damage aggregates) — the
+    /// streaming trial loop's O(1)-memory reset.
+    pub fn reset_source(&mut self, source: S) {
+        self.source = source;
         self.fleet.reset();
-        self.next_event = 0;
         self.recoveries.clear();
         self.now = 0.0;
+        self.pending = None;
+        self.last_pulled_at = f64::NEG_INFINITY;
+        self.sdc_pairs.clear();
+        self.n_job = self.fleet.topo.n_domains();
+        for v in &mut self.deficit_hist {
+            *v = 0;
+        }
+        self.tail_full = 0;
+        self.job_degraded = 0;
+        self.dirty.clear();
+        self.epoch += 1;
+        self.horizon = self.source.horizon_hours();
+        self.pull();
+    }
+
+    /// Current sweep time.
+    pub fn now_hours(&self) -> f64 {
+        self.now
+    }
+
+    /// Horizon of the source under replay (hours).
+    pub fn horizon_hours(&self) -> f64 {
+        self.horizon
     }
 
     /// The fleet state as of the last `advance`.
@@ -132,10 +264,28 @@ impl<'a> FleetReplayer<'a> {
         &self.fleet
     }
 
+    /// Refill the one-event lookahead, checking time order and
+    /// recording in-horizon SDC detections for rollback billing.
+    fn pull(&mut self) {
+        self.pending = self.source.next_event();
+        if let Some(ev) = self.pending {
+            assert!(
+                ev.at_hours >= self.last_pulled_at,
+                "FleetReplayer requires time-sorted events"
+            );
+            self.last_pulled_at = ev.at_hours;
+            if let EventKind::Sdc { corrupt_at_hours } = ev.kind {
+                if ev.at_hours > 0.0 && ev.at_hours < self.horizon {
+                    self.sdc_pairs.push((ev.at_hours, corrupt_at_hours));
+                }
+            }
+        }
+    }
+
     /// The next instant (strictly after the current sweep time) at
     /// which the fleet state *may* change: the earlier of the next
     /// failure arrival and the earliest scheduled recovery. `None`
-    /// once the trace is exhausted and every outage has resolved.
+    /// once the source is exhausted and every outage has resolved.
     ///
     /// This is the cursor exact event-boundary integration
     /// ([`crate::manager::StepMode::Exact`]) steps on. Lazily-deleted
@@ -145,13 +295,64 @@ impl<'a> FleetReplayer<'a> {
     /// intervals only on an *observed* health change stay exact — a
     /// stale boundary is just a no-op advance.
     pub fn next_change_hours(&self) -> Option<f64> {
-        let ev = self.trace.events.get(self.next_event).map(|e| e.at_hours);
+        let ev = self.pending.map(|e| e.at_hours);
         let rec = self.recoveries.peek().map(|&Reverse((TimeKey(u), _, _))| u);
         match (ev, rec) {
             (None, None) => None,
             (Some(a), None) => Some(a),
             (None, Some(b)) => Some(b),
             (Some(a), Some(b)) => Some(a.min(b)),
+        }
+    }
+
+    /// `(healthy, degraded, slowdown)` view of one domain.
+    #[inline]
+    fn domain_view(&self, d: usize) -> (usize, usize, f64) {
+        (
+            self.fleet.domain_healthy(d),
+            self.fleet.domain_degraded_counts()[d],
+            self.fleet.domain_slowdowns()[d],
+        )
+    }
+
+    /// Fold one domain's post-mutation view into the incremental
+    /// aggregates. Blast sets never cross a domain boundary, so each
+    /// event (and each recovery pop) touches exactly one domain.
+    fn domain_delta(&mut self, d: usize, pre: (usize, usize, f64)) {
+        let (h0, dg0, sl0) = pre;
+        let (h1, dg1, sl1) = self.domain_view(d);
+        if h1 == h0 && dg1 == dg0 && sl1 == sl0 {
+            return;
+        }
+        if self.dirty_epoch[d] != self.epoch {
+            self.dirty_epoch[d] = self.epoch;
+            self.dirty.push(d as u32);
+        }
+        if h1 != h0 {
+            let ds = self.fleet.topo.domain_size;
+            if d < self.n_job {
+                let (def0, def1) = (ds - h0, ds - h1);
+                if def0 > 0 {
+                    self.deficit_hist[def0] -= 1;
+                }
+                if def1 > 0 {
+                    self.deficit_hist[def1] += 1;
+                }
+            } else {
+                if h0 == ds {
+                    self.tail_full -= 1;
+                }
+                if h1 == ds {
+                    self.tail_full += 1;
+                }
+            }
+        }
+        if d < self.n_job && (dg0 > 0) != (dg1 > 0) {
+            if dg1 > 0 {
+                self.job_degraded += 1;
+            } else {
+                self.job_degraded -= 1;
+            }
         }
     }
 
@@ -168,11 +369,13 @@ impl<'a> FleetReplayer<'a> {
         );
         loop {
             let next_rec = self.recoveries.peek().map(|&Reverse((TimeKey(u), _, _))| u);
-            let next_ev = self.trace.events.get(self.next_event).map(|e| e.at_hours);
+            let next_ev = self.pending.map(|e| e.at_hours);
             let rec_due = matches!(next_rec, Some(u) if u <= now_hours);
             let ev_due = matches!(next_ev, Some(a) if a <= now_hours);
             if rec_due && (!ev_due || next_rec.unwrap() <= next_ev.unwrap()) {
                 let Reverse((TimeKey(due), gpu, is_degrade)) = self.recoveries.pop().unwrap();
+                let d = self.fleet.topo.domain_of(gpu);
+                let pre = self.domain_view(d);
                 if is_degrade {
                     // Degrade entries stack per GPU: expire the ones due
                     // by this boundary, surviving overlaps stay active.
@@ -185,12 +388,15 @@ impl<'a> FleetReplayer<'a> {
                         self.fleet.recover(gpu);
                     }
                 }
+                self.domain_delta(d, pre);
             } else if ev_due {
-                let ev = self.trace.events[self.next_event];
-                self.next_event += 1;
+                let ev = self.pending.take().unwrap();
+                self.pull();
+                let d = self.fleet.topo.domain_of(ev.gpu);
+                let pre = self.domain_view(d);
                 match ev.kind {
                     EventKind::Degrade { slowdown } => {
-                        for g in self.blast.affected(&self.fleet.topo, ev.gpu) {
+                        for g in self.blast.affected_range(&self.fleet.topo, ev.gpu) {
                             self.fleet.degrade(g, slowdown, ev.at_hours, ev.recover_at_hours);
                             self.recoveries.push(Reverse((
                                 TimeKey(ev.recover_at_hours),
@@ -200,7 +406,7 @@ impl<'a> FleetReplayer<'a> {
                         }
                     }
                     EventKind::Fail | EventKind::Sdc { .. } => {
-                        for g in self.blast.affected(&self.fleet.topo, ev.gpu) {
+                        for g in self.blast.affected_range(&self.fleet.topo, ev.gpu) {
                             self.fleet.fail(g, ev.at_hours, ev.recover_at_hours);
                             self.recoveries.push(Reverse((
                                 TimeKey(ev.recover_at_hours),
@@ -210,6 +416,7 @@ impl<'a> FleetReplayer<'a> {
                         }
                     }
                 }
+                self.domain_delta(d, pre);
             } else {
                 break;
             }
@@ -217,12 +424,101 @@ impl<'a> FleetReplayer<'a> {
         self.now = now_hours;
         &self.fleet
     }
+
+    /// Declare the job/spare split: domains `< n_job` feed the deficit
+    /// histogram, the tail feeds the live-spare count. Recomputes the
+    /// aggregates from the current fleet state (O(domains), called once
+    /// per trial by the shared sweep).
+    pub fn set_job_domains(&mut self, n_job: usize) {
+        let n_domains = self.fleet.topo.n_domains();
+        assert!(n_job <= n_domains, "job prefix {n_job} > {n_domains} domains");
+        self.n_job = n_job;
+        for v in &mut self.deficit_hist {
+            *v = 0;
+        }
+        self.tail_full = 0;
+        self.job_degraded = 0;
+        let ds = self.fleet.topo.domain_size;
+        for d in 0..n_domains {
+            let h = self.fleet.domain_healthy(d);
+            if d < n_job {
+                let def = ds - h;
+                if def > 0 {
+                    self.deficit_hist[def] += 1;
+                }
+                if self.fleet.domain_degraded_counts()[d] > 0 {
+                    self.job_degraded += 1;
+                }
+            } else if h == ds {
+                self.tail_full += 1;
+            }
+        }
+    }
+
+    /// Job-domain prefix length set by [`ReplayCore::set_job_domains`].
+    pub fn job_domains(&self) -> usize {
+        self.n_job
+    }
+
+    /// Damaged-domain deficit histogram over the job prefix (index =
+    /// missing GPUs, `deficit_hist()[0]` unused). An ascending scan is
+    /// exactly the sorted `(deficit, count)` multiset `SnapshotSig`
+    /// encodes.
+    pub fn deficit_histogram(&self) -> &[u32] {
+        &self.deficit_hist
+    }
+
+    /// Spare-tail domains currently at full health — the same count
+    /// `split_job_spares` derives by scanning the tail slice.
+    pub fn live_spare_domains(&self) -> usize {
+        self.tail_full
+    }
+
+    /// Job domains with at least one degraded-and-alive GPU.
+    pub fn job_degraded_domains(&self) -> usize {
+        self.job_degraded
+    }
+
+    /// Domains whose `(healthy, degraded, slowdown)` view changed since
+    /// the last [`ReplayCore::clear_dirty`] (each listed once, in
+    /// first-touched order). A domain in this list may have net-zero
+    /// change (e.g. a recovery and a failure at one boundary cancel);
+    /// compare against tracked previous values to confirm.
+    pub fn dirty_domains(&self) -> &[u32] {
+        &self.dirty
+    }
+
+    pub fn clear_dirty(&mut self) {
+        self.dirty.clear();
+        self.epoch += 1;
+    }
+
+    /// In-horizon SDC `(at_hours, corrupt_at_hours)` pairs pulled so
+    /// far, in event order. Complete once the source is exhausted —
+    /// call [`ReplayCore::drain_source`] first if the sweep stopped
+    /// before the horizon.
+    pub fn sdc_pairs(&self) -> &[(f64, f64)] {
+        &self.sdc_pairs
+    }
+
+    /// Consume the rest of the source *without* applying it to the
+    /// fleet, so `sdc_pairs` covers every in-horizon detection. Grid
+    /// sweeps stop advancing at the last grid point; the trailing
+    /// events still owe rollback. After draining, `advance` only
+    /// resolves already-scheduled recoveries.
+    pub fn drain_source(&mut self) {
+        while self.pending.is_some() {
+            self.pull();
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::failure::rates::FailureModel;
+    use crate::failure::scenario::{generate_scenario, ScenarioConfig, ScenarioKind};
+    use crate::failure::stream::TraceStream;
     use crate::util::prng::Rng;
 
     fn assert_matches_replay_to(trace: &Trace, topo: &Topology, blast: BlastRadius, times: &[f64]) {
@@ -448,5 +744,216 @@ mod tests {
         let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
         rep.advance(1.0);
         rep.advance(0.5);
+    }
+
+    fn hot_config(kind: ScenarioKind) -> ScenarioConfig {
+        let mut cfg = ScenarioConfig::new(kind);
+        cfg.correlated = cfg.correlated.scaled(2_000.0);
+        cfg.straggler = cfg.straggler.scaled(300.0);
+        cfg.sdc = cfg.sdc.scaled(2_000.0);
+        cfg
+    }
+
+    fn all_kinds() -> [ScenarioKind; 4] {
+        [
+            ScenarioKind::Independent,
+            ScenarioKind::Correlated,
+            ScenarioKind::Straggler,
+            ScenarioKind::Sdc,
+        ]
+    }
+
+    /// Rebuild the deficit histogram / live spares / degraded-domain
+    /// count from the fleet slices — the from-scratch oracle for the
+    /// incremental aggregates.
+    fn aggregates_from_scratch(
+        fleet: &FleetHealth,
+        n_job: usize,
+    ) -> (Vec<u32>, usize, usize) {
+        let ds = fleet.topo.domain_size;
+        let mut hist = vec![0u32; ds + 1];
+        let mut tail_full = 0;
+        let mut job_degraded = 0;
+        for d in 0..fleet.topo.n_domains() {
+            let h = fleet.domain_healthy(d);
+            if d < n_job {
+                if ds - h > 0 {
+                    hist[ds - h] += 1;
+                }
+                if fleet.domain_degraded_counts()[d] > 0 {
+                    job_degraded += 1;
+                }
+            } else if h == ds {
+                tail_full += 1;
+            }
+        }
+        (hist, tail_full, job_degraded)
+    }
+
+    #[test]
+    fn incremental_aggregates_match_from_scratch_on_every_boundary() {
+        let topo = Topology::of(256, 16, 4);
+        let model = FailureModel::llama3().scaled(250.0);
+        let horizon = 24.0 * 8.0;
+        for kind in all_kinds() {
+            for (seed, n_job) in [(1u64, 16), (2, 12), (3, 10)] {
+                let mut rng = Rng::new(seed);
+                let trace =
+                    generate_scenario(&topo, &model, &hot_config(kind), horizon, &mut rng);
+                let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
+                rep.set_job_domains(n_job);
+                rep.advance(0.0);
+                let mut boundaries = 0;
+                while let Some(t) = rep.next_change_hours() {
+                    rep.advance(t);
+                    let (hist, tail_full, job_degraded) =
+                        aggregates_from_scratch(rep.fleet(), n_job);
+                    assert_eq!(
+                        rep.deficit_histogram(),
+                        &hist[..],
+                        "{kind:?} seed {seed} n_job {n_job} hist at t={t}"
+                    );
+                    assert_eq!(rep.live_spare_domains(), tail_full, "{kind:?} spares at t={t}");
+                    assert_eq!(
+                        rep.job_degraded_domains(),
+                        job_degraded,
+                        "{kind:?} degraded at t={t}"
+                    );
+                    boundaries += 1;
+                }
+                assert!(boundaries > 0, "{kind:?} had no boundaries");
+            }
+        }
+    }
+
+    #[test]
+    fn dirty_domains_are_exactly_the_changed_domains() {
+        let topo = Topology::of(256, 16, 4);
+        let model = FailureModel::llama3().scaled(250.0);
+        let mut rng = Rng::new(9);
+        let trace = generate_scenario(
+            &topo,
+            &model,
+            &hot_config(ScenarioKind::Straggler),
+            24.0 * 8.0,
+            &mut rng,
+        );
+        let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
+        rep.advance(0.0);
+        rep.clear_dirty();
+        let mut prev: Vec<(usize, usize, f64)> = (0..topo.n_domains())
+            .map(|d| {
+                (
+                    rep.fleet().domain_healthy(d),
+                    rep.fleet().domain_degraded_counts()[d],
+                    rep.fleet().domain_slowdowns()[d],
+                )
+            })
+            .collect();
+        while let Some(t) = rep.next_change_hours() {
+            rep.advance(t);
+            let actually_changed: Vec<u32> = (0..topo.n_domains())
+                .filter(|&d| {
+                    let now = (
+                        rep.fleet().domain_healthy(d),
+                        rep.fleet().domain_degraded_counts()[d],
+                        rep.fleet().domain_slowdowns()[d],
+                    );
+                    now != prev[d]
+                })
+                .map(|d| d as u32)
+                .collect();
+            let mut dirty: Vec<u32> = rep.dirty_domains().to_vec();
+            dirty.sort_unstable();
+            // Dirty is a superset (net-zero touches may linger), but
+            // every actual change must be flagged.
+            for d in &actually_changed {
+                assert!(dirty.contains(d), "domain {d} changed at t={t} but not dirty");
+            }
+            for &d in &dirty {
+                prev[d as usize] = (
+                    rep.fleet().domain_healthy(d as usize),
+                    rep.fleet().domain_degraded_counts()[d as usize],
+                    rep.fleet().domain_slowdowns()[d as usize],
+                );
+            }
+            rep.clear_dirty();
+        }
+        assert!(rep.dirty_domains().is_empty());
+    }
+
+    #[test]
+    fn streamed_replay_is_bit_identical_to_materialized_replay() {
+        let topo = Topology::of(256, 16, 4);
+        let model = FailureModel::llama3().scaled(100.0);
+        let horizon = 24.0 * 10.0;
+        for kind in all_kinds() {
+            let cfg = hot_config(kind);
+            let stream = TraceStream::new(&topo, &model, &cfg, horizon, Rng::new(1234));
+            let trace = stream.clone().collect_trace();
+            let mut live = ReplayCore::from_source(stream, &topo, BlastRadius::Single);
+            let mut mat = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
+            live.advance(0.0);
+            mat.advance(0.0);
+            loop {
+                let (a, b) = (live.next_change_hours(), mat.next_change_hours());
+                assert_eq!(a, b, "{kind:?} boundary mismatch");
+                let Some(t) = a else { break };
+                live.advance(t);
+                mat.advance(t);
+                assert_eq!(
+                    live.fleet().domain_healthy_counts(),
+                    mat.fleet().domain_healthy_counts(),
+                    "{kind:?} counts at t={t}"
+                );
+                assert_eq!(
+                    live.fleet().domain_slowdowns(),
+                    mat.fleet().domain_slowdowns(),
+                    "{kind:?} slowdowns at t={t}"
+                );
+            }
+            live.drain_source();
+            mat.drain_source();
+            assert_eq!(live.sdc_pairs(), mat.sdc_pairs(), "{kind:?} sdc pairs");
+        }
+    }
+
+    #[test]
+    fn drained_sdc_pairs_match_the_trace_scan() {
+        let topo = Topology::of(256, 16, 4);
+        let model = FailureModel::llama3().scaled(50.0);
+        let mut rng = Rng::new(77);
+        let trace = generate_scenario(
+            &topo,
+            &model,
+            &hot_config(ScenarioKind::Sdc),
+            24.0 * 10.0,
+            &mut rng,
+        );
+        let expected: Vec<(f64, f64)> = trace
+            .events
+            .iter()
+            .filter_map(|ev| match ev.kind {
+                EventKind::Sdc { corrupt_at_hours }
+                    if ev.at_hours > 0.0 && ev.at_hours < trace.horizon_hours =>
+                {
+                    Some((ev.at_hours, corrupt_at_hours))
+                }
+                _ => None,
+            })
+            .collect();
+        assert!(!expected.is_empty());
+        // Grid-style early stop: advance partway, then drain.
+        let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
+        rep.advance(trace.horizon_hours * 0.3);
+        rep.drain_source();
+        assert_eq!(rep.sdc_pairs(), &expected[..]);
+        // Exact-style full walk collects them without draining.
+        let mut rep = FleetReplayer::new(&trace, &topo, BlastRadius::Single);
+        while let Some(t) = rep.next_change_hours() {
+            rep.advance(t);
+        }
+        rep.drain_source();
+        assert_eq!(rep.sdc_pairs(), &expected[..]);
     }
 }

@@ -1,0 +1,542 @@
+//! Streaming trace generation: draw failure events lazily, in time
+//! order, instead of materializing a full `Trace` vector per trial.
+//!
+//! A [`TraceStream`] wraps the same Poisson processes as
+//! [`Trace::generate`] and every [`ScenarioKind`] arm of
+//! [`generate_scenario`](super::scenario::generate_scenario) behind one
+//! pull contract ([`EventSource`]): each call to
+//! [`TraceStream::next_event`] returns the next event by `at_hours`,
+//! holding only O(blast) buffered events — so a Monte-Carlo trial fused
+//! with the incremental replayer runs in O(1) memory regardless of
+//! horizon (the million-trial regime of ROADMAP item 5).
+//!
+//! ## Determinism and draw order
+//!
+//! The materialized generators draw each superposed process *to
+//! completion* against one shared PRNG and then time-sort, which a lazy
+//! merge cannot reproduce draw-for-draw. The stream therefore defines
+//! its own canonical order: every process gets a sub-PRNG forked from
+//! the trial PRNG under a fixed tag, each process draws
+//! `arrival → payload → next arrival` exactly as its materialized
+//! counterpart does, and emissions are merged by time (ties broken by
+//! process index: base, then node, then domain). Two consequences the
+//! tests pin down:
+//!
+//! * `ScenarioKind::Independent` uses the trial PRNG *directly* (no
+//!   fork), so [`TraceStream::collect_trace`] is event-for-event
+//!   identical to [`Trace::generate`] on the same PRNG state.
+//! * For every kind, replaying the live stream is bit-identical to
+//!   materializing it first via `collect_trace` and replaying that
+//!   trace — the property the stream-vs-materialized `FleetStats`
+//!   identity suites build on.
+
+use super::blast::BlastRadius;
+use super::rates::FailureModel;
+use super::replayer::EventSource;
+use super::scenario::{ScenarioConfig, ScenarioKind};
+use super::trace::{EventKind, FailureEvent, Trace};
+use crate::cluster::Topology;
+use crate::util::prng::Rng;
+use std::collections::VecDeque;
+
+/// Fixed fork tags for the per-process sub-PRNGs (non-Independent
+/// kinds). Part of the stream's determinism contract: changing a tag
+/// changes every scenario stream.
+const FORK_BASE: u64 = 0x5743_BA5E;
+const FORK_NODE: u64 = 0x5743_140D;
+const FORK_DOMAIN: u64 = 0x5743_D011;
+const FORK_EXTRA: u64 = 0x5743_E77A;
+
+/// Which Poisson process a [`Process`] draws from.
+#[derive(Clone, Copy, Debug)]
+enum ProcKind {
+    /// Independent per-GPU failures (the `Trace::generate` base).
+    Base,
+    /// Whole-node correlated blasts.
+    Node,
+    /// Whole-domain correlated blasts.
+    Domain,
+    /// Degraded-but-alive straggler onsets.
+    Straggler,
+    /// Silent corruptions surfacing at the next validation sweep.
+    Sdc,
+}
+
+/// One lazy Poisson arrival process with its own PRNG.
+#[derive(Clone, Debug)]
+struct Process {
+    kind: ProcKind,
+    rng: Rng,
+    /// Arrivals per hour.
+    rate: f64,
+    /// Most recent arrival time (the corruption time for SDC).
+    arrival_t: f64,
+    /// Time of the next emission; `f64::INFINITY` once exhausted. For
+    /// SDC this is the *detection* boundary, which is monotone in the
+    /// arrival time, so per-process emissions stay time-sorted.
+    emit_t: f64,
+}
+
+impl Process {
+    fn new(kind: ProcKind, rate: f64, rng: Rng) -> Process {
+        Process { kind, rng, rate, arrival_t: 0.0, emit_t: f64::INFINITY }
+    }
+
+    /// Draw the next arrival and derive the next emission time. For SDC
+    /// a detection boundary at/after the horizon ends the process: the
+    /// boundary is monotone in the arrival time, so every later arrival
+    /// would be discarded too (the materialized generator keeps drawing
+    /// and skipping; with a private sub-PRNG the extra draws are
+    /// unobservable and skipped).
+    fn advance_arrival(&mut self, horizon_hours: f64, validation_interval_hours: f64) {
+        if self.rate <= 0.0 {
+            self.emit_t = f64::INFINITY;
+            return;
+        }
+        self.arrival_t += self.rng.exponential(self.rate);
+        if self.arrival_t >= horizon_hours {
+            self.emit_t = f64::INFINITY;
+            return;
+        }
+        self.emit_t = match self.kind {
+            ProcKind::Sdc => {
+                let v = validation_interval_hours;
+                let detected = ((self.arrival_t / v).floor() + 1.0) * v;
+                if detected >= horizon_hours {
+                    f64::INFINITY
+                } else {
+                    detected
+                }
+            }
+            _ => self.arrival_t,
+        };
+    }
+}
+
+/// Lazily generated, time-sorted failure-event stream for one trial.
+#[derive(Clone, Debug)]
+pub struct TraceStream {
+    topo: Topology,
+    model: FailureModel,
+    cfg: ScenarioConfig,
+    horizon_hours: f64,
+    procs: Vec<Process>,
+    /// Events already drawn but not yet handed out — at most one blast
+    /// group (≤ `domain_size` events), never a whole trace.
+    buf: VecDeque<FailureEvent>,
+    max_buffered: usize,
+    emitted: usize,
+}
+
+impl TraceStream {
+    /// Stream equivalent of
+    /// [`generate_scenario`](super::scenario::generate_scenario):
+    /// `cfg.kind` selects which processes are superposed on the
+    /// independent base process. The PRNG is taken by value — it is the
+    /// trial's entire entropy source (fork one per trial).
+    pub fn new(
+        topo: &Topology,
+        model: &FailureModel,
+        cfg: &ScenarioConfig,
+        horizon_hours: f64,
+        mut rng: Rng,
+    ) -> TraceStream {
+        let base_rate = model.cluster_rate_per_hour(topo.n_gpus);
+        let procs = match cfg.kind {
+            // The base process consumes the trial PRNG directly, in
+            // Trace::generate's exact draw order.
+            ScenarioKind::Independent => vec![Process::new(ProcKind::Base, base_rate, rng)],
+            ScenarioKind::Correlated => {
+                let r = &cfg.correlated;
+                let node_rate = r.node_events_per_node_day * topo.n_nodes() as f64 / 24.0;
+                let domain_rate = r.domain_events_per_domain_day * topo.n_domains() as f64 / 24.0;
+                vec![
+                    Process::new(ProcKind::Base, base_rate, rng.fork(FORK_BASE)),
+                    Process::new(ProcKind::Node, node_rate, rng.fork(FORK_NODE)),
+                    Process::new(ProcKind::Domain, domain_rate, rng.fork(FORK_DOMAIN)),
+                ]
+            }
+            ScenarioKind::Straggler => {
+                let rate = cfg.straggler.events_per_gpu_day * topo.n_gpus as f64 / 24.0;
+                vec![
+                    Process::new(ProcKind::Base, base_rate, rng.fork(FORK_BASE)),
+                    Process::new(ProcKind::Straggler, rate, rng.fork(FORK_EXTRA)),
+                ]
+            }
+            ScenarioKind::Sdc => {
+                let rate = cfg.sdc.events_per_gpu_day * topo.n_gpus as f64 / 24.0;
+                vec![
+                    Process::new(ProcKind::Base, base_rate, rng.fork(FORK_BASE)),
+                    Process::new(ProcKind::Sdc, rate, rng.fork(FORK_EXTRA)),
+                ]
+            }
+        };
+        let mut stream = TraceStream {
+            topo: topo.clone(),
+            model: model.clone(),
+            cfg: cfg.clone(),
+            horizon_hours,
+            procs,
+            buf: VecDeque::new(),
+            max_buffered: 0,
+            emitted: 0,
+        };
+        let v = stream.cfg.sdc.validation_interval_hours;
+        for p in &mut stream.procs {
+            p.advance_arrival(horizon_hours, v);
+        }
+        stream
+    }
+
+    /// Independent-kind stream (the bare `Trace::generate` process).
+    pub fn independent(
+        topo: &Topology,
+        model: &FailureModel,
+        horizon_hours: f64,
+        rng: Rng,
+    ) -> TraceStream {
+        TraceStream::new(topo, model, &ScenarioConfig::new(ScenarioKind::Independent), horizon_hours, rng)
+    }
+
+    pub fn horizon_hours(&self) -> f64 {
+        self.horizon_hours
+    }
+
+    /// Events handed out so far.
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// High-water mark of the internal event buffer — bounded by the
+    /// largest blast group (≤ `domain_size`), the O(1)-memory evidence
+    /// the perf gate asserts on.
+    pub fn max_buffered(&self) -> usize {
+        self.max_buffered
+    }
+
+    /// Draw all events of the earliest-emitting process's current
+    /// arrival into the buffer, then schedule that process's next one.
+    fn refill(&mut self) -> bool {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, p) in self.procs.iter().enumerate() {
+            if p.emit_t.is_finite() && best.map_or(true, |(t, _)| p.emit_t < t) {
+                best = Some((p.emit_t, i));
+            }
+        }
+        let Some((t, pi)) = best else { return false };
+        let p = &mut self.procs[pi];
+        match p.kind {
+            ProcKind::Base => {
+                let gpu = p.rng.index(self.topo.n_gpus);
+                let (is_hw, rec) = self.model.draw_recovery_hours(&mut p.rng);
+                self.buf.push_back(FailureEvent {
+                    at_hours: t,
+                    gpu,
+                    is_hw,
+                    recover_at_hours: t + rec,
+                    kind: EventKind::Fail,
+                });
+            }
+            ProcKind::Node | ProcKind::Domain => {
+                // Correlated events expand into per-GPU failures sharing
+                // one arrival and one recovery, exactly like the
+                // materialized generator — the blast lives in the trace.
+                let (lo, hi) = self.cfg.correlated.recovery_hours;
+                let (anchor, blast) = match p.kind {
+                    ProcKind::Node => {
+                        (p.rng.index(self.topo.n_nodes()) * self.topo.gpus_per_node, BlastRadius::Node)
+                    }
+                    _ => {
+                        (p.rng.index(self.topo.n_domains()) * self.topo.domain_size, BlastRadius::Domain)
+                    }
+                };
+                let rec = p.rng.range_f64(lo, hi);
+                for g in blast.affected_range(&self.topo, anchor) {
+                    self.buf.push_back(FailureEvent {
+                        at_hours: t,
+                        gpu: g,
+                        is_hw: true,
+                        recover_at_hours: t + rec,
+                        kind: EventKind::Fail,
+                    });
+                }
+            }
+            ProcKind::Straggler => {
+                let r = &self.cfg.straggler;
+                let (lo, hi) = r.slowdown;
+                let gpu = p.rng.index(self.topo.n_gpus);
+                let slowdown = p.rng.range_f64(lo, hi);
+                let duration = p.rng.exponential(1.0 / r.mean_duration_hours);
+                self.buf.push_back(FailureEvent {
+                    at_hours: t,
+                    gpu,
+                    is_hw: false,
+                    recover_at_hours: t + duration,
+                    kind: EventKind::Degrade { slowdown },
+                });
+            }
+            ProcKind::Sdc => {
+                let gpu = p.rng.index(self.topo.n_gpus);
+                let (is_hw, rec) = self.model.draw_recovery_hours(&mut p.rng);
+                self.buf.push_back(FailureEvent {
+                    at_hours: t,
+                    gpu,
+                    is_hw,
+                    recover_at_hours: t + rec,
+                    kind: EventKind::Sdc { corrupt_at_hours: p.arrival_t },
+                });
+            }
+        }
+        let v = self.cfg.sdc.validation_interval_hours;
+        self.procs[pi].advance_arrival(self.horizon_hours, v);
+        self.max_buffered = self.max_buffered.max(self.buf.len());
+        true
+    }
+
+    /// The next event by `at_hours`, or `None` once every process has
+    /// run past the horizon. Emission times are non-decreasing.
+    pub fn next_event(&mut self) -> Option<FailureEvent> {
+        if self.buf.is_empty() && !self.refill() {
+            return None;
+        }
+        self.emitted += 1;
+        self.buf.pop_front()
+    }
+
+    /// Materialize the remaining stream as a `Trace` (time-sorted by
+    /// construction). The bridge between the streaming and materialized
+    /// paths: replaying `collect_trace()` is bit-identical to replaying
+    /// the live stream.
+    pub fn collect_trace(mut self) -> Trace {
+        let horizon_hours = self.horizon_hours;
+        let mut events = Vec::new();
+        while let Some(ev) = self.next_event() {
+            events.push(ev);
+        }
+        Trace { horizon_hours, events }
+    }
+}
+
+impl EventSource for TraceStream {
+    fn horizon_hours(&self) -> f64 {
+        self.horizon_hours
+    }
+
+    fn next_event(&mut self) -> Option<FailureEvent> {
+        TraceStream::next_event(self)
+    }
+}
+
+/// Deterministic per-trial stream factory: one seed fans out to
+/// independent trial PRNGs by fork tag, so trial `i`'s stream (and its
+/// materialized twin) can be rebuilt in O(1) from any worker thread —
+/// the random-access property `run_trials_stream_par` batches on.
+#[derive(Clone, Debug)]
+pub struct TrialGen {
+    pub topo: Topology,
+    pub model: FailureModel,
+    pub cfg: ScenarioConfig,
+    pub horizon_hours: f64,
+    pub seed: u64,
+    pub trials: usize,
+}
+
+impl TrialGen {
+    pub fn new(
+        topo: &Topology,
+        model: &FailureModel,
+        cfg: &ScenarioConfig,
+        horizon_hours: f64,
+        seed: u64,
+        trials: usize,
+    ) -> TrialGen {
+        TrialGen {
+            topo: topo.clone(),
+            model: model.clone(),
+            cfg: cfg.clone(),
+            horizon_hours,
+            seed,
+            trials,
+        }
+    }
+
+    /// Trial `i`'s PRNG. A fresh root is re-seeded per call so the fork
+    /// is O(1) per trial (no order-dependent draw chain), giving every
+    /// trial an independent stream addressable from any thread.
+    pub fn rng_for(&self, trial: usize) -> Rng {
+        let mut root = Rng::new(self.seed);
+        root.fork(trial as u64)
+    }
+
+    pub fn stream_for(&self, trial: usize) -> TraceStream {
+        TraceStream::new(&self.topo, &self.model, &self.cfg, self.horizon_hours, self.rng_for(trial))
+    }
+
+    /// Materialized twin of [`TrialGen::stream_for`] — same events, same
+    /// order (the bit-identity baseline and A/B memory comparand).
+    pub fn trace_for(&self, trial: usize) -> Trace {
+        self.stream_for(trial).collect_trace()
+    }
+
+    pub fn traces(&self) -> Vec<Trace> {
+        (0..self.trials).map(|i| self.trace_for(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::of(512, 16, 4)
+    }
+
+    fn hot_config(kind: ScenarioKind) -> ScenarioConfig {
+        let mut cfg = ScenarioConfig::new(kind);
+        cfg.correlated = cfg.correlated.scaled(2_000.0);
+        cfg.straggler = cfg.straggler.scaled(200.0);
+        cfg.sdc = cfg.sdc.scaled(2_000.0);
+        cfg
+    }
+
+    fn all_kinds() -> [ScenarioKind; 4] {
+        [
+            ScenarioKind::Independent,
+            ScenarioKind::Correlated,
+            ScenarioKind::Straggler,
+            ScenarioKind::Sdc,
+        ]
+    }
+
+    #[test]
+    fn independent_stream_matches_trace_generate_exactly() {
+        let topo = topo();
+        let model = FailureModel::llama3().scaled(40.0);
+        let horizon = 24.0 * 12.0;
+        let stream = TraceStream::independent(&topo, &model, horizon, Rng::new(99));
+        let collected = stream.collect_trace();
+        let mut rng = Rng::new(99);
+        let reference = Trace::generate(&topo, &model, horizon, &mut rng);
+        assert_eq!(collected.horizon_hours, reference.horizon_hours);
+        assert_eq!(collected.events, reference.events);
+        assert!(!collected.events.is_empty());
+    }
+
+    #[test]
+    fn every_kind_streams_the_event_contract() {
+        let topo = topo();
+        let model = FailureModel::llama3().scaled(30.0);
+        let horizon = 24.0 * 10.0;
+        for kind in all_kinds() {
+            let mut stream =
+                TraceStream::new(&topo, &model, &hot_config(kind), horizon, Rng::new(0xC0FFEE));
+            let mut prev = 0.0f64;
+            let mut n = 0usize;
+            while let Some(ev) = stream.next_event() {
+                assert!(ev.at_hours >= prev, "{kind:?} went backwards");
+                prev = ev.at_hours;
+                assert!(ev.at_hours >= 0.0 && ev.at_hours < horizon, "{kind:?} out of horizon");
+                assert!(ev.recover_at_hours > ev.at_hours, "{kind:?} non-positive outage");
+                assert!(ev.gpu < topo.n_gpus);
+                n += 1;
+            }
+            assert!(n > 0, "{kind:?} produced no events");
+            assert_eq!(stream.emitted(), n);
+            // O(1) buffering: never more than one blast group in flight.
+            assert!(
+                stream.max_buffered() <= topo.domain_size,
+                "{kind:?} buffered {}",
+                stream.max_buffered()
+            );
+        }
+    }
+
+    #[test]
+    fn stream_event_mix_matches_materialized_generator() {
+        // Same processes, different draw interleavings: event *counts*
+        // per kind should agree within Monte-Carlo noise.
+        let topo = topo();
+        let model = FailureModel::llama3().scaled(30.0);
+        let horizon = 24.0 * 30.0;
+        for kind in all_kinds() {
+            let cfg = hot_config(kind);
+            let count = |tr: &Trace, pick: fn(&EventKind) -> bool| {
+                tr.events.iter().filter(|e| pick(&e.kind)).count()
+            };
+            let mut streamed = (0usize, 0usize, 0usize); // fail/degrade/sdc
+            let mut materialized = (0usize, 0usize, 0usize);
+            for trial in 0..8u64 {
+                let s = TraceStream::new(&topo, &model, &cfg, horizon, Rng::new(1000 + trial));
+                let t = s.collect_trace();
+                streamed.0 += count(&t, |k| matches!(k, EventKind::Fail));
+                streamed.1 += count(&t, |k| matches!(k, EventKind::Degrade { .. }));
+                streamed.2 += count(&t, |k| matches!(k, EventKind::Sdc { .. }));
+                let mut rng = Rng::new(5000 + trial);
+                let t = crate::failure::generate_scenario(&topo, &model, &cfg, horizon, &mut rng);
+                materialized.0 += count(&t, |k| matches!(k, EventKind::Fail));
+                materialized.1 += count(&t, |k| matches!(k, EventKind::Degrade { .. }));
+                materialized.2 += count(&t, |k| matches!(k, EventKind::Sdc { .. }));
+            }
+            for (s, m) in [
+                (streamed.0, materialized.0),
+                (streamed.1, materialized.1),
+                (streamed.2, materialized.2),
+            ] {
+                if s + m < 40 {
+                    continue; // too few arrivals to compare rates
+                }
+                let ratio = s as f64 / m.max(1) as f64;
+                assert!((0.6..1.7).contains(&ratio), "{kind:?}: stream {s} vs materialized {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn correlated_stream_emits_whole_blast_groups() {
+        let topo = topo();
+        // Silence the base process so only correlated groups remain.
+        let model = FailureModel::llama3().scaled(1e-9);
+        let mut cfg = ScenarioConfig::new(ScenarioKind::Correlated);
+        cfg.correlated = cfg.correlated.scaled(3_000.0);
+        let trace =
+            TraceStream::new(&topo, &model, &cfg, 24.0 * 10.0, Rng::new(8)).collect_trace();
+        assert!(!trace.events.is_empty());
+        let mut i = 0;
+        let mut saw_domain = false;
+        while i < trace.events.len() {
+            let t = trace.events[i].at_hours;
+            let mut j = i;
+            while j < trace.events.len() && trace.events[j].at_hours == t {
+                j += 1;
+            }
+            let group = j - i;
+            assert!(
+                group == topo.gpus_per_node || group == topo.domain_size,
+                "blast group of {group} at t={t}"
+            );
+            saw_domain |= group == topo.domain_size;
+            i = j;
+        }
+        assert!(saw_domain, "no domain-level blast streamed");
+    }
+
+    #[test]
+    fn trial_gen_streams_are_independent_and_reproducible() {
+        let topo = topo();
+        let model = FailureModel::llama3().scaled(30.0);
+        let gen = TrialGen::new(
+            &topo,
+            &model,
+            &hot_config(ScenarioKind::Sdc),
+            24.0 * 10.0,
+            42,
+            4,
+        );
+        let a0 = gen.trace_for(0);
+        let a0_again = gen.trace_for(0);
+        assert_eq!(a0.events, a0_again.events, "trial 0 not reproducible");
+        let a1 = gen.trace_for(1);
+        assert_ne!(a0.events, a1.events, "trials 0 and 1 identical");
+        assert_eq!(gen.traces().len(), 4);
+    }
+}

@@ -29,7 +29,7 @@ pub enum EventKind {
 }
 
 /// One failure event in a trace.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FailureEvent {
     pub at_hours: f64,
     pub gpu: usize,
@@ -97,6 +97,49 @@ impl Trace {
             out.push((t, rep.advance(t).n_failed()));
         }
         out
+    }
+
+    /// Exact step-function variant of [`Trace::failed_series`]: the
+    /// concurrently-failed count is piecewise constant, so instead of
+    /// sampling on a grid this returns its breakpoints — `(t, failed)`
+    /// at `t = 0` and at every event boundary (< horizon) where the
+    /// count actually changes. The count holds from each breakpoint
+    /// until the next (or the horizon), which makes time integrals over
+    /// the series exact rather than grid-quantized (the Fig. 4 bench's
+    /// exact mode).
+    pub fn failed_series_exact(&self, topo: &Topology, blast: BlastRadius) -> Vec<(f64, usize)> {
+        let mut rep = FleetReplayer::new(self, topo, blast);
+        let mut out = vec![(0.0, rep.advance(0.0).n_failed())];
+        while let Some(t) = rep.next_change_hours() {
+            if t >= self.horizon_hours {
+                break; // boundaries are non-decreasing; the rest is out of range
+            }
+            let failed = rep.advance(t).n_failed();
+            if failed != out.last().unwrap().1 {
+                out.push((t, failed));
+            }
+        }
+        out
+    }
+
+    /// Exact (breakpoint-integrated) counterpart of
+    /// [`Trace::time_above_fraction`]: fraction of `[0, horizon]` with
+    /// failed fraction strictly above `thresh`, free of step-size bias.
+    pub fn time_above_fraction_exact(
+        &self,
+        topo: &Topology,
+        blast: BlastRadius,
+        thresh: f64,
+    ) -> f64 {
+        let series = self.failed_series_exact(topo, blast);
+        let mut above = 0.0;
+        for (i, &(t, failed)) in series.iter().enumerate() {
+            let end = series.get(i + 1).map_or(self.horizon_hours, |&(t2, _)| t2);
+            if failed as f64 / topo.n_gpus as f64 > thresh {
+                above += end - t;
+            }
+        }
+        above / self.horizon_hours
     }
 
     /// Replay the trace into a fresh `FleetHealth` up to `now_hours`.
@@ -249,6 +292,49 @@ mod tests {
             assert_eq!(fleet.n_failed(), failed, "mismatch at t={t}");
             fleet.check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn exact_series_matches_replay_at_and_between_breakpoints() {
+        let topo = small_topo();
+        let model = FailureModel::llama3().scaled(50.0);
+        let mut rng = Rng::new(13);
+        let trace = Trace::generate(&topo, &model, 24.0 * 10.0, &mut rng);
+        let series = trace.failed_series_exact(&topo, BlastRadius::Node);
+        assert!(series.len() > 2);
+        // strictly increasing times, count changes at every breakpoint
+        for w in series.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert_ne!(w[0].1, w[1].1);
+        }
+        for (i, &(t, failed)) in series.iter().enumerate() {
+            assert_eq!(trace.replay_to(&topo, BlastRadius::Node, t).n_failed(), failed);
+            // the count holds on the whole segment
+            let end = series.get(i + 1).map_or(trace.horizon_hours, |&(t2, _)| t2);
+            let mid = 0.5 * (t + end);
+            assert_eq!(
+                trace.replay_to(&topo, BlastRadius::Node, mid).n_failed(),
+                failed,
+                "segment [{t}, {end}) not constant"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_fraction_is_the_fine_grid_limit() {
+        let topo = small_topo();
+        let model = FailureModel::llama3().scaled(50.0);
+        let mut rng = Rng::new(29);
+        let trace = Trace::generate(&topo, &model, 24.0 * 10.0, &mut rng);
+        let exact = trace.time_above_fraction_exact(&topo, BlastRadius::Single, 0.001);
+        let coarse = trace.time_above_fraction(&topo, BlastRadius::Single, 4.0, 0.001);
+        let fine = trace.time_above_fraction(&topo, BlastRadius::Single, 0.01, 0.001);
+        assert!((exact - fine).abs() < 0.01, "exact {exact} vs fine grid {fine}");
+        assert!(
+            (exact - fine).abs() <= (exact - coarse).abs() + 1e-9,
+            "finer grid should not move away from exact ({exact} / {fine} / {coarse})"
+        );
+        assert!(exact > 0.0 && exact < 1.0);
     }
 
     #[test]

@@ -10,15 +10,19 @@
 //! * `reshard-plan`— Algorithm-1 shard mapping + all-to-all splits.
 //! * `power`       — power-boost solve for reduced-TP replicas (Table 1).
 //! * `fleet`       — trace-driven fleet simulation (Figs. 6/7 semantics).
+//! * `sweep`       — memo-shared parameter-grid sweep (rate × spares ×
+//!   scenario scale × cluster) in one process, one JSON cube.
 
 use anyhow::Result;
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{
     generate_scenario, sample_failed_gpus, scenario::scenario_from_failed, BlastRadius,
-    EventKind, FailureModel, ScenarioConfig, ScenarioKind, Trace,
+    EventKind, FailureModel, ScenarioConfig, ScenarioKind, Trace, TrialGen,
 };
-use ntp::manager::{FleetStats, MultiPolicySim, SparePolicy, StepMode, StrategyTable};
+use ntp::manager::{
+    FleetStats, MemoStats, MultiPolicySim, ResponseMemo, SparePolicy, StepMode, StrategyTable,
+};
 use ntp::ntp::{ReshardPlan, ShardMap};
 use ntp::parallel::{best_config, ParallelConfig};
 use ntp::policy::{registry, reshard_transition_secs_over, PolicyCtx, TransitionCosts};
@@ -27,6 +31,7 @@ use ntp::sim::engine::min_supported_tp;
 use ntp::sim::{IterationModel, SimParams};
 use ntp::util::bench::JsonReport;
 use ntp::util::cli::Args;
+use ntp::util::json::Value;
 use ntp::util::prng::Rng;
 use ntp::util::table::{f2, f3, f4, pct, Table};
 
@@ -41,6 +46,7 @@ fn main() {
         Some("reshard-plan") => cmd_reshard_plan(&mut args),
         Some("power") => cmd_power(&mut args),
         Some("fleet") => cmd_fleet(&mut args),
+        Some("sweep") => cmd_sweep(&mut args),
         Some(other) => Err(anyhow::anyhow!("unknown subcommand '{other}'\n{USAGE}")),
         None => {
             println!("{USAGE}");
@@ -101,6 +107,13 @@ USAGE: ntp <subcommand> [options]
                 streams; table/JSON report per-policy means over trials)
                 [--threads T] (parallel trial batches over scoped
                 threads, bit-identical to 1 thread; default: all cores)
+                [--stream] (streaming Monte-Carlo: trial events are
+                generated lazily and consumed as they are replayed, so
+                no trace is ever materialized — O(1) memory per trial at
+                any --trials. Deterministic in --seed and independent of
+                --threads, but trials are drawn from the random-access
+                per-trial PRNG family, so stats differ from the default
+                path's sequential fork chain for trials >= 1)
                 transition-cost calibration (defaults are the modeled
                 TransitionCosts with the trace's observed failure rate,
                 see EXPERIMENTS.md §Policies):
@@ -110,6 +123,25 @@ USAGE: ntp <subcommand> [options]
                 [--ckpt-write-secs 120] [--power-ramp-secs 60]
                 [--failure-rate <events/hour, overrides the observed rate
                 CKPT-ADAPTIVE optimizes its Young/Daly interval against>]
+                [--validation-sweep-secs S] (periodic SDC validation
+                stall: S seconds per GPU per sweep, amortized over the
+                --validation-hours cadence and billed over the whole
+                horizon; default 0 = validation is free)
+  sweep         --clusters paper-32k-nvl32[,paper-100k-nvl72,...]
+                --rate-x 1,2,5,10,20 --spares 0,2,4,6,8
+                --scen-x 0.5,1,2,4 (scenario-generator rate multipliers)
+                [--scenario correlated] [--strategy dp-drop,ntp,
+                ckpt-restart] [--days 15] [--trials 2] [--replicas 16]
+                [--pp 8] [--seed 5] [--out PATH]
+                Runs the whole (rate x spares x scenario-scale x
+                cluster) grid in ONE process: every grid point streams
+                its trials through the shared response/transition memo
+                (ResponseMemo::begin_point marks point boundaries), so
+                repeated damage signatures pay one evaluation across the
+                WHOLE grid — the cube reports cross_point_hit_rate > 0.
+                Emits one JSON cube (stdout by default, --out writes a
+                file): one row per grid point with per-policy means over
+                trials, plus grid-wide memo scalars.
 ";
 
 fn cmd_train(args: &mut Args) -> Result<()> {
@@ -464,6 +496,10 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         Some(t) => t.max(1),
         None => ntp::util::par::num_threads(),
     };
+    // Streaming Monte-Carlo: generate trial events lazily and consume
+    // them as they replay — no materialized trace, O(1) memory per
+    // trial at any --trials.
+    let stream = args.flag("stream");
     // Transition-cost calibration knobs (defaults: the modeled
     // TransitionCosts — see EXPERIMENTS.md §Policies for the published
     // latencies the defaults are calibrated against).
@@ -475,6 +511,7 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let ckpt_write_secs = args.opt_f64("ckpt-write-secs");
     let power_ramp_secs = args.opt_f64("power-ramp-secs");
     let failure_rate = args.opt_f64("failure-rate");
+    let validation_sweep_secs = args.opt_f64("validation-sweep-secs");
     // Scenario diversity: which failure process the trace generator
     // draws from (independent per-GPU Poisson by default).
     let scen = scenario_from_args(args)?;
@@ -490,12 +527,17 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
                 ckpt_write_secs,
                 power_ramp_secs,
                 failure_rate,
+                validation_sweep_secs,
             ]
             .iter()
             .any(|o| o.is_some())),
         "--no-transitions conflicts with transition-cost flags \
          (--restart-secs/--ckpt-interval/--spare-load-secs/--reshard-secs/--reshard-gbs/\
-          --ckpt-write-secs/--power-ramp-secs/--failure-rate)"
+          --ckpt-write-secs/--power-ramp-secs/--failure-rate/--validation-sweep-secs)"
+    );
+    anyhow::ensure!(
+        validation_sweep_secs.map(|s| s >= 0.0).unwrap_or(true),
+        "--validation-sweep-secs must be non-negative"
     );
     anyhow::ensure!(
         !(reshard_secs.is_some() && reshard_gbs.is_some()),
@@ -525,23 +567,48 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let n_domains = n_replicas * cfg.pp + spares.unwrap_or(0);
     let topo = Topology::of(n_domains * tp, tp, gpus_per_node);
     let fmodel = FailureModel::llama3().scaled(rate_x);
-    // One forked PRNG stream per Monte-Carlo trial: trace i is the same
-    // for any --trials >= i+1 and any --threads.
-    let mut rng = Rng::new(seed);
-    let traces: Vec<Trace> = (0..trials)
-        .map(|i| {
-            let mut r = rng.fork(i as u64);
-            generate_scenario(&topo, &fmodel, &scen, days * 24.0, &mut r)
-        })
-        .collect();
+    // Default path: one forked PRNG stream per Monte-Carlo trial —
+    // trace i is the same for any --trials >= i+1 and any --threads.
+    // --stream path: nothing materialized; trials come from the
+    // random-access TrialGen family instead.
+    let gen = TrialGen::new(&topo, &fmodel, &scen, days * 24.0, seed, trials);
+    let traces: Vec<Trace> = if stream {
+        Vec::new()
+    } else {
+        let mut rng = Rng::new(seed);
+        (0..trials)
+            .map(|i| {
+                let mut r = rng.fork(i as u64);
+                generate_scenario(&topo, &fmodel, &scen, days * 24.0, &mut r)
+            })
+            .collect()
+    };
     let transition = if no_transitions {
         None
     } else {
         // The observed event rate of the generated trace batch feeds
         // CKPT-ADAPTIVE's Young/Daly interval (override with
         // --failure-rate). One pooled rate: the whole batch must share
-        // one cost model to share one response memo.
-        let mut t = TransitionCosts::model(&sim, &cfg).with_observed_rate_over(&traces);
+        // one cost model to share one response memo. The streaming path
+        // counts events by draining throwaway streams (O(1) memory,
+        // same totals its trials will replay).
+        let mut t = if stream {
+            let mut events = 0usize;
+            for i in 0..trials {
+                let mut s = gen.stream_for(i);
+                while s.next_event().is_some() {
+                    events += 1;
+                }
+            }
+            let total_hours = days * 24.0 * trials as f64;
+            let mut t = TransitionCosts::model(&sim, &cfg);
+            if total_hours > 0.0 {
+                t.failure_rate_per_hour = events as f64 / total_hours;
+            }
+            t
+        } else {
+            TransitionCosts::model(&sim, &cfg).with_observed_rate_over(&traces)
+        };
         if let Some(gbs) = reshard_gbs {
             t.reshard_secs = reshard_transition_secs_over(&sim, &cfg, gbs);
         }
@@ -566,6 +633,12 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         if let Some(r) = failure_rate {
             t.failure_rate_per_hour = r;
         }
+        if let Some(s) = validation_sweep_secs {
+            // CLI takes seconds of stall per sweep; the model field is
+            // the amortized stall per simulated hour at the validation
+            // cadence (--validation-hours).
+            t.validation_sweep_secs = s / scen.sdc.validation_interval_hours;
+        }
         Some(t)
     };
 
@@ -584,7 +657,11 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         blast: BlastRadius::Single,
         transition,
     };
-    let (per_trial, memo) = msim.run_trials_par(&traces, mode, threads);
+    let (per_trial, memo) = if stream {
+        msim.run_trials_stream_par(&gen, mode, threads)
+    } else {
+        msim.run_trials_par(&traces, mode, threads)
+    };
 
     let mut out = Table::new(&[
         "policy", "mean tput", "net tput", "tput/GPU", "paused", "downtime", "donated",
@@ -602,6 +679,7 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     rep.scalar("n_gpus", topo.n_gpus as f64);
     rep.scalar("trials", trials as f64);
     rep.scalar("threads", threads as f64);
+    rep.scalar("stream", if stream { 1.0 } else { 0.0 });
     rep.scalar("exact", if grid_hours.is_none() { 1.0 } else { 0.0 });
     if let Some(h) = grid_hours {
         rep.scalar("grid_hours", h);
@@ -612,6 +690,7 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     rep.scalar("transition_memo_hit_rate", memo.transition_hit_rate());
     if let Some(t) = &transition {
         rep.scalar("observed_failure_rate_per_hour", t.failure_rate_per_hour);
+        rep.scalar("validation_sweep_secs_per_hour", t.validation_sweep_secs);
     }
     // Per-policy Monte-Carlo means over the trial batch (for
     // --trials 1 these are exactly the single trace's stats).
@@ -656,6 +735,165 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         println!("{}", rep.to_json().pretty());
     } else {
         out.print();
+    }
+    Ok(())
+}
+
+/// Memo-shared parameter-grid sweep: the whole
+/// (rate × spares × scenario-scale × cluster) grid in one process, one
+/// JSON cube. Every grid point streams its Monte-Carlo trials
+/// ([`MultiPolicySim::run_trials_stream`], nothing materialized)
+/// through ONE [`ResponseMemo`] per cluster, with
+/// [`ResponseMemo::begin_point`] marking point boundaries so the cube
+/// can report how much evaluation work later points inherited from
+/// earlier ones (`cross_point_hit_rate`). The cost model is pinned per
+/// cluster (no per-point observed rate — a shared memo requires one
+/// transition fingerprint), so points differ only in their trace
+/// process and spare pool.
+fn cmd_sweep(args: &mut Args) -> Result<()> {
+    let cluster_names: Vec<String> = args
+        .str_or("clusters", "paper-32k-nvl32")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let rate_xs = args.f64_list_or("rate-x", &[1.0, 2.0, 5.0, 10.0, 20.0]);
+    let spares_list = args.usize_list_or("spares", &[0, 2, 4, 6, 8]);
+    let scen_xs = args.f64_list_or("scen-x", &[0.5, 1.0, 2.0, 4.0]);
+    let kind = ScenarioKind::parse(&args.str_or("scenario", "correlated"))?;
+    let policies = registry::parse_list(&args.str_or("strategy", "dp-drop,ntp,ckpt-restart"))?;
+    let days = args.f64_or("days", 15.0);
+    let trials = args.usize_or("trials", 2).max(1);
+    let n_replicas = args.usize_or("replicas", 16);
+    let pp = args.usize_or("pp", 8);
+    let seed = args.u64_or("seed", 5);
+    let out_path = args.opt_str("out");
+    args.finish()?;
+    anyhow::ensure!(!cluster_names.is_empty(), "--clusters must name at least one cluster");
+    anyhow::ensure!(
+        !(rate_xs.is_empty() || spares_list.is_empty() || scen_xs.is_empty()),
+        "--rate-x/--spares/--scen-x lists must be non-empty"
+    );
+    anyhow::ensure!(
+        rate_xs.iter().chain(&scen_xs).all(|&x| x > 0.0),
+        "--rate-x and --scen-x multipliers must be positive"
+    );
+
+    let model = presets::model("gpt-480b")?;
+    let w = WorkloadConfig { seq_len: 16_384, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 };
+    let grid_points =
+        cluster_names.len() * rate_xs.len() * spares_list.len() * scen_xs.len();
+    let mut rep = JsonReport::new("sweep");
+    rep.scalar("grid_points", grid_points as f64);
+    rep.scalar("days", days);
+    rep.scalar("trials", trials as f64);
+    rep.scalar("replicas", n_replicas as f64);
+    rep.scalar("seed", seed as f64);
+    rep.label("scenario", kind.name());
+    rep.label("clusters", &cluster_names.join(","));
+    rep.label(
+        "policies",
+        &policies.iter().map(|p| p.name()).collect::<Vec<_>>().join(","),
+    );
+    let mut merged = MemoStats::default();
+
+    for cluster_name in &cluster_names {
+        let cluster = presets::cluster(cluster_name)?;
+        let tp = cluster.domain_size;
+        let gpus_per_node = cluster.gpus_per_node;
+        let cfg = ParallelConfig { tp, pp, dp: n_replicas, microbatch: 1 };
+        let sim = IterationModel::new(model.clone(), w.clone(), cluster, SimParams::default());
+        let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
+        // One topology per cluster, sized for the LARGEST spare budget:
+        // sweep points vary only SparePolicy::spare_domains, so every
+        // point shares the fleet shape — and therefore the memo (its
+        // context fingerprints n_gpus).
+        let max_spares = spares_list.iter().copied().max().unwrap_or(0);
+        let n_domains = n_replicas * cfg.pp + max_spares;
+        let topo = Topology::of(n_domains * tp, tp, gpus_per_node);
+        // Pinned cost model: the default modeled costs with NO observed
+        // rate (CKPT-ADAPTIVE falls back to its fixed interval). A
+        // per-point observed rate would change the transition
+        // fingerprint and panic the shared memo's bind check.
+        let costs = TransitionCosts::model(&sim, &cfg);
+        let min_tp = min_supported_tp(tp);
+        let mut memo = ResponseMemo::new(policies.len());
+        for &rate_x in &rate_xs {
+            let fmodel = FailureModel::llama3().scaled(rate_x);
+            for &scen_x in &scen_xs {
+                let mut scen = ScenarioConfig::new(kind);
+                scen.correlated = scen.correlated.scaled(scen_x);
+                scen.straggler = scen.straggler.scaled(scen_x);
+                scen.sdc = scen.sdc.scaled(scen_x);
+                // Same seed at every point: points differing only in
+                // spare budget replay IDENTICAL streams (the topology
+                // is shared), which is both a paired-comparison win and
+                // the strongest cross-point memo reuse.
+                let gen = TrialGen::new(&topo, &fmodel, &scen, days * 24.0, seed, trials);
+                for &spare_domains in &spares_list {
+                    memo.begin_point();
+                    let msim = MultiPolicySim {
+                        topo: &topo,
+                        table: &table,
+                        domains_per_replica: cfg.pp,
+                        policies: &policies,
+                        spares: Some(SparePolicy { spare_domains, min_tp }),
+                        packed: true,
+                        blast: BlastRadius::Single,
+                        transition: Some(costs),
+                    };
+                    let per_trial =
+                        msim.run_trials_stream(&gen, StepMode::Exact, &mut memo);
+                    let n = per_trial.len() as f64;
+                    let mut row: Vec<(String, Value)> = vec![
+                        ("cluster".into(), Value::Str(cluster_name.clone())),
+                        ("rate_x".into(), Value::Num(rate_x)),
+                        ("scen_x".into(), Value::Num(scen_x)),
+                        ("spares".into(), Value::Num(spare_domains as f64)),
+                        ("n_gpus".into(), Value::Num(topo.n_gpus as f64)),
+                    ];
+                    for (pi, policy) in policies.iter().enumerate() {
+                        let key =
+                            policy.name().to_ascii_lowercase().replace('-', "_");
+                        let mean = |f: &dyn Fn(&FleetStats) -> f64| -> f64 {
+                            per_trial.iter().map(|t| f(&t[pi])).sum::<f64>() / n
+                        };
+                        row.push((
+                            format!("{key}_net_tput"),
+                            Value::Num(mean(&|s| s.net_throughput())),
+                        ));
+                        row.push((
+                            format!("{key}_mean_tput"),
+                            Value::Num(mean(&|s| s.mean_throughput)),
+                        ));
+                        row.push((
+                            format!("{key}_downtime_frac"),
+                            Value::Num(mean(&|s| s.downtime_frac)),
+                        ));
+                    }
+                    rep.row(Value::Obj(row));
+                }
+            }
+        }
+        merged.merge(&memo.stats());
+    }
+
+    rep.scalar("memo_hit_rate", merged.hit_rate());
+    rep.scalar("transition_memo_hit_rate", merged.transition_hit_rate());
+    rep.scalar("cross_point_hits", merged.cross_hits as f64);
+    rep.scalar("cross_point_transition_hits", merged.cross_transition_hits as f64);
+    rep.scalar("cross_point_hit_rate", merged.cross_hit_rate());
+    rep.scalar("memo_entries", merged.unique_entries as f64);
+    match out_path {
+        Some(path) => {
+            rep.write(&path)?;
+            println!(
+                "sweep: {grid_points} grid points x {trials} trials -> {path} \
+                 (cross-point memo hit rate {:.3})",
+                merged.cross_hit_rate()
+            );
+        }
+        None => println!("{}", rep.to_json().pretty()),
     }
     Ok(())
 }

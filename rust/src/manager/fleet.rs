@@ -280,6 +280,44 @@ pub(crate) fn sdc_rollback_gpu_secs(trace: &Trace, costs: &TransitionCosts, n_gp
     total
 }
 
+/// [`sdc_rollback_gpu_secs`] computed from the `(detect hours, corrupt
+/// hours)` pairs a [`crate::failure::ReplayCore`] records while pulling
+/// events, instead of a trace scan — the form the streaming sweep
+/// needs, since it never materializes a trace. The replayer applies the
+/// same in-horizon filter at record time and pulls events in trace
+/// order, so the per-event terms here are added in the identical order
+/// with the identical operands: the two functions MUST stay in lockstep
+/// (same term, same order) or the stream/materialized bit-identity
+/// contract breaks (`rust/tests/replay_equivalence.rs` pins it).
+pub(crate) fn sdc_rollback_from_pairs(
+    pairs: &[(f64, f64)],
+    costs: &TransitionCosts,
+    n_gpus: usize,
+) -> f64 {
+    let mut total = 0.0;
+    for &(at_hours, corrupt_at_hours) in pairs {
+        let lag_secs = (at_hours - corrupt_at_hours) * 3600.0;
+        total += (lag_secs + 0.5 * costs.checkpoint_interval_secs) * n_gpus as f64;
+    }
+    total
+}
+
+/// Amortized periodic validation-sweep stall over the whole horizon,
+/// GPU-seconds: [`TransitionCosts::validation_sweep_secs`] is the
+/// per-GPU stall per simulated hour, so the fleet-wide bill is `field ×
+/// horizon × n_gpus`. Policy- and trace-independent (the sweep runs on
+/// a wall-clock cadence whether or not corruption ever fires), charged
+/// through the rollback channel by every sweep path. Zero at the
+/// default `validation_sweep_secs = 0.0`, which keeps every golden
+/// output bitwise unchanged.
+pub(crate) fn validation_sweep_gpu_secs(
+    costs: &TransitionCosts,
+    horizon_hours: f64,
+    n_gpus: usize,
+) -> f64 {
+    costs.validation_sweep_secs * horizon_hours * n_gpus as f64
+}
+
 /// Fleet simulator over a failure trace: drives any [`FtPolicy`]
 /// through the event-driven sweep and integrates steady-state
 /// throughput plus modeled reconfiguration downtime.
@@ -560,6 +598,14 @@ impl<'a> FleetSim<'a> {
             let bill = sdc_rollback_gpu_secs(trace, costs, self.topo.n_gpus);
             if bill > 0.0 {
                 acc.charge_rollback(bill);
+            }
+            // Periodic validation-sweep stall, billed after the SDC
+            // rollback in every path (the multi-policy engine mirrors
+            // this order exactly for bit-identity).
+            let sweep_bill =
+                validation_sweep_gpu_secs(costs, trace.horizon_hours, self.topo.n_gpus);
+            if sweep_bill > 0.0 {
+                acc.charge_rollback(sweep_bill);
             }
         }
         self.integrate(acc)

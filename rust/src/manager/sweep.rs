@@ -48,13 +48,16 @@
 use super::fleet::{grid_step, Accum, FleetStats, StepMode, StrategyTable};
 use super::spares::SparePolicy;
 use crate::cluster::Topology;
-use crate::failure::{BlastRadius, FleetReplayer, Trace};
+use crate::failure::{
+    BlastRadius, EventSource, FleetReplayer, ReplayCore, Trace, TraceStream, TrialGen,
+};
 use crate::policy::{
     changed_domains, degraded_domains, EvalOut, EvalScratch, FtPolicy, PolicyCtx, TransitionCosts,
 };
 use crate::util::par;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::ops::Range;
 
 /// Distinct deficit values a [`SnapshotSig`] stores without touching
 /// the heap. Failures are rare and quantized (most damaged domains are
@@ -123,6 +126,24 @@ impl SnapshotSig {
             }
             self.push((d, c as u32));
             i += c;
+        }
+    }
+
+    /// Rebuild in place from a deficit *histogram* (`hist[k]` = number
+    /// of domains missing exactly `k` GPUs; index 0 ignored) — the
+    /// aggregate [`crate::failure::ReplayCore`] maintains incrementally.
+    /// An ascending scan of the histogram yields exactly the sorted RLE
+    /// pairs [`SnapshotSig::rebuild`] derives from the raw counts, so
+    /// the two builds are interchangeable as memo keys (property-tested
+    /// in `rust/tests/streaming_trials.rs` with the from-scratch build
+    /// as the oracle).
+    pub fn rebuild_from_histogram(&mut self, hist: &[u32]) {
+        self.len = 0;
+        self.spill.clear();
+        for (deficit, &count) in hist.iter().enumerate().skip(1) {
+            if count > 0 {
+                self.push((deficit as u32, count));
+            }
         }
     }
 
@@ -212,6 +233,7 @@ fn transition_fingerprint(transition: &Option<TransitionCosts>) -> u64 {
         ckpt_write_secs,
         power_ramp_secs,
         failure_rate_per_hour,
+        validation_sweep_secs,
     } = *t;
     let mut h = DefaultHasher::new();
     for v in [
@@ -222,6 +244,7 @@ fn transition_fingerprint(transition: &Option<TransitionCosts>) -> u64 {
         ckpt_write_secs,
         power_ramp_secs,
         failure_rate_per_hour,
+        validation_sweep_secs,
     ] {
         v.to_bits().hash(&mut h);
     }
@@ -265,7 +288,7 @@ fn table_fingerprint(table: &StrategyTable) -> u64 {
 /// distinct names (every in-tree registry policy is a parameterless
 /// singleton).
 pub struct ResponseMemo {
-    map: HashMap<MemoKey, Box<[EvalOut]>>,
+    map: HashMap<MemoKey, MemoEntry>,
     n_policies: usize,
     policy_names: Vec<&'static str>,
     ctx: Option<MemoCtx>,
@@ -278,13 +301,36 @@ pub struct ResponseMemo {
     // the model itself is pinned by `MemoCtx::transition_fingerprint`),
     // so a repeated change pattern costs one hash instead of a
     // prev/next scan per policy.
-    tmap: HashMap<TransKey, f64>,
+    tmap: HashMap<TransKey, (u64, f64)>,
     thits: u64,
     tmisses: u64,
+    // Grid-sweep attribution: every cached entry remembers the sweep
+    // point ([`ResponseMemo::begin_point`] generation) that computed
+    // it, so hits served by an *earlier* point's entry are counted
+    // separately — the cross-grid-point reuse the `sweep` CLI reports.
+    // Epochs never affect cached values, only the counters.
+    point_epoch: u64,
+    cross_hits: u64,
+    cross_thits: u64,
     // Scratch shared by every evaluation driven through this memo.
     sig: SnapshotSig,
     deficits: Vec<u32>,
     scratch: EvalScratch,
+    // Previous-snapshot scratch of the exact sweep, owned here so the
+    // per-trial sweep loop allocates nothing: the streaming Monte-Carlo
+    // path's O(1)-memory gate (benches/perf_hotpath.rs) counts every
+    // allocation per trial, and at 100K-GPU scale these three vectors
+    // would otherwise dominate it.
+    prev_counts: Vec<usize>,
+    prev_degraded: Vec<usize>,
+    prev_slow: Vec<f64>,
+}
+
+/// One cached snapshot response set plus the sweep point that computed
+/// it (for cross-point hit attribution).
+struct MemoEntry {
+    epoch: u64,
+    outs: Box<[EvalOut]>,
 }
 
 /// Transition-memo key: `(policy index, changed, degraded, live spare
@@ -303,10 +349,36 @@ impl ResponseMemo {
             tmap: HashMap::new(),
             thits: 0,
             tmisses: 0,
+            point_epoch: 0,
+            cross_hits: 0,
+            cross_thits: 0,
             sig: SnapshotSig::new(),
             deficits: Vec::new(),
             scratch: EvalScratch::default(),
+            prev_counts: Vec::new(),
+            prev_degraded: Vec::new(),
+            prev_slow: Vec::new(),
         }
+    }
+
+    /// Declare a new grid-sweep point: cache entries stay valid (the
+    /// bind check still enforces one evaluation context), but hits
+    /// served from entries computed by earlier points are counted as
+    /// *cross-point* hits from here on. A memo that never sees
+    /// `begin_point` reports zero cross-point hits.
+    pub fn begin_point(&mut self) {
+        self.point_epoch += 1;
+    }
+
+    /// Snapshot hits served from an entry computed by an earlier
+    /// grid-sweep point.
+    pub fn cross_hits(&self) -> u64 {
+        self.cross_hits
+    }
+
+    /// Transition-memo hits served from an earlier grid-sweep point.
+    pub fn cross_transition_hits(&self) -> u64 {
+        self.cross_thits
     }
 
     /// Snapshot lookups served from the cache.
@@ -370,14 +442,44 @@ impl ResponseMemo {
         if ctx.transition.is_none() || !policy.transition_cost_is_count_pure() {
             return policy.transition_cost(ctx, prev, next);
         }
-        if let Some(&cost) = self.tmap.get(&key) {
+        if let Some(&(epoch, cost)) = self.tmap.get(&key) {
             self.thits += 1;
+            if epoch != self.point_epoch {
+                self.cross_thits += 1;
+            }
             return cost;
         }
         self.tmisses += 1;
         let cost = policy.transition_cost(ctx, prev, next);
-        self.tmap.insert(key, cost);
+        self.tmap.insert(key, (self.point_epoch, cost));
         cost
+    }
+
+    /// Serve `outs` for `key` from the cache, or compute via `eval`
+    /// (handed the shared scratch) and cache the result. The one
+    /// snapshot-lookup funnel for every sweep path, so hit/miss and
+    /// cross-point counters stay consistent between the slice-rebuild
+    /// and incremental-histogram key builders.
+    fn respond_cached(
+        &mut self,
+        key: MemoKey,
+        outs: &mut [EvalOut],
+        eval: impl FnOnce(&mut EvalScratch, &mut [EvalOut]),
+    ) {
+        if let Some(entry) = self.map.get(&key) {
+            self.hits += 1;
+            if entry.epoch != self.point_epoch {
+                self.cross_hits += 1;
+            }
+            outs.copy_from_slice(&entry.outs);
+            return;
+        }
+        self.misses += 1;
+        eval(&mut self.scratch, outs);
+        self.map.insert(
+            key,
+            MemoEntry { epoch: self.point_epoch, outs: outs.to_vec().into_boxed_slice() },
+        );
     }
 
     /// Counter snapshot for reporting and for merging across the
@@ -388,6 +490,8 @@ impl ResponseMemo {
             misses: self.misses,
             transition_hits: self.thits,
             transition_misses: self.tmisses,
+            cross_hits: self.cross_hits,
+            cross_transition_hits: self.cross_thits,
             unique_entries: self.map.len(),
         }
     }
@@ -431,6 +535,12 @@ pub struct MemoStats {
     pub misses: u64,
     pub transition_hits: u64,
     pub transition_misses: u64,
+    /// Snapshot hits served by an entry computed under an earlier
+    /// [`ResponseMemo::begin_point`] generation (zero unless the caller
+    /// marks grid points).
+    pub cross_hits: u64,
+    /// Transition-memo hits served from an earlier grid point.
+    pub cross_transition_hits: u64,
     /// Unique snapshot keys cached. Merged across per-thread memos this
     /// *sums* — threads do not share entries, so a signature cached by
     /// two workers counts twice (duplicated work is exactly what the
@@ -445,7 +555,21 @@ impl MemoStats {
         self.misses += other.misses;
         self.transition_hits += other.transition_hits;
         self.transition_misses += other.transition_misses;
+        self.cross_hits += other.cross_hits;
+        self.cross_transition_hits += other.cross_transition_hits;
         self.unique_entries += other.unique_entries;
+    }
+
+    /// Fraction of *all* memo lookups (snapshot + transition) served by
+    /// an entry computed under an earlier grid point — the cross-point
+    /// reuse a shared-memo grid sweep exists for.
+    pub fn cross_hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses + self.transition_hits + self.transition_misses;
+        if total == 0 {
+            0.0
+        } else {
+            (self.cross_hits + self.cross_transition_hits) as f64 / total as f64
+        }
     }
 
     /// Fraction of snapshot lookups served from cache.
@@ -563,7 +687,14 @@ impl<'a> MultiPolicySim<'a> {
             return (stats, memo.stats());
         }
         let chunk = traces.len().div_ceil(t);
-        let parts = par::par_map(t, t, |ti| {
+        // Spawn only workers with a non-empty batch: when `t` does not
+        // divide the trace count, `t` fixed-size chunks can overrun the
+        // slice and the trailing workers would be handed empty batches
+        // (e.g. 5 traces on 4 threads -> chunks of 2 -> worker 3 gets
+        // [5..5]). Batch *boundaries* are unchanged, so the stats stay
+        // bit-identical to any other thread count.
+        let workers = traces.len().div_ceil(chunk.max(1));
+        let parts = par::par_map(workers, workers, |ti| {
             let lo = (ti * chunk).min(traces.len());
             let hi = ((ti + 1) * chunk).min(traces.len());
             let mut memo = self.memo();
@@ -579,12 +710,102 @@ impl<'a> MultiPolicySim<'a> {
         (all, merged)
     }
 
+    /// Sweep one live [`TraceStream`] without materializing it. The
+    /// stats are bit-identical to `run_with(&stream.collect_trace(), ..)`
+    /// — the stream hands the replayer the same events in the same
+    /// order, and SDC rollback is billed from the pairs accumulated
+    /// during the sweep instead of a trace scan.
+    pub fn run_stream(
+        &self,
+        stream: TraceStream,
+        mode: StepMode,
+        memo: &mut ResponseMemo,
+    ) -> Vec<FleetStats> {
+        let mut rep = ReplayCore::from_source(stream, self.topo, self.blast);
+        self.sweep(&mut rep, mode, memo)
+    }
+
+    /// Streaming Monte-Carlo: sweep every trial of `gen` without ever
+    /// materializing a `Trace` — one replayer is reset from stream to
+    /// stream ([`ReplayCore::reset_source`]), so the whole loop runs in
+    /// O(1) memory per trial regardless of horizon. Bit-identical to
+    /// `run_trials(&gen.traces(), ..)` with the same memo.
+    pub fn run_trials_stream(
+        &self,
+        gen: &TrialGen,
+        mode: StepMode,
+        memo: &mut ResponseMemo,
+    ) -> Vec<Vec<FleetStats>> {
+        self.run_trials_stream_range(gen, 0..gen.trials, mode, memo)
+    }
+
+    fn run_trials_stream_range(
+        &self,
+        gen: &TrialGen,
+        trials: Range<usize>,
+        mode: StepMode,
+        memo: &mut ResponseMemo,
+    ) -> Vec<Vec<FleetStats>> {
+        let mut out = Vec::with_capacity(trials.len());
+        let mut rep: Option<ReplayCore<TraceStream>> = None;
+        for trial in trials {
+            let stream = gen.stream_for(trial);
+            if let Some(r) = rep.as_mut() {
+                r.reset_source(stream);
+            } else {
+                rep = Some(ReplayCore::from_source(stream, self.topo, self.blast));
+            }
+            out.push(self.sweep(rep.as_mut().unwrap(), mode, memo));
+        }
+        out
+    }
+
+    /// Parallel streaming Monte-Carlo: [`MultiPolicySim::run_trials_par`]
+    /// over a [`TrialGen`] instead of a trace slice. Trial PRNGs are
+    /// random-access (`TrialGen::rng_for` forks from a fresh root), so
+    /// workers draw their own batches with no shared generation pass;
+    /// batch boundaries match `run_trials_par` on `gen.traces()` exactly,
+    /// which makes the stats bit-identical to the materialized path at
+    /// every thread count.
+    pub fn run_trials_stream_par(
+        &self,
+        gen: &TrialGen,
+        mode: StepMode,
+        threads: usize,
+    ) -> (Vec<Vec<FleetStats>>, MemoStats) {
+        let n = gen.trials;
+        let t = threads.max(1).min(n.max(1));
+        if t <= 1 {
+            let mut memo = self.memo();
+            let stats = self.run_trials_stream(gen, mode, &mut memo);
+            return (stats, memo.stats());
+        }
+        let chunk = n.div_ceil(t);
+        let workers = n.div_ceil(chunk.max(1));
+        let parts = par::par_map(workers, workers, |ti| {
+            let lo = (ti * chunk).min(n);
+            let hi = ((ti + 1) * chunk).min(n);
+            let mut memo = self.memo();
+            let stats = self.run_trials_stream_range(gen, lo..hi, mode, &mut memo);
+            (stats, memo.stats())
+        });
+        let mut all = Vec::with_capacity(n);
+        let mut merged = MemoStats::default();
+        for (stats, ms) in parts {
+            all.extend(stats);
+            merged.merge(&ms);
+        }
+        (all, merged)
+    }
+
     /// Core sweep dispatch: mirrors `FleetSim::run` operation-for-
     /// operation in both modes, so the integrated stats are
-    /// bit-identical per policy.
-    fn sweep(
+    /// bit-identical per policy. Generic over the event source, so the
+    /// same code path serves materialized traces ([`TraceCursor`]) and
+    /// live streams ([`TraceStream`]).
+    fn sweep<S: EventSource>(
         &self,
-        rep: &mut FleetReplayer<'_>,
+        rep: &mut ReplayCore<S>,
         mode: StepMode,
         memo: &mut ResponseMemo,
     ) -> Vec<FleetStats> {
@@ -599,7 +820,124 @@ impl<'a> MultiPolicySim<'a> {
     /// change, duration-weighted, every change charged at its event
     /// time — `FleetSim::run(.., StepMode::Exact)` for all policies in
     /// one replay.
-    fn sweep_exact(&self, rep: &mut FleetReplayer<'_>, memo: &mut ResponseMemo) -> Vec<FleetStats> {
+    ///
+    /// Incremental inner loop: change detection walks only the
+    /// replayer's dirty-domain set (a superset of the domains an event
+    /// touched) against the tracked previous snapshot, and snapshot
+    /// signatures rebuild from the replayer's live deficit histogram
+    /// instead of re-scanning and re-sorting all domain counts per
+    /// boundary. [`MultiPolicySim::run_rebuild`] keeps the from-scratch
+    /// full-slice path as the oracle and perf baseline.
+    fn sweep_exact<S: EventSource>(
+        &self,
+        rep: &mut ReplayCore<S>,
+        memo: &mut ResponseMemo,
+    ) -> Vec<FleetStats> {
+        let n_policies = self.policies.len();
+        let horizon = rep.horizon_hours();
+        let mut accs = vec![Accum::default(); n_policies];
+        if horizon <= 0.0 {
+            return self.finalize_all(&accs);
+        }
+        let mut outs: Vec<EvalOut> = vec![EvalOut::default(); n_policies];
+        // Previous-snapshot scratch lives in the memo so a Monte-Carlo
+        // trial loop reuses the same three vectors for every trial.
+        let mut prev_counts = std::mem::take(&mut memo.prev_counts);
+        let mut prev_degraded = std::mem::take(&mut memo.prev_degraded);
+        let mut prev_slow = std::mem::take(&mut memo.prev_slow);
+        let n_domains = self.topo.n_domains();
+        let n_job = match self.spares {
+            None => n_domains,
+            Some(pool) => n_domains - pool.spare_domains,
+        };
+        rep.advance(0.0);
+        rep.set_job_domains(n_job);
+        rep.clear_dirty();
+        {
+            let fleet = rep.fleet();
+            prev_counts.clear();
+            prev_counts.extend_from_slice(fleet.domain_healthy_counts());
+            prev_degraded.clear();
+            prev_degraded.extend_from_slice(fleet.domain_degraded_counts());
+            prev_slow.clear();
+            prev_slow.extend_from_slice(fleet.domain_slowdowns());
+        }
+        self.evaluate_all_inc(rep, memo, &mut outs);
+        let mut seg_start = 0.0;
+        while let Some(t) = rep.next_change_hours().filter(|&t| t < horizon) {
+            rep.advance(t);
+            // Exact change detection over the dirty superset: a touched
+            // domain whose visible state round-tripped (e.g. a recovery
+            // restoring the tracked counts) is NOT a change, matching
+            // the full-slice compares of the rebuild path.
+            let mut counts_changed = false;
+            let mut degraded_changed = false;
+            let mut slow_changed = false;
+            {
+                let fleet = rep.fleet();
+                let counts = fleet.domain_healthy_counts();
+                let degraded = fleet.domain_degraded_counts();
+                let slow = fleet.domain_slowdowns();
+                for &d in rep.dirty_domains() {
+                    let d = d as usize;
+                    counts_changed |= counts[d] != prev_counts[d];
+                    degraded_changed |= degraded[d] != prev_degraded[d];
+                    slow_changed |= slow[d] != prev_slow[d];
+                }
+            }
+            if counts_changed || degraded_changed || slow_changed {
+                for (acc, &out) in accs.iter_mut().zip(&outs) {
+                    acc.sample(out, t - seg_start);
+                }
+                if counts_changed || degraded_changed {
+                    self.charge_all_inc(
+                        rep,
+                        memo,
+                        &mut accs,
+                        &prev_counts,
+                        &prev_degraded,
+                        counts_changed,
+                        degraded_changed,
+                    );
+                }
+                {
+                    let fleet = rep.fleet();
+                    let counts = fleet.domain_healthy_counts();
+                    let degraded = fleet.domain_degraded_counts();
+                    let slow = fleet.domain_slowdowns();
+                    for &d in rep.dirty_domains() {
+                        let d = d as usize;
+                        prev_counts[d] = counts[d];
+                        prev_degraded[d] = degraded[d];
+                        prev_slow[d] = slow[d];
+                    }
+                }
+                self.evaluate_all_inc(rep, memo, &mut outs);
+                seg_start = t;
+            }
+            rep.clear_dirty();
+        }
+        for (acc, &out) in accs.iter_mut().zip(&outs) {
+            acc.sample(out, horizon - seg_start);
+        }
+        self.charge_rollback_all(rep, &mut accs);
+        memo.prev_counts = prev_counts;
+        memo.prev_degraded = prev_degraded;
+        memo.prev_slow = prev_slow;
+        self.finalize_all(&accs)
+    }
+
+    /// The pre-incremental exact sweep: full-slice change detection and
+    /// slice-rebuilt snapshot signatures at every boundary. Kept as the
+    /// property-test oracle for the incremental path and as the
+    /// baseline the ≥2× event-boundary-throughput perf gate measures
+    /// against (`benches/perf_hotpath.rs`). Bit-identical to
+    /// `sweep_exact`.
+    fn sweep_exact_rebuild<S: EventSource>(
+        &self,
+        rep: &mut ReplayCore<S>,
+        memo: &mut ResponseMemo,
+    ) -> Vec<FleetStats> {
         let n_policies = self.policies.len();
         let horizon = rep.horizon_hours();
         let mut accs = vec![Accum::default(); n_policies];
@@ -644,15 +982,24 @@ impl<'a> MultiPolicySim<'a> {
         for (acc, &out) in accs.iter_mut().zip(&outs) {
             acc.sample(out, horizon - seg_start);
         }
-        self.charge_rollback_all(rep.trace(), &mut accs);
+        self.charge_rollback_all(rep, &mut accs);
         self.finalize_all(&accs)
+    }
+
+    /// Exact-mode sweep of one trace through the from-scratch
+    /// (`rebuild`) path — the oracle/baseline twin of
+    /// `run_with(trace, StepMode::Exact, memo)`.
+    pub fn run_rebuild(&self, trace: &Trace, memo: &mut ResponseMemo) -> Vec<FleetStats> {
+        memo.bind(self.memo_ctx(), self.policies);
+        let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
+        self.sweep_exact_rebuild(&mut rep, memo)
     }
 
     /// Legacy fixed-grid sweep (clamped final interval), version-gated
     /// evaluation identical to `FleetSim::run(.., StepMode::Grid(..))`.
-    fn sweep_grid(
+    fn sweep_grid<S: EventSource>(
         &self,
-        rep: &mut FleetReplayer<'_>,
+        rep: &mut ReplayCore<S>,
         step_hours: f64,
         memo: &mut ResponseMemo,
     ) -> Vec<FleetStats> {
@@ -696,7 +1043,7 @@ impl<'a> MultiPolicySim<'a> {
             }
             step += 1;
         }
-        self.charge_rollback_all(rep.trace(), &mut accs);
+        self.charge_rollback_all(rep, &mut accs);
         self.finalize_all(&accs)
     }
 
@@ -741,17 +1088,82 @@ impl<'a> MultiPolicySim<'a> {
         }
     }
 
-    /// Trace-global SDC detection-lag rollback, billed identically into
-    /// every policy's accumulator — verbatim
-    /// `FleetSim::integrate_with_rollback` (corruption is invisible
-    /// until the validation sweep fires, so no policy can dodge the
-    /// recompute).
-    fn charge_rollback_all(&self, trace: &Trace, accs: &mut [Accum]) {
+    /// [`MultiPolicySim::charge_all`] driven from the replayer's
+    /// incremental state instead of full prev/next slices: changed and
+    /// degraded domain counts come from the dirty set (exact — every
+    /// non-dirty domain is unchanged by construction) and the live
+    /// spare pool from the maintained tail-full count. Charges the
+    /// identical `f64`s.
+    #[allow(clippy::too_many_arguments)]
+    fn charge_all_inc<S: EventSource>(
+        &self,
+        rep: &ReplayCore<S>,
+        memo: &mut ResponseMemo,
+        accs: &mut [Accum],
+        prev: &[usize],
+        prev_degraded: &[usize],
+        counts_changed: bool,
+        degraded_changed: bool,
+    ) {
+        let fleet = rep.fleet();
+        let next = fleet.domain_healthy_counts();
+        let next_degraded = fleet.domain_degraded_counts();
+        let live = self
+            .spares
+            .map(|pool| SparePolicy { spare_domains: rep.live_spare_domains(), ..pool });
+        let ctx = self.ctx(live);
+        let mut changed = 0u32;
+        let mut degraded = 0u32;
+        for &d in rep.dirty_domains() {
+            let d = d as usize;
+            changed += (next[d] != prev[d]) as u32;
+            degraded += (next[d] < prev[d]) as u32;
+        }
+        let live_key = match ctx.spares {
+            Some(pool) => pool.spare_domains as u32,
+            None => u32::MAX,
+        };
+        for (i, (acc, &policy)) in accs.iter_mut().zip(self.policies).enumerate() {
+            let mut cost = 0.0;
+            if counts_changed {
+                let key = (i as u32, changed, degraded, live_key, self.topo.n_gpus as u64);
+                cost += memo.transition_cost(key, policy, &ctx, prev, next);
+            }
+            if degraded_changed {
+                cost += policy.degrade_transition_cost(&ctx, prev_degraded, next_degraded);
+            }
+            acc.charge_cost(cost);
+        }
+    }
+
+    /// Trace-global SDC detection-lag rollback plus the periodic
+    /// validation-sweep bill, charged identically into every policy's
+    /// accumulator — verbatim `FleetSim::integrate_with_rollback`
+    /// (corruption is invisible until the validation sweep fires, so no
+    /// policy can dodge the recompute). Billed from the `(lag, ci)`
+    /// pairs the replayer recorded while pulling events, which lets the
+    /// streaming path bill without a materialized trace;
+    /// [`ReplayCore::drain_source`] first pulls any events a grid sweep
+    /// left unconsumed past its last step so the pair list always
+    /// matches a full trace scan.
+    fn charge_rollback_all<S: EventSource>(&self, rep: &mut ReplayCore<S>, accs: &mut [Accum]) {
         if let Some(costs) = &self.transition {
-            let bill = super::fleet::sdc_rollback_gpu_secs(trace, costs, self.topo.n_gpus);
+            rep.drain_source();
+            let bill =
+                super::fleet::sdc_rollback_from_pairs(rep.sdc_pairs(), costs, self.topo.n_gpus);
             if bill > 0.0 {
                 for acc in accs.iter_mut() {
                     acc.charge_rollback(bill);
+                }
+            }
+            let sweep_bill = super::fleet::validation_sweep_gpu_secs(
+                costs,
+                rep.horizon_hours(),
+                self.topo.n_gpus,
+            );
+            if sweep_bill > 0.0 {
+                for acc in accs.iter_mut() {
+                    acc.charge_rollback(sweep_bill);
                 }
             }
         }
@@ -833,16 +1245,74 @@ impl<'a> MultiPolicySim<'a> {
             n_job: job_healthy.len() as u32,
             live_spares: live_key,
         };
-        if let Some(cached) = memo.map.get(&key) {
-            memo.hits += 1;
-            outs.copy_from_slice(cached);
-        } else {
-            memo.misses += 1;
+        let policies = self.policies;
+        memo.respond_cached(key, outs, |scratch, outs| {
+            for (out, &policy) in outs.iter_mut().zip(policies) {
+                *out = policy.respond_with(&ctx, job_healthy, scratch);
+            }
+        });
+    }
+
+    /// [`MultiPolicySim::evaluate_all`] driven from the replayer's
+    /// incremental state: the job/spare split comes from the maintained
+    /// tail-full count (verbatim `split_job_spares` semantics, see
+    /// `rust/src/failure/replayer.rs`), the degraded-job-domain test
+    /// from the maintained counter, and the memo key from the live
+    /// deficit histogram — no per-boundary scan-and-sort of all domain
+    /// counts. Produces bit-identical `EvalOut`s and identical memo
+    /// keys to the slice path.
+    fn evaluate_all_inc<S: EventSource>(
+        &self,
+        rep: &ReplayCore<S>,
+        memo: &mut ResponseMemo,
+        outs: &mut [EvalOut],
+    ) {
+        let fleet = rep.fleet();
+        let counts = fleet.domain_healthy_counts();
+        let n_job = rep.job_domains();
+        let job_healthy = &counts[..n_job];
+        let (live, live_key) = match self.spares {
+            None => (None, u32::MAX),
+            Some(pool) => {
+                let live = SparePolicy { spare_domains: rep.live_spare_domains(), ..pool };
+                (Some(live), live.spare_domains as u32)
+            }
+        };
+        let ctx = self.ctx(live);
+        // Same memo-soundness rules as `evaluate_all`: degraded job
+        // domains and unpacked flexible mode bypass the cache.
+        if rep.job_degraded_domains() > 0 {
+            let degraded = fleet.domain_degraded_counts();
+            let slowdowns = fleet.domain_slowdowns();
+            for (out, &policy) in outs.iter_mut().zip(self.policies) {
+                *out = policy.eval_degraded_with(
+                    &ctx,
+                    job_healthy,
+                    &degraded[..n_job],
+                    &slowdowns[..n_job],
+                    &mut memo.scratch,
+                );
+            }
+            return;
+        }
+        if !(self.packed || self.spares.is_some()) {
             for (out, &policy) in outs.iter_mut().zip(self.policies) {
                 *out = policy.respond_with(&ctx, job_healthy, &mut memo.scratch);
             }
-            memo.map.insert(key, outs.to_vec().into_boxed_slice());
+            return;
         }
+        memo.sig.rebuild_from_histogram(rep.deficit_histogram());
+        let key = MemoKey {
+            sig: memo.sig.clone(),
+            n_job: n_job as u32,
+            live_spares: live_key,
+        };
+        let policies = self.policies;
+        memo.respond_cached(key, outs, |scratch, outs| {
+            for (out, &policy) in outs.iter_mut().zip(policies) {
+                *out = policy.respond_with(&ctx, job_healthy, scratch);
+            }
+        });
     }
 
     fn ctx(&self, live_spares: Option<SparePolicy>) -> PolicyCtx<'_> {
@@ -1035,6 +1505,7 @@ mod tests {
             ckpt_write_secs: 120.0,
             power_ramp_secs: 60.0,
             failure_rate_per_hour: 0.0,
+            validation_sweep_secs: 0.0,
         };
         let a = transition_fingerprint(&Some(t));
         assert_ne!(a, 0);
@@ -1044,5 +1515,32 @@ mod tests {
             ..t
         }));
         assert_ne!(a, b);
+        // the validation-sweep bill is part of the model identity too
+        let c = transition_fingerprint(&Some(TransitionCosts {
+            validation_sweep_secs: 0.25,
+            ..t
+        }));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn histogram_rebuild_matches_counts_rebuild() {
+        let mut rng = Rng::new(17);
+        for _ in 0..200 {
+            let n = 4 + rng.index(60);
+            let ds = 32;
+            let counts: Vec<usize> =
+                (0..n).map(|_| if rng.chance(0.4) { rng.index(ds + 1) } else { ds }).collect();
+            let mut hist = vec![0u32; ds + 1];
+            for &h in &counts {
+                if h < ds {
+                    hist[ds - h] += 1;
+                }
+            }
+            let from_counts = sig_of(&counts, ds);
+            let mut from_hist = SnapshotSig::new();
+            from_hist.rebuild_from_histogram(&hist);
+            assert_eq!(from_counts, from_hist, "counts={counts:?}");
+        }
     }
 }

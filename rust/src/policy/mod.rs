@@ -322,6 +322,13 @@ pub struct TransitionCosts {
     /// like `CKPT-RESTART`. Set from a trace via
     /// [`TransitionCosts::with_observed_rate`].
     pub failure_rate_per_hour: f64,
+    /// Amortized periodic validation-sweep stall, GPU-seconds per GPU
+    /// per simulated hour (the recurring cost of the SDC validation
+    /// cadence, distinct from the per-detection rollback). Billed
+    /// trace- and policy-independently over the whole horizon via the
+    /// rollback channel. Default `0.0` ⇒ validation is free and every
+    /// golden output is bitwise unchanged.
+    pub validation_sweep_secs: f64,
 }
 
 impl TransitionCosts {
@@ -336,6 +343,7 @@ impl TransitionCosts {
             ckpt_write_secs: 120.0,
             power_ramp_secs: 60.0,
             failure_rate_per_hour: 0.0,
+            validation_sweep_secs: 0.0,
         }
     }
 
@@ -456,6 +464,7 @@ mod tests {
             ckpt_write_secs: 120.0,
             power_ramp_secs: 60.0,
             failure_rate_per_hour: 0.0,
+            validation_sweep_secs: 0.0,
         };
         let t = base.with_observed_rate(&trace);
         assert!((t.failure_rate_per_hour - 3.0 / 48.0).abs() < 1e-15);

@@ -176,6 +176,7 @@ pub struct JsonReport {
     entries: Vec<Value>,
     scalars: Vec<(String, f64)>,
     labels: Vec<(String, String)>,
+    rows: Vec<Value>,
 }
 
 impl JsonReport {
@@ -208,10 +209,23 @@ impl JsonReport {
         self.labels.push((key.to_string(), value.to_string()));
     }
 
+    /// Append one data row (an arbitrary JSON object) to the report's
+    /// `rows` array — the shape of a parameter-grid result cube, where
+    /// every grid point contributes one row of coordinates + outputs.
+    pub fn row(&mut self, row: Value) {
+        self.rows.push(row);
+    }
+
+    /// Rows appended so far.
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("bench", Value::Str(self.name.clone())),
             ("entries", Value::Arr(self.entries.clone())),
+            ("rows", Value::Arr(self.rows.clone())),
             (
                 "scalars",
                 Value::Obj(
@@ -278,6 +292,11 @@ mod tests {
         rep.result(&r);
         rep.scalar("speedup", 12.5);
         rep.label("scenario", "correlated");
+        rep.row(Value::obj(vec![
+            ("rate_x", Value::Num(2.0)),
+            ("goodput", Value::Num(0.97)),
+        ]));
+        assert_eq!(rep.n_rows(), 1);
         let v = rep.to_json();
         let parsed = Value::parse(&v.pretty()).unwrap();
         assert_eq!(parsed.get("bench").as_str(), Some("unit"));
@@ -287,6 +306,9 @@ mod tests {
         assert_eq!(entries[0].get("mean_secs").as_f64(), Some(0.5));
         assert_eq!(parsed.get("scalars").get("speedup").as_f64(), Some(12.5));
         assert_eq!(parsed.get("labels").get("scenario").as_str(), Some("correlated"));
+        let rows = parsed.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("rate_x").as_f64(), Some(2.0));
     }
 
     #[test]

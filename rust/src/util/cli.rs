@@ -113,6 +113,21 @@ impl Args {
         }
     }
 
+    /// Comma-separated f64 list, e.g. `--rate-x 1,2,5,10`.
+    pub fn f64_list_or(&mut self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.opt_str(name) {
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad number '{s}'"))
+                })
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
     /// Error if any unconsumed `--option` remains (catches typos).
     pub fn finish(&self) -> anyhow::Result<()> {
         for k in self.options.keys().chain(self.flags.iter()) {
@@ -145,9 +160,11 @@ mod tests {
 
     #[test]
     fn equals_syntax_and_lists() {
-        let mut a = parse("sim --tp=8,16,32 --scale=2.5");
+        let mut a = parse("sim --tp=8,16,32 --scale=2.5 --rate-x=1,2.5,10");
         assert_eq!(a.usize_list_or("tp", &[]), vec![8, 16, 32]);
         assert_eq!(a.f64_or("scale", 1.0), 2.5);
+        assert_eq!(a.f64_list_or("rate-x", &[]), vec![1.0, 2.5, 10.0]);
+        assert_eq!(a.f64_list_or("absent", &[0.5]), vec![0.5]);
         a.finish().unwrap();
     }
 

@@ -264,6 +264,7 @@ fn exact_mode_charges_each_event_at_its_boundary() {
         ckpt_write_secs: 120.0,
         power_ramp_secs: 60.0,
         failure_rate_per_hour: 0.0,
+        validation_sweep_secs: 0.0,
     };
     let run = |strategy: FtStrategy, mode: StepMode| {
         FleetSim {
@@ -301,6 +302,90 @@ fn exact_mode_charges_each_event_at_its_boundary() {
     assert_eq!(grid_ntp.transitions, 1);
     assert_eq!(exact_ntp.transitions, 2);
     assert!((exact_ntp.downtime_frac - grid_ntp.downtime_frac).abs() < 1e-15);
+}
+
+/// Satellite: `TransitionCosts::validation_sweep_secs` bills an
+/// amortized periodic validation stall — `secs/GPU/hour × horizon ×
+/// n_gpus` GPU-seconds through the rollback channel. With everything
+/// else free that lands as exactly `secs/3600` of downtime fraction;
+/// the default `0.0` leaves every stat bitwise unchanged; and the
+/// FleetSim, per-step reference, and shared-sweep paths all charge the
+/// identical `f64`.
+#[test]
+fn validation_sweep_bill_is_exact_and_zero_by_default() {
+    let (sim, cfg, table) = setup();
+    let job_domains = 16usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(20.0);
+    let mut rng = Rng::new(0x7A1);
+    let trace = Trace::generate(&topo, &model, 24.0 * 8.0, &mut rng);
+    assert!(!trace.events.is_empty());
+    let base_costs = TransitionCosts::model(&sim, &cfg);
+    assert_eq!(base_costs.validation_sweep_secs, 0.0, "default must stay free");
+    let secs_per_hour = 7.2;
+    let mut sweep_costs = base_costs;
+    sweep_costs.validation_sweep_secs = secs_per_hour;
+
+    let policies = registry::all();
+    let swept = MultiPolicySim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: PER_REPLICA,
+        policies: &policies,
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition: Some(sweep_costs),
+    }
+    .run(&trace, StepMode::Exact);
+    for (pi, &policy) in policies.iter().enumerate() {
+        let run = |costs: TransitionCosts| {
+            FleetSim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: PER_REPLICA,
+                policy,
+                spares: None,
+                packed: true,
+                blast: BlastRadius::Single,
+                transition: Some(costs),
+            }
+            .run(&trace, StepMode::Exact)
+        };
+        let base = run(base_costs);
+        let billed = run(sweep_costs);
+        // Only the downtime pool moves, by the amortized stall: the
+        // bill normalizes to secs/GPU/hour / 3600 s/h of fleet time.
+        assert_eq!(billed.mean_throughput, base.mean_throughput, "{}", policy.name());
+        assert_eq!(billed.paused_frac, base.paused_frac, "{}", policy.name());
+        assert_eq!(billed.transitions, base.transitions, "{}", policy.name());
+        assert_eq!(billed.mean_spares_used, base.mean_spares_used, "{}", policy.name());
+        let expected = secs_per_hour / 3600.0;
+        assert!(
+            (billed.downtime_frac - base.downtime_frac - expected).abs() < 1e-12,
+            "{}: downtime moved by {} instead of {expected}",
+            policy.name(),
+            billed.downtime_frac - base.downtime_frac
+        );
+        // All three sweep paths charge the identical f64.
+        assert_eq!(
+            billed,
+            FleetSim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: PER_REPLICA,
+                policy,
+                spares: None,
+                packed: true,
+                blast: BlastRadius::Single,
+                transition: Some(sweep_costs),
+            }
+            .run_replay_per_step(&trace, StepMode::Exact),
+            "{}: per-step reference diverged",
+            policy.name()
+        );
+        assert_eq!(swept[pi], billed, "{}: shared sweep diverged", policy.name());
+    }
 }
 
 /// One config per generator kind, each scaled hot enough that a 6-day

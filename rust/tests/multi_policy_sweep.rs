@@ -184,6 +184,7 @@ fn memo_shared_across_trials_and_sweep_points_is_sound() {
                 // nonzero: CKPT-ADAPTIVE's rate-dependent responses and
                 // charges must also memo-share soundly
                 failure_rate_per_hour: 0.8,
+                validation_sweep_secs: 0.0,
             }),
         };
         with_shared.extend(msim.run_trials(&traces, StepMode::Exact, &mut shared_memo));
@@ -191,8 +192,11 @@ fn memo_shared_across_trials_and_sweep_points_is_sound() {
             with_fresh.push(msim.run(trace, StepMode::Exact));
         }
         // ... and the parallel fan-out (per-thread memos) must be
-        // bit-identical to all of the above, for any worker count.
-        for threads in [1usize, 2, 5] {
+        // bit-identical to all of the above, for any worker count —
+        // including counts above the trace count (5 and 9 over 3
+        // traces), where the trailing workers' batches would be empty
+        // and are not spawned at all.
+        for threads in [1usize, 2, 5, 9] {
             let (par_stats, memo_stats) = msim.run_trials_par(&traces, StepMode::Exact, threads);
             assert_eq!(
                 par_stats,

@@ -273,6 +273,61 @@ fn fleet_stats_bit_identical_on_scenario_traces() {
     }
 }
 
+/// The exact step-function series: one breakpoint per actual change in
+/// the concurrently-failed count, each agreeing with a from-scratch
+/// `replay_to` at the breakpoint AND holding constant until the next
+/// one — so integrals over the series are exact, which the grid-sampled
+/// series converges to from below as the step shrinks.
+#[test]
+fn failed_series_exact_matches_replay_to_everywhere() {
+    let topo = Topology::of(1024, 8, 4);
+    let model = FailureModel::llama3().scaled(80.0);
+    let mut rng = Rng::new(23);
+    let trace = Trace::generate(&topo, &model, 24.0 * 12.0, &mut rng);
+    for blast in [BlastRadius::Single, BlastRadius::Node] {
+        let series = trace.failed_series_exact(&topo, blast);
+        assert!(series.len() > 2, "trace too quiet for this test");
+        assert_eq!(series[0].0, 0.0);
+        for (i, &(t, failed)) in series.iter().enumerate() {
+            assert!(t < trace.horizon_hours, "breakpoint past the horizon");
+            assert_eq!(
+                failed,
+                trace.replay_to(&topo, blast, t).n_failed(),
+                "blast {blast:?} breakpoint t={t}"
+            );
+            if i > 0 {
+                let (prev_t, prev_failed) = series[i - 1];
+                assert!(prev_t < t, "breakpoints must be strictly increasing");
+                assert_ne!(prev_failed, failed, "breakpoint without a count change at t={t}");
+                // piecewise-constant between breakpoints
+                let mid = 0.5 * (prev_t + t);
+                assert_eq!(
+                    prev_failed,
+                    trace.replay_to(&topo, blast, mid).n_failed(),
+                    "blast {blast:?} midpoint t={mid}"
+                );
+            }
+        }
+        // The exact time-above integral agrees with integrating the
+        // series by hand, and the grid-sampled estimate approaches it.
+        let thresh = 0.002;
+        let exact = trace.time_above_fraction_exact(&topo, blast, thresh);
+        let mut by_hand = 0.0;
+        for (i, &(t0, failed)) in series.iter().enumerate() {
+            let t1 = series.get(i + 1).map(|&(t, _)| t).unwrap_or(trace.horizon_hours);
+            if failed as f64 / topo.n_gpus as f64 > thresh {
+                by_hand += t1 - t0;
+            }
+        }
+        assert!((exact - by_hand / trace.horizon_hours).abs() < 1e-12);
+        let sampled = trace.time_above_fraction(&topo, blast, 0.05, thresh);
+        assert!(
+            (sampled - exact).abs() < 0.05,
+            "fine-grid estimate {sampled} should approach the exact integral {exact}"
+        );
+    }
+}
+
 #[test]
 fn fleet_stats_bit_identical_for_every_policy_and_spares() {
     let sim = IterationModel::new(

@@ -1,0 +1,242 @@
+//! Streaming Monte-Carlo and incremental-snapshot-signature suite
+//! (EXPERIMENTS.md §Perf PR 7).
+//!
+//! * A [`TraceStream`] sweep is **bit-identical** to sweeping the
+//!   materialized `Trace` the same stream collects — one event source,
+//!   two consumption orders — across all four scenario generators and
+//!   the full policy registry, for the sequential, shared-memo, and
+//!   parallel (any worker count, including more workers than trials)
+//!   entry points, in both exact and grid stepping.
+//! * The incremental exact sweep (deficit histogram + dirty-domain set
+//!   maintained event-by-event) reproduces the from-scratch rebuild
+//!   oracle bit-for-bit, scenario by scenario, spares and transitions
+//!   on or off.
+//! * `ResponseMemo::begin_point` epochs: hits served across grid-point
+//!   boundaries are counted as cross-point hits; hits inside one point
+//!   are not.
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{BlastRadius, FailureModel, ScenarioConfig, ScenarioKind, TrialGen};
+use ntp::manager::{MultiPolicySim, ResponseMemo, SparePolicy, StepMode, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, TransitionCosts};
+use ntp::power::RackDesign;
+use ntp::sim::{IterationModel, SimParams};
+use ntp::util::prop::{check, SeedGen};
+use ntp::util::prng::Rng;
+
+const DOMAIN_SIZE: usize = 32;
+const PER_REPLICA: usize = 4;
+
+const ALL_KINDS: [ScenarioKind; 4] = [
+    ScenarioKind::Independent,
+    ScenarioKind::Correlated,
+    ScenarioKind::Straggler,
+    ScenarioKind::Sdc,
+];
+
+fn setup() -> (IterationModel, ParallelConfig, StrategyTable) {
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 2 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: DOMAIN_SIZE, pp: PER_REPLICA, dp: 16, microbatch: 1 };
+    let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    (sim, cfg, table)
+}
+
+/// Rates hot enough that a ~10-day trace on a few hundred GPUs carries
+/// every event type its scenario can produce.
+fn hot_scenario(kind: ScenarioKind) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::new(kind);
+    cfg.correlated = cfg.correlated.scaled(2_000.0);
+    cfg.straggler = cfg.straggler.scaled(200.0);
+    cfg.sdc = cfg.sdc.scaled(2_000.0);
+    cfg
+}
+
+/// Stream-vs-materialized bit-identity over the full registry: every
+/// entry point, every scenario kind, exact and grid stepping, workers
+/// above and below the trial count.
+#[test]
+fn streaming_trials_bit_identical_to_materialized() {
+    let (sim, cfg, table) = setup();
+    let policies = registry::all();
+    let job_domains = 20usize;
+    let spare_domains = 4usize;
+    let topo = Topology::of((job_domains + spare_domains) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(40.0);
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+    for (k, &kind) in ALL_KINDS.iter().enumerate() {
+        let gen = TrialGen::new(
+            &topo,
+            &model,
+            &hot_scenario(kind),
+            24.0 * 10.0,
+            0x57AE + k as u64,
+            5,
+        );
+        let traces = gen.traces();
+        assert!(
+            traces.iter().all(|t| !t.events.is_empty()),
+            "{kind:?}: trial traces came out empty — rates too quiet for this test"
+        );
+        let msim = MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policies: &policies,
+            spares: Some(SparePolicy { spare_domains, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+        };
+        for mode in [StepMode::Exact, StepMode::Grid(2.0)] {
+            // Sequential, one shared memo on each side.
+            let mut memo_m = msim.memo();
+            let mat = msim.run_trials(&traces, mode, &mut memo_m);
+            let mut memo_s = msim.memo();
+            let streamed = msim.run_trials_stream(&gen, mode, &mut memo_s);
+            assert_eq!(
+                streamed, mat,
+                "{kind:?} {mode:?}: streaming trials diverged from the materialized path"
+            );
+            // Single-stream entry point against its own collected trace.
+            let one = msim.run_stream(gen.stream_for(2), mode, &mut msim.memo());
+            assert_eq!(
+                one, mat[2],
+                "{kind:?} {mode:?}: run_stream diverged from the collected trace"
+            );
+            // Parallel fan-out at worker counts below, at, and above the
+            // trial count (7 and 9 exceed the 5 trials: the clamped and
+            // empty-trailing-batch paths).
+            for threads in [1usize, 2, 3, 5, 7, 9] {
+                let (par_m, _) = msim.run_trials_par(&traces, mode, threads);
+                let (par_s, ms) = msim.run_trials_stream_par(&gen, mode, threads);
+                assert_eq!(
+                    par_s, par_m,
+                    "{kind:?} {mode:?} threads={threads}: parallel streaming diverged"
+                );
+                assert_eq!(par_s, mat, "{kind:?} {mode:?} threads={threads}");
+                assert!(ms.hits + ms.misses > 0, "memo never consulted");
+            }
+        }
+    }
+}
+
+/// The incremental exact sweep must reproduce the from-scratch rebuild
+/// oracle bit-for-bit: random scenario kind, spare budget, blast
+/// radius, packing, and transitions per seed.
+#[test]
+fn incremental_sweep_matches_rebuild_oracle() {
+    let (sim, cfg, table) = setup();
+    let policies = registry::all();
+    let gen = SeedGen;
+    check(0x1AC2, 10, &gen, |&seed| {
+        let mut rng = Rng::new(seed);
+        let kind = ALL_KINDS[rng.index(4)];
+        let spare_domains = [0usize, 3, 6][rng.index(3)];
+        let job_domains = PER_REPLICA * (5 + rng.index(4));
+        let topo =
+            Topology::of((job_domains + spare_domains) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+        let model = FailureModel::llama3().scaled(20.0 + rng.f64() * 50.0);
+        let horizon = 24.0 * (6.0 + rng.f64() * 8.0);
+        let tgen = TrialGen::new(&topo, &model, &hot_scenario(kind), horizon, seed, 2);
+        let blast = [BlastRadius::Single, BlastRadius::Node][rng.index(2)];
+        let spares = (spare_domains > 0)
+            .then_some(SparePolicy { spare_domains, min_tp: 28 });
+        let transition = rng
+            .chance(0.5)
+            .then(|| TransitionCosts::model(&sim, &cfg));
+        for packed in [true, false] {
+            let msim = MultiPolicySim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: PER_REPLICA,
+                policies: &policies,
+                spares,
+                packed,
+                blast,
+                transition,
+            };
+            for trace in &tgen.traces() {
+                let incremental = msim.run_with(trace, StepMode::Exact, &mut msim.memo());
+                let rebuilt = msim.run_rebuild(trace, &mut msim.memo());
+                if incremental != rebuilt {
+                    return Err(format!(
+                        "{kind:?} packed={packed} spares={spare_domains} blast={blast:?} \
+                         transition={}: incremental sweep != rebuild oracle",
+                        transition.is_some()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `begin_point` epochs: replaying the same trials against a memo
+/// populated by an earlier grid point scores *cross-point* hits; a memo
+/// that never crosses a point boundary scores none.
+#[test]
+fn cross_point_hits_track_point_epochs() {
+    let (sim, cfg, table) = setup();
+    let policies = registry::all();
+    let job_domains = 20usize;
+    let max_spares = 4usize;
+    let topo = Topology::of((job_domains + max_spares) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(40.0);
+    let gen = TrialGen::new(
+        &topo,
+        &model,
+        &hot_scenario(ScenarioKind::Correlated),
+        24.0 * 10.0,
+        9,
+        2,
+    );
+    let costs = Some(TransitionCosts::model(&sim, &cfg));
+    let run_point = |spare_domains: usize, memo: &mut ResponseMemo| {
+        let msim = MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policies: &policies,
+            spares: Some(SparePolicy { spare_domains, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Single,
+            transition: costs,
+        };
+        msim.run_trials_stream(&gen, StepMode::Exact, memo)
+    };
+    // One point, no boundary crossed: everything is a same-point hit.
+    let mut memo_one = ResponseMemo::new(policies.len());
+    memo_one.begin_point();
+    let first = run_point(2, &mut memo_one);
+    let one = memo_one.stats();
+    assert!(one.hits + one.misses > 0);
+    assert_eq!(one.cross_hits, 0, "no point boundary was crossed");
+    assert_eq!(one.cross_transition_hits, 0);
+    assert_eq!(one.cross_hit_rate(), 0.0);
+    // Second point replaying the identical streams: its hits come from
+    // entries the first point populated, and the stats themselves are
+    // unchanged by the sharing.
+    memo_one.begin_point();
+    let second = run_point(2, &mut memo_one);
+    assert_eq!(second, first, "memo sharing across points changed the stats");
+    let two = memo_one.stats();
+    assert!(two.cross_hits > 0, "replayed point must re-hit earlier-point entries");
+    assert!(two.cross_hit_rate() > 0.0);
+    // A different spare budget still shares the healthy-fleet entries.
+    memo_one.begin_point();
+    let _ = run_point(0, &mut memo_one);
+    let three = memo_one.stats();
+    assert!(three.cross_hits >= two.cross_hits);
+}
