@@ -19,7 +19,10 @@
 #                       smoke: a correlated + straggler quick sweep
 #                       asserting generator throughput and
 #                       1-vs-N-thread bit-identity (writes
-#                       BENCH_scenarios_quick.json)
+#                       BENCH_scenarios_quick.json); plus the elastic
+#                       smoke: the Fig 7c elastic-DP / two-tier-spare /
+#                       detection-latency acceptance sweep (writes
+#                       BENCH_elastic_quick.json)
 
 CARGO    ?= cargo
 MANIFEST := rust/Cargo.toml
@@ -51,3 +54,4 @@ bench-quick:
 	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick --trials-only
 	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick --streaming-only
 	$(CARGO) bench --bench fig12_scenarios --manifest-path $(MANIFEST) -- --quick
+	$(CARGO) bench --bench fig7_spares --manifest-path $(MANIFEST) -- --quick

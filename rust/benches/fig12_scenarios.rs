@@ -116,6 +116,7 @@ fn main() {
         packed: true,
         blast: BlastRadius::Single,
         transition: None,
+        detect: None,
     };
     let mut t = Table::new(&["scenario", "DP-DROP tput", "NTP tput"]);
     let mut tputs = [[0.0f64; 2]; 2]; // [indep, corr] x [drop, ntp]
@@ -293,6 +294,7 @@ fn quick_smoke() {
         packed: true,
         blast: BlastRadius::Single,
         transition: Some(TransitionCosts::model(&sim, &cfg)),
+        detect: None,
     };
     let threads = par::num_threads().max(2);
     let mut report = JsonReport::new("scenarios_quick");

@@ -114,6 +114,7 @@ fn main() {
         packed: true,
         blast: BlastRadius::Single,
         transition,
+        detect: None,
     };
     let mut memo = msim.memo();
     let stats_per_policy = msim.run_with(&trace, mode, &mut memo);

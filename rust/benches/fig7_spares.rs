@@ -8,19 +8,40 @@
 
 use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
-use ntp::failure::{BlastRadius, FailureModel, Trace};
-use ntp::manager::{FleetStats, MultiPolicySim, ResponseMemo, SparePolicy, StrategyTable};
+use ntp::failure::{
+    BlastRadius, DetectionModel, FailureModel, ScenarioConfig, ScenarioKind, Trace, TrialGen,
+};
+use ntp::manager::{FleetStats, MultiPolicySim, ResponseMemo, SparePolicy, StepMode, StrategyTable};
 use ntp::parallel::ParallelConfig;
 use ntp::policy::{registry, FtPolicy, TransitionCosts};
 use ntp::power::RackDesign;
 use ntp::sim::engine::min_supported_tp;
 use ntp::sim::{IterationModel, SimParams};
-use ntp::util::bench::time_once;
+use ntp::util::bench::{arg_flag, time_once, JsonReport};
+use ntp::util::json::Value;
 use ntp::util::par;
 use ntp::util::prng::Rng;
 use ntp::util::table::{f4, pct, Table};
 
+/// Machine-readable record of the elastic-DP / hierarchical-spares /
+/// detection section (Fig 7c) — the `make bench-quick` smoke writes it
+/// so CI archives the elastic acceptance numbers alongside the perf
+/// record.
+const OUT_PATH_ELASTIC: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_elastic_quick.json");
+
 fn main() {
+    // `--quick` (the `make bench-quick` smoke) runs only the Fig 7c
+    // elastic/detection section at smoke scale; full runs execute the
+    // paper-scale Fig 7 / 7b sweeps first and then the same 7c section.
+    let quick = arg_flag("--quick");
+    if !quick {
+        full_sections();
+    }
+    elastic_section();
+}
+
+fn full_sections() {
     let model = presets::model("gpt-480b").unwrap();
     let cluster = presets::cluster("paper-32k-nvl32").unwrap();
     let work = WorkloadConfig {
@@ -73,10 +94,11 @@ fn main() {
             table: &table,
             domains_per_replica: cfg.pp,
             policies: &policies,
-            spares: Some(SparePolicy { spare_domains: spares, min_tp: 28 }),
+            spares: Some(SparePolicy { spare_domains: spares, cold_domains: 0, min_tp: 28 }),
             packed: true,
             blast: BlastRadius::Single,
             transition,
+            detect: None,
         };
         let stats = msim.run_with(&trace, mode, &mut memo);
         for (&policy, s) in policies.iter().zip(stats) {
@@ -162,11 +184,35 @@ fn main() {
         ntp96.downtime_frac
     );
     assert!(ckpt.net_throughput_per_gpu() < ntp96.net_throughput_per_gpu());
+    // Elastic DP never pauses (the elastic world rescales its
+    // minibatch), so its spare appetite is zero — no worse than
+    // SPARE-MIG's, the other pause-free policy.
+    assert_eq!(
+        first_ok["ELASTIC-DP"],
+        Some(0),
+        "ELASTIC-DP must train uninterrupted with zero spares"
+    );
+    assert!(
+        first_ok["ELASTIC-DP"].unwrap_or(97) <= mig_min,
+        "elastic-dp spare appetite must not exceed SPARE-MIG's"
+    );
+    // Checkpoint-less live rejoin vs rollback: both see the same
+    // failures, but CKPT-RESTART pays a whole-job restart + half a
+    // checkpoint interval per transition while ELASTIC-DP pays only the
+    // affected replicas' group re-formation and peer-to-peer rejoin.
+    let elastic96 = stats_per_combo[idx("ELASTIC-DP", 96)];
+    assert!(
+        elastic96.downtime_frac < ckpt.downtime_frac,
+        "live rejoin ({}) must bill less than checkpoint rollback ({})",
+        elastic96.downtime_frac,
+        ckpt.downtime_frac
+    );
+    assert!(elastic96.net_throughput_per_gpu() > ckpt.net_throughput_per_gpu());
 
     // =====================================================================
     // SPARe scale: the same fixed-minibatch sweep at 100K GPUs / NVL72
     // (paper-100k-nvl72), over Monte-Carlo failure traces. 3 budgets x
-    // 4 trials x 11 policies = 132 trace integrations — tractable
+    // 4 trials x 12 policies = 144 trace integrations — tractable
     // because each trial replays the trace once for all policies
     // (exact stepping bounds the work by the event count), trial
     // batches fan out over scoped threads via run_trials_par
@@ -219,10 +265,11 @@ fn main() {
                 table: &table_100k,
                 domains_per_replica: cfg_100k.pp,
                 policies: &policies,
-                spares: Some(SparePolicy { spare_domains: spares, min_tp: min_tp_100k }),
+                spares: Some(SparePolicy { spare_domains: spares, cold_domains: 0, min_tp: min_tp_100k }),
                 packed: true,
                 blast: BlastRadius::Single,
                 transition: transition_100k,
+                detect: None,
             };
             // Parallel Monte-Carlo: trial batches over scoped threads,
             // one replayer + memo per worker, bit-identical to 1 thread
@@ -265,4 +312,260 @@ fn main() {
         "expected a warm snapshot memo at 100K scale, got {:.2}",
         merged.hit_rate()
     );
+}
+
+// =========================================================================
+// Fig 7c: elastic DP, hierarchical spares, and imperfect detection —
+// the PR 8 acceptance sweep, sized to run as the `make bench-quick`
+// smoke (a few hundred GPUs, ten-day traces). Always writes
+// `BENCH_elastic_quick.json` so CI archives the numbers.
+// =========================================================================
+fn elastic_section() {
+    let mut rep = JsonReport::new("fig7_elastic");
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 2 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: 32, pp: 4, dp: 16, microbatch: 1 };
+    let table = StrategyTable::build(&sim, &cfg, &RackDesign::default());
+    let job_domains = cfg.dp / 4 * cfg.pp; // 16 replicas' worth of domains
+    let max_spares = 4usize;
+    let topo = Topology::of((job_domains + max_spares) * 32, 32, 4);
+    let costs = Some(TransitionCosts::model(&sim, &cfg));
+    let policies = registry::all();
+    rep.scalar("n_gpus", topo.n_gpus as f64);
+    rep.scalar("n_policies", policies.len() as f64);
+
+    // --- 7c.1: spare appetite with ELASTIC-DP in the registry ----------
+    println!("\n=== Fig 7c: elastic DP / two-tier spares / detection (smoke scale) ===\n");
+    let fmodel = FailureModel::llama3().scaled(25.0);
+    let mut rng = Rng::new(0xE1A);
+    let trace = Trace::generate(&topo, &fmodel, 10.0 * 24.0, &mut rng);
+    println!("trace: {} events over 10 days", trace.events.len());
+    let mut t = Table::new(&["policy", "spares", "net tput/GPU", "downtime", "paused"]);
+    let mut by_combo: Vec<(&'static str, usize, FleetStats)> = Vec::new();
+    for &spares in &[0usize, 2, 4] {
+        let msim = MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            policies: &policies,
+            spares: Some(SparePolicy { spare_domains: spares, cold_domains: 0, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Single,
+            transition: costs,
+            detect: None,
+        };
+        for (&policy, stats) in policies.iter().zip(msim.run(&trace, StepMode::Exact)) {
+            t.row(&[
+                policy.name().into(),
+                format!("{spares}"),
+                f4(stats.net_throughput_per_gpu()),
+                pct(stats.downtime_frac),
+                pct(stats.paused_frac),
+            ]);
+            rep.row(Value::obj(vec![
+                ("section", Value::Str("spare_appetite".into())),
+                ("policy", Value::Str(policy.name().into())),
+                ("spares", Value::Num(spares as f64)),
+                ("net_tput_per_gpu", Value::Num(stats.net_throughput_per_gpu())),
+                ("downtime_frac", Value::Num(stats.downtime_frac)),
+                ("paused_frac", Value::Num(stats.paused_frac)),
+            ]));
+            by_combo.push((policy.name(), spares, stats));
+        }
+    }
+    t.print();
+    let stat = |name: &str, spares: usize| -> FleetStats {
+        by_combo.iter().find(|(n, s, _)| *n == name && *s == spares).unwrap().2
+    };
+    // Elastic DP never pauses: zero spare appetite, no worse than
+    // SPARE-MIG (the other pause-free policy).
+    for &spares in &[0usize, 2, 4] {
+        assert_eq!(stat("ELASTIC-DP", spares).paused_frac, 0.0);
+        assert!(
+            stat("ELASTIC-DP", spares).paused_frac <= stat("SPARE-MIG", spares).paused_frac,
+            "elastic-dp spare appetite must not exceed SPARE-MIG's"
+        );
+    }
+    // Live rejoin bills less than checkpoint rollback at every budget.
+    for &spares in &[0usize, 2, 4] {
+        let e = stat("ELASTIC-DP", spares);
+        let c = stat("CKPT-RESTART", spares);
+        assert!(
+            e.downtime_frac < c.downtime_frac,
+            "spares={spares}: rejoin ({}) must bill less than rollback ({})",
+            e.downtime_frac,
+            c.downtime_frac
+        );
+        assert!(
+            e.net_throughput() > c.net_throughput(),
+            "spares={spares}: elastic-dp must beat ckpt-restart on net throughput"
+        );
+    }
+    rep.scalar("elastic_downtime_4sp", stat("ELASTIC-DP", 4).downtime_frac);
+    rep.scalar("ckpt_downtime_4sp", stat("CKPT-RESTART", 4).downtime_frac);
+
+    // --- 7c.2: hierarchical (warm + cold) spare pool -------------------
+    // Same total budget, growing cold share: capacity statistics are
+    // bit-identical (the tier split changes what a migration *costs*,
+    // never what it substitutes); the bill is monotone in the cold
+    // share and strictly above flat once the warm tier is empty.
+    let tier_policies: Vec<&'static dyn FtPolicy> =
+        vec![registry::parse("spare-mig").unwrap(), registry::parse("elastic-dp").unwrap()];
+    let mut t2 = Table::new(&["policy", "warm", "cold", "net tput/GPU", "downtime"]);
+    let mut tier_stats: Vec<Vec<FleetStats>> = Vec::new();
+    for &cold in &[0usize, 2, 4] {
+        let msim = MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            policies: &tier_policies,
+            spares: Some(SparePolicy {
+                spare_domains: max_spares,
+                cold_domains: cold,
+                min_tp: 28,
+            }),
+            packed: true,
+            blast: BlastRadius::Single,
+            transition: costs,
+            detect: None,
+        };
+        let stats = msim.run(&trace, StepMode::Exact);
+        for (&policy, s) in tier_policies.iter().zip(&stats) {
+            t2.row(&[
+                policy.name().into(),
+                format!("{}", max_spares - cold),
+                format!("{cold}"),
+                f4(s.net_throughput_per_gpu()),
+                pct(s.downtime_frac),
+            ]);
+            rep.row(Value::obj(vec![
+                ("section", Value::Str("two_tier".into())),
+                ("policy", Value::Str(policy.name().into())),
+                ("warm", Value::Num((max_spares - cold) as f64)),
+                ("cold", Value::Num(cold as f64)),
+                ("net_tput_per_gpu", Value::Num(s.net_throughput_per_gpu())),
+                ("downtime_frac", Value::Num(s.downtime_frac)),
+            ]));
+        }
+        tier_stats.push(stats);
+    }
+    t2.print();
+    assert!(
+        tier_stats[0][0].mean_spares_used > 0.0,
+        "trace too quiet: spares never migrated, the tier sweep shows nothing"
+    );
+    for w in tier_stats.windows(2) {
+        for pi in 0..tier_policies.len() {
+            // Capacity substitution is tier-blind…
+            assert_eq!(
+                w[0][pi].mean_throughput.to_bits(),
+                w[1][pi].mean_throughput.to_bits()
+            );
+            assert_eq!(
+                w[0][pi].mean_spares_used.to_bits(),
+                w[1][pi].mean_spares_used.to_bits()
+            );
+            // …the bill is not: cold bring-up is never cheaper.
+            assert!(w[1][pi].downtime_frac >= w[0][pi].downtime_frac);
+        }
+    }
+    // All-cold vs all-warm must strictly bite for SPARE-MIG (every
+    // migration overflows the empty warm tier at the cold load time).
+    assert!(
+        tier_stats[2][0].downtime_frac > tier_stats[0][0].downtime_frac,
+        "an all-cold pool must bill more than an all-warm one: {} vs {}",
+        tier_stats[2][0].downtime_frac,
+        tier_stats[0][0].downtime_frac
+    );
+
+    // --- 7c.3: detection-latency sweep ---------------------------------
+    // Stragglers with real drag plus hard failures; growing detection
+    // latency hides faults from the policies while the fleet-scale
+    // stall bill accrues. STRAGGLER-EVICT's net throughput must degrade
+    // monotonically, and ELASTIC-DP must beat CKPT-RESTART at every
+    // latency (the rejoin advantage survives imperfect detection).
+    let det_policies: Vec<&'static dyn FtPolicy> = vec![
+        registry::parse("straggler-evict").unwrap(),
+        registry::parse("elastic-dp").unwrap(),
+        registry::parse("ckpt-restart").unwrap(),
+    ];
+    let fmodel_det = FailureModel::llama3().scaled(10.0);
+    let mut scen = ScenarioConfig::new(ScenarioKind::Straggler);
+    scen.straggler = scen.straggler.scaled(40.0);
+    scen.straggler.slowdown = (0.3, 0.7);
+    let gen = TrialGen::new(&topo, &fmodel_det, &scen, 10.0 * 24.0, 0xDE7EC7, 1);
+    let det_traces = gen.traces();
+    let latencies_hours = [0.0f64, 0.25, 1.0, 2.0];
+    let mut t3 = Table::new(&["latency (h)", "policy", "net tput", "downtime"]);
+    let mut evict_nets: Vec<f64> = Vec::new();
+    for &lat in &latencies_hours {
+        let msim = MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: cfg.pp,
+            policies: &det_policies,
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition: costs,
+            detect: Some(DetectionModel {
+                fail_latency_hours: lat,
+                degrade_latency_hours: lat,
+                false_positives_per_gpu_day: 0.0,
+                jitter_frac: 0.0,
+            }),
+        };
+        let stats = msim.run(&det_traces[0], StepMode::Exact);
+        for (&policy, s) in det_policies.iter().zip(&stats) {
+            t3.row(&[
+                format!("{lat}"),
+                policy.name().into(),
+                f4(s.net_throughput()),
+                pct(s.downtime_frac),
+            ]);
+            rep.row(Value::obj(vec![
+                ("section", Value::Str("detection".into())),
+                ("policy", Value::Str(policy.name().into())),
+                ("detect_latency_hours", Value::Num(lat)),
+                ("net_tput", Value::Num(s.net_throughput())),
+                ("downtime_frac", Value::Num(s.downtime_frac)),
+            ]));
+        }
+        evict_nets.push(stats[0].net_throughput());
+        assert!(
+            stats[1].net_throughput() > stats[2].net_throughput(),
+            "latency {lat}h: elastic-dp ({}) must beat ckpt-restart ({})",
+            stats[1].net_throughput(),
+            stats[2].net_throughput()
+        );
+    }
+    t3.print();
+    for w in evict_nets.windows(2) {
+        assert!(
+            w[1] <= w[0] + 1e-12,
+            "straggler-evict net throughput must be non-increasing in detection \
+             latency: {evict_nets:?}"
+        );
+    }
+    assert!(
+        evict_nets[latencies_hours.len() - 1] < evict_nets[0],
+        "hours-scale latency must strictly degrade straggler-evict: {evict_nets:?}"
+    );
+    rep.scalar("evict_net_latency0", evict_nets[0]);
+    rep.scalar(
+        "evict_net_latency_max",
+        evict_nets[latencies_hours.len() - 1],
+    );
+    rep.label("scenario", "straggler(40x, slowdown 0.3-0.7) + llama3(10x)");
+
+    rep.write(OUT_PATH_ELASTIC).expect("write BENCH_elastic_quick.json");
+    println!("\nwrote {} ({} rows)", OUT_PATH_ELASTIC, rep.n_rows());
 }

@@ -165,6 +165,7 @@ fn main() {
             packed: true,
             blast: BlastRadius::Single,
             transition: None,
+            detect: None,
         };
         // Bit-identical integration on both paths, by construction and here
         // — in grid AND exact mode.
@@ -239,6 +240,7 @@ fn main() {
         packed: true,
         blast: BlastRadius::Single,
         transition: None,
+        detect: None,
     };
 
     if !trials_only && !streaming_only {
@@ -269,6 +271,7 @@ fn main() {
                         packed: true,
                         blast: BlastRadius::Single,
                         transition,
+                        detect: None,
                     }
                     .run(&trace_100k, StepMode::Exact)
                 })
@@ -640,10 +643,11 @@ fn main() {
                         table: &table_g,
                         domains_per_replica: cfg_g.pp,
                         policies: &policies,
-                        spares: Some(SparePolicy { spare_domains, min_tp: tp_g - 4 }),
+                        spares: Some(SparePolicy { spare_domains, cold_domains: 0, min_tp: tp_g - 4 }),
                         packed: true,
                         blast: BlastRadius::Single,
                         transition: costs_g,
+                        detect: None,
                     };
                     black_box(msim_g.run_trials_stream(&gen_g, StepMode::Exact, &mut grid_memo));
                     grid_points += 1;

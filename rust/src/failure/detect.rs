@@ -1,0 +1,481 @@
+//! Imperfect failure detection: latency between a fault occurring and
+//! the fleet manager *noticing* it, plus a false-positive rate for
+//! straggler detectors.
+//!
+//! The scenario engine's traces record when faults physically happen;
+//! every policy so far reacted at that instant (oracle detection). A
+//! real fleet manager sees a `Fail` only after health checks time out
+//! and a `Degrade` only after a profiling window flags the straggler —
+//! ByteDance and FailSafe both report minutes-scale diagnosis lags that
+//! govern delivered throughput as much as the fault rate itself.
+//!
+//! [`DelayedEvents`] is an [`EventSource`] adapter that shifts each
+//! `Fail`/`Degrade` event's *reveal* time forward by the per-kind
+//! detection latency (optionally jittered, deterministically, per
+//! event), re-sorts the shifted stream with a reorder buffer, and
+//! accounts the **undetected-stall bill**: while a fault is live but
+//! undetected the job makes no useful progress — a dead rank wedges
+//! every collective it participates in (and the DP allreduce then
+//! gates the whole job), while a silent straggler drags every rank to
+//! its speed — yet the policy layer still integrates the fleet as
+//! healthy. The adapter therefore charges `stall_gpus ×
+//! undetected-window` GPU-hours through the rollback/downtime channel,
+//! weighted `1.0` for a `Fail` (the job is fully wedged) and
+//! `1 − slowdown` for a `Degrade` (the job runs, gated at the
+//! straggler's speed). Events that heal before detection are never
+//! revealed at all (the policy never reconfigures) but still pay their
+//! full outage as stall. This is what makes slower detection strictly
+//! worse: the stall always costs at least as much work as the
+//! reconfiguration the policy would have made had it known.
+//!
+//! `Sdc` events pass through unshifted: their detection lag is already
+//! modeled explicitly by the validation-sweep machinery
+//! ([`EventKind::Sdc`] carries `corrupt_at_hours`).
+//!
+//! False positives are billed in expectation, not sampled: a detector
+//! with false-positive rate `r` per GPU-day fires `r × n_gpus ×
+//! horizon/24` spurious evictions over the horizon, and each policy
+//! prices one spurious eviction via
+//! [`crate::policy::FtPolicy::false_positive_cost`] (evict-and-readmit
+//! reshard for `straggler-evict` / `elastic-dp`, free for policies that
+//! never evict on a degrade signal). Expected-value billing keeps the
+//! trace — and therefore every response memo and bit-identity contract
+//! — untouched by the false-positive knob.
+
+use std::cmp::Ordering;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::BinaryHeap;
+use std::hash::{Hash, Hasher};
+
+use super::replayer::EventSource;
+use super::trace::{EventKind, FailureEvent, Trace};
+use super::TraceCursor;
+
+/// Detection-quality model: per-kind mean latencies, deterministic
+/// per-event jitter, and the straggler detector's false-positive rate.
+///
+/// The all-zero model is **instant detection** — sims normalize it away
+/// ([`DetectionModel::active`]) so the zero configuration runs today's
+/// exact code path bit-for-bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DetectionModel {
+    /// Mean latency from a hard failure to its detection, hours
+    /// (health-check timeout + diagnosis).
+    pub fail_latency_hours: f64,
+    /// Mean latency from straggler onset to its detection, hours
+    /// (profiling-window flagging).
+    pub degrade_latency_hours: f64,
+    /// Spurious straggler detections per GPU per day, billed in
+    /// expectation via [`crate::policy::FtPolicy::false_positive_cost`].
+    pub false_positives_per_gpu_day: f64,
+    /// Relative spread of the per-event latency around its mean: each
+    /// event's latency is `mean × (1 + jitter_frac × (u − 0.5))` with
+    /// `u ∈ [0, 1)` hashed deterministically from `(gpu, at_hours)`.
+    /// `0` = every event at the mean; values in `[0, 2]` keep latencies
+    /// non-negative (clamped regardless).
+    pub jitter_frac: f64,
+}
+
+impl DetectionModel {
+    /// Instant, perfect detection — the pre-detection semantics.
+    pub fn instant() -> DetectionModel {
+        DetectionModel {
+            fail_latency_hours: 0.0,
+            degrade_latency_hours: 0.0,
+            false_positives_per_gpu_day: 0.0,
+            jitter_frac: 0.0,
+        }
+    }
+
+    /// True when the model is indistinguishable from no model at all:
+    /// zero latency for every kind and zero false positives.
+    pub fn is_instant(&self) -> bool {
+        self.fail_latency_hours == 0.0
+            && self.degrade_latency_hours == 0.0
+            && self.false_positives_per_gpu_day == 0.0
+    }
+
+    /// Normalize an optional model: `Some(instant)` behaves — and must
+    /// stay, bit-for-bit — identical to `None`, so every sim entry
+    /// point filters through this before branching onto the adapter
+    /// path.
+    pub fn active(model: &Option<DetectionModel>) -> Option<&DetectionModel> {
+        model.as_ref().filter(|d| !d.is_instant())
+    }
+
+    /// Memo-key fingerprint: nonzero for any active model, `0` reserved
+    /// for instant/no detection (mirrors the transition-cost
+    /// fingerprint convention in `manager::sweep`).
+    pub fn fingerprint(model: &Option<DetectionModel>) -> u64 {
+        match Self::active(model) {
+            None => 0,
+            Some(d) => {
+                let mut h = DefaultHasher::new();
+                for v in [
+                    d.fail_latency_hours,
+                    d.degrade_latency_hours,
+                    d.false_positives_per_gpu_day,
+                    d.jitter_frac,
+                ] {
+                    v.to_bits().hash(&mut h);
+                }
+                h.finish().max(1)
+            }
+        }
+    }
+
+    /// Detection latency of one event, hours. `Sdc` is always `0` (its
+    /// lag is the validation sweep's job); `Fail`/`Degrade` take their
+    /// kind's mean, jittered deterministically per `(gpu, at_hours)`.
+    pub fn latency_hours(&self, ev: &FailureEvent) -> f64 {
+        let base = match ev.kind {
+            EventKind::Fail => self.fail_latency_hours,
+            EventKind::Degrade { .. } => self.degrade_latency_hours,
+            EventKind::Sdc { .. } => return 0.0,
+        };
+        if base <= 0.0 {
+            return 0.0;
+        }
+        if self.jitter_frac == 0.0 {
+            return base;
+        }
+        let u = hash_unit(ev.gpu, ev.at_hours);
+        (base * (1.0 + self.jitter_frac * (u - 0.5))).max(0.0)
+    }
+
+    /// Expected spurious straggler detections over the horizon.
+    pub fn false_positive_events(&self, n_gpus: usize, horizon_hours: f64) -> f64 {
+        self.false_positives_per_gpu_day * n_gpus as f64 * horizon_hours / 24.0
+    }
+
+    /// Materialize the detection-shifted view of a trace: the events a
+    /// manager with this model actually *sees* (reveal-time-sorted,
+    /// healed-before-detected events elided), plus the undetected-stall
+    /// bill in GPU-hours (`stall_gpus` is the job size the wedge
+    /// gates, see [`DelayedEvents`]). Defined as — and bit-identical
+    /// to — draining a [`DelayedEvents`] over the trace's cursor, so
+    /// the materialized and streaming detection paths cannot drift
+    /// apart.
+    pub fn delay_trace(&self, trace: &Trace, stall_gpus: usize) -> (Trace, f64) {
+        let mut delayed = DelayedEvents::new(TraceCursor::new(trace), *self, stall_gpus);
+        let mut events = Vec::new();
+        while let Some(ev) = delayed.next_event() {
+            events.push(ev);
+        }
+        let trace = Trace { horizon_hours: trace.horizon_hours, events };
+        (trace, delayed.stall_gpu_hours())
+    }
+}
+
+/// Deterministic `[0, 1)` hash of an event's identity (splitmix64 over
+/// `(gpu, at_hours)`) — per-event latency jitter without any PRNG
+/// state, so replays, resets and thread fan-outs all see identical
+/// latencies.
+fn hash_unit(gpu: usize, at_hours: f64) -> f64 {
+    let mut z = (gpu as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ at_hours.to_bits();
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Heap entry: an already-shifted event keyed by its reveal time, with
+/// an intake sequence number so equal reveal times keep source order
+/// (BinaryHeap is not stable on its own).
+struct Delayed {
+    reveal: f64,
+    seq: u64,
+    ev: FailureEvent,
+}
+
+impl PartialEq for Delayed {
+    fn eq(&self, other: &Delayed) -> bool {
+        self.reveal.total_cmp(&other.reveal) == Ordering::Equal && self.seq == other.seq
+    }
+}
+impl Eq for Delayed {}
+impl PartialOrd for Delayed {
+    fn partial_cmp(&self, other: &Delayed) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Delayed {
+    fn cmp(&self, other: &Delayed) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap and we pop earliest first.
+        other
+            .reveal
+            .total_cmp(&self.reveal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// [`EventSource`] adapter that reveals its inner source's events only
+/// after the [`DetectionModel`]'s per-kind latency has elapsed.
+///
+/// Invariants:
+/// * output is non-decreasing in `at_hours` (reorder buffer: a shifted
+///   event is emitted only once no unconsumed source event could still
+///   produce an earlier reveal);
+/// * an event whose reveal would land at/after its own recovery or the
+///   horizon is dropped — the manager never saw it — but its full
+///   outage is charged as undetected stall;
+/// * `Sdc` events pass through untouched;
+/// * [`DelayedEvents::stall_gpu_hours`] is complete once `next_event`
+///   has returned `None` (i.e. after `ReplayCore::drain_source`).
+pub struct DelayedEvents<S: EventSource> {
+    source: S,
+    model: DetectionModel,
+    /// GPUs an undetected fault gates — the whole job for a hard
+    /// failure (a dead rank hangs every collective and the DP
+    /// allreduce propagates the wedge), attenuated by the straggler's
+    /// residual speed for a `Degrade`. Callers pass the fleet's GPU
+    /// count.
+    stall_gpus: usize,
+    /// One-event lookahead into the source (its `at_hours` lower-bounds
+    /// every future reveal, which is what licenses emitting the heap
+    /// front).
+    pending_src: Option<FailureEvent>,
+    source_done: bool,
+    heap: BinaryHeap<Delayed>,
+    seq: u64,
+    stall_gpu_hours: f64,
+}
+
+impl<S: EventSource> DelayedEvents<S> {
+    pub fn new(source: S, model: DetectionModel, stall_gpus: usize) -> DelayedEvents<S> {
+        DelayedEvents {
+            source,
+            model,
+            stall_gpus,
+            pending_src: None,
+            source_done: false,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            stall_gpu_hours: 0.0,
+        }
+    }
+
+    /// Undetected-stall bill accumulated so far, GPU-hours. Complete
+    /// only after the source is exhausted.
+    pub fn stall_gpu_hours(&self) -> f64 {
+        self.stall_gpu_hours
+    }
+
+    /// Shift one source event, account its stall, and (unless it healed
+    /// or fell past the horizon before detection) buffer it for
+    /// reveal-ordered emission.
+    fn intake(&mut self, ev: FailureEvent) {
+        let latency = self.model.latency_hours(&ev);
+        let reveal = ev.at_hours + latency;
+        if latency > 0.0 {
+            // Fully wedged for a hard failure; gated at the straggler's
+            // residual speed for a degrade. (`Sdc` never reaches here:
+            // its latency is always 0.)
+            let weight = match ev.kind {
+                EventKind::Fail => 1.0,
+                EventKind::Degrade { slowdown } => 1.0 - slowdown,
+                EventKind::Sdc { .. } => 0.0,
+            };
+            let stall_end = reveal.min(ev.recover_at_hours).min(self.source.horizon_hours());
+            if stall_end > ev.at_hours && weight > 0.0 {
+                self.stall_gpu_hours +=
+                    weight * self.stall_gpus as f64 * (stall_end - ev.at_hours);
+            }
+            if reveal >= ev.recover_at_hours || reveal >= self.source.horizon_hours() {
+                return; // healed (or horizon passed) before anyone noticed
+            }
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Delayed {
+            reveal,
+            seq,
+            ev: FailureEvent { at_hours: reveal, ..ev },
+        });
+    }
+}
+
+impl<S: EventSource> EventSource for DelayedEvents<S> {
+    fn horizon_hours(&self) -> f64 {
+        self.source.horizon_hours()
+    }
+
+    fn next_event(&mut self) -> Option<FailureEvent> {
+        loop {
+            if self.pending_src.is_none() && !self.source_done {
+                self.pending_src = self.source.next_event();
+                self.source_done = self.pending_src.is_none();
+            }
+            let front_reveal = self.heap.peek().map(|d| d.reveal);
+            match (front_reveal, &self.pending_src) {
+                // The buffered front cannot be preempted: every source
+                // event still unseen arrives at ≥ the lookahead's
+                // `at_hours`, and reveals never precede arrivals.
+                (Some(reveal), Some(src)) if reveal <= src.at_hours => {
+                    return self.heap.pop().map(|d| d.ev);
+                }
+                (_, Some(_)) => {
+                    let ev = self.pending_src.take().expect("lookahead present");
+                    self.intake(ev);
+                }
+                (Some(_), None) => return self.heap.pop().map(|d| d.ev),
+                (None, None) => return None,
+            }
+        }
+    }
+
+    fn detect_stall_gpu_hours(&self) -> f64 {
+        self.stall_gpu_hours
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: f64, gpu: usize, recover: f64, kind: EventKind) -> FailureEvent {
+        FailureEvent { at_hours: at, gpu, is_hw: true, recover_at_hours: recover, kind }
+    }
+
+    fn drain<S: EventSource>(mut s: DelayedEvents<S>) -> (Vec<FailureEvent>, f64) {
+        let mut out = Vec::new();
+        while let Some(e) = s.next_event() {
+            out.push(e);
+        }
+        let stall = s.stall_gpu_hours();
+        (out, stall)
+    }
+
+    #[test]
+    fn instant_model_is_a_bitwise_passthrough() {
+        let trace = Trace {
+            horizon_hours: 100.0,
+            events: vec![
+                ev(1.0, 3, 10.0, EventKind::Fail),
+                ev(2.0, 7, 4.0, EventKind::Degrade { slowdown: 0.5 }),
+                ev(5.0, 1, 9.0, EventKind::Sdc { corrupt_at_hours: 3.0 }),
+            ],
+        };
+        let model = DetectionModel::instant();
+        assert!(model.is_instant());
+        assert_eq!(DetectionModel::fingerprint(&Some(model)), 0);
+        assert_eq!(DetectionModel::fingerprint(&None), 0);
+        let (out, stall) =
+            drain(DelayedEvents::new(TraceCursor::new(&trace), model, 32));
+        assert_eq!(stall, 0.0);
+        assert_eq!(out.len(), trace.events.len());
+        for (a, b) in out.iter().zip(&trace.events) {
+            assert_eq!(a.at_hours.to_bits(), b.at_hours.to_bits());
+            assert_eq!(a.gpu, b.gpu);
+            assert_eq!(a.recover_at_hours.to_bits(), b.recover_at_hours.to_bits());
+        }
+    }
+
+    #[test]
+    fn latency_shifts_and_reorders_against_sdc() {
+        // A fail at t=1 with 2h latency reveals at t=3; an SDC at t=2
+        // passes through unshifted and must be emitted FIRST.
+        let trace = Trace {
+            horizon_hours: 100.0,
+            events: vec![
+                ev(1.0, 0, 50.0, EventKind::Fail),
+                ev(2.0, 1, 50.0, EventKind::Sdc { corrupt_at_hours: 1.5 }),
+            ],
+        };
+        let model = DetectionModel {
+            fail_latency_hours: 2.0,
+            ..DetectionModel::instant()
+        };
+        assert!(!model.is_instant());
+        assert_ne!(DetectionModel::fingerprint(&Some(model)), 0);
+        let (out, stall) =
+            drain(DelayedEvents::new(TraceCursor::new(&trace), model, 4));
+        assert_eq!(out.len(), 2);
+        assert!(matches!(out[0].kind, EventKind::Sdc { .. }));
+        assert_eq!(out[0].at_hours, 2.0);
+        assert!(matches!(out[1].kind, EventKind::Fail));
+        assert_eq!(out[1].at_hours, 3.0);
+        assert_eq!(out[1].recover_at_hours, 50.0);
+        // Undetected window: [1, 3) × 4 wedged GPUs (Fail gates the
+        // whole job at weight 1) = 8 GPU-hours.
+        assert_eq!(stall, 8.0);
+        // Output stays sorted.
+        assert!(out.windows(2).all(|w| w[0].at_hours <= w[1].at_hours));
+    }
+
+    #[test]
+    fn healed_before_detection_is_dropped_but_billed() {
+        // Degrade heals at t=2, detection would land at t=4: the
+        // manager never sees it; the whole outage is stall.
+        let trace = Trace {
+            horizon_hours: 100.0,
+            events: vec![ev(1.0, 5, 2.0, EventKind::Degrade { slowdown: 0.7 })],
+        };
+        let model = DetectionModel {
+            degrade_latency_hours: 3.0,
+            ..DetectionModel::instant()
+        };
+        let (out, stall) =
+            drain(DelayedEvents::new(TraceCursor::new(&trace), model, 8));
+        assert!(out.is_empty());
+        // [1, 2) × 8 GPUs × the straggler's (1 − 0.7) drag.
+        assert_eq!(stall, (1.0 - 0.7) * 8.0);
+    }
+
+    #[test]
+    fn delay_trace_matches_streaming_adapter() {
+        let trace = Trace {
+            horizon_hours: 48.0,
+            events: vec![
+                ev(0.5, 2, 30.0, EventKind::Fail),
+                ev(1.0, 9, 1.2, EventKind::Fail),
+                ev(6.0, 4, 20.0, EventKind::Degrade { slowdown: 0.4 }),
+                ev(40.0, 7, 80.0, EventKind::Fail),
+            ],
+        };
+        let model = DetectionModel {
+            fail_latency_hours: 0.5,
+            degrade_latency_hours: 1.5,
+            false_positives_per_gpu_day: 0.01,
+            jitter_frac: 1.0,
+        };
+        let (materialized, stall_m) = model.delay_trace(&trace, 16);
+        let (streamed, stall_s) =
+            drain(DelayedEvents::new(TraceCursor::new(&trace), model, 16));
+        assert_eq!(stall_m.to_bits(), stall_s.to_bits());
+        assert_eq!(materialized.events.len(), streamed.len());
+        for (a, b) in materialized.events.iter().zip(&streamed) {
+            assert_eq!(a.at_hours.to_bits(), b.at_hours.to_bits());
+            assert_eq!(a.gpu, b.gpu);
+        }
+        // The second fail (heals at 1.2, reveal ≥ 1.2 only if its
+        // jittered latency ≥ 0.2 — either way the survivors are sorted
+        // and in-horizon).
+        assert!(materialized
+            .events
+            .windows(2)
+            .all(|w| w[0].at_hours <= w[1].at_hours));
+        assert!(materialized
+            .events
+            .iter()
+            .all(|e| e.at_hours < trace.horizon_hours
+                && e.at_hours < e.recover_at_hours));
+        // Jitter is deterministic: a second pass is bit-identical.
+        let (again, stall_again) = model.delay_trace(&trace, 16);
+        assert_eq!(stall_again.to_bits(), stall_m.to_bits());
+        assert_eq!(again.events.len(), materialized.events.len());
+    }
+
+    #[test]
+    fn false_positive_expectation_scales_with_fleet_and_horizon() {
+        let model = DetectionModel {
+            false_positives_per_gpu_day: 0.5,
+            ..DetectionModel::instant()
+        };
+        assert_eq!(model.false_positive_events(100, 48.0), 100.0);
+        assert!(!model.is_instant());
+        assert_eq!(DetectionModel::instant().false_positive_events(100, 48.0), 0.0);
+    }
+}

@@ -5,6 +5,7 @@
 //! degraded-but-alive stragglers, silent data corruption).
 
 pub mod blast;
+pub mod detect;
 pub mod rates;
 pub mod replayer;
 pub mod scenario;
@@ -12,6 +13,7 @@ pub mod stream;
 pub mod trace;
 
 pub use blast::BlastRadius;
+pub use detect::{DelayedEvents, DetectionModel};
 pub use rates::{CorrelatedRates, FailureModel, SdcRates, StragglerRates};
 pub use replayer::{EventSource, FleetReplayer, ReplayCore, TraceCursor};
 pub use scenario::{generate_scenario, sample_failed_gpus, Scenario, ScenarioConfig, ScenarioKind};

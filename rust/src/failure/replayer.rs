@@ -92,6 +92,13 @@ pub trait EventSource {
     fn horizon_hours(&self) -> f64;
     /// The next event in time order, `None` once exhausted.
     fn next_event(&mut self) -> Option<FailureEvent>;
+    /// Undetected-stall bill accumulated by a detection-latency adapter
+    /// ([`super::detect::DelayedEvents`]), GPU-hours; `0` for raw
+    /// sources (instant detection). Complete only once the source is
+    /// exhausted — drain before reading.
+    fn detect_stall_gpu_hours(&self) -> f64 {
+        0.0
+    }
 }
 
 /// [`EventSource`] over a materialized `&Trace`.
@@ -472,6 +479,27 @@ impl<S: EventSource> ReplayCore<S> {
     /// `split_job_spares` derives by scanning the tail slice.
     pub fn live_spare_domains(&self) -> usize {
         self.tail_full
+    }
+
+    /// Live spares among the LAST `cold_domains` domains (the
+    /// fleet-wide cold tier of a hierarchical pool) — the same count
+    /// `split_job_spares` derives from the tail's cold suffix. O(cold)
+    /// per call; cold pools are small, so the incremental sweep scans
+    /// rather than maintaining another aggregate.
+    pub fn live_cold_spare_domains(&self, cold_domains: usize) -> usize {
+        let n_domains = self.fleet.topo.n_domains();
+        debug_assert!(cold_domains <= n_domains - self.n_job);
+        let ds = self.fleet.topo.domain_size;
+        (n_domains - cold_domains..n_domains)
+            .filter(|&d| self.fleet.domain_healthy(d) == ds)
+            .count()
+    }
+
+    /// Undetected-stall bill of a detection-latency source adapter
+    /// (GPU-hours; `0` for raw sources). Complete only after
+    /// [`ReplayCore::drain_source`].
+    pub fn detect_stall_gpu_hours(&self) -> f64 {
+        self.source.detect_stall_gpu_hours()
     }
 
     /// Job domains with at least one degraded-and-alive GPU.

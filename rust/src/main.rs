@@ -18,11 +18,12 @@ use ntp::cluster::Topology;
 use ntp::config::{presets, Dtype, WorkloadConfig};
 use ntp::failure::{
     generate_scenario, sample_failed_gpus, scenario::scenario_from_failed, BlastRadius,
-    EventKind, FailureModel, ScenarioConfig, ScenarioKind, Trace, TrialGen,
+    DetectionModel, EventKind, FailureModel, ScenarioConfig, ScenarioKind, Trace, TrialGen,
 };
 use ntp::manager::{
     FleetStats, MemoStats, MultiPolicySim, ResponseMemo, SparePolicy, StepMode, StrategyTable,
 };
+use ntp::util::stats::Welford;
 use ntp::ntp::{ReshardPlan, ShardMap};
 use ntp::parallel::{best_config, ParallelConfig};
 use ntp::policy::{registry, reshard_transition_secs_over, PolicyCtx, TransitionCosts};
@@ -87,12 +88,19 @@ USAGE: ntp <subcommand> [options]
                 --dp 128
   fleet         --strategy dp-drop,ntp,ntp-pw,ckpt-restart,spare-mig,
                 lowpri-donate,partial-restart,power-spares,ckpt-adaptive,
-                straggler-evict,straggler-tolerate
+                straggler-evict,straggler-tolerate,elastic-dp
                 (comma-separated list, evaluated in ONE shared trace sweep;
                 LOWPRI-DONATE/POWER-SPARES report the secondary channel in
                 the 'donated' column; STRAGGLER-* differ only on degraded
-                snapshots, i.e. under --scenario straggler)
+                snapshots, i.e. under --scenario straggler; ELASTIC-DP
+                shrinks/grows the DP world at event boundaries and bills
+                live rejoins as peer-to-peer state transfer)
                 --days 15 [--spares N] (fixed minibatch with N spare domains)
+                [--cold-spares C] (the last C of the pool are fleet-wide
+                cold spares billed at --cold-load-secs; requires a pool
+                via --spares, C <= total) | [--warm-spares W] (alternative
+                pool spelling: total = W + C warm/cold tiers; conflicts
+                with --spares)
                 [--replicas 16] [--rate-x 10] [--json] [--no-transitions]
                 [--scenario independent|correlated|straggler|sdc] plus the
                 generator knobs listed under `trace` (--corr-x,
@@ -121,12 +129,30 @@ USAGE: ntp <subcommand> [options]
                 [--spare-load-secs 300] [--reshard-secs <modeled>]
                 [--reshard-gbs <NVLink GB/s for the reshard model>]
                 [--ckpt-write-secs 120] [--power-ramp-secs 60]
+                [--cold-load-secs 1800] (cold-tier spare bring-up)
+                [--preempt-secs 0] (low-priority preemption latency each
+                donated GPU pays when LOWPRI-DONATE reclaims it)
+                [--rejoin-secs <modeled>] (ELASTIC-DP live-rejoin bill
+                per recovered domain; default is the modeled
+                peer-to-peer state-transfer time over the CopyPlan)
                 [--failure-rate <events/hour, overrides the observed rate
                 CKPT-ADAPTIVE optimizes its Young/Daly interval against>]
                 [--validation-sweep-secs S] (periodic SDC validation
                 stall: S seconds per GPU per sweep, amortized over the
                 --validation-hours cadence and billed over the whole
                 horizon; default 0 = validation is free)
+                imperfect failure detection (default: detection is
+                instant and perfect — bit-identical to earlier builds):
+                [--detect-latency S] (mean seconds from a failure to the
+                manager seeing it; an undetected hard failure wedges
+                the whole job for the window — billed as rollback
+                stall — and an undetected straggler gates it at the
+                straggler's speed)
+                [--degrade-detect-latency S] (same for Degrade events —
+                stragglers hide longer; defaults to --detect-latency)
+                [--false-positive-rate R] (false alarms per GPU-day;
+                each charges the policy's false-positive bill, e.g.
+                STRAGGLER-EVICT evicts + re-admits a healthy domain)
   sweep         --clusters paper-32k-nvl32[,paper-100k-nvl72,...]
                 --rate-x 1,2,5,10,20 --spares 0,2,4,6,8
                 --scen-x 0.5,1,2,4 (scenario-generator rate multipliers)
@@ -477,7 +503,12 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let days = args.f64_or("days", 15.0);
     // `--spares N` switches to fixed-minibatch mode with N spare
     // domains; omitting it runs the flexible-minibatch semantics.
-    let spares = args.opt_usize("spares");
+    // `--warm-spares W` [+ `--cold-spares C`] is the two-tier spelling
+    // (total = W + C); `--cold-spares` alone carves the cold tier out
+    // of an explicit `--spares` total.
+    let spares_flag = args.opt_usize("spares");
+    let warm_spares = args.opt_usize("warm-spares");
+    let cold_spares = args.opt_usize("cold-spares");
     let n_replicas = args.usize_or("replicas", 16);
     let rate_x = args.f64_or("rate-x", 10.0);
     let seed = args.u64_or("seed", 5);
@@ -510,8 +541,19 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let reshard_gbs = args.opt_f64("reshard-gbs");
     let ckpt_write_secs = args.opt_f64("ckpt-write-secs");
     let power_ramp_secs = args.opt_f64("power-ramp-secs");
+    let cold_load_secs = args.opt_f64("cold-load-secs");
+    let preempt_secs = args.opt_f64("preempt-secs");
+    let rejoin_secs = args.opt_f64("rejoin-secs");
     let failure_rate = args.opt_f64("failure-rate");
     let validation_sweep_secs = args.opt_f64("validation-sweep-secs");
+    // Imperfect detection knobs (seconds / per-GPU-day). Deliberately
+    // NOT in the --no-transitions conflict list: delaying when the
+    // replayer sees events changes the observed stats even with cost
+    // billing disabled (the stall/false-positive *bills* ride the
+    // transition channel and vanish with it).
+    let detect_latency = args.opt_f64("detect-latency");
+    let degrade_detect_latency = args.opt_f64("degrade-detect-latency");
+    let false_positive_rate = args.opt_f64("false-positive-rate");
     // Scenario diversity: which failure process the trace generator
     // draws from (independent per-GPU Poisson by default).
     let scen = scenario_from_args(args)?;
@@ -526,6 +568,9 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
                 reshard_gbs,
                 ckpt_write_secs,
                 power_ramp_secs,
+                cold_load_secs,
+                preempt_secs,
+                rejoin_secs,
                 failure_rate,
                 validation_sweep_secs,
             ]
@@ -533,8 +578,59 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
             .any(|o| o.is_some())),
         "--no-transitions conflicts with transition-cost flags \
          (--restart-secs/--ckpt-interval/--spare-load-secs/--reshard-secs/--reshard-gbs/\
-          --ckpt-write-secs/--power-ramp-secs/--failure-rate/--validation-sweep-secs)"
+          --ckpt-write-secs/--power-ramp-secs/--cold-load-secs/--preempt-secs/\
+          --rejoin-secs/--failure-rate/--validation-sweep-secs)"
     );
+    anyhow::ensure!(
+        !(spares_flag.is_some() && warm_spares.is_some()),
+        "--spares (total pool) and --warm-spares (tiered spelling) conflict; \
+         pass one or the other"
+    );
+    anyhow::ensure!(
+        !(cold_spares.is_some() && spares_flag.is_none() && warm_spares.is_none()),
+        "--cold-spares needs a pool: pass --spares TOTAL (cold carved from it) \
+         or --warm-spares W (total = W + C)"
+    );
+    let spares: Option<usize> = match (spares_flag, warm_spares) {
+        (Some(total), None) => Some(total),
+        (None, Some(w)) => Some(w + cold_spares.unwrap_or(0)),
+        (None, None) => None,
+        (Some(_), Some(_)) => unreachable!("rejected above"),
+    };
+    let cold_domains = cold_spares.unwrap_or(0);
+    if let Some(total) = spares {
+        anyhow::ensure!(
+            cold_domains <= total,
+            "--cold-spares ({cold_domains}) exceeds the spare pool total ({total})"
+        );
+    }
+    anyhow::ensure!(
+        [detect_latency, degrade_detect_latency, false_positive_rate]
+            .iter()
+            .flatten()
+            .all(|&v| v >= 0.0),
+        "detection knobs (--detect-latency/--degrade-detect-latency/--false-positive-rate) \
+         must be non-negative"
+    );
+    // None (no flag) and an all-zero model are both instant-perfect
+    // detection; DetectionModel::active treats them identically, so
+    // either spelling reproduces the pre-detection results bit-for-bit.
+    let detect = if detect_latency.is_some()
+        || degrade_detect_latency.is_some()
+        || false_positive_rate.is_some()
+    {
+        let fail_h = detect_latency.unwrap_or(0.0) / 3600.0;
+        Some(DetectionModel {
+            fail_latency_hours: fail_h,
+            degrade_latency_hours: degrade_detect_latency
+                .map(|s| s / 3600.0)
+                .unwrap_or(fail_h),
+            false_positives_per_gpu_day: false_positive_rate.unwrap_or(0.0),
+            jitter_frac: 0.0,
+        })
+    } else {
+        None
+    };
     anyhow::ensure!(
         validation_sweep_secs.map(|s| s >= 0.0).unwrap_or(true),
         "--validation-sweep-secs must be non-negative"
@@ -630,6 +726,15 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         if let Some(s) = power_ramp_secs {
             t.power_ramp_secs = s;
         }
+        if let Some(s) = cold_load_secs {
+            t.cold_spare_load_secs = s;
+        }
+        if let Some(s) = preempt_secs {
+            t.preempt_secs = s;
+        }
+        if let Some(s) = rejoin_secs {
+            t.rejoin_secs = s;
+        }
         if let Some(r) = failure_rate {
             t.failure_rate_per_hour = r;
         }
@@ -652,20 +757,27 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         table: &table,
         domains_per_replica: cfg.pp,
         policies: &policies,
-        spares: spares.map(|s| SparePolicy { spare_domains: s, min_tp }),
+        spares: spares.map(|s| SparePolicy { spare_domains: s, cold_domains, min_tp }),
         packed: true,
         blast: BlastRadius::Single,
         transition,
+        detect,
     };
-    let (per_trial, memo) = if stream {
-        msim.run_trials_stream_par(&gen, mode, threads)
+    // Streaming keeps O(1) memory per trial, so per-trial stats are
+    // never stored: fold them into per-policy aggregates (plain sums
+    // for means + Welford moments for the CI). The stored path keeps
+    // per-trial stats and derives the same numbers from them.
+    let (per_trial, stream_agg, memo) = if stream {
+        let (agg, memo) = msim.run_trials_stream_agg_par(&gen, mode, threads);
+        (Vec::new(), Some(agg), memo)
     } else {
-        msim.run_trials_par(&traces, mode, threads)
+        let (per_trial, memo) = msim.run_trials_par(&traces, mode, threads);
+        (per_trial, None, memo)
     };
 
     let mut out = Table::new(&[
-        "policy", "mean tput", "net tput", "tput/GPU", "paused", "downtime", "donated",
-        "spares used", "transitions",
+        "policy", "mean tput", "±95%", "net tput", "tput/GPU", "paused", "downtime",
+        "donated", "spares used", "transitions",
     ]);
     let mut rep = JsonReport::new("fleet");
     rep.scalar("days", days);
@@ -676,6 +788,12 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     scenario_report(&mut rep, &scen);
     rep.scalar("replicas", n_replicas as f64);
     rep.scalar("spares", spares.unwrap_or(0) as f64);
+    rep.scalar("cold_spares", cold_domains as f64);
+    if let Some(d) = &detect {
+        rep.scalar("detect_latency_secs", d.fail_latency_hours * 3600.0);
+        rep.scalar("degrade_detect_latency_secs", d.degrade_latency_hours * 3600.0);
+        rep.scalar("false_positive_rate_per_gpu_day", d.false_positives_per_gpu_day);
+    }
     rep.scalar("n_gpus", topo.n_gpus as f64);
     rep.scalar("trials", trials as f64);
     rep.scalar("threads", threads as f64);
@@ -693,23 +811,62 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         rep.scalar("validation_sweep_secs_per_hour", t.validation_sweep_secs);
     }
     // Per-policy Monte-Carlo means over the trial batch (for
-    // --trials 1 these are exactly the single trace's stats).
+    // --trials 1 these are exactly the single trace's stats). The
+    // stream path never stored per-trial stats, so it reads the same
+    // numbers off the fold-as-you-go aggregates; both paths report a
+    // Welford 95% CI on mean throughput without re-walking trials.
     let n = per_trial.len() as f64;
     let mean_over = |f: &dyn Fn(&FleetStats) -> f64, pi: usize| -> f64 {
         per_trial.iter().map(|trial| f(&trial[pi])).sum::<f64>() / n
     };
     for (pi, policy) in policies.iter().enumerate() {
-        let mean_tput = mean_over(&|s| s.mean_throughput, pi);
-        let net_tput = mean_over(&|s| s.net_throughput(), pi);
-        let tput_per_gpu = mean_over(&|s| s.throughput_per_gpu, pi);
-        let paused = mean_over(&|s| s.paused_frac, pi);
-        let downtime = mean_over(&|s| s.downtime_frac, pi);
-        let donated = mean_over(&|s| s.mean_donated, pi);
-        let spares_used = mean_over(&|s| s.mean_spares_used, pi);
-        let transitions = mean_over(&|s| s.transitions as f64, pi);
+        let (
+            mean_tput,
+            net_tput,
+            tput_per_gpu,
+            paused,
+            downtime,
+            donated,
+            spares_used,
+            transitions,
+            tput_ci95,
+        ) = match &stream_agg {
+            Some(agg) => {
+                let a = &agg[pi];
+                (
+                    a.mean_tput(),
+                    a.mean_net_tput(),
+                    a.mean_tput_per_gpu(),
+                    a.mean_paused_frac(),
+                    a.mean_downtime_frac(),
+                    a.mean_donated(),
+                    a.mean_spares_used(),
+                    a.mean_transitions(),
+                    a.tput_ci95(),
+                )
+            }
+            None => {
+                let mut w = Welford::default();
+                for trial in &per_trial {
+                    w.push(trial[pi].mean_throughput);
+                }
+                (
+                    mean_over(&|s| s.mean_throughput, pi),
+                    mean_over(&|s| s.net_throughput(), pi),
+                    mean_over(&|s| s.throughput_per_gpu, pi),
+                    mean_over(&|s| s.paused_frac, pi),
+                    mean_over(&|s| s.downtime_frac, pi),
+                    mean_over(&|s| s.mean_donated, pi),
+                    mean_over(&|s| s.mean_spares_used, pi),
+                    mean_over(&|s| s.transitions as f64, pi),
+                    w.ci95(),
+                )
+            }
+        };
         out.row(&[
             policy.name().into(),
             f4(mean_tput),
+            f4(tput_ci95),
             f4(net_tput),
             f4(tput_per_gpu),
             pct(paused),
@@ -724,6 +881,7 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         ]);
         let key = policy.name().to_ascii_lowercase().replace('-', "_");
         rep.scalar(&format!("{key}_mean_tput"), mean_tput);
+        rep.scalar(&format!("{key}_tput_ci95"), tput_ci95);
         rep.scalar(&format!("{key}_net_tput"), net_tput);
         rep.scalar(&format!("{key}_tput_per_gpu"), tput_per_gpu);
         rep.scalar(&format!("{key}_paused_frac"), paused);
@@ -837,10 +995,11 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
                         table: &table,
                         domains_per_replica: cfg.pp,
                         policies: &policies,
-                        spares: Some(SparePolicy { spare_domains, min_tp }),
+                        spares: Some(SparePolicy { spare_domains, cold_domains: 0, min_tp }),
                         packed: true,
                         blast: BlastRadius::Single,
                         transition: Some(costs),
+                        detect: None,
                     };
                     let per_trial =
                         msim.run_trials_stream(&gen, StepMode::Exact, &mut memo);

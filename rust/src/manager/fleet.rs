@@ -15,7 +15,7 @@
 
 use super::spares::SparePolicy;
 use crate::cluster::Topology;
-use crate::failure::{BlastRadius, EventKind, FleetReplayer, Trace};
+use crate::failure::{BlastRadius, DetectionModel, EventKind, FleetReplayer, Trace};
 use crate::parallel::ParallelConfig;
 use crate::policy::{EvalOut, FtPolicy, PolicyCtx, TransitionCosts};
 use crate::power::{min_boost_for, BoostDecision, RackDesign};
@@ -339,6 +339,14 @@ pub struct FleetSim<'a> {
     /// free (the pre-policy-layer model, and the setting under which
     /// the legacy ports are bit-identical to the old `FtStrategy` paths).
     pub transition: Option<TransitionCosts>,
+    /// Imperfect failure detection: when active, the trace is first
+    /// materialized through [`DetectionModel::delay_trace`] — the
+    /// policy sweeps the *detected* view, undetected stall is billed
+    /// through the rollback channel, and the expected false-positive
+    /// evictions are charged via
+    /// [`FtPolicy::false_positive_cost`]. `None` (or the all-zero
+    /// model) is bit-identical to the pre-detection path.
+    pub detect: Option<DetectionModel>,
 }
 
 impl<'a> FleetSim<'a> {
@@ -359,9 +367,16 @@ impl<'a> FleetSim<'a> {
     /// previous evaluation verbatim via
     /// [`crate::cluster::FleetHealth::version`]).
     pub fn run(&self, trace: &Trace, mode: StepMode) -> FleetStats {
+        if let Some(d) = DetectionModel::active(&self.detect) {
+            let (seen, stall) = d.delay_trace(trace, self.topo.n_gpus);
+            return match mode {
+                StepMode::Exact => self.run_exact(&seen, &[], stall),
+                StepMode::Grid(step_hours) => self.run_grid(&seen, step_hours, stall),
+            };
+        }
         match mode {
-            StepMode::Exact => self.run_exact(trace, &[]),
-            StepMode::Grid(step_hours) => self.run_grid(trace, step_hours),
+            StepMode::Exact => self.run_exact(trace, &[], 0.0),
+            StepMode::Grid(step_hours) => self.run_grid(trace, step_hours, 0.0),
         }
     }
 
@@ -373,10 +388,14 @@ impl<'a> FleetSim<'a> {
     /// state already live and contributes nothing — the invariance
     /// property `rust/tests/exact_integration.rs` pins.
     pub fn run_exact_with_refinement(&self, trace: &Trace, extra: &[f64]) -> FleetStats {
-        self.run_exact(trace, extra)
+        if let Some(d) = DetectionModel::active(&self.detect) {
+            let (seen, stall) = d.delay_trace(trace, self.topo.n_gpus);
+            return self.run_exact(&seen, extra, stall);
+        }
+        self.run_exact(trace, extra, 0.0)
     }
 
-    fn run_exact(&self, trace: &Trace, extra: &[f64]) -> FleetStats {
+    fn run_exact(&self, trace: &Trace, extra: &[f64], stall_gpu_hours: f64) -> FleetStats {
         assert!(
             extra.windows(2).all(|w| w[0] <= w[1]),
             "refinement times must be sorted ascending"
@@ -434,10 +453,10 @@ impl<'a> FleetSim<'a> {
             }
         }
         acc.sample(out, horizon - seg_start);
-        self.integrate_with_rollback(acc, trace)
+        self.integrate_with_rollback(acc, trace, stall_gpu_hours)
     }
 
-    fn run_grid(&self, trace: &Trace, step_hours: f64) -> FleetStats {
+    fn run_grid(&self, trace: &Trace, step_hours: f64, stall_gpu_hours: f64) -> FleetStats {
         let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
         let mut acc = Accum::default();
         let mut last: Option<(u64, EvalOut)> = None;
@@ -468,7 +487,7 @@ impl<'a> FleetSim<'a> {
             acc.sample(out, dt);
             step += 1;
         }
-        self.integrate_with_rollback(acc, trace)
+        self.integrate_with_rollback(acc, trace, stall_gpu_hours)
     }
 
     /// Reference implementation of [`FleetSim::run`]: rebuild the fleet
@@ -478,13 +497,20 @@ impl<'a> FleetSim<'a> {
     /// (benches/perf_hotpath.rs) the event-driven path's equivalence
     /// and speedup.
     pub fn run_replay_per_step(&self, trace: &Trace, mode: StepMode) -> FleetStats {
+        if let Some(d) = DetectionModel::active(&self.detect) {
+            let (seen, stall) = d.delay_trace(trace, self.topo.n_gpus);
+            return match mode {
+                StepMode::Exact => self.run_exact_per_step(&seen, stall),
+                StepMode::Grid(step_hours) => self.run_grid_per_step(&seen, step_hours, stall),
+            };
+        }
         match mode {
-            StepMode::Exact => self.run_exact_per_step(trace),
-            StepMode::Grid(step_hours) => self.run_grid_per_step(trace, step_hours),
+            StepMode::Exact => self.run_exact_per_step(trace, 0.0),
+            StepMode::Grid(step_hours) => self.run_grid_per_step(trace, step_hours, 0.0),
         }
     }
 
-    fn run_grid_per_step(&self, trace: &Trace, step_hours: f64) -> FleetStats {
+    fn run_grid_per_step(&self, trace: &Trace, step_hours: f64, stall_gpu_hours: f64) -> FleetStats {
         let mut acc = Accum::default();
         let mut prev_counts: Vec<usize> = Vec::new();
         let mut prev_degraded: Vec<usize> = Vec::new();
@@ -509,10 +535,10 @@ impl<'a> FleetSim<'a> {
             );
             step += 1;
         }
-        self.integrate_with_rollback(acc, trace)
+        self.integrate_with_rollback(acc, trace, stall_gpu_hours)
     }
 
-    fn run_exact_per_step(&self, trace: &Trace) -> FleetStats {
+    fn run_exact_per_step(&self, trace: &Trace, stall_gpu_hours: f64) -> FleetStats {
         let horizon = trace.horizon_hours;
         let mut acc = Accum::default();
         if horizon <= 0.0 {
@@ -549,7 +575,7 @@ impl<'a> FleetSim<'a> {
             }
         }
         acc.sample(out, horizon - seg_start);
-        self.integrate_with_rollback(acc, trace)
+        self.integrate_with_rollback(acc, trace, stall_gpu_hours)
     }
 
     /// Close one observed change boundary: charge whichever transition
@@ -593,7 +619,12 @@ impl<'a> FleetSim<'a> {
     /// funnels through here so all add the identical `f64`. Free when
     /// reconfigurations are free (`transition: None`), like every other
     /// downtime charge.
-    fn integrate_with_rollback(&self, mut acc: Accum, trace: &Trace) -> FleetStats {
+    fn integrate_with_rollback(
+        &self,
+        mut acc: Accum,
+        trace: &Trace,
+        stall_gpu_hours: f64,
+    ) -> FleetStats {
         if let Some(costs) = &self.transition {
             let bill = sdc_rollback_gpu_secs(trace, costs, self.topo.n_gpus);
             if bill > 0.0 {
@@ -606,6 +637,25 @@ impl<'a> FleetSim<'a> {
                 validation_sweep_gpu_secs(costs, trace.horizon_hours, self.topo.n_gpus);
             if sweep_bill > 0.0 {
                 acc.charge_rollback(sweep_bill);
+            }
+            // Undetected-stall bill from the detection-delay view
+            // ([`DetectionModel::delay_trace`]): GPU-hours faulty
+            // domains sat live-but-unnoticed. Third in the billing
+            // order, identical in `MultiPolicySim::charge_rollback_all`.
+            if stall_gpu_hours > 0.0 {
+                acc.charge_rollback(stall_gpu_hours * 3600.0);
+            }
+            // Expected false-positive evictions, priced by the policy
+            // against the *configured* pool — an expected-value bill
+            // like the validation sweep, via `charge_rollback` so the
+            // `transitions` counter keeps counting only real
+            // reconfigurations.
+            if let Some(d) = DetectionModel::active(&self.detect) {
+                let fp = d.false_positive_events(self.topo.n_gpus, trace.horizon_hours);
+                let fp_bill = fp * self.policy.false_positive_cost(&self.ctx(self.spares));
+                if fp_bill > 0.0 {
+                    acc.charge_rollback(fp_bill);
+                }
             }
         }
         self.integrate(acc)
@@ -909,6 +959,7 @@ mod tests {
             packed: true,
             blast: BlastRadius::Single,
             transition: None,
+            detect: None,
         };
         let stats = fs.run(&trace, StepMode::Grid(6.0));
         assert!(stats.mean_throughput > 0.5 && stats.mean_throughput <= 1.0);
@@ -985,6 +1036,7 @@ mod tests {
                     packed: true,
                     blast: BlastRadius::Single,
                     transition: None,
+                    detect: None,
                 };
                 assert_eq!(
                     fs.run(&trace, mode),
@@ -997,10 +1049,11 @@ mod tests {
                 table: &table,
                 domains_per_replica: cfg.pp,
                 policy: FtStrategy::Ntp.policy(),
-                spares: Some(SparePolicy { spare_domains: 4, min_tp: 28 }),
+                spares: Some(SparePolicy { spare_domains: 4, cold_domains: 0, min_tp: 28 }),
                 packed: true,
                 blast: BlastRadius::Node,
                 transition: None,
+                detect: None,
             };
             assert_eq!(fs.run(&trace, mode), fs.run_replay_per_step(&trace, mode), "{mode:?}");
             // ... and with transition costs switched on, both sweep
@@ -1034,10 +1087,11 @@ mod tests {
             table: &table,
             domains_per_replica: 4,
             policy: crate::policy::registry::parse("spare-mig").unwrap(),
-            spares: Some(SparePolicy { spare_domains: 2, min_tp: 28 }),
+            spares: Some(SparePolicy { spare_domains: 2, cold_domains: 0, min_tp: 28 }),
             packed: true,
             blast: BlastRadius::Single,
             transition: Some(crate::policy::TransitionCosts::model(&sim, &cfg)),
+            detect: None,
         };
         let prev = vec![32usize; 18];
         // Three fresh job-domain failures, and the last spare domain
@@ -1098,6 +1152,7 @@ mod tests {
             packed: true,
             blast: BlastRadius::Single,
             transition: None,
+            detect: None,
         };
         let unpacked = FleetSim { packed: false, ..packed };
         let tp_packed = packed.evaluate(&healthy).tput;

@@ -12,4 +12,4 @@ pub mod sweep;
 pub use fleet::{FleetSim, FleetStats, StepMode, StrategyTable};
 pub use packing::{pack_domains, packed_replica_tp, Assignment};
 pub use spares::{SparePolicy, SpareOutcome};
-pub use sweep::{MemoStats, MultiPolicySim, ResponseMemo, SnapshotSig};
+pub use sweep::{MemoStats, MultiPolicySim, PolicyAggregate, ResponseMemo, SnapshotSig};

@@ -8,10 +8,23 @@
 use super::packing::{pack_domains, Assignment};
 
 /// Spare-pool configuration.
+///
+/// The pool may be *hierarchical*: `spare_domains` is the **total**
+/// reserve, of which the last `cold_domains` of the spare tail form a
+/// fleet-wide cold tier (powered-down / unprovisioned domains that take
+/// [`crate::policy::TransitionCosts::cold_spare_load_secs`] to bring
+/// up), while the leading `spare_domains − cold_domains` are warm
+/// per-row spares (loaded at the ordinary `spare_load_secs`). The tier
+/// split changes only the *transition bill* — capacity substitution is
+/// identical for both tiers, so `cold_domains: 0` (a flat, all-warm
+/// pool) reproduces the pre-tier behaviour bit-for-bit.
 #[derive(Clone, Copy, Debug)]
 pub struct SparePolicy {
-    /// Number of spare scale-up domains reserved.
+    /// Number of spare scale-up domains reserved (total: warm + cold).
     pub spare_domains: usize,
+    /// How many of those (the last `cold_domains` of the spare tail) are
+    /// fleet-wide cold spares. Must be ≤ `spare_domains`.
+    pub cold_domains: usize,
     /// Minimum TP degree NTP will run a replica at (below ⇒ replica needs
     /// a spare or drops).
     pub min_tp: usize,
@@ -72,8 +85,19 @@ pub fn split_job_spares<'h>(
     pool: &SparePolicy,
 ) -> (&'h [usize], SparePolicy) {
     let n_job = domain_healthy.len() - pool.spare_domains;
-    let live = domain_healthy[n_job..].iter().filter(|&&h| h == domain_size).count();
-    (&domain_healthy[..n_job], SparePolicy { spare_domains: live, ..*pool })
+    let tail = &domain_healthy[n_job..];
+    let live = tail.iter().filter(|&&h| h == domain_size).count();
+    // Cold tier = the last `cold_domains` of the tail; live-adjust it
+    // the same way so a failed cold spare shrinks the cold pool, not
+    // the warm one.
+    let live_cold = tail[tail.len() - pool.cold_domains..]
+        .iter()
+        .filter(|&&h| h == domain_size)
+        .count();
+    (
+        &domain_healthy[..n_job],
+        SparePolicy { spare_domains: live, cold_domains: live_cold, min_tp: pool.min_tp },
+    )
 }
 
 /// Allocation-free [`apply_spares`] for the sweep hot path: substitutes
@@ -150,7 +174,7 @@ mod tests {
     #[test]
     fn spares_fix_worst_domains_first() {
         let healthy = vec![32, 28, 31, 32, 30, 32, 32, 32];
-        let policy = SparePolicy { spare_domains: 2, min_tp: 28 };
+        let policy = SparePolicy { spare_domains: 2, cold_domains: 0, min_tp: 28 };
         let o = apply_spares(&healthy, 32, 4, &policy);
         assert_eq!(o.spares_used, 2);
         // 28 and 30 replaced; 31 remains
@@ -161,7 +185,7 @@ mod tests {
     #[test]
     fn enough_spares_restore_full_minibatch() {
         let healthy = vec![31, 32, 32, 32, 30, 32, 32, 32];
-        let policy = SparePolicy { spare_domains: 2, min_tp: 28 };
+        let policy = SparePolicy { spare_domains: 2, cold_domains: 0, min_tp: 28 };
         let o = apply_spares(&healthy, 32, 4, &policy);
         assert!(meets_minibatch(&o.assignment, 28, false));
     }
@@ -169,7 +193,7 @@ mod tests {
     #[test]
     fn without_spares_fixed_minibatch_fails() {
         let healthy = vec![31, 32, 32, 32, 32, 32, 32, 32];
-        let policy = SparePolicy { spare_domains: 0, min_tp: 28 };
+        let policy = SparePolicy { spare_domains: 0, cold_domains: 0, min_tp: 28 };
         let o = apply_spares(&healthy, 32, 4, &policy);
         assert!(!meets_minibatch(&o.assignment, 28, false));
         // ... but power boosting saves it (tp 31 >= min 28, full batch)
@@ -188,7 +212,7 @@ mod tests {
             let healthy: Vec<usize> = (0..n)
                 .map(|_| if rng.chance(0.4) { rng.index(domain_size + 1) } else { domain_size })
                 .collect();
-            let policy = SparePolicy { spare_domains: rng.index(6), min_tp: 7 };
+            let policy = SparePolicy { spare_domains: rng.index(6), cold_domains: 0, min_tp: 7 };
             let reference = apply_spares(&healthy, domain_size, 1, &policy);
             let used =
                 apply_spares_into(&healthy, domain_size, &policy, &mut effective, &mut order);
@@ -205,18 +229,38 @@ mod tests {
     #[test]
     fn spares_not_wasted_on_healthy_fleet() {
         let healthy = vec![32; 8];
-        let policy = SparePolicy { spare_domains: 4, min_tp: 28 };
+        let policy = SparePolicy { spare_domains: 4, cold_domains: 0, min_tp: 28 };
         let o = apply_spares(&healthy, 32, 4, &policy);
         assert_eq!(o.spares_used, 0);
+    }
+
+    #[test]
+    fn split_live_adjusts_each_tier_separately() {
+        // 4 job domains + 3 warm + 2 cold. One warm spare (index 5) and
+        // one cold spare (index 8, the tail's end) have failed GPUs.
+        let mut fleet = vec![32usize; 9];
+        fleet[5] = 31;
+        fleet[8] = 0;
+        let pool = SparePolicy { spare_domains: 5, cold_domains: 2, min_tp: 28 };
+        let (job, live) = split_job_spares(&fleet, 32, &pool);
+        assert_eq!(job, &fleet[..4]);
+        assert_eq!(live.spare_domains, 3); // 5 − 2 failed
+        assert_eq!(live.cold_domains, 1); // 2 − 1 failed cold
+        assert_eq!(live.min_tp, 28);
+        // Flat pool: cold tier stays empty and totals match PR-3 logic.
+        let flat = SparePolicy { spare_domains: 5, cold_domains: 0, min_tp: 28 };
+        let (_, live_flat) = split_job_spares(&fleet, 32, &flat);
+        assert_eq!(live_flat.spare_domains, 3);
+        assert_eq!(live_flat.cold_domains, 0);
     }
 
     #[test]
     fn dead_domain_needs_spare() {
         let mut healthy = vec![32; 8];
         healthy[3] = 0;
-        let none = apply_spares(&healthy, 32, 4, &SparePolicy { spare_domains: 0, min_tp: 28 });
+        let none = apply_spares(&healthy, 32, 4, &SparePolicy { spare_domains: 0, cold_domains: 0, min_tp: 28 });
         assert!(!meets_minibatch(&none.assignment, 28, true));
-        let one = apply_spares(&healthy, 32, 4, &SparePolicy { spare_domains: 1, min_tp: 28 });
+        let one = apply_spares(&healthy, 32, 4, &SparePolicy { spare_domains: 1, cold_domains: 0, min_tp: 28 });
         assert!(meets_minibatch(&one.assignment, 28, true));
     }
 }

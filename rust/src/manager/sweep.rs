@@ -49,12 +49,14 @@ use super::fleet::{grid_step, Accum, FleetStats, StepMode, StrategyTable};
 use super::spares::SparePolicy;
 use crate::cluster::Topology;
 use crate::failure::{
-    BlastRadius, EventSource, FleetReplayer, ReplayCore, Trace, TraceStream, TrialGen,
+    BlastRadius, DelayedEvents, DetectionModel, EventSource, FleetReplayer, ReplayCore, Trace,
+    TraceCursor, TraceStream, TrialGen,
 };
 use crate::policy::{
     changed_domains, degraded_domains, EvalOut, EvalScratch, FtPolicy, PolicyCtx, TransitionCosts,
 };
 use crate::util::par;
+use crate::util::stats::Welford;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::ops::Range;
@@ -213,8 +215,18 @@ struct MemoCtx {
     /// different GPU totals must not share cached responses even when
     /// every other field (and the memo key) coincides.
     n_gpus: usize,
+    /// Cold tier of the configured spare pool: the two-tier transition
+    /// bill (and the live cold-pool split) depends on it, so sweeps
+    /// differing only in the warm/cold split must not share cached
+    /// transition charges.
+    spare_cold_domains: usize,
     table_fingerprint: u64,
     transition_fingerprint: u64,
+    /// [`DetectionModel::fingerprint`] of the sweep's detection model
+    /// (`0` = instant/no detection). Detection shifts which snapshots a
+    /// sweep visits and adds model-dependent rollback bills, so memos
+    /// must not cross detection configurations.
+    detect_fingerprint: u64,
 }
 
 /// Content hash of the sweep's transition-cost model (bit patterns; `0`
@@ -230,6 +242,9 @@ fn transition_fingerprint(transition: &Option<TransitionCosts>) -> u64 {
         checkpoint_interval_secs,
         reshard_secs,
         spare_load_secs,
+        cold_spare_load_secs,
+        preempt_secs,
+        rejoin_secs,
         ckpt_write_secs,
         power_ramp_secs,
         failure_rate_per_hour,
@@ -241,6 +256,9 @@ fn transition_fingerprint(transition: &Option<TransitionCosts>) -> u64 {
         checkpoint_interval_secs,
         reshard_secs,
         spare_load_secs,
+        cold_spare_load_secs,
+        preempt_secs,
+        rejoin_secs,
         ckpt_write_secs,
         power_ramp_secs,
         failure_rate_per_hour,
@@ -334,8 +352,133 @@ struct MemoEntry {
 }
 
 /// Transition-memo key: `(policy index, changed, degraded, live spare
-/// pool, total provisioned GPUs)`.
-type TransKey = (u32, u32, u32, u32, u64);
+/// pool, total provisioned GPUs)`. The live-pool component packs the
+/// total live spares in the low half and the live *cold* spares in the
+/// high half (`u64::MAX` ⇒ no pool): the two-tier spare bill depends
+/// on the warm/cold split, not just the total.
+type TransKey = (u32, u32, u32, u64, u64);
+
+/// Pack a live spare pool into its [`TransKey`] component: total live
+/// spares in the low 32 bits, live cold spares in the high 32
+/// (`u64::MAX` ⇒ no pool configured — unreachable as a packed value,
+/// since a real pool's cold tier never exceeds its total).
+fn live_pool_key(spares: &Option<SparePolicy>) -> u64 {
+    match spares {
+        Some(pool) => pool.spare_domains as u64 | (pool.cold_domains as u64) << 32,
+        None => u64::MAX,
+    }
+}
+
+/// Constant-memory per-policy fold of a Monte-Carlo trial batch:
+/// running sums of every per-trial reporting quantity (the means the
+/// `fleet` CLI prints) plus [`Welford`] moments over per-trial mean and
+/// net throughput, for confidence intervals without storing per-trial
+/// stats. Built by [`MultiPolicySim::run_trials_stream_agg`] /
+/// [`MultiPolicySim::run_trials_stream_agg_par`].
+#[derive(Clone, Debug, Default)]
+pub struct PolicyAggregate {
+    /// Welford moments over per-trial `mean_throughput` (drives
+    /// [`PolicyAggregate::tput_ci95`]).
+    pub tput: Welford,
+    /// Welford moments over per-trial `net_throughput()`.
+    pub net_tput: Welford,
+    sum_tput: f64,
+    sum_net_tput: f64,
+    sum_tput_per_gpu: f64,
+    sum_paused_frac: f64,
+    sum_downtime_frac: f64,
+    sum_donated: f64,
+    sum_spares_used: f64,
+    sum_transitions: f64,
+}
+
+impl PolicyAggregate {
+    /// Fold one trial's stats in. Derived quantities
+    /// (`net_throughput()`, …) are computed per trial and then summed —
+    /// exactly how the CLI averages a stored per-trial vector.
+    pub fn push(&mut self, s: &FleetStats) {
+        self.tput.push(s.mean_throughput);
+        self.net_tput.push(s.net_throughput());
+        self.sum_tput += s.mean_throughput;
+        self.sum_net_tput += s.net_throughput();
+        self.sum_tput_per_gpu += s.throughput_per_gpu;
+        self.sum_paused_frac += s.paused_frac;
+        self.sum_downtime_frac += s.downtime_frac;
+        self.sum_donated += s.mean_donated;
+        self.sum_spares_used += s.mean_spares_used;
+        self.sum_transitions += s.transitions as f64;
+    }
+
+    /// Merge another batch's fold (parallel workers, batch order).
+    pub fn merge(&mut self, other: &PolicyAggregate) {
+        self.tput.merge(&other.tput);
+        self.net_tput.merge(&other.net_tput);
+        self.sum_tput += other.sum_tput;
+        self.sum_net_tput += other.sum_net_tput;
+        self.sum_tput_per_gpu += other.sum_tput_per_gpu;
+        self.sum_paused_frac += other.sum_paused_frac;
+        self.sum_downtime_frac += other.sum_downtime_frac;
+        self.sum_donated += other.sum_donated;
+        self.sum_spares_used += other.sum_spares_used;
+        self.sum_transitions += other.sum_transitions;
+    }
+
+    /// Trials folded in.
+    pub fn trials(&self) -> u64 {
+        self.tput.count()
+    }
+
+    fn mean(&self, sum: f64) -> f64 {
+        sum / self.trials().max(1) as f64
+    }
+
+    /// Mean per-trial `mean_throughput` (plain sum-over-n, matching the
+    /// stored-per-trial CLI path rather than the Welford running mean).
+    pub fn mean_tput(&self) -> f64 {
+        self.mean(self.sum_tput)
+    }
+
+    /// Mean per-trial `net_throughput()`.
+    pub fn mean_net_tput(&self) -> f64 {
+        self.mean(self.sum_net_tput)
+    }
+
+    /// Mean per-trial `throughput_per_gpu`.
+    pub fn mean_tput_per_gpu(&self) -> f64 {
+        self.mean(self.sum_tput_per_gpu)
+    }
+
+    /// Mean per-trial `paused_frac`.
+    pub fn mean_paused_frac(&self) -> f64 {
+        self.mean(self.sum_paused_frac)
+    }
+
+    /// Mean per-trial `downtime_frac`.
+    pub fn mean_downtime_frac(&self) -> f64 {
+        self.mean(self.sum_downtime_frac)
+    }
+
+    /// Mean per-trial `mean_donated`.
+    pub fn mean_donated(&self) -> f64 {
+        self.mean(self.sum_donated)
+    }
+
+    /// Mean per-trial `mean_spares_used`.
+    pub fn mean_spares_used(&self) -> f64 {
+        self.mean(self.sum_spares_used)
+    }
+
+    /// Mean per-trial reconfiguration count.
+    pub fn mean_transitions(&self) -> f64 {
+        self.mean(self.sum_transitions)
+    }
+
+    /// Half-width of the normal-approximation 95% confidence interval
+    /// on the mean throughput (`1.96·σ/√n`; `0` below two trials).
+    pub fn tput_ci95(&self) -> f64 {
+        self.tput.ci95()
+    }
+}
 
 impl ResponseMemo {
     pub fn new(n_policies: usize) -> ResponseMemo {
@@ -607,6 +750,13 @@ pub struct MultiPolicySim<'a> {
     pub packed: bool,
     pub blast: BlastRadius,
     pub transition: Option<TransitionCosts>,
+    /// Imperfect failure detection: when active (see
+    /// [`DetectionModel::active`]), every event source is wrapped in a
+    /// [`DelayedEvents`] adapter — policies see faults late, undetected
+    /// stall is billed, and the expected false-positive evictions are
+    /// charged per policy. `None` (or the all-zero model) runs the
+    /// instant-detection code path bit-for-bit.
+    pub detect: Option<DetectionModel>,
 }
 
 impl<'a> MultiPolicySim<'a> {
@@ -631,6 +781,11 @@ impl<'a> MultiPolicySim<'a> {
         mode: StepMode,
         memo: &mut ResponseMemo,
     ) -> Vec<FleetStats> {
+        if let Some(d) = DetectionModel::active(&self.detect) {
+            let src = DelayedEvents::new(TraceCursor::new(trace), *d, self.topo.n_gpus);
+            let mut rep = ReplayCore::from_source(src, self.topo, self.blast);
+            return self.sweep(&mut rep, mode, memo);
+        }
         let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
         self.sweep(&mut rep, mode, memo)
     }
@@ -648,6 +803,16 @@ impl<'a> MultiPolicySim<'a> {
         let Some(first) = traces.first() else {
             return out;
         };
+        if let Some(d) = DetectionModel::active(&self.detect) {
+            let wrap = |trace| DelayedEvents::new(TraceCursor::new(trace), *d, self.topo.n_gpus);
+            let mut rep = ReplayCore::from_source(wrap(first), self.topo, self.blast);
+            out.push(self.sweep(&mut rep, mode, memo));
+            for trace in &traces[1..] {
+                rep.reset_source(wrap(trace));
+                out.push(self.sweep(&mut rep, mode, memo));
+            }
+            return out;
+        }
         let mut rep = FleetReplayer::new(first, self.topo, self.blast);
         out.push(self.sweep(&mut rep, mode, memo));
         for trace in &traces[1..] {
@@ -721,6 +886,11 @@ impl<'a> MultiPolicySim<'a> {
         mode: StepMode,
         memo: &mut ResponseMemo,
     ) -> Vec<FleetStats> {
+        if let Some(d) = DetectionModel::active(&self.detect) {
+            let src = DelayedEvents::new(stream, *d, self.topo.n_gpus);
+            let mut rep = ReplayCore::from_source(src, self.topo, self.blast);
+            return self.sweep(&mut rep, mode, memo);
+        }
         let mut rep = ReplayCore::from_source(stream, self.topo, self.blast);
         self.sweep(&mut rep, mode, memo)
     }
@@ -747,6 +917,37 @@ impl<'a> MultiPolicySim<'a> {
         memo: &mut ResponseMemo,
     ) -> Vec<Vec<FleetStats>> {
         let mut out = Vec::with_capacity(trials.len());
+        self.for_each_trial_stream(gen, trials, mode, memo, |stats| out.push(stats));
+        out
+    }
+
+    /// Drive `f` with each trial's per-policy stats, reusing one
+    /// replayer across the whole range ([`ReplayCore::reset_source`]
+    /// keeps the fleet-health allocation — the O(1)-memory-per-trial
+    /// property the perf gate counts). The single streaming trial loop:
+    /// both the per-trial collector and the constant-memory aggregator
+    /// run through here, so they cannot drift apart.
+    fn for_each_trial_stream(
+        &self,
+        gen: &TrialGen,
+        trials: Range<usize>,
+        mode: StepMode,
+        memo: &mut ResponseMemo,
+        mut f: impl FnMut(Vec<FleetStats>),
+    ) {
+        if let Some(d) = DetectionModel::active(&self.detect) {
+            let mut rep: Option<ReplayCore<DelayedEvents<TraceStream>>> = None;
+            for trial in trials {
+                let src = DelayedEvents::new(gen.stream_for(trial), *d, self.topo.n_gpus);
+                if let Some(r) = rep.as_mut() {
+                    r.reset_source(src);
+                } else {
+                    rep = Some(ReplayCore::from_source(src, self.topo, self.blast));
+                }
+                f(self.sweep(rep.as_mut().unwrap(), mode, memo));
+            }
+            return;
+        }
         let mut rep: Option<ReplayCore<TraceStream>> = None;
         for trial in trials {
             let stream = gen.stream_for(trial);
@@ -755,9 +956,8 @@ impl<'a> MultiPolicySim<'a> {
             } else {
                 rep = Some(ReplayCore::from_source(stream, self.topo, self.blast));
             }
-            out.push(self.sweep(rep.as_mut().unwrap(), mode, memo));
+            f(self.sweep(rep.as_mut().unwrap(), mode, memo));
         }
-        out
     }
 
     /// Parallel streaming Monte-Carlo: [`MultiPolicySim::run_trials_par`]
@@ -796,6 +996,82 @@ impl<'a> MultiPolicySim<'a> {
             merged.merge(&ms);
         }
         (all, merged)
+    }
+
+    /// Streaming Monte-Carlo with **O(1) memory in the trial count**:
+    /// instead of returning per-trial stats, fold every trial into one
+    /// [`PolicyAggregate`] per policy (running sums + Welford moments).
+    /// The per-trial stats folded in are bit-identical to
+    /// [`MultiPolicySim::run_trials_stream`]'s — both run through the
+    /// same trial loop.
+    pub fn run_trials_stream_agg(
+        &self,
+        gen: &TrialGen,
+        mode: StepMode,
+        memo: &mut ResponseMemo,
+    ) -> Vec<PolicyAggregate> {
+        self.run_trials_stream_agg_range(gen, 0..gen.trials, mode, memo)
+    }
+
+    fn run_trials_stream_agg_range(
+        &self,
+        gen: &TrialGen,
+        trials: Range<usize>,
+        mode: StepMode,
+        memo: &mut ResponseMemo,
+    ) -> Vec<PolicyAggregate> {
+        let mut aggs = vec![PolicyAggregate::default(); self.policies.len()];
+        self.for_each_trial_stream(gen, trials, mode, memo, |stats| {
+            for (agg, s) in aggs.iter_mut().zip(&stats) {
+                agg.push(s);
+            }
+        });
+        aggs
+    }
+
+    /// Parallel [`MultiPolicySim::run_trials_stream_agg`]: workers fold
+    /// their own trial batches (same batch boundaries as
+    /// [`MultiPolicySim::run_trials_stream_par`]) and the per-worker
+    /// aggregates merge in batch order.
+    ///
+    /// Determinism caveat: the underlying per-trial stats stay
+    /// bit-identical at every thread count, but the *folded* sums and
+    /// Welford moments are floating-point reductions whose grouping
+    /// follows the batching — different thread counts can differ in the
+    /// last ulp. Aggregates are statistical reporting quantities, not
+    /// pinned ones; anything bit-pinned (golden traces, equivalence
+    /// suites) goes through the per-trial entry points.
+    pub fn run_trials_stream_agg_par(
+        &self,
+        gen: &TrialGen,
+        mode: StepMode,
+        threads: usize,
+    ) -> (Vec<PolicyAggregate>, MemoStats) {
+        let n = gen.trials;
+        let t = threads.max(1).min(n.max(1));
+        if t <= 1 {
+            let mut memo = self.memo();
+            let aggs = self.run_trials_stream_agg(gen, mode, &mut memo);
+            return (aggs, memo.stats());
+        }
+        let chunk = n.div_ceil(t);
+        let workers = n.div_ceil(chunk.max(1));
+        let parts = par::par_map(workers, workers, |ti| {
+            let lo = (ti * chunk).min(n);
+            let hi = ((ti + 1) * chunk).min(n);
+            let mut memo = self.memo();
+            let aggs = self.run_trials_stream_agg_range(gen, lo..hi, mode, &mut memo);
+            (aggs, memo.stats())
+        });
+        let mut merged_aggs = vec![PolicyAggregate::default(); self.policies.len()];
+        let mut merged = MemoStats::default();
+        for (aggs, ms) in parts {
+            for (m, a) in merged_aggs.iter_mut().zip(&aggs) {
+                m.merge(a);
+            }
+            merged.merge(&ms);
+        }
+        (merged_aggs, merged)
     }
 
     /// Core sweep dispatch: mirrors `FleetSim::run` operation-for-
@@ -991,6 +1267,11 @@ impl<'a> MultiPolicySim<'a> {
     /// `run_with(trace, StepMode::Exact, memo)`.
     pub fn run_rebuild(&self, trace: &Trace, memo: &mut ResponseMemo) -> Vec<FleetStats> {
         memo.bind(self.memo_ctx(), self.policies);
+        if let Some(d) = DetectionModel::active(&self.detect) {
+            let src = DelayedEvents::new(TraceCursor::new(trace), *d, self.topo.n_gpus);
+            let mut rep = ReplayCore::from_source(src, self.topo, self.blast);
+            return self.sweep_exact_rebuild(&mut rep, memo);
+        }
         let mut rep = FleetReplayer::new(trace, self.topo, self.blast);
         self.sweep_exact_rebuild(&mut rep, memo)
     }
@@ -1071,10 +1352,7 @@ impl<'a> MultiPolicySim<'a> {
         let ctx = self.ctx(self.live_spares_in(next));
         let changed = changed_domains(prev, next) as u32;
         let degraded = degraded_domains(prev, next) as u32;
-        let live = match ctx.spares {
-            Some(pool) => pool.spare_domains as u32,
-            None => u32::MAX,
-        };
+        let live = live_pool_key(&ctx.spares);
         for (i, (acc, &policy)) in accs.iter_mut().zip(self.policies).enumerate() {
             let mut cost = 0.0;
             if counts_changed {
@@ -1108,9 +1386,7 @@ impl<'a> MultiPolicySim<'a> {
         let fleet = rep.fleet();
         let next = fleet.domain_healthy_counts();
         let next_degraded = fleet.domain_degraded_counts();
-        let live = self
-            .spares
-            .map(|pool| SparePolicy { spare_domains: rep.live_spare_domains(), ..pool });
+        let live = self.live_spares_inc(rep);
         let ctx = self.ctx(live);
         let mut changed = 0u32;
         let mut degraded = 0u32;
@@ -1119,10 +1395,7 @@ impl<'a> MultiPolicySim<'a> {
             changed += (next[d] != prev[d]) as u32;
             degraded += (next[d] < prev[d]) as u32;
         }
-        let live_key = match ctx.spares {
-            Some(pool) => pool.spare_domains as u32,
-            None => u32::MAX,
-        };
+        let live_key = live_pool_key(&ctx.spares);
         for (i, (acc, &policy)) in accs.iter_mut().zip(self.policies).enumerate() {
             let mut cost = 0.0;
             if counts_changed {
@@ -1164,6 +1437,35 @@ impl<'a> MultiPolicySim<'a> {
             if sweep_bill > 0.0 {
                 for acc in accs.iter_mut() {
                     acc.charge_rollback(sweep_bill);
+                }
+            }
+            // Undetected-stall bill: GPU-hours the job spent wedged (or
+            // straggler-gated) by live-but-unnoticed faults under
+            // imperfect detection (accumulated by the [`DelayedEvents`]
+            // source; `0` for every other source). Complete after the
+            // `drain_source` above. Same rollback channel as SDC —
+            // pure lost work, no reconfiguration counted.
+            let stall = rep.detect_stall_gpu_hours();
+            if stall > 0.0 {
+                for acc in accs.iter_mut() {
+                    acc.charge_rollback(stall * 3600.0);
+                }
+            }
+            // Expected false-positive evictions, priced per policy —
+            // billed in expectation against the *configured* pool (a
+            // deterministic bill, like the validation sweep), via
+            // `charge_rollback` so the `transitions` counter keeps
+            // counting only real reconfigurations.
+            if let Some(d) = DetectionModel::active(&self.detect) {
+                let fp = d.false_positive_events(self.topo.n_gpus, rep.horizon_hours());
+                if fp > 0.0 {
+                    let ctx = self.ctx(self.spares);
+                    for (acc, &policy) in accs.iter_mut().zip(self.policies) {
+                        let bill = fp * policy.false_positive_cost(&ctx);
+                        if bill > 0.0 {
+                            acc.charge_rollback(bill);
+                        }
+                    }
                 }
             }
         }
@@ -1271,12 +1573,10 @@ impl<'a> MultiPolicySim<'a> {
         let counts = fleet.domain_healthy_counts();
         let n_job = rep.job_domains();
         let job_healthy = &counts[..n_job];
-        let (live, live_key) = match self.spares {
-            None => (None, u32::MAX),
-            Some(pool) => {
-                let live = SparePolicy { spare_domains: rep.live_spare_domains(), ..pool };
-                (Some(live), live.spare_domains as u32)
-            }
+        let live = self.live_spares_inc(rep);
+        let live_key = match &live {
+            Some(pool) => pool.spare_domains as u32,
+            None => u32::MAX,
         };
         let ctx = self.ctx(live);
         // Same memo-soundness rules as `evaluate_all`: degraded job
@@ -1335,6 +1635,17 @@ impl<'a> MultiPolicySim<'a> {
         })
     }
 
+    /// The live pool from the replayer's maintained tail counters —
+    /// verbatim [`super::spares::split_job_spares`] semantics per tier
+    /// (a failed cold spare shrinks the cold pool, not the warm one).
+    fn live_spares_inc<S: EventSource>(&self, rep: &ReplayCore<S>) -> Option<SparePolicy> {
+        self.spares.map(|pool| SparePolicy {
+            spare_domains: rep.live_spare_domains(),
+            cold_domains: rep.live_cold_spare_domains(pool.cold_domains),
+            min_tp: pool.min_tp,
+        })
+    }
+
     fn memo_ctx(&self) -> MemoCtx {
         MemoCtx {
             domain_size: self.topo.domain_size,
@@ -1342,8 +1653,10 @@ impl<'a> MultiPolicySim<'a> {
             packed: self.packed,
             spare_min_tp: self.spares.map(|p| p.min_tp).unwrap_or(0),
             n_gpus: self.topo.n_gpus,
+            spare_cold_domains: self.spares.map(|p| p.cold_domains).unwrap_or(0),
             table_fingerprint: table_fingerprint(self.table),
             transition_fingerprint: transition_fingerprint(&self.transition),
+            detect_fingerprint: DetectionModel::fingerprint(&self.detect),
         }
     }
 }
@@ -1437,9 +1750,21 @@ mod tests {
             packed: true,
             spare_min_tp: 0,
             n_gpus: 1024,
+            spare_cold_domains: 0,
             table_fingerprint: 0xFEED,
             transition_fingerprint: 0,
+            detect_fingerprint: 0,
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible sweep configurations")]
+    fn memo_rejects_a_different_detection_model() {
+        use crate::policy::registry;
+        let a = [registry::parse("straggler-evict").unwrap()];
+        let mut memo = ResponseMemo::new(1);
+        memo.bind(test_memo_ctx(), &a);
+        memo.bind(MemoCtx { detect_fingerprint: 42, ..test_memo_ctx() }, &a);
     }
 
     #[test]
@@ -1502,6 +1827,9 @@ mod tests {
             checkpoint_interval_secs: 3600.0,
             reshard_secs: 2.0,
             spare_load_secs: 300.0,
+            cold_spare_load_secs: 1800.0,
+            preempt_secs: 0.0,
+            rejoin_secs: 45.0,
             ckpt_write_secs: 120.0,
             power_ramp_secs: 60.0,
             failure_rate_per_hour: 0.0,
@@ -1521,6 +1849,67 @@ mod tests {
             ..t
         }));
         assert_ne!(a, c);
+        // ... as are the PR-8 fields (cold tier, preemption, rejoin)
+        let d = transition_fingerprint(&Some(TransitionCosts {
+            cold_spare_load_secs: 900.0,
+            ..t
+        }));
+        assert_ne!(a, d);
+        let e = transition_fingerprint(&Some(TransitionCosts { preempt_secs: 30.0, ..t }));
+        assert_ne!(a, e);
+        let f = transition_fingerprint(&Some(TransitionCosts { rejoin_secs: 90.0, ..t }));
+        assert_ne!(a, f);
+    }
+
+    #[test]
+    fn aggregate_folds_and_merges_like_stored_trials() {
+        let mk = |tput: f64, transitions: usize| FleetStats {
+            mean_throughput: tput,
+            paused_frac: 0.1,
+            mean_spares_used: 1.5,
+            throughput_per_gpu: tput / 2.0,
+            downtime_frac: 0.05,
+            transitions,
+            mean_donated: 0.2,
+        };
+        let trials = [mk(0.9, 3), mk(0.8, 5), mk(0.95, 1), mk(0.7, 9)];
+        let mut whole = PolicyAggregate::default();
+        for s in &trials {
+            whole.push(s);
+        }
+        assert_eq!(whole.trials(), 4);
+        let n = trials.len() as f64;
+        let mean: f64 = trials.iter().map(|s| s.mean_throughput).sum::<f64>() / n;
+        assert_eq!(whole.mean_tput(), mean);
+        assert_eq!(
+            whole.mean_net_tput(),
+            trials.iter().map(|s| s.net_throughput()).sum::<f64>() / n
+        );
+        assert_eq!(whole.mean_transitions(), (3 + 5 + 1 + 9) as f64 / n);
+        // CI against the direct two-pass sample variance.
+        let var =
+            trials.iter().map(|s| (s.mean_throughput - mean).powi(2)).sum::<f64>() / (n - 1.0);
+        let ci = 1.96 * (var / n).sqrt();
+        assert!((whole.tput_ci95() - ci).abs() < 1e-12, "{} vs {ci}", whole.tput_ci95());
+        // Split-and-merge agrees to floating-point reassociation noise.
+        let mut a = PolicyAggregate::default();
+        let mut b = PolicyAggregate::default();
+        for s in &trials[..2] {
+            a.push(s);
+        }
+        for s in &trials[2..] {
+            b.push(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.trials(), 4);
+        assert!((a.mean_tput() - whole.mean_tput()).abs() < 1e-12);
+        assert!((a.tput_ci95() - whole.tput_ci95()).abs() < 1e-12);
+        // Merging an empty fold is the identity.
+        let mut c = whole.clone();
+        c.merge(&PolicyAggregate::default());
+        assert_eq!(c.trials(), 4);
+        assert_eq!(c.mean_tput().to_bits(), whole.mean_tput().to_bits());
+        assert_eq!(c.tput_ci95().to_bits(), whole.tput_ci95().to_bits());
     }
 
     #[test]

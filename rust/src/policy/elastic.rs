@@ -1,0 +1,164 @@
+//! TorchFT-style elastic data parallelism with checkpoint-less live
+//! rejoin.
+//!
+//! The classical DP-drop response treats a damaged replica as lost
+//! capacity *and* bills every fleet-health change as a full-job restart
+//! (process groups are static, the world size is baked in). Elastic DP
+//! — the TorchFT/TorchTitan shape described in SNIPPETS.md Snippet 1 —
+//! makes the DP world size itself dynamic:
+//!
+//! * **shrink**: when a replica loses a domain, the surviving replicas
+//!   re-form their process groups *live* and keep training on the
+//!   elastic (rescaled) minibatch — nobody pauses, nothing rolls back,
+//!   and the bill is the affected replicas' group re-formation
+//!   ([`TransitionCosts::reshard_secs`]), not a restart;
+//! * **grow**: when a domain recovers, its replica *rejoins live*,
+//!   pulling its full stage shard (weights + fp32 master + AdamW
+//!   moments) peer-to-peer from a healthy donor over the scale-up link
+//!   ([`TransitionCosts::rejoin_secs`], derived from the `CopyPlan`
+//!   machinery by [`super::rejoin_transfer_secs`]). There is **no
+//!   checkpoint rollback term anywhere** — the healthy world never
+//!   stopped, so there is nothing to roll back to.
+//!
+//! The *capacity* response is uniform-TP DP-drop (damaged replicas sit
+//! out — elastic DP scales the world, it does not reshard TP within a
+//! replica), so with transition costs disabled elastic-DP is
+//! bit-identical to `DP-DROP` on flexible minibatch; everything that
+//! distinguishes it is in what a health change *costs* and in never
+//! pausing: a fixed-minibatch caller still gets `paused = false`
+//! because the elastic world redefines the effective minibatch at each
+//! world-size change (the throughput fraction already reflects the
+//! missing replicas' samples).
+
+use super::{
+    affected_gpus, changed_domains, degraded_domains, legacy, EvalOut, EvalScratch, FtPolicy,
+    PolicyCtx, PolicyResponse,
+};
+use crate::manager::packing::{packed_replica_tp, packed_replica_tp_into};
+use crate::manager::spares::{apply_spares, apply_spares_into};
+use crate::sim::engine::FtStrategy;
+
+/// Unit policy: all cost parameters come from
+/// [`super::TransitionCosts`] in the context.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ElasticDp;
+
+pub static ELASTIC_DP: ElasticDp = ElasticDp;
+
+impl FtPolicy for ElasticDp {
+    fn name(&self) -> &'static str {
+        "ELASTIC-DP"
+    }
+
+    fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
+        // Spares substitute wholesale first (a two-tier pool changes
+        // the transition bill, not the capacity response), then damaged
+        // replicas leave the elastic world (DP-drop capacity).
+        let (replica_tp, spares_used) = match ctx.spares {
+            Some(pool) => {
+                let o = apply_spares(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    &pool,
+                );
+                (o.assignment.replica_tp, o.spares_used)
+            }
+            None => (
+                packed_replica_tp(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    ctx.packed,
+                ),
+                0,
+            ),
+        };
+        PolicyResponse {
+            replicas: legacy::decisions(ctx.table, &replica_tp, FtStrategy::DpDrop),
+            // Never pauses: the elastic world rescales its minibatch.
+            paused: false,
+            spares_used,
+            overhead: 1.0,
+            donated: 0.0,
+        }
+    }
+
+    fn respond_with(
+        &self,
+        ctx: &PolicyCtx,
+        job_healthy: &[usize],
+        s: &mut EvalScratch,
+    ) -> EvalOut {
+        let spares_used = match ctx.spares {
+            Some(pool) => {
+                let used = apply_spares_into(
+                    job_healthy,
+                    ctx.domain_size,
+                    &pool,
+                    &mut s.effective,
+                    &mut s.order,
+                );
+                packed_replica_tp_into(
+                    &s.effective,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    true,
+                    &mut s.pack,
+                    &mut s.replica_tp,
+                );
+                used
+            }
+            None => {
+                packed_replica_tp_into(
+                    job_healthy,
+                    ctx.domain_size,
+                    ctx.domains_per_replica,
+                    ctx.packed,
+                    &mut s.pack,
+                    &mut s.replica_tp,
+                );
+                0
+            }
+        };
+        let processed: usize = s
+            .replica_tp
+            .iter()
+            .map(|&tp| ctx.table.replica_batch(tp, FtStrategy::DpDrop))
+            .sum();
+        let capacity = ctx.table.full_local_batch * s.replica_tp.len();
+        // overhead is exactly 1.0 (uniform TP, no reshard within a
+        // replica): multiplying by it is a bitwise no-op, omitted.
+        EvalOut {
+            tput: processed as f64 / capacity as f64,
+            paused: false,
+            spares_used,
+            donated: 0.0,
+        }
+    }
+
+    fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
+        let Some(t) = ctx.transition else { return 0.0 };
+        let changed = changed_domains(prev, next);
+        let degraded = degraded_domains(prev, next);
+        // Shrink: affected replicas' survivors re-form process groups
+        // live (reshard-scale, not restart-scale). Grow: each improved
+        // domain's replica streams its full shard back in peer-to-peer.
+        // No rollback term — healthy replicas never stopped.
+        let shrink = affected_gpus(ctx, degraded) as f64 * t.reshard_secs;
+        let grow = affected_gpus(ctx, changed - degraded) as f64 * t.rejoin_secs;
+        shrink + grow
+    }
+
+    fn false_positive_cost(&self, ctx: &PolicyCtx) -> f64 {
+        let Some(t) = ctx.transition else { return 0.0 };
+        // A spurious failure detection ejects one replica from the
+        // elastic world (its survivors re-form groups) and then
+        // readmits it via a live rejoin once the false alarm clears.
+        affected_gpus(ctx, 1) as f64 * (t.reshard_secs + t.rejoin_secs)
+    }
+
+    fn transition_cost_is_count_pure(&self) -> bool {
+        true
+    }
+}

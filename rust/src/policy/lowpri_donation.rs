@@ -21,7 +21,10 @@
 //! (equivalence asserted by the conformance suite).
 
 use super::legacy::NTP;
-use super::{EvalOut, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse};
+use super::{
+    affected_gpus, changed_domains, degraded_domains, EvalOut, EvalScratch, FtPolicy, PolicyCtx,
+    PolicyResponse,
+};
 use crate::manager::lowpri::{self, LowPriJob};
 use crate::manager::packing::pack_domains;
 use crate::manager::spares::apply_spares;
@@ -131,10 +134,17 @@ impl FtPolicy for LowpriDonate {
     }
 
     fn transition_cost(&self, ctx: &PolicyCtx, prev: &[usize], next: &[usize]) -> f64 {
-        // The primary job reconfigures exactly as NTP does; low-pri
-        // preemption/launch is the best-effort tier's cost, not the
-        // primary job's.
-        NTP.transition_cost(ctx, prev, next)
+        // The primary job reconfigures exactly as NTP does. On top of
+        // that, every *recovering* domain reclaims GPUs currently
+        // hosting donated low-pri work, and the primary job waits out
+        // the preemption grace window before it can reshard back up
+        // ([`super::TransitionCosts::preempt_secs`], default `0.0`).
+        // Degrading transitions only free capacity — nothing is
+        // preempted — so on those this stays bit-identical to NTP.
+        let base = NTP.transition_cost(ctx, prev, next);
+        let Some(t) = ctx.transition else { return base };
+        let improved = changed_domains(prev, next) - degraded_domains(prev, next);
+        base + affected_gpus(ctx, improved) as f64 * t.preempt_secs
     }
 
     fn transition_cost_is_count_pure(&self) -> bool {

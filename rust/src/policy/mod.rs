@@ -44,6 +44,12 @@
 //!   GPUs: `straggler-evict` reshards stragglers away like failures
 //!   (NTP on degradation-adjusted counts, paying reshard transitions),
 //!   `straggler-tolerate` keeps them and eats the TP-group drag.
+//! * [`elastic`] — TorchFT-style elastic data parallelism: the DP world
+//!   shrinks when replicas fail (survivors keep training, the elastic
+//!   minibatch rescales) and recovered domains rejoin *live* via
+//!   peer-to-peer state transfer ([`TransitionCosts::rejoin_secs`],
+//!   derived from the `CopyPlan` traffic model) — no checkpoint
+//!   rollback term anywhere.
 //!
 //! [`registry`] maps CLI names to policy instances; every registered
 //! policy is exercised by the registry-driven conformance suite
@@ -51,6 +57,7 @@
 
 pub mod adaptive_checkpoint;
 pub mod checkpoint;
+pub mod elastic;
 pub mod legacy;
 pub mod lowpri_donation;
 pub mod partial_restart;
@@ -61,6 +68,7 @@ pub mod straggler;
 
 pub use adaptive_checkpoint::AdaptiveCheckpoint;
 pub use checkpoint::CheckpointRestart;
+pub use elastic::ElasticDp;
 pub use lowpri_donation::LowpriDonate;
 pub use partial_restart::PartialRestart;
 pub use power_spares::PowerSpares;
@@ -280,6 +288,20 @@ pub trait FtPolicy: Send + Sync {
         0.0
     }
 
+    /// GPU-seconds of downtime one *spurious* failure/straggler
+    /// detection costs this policy (the detector fired, the policy
+    /// reconfigured, the "fault" turned out to be noise, and the policy
+    /// reconfigured back). Billed in expectation by the sims as
+    /// `DetectionModel::false_positive_events × this`, through the same
+    /// rollback channel as SDC detection lag — the trace and every
+    /// response memo stay untouched. Defaults to `0.0`: a policy that
+    /// does not react to a degrade signal (or reacts for free) loses
+    /// nothing to a false alarm. Must return `0.0` when
+    /// `ctx.transition` is `None`.
+    fn false_positive_cost(&self, _ctx: &PolicyCtx) -> f64 {
+        0.0
+    }
+
     /// Whether [`FtPolicy::transition_cost`] is a pure function of the
     /// *counts* `(changed domains, degraded domains)` plus the context
     /// (live spare pool, total GPUs, cost model) — i.e. independent of
@@ -329,6 +351,25 @@ pub struct TransitionCosts {
     /// rollback channel. Default `0.0` ⇒ validation is free and every
     /// golden output is bitwise unchanged.
     pub validation_sweep_secs: f64,
+    /// Reclaiming donated low-priority capacity when the primary job
+    /// grows back (preempt the guest, drain its kernels, restore the
+    /// partition), seconds per reclaimed GPU (`LOWPRI-DONATE`). Default
+    /// `0.0` ⇒ preemption is free and every pre-existing output is
+    /// bitwise unchanged.
+    pub preempt_secs: f64,
+    /// Streaming a replica shard's weights onto a migrated-in
+    /// **cold-tier** spare (fleet-wide pool: scale-out fabric, image
+    /// boot, no warm weights), seconds — the slow counterpart of
+    /// [`TransitionCosts::spare_load_secs`]. Only read when a
+    /// [`crate::manager::SparePolicy`] configures `cold_domains > 0`.
+    pub cold_spare_load_secs: f64,
+    /// Live peer-to-peer state transfer when a recovered domain rejoins
+    /// an elastic DP world ([`elastic::ElasticDp`]), seconds per rejoin
+    /// — one full replica shard (weights + fp32 master + AdamW moments)
+    /// streamed from peers over the scale-up link, modeled by
+    /// [`rejoin_transfer_secs`]. No checkpoint rollback term: healthy
+    /// replicas never stopped.
+    pub rejoin_secs: f64,
 }
 
 impl TransitionCosts {
@@ -344,6 +385,9 @@ impl TransitionCosts {
             power_ramp_secs: 60.0,
             failure_rate_per_hour: 0.0,
             validation_sweep_secs: 0.0,
+            preempt_secs: 0.0,
+            cold_spare_load_secs: 1800.0,
+            rejoin_secs: rejoin_transfer_secs(sim, cfg),
         }
     }
 
@@ -401,6 +445,44 @@ pub fn reshard_transition_secs_over(
     bytes / (link_gbs * 1e9)
 }
 
+/// Wall-clock seconds a recovered domain needs to rejoin an elastic DP
+/// world *live*: the returning replica pulls a full stage shard of
+/// optimizer state (bf16 weights + fp32 master copy + two AdamW
+/// moments ≈ 8× the bf16 weight bytes per unit) peer-to-peer from a
+/// healthy replica over the scale-up link — TorchFT-style
+/// checkpoint-less recovery, so there is no rollback term and the
+/// donors keep training while they stream.
+pub fn rejoin_transfer_secs(sim: &IterationModel, cfg: &ParallelConfig) -> f64 {
+    rejoin_transfer_secs_over(sim, cfg, sim.cluster.gpu.nvlink_gbs)
+}
+
+/// [`rejoin_transfer_secs`] over an explicit link bandwidth (GB/s) —
+/// the `fleet --rejoin-secs` knob overrides the result directly, this
+/// keeps the model testable against the reshard model it parallels.
+pub fn rejoin_transfer_secs_over(
+    sim: &IterationModel,
+    cfg: &ParallelConfig,
+    link_gbs: f64,
+) -> f64 {
+    let n2 = min_supported_tp(cfg.tp);
+    if n2 >= cfg.tp {
+        return 0.0;
+    }
+    // The FULL per-GPU comp shard moves (a rejoining domain holds
+    // nothing), unlike a reshard which moves only the displaced units —
+    // so the bound is the largest comp shard of the healthy CopyPlan,
+    // not `max_moved_units_per_shard`. State per unit: bf16 weights +
+    // fp32 master copy + two fp32 AdamW moments ≈ 8× the bf16 weight
+    // bytes (2 bytes × hidden per weight unit).
+    let info = sim.plan_cache().get(sim.model.ffn, cfg.tp, n2);
+    let max_shard_units = info.copy.comp_units.iter().copied().max().unwrap_or(0);
+    let weight_unit_bytes = 2 * sim.model.hidden * 2;
+    let state_bytes_per_unit = 8 * weight_unit_bytes;
+    let bytes = (max_shard_units * state_bytes_per_unit) as f64 * sim.model.layers as f64
+        / cfg.pp as f64;
+    bytes / (link_gbs * 1e9)
+}
+
 /// GPUs touched when `changed_domains` domains change health: every
 /// replica containing a changed domain re-plans, so charge whole
 /// replicas, capped at the fleet.
@@ -443,6 +525,14 @@ mod tests {
         // nothing to reshard at TP1
         let cfg1 = ParallelConfig { tp: 1, pp: 8, dp: 128, microbatch: 1 };
         assert_eq!(reshard_transition_secs(&sim, &cfg1), 0.0);
+        // A live rejoin streams the FULL shard (with heavier per-unit
+        // state), so it costs strictly more than a reshard — but it is
+        // still peer-to-peer over the scale-up link, nowhere near a
+        // checkpoint rollback.
+        let rejoin = rejoin_transfer_secs(&sim, &cfg);
+        assert!(rejoin > t, "rejoin {rejoin}s should exceed reshard {t}s");
+        assert!(rejoin < 1800.0, "rejoin {rejoin}s should beat a half-interval rollback");
+        assert_eq!(rejoin_transfer_secs(&sim, &cfg1), 0.0);
     }
 
     #[test]
@@ -465,6 +555,9 @@ mod tests {
             power_ramp_secs: 60.0,
             failure_rate_per_hour: 0.0,
             validation_sweep_secs: 0.0,
+            preempt_secs: 0.0,
+            cold_spare_load_secs: 1800.0,
+            rejoin_secs: 2.0,
         };
         let t = base.with_observed_rate(&trace);
         assert!((t.failure_rate_per_hour - 3.0 / 48.0).abs() < 1e-15);

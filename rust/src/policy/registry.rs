@@ -8,6 +8,7 @@
 
 use super::adaptive_checkpoint::CKPT_ADAPTIVE;
 use super::checkpoint::CKPT_RESTART;
+use super::elastic::ELASTIC_DP;
 use super::legacy::{DP_DROP, NTP, NTP_PW};
 use super::lowpri_donation::LOWPRI_DONATE;
 use super::partial_restart::PARTIAL_RESTART;
@@ -18,7 +19,7 @@ use super::FtPolicy;
 
 /// Every registered policy with its default parameters (the
 /// conformance suite runs against exactly this list).
-pub fn all() -> [&'static dyn FtPolicy; 11] {
+pub fn all() -> [&'static dyn FtPolicy; 12] {
     [
         &DP_DROP,
         &NTP,
@@ -31,6 +32,7 @@ pub fn all() -> [&'static dyn FtPolicy; 11] {
         &CKPT_ADAPTIVE,
         &STRAGGLER_EVICT,
         &STRAGGLER_TOLERATE,
+        &ELASTIC_DP,
     ]
 }
 
@@ -54,10 +56,11 @@ pub fn parse(name: &str) -> anyhow::Result<&'static dyn FtPolicy> {
         "ckpt-adaptive" | "adaptive" | "young-daly" => &CKPT_ADAPTIVE,
         "straggler-evict" | "evict" => &STRAGGLER_EVICT,
         "straggler-tolerate" | "tolerate" => &STRAGGLER_TOLERATE,
+        "elastic-dp" | "elastic" | "torchft" => &ELASTIC_DP,
         other => anyhow::bail!(
             "unknown policy '{other}' (known: dp-drop, ntp, ntp-pw, ckpt-restart, \
              spare-mig, lowpri-donate, partial-restart, power-spares, ckpt-adaptive, \
-             straggler-evict, straggler-tolerate)"
+             straggler-evict, straggler-tolerate, elastic-dp)"
         ),
     })
 }
@@ -90,6 +93,8 @@ mod tests {
         assert_eq!(parse("young-daly").unwrap().name(), "CKPT-ADAPTIVE");
         assert_eq!(parse("evict").unwrap().name(), "STRAGGLER-EVICT");
         assert_eq!(parse("tolerate").unwrap().name(), "STRAGGLER-TOLERATE");
+        assert_eq!(parse("elastic").unwrap().name(), "ELASTIC-DP");
+        assert_eq!(parse("torchft").unwrap().name(), "ELASTIC-DP");
         let l = parse_list("ntp, ntp-pw,ckpt-adaptive").unwrap();
         assert_eq!(
             l.iter().map(|p| p.name()).collect::<Vec<_>>(),
@@ -100,12 +105,12 @@ mod tests {
     }
 
     #[test]
-    fn registry_is_eleven_distinct_policies() {
+    fn registry_is_twelve_distinct_policies() {
         let names = names();
-        assert_eq!(names.len(), 11);
+        assert_eq!(names.len(), 12);
         let mut dedup = names.clone();
         dedup.sort();
         dedup.dedup();
-        assert_eq!(dedup.len(), 11);
+        assert_eq!(dedup.len(), 12);
     }
 }

@@ -135,9 +135,26 @@ impl FtPolicy for SpareMigration {
         // Affected replicas reshard their TP layout; each freshly
         // damaged domain additionally pulls a weight copy onto the
         // spare domain migrated into its place ([`migrated_domains`]).
+        // With a hierarchical pool, warm (per-row) spares are consumed
+        // first at `spare_load_secs`; only migrations that overflow
+        // into the cold tier pay `cold_spare_load_secs`. A flat pool
+        // (`cold_domains == 0`) never enters the cold branch, keeping
+        // the bill bitwise identical to the single-tier formula.
         let reshard = affected_gpus(ctx, changed_domains(prev, next)) as f64 * t.reshard_secs;
         let migrated = migrated_domains(ctx, prev, next);
-        reshard + (migrated * ctx.domain_size) as f64 * t.spare_load_secs
+        let (warm_used, cold_used) = match ctx.spares {
+            Some(pool) => {
+                let warm_live = pool.spare_domains - pool.cold_domains;
+                let warm_used = migrated.min(warm_live);
+                (warm_used, migrated - warm_used)
+            }
+            None => (migrated, 0),
+        };
+        let mut bill = reshard + (warm_used * ctx.domain_size) as f64 * t.spare_load_secs;
+        if cold_used > 0 {
+            bill += (cold_used * ctx.domain_size) as f64 * t.cold_spare_load_secs;
+        }
+        bill
     }
 
     fn transition_cost_is_count_pure(&self) -> bool {

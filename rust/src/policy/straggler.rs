@@ -104,6 +104,14 @@ impl FtPolicy for StragglerEvict {
         affected_gpus(ctx, changed_domains(prev, next)) as f64 * t.reshard_secs
     }
 
+    fn false_positive_cost(&self, ctx: &PolicyCtx) -> f64 {
+        let Some(t) = ctx.transition else { return 0.0 };
+        // A falsely flagged straggler is evicted (one reshard) and
+        // readmitted once the detector clears it (a second reshard) —
+        // the round trip of `degrade_transition_cost` for one domain.
+        2.0 * affected_gpus(ctx, 1) as f64 * t.reshard_secs
+    }
+
     fn transition_cost_is_count_pure(&self) -> bool {
         true
     }

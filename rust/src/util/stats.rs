@@ -111,6 +111,80 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Welford's online mean/variance accumulator: numerically stable,
+/// O(1) state — confidence intervals over Monte-Carlo trial batches
+/// without storing per-trial values. Mergeable across parallel workers
+/// via Chan's pairwise formula ([`Welford::merge`]); note that both
+/// `push` order and merge grouping reassociate floating-point sums, so
+/// two different batchings agree only to rounding, not bit-for-bit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    /// Fold one observation in.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Fold another accumulator in (Chan et al.'s parallel update).
+    /// Merging an empty accumulator is the exact identity.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let n = n1 + n2;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.mean += d * n2 / n;
+        self.n += other.n;
+    }
+
+    /// Observations folded in.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Running mean; 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample (Bessel-corrected) variance; 0.0 below two observations.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        self.m2 / (self.n - 1) as f64
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Half-width of the normal-approximation 95% confidence interval
+    /// on the mean: `1.96·σ/√n`. 0.0 below two observations.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        1.96 * (self.variance() / self.n as f64).sqrt()
+    }
+}
+
 /// Summary bundle used by the bench harness.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Summary {
@@ -195,6 +269,66 @@ mod tests {
     #[test]
     fn geomean_basic() {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert_eq!(w.count(), xs.len() as u64);
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        // stats::variance is population; Welford reports sample.
+        let n = xs.len() as f64;
+        let sample = variance(&xs) * n / (n - 1.0);
+        assert!((w.variance() - sample).abs() < 1e-12);
+        let ci = 1.96 * (sample / n).sqrt();
+        assert!((w.ci95() - ci).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_matches_whole() {
+        let xs: Vec<f64> = (0..37).map(|i| (i as f64 * 0.731).sin() * 5.0 + 10.0).collect();
+        let mut whole = Welford::default();
+        for &x in &xs {
+            whole.push(x);
+        }
+        for split in [1, 7, 18, 36] {
+            let (mut a, mut b) = (Welford::default(), Welford::default());
+            for &x in &xs[..split] {
+                a.push(x);
+            }
+            for &x in &xs[split..] {
+                b.push(x);
+            }
+            a.merge(&b);
+            assert_eq!(a.count(), whole.count());
+            assert!((a.mean() - whole.mean()).abs() < 1e-12, "split {split}");
+            assert!((a.variance() - whole.variance()).abs() < 1e-10, "split {split}");
+        }
+        // Identity merges, both ways.
+        let mut w = whole;
+        w.merge(&Welford::default());
+        assert_eq!(w.mean().to_bits(), whole.mean().to_bits());
+        assert_eq!(w.m2.to_bits(), whole.m2.to_bits());
+        let mut e = Welford::default();
+        e.merge(&whole);
+        assert_eq!(e.mean().to_bits(), whole.mean().to_bits());
+        assert_eq!(e.count(), whole.count());
+    }
+
+    #[test]
+    fn welford_degenerate_cases() {
+        let mut w = Welford::default();
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.variance(), 0.0);
+        assert_eq!(w.ci95(), 0.0);
+        w.push(3.5);
+        assert_eq!(w.mean(), 3.5);
+        assert_eq!(w.variance(), 0.0);
+        assert_eq!(w.ci95(), 0.0);
     }
 
     #[test]

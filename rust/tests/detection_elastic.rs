@@ -1,0 +1,610 @@
+//! PR 8 suite: imperfect failure detection, elastic DP, hierarchical
+//! spares, preemption budgets, and streaming aggregates.
+//!
+//! * Zero detection (no model, the instant model, or an all-zero
+//!   literal) collapses **bit-exactly** onto the pre-detection path for
+//!   every registered policy × all four scenario generators — the knob
+//!   at zero is provably free.
+//! * With detection *active*, all the engine-equivalence contracts
+//!   still hold bit-for-bit: shared sweep == per-policy event-driven
+//!   run == per-step replay, refinement invariance, incremental ==
+//!   rebuild, stream == materialized, and 1-vs-N-thread identity.
+//! * Longer detection latency monotonically degrades
+//!   `STRAGGLER-EVICT`'s net throughput (the undetected-stall bill
+//!   always costs at least the reconfiguration it hid).
+//! * A two-tier spare pool changes only the transition bill: capacity
+//!   stats are bit-identical to the flat pool, the cold tier only costs
+//!   extra when migrations overflow the warm tier.
+//! * False positives charge only policies that evict on a degrade
+//!   signal; a latency-free FP-only model leaves every zero-cost
+//!   policy bit-identical.
+//! * The streaming per-policy aggregates (Welford CIs, no per-trial
+//!   storage) reproduce the stored-trials statistics.
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{
+    BlastRadius, DetectionModel, FailureModel, ScenarioConfig, ScenarioKind, TrialGen,
+};
+use ntp::manager::{FleetSim, FleetStats, MultiPolicySim, SparePolicy, StepMode, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, FtPolicy, TransitionCosts};
+use ntp::power::RackDesign;
+use ntp::sim::{IterationModel, SimParams};
+use ntp::util::stats::Welford;
+
+const DOMAIN_SIZE: usize = 32;
+const PER_REPLICA: usize = 4;
+
+const ALL_KINDS: [ScenarioKind; 4] = [
+    ScenarioKind::Independent,
+    ScenarioKind::Correlated,
+    ScenarioKind::Straggler,
+    ScenarioKind::Sdc,
+];
+
+fn setup() -> (IterationModel, ParallelConfig, StrategyTable) {
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 2 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: DOMAIN_SIZE, pp: PER_REPLICA, dp: 16, microbatch: 1 };
+    let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    (sim, cfg, table)
+}
+
+fn hot_scenario(kind: ScenarioKind) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::new(kind);
+    cfg.correlated = cfg.correlated.scaled(2_000.0);
+    cfg.straggler = cfg.straggler.scaled(200.0);
+    cfg.sdc = cfg.sdc.scaled(2_000.0);
+    cfg
+}
+
+/// A detection model with every knob nonzero, including jitter.
+fn lossy_detection() -> DetectionModel {
+    DetectionModel {
+        fail_latency_hours: 0.4,
+        degrade_latency_hours: 1.5,
+        false_positives_per_gpu_day: 2e-3,
+        jitter_frac: 1.0,
+    }
+}
+
+/// No detection model, the canonical instant model, and an explicit
+/// all-zero literal must all run the IDENTICAL code path.
+#[test]
+fn zero_detection_collapses_bit_exactly_for_every_policy() {
+    let (sim, cfg, table) = setup();
+    let policies = registry::all();
+    assert_eq!(policies.len(), 12);
+    let job_domains = 20usize;
+    let spare_domains = 4usize;
+    let topo = Topology::of((job_domains + spare_domains) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(40.0);
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+    for (k, &kind) in ALL_KINDS.iter().enumerate() {
+        let gen =
+            TrialGen::new(&topo, &model, &hot_scenario(kind), 24.0 * 10.0, 0xDE7 + k as u64, 3);
+        let traces = gen.traces();
+        let msim = |detect: Option<DetectionModel>| MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policies: &policies,
+            spares: Some(SparePolicy { spare_domains, cold_domains: 0, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+            detect,
+        };
+        let none = msim(None);
+        let instant = msim(Some(DetectionModel::instant()));
+        let zeroed = msim(Some(DetectionModel {
+            fail_latency_hours: 0.0,
+            degrade_latency_hours: 0.0,
+            false_positives_per_gpu_day: 0.0,
+            // jitter alone does not make a model active: there is
+            // nothing to jitter.
+            jitter_frac: 0.7,
+        }));
+        for mode in [StepMode::Exact, StepMode::Grid(2.0)] {
+            let base = none.run_trials(&traces, mode, &mut none.memo());
+            assert_eq!(
+                base,
+                instant.run_trials(&traces, mode, &mut instant.memo()),
+                "{kind:?} {mode:?}: Some(instant) must equal None bit-for-bit"
+            );
+            assert_eq!(
+                base,
+                zeroed.run_trials(&traces, mode, &mut zeroed.memo()),
+                "{kind:?} {mode:?}: the all-zero model must equal None bit-for-bit"
+            );
+        }
+        // FleetSim takes the same normalization path.
+        for (detect, label) in
+            [(None, "none"), (Some(DetectionModel::instant()), "instant")]
+        {
+            let fs = FleetSim {
+                topo: &topo,
+                table: &table,
+                domains_per_replica: PER_REPLICA,
+                policy: policies[0],
+                spares: None,
+                packed: true,
+                blast: BlastRadius::Single,
+                transition,
+                detect,
+            };
+            assert_eq!(
+                fs.run(&traces[0], StepMode::Exact),
+                FleetSim { detect: None, ..fs }.run(&traces[0], StepMode::Exact),
+                "{kind:?} FleetSim({label}): zero detection drifted"
+            );
+        }
+    }
+}
+
+/// All engine-equivalence contracts hold with detection ACTIVE: shared
+/// sweep == event-driven == per-step replay, refinement invariance,
+/// incremental == rebuild, and stream == materialized at any worker
+/// count.
+#[test]
+fn active_detection_preserves_engine_equivalence() {
+    let (sim, cfg, table) = setup();
+    let policies = registry::all();
+    let job_domains = 20usize;
+    let spare_domains = 4usize;
+    let topo = Topology::of((job_domains + spare_domains) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(40.0);
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+    let detect = Some(lossy_detection());
+    for (k, &kind) in ALL_KINDS.iter().enumerate() {
+        let gen = TrialGen::new(
+            &topo,
+            &model,
+            &hot_scenario(kind),
+            24.0 * 10.0,
+            0xF0E + k as u64,
+            4,
+        );
+        let traces = gen.traces();
+        let msim = MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policies: &policies,
+            spares: Some(SparePolicy { spare_domains, cold_domains: 1, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+            detect,
+        };
+        for mode in [StepMode::Exact, StepMode::Grid(2.0)] {
+            let shared = msim.run(&traces[0], mode);
+            for (i, &policy) in policies.iter().enumerate() {
+                let fs = FleetSim {
+                    topo: &topo,
+                    table: &table,
+                    domains_per_replica: PER_REPLICA,
+                    policy,
+                    spares: msim.spares,
+                    packed: true,
+                    blast: BlastRadius::Single,
+                    transition,
+                    detect,
+                };
+                let stats = fs.run(&traces[0], mode);
+                assert_eq!(
+                    stats,
+                    shared[i],
+                    "{kind:?} {mode:?} {}: shared sweep drifted under detection",
+                    policy.name()
+                );
+                assert_eq!(
+                    stats,
+                    fs.run_replay_per_step(&traces[0], mode),
+                    "{kind:?} {mode:?} {}: per-step replay drifted under detection",
+                    policy.name()
+                );
+                if mode == StepMode::Exact {
+                    // Refinement invariance: extra evaluation points
+                    // must not change exact integration.
+                    assert_eq!(
+                        stats,
+                        fs.run_exact_with_refinement(&traces[0], &[13.0, 77.7, 181.1]),
+                        "{kind:?} {}: refinement changed exact stats under detection",
+                        policy.name()
+                    );
+                }
+            }
+            // Stream == materialized, shared memo on each side.
+            let mat = msim.run_trials(&traces, mode, &mut msim.memo());
+            assert_eq!(
+                mat,
+                msim.run_trials_stream(&gen, mode, &mut msim.memo()),
+                "{kind:?} {mode:?}: streaming diverged under detection"
+            );
+            // Thread-count bit-identity, workers below/at/above trials.
+            for threads in [1usize, 3, 4, 7] {
+                let (par_m, _) = msim.run_trials_par(&traces, mode, threads);
+                assert_eq!(par_m, mat, "{kind:?} {mode:?} threads={threads}");
+                let (par_s, _) = msim.run_trials_stream_par(&gen, mode, threads);
+                assert_eq!(par_s, mat, "{kind:?} {mode:?} threads={threads} (stream)");
+            }
+        }
+        // Incremental exact sweep == rebuild oracle under detection.
+        for trace in &traces {
+            assert_eq!(
+                msim.run_with(trace, StepMode::Exact, &mut msim.memo()),
+                msim.run_rebuild(trace, &mut msim.memo()),
+                "{kind:?}: incremental sweep != rebuild oracle under detection"
+            );
+        }
+    }
+}
+
+/// Longer detection latency can only hurt: `STRAGGLER-EVICT`'s net
+/// throughput is non-increasing in the latency, strictly lower than
+/// the instant-detection baseline once the latency is material.
+#[test]
+fn detect_latency_degrades_straggler_evict_monotonically() {
+    let (sim, cfg, table) = setup();
+    let policy = registry::parse("straggler-evict").unwrap();
+    let job_domains = 24usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(30.0);
+    // Stragglers with real drag (30–70% residual speed) so the hidden
+    // window loses meaningful work.
+    let mut scen = hot_scenario(ScenarioKind::Straggler);
+    scen.straggler.slowdown = (0.3, 0.7);
+    let gen = TrialGen::new(&topo, &model, &scen, 24.0 * 12.0, 0x5712A, 1);
+    let traces = gen.traces();
+    let trace = &traces[0];
+    assert!(!trace.events.is_empty());
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+    let net_at = |latency_hours: f64| -> f64 {
+        let fs = FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policy,
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+            detect: Some(DetectionModel {
+                fail_latency_hours: latency_hours,
+                degrade_latency_hours: latency_hours,
+                false_positives_per_gpu_day: 0.0,
+                jitter_frac: 0.0,
+            }),
+        };
+        fs.run(trace, StepMode::Exact).net_throughput()
+    };
+    let latencies = [0.0, 0.25, 1.0, 3.0, 8.0];
+    let nets: Vec<f64> = latencies.iter().map(|&l| net_at(l)).collect();
+    for w in nets.windows(2) {
+        assert!(
+            w[1] <= w[0] + 1e-12,
+            "net throughput must be non-increasing in detection latency: {nets:?}"
+        );
+    }
+    assert!(
+        nets[nets.len() - 1] < nets[0],
+        "hours-scale latency must strictly degrade net throughput: {nets:?}"
+    );
+}
+
+/// A two-tier pool changes only the transition bill: capacity stats are
+/// bit-identical to the flat pool; the cold tier costs extra exactly
+/// when migrations overflow the warm tier.
+#[test]
+fn cold_tier_bills_only_the_overflow() {
+    let (sim, cfg, table) = setup();
+    let policies: Vec<&'static dyn FtPolicy> =
+        vec![registry::parse("spare-mig").unwrap(), registry::parse("elastic-dp").unwrap()];
+    let job_domains = 20usize;
+    let spare_domains = 4usize;
+    let topo = Topology::of((job_domains + spare_domains) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(60.0);
+    let gen = TrialGen::new(
+        &topo,
+        &model,
+        &hot_scenario(ScenarioKind::Correlated),
+        24.0 * 10.0,
+        0xC01D,
+        1,
+    );
+    let traces = gen.traces();
+    let trace = &traces[0];
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+    let run = |cold_domains: usize| -> Vec<FleetStats> {
+        MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policies: &policies,
+            spares: Some(SparePolicy { spare_domains, cold_domains, min_tp: 28 }),
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+            detect: None,
+        }
+        .run(trace, StepMode::Exact)
+    };
+    let flat = run(0);
+    let all_cold = run(spare_domains);
+    assert!(
+        flat[0].mean_spares_used > 0.0,
+        "trace too quiet: spares never migrated, the tier split is untested"
+    );
+    for (f, c) in flat.iter().zip(&all_cold) {
+        // Capacity substitution is tier-blind.
+        assert_eq!(f.mean_throughput.to_bits(), c.mean_throughput.to_bits());
+        assert_eq!(f.mean_spares_used.to_bits(), c.mean_spares_used.to_bits());
+        assert_eq!(f.paused_frac.to_bits(), c.paused_frac.to_bits());
+        assert_eq!(f.transitions, c.transitions);
+        // The bill is not: cold bring-up is never cheaper.
+        assert!(c.downtime_frac >= f.downtime_frac);
+    }
+    // With an all-cold pool every migration overflows the (empty) warm
+    // tier, so the cold premium must actually bite.
+    assert!(
+        all_cold[0].downtime_frac > flat[0].downtime_frac,
+        "cold-tier overflow never billed: flat {} vs cold {}",
+        flat[0].downtime_frac,
+        all_cold[0].downtime_frac
+    );
+}
+
+/// Latency-free false positives charge only policies that evict on a
+/// degrade signal; everyone else stays bit-identical.
+#[test]
+fn false_positives_charge_only_evicting_policies() {
+    let (sim, cfg, table) = setup();
+    let policies = registry::all();
+    let job_domains = 20usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(40.0);
+    let gen = TrialGen::new(
+        &topo,
+        &model,
+        &hot_scenario(ScenarioKind::Straggler),
+        24.0 * 10.0,
+        0xFA15E,
+        1,
+    );
+    let traces = gen.traces();
+    let trace = &traces[0];
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+    let run = |fp: f64| -> Vec<FleetStats> {
+        MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policies: &policies,
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+            detect: (fp > 0.0).then(|| DetectionModel {
+                fail_latency_hours: 0.0,
+                degrade_latency_hours: 0.0,
+                false_positives_per_gpu_day: fp,
+                jitter_frac: 0.0,
+            }),
+        }
+        .run(trace, StepMode::Exact)
+    };
+    let clean = run(0.0);
+    let noisy = run(5e-3);
+    let mut charged = Vec::new();
+    for ((policy, cl), no) in policies.iter().zip(&clean).zip(&noisy) {
+        // A zero-latency model never shifts events: capacity stats are
+        // identical, only the expected-eviction bill can differ.
+        assert_eq!(cl.mean_throughput.to_bits(), no.mean_throughput.to_bits());
+        assert_eq!(cl.transitions, no.transitions);
+        if no.downtime_frac > cl.downtime_frac {
+            charged.push(policy.name());
+        } else {
+            assert_eq!(
+                cl, no,
+                "{}: charged nothing yet stats drifted",
+                policy.name()
+            );
+        }
+    }
+    assert!(
+        charged.contains(&"STRAGGLER-EVICT") && charged.contains(&"ELASTIC-DP"),
+        "evicting policies must pay for false positives, got {charged:?}"
+    );
+    assert!(
+        !charged.contains(&"NTP") && !charged.contains(&"DP-DROP"),
+        "non-evicting policies must ride out false alarms free, got {charged:?}"
+    );
+}
+
+/// `LOWPRI-DONATE` pays the preemption-latency budget when reclaiming
+/// donated GPUs; the budget changes the bill, never the capacity.
+#[test]
+fn preemption_budget_bills_lowpri_donate() {
+    let (sim, cfg, table) = setup();
+    let policy = registry::parse("lowpri-donate").unwrap();
+    let job_domains = 20usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(50.0);
+    let gen = TrialGen::new(
+        &topo,
+        &model,
+        &hot_scenario(ScenarioKind::Independent),
+        24.0 * 15.0,
+        0x10321,
+        1,
+    );
+    let traces = gen.traces();
+    let trace = &traces[0];
+    let base = TransitionCosts::model(&sim, &cfg);
+    let run = |preempt_secs: f64| -> FleetStats {
+        FleetSim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policy,
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition: Some(TransitionCosts { preempt_secs, ..base }),
+            detect: None,
+        }
+        .run(trace, StepMode::Exact)
+    };
+    let free = run(0.0);
+    let slow = run(120.0);
+    assert_eq!(free.mean_throughput.to_bits(), slow.mean_throughput.to_bits());
+    assert_eq!(free.mean_donated.to_bits(), slow.mean_donated.to_bits());
+    assert_eq!(free.transitions, slow.transitions);
+    assert!(
+        slow.downtime_frac > free.downtime_frac,
+        "recoveries inside the horizon must reclaim donated GPUs and pay \
+         the preemption budget: {} vs {}",
+        slow.downtime_frac,
+        free.downtime_frac
+    );
+    assert!(slow.net_throughput() < free.net_throughput());
+}
+
+/// The streaming per-policy aggregates reproduce the stored-trials
+/// statistics: identical means, a CI matching a direct Welford pass,
+/// and thread-count agreement to floating-point rounding.
+#[test]
+fn stream_aggregates_match_stored_trials() {
+    let (sim, cfg, table) = setup();
+    let policies = registry::all();
+    let job_domains = 20usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(40.0);
+    let gen = TrialGen::new(
+        &topo,
+        &model,
+        &hot_scenario(ScenarioKind::Correlated),
+        24.0 * 8.0,
+        0xA66,
+        6,
+    );
+    let msim = MultiPolicySim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: PER_REPLICA,
+        policies: &policies,
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition: Some(TransitionCosts::model(&sim, &cfg)),
+        detect: Some(lossy_detection()),
+    };
+    let (stored, _) = msim.run_trials_stream_par(&gen, StepMode::Exact, 1);
+    let (aggs, _) = msim.run_trials_stream_agg_par(&gen, StepMode::Exact, 1);
+    assert_eq!(aggs.len(), policies.len());
+    let n = stored.len() as f64;
+    for (pi, agg) in aggs.iter().enumerate() {
+        assert_eq!(agg.trials(), stored.len() as u64);
+        let mean = |f: &dyn Fn(&FleetStats) -> f64| -> f64 {
+            stored.iter().map(|t| f(&t[pi])).sum::<f64>() / n
+        };
+        // Single-threaded fold order == stored-path sum order: the
+        // plain-sum means must agree bit-for-bit.
+        assert_eq!(
+            agg.mean_tput().to_bits(),
+            mean(&|s| s.mean_throughput).to_bits()
+        );
+        assert_eq!(
+            agg.mean_net_tput().to_bits(),
+            mean(&|s| s.net_throughput()).to_bits()
+        );
+        assert_eq!(
+            agg.mean_transitions().to_bits(),
+            mean(&|s| s.transitions as f64).to_bits()
+        );
+        assert_eq!(
+            agg.mean_downtime_frac().to_bits(),
+            mean(&|s| s.downtime_frac).to_bits()
+        );
+        let mut w = Welford::default();
+        for t in &stored {
+            w.push(t[pi].mean_throughput);
+        }
+        assert_eq!(agg.tput_ci95().to_bits(), w.ci95().to_bits());
+    }
+    // Merged multi-worker aggregates agree to rounding (merge
+    // reassociates the float sums, so bitwise equality is not owed).
+    for threads in [2usize, 3, 6] {
+        let (par, _) = msim.run_trials_stream_agg_par(&gen, StepMode::Exact, threads);
+        for (a, b) in aggs.iter().zip(&par) {
+            assert_eq!(a.trials(), b.trials());
+            assert!((a.mean_tput() - b.mean_tput()).abs() < 1e-12);
+            assert!((a.mean_net_tput() - b.mean_net_tput()).abs() < 1e-12);
+            assert!((a.tput_ci95() - b.tput_ci95()).abs() < 1e-9);
+        }
+    }
+}
+
+/// Checkpoint-less live rejoin beats restart-from-checkpoint: under the
+/// modeled costs on a failure-heavy trace, `ELASTIC-DP` keeps more net
+/// throughput than `CKPT-RESTART`, and with costs disabled it is
+/// bit-identical to `DP-DROP` (capacity response is shared).
+#[test]
+fn elastic_dp_rejoins_cheaper_than_checkpoint_restart() {
+    let (sim, cfg, table) = setup();
+    let policies: Vec<&'static dyn FtPolicy> = vec![
+        registry::parse("elastic-dp").unwrap(),
+        registry::parse("ckpt-restart").unwrap(),
+        registry::parse("dp-drop").unwrap(),
+    ];
+    let job_domains = 24usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(40.0);
+    let gen = TrialGen::new(
+        &topo,
+        &model,
+        &hot_scenario(ScenarioKind::Independent),
+        24.0 * 15.0,
+        0xE1A5,
+        2,
+    );
+    let run = |transition: Option<TransitionCosts>| -> Vec<Vec<FleetStats>> {
+        let msim = MultiPolicySim {
+            topo: &topo,
+            table: &table,
+            domains_per_replica: PER_REPLICA,
+            policies: &policies,
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition,
+            detect: None,
+        };
+        msim.run_trials(&gen.traces(), StepMode::Exact, &mut msim.memo())
+    };
+    let costed = run(Some(TransitionCosts::model(&sim, &cfg)));
+    for trial in &costed {
+        let (elastic, ckpt) = (&trial[0], &trial[1]);
+        assert!(
+            elastic.net_throughput() > ckpt.net_throughput(),
+            "live rejoin must beat checkpoint rollback: elastic {} vs ckpt {}",
+            elastic.net_throughput(),
+            ckpt.net_throughput()
+        );
+    }
+    // Costs off: elastic DP == DP-DROP bit-for-bit (pure capacity).
+    for trial in &run(None) {
+        assert_eq!(trial[0], trial[2], "elastic-dp capacity response must be DP-DROP");
+    }
+}

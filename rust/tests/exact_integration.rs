@@ -83,7 +83,7 @@ fn exact_mode_is_invariant_to_any_refinement() {
     random.sort_by(f64::total_cmp);
 
     for policy in registry::all() {
-        for spares in [None, Some(SparePolicy { spare_domains, min_tp: 28 })] {
+        for spares in [None, Some(SparePolicy { spare_domains, cold_domains: 0, min_tp: 28 })] {
             let fs = FleetSim {
                 topo: &topo,
                 table: &table,
@@ -93,6 +93,7 @@ fn exact_mode_is_invariant_to_any_refinement() {
                 packed: true,
                 blast: BlastRadius::Single,
                 transition,
+                detect: None,
             };
             let base = fs.run(&trace, StepMode::Exact);
             assert_eq!(base, fs.run_exact_with_refinement(&trace, &[]), "{}", policy.name());
@@ -129,10 +130,11 @@ fn grid_converges_to_exact_for_every_policy() {
         table: &table,
         domains_per_replica: PER_REPLICA,
         policies: &policies,
-        spares: Some(SparePolicy { spare_domains, min_tp: 28 }),
+        spares: Some(SparePolicy { spare_domains, cold_domains: 0, min_tp: 28 }),
         packed: true,
         blast: BlastRadius::Single,
         transition,
+        detect: None,
     };
     let exact = msim.run(&trace, StepMode::Exact);
     let coarse = msim.run(&trace, StepMode::Grid(6.0));
@@ -197,6 +199,7 @@ fn grid_clamps_the_partial_final_step() {
         packed: true,
         blast: BlastRadius::Single,
         transition: None,
+        detect: None,
     };
     let mut degraded = vec![DOMAIN_SIZE; job_domains];
     degraded[0] = DOMAIN_SIZE - 1;
@@ -261,6 +264,9 @@ fn exact_mode_charges_each_event_at_its_boundary() {
         checkpoint_interval_secs: 3600.0,
         reshard_secs: 2.0,
         spare_load_secs: 300.0,
+        cold_spare_load_secs: 1800.0,
+        preempt_secs: 5.0,
+        rejoin_secs: 45.0,
         ckpt_write_secs: 120.0,
         power_ramp_secs: 60.0,
         failure_rate_per_hour: 0.0,
@@ -276,6 +282,7 @@ fn exact_mode_charges_each_event_at_its_boundary() {
             packed: true,
             blast: BlastRadius::Single,
             transition: Some(costs),
+            detect: None,
         }
         .run(&trace, mode)
     };
@@ -336,6 +343,7 @@ fn validation_sweep_bill_is_exact_and_zero_by_default() {
         packed: true,
         blast: BlastRadius::Single,
         transition: Some(sweep_costs),
+        detect: None,
     }
     .run(&trace, StepMode::Exact);
     for (pi, &policy) in policies.iter().enumerate() {
@@ -349,6 +357,7 @@ fn validation_sweep_bill_is_exact_and_zero_by_default() {
                 packed: true,
                 blast: BlastRadius::Single,
                 transition: Some(costs),
+                detect: None,
             }
             .run(&trace, StepMode::Exact)
         };
@@ -379,6 +388,7 @@ fn validation_sweep_bill_is_exact_and_zero_by_default() {
                 packed: true,
                 blast: BlastRadius::Single,
                 transition: Some(sweep_costs),
+                detect: None,
             }
             .run_replay_per_step(&trace, StepMode::Exact),
             "{}: per-step reference diverged",
@@ -498,6 +508,7 @@ fn exact_mode_is_refinement_invariant_on_scenario_traces() {
                 packed: true,
                 blast: BlastRadius::Single,
                 transition,
+                detect: None,
             };
             let base = fs.run(&trace, StepMode::Exact);
             for (label, extra) in

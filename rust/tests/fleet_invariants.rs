@@ -134,7 +134,7 @@ fn fixed_minibatch_needs_fewer_spares_with_ntp_pw() {
     let model = FailureModel::llama3().scaled(10.0);
     let mut rng = Rng::new(3);
     let trace = Trace::generate(&topo, &model, 24.0 * 10.0, &mut rng);
-    let policy = SparePolicy { spare_domains: spares, min_tp: 28 };
+    let policy = SparePolicy { spare_domains: spares, cold_domains: 0, min_tp: 28 };
 
     let run = |strategy: FtStrategy| {
         let fs = FleetSim {
@@ -146,6 +146,7 @@ fn fixed_minibatch_needs_fewer_spares_with_ntp_pw() {
             packed: true,
             blast: BlastRadius::Single,
             transition: None,
+            detect: None,
         };
         fs.run(&trace, StepMode::Exact)
     };

@@ -17,6 +17,12 @@
 //! turns a missing file into a hard failure instead of a bless — the
 //! verify-only mode that makes the pin bite on every checkout.
 //!
+//! Key handling is *additive*: pinned keys always verify bit-exactly,
+//! but keys the file has never seen (a freshly registered policy
+//! widening the grid) are blessed in place with a notice — growing the
+//! registry never forces a manual re-bless of numbers that did not
+//! move. Stale pinned keys (no longer produced) still hard-fail.
+//!
 //! Independent of the file, every entry is cross-checked in-run against
 //! the per-step replay path and the shared multi-policy sweep, so all
 //! three integration paths must agree bit-for-bit on the golden trace
@@ -90,9 +96,14 @@ fn golden_trace_pins_fleet_stats_for_every_policy() {
     // so the clamped-final-interval arithmetic is frozen too.
     for (mode_key, mode) in [("exact", StepMode::Exact), ("grid2h", StepMode::Grid(2.0))] {
         for transition in [None, Some(observed)] {
-            for spares in
-                [None, Some(SparePolicy { spare_domains: SPARE_DOMAINS, min_tp: 28 })]
-            {
+            for spares in [
+                None,
+                Some(SparePolicy {
+                    spare_domains: SPARE_DOMAINS,
+                    cold_domains: 0,
+                    min_tp: 28,
+                }),
+            ] {
                 // Cross-check all three integration paths on this config
                 // before pinning anything: shared sweep == event-driven
                 // per-policy run == per-step replay, bit for bit.
@@ -105,6 +116,7 @@ fn golden_trace_pins_fleet_stats_for_every_policy() {
                     packed: true,
                     blast: BlastRadius::Single,
                     transition,
+                    detect: None,
                 };
                 let shared = msim.run(&trace, mode);
                 for (i, &policy) in policies.iter().enumerate() {
@@ -117,6 +129,7 @@ fn golden_trace_pins_fleet_stats_for_every_policy() {
                         packed: true,
                         blast: BlastRadius::Single,
                         transition,
+                        detect: None,
                     };
                     let stats = fs.run(&trace, mode);
                     assert_eq!(
@@ -170,19 +183,49 @@ fn golden_trace_pins_fleet_stats_for_every_policy() {
             let want = Value::parse(&text)
                 .unwrap_or_else(|e| panic!("golden file is not valid JSON: {e}"));
             let want_map = want.as_obj().expect("golden file must be a JSON object");
-            assert_eq!(
-                want_map.len(),
-                entries.len(),
-                "golden entry count changed (policies or grid changed?) — \
-                 re-bless with UPDATE_GOLDEN=1 if intentional"
+            // Stale pinned keys — in the file but no longer produced —
+            // mean a policy or grid axis was REMOVED. That is never
+            // additive: hard-fail even in verify-only mode.
+            let produced: std::collections::HashSet<&str> =
+                entries.iter().map(|(k, _)| k.as_str()).collect();
+            let stale: Vec<&String> =
+                want_map.keys().filter(|k| !produced.contains(k.as_str())).collect();
+            assert!(
+                stale.is_empty(),
+                "golden file pins {} key(s) the test no longer produces (first: \
+                 '{}') — a policy or grid axis was removed; re-bless with \
+                 UPDATE_GOLDEN=1 if intentional",
+                stale.len(),
+                stale.first().map(|s| s.as_str()).unwrap_or("")
             );
+            // Already-pinned keys verify bit-exactly. Keys the pin has
+            // never seen (a freshly registered policy widening the grid)
+            // are ADDITIVE: bless them in place — growing the registry
+            // must not force a manual re-bless of numbers that did not
+            // move, and must not dodge verification of the ones pinned.
+            let mut fresh: Vec<&str> = Vec::new();
             for (key, stats) in &entries {
+                if !want_map.contains_key(key.as_str()) {
+                    fresh.push(key);
+                    continue;
+                }
                 assert_eq!(
                     want.get(key),
                     &stats_value(stats),
                     "FleetStats drifted from the golden record for '{key}'.\n\
                      If this change is intentional, re-bless with:\n\
                      UPDATE_GOLDEN=1 cargo test --test golden_trace"
+                );
+            }
+            if !fresh.is_empty() {
+                std::fs::write(GOLDEN_PATH, got.pretty()).expect("writing golden file");
+                eprintln!(
+                    "golden_trace: verified {} pinned key(s) bit-exactly and \
+                     appended {} new one(s) (first: '{}') to {GOLDEN_PATH} — \
+                     commit the diff to pin them",
+                    want_map.len(),
+                    fresh.len(),
+                    fresh[0]
                 );
             }
         }

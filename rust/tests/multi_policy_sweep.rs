@@ -87,7 +87,7 @@ fn shared_sweep_bit_identical_to_per_policy_runs() {
         let trace = Trace::generate(&topo, &model, horizon, &mut rng);
         let blast = [BlastRadius::Single, BlastRadius::Node][rng.index(2)];
         let spares = if spare_domains > 0 {
-            Some(SparePolicy { spare_domains, min_tp: 28 })
+            Some(SparePolicy { spare_domains, cold_domains: 0, min_tp: 28 })
         } else {
             // also exercises flexible mode (and unpacked flexible,
             // where the memo is bypassed entirely)
@@ -113,6 +113,7 @@ fn shared_sweep_bit_identical_to_per_policy_runs() {
                     packed,
                     blast,
                     transition,
+                    detect: None,
                 };
                 let shared = msim.run(&trace, mode);
                 for (i, &policy) in policies.iter().enumerate() {
@@ -125,6 +126,7 @@ fn shared_sweep_bit_identical_to_per_policy_runs() {
                         packed,
                         blast,
                         transition,
+                        detect: None,
                     };
                     let reference = fs.run(&trace, mode);
                     if shared[i] != reference {
@@ -171,7 +173,7 @@ fn memo_shared_across_trials_and_sweep_points_is_sound() {
             table: &table,
             domains_per_replica: PER_REPLICA,
             policies: &policies,
-            spares: Some(SparePolicy { spare_domains, min_tp: 28 }),
+            spares: Some(SparePolicy { spare_domains, cold_domains: 0, min_tp: 28 }),
             packed: true,
             blast: BlastRadius::Single,
             transition: Some(TransitionCosts {
@@ -179,6 +181,9 @@ fn memo_shared_across_trials_and_sweep_points_is_sound() {
                 checkpoint_interval_secs: 3600.0,
                 reshard_secs: 2.0,
                 spare_load_secs: 300.0,
+                cold_spare_load_secs: 1800.0,
+                preempt_secs: 5.0,
+                rejoin_secs: 45.0,
                 ckpt_write_secs: 120.0,
                 power_ramp_secs: 60.0,
                 // nonzero: CKPT-ADAPTIVE's rate-dependent responses and
@@ -186,6 +191,7 @@ fn memo_shared_across_trials_and_sweep_points_is_sound() {
                 failure_rate_per_hour: 0.8,
                 validation_sweep_secs: 0.0,
             }),
+            detect: None,
         };
         with_shared.extend(msim.run_trials(&traces, StepMode::Exact, &mut shared_memo));
         for trace in &traces {
@@ -234,7 +240,7 @@ fn transition_memo_charges_are_bit_identical() {
     let mut rng = Rng::new(0xC0DE);
     let trace = Trace::generate(&topo, &model, 24.0 * 18.0, &mut rng);
     let transition = Some(TransitionCosts::model(&sim, &cfg).with_observed_rate(&trace));
-    for spares in [None, Some(SparePolicy { spare_domains, min_tp: 28 })] {
+    for spares in [None, Some(SparePolicy { spare_domains, cold_domains: 0, min_tp: 28 })] {
         let msim = MultiPolicySim {
             topo: &topo,
             table: &table,
@@ -244,6 +250,7 @@ fn transition_memo_charges_are_bit_identical() {
             packed: true,
             blast: BlastRadius::Single,
             transition,
+            detect: None,
         };
         let mut memo = msim.memo();
         let cold = msim.run_with(&trace, StepMode::Exact, &mut memo);
@@ -268,6 +275,7 @@ fn transition_memo_charges_are_bit_identical() {
                 packed: true,
                 blast: BlastRadius::Single,
                 transition,
+                detect: None,
             }
             .run(&trace, StepMode::Exact);
             assert_eq!(
@@ -299,7 +307,7 @@ fn packed_responses_depend_only_on_damage_multiset() {
         shuffle(&mut job_perm, &mut rng);
         // The live pool exactly as the sweep derives it from the tail.
         let live = spare_tail.iter().filter(|&&h| h == DOMAIN_SIZE).count();
-        for spares in [None, Some(SparePolicy { spare_domains: live, min_tp: 28 })] {
+        for spares in [None, Some(SparePolicy { spare_domains: live, cold_domains: 0, min_tp: 28 })] {
             let ctx = PolicyCtx {
                 table: &table,
                 domain_size: DOMAIN_SIZE,

@@ -86,7 +86,7 @@ fn ctx_grid<'a>(
     transitions: &[Option<TransitionCosts>],
 ) -> Vec<PolicyCtx<'a>> {
     let mut out = Vec::new();
-    for spares in [None, Some(SparePolicy { spare_domains: 3, min_tp: 28 })] {
+    for spares in [None, Some(SparePolicy { spare_domains: 3, cold_domains: 0, min_tp: 28 })] {
         for packed in [false, true] {
             for &transition in transitions {
                 out.push(PolicyCtx {
@@ -163,7 +163,7 @@ fn legacy_ports_bit_identical_to_pre_refactor_paths() {
         let healthy = random_healthy(&mut rng, JOB_DOMAINS + SPARE_DOMAINS);
         for strategy in [FtStrategy::DpDrop, FtStrategy::Ntp, FtStrategy::NtpPw] {
             for spares in
-                [None, Some(SparePolicy { spare_domains: SPARE_DOMAINS, min_tp: 28 })]
+                [None, Some(SparePolicy { spare_domains: SPARE_DOMAINS, cold_domains: 0, min_tp: 28 })]
             {
                 for packed in [false, true] {
                     let fs = FleetSim {
@@ -175,6 +175,7 @@ fn legacy_ports_bit_identical_to_pre_refactor_paths() {
                         packed,
                         blast: BlastRadius::Single,
                         transition: None, // costs disabled => bit-identical
+                        detect: None,
                     };
                     let got = fs.evaluate(&healthy);
                     let want = pre_refactor_evaluate(

@@ -246,6 +246,7 @@ fn fleet_stats_bit_identical_on_scenario_traces() {
             packed: true,
             blast: BlastRadius::Single,
             transition,
+            detect: None,
         };
         let swept = msim.run(&trace, StepMode::Exact);
         for (pi, &policy) in policies.iter().enumerate() {
@@ -258,6 +259,7 @@ fn fleet_stats_bit_identical_on_scenario_traces() {
                 packed: true,
                 blast: BlastRadius::Single,
                 transition,
+                detect: None,
             };
             let fast = fs.run(&trace, StepMode::Exact);
             let slow = fs.run_replay_per_step(&trace, StepMode::Exact);
@@ -362,7 +364,7 @@ fn fleet_stats_bit_identical_for_every_policy_and_spares() {
     // against straight-line replay_to on the exact timeline too.
     for (mode, trace) in [(StepMode::Grid(1.5), &trace), (StepMode::Exact, &trace_short)] {
         for policy in registry::all() {
-            for spares in [None, Some(SparePolicy { spare_domains: 6, min_tp: 28 })] {
+            for spares in [None, Some(SparePolicy { spare_domains: 6, cold_domains: 0, min_tp: 28 })] {
                 for blast in [BlastRadius::Single, BlastRadius::Gpus(2)] {
                     for transition in [None, Some(TransitionCosts::model(&sim, &cfg))] {
                         let fs = FleetSim {
@@ -374,6 +376,7 @@ fn fleet_stats_bit_identical_for_every_policy_and_spares() {
                             packed: true,
                             blast,
                             transition,
+                            detect: None,
                         };
                         let fast = fs.run(trace, mode);
                         let slow = fs.run_replay_per_step(trace, mode);

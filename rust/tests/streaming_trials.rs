@@ -94,10 +94,11 @@ fn streaming_trials_bit_identical_to_materialized() {
             table: &table,
             domains_per_replica: PER_REPLICA,
             policies: &policies,
-            spares: Some(SparePolicy { spare_domains, min_tp: 28 }),
+            spares: Some(SparePolicy { spare_domains, cold_domains: 0, min_tp: 28 }),
             packed: true,
             blast: BlastRadius::Single,
             transition,
+            detect: None,
         };
         for mode in [StepMode::Exact, StepMode::Grid(2.0)] {
             // Sequential, one shared memo on each side.
@@ -152,7 +153,7 @@ fn incremental_sweep_matches_rebuild_oracle() {
         let tgen = TrialGen::new(&topo, &model, &hot_scenario(kind), horizon, seed, 2);
         let blast = [BlastRadius::Single, BlastRadius::Node][rng.index(2)];
         let spares = (spare_domains > 0)
-            .then_some(SparePolicy { spare_domains, min_tp: 28 });
+            .then_some(SparePolicy { spare_domains, cold_domains: 0, min_tp: 28 });
         let transition = rng
             .chance(0.5)
             .then(|| TransitionCosts::model(&sim, &cfg));
@@ -166,6 +167,7 @@ fn incremental_sweep_matches_rebuild_oracle() {
                 packed,
                 blast,
                 transition,
+                detect: None,
             };
             for trace in &tgen.traces() {
                 let incremental = msim.run_with(trace, StepMode::Exact, &mut msim.memo());
@@ -209,10 +211,11 @@ fn cross_point_hits_track_point_epochs() {
             table: &table,
             domains_per_replica: PER_REPLICA,
             policies: &policies,
-            spares: Some(SparePolicy { spare_domains, min_tp: 28 }),
+            spares: Some(SparePolicy { spare_domains, cold_domains: 0, min_tp: 28 }),
             packed: true,
             blast: BlastRadius::Single,
             transition: costs,
+            detect: None,
         };
         msim.run_trials_stream(&gen, StepMode::Exact, memo)
     };
