@@ -22,7 +22,12 @@
 #                       BENCH_scenarios_quick.json); plus the elastic
 #                       smoke: the Fig 7c elastic-DP / two-tier-spare /
 #                       detection-latency acceptance sweep (writes
-#                       BENCH_elastic_quick.json)
+#                       BENCH_elastic_quick.json); plus the energy
+#                       smoke: the Fig 13 throughput-per-watt ranking
+#                       asserting the NTP-PW vs DP-DROP tokens/J
+#                       ordering, the traditional-rack boost collapse
+#                       and the dark-spare saving (writes
+#                       BENCH_energy_quick.json)
 
 CARGO    ?= cargo
 MANIFEST := rust/Cargo.toml
@@ -55,3 +60,4 @@ bench-quick:
 	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick --streaming-only
 	$(CARGO) bench --bench fig12_scenarios --manifest-path $(MANIFEST) -- --quick
 	$(CARGO) bench --bench fig7_spares --manifest-path $(MANIFEST) -- --quick
+	$(CARGO) bench --bench fig13_energy --manifest-path $(MANIFEST) -- --quick

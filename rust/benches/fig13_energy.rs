@@ -1,0 +1,283 @@
+//! Fig. 13 (extension): energy co-simulation — every registered policy
+//! ranked on throughput-per-watt over the same exact event timeline the
+//! throughput sweeps integrate.
+//!
+//! Pins the headline energy claims of the power model:
+//!
+//! * under failures on a flexible (1.3×-provisioned) rack, boosted NTP
+//!   (`ntp-pw`) beats replica dropping on tokens/J — the boost watts
+//!   buy back strictly more throughput than they cost, while DP-DROP
+//!   keeps paying for warm-idle GPUs in dropped replicas;
+//! * a traditional (1.0×) rack zeroes the boost credit: NTP-PW's
+//!   throughput AND power collapse bit-identically onto plain NTP's;
+//! * the dark spare pool is visible in the power integral: POWER-SPARES
+//!   draws strictly less mean fleet power than the warm-pool SPARE-MIG
+//!   it delegates its capacity response to, at bit-identical throughput.
+//!
+//! `--quick` runs the same assertions at reduced scale (Makefile
+//! `bench-quick`) and writes `BENCH_energy_quick.json` (uploaded as a
+//! CI artifact).
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{BlastRadius, FailureModel, Trace};
+use ntp::manager::{FleetStats, MultiPolicySim, SparePolicy, StepMode, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, TransitionCosts};
+use ntp::power::RackDesign;
+use ntp::sim::{IterationModel, SimParams};
+use ntp::util::bench::{arg_flag, JsonReport};
+use ntp::util::prng::Rng;
+use ntp::util::table::{f4, Table};
+
+const SEED: u64 = 13;
+const SPARE_DOMAINS: usize = 4;
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fig13_energy.json");
+const QUICK_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_energy_quick.json");
+
+/// gpt-480b on a 2048-GPU NVL32 slice (16 replicas of TP32 × PP4) plus
+/// a 4-domain spare pool, under the given rack design.
+fn setup(rack: &RackDesign) -> (IterationModel, ParallelConfig, StrategyTable, Topology) {
+    let model = presets::model("gpt-480b").unwrap();
+    let cluster = presets::cluster("paper-32k-nvl32").unwrap();
+    let w = WorkloadConfig { seq_len: 16_384, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 };
+    let cfg = ParallelConfig { tp: 32, pp: 4, dp: 16, microbatch: 1 };
+    let sim = IterationModel::new(model, w, cluster.clone(), SimParams::default());
+    let table = StrategyTable::build(&sim, &cfg, rack);
+    let topo = Topology::of(
+        (cfg.dp * cfg.pp + SPARE_DOMAINS) * cfg.tp,
+        cfg.tp,
+        cluster.gpus_per_node,
+    );
+    (sim, cfg, table, topo)
+}
+
+/// One forked PRNG stream per trial so every rack variant sweeps the
+/// identical trace batch.
+fn gen_traces(topo: &Topology, fmodel: &FailureModel, days: f64, trials: usize) -> Vec<Trace> {
+    let mut rng = Rng::new(SEED);
+    (0..trials)
+        .map(|i| {
+            let mut r = rng.fork(i as u64);
+            Trace::generate(topo, fmodel, days * 24.0, &mut r)
+        })
+        .collect()
+}
+
+fn mean_over(per_trial: &[Vec<FleetStats>], pi: usize, f: impl Fn(&FleetStats) -> f64) -> f64 {
+    per_trial.iter().map(|t| f(&t[pi])).sum::<f64>() / per_trial.len() as f64
+}
+
+/// Per-policy energy summary over a trial batch.
+struct EnergyRow {
+    name: &'static str,
+    net_tput: f64,
+    /// Steady-state throughput (no transition downtime) — the channel
+    /// delegating policies share bit-identically even when their
+    /// transition bills differ (POWER-SPARES pays a power ramp on top
+    /// of SPARE-MIG's, so `net_tput` legitimately diverges).
+    steady_tput: f64,
+    mean_power: f64,
+    energy_per_token: f64,
+    peak_rack: f64,
+}
+
+/// Run every registered policy over the batch and fold the energy
+/// stats; asserts the basic reporting contract (every policy reports a
+/// positive, bounded power draw and a positive J/token) on the way.
+fn energy_rows(
+    table: &StrategyTable,
+    topo: &Topology,
+    cfg: &ParallelConfig,
+    traces: &[Trace],
+    transition: Option<TransitionCosts>,
+) -> Vec<EnergyRow> {
+    let policies = registry::all();
+    let msim = MultiPolicySim {
+        topo,
+        table,
+        domains_per_replica: cfg.pp,
+        policies: &policies,
+        spares: Some(SparePolicy { spare_domains: SPARE_DOMAINS, cold_domains: 0, min_tp: 28 }),
+        packed: true,
+        blast: BlastRadius::Single,
+        transition,
+        detect: None,
+    };
+    let per_trial = msim.run_trials(traces, StepMode::Exact, &mut msim.memo());
+    // The spare pool is provisioned on top of the job GPUs, so a warm
+    // pool can push the job-normalized fleet fraction slightly above
+    // the boost cap × job share — bound with the pool slack included.
+    let slack = (SPARE_DOMAINS * cfg.tp) as f64 / topo.n_gpus as f64;
+    let cap = table.rack.gpu_boost_cap * (1.0 + slack) + 1e-12;
+    policies
+        .iter()
+        .enumerate()
+        .map(|(pi, p)| {
+            let row = EnergyRow {
+                name: p.name(),
+                net_tput: mean_over(&per_trial, pi, FleetStats::net_throughput),
+                steady_tput: mean_over(&per_trial, pi, |s| s.mean_throughput),
+                mean_power: mean_over(&per_trial, pi, |s| s.mean_power_frac),
+                energy_per_token: mean_over(&per_trial, pi, |s| s.energy_per_token()),
+                peak_rack: per_trial
+                    .iter()
+                    .map(|t| t[pi].peak_rack_power_frac)
+                    .fold(0.0f64, f64::max),
+            };
+            assert!(
+                row.mean_power > 0.0 && row.mean_power <= cap,
+                "{}: mean power {} outside (0, {cap}]",
+                row.name,
+                row.mean_power
+            );
+            assert!(
+                row.energy_per_token > 0.0 && row.energy_per_token.is_finite(),
+                "{}: energy/token {}",
+                row.name,
+                row.energy_per_token
+            );
+            row
+        })
+        .collect()
+}
+
+fn find<'a>(rows: &'a [EnergyRow], name: &str) -> &'a EnergyRow {
+    rows.iter().find(|r| r.name == name).unwrap_or_else(|| panic!("no row for {name}"))
+}
+
+/// The shared assertion block — identical claims at full and `--quick`
+/// scale, so the CI smoke pins the same physics as the figure run.
+fn assert_energy_claims(flex: &[EnergyRow], trad: &[EnergyRow], report: &mut JsonReport) {
+    // (a) Boosted NTP beats replica dropping on tokens/J under failures.
+    let pw = find(flex, "NTP-PW");
+    let drop = find(flex, "DP-DROP");
+    let tokens_per_joule = |r: &EnergyRow| r.net_tput / r.mean_power;
+    assert!(
+        tokens_per_joule(pw) > tokens_per_joule(drop),
+        "NTP-PW tokens/J {} must beat DP-DROP {} under failures",
+        tokens_per_joule(pw),
+        tokens_per_joule(drop)
+    );
+    assert!(
+        pw.energy_per_token < drop.energy_per_token,
+        "NTP-PW J/token {} must undercut DP-DROP {}",
+        pw.energy_per_token,
+        drop.energy_per_token
+    );
+    // Boost watts are real: NTP-PW's peak-domain draw is never below
+    // plain NTP's on the flexible rack.
+    let ntp = find(flex, "NTP");
+    assert!(
+        pw.peak_rack >= ntp.peak_rack,
+        "NTP-PW peak rack {} below NTP {}",
+        pw.peak_rack,
+        ntp.peak_rack
+    );
+    report.scalar("flex_ntp_pw_tokens_per_joule", tokens_per_joule(pw));
+    report.scalar("flex_dp_drop_tokens_per_joule", tokens_per_joule(drop));
+
+    // (b) Traditional rack: the boost credit is exactly zero — NTP-PW
+    // collapses bit-identically onto NTP, in both integrals.
+    let t_pw = find(trad, "NTP-PW");
+    let t_ntp = find(trad, "NTP");
+    assert_eq!(
+        t_pw.net_tput, t_ntp.net_tput,
+        "traditional rack: NTP-PW throughput must collapse onto NTP"
+    );
+    assert_eq!(
+        t_pw.mean_power, t_ntp.mean_power,
+        "traditional rack: NTP-PW power must collapse onto NTP"
+    );
+    assert_eq!(t_pw.peak_rack, t_ntp.peak_rack);
+    report.scalar("trad_boost_credit", t_pw.mean_power - t_ntp.mean_power);
+
+    // (c) The dark pool saves real watts: POWER-SPARES draws strictly
+    // less mean fleet power than the warm-pool SPARE-MIG it delegates
+    // to, at bit-identical throughput.
+    let dark = find(flex, "POWER-SPARES");
+    let warm = find(flex, "SPARE-MIG");
+    assert_eq!(
+        dark.steady_tput, warm.steady_tput,
+        "POWER-SPARES must keep SPARE-MIG's capacity response bit-identically"
+    );
+    assert!(
+        dark.mean_power < warm.mean_power,
+        "dark pool invisible: POWER-SPARES {} vs SPARE-MIG {}",
+        dark.mean_power,
+        warm.mean_power
+    );
+    report.scalar("dark_pool_power_saving", warm.mean_power - dark.mean_power);
+}
+
+fn print_ranking(label: &str, rows: &[EnergyRow], report: &mut JsonReport, key_prefix: &str) {
+    println!("\n=== Fig 13: throughput-per-watt ranking ({label}) ===\n");
+    let mut order: Vec<&EnergyRow> = rows.iter().collect();
+    order.sort_by(|a, b| {
+        (b.net_tput / b.mean_power).total_cmp(&(a.net_tput / a.mean_power))
+    });
+    let mut t = Table::new(&["policy", "net tput", "mean power", "J/token", "peak rack"]);
+    for r in &order {
+        t.row(&[
+            r.name.into(),
+            f4(r.net_tput),
+            f4(r.mean_power),
+            f4(r.energy_per_token),
+            f4(r.peak_rack),
+        ]);
+    }
+    t.print();
+    for r in rows {
+        let k = r.name.to_lowercase().replace('-', "_");
+        report.scalar(&format!("{key_prefix}{k}_energy_per_token"), r.energy_per_token);
+        report.scalar(&format!("{key_prefix}{k}_mean_power_frac"), r.mean_power);
+        report.scalar(&format!("{key_prefix}{k}_peak_rack_power_frac"), r.peak_rack);
+    }
+}
+
+fn run(days: f64, trials: usize, quick: bool) {
+    let flex_rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let (sim, cfg, flex_table, topo) = setup(&flex_rack);
+    let (_, _, trad_table, _) = setup(&RackDesign::traditional());
+    // Hot enough that reduced-TP (boosted) intervals dominate the
+    // horizon even at quick scale.
+    let fmodel = FailureModel::llama3().scaled(8.0);
+    let traces = gen_traces(&topo, &fmodel, days, trials);
+    let n_events: usize = traces.iter().map(|t| t.events.len()).sum();
+    assert!(n_events > 0, "energy bench generated no failures");
+    let costs = TransitionCosts::model(&sim, &cfg);
+
+    let mut report = JsonReport::new(if quick { "energy_quick" } else { "fig13_energy" });
+    report.scalar("seed", SEED as f64);
+    report.scalar("days", days);
+    report.scalar("trials", trials as f64);
+    report.scalar("n_gpus", topo.n_gpus as f64);
+    report.scalar("events", n_events as f64);
+    report.scalar("gpu_boost_cap", flex_rack.gpu_boost_cap);
+    report.scalar("rack_budget_frac", flex_rack.rack_budget_frac);
+
+    let flex = energy_rows(&flex_table, &topo, &cfg, &traces, Some(costs));
+    let trad = energy_rows(&trad_table, &topo, &cfg, &traces, Some(costs));
+    print_ranking("flexible rack, 1.3x budget", &flex, &mut report, "");
+    assert_energy_claims(&flex, &trad, &mut report);
+    println!(
+        "\nNTP-PW {:.4} J/token vs DP-DROP {:.4} | dark pool saves {:.4} of fleet TDP",
+        find(&flex, "NTP-PW").energy_per_token,
+        find(&flex, "DP-DROP").energy_per_token,
+        find(&flex, "SPARE-MIG").mean_power - find(&flex, "POWER-SPARES").mean_power,
+    );
+
+    let path = if quick { QUICK_PATH } else { OUT_PATH };
+    match report.write(path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nWARNING: could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if arg_flag("--quick") {
+        run(4.0, 3, true);
+    } else {
+        run(15.0, 4, false);
+    }
+}

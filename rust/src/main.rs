@@ -153,6 +153,18 @@ USAGE: ntp <subcommand> [options]
                 [--false-positive-rate R] (false alarms per GPU-day;
                 each charges the policy's false-positive bill, e.g.
                 STRAGGLER-EVICT evicts + re-admits a healthy domain)
+                rack power/energy design (power is integrated exactly on
+                the event timeline; the table/JSON report mean_power_frac,
+                energy_per_token and peak_rack_power_frac per policy):
+                [--traditional-rack] (no boost budget at all: NTP-PW's
+                boost credit collapses to plain NTP)
+                [--thermal-headroom-secs S] (boost sustainable for S
+                seconds before recovering at nominal; default infinite —
+                bit-exact no-op) [--thermal-recover-frac R] (cooling
+                rate relative to heating; 1.0 = 50% duty cycle)
+                [--row-domains D] (domains per rack row; enables the
+                row-level power cap) [--row-budget-frac B] (row budget
+                over nominal; bounds concurrently-boosted domains)
   sweep         --clusters paper-32k-nvl32[,paper-100k-nvl72,...]
                 --rate-x 1,2,5,10,20 --spares 0,2,4,6,8
                 --scen-x 0.5,1,2,4 (scenario-generator rate multipliers)
@@ -554,6 +566,14 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let detect_latency = args.opt_f64("detect-latency");
     let degrade_detect_latency = args.opt_f64("degrade-detect-latency");
     let false_positive_rate = args.opt_f64("false-positive-rate");
+    // Rack power/thermal design knobs (energy co-simulation). Defaults
+    // reproduce RackDesign::default() bit-for-bit, so runs without
+    // these flags match the pre-energy goldens on every existing key.
+    let traditional_rack = args.flag("traditional-rack");
+    let thermal_headroom_secs = args.opt_f64("thermal-headroom-secs");
+    let thermal_recover_frac = args.opt_f64("thermal-recover-frac");
+    let row_domains = args.opt_usize("row-domains");
+    let row_budget_frac = args.opt_f64("row-budget-frac");
     // Scenario diversity: which failure process the trace generator
     // draws from (independent per-GPU Poisson by default).
     let scen = scenario_from_args(args)?;
@@ -658,7 +678,33 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let cfg = ParallelConfig { tp, pp, dp: n_replicas, microbatch: 1 };
     let gpus_per_node = cluster.gpus_per_node;
     let sim = IterationModel::new(model, w, cluster, SimParams::default());
-    let rack = RackDesign::default();
+    anyhow::ensure!(
+        thermal_recover_frac.map(|r| r > 0.0).unwrap_or(true),
+        "--thermal-recover-frac must be positive"
+    );
+    anyhow::ensure!(
+        !(traditional_rack
+            && (thermal_headroom_secs.is_some()
+                || thermal_recover_frac.is_some()
+                || row_domains.is_some()
+                || row_budget_frac.is_some())),
+        "--traditional-rack (no boost at all) conflicts with the boost-shaping flags \
+         (--thermal-headroom-secs/--thermal-recover-frac/--row-domains/--row-budget-frac)"
+    );
+    let mut rack =
+        if traditional_rack { RackDesign::traditional() } else { RackDesign::default() };
+    if let Some(s) = thermal_headroom_secs {
+        rack.thermal.headroom_secs = s;
+    }
+    if let Some(r) = thermal_recover_frac {
+        rack.thermal.recover_frac = r;
+    }
+    if let Some(d) = row_domains {
+        rack.row_domains = d;
+    }
+    if let Some(b) = row_budget_frac {
+        rack.row_budget_frac = b;
+    }
     let table = StrategyTable::build(&sim, &cfg, &rack);
     let n_domains = n_replicas * cfg.pp + spares.unwrap_or(0);
     let topo = Topology::of(n_domains * tp, tp, gpus_per_node);
@@ -777,7 +823,7 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
 
     let mut out = Table::new(&[
         "policy", "mean tput", "±95%", "net tput", "tput/GPU", "paused", "downtime",
-        "donated", "spares used", "transitions",
+        "donated", "spares used", "transitions", "power", "J/tok", "peak rack",
     ]);
     let mut rep = JsonReport::new("fleet");
     rep.scalar("days", days);
@@ -830,6 +876,9 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
             spares_used,
             transitions,
             tput_ci95,
+            mean_power,
+            energy_per_token,
+            peak_rack_power,
         ) = match &stream_agg {
             Some(agg) => {
                 let a = &agg[pi];
@@ -843,6 +892,9 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
                     a.mean_spares_used(),
                     a.mean_transitions(),
                     a.tput_ci95(),
+                    a.mean_power_frac(),
+                    a.mean_energy_per_token(),
+                    a.peak_rack_power_frac(),
                 )
             }
             None => {
@@ -860,6 +912,12 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
                     mean_over(&|s| s.mean_spares_used, pi),
                     mean_over(&|s| s.transitions as f64, pi),
                     w.ci95(),
+                    mean_over(&|s| s.mean_power_frac, pi),
+                    mean_over(&|s| s.energy_per_token(), pi),
+                    per_trial
+                        .iter()
+                        .map(|trial| trial[pi].peak_rack_power_frac)
+                        .fold(0.0f64, f64::max),
                 )
             }
         };
@@ -878,6 +936,9 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
             } else {
                 f2(transitions)
             },
+            f4(mean_power),
+            f4(energy_per_token),
+            f4(peak_rack_power),
         ]);
         let key = policy.name().to_ascii_lowercase().replace('-', "_");
         rep.scalar(&format!("{key}_mean_tput"), mean_tput);
@@ -888,6 +949,9 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         rep.scalar(&format!("{key}_downtime_frac"), downtime);
         rep.scalar(&format!("{key}_donated"), donated);
         rep.scalar(&format!("{key}_transitions"), transitions);
+        rep.scalar(&format!("{key}_mean_power_frac"), mean_power);
+        rep.scalar(&format!("{key}_energy_per_token"), energy_per_token);
+        rep.scalar(&format!("{key}_peak_rack_power_frac"), peak_rack_power);
     }
     if json {
         println!("{}", rep.to_json().pretty());

@@ -287,6 +287,34 @@ fn table_fingerprint(table: &StrategyTable) -> u64 {
     }
     table.reshard_overhead.to_bits().hash(&mut h);
     table.straggler_phi.to_bits().hash(&mut h);
+    // The rack design shapes every policy's power snapshot (and
+    // NTP-PW's row-boost allowance), so two tables differing only in
+    // rack knobs must not share cached responses. Exhaustive
+    // destructuring: adding a RackDesign field without hashing it here
+    // becomes a compile error.
+    let crate::power::RackDesign {
+        gpu_boost_cap,
+        rack_budget_frac,
+        thermal: crate::power::ThermalModel { headroom_secs, recover_frac },
+        standby_frac,
+        idle_frac,
+        degraded_derate,
+        row_domains,
+        row_budget_frac,
+    } = table.rack;
+    for v in [
+        gpu_boost_cap,
+        rack_budget_frac,
+        headroom_secs,
+        recover_frac,
+        standby_frac,
+        idle_frac,
+        degraded_derate,
+        row_budget_frac,
+    ] {
+        v.to_bits().hash(&mut h);
+    }
+    row_domains.hash(&mut h);
     h.finish()
 }
 
@@ -390,6 +418,9 @@ pub struct PolicyAggregate {
     sum_donated: f64,
     sum_spares_used: f64,
     sum_transitions: f64,
+    sum_power_frac: f64,
+    sum_energy_per_token: f64,
+    peak_power: f64,
 }
 
 impl PolicyAggregate {
@@ -407,6 +438,11 @@ impl PolicyAggregate {
         self.sum_donated += s.mean_donated;
         self.sum_spares_used += s.mean_spares_used;
         self.sum_transitions += s.transitions as f64;
+        self.sum_power_frac += s.mean_power_frac;
+        self.sum_energy_per_token += s.energy_per_token();
+        if s.peak_rack_power_frac > self.peak_power {
+            self.peak_power = s.peak_rack_power_frac;
+        }
     }
 
     /// Merge another batch's fold (parallel workers, batch order).
@@ -421,6 +457,11 @@ impl PolicyAggregate {
         self.sum_donated += other.sum_donated;
         self.sum_spares_used += other.sum_spares_used;
         self.sum_transitions += other.sum_transitions;
+        self.sum_power_frac += other.sum_power_frac;
+        self.sum_energy_per_token += other.sum_energy_per_token;
+        if other.peak_power > self.peak_power {
+            self.peak_power = other.peak_power;
+        }
     }
 
     /// Trials folded in.
@@ -471,6 +512,23 @@ impl PolicyAggregate {
     /// Mean per-trial reconfiguration count.
     pub fn mean_transitions(&self) -> f64 {
         self.mean(self.sum_transitions)
+    }
+
+    /// Mean per-trial `mean_power_frac`.
+    pub fn mean_power_frac(&self) -> f64 {
+        self.mean(self.sum_power_frac)
+    }
+
+    /// Mean per-trial `energy_per_token()` (computed per trial then
+    /// averaged, exactly like the stored-per-trial CLI path).
+    pub fn mean_energy_per_token(&self) -> f64 {
+        self.mean(self.sum_energy_per_token)
+    }
+
+    /// Max per-trial `peak_rack_power_frac` — a max over trials of a
+    /// max over the horizon, so batch order cannot change it.
+    pub fn peak_rack_power_frac(&self) -> f64 {
+        self.peak_power
     }
 
     /// Half-width of the normal-approximation 95% confidence interval
@@ -1871,6 +1929,8 @@ mod tests {
             downtime_frac: 0.05,
             transitions,
             mean_donated: 0.2,
+            mean_power_frac: 0.5 + tput / 4.0,
+            peak_rack_power_frac: tput + 0.3,
         };
         let trials = [mk(0.9, 3), mk(0.8, 5), mk(0.95, 1), mk(0.7, 9)];
         let mut whole = PolicyAggregate::default();
@@ -1886,6 +1946,16 @@ mod tests {
             trials.iter().map(|s| s.net_throughput()).sum::<f64>() / n
         );
         assert_eq!(whole.mean_transitions(), (3 + 5 + 1 + 9) as f64 / n);
+        assert_eq!(
+            whole.mean_power_frac(),
+            trials.iter().map(|s| s.mean_power_frac).sum::<f64>() / n
+        );
+        assert_eq!(
+            whole.mean_energy_per_token(),
+            trials.iter().map(|s| s.energy_per_token()).sum::<f64>() / n
+        );
+        // Peak is a max over trials: 0.95 + 0.3.
+        assert_eq!(whole.peak_rack_power_frac(), 0.95 + 0.3);
         // CI against the direct two-pass sample variance.
         let var =
             trials.iter().map(|s| (s.mean_throughput - mean).powi(2)).sum::<f64>() / (n - 1.0);

@@ -56,12 +56,17 @@ pub(crate) fn restart_capacity_respond(
         ),
     };
     let paused = ctx.spares.is_some() && replica_tp.iter().any(|&tp| tp < ctx.domain_size);
+    // The restart family never boosts: healthy GPUs draw nominal power,
+    // paused fleets idle at the rack's idle floor.
+    let (power, rack_power) = super::snapshot_power(ctx, job_healthy, paused, 1.0);
     PolicyResponse {
         replicas: legacy::decisions(ctx.table, &replica_tp, FtStrategy::DpDrop),
         paused,
         spares_used,
         overhead: 1.0,
         donated: 0.0,
+        power,
+        rack_power,
     }
 }
 
@@ -103,8 +108,9 @@ pub(crate) fn restart_capacity_respond_with(
         }
     };
     let paused = ctx.spares.is_some() && s.replica_tp.iter().any(|&tp| tp < ctx.domain_size);
+    let (power, rack_power) = super::snapshot_power(ctx, job_healthy, paused, 1.0);
     if paused {
-        return EvalOut { tput: 0.0, paused: true, spares_used, donated: 0.0 };
+        return EvalOut { tput: 0.0, paused: true, spares_used, donated: 0.0, power, rack_power };
     }
     let processed: usize = s
         .replica_tp
@@ -119,6 +125,8 @@ pub(crate) fn restart_capacity_respond_with(
         paused: false,
         spares_used,
         donated: 0.0,
+        power,
+        rack_power,
     }
 }
 

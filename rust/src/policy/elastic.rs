@@ -74,6 +74,10 @@ impl FtPolicy for ElasticDp {
                 0,
             ),
         };
+        // Never boosts; dropped replicas' healthy GPUs stay warm (they
+        // are live peers waiting to rejoin, not powered-down hardware),
+        // so the fleet draw is the plain healthy-GPU snapshot.
+        let (power, rack_power) = super::snapshot_power(ctx, job_healthy, false, 1.0);
         PolicyResponse {
             replicas: legacy::decisions(ctx.table, &replica_tp, FtStrategy::DpDrop),
             // Never pauses: the elastic world rescales its minibatch.
@@ -81,6 +85,8 @@ impl FtPolicy for ElasticDp {
             spares_used,
             overhead: 1.0,
             donated: 0.0,
+            power,
+            rack_power,
         }
     }
 
@@ -127,6 +133,7 @@ impl FtPolicy for ElasticDp {
             .map(|&tp| ctx.table.replica_batch(tp, FtStrategy::DpDrop))
             .sum();
         let capacity = ctx.table.full_local_batch * s.replica_tp.len();
+        let (power, rack_power) = super::snapshot_power(ctx, job_healthy, false, 1.0);
         // overhead is exactly 1.0 (uniform TP, no reshard within a
         // replica): multiplying by it is a bitwise no-op, omitted.
         EvalOut {
@@ -134,6 +141,8 @@ impl FtPolicy for ElasticDp {
             paused: false,
             spares_used,
             donated: 0.0,
+            power,
+            rack_power,
         }
     }
 

@@ -76,6 +76,127 @@ pub fn overhead_for(
     }
 }
 
+/// Consume `dpr` boosted domains from a row allowance. `None` means the
+/// rack imposes no row cap (every grant succeeds — the default, which
+/// keeps the no-cap path bit-identical to the pre-cap walk).
+fn grant(allowance: &mut Option<usize>, dpr: usize) -> bool {
+    match allowance {
+        None => true,
+        Some(a) => {
+            if *a < dpr {
+                false
+            } else {
+                *a -= dpr;
+                true
+            }
+        }
+    }
+}
+
+/// One NTP-PW replica's `(batch, power)` under a running row-boost
+/// allowance. With the allowance off (`None`) this reproduces the
+/// original per-replica logic of [`decisions`] operation-for-operation;
+/// a replica denied a boost grant falls back to the *plain-NTP* batch
+/// at nominal power (the rack refuses the watts, so the replica runs
+/// the unboosted reduced-TP configuration instead).
+fn pw_replica(
+    table: &crate::manager::StrategyTable,
+    allowance: &mut Option<usize>,
+    dpr: usize,
+    tp: usize,
+) -> (usize, f64) {
+    if tp >= table.full_tp {
+        return (table.full_local_batch, 1.0);
+    }
+    if tp < table.min_tp {
+        return (0, 0.0);
+    }
+    let i = tp - table.min_tp;
+    let boost = table.power[i];
+    if let Some(b) = boost {
+        if b > 1.0 && !grant(allowance, dpr) {
+            let batch = table.batch[i];
+            return (batch, if batch == 0 { 0.0 } else { 1.0 });
+        }
+    }
+    let batch = table.batch_pw[i];
+    (batch, if batch == 0 { 0.0 } else { boost.unwrap_or(1.0) })
+}
+
+/// Walk a TP-degree vector under NTP-PW with the rack's row-boost
+/// allowance, returning `(processed, extra_gpu_draw, peak_domain_frac)`:
+/// total batch processed, the *extra* GPU-equivalents of draw beyond
+/// nominal from boosted survivors, and the hottest single-domain power
+/// fraction the boosts produce. Replicas are visited in the same packed
+/// order as [`decisions`], so grants are deterministic for a given
+/// damage multiset.
+fn pw_walk(
+    table: &crate::manager::StrategyTable,
+    domains_per_replica: usize,
+    replica_tp: &[usize],
+) -> (usize, f64, f64) {
+    let mut allowance =
+        table.rack.row_boost_allowance(replica_tp.len() * domains_per_replica);
+    let mut processed = 0usize;
+    let mut extra = 0.0f64;
+    let mut peak = 0.0f64;
+    for &tp in replica_tp {
+        let (batch, power) = pw_replica(table, &mut allowance, domains_per_replica, tp);
+        processed += batch;
+        if power > 1.0 {
+            extra += (power - 1.0) * (tp * domains_per_replica) as f64;
+            let frac = power * tp as f64 / table.full_tp as f64;
+            if frac > peak {
+                peak = frac;
+            }
+        }
+    }
+    (processed, extra, peak)
+}
+
+/// Per-replica decisions for NTP-PW under the rack's row-boost
+/// allowance — the same walk as [`pw_walk`], materialized. With the row
+/// cap off this is bit-identical to `decisions(table, replica_tp,
+/// FtStrategy::NtpPw)`.
+fn pw_decisions(
+    table: &crate::manager::StrategyTable,
+    domains_per_replica: usize,
+    replica_tp: &[usize],
+) -> Vec<ReplicaDecision> {
+    let mut allowance =
+        table.rack.row_boost_allowance(replica_tp.len() * domains_per_replica);
+    replica_tp
+        .iter()
+        .map(|&tp| {
+            let (batch, power) = pw_replica(table, &mut allowance, domains_per_replica, tp);
+            ReplicaDecision { tp, batch, power }
+        })
+        .collect()
+}
+
+/// Fleet power fraction + hottest-domain draw for a legacy-strategy
+/// snapshot: the base healthy/idle draw from
+/// [`super::snapshot_power`], plus — for NTP-PW only — the boosted
+/// survivors' extra draw from the same allowance walk that sets the
+/// replica decisions.
+fn legacy_power(
+    ctx: &PolicyCtx,
+    job_healthy: &[usize],
+    replica_tp: &[usize],
+    strategy: FtStrategy,
+    paused: bool,
+) -> (f64, f64) {
+    let (mut power, mut rack_power) = super::snapshot_power(ctx, job_healthy, paused, 1.0);
+    if !paused && strategy == FtStrategy::NtpPw {
+        let (_, extra, peak) = pw_walk(ctx.table, ctx.domains_per_replica, replica_tp);
+        power += extra / ctx.n_gpus as f64;
+        if peak > rack_power {
+            rack_power = peak;
+        }
+    }
+    (power, rack_power)
+}
+
 impl FtPolicy for LegacyPolicy {
     fn name(&self) -> &'static str {
         self.strategy.name()
@@ -92,12 +213,21 @@ impl FtPolicy for LegacyPolicy {
                     ctx.packed,
                 );
                 let overhead = overhead_for(ctx.table, &replica_tp, self.strategy);
+                let replicas = if self.strategy == FtStrategy::NtpPw {
+                    pw_decisions(ctx.table, ctx.domains_per_replica, &replica_tp)
+                } else {
+                    decisions(ctx.table, &replica_tp, self.strategy)
+                };
+                let (power, rack_power) =
+                    legacy_power(ctx, job_healthy, &replica_tp, self.strategy, false);
                 PolicyResponse {
-                    replicas: decisions(ctx.table, &replica_tp, self.strategy),
+                    replicas,
                     paused: false,
                     spares_used: 0,
                     overhead,
                     donated: 0.0,
+                    power,
+                    rack_power,
                 }
             }
             Some(policy) => {
@@ -128,12 +258,21 @@ impl FtPolicy for LegacyPolicy {
                 };
                 let overhead =
                     overhead_for(ctx.table, &o.assignment.replica_tp, self.strategy);
+                let replicas = if self.strategy == FtStrategy::NtpPw {
+                    pw_decisions(ctx.table, ctx.domains_per_replica, &o.assignment.replica_tp)
+                } else {
+                    decisions(ctx.table, &o.assignment.replica_tp, self.strategy)
+                };
+                let (power, rack_power) =
+                    legacy_power(ctx, job_healthy, &o.assignment.replica_tp, self.strategy, !ok);
                 PolicyResponse {
-                    replicas: decisions(ctx.table, &o.assignment.replica_tp, self.strategy),
+                    replicas,
                     paused: !ok,
                     spares_used: o.spares_used,
                     overhead,
                     donated: 0.0,
+                    power,
+                    rack_power,
                 }
             }
         }
@@ -155,18 +294,25 @@ impl FtPolicy for LegacyPolicy {
                     &mut s.pack,
                     &mut s.replica_tp,
                 );
-                let processed: usize = s
-                    .replica_tp
-                    .iter()
-                    .map(|&tp| ctx.table.replica_batch(tp, self.strategy))
-                    .sum();
+                let processed: usize = if self.strategy == FtStrategy::NtpPw {
+                    pw_walk(ctx.table, ctx.domains_per_replica, &s.replica_tp).0
+                } else {
+                    s.replica_tp
+                        .iter()
+                        .map(|&tp| ctx.table.replica_batch(tp, self.strategy))
+                        .sum()
+                };
                 let capacity = ctx.table.full_local_batch * s.replica_tp.len();
                 let overhead = overhead_for(ctx.table, &s.replica_tp, self.strategy);
+                let (power, rack_power) =
+                    legacy_power(ctx, job_healthy, &s.replica_tp, self.strategy, false);
                 EvalOut {
                     tput: processed as f64 / capacity as f64 * overhead,
                     paused: false,
                     spares_used: 0,
                     donated: 0.0,
+                    power,
+                    rack_power,
                 }
             }
             Some(policy) => {
@@ -201,20 +347,36 @@ impl FtPolicy for LegacyPolicy {
                     }
                 };
                 if !ok {
-                    return EvalOut { tput: 0.0, paused: true, spares_used, donated: 0.0 };
+                    let (power, rack_power) =
+                        legacy_power(ctx, job_healthy, &s.replica_tp, self.strategy, true);
+                    return EvalOut {
+                        tput: 0.0,
+                        paused: true,
+                        spares_used,
+                        donated: 0.0,
+                        power,
+                        rack_power,
+                    };
                 }
-                let processed: usize = s
-                    .replica_tp
-                    .iter()
-                    .map(|&tp| ctx.table.replica_batch(tp, self.strategy))
-                    .sum();
+                let processed: usize = if self.strategy == FtStrategy::NtpPw {
+                    pw_walk(ctx.table, ctx.domains_per_replica, &s.replica_tp).0
+                } else {
+                    s.replica_tp
+                        .iter()
+                        .map(|&tp| ctx.table.replica_batch(tp, self.strategy))
+                        .sum()
+                };
                 let capacity = ctx.table.full_local_batch * s.replica_tp.len();
                 let overhead = overhead_for(ctx.table, &s.replica_tp, self.strategy);
+                let (power, rack_power) =
+                    legacy_power(ctx, job_healthy, &s.replica_tp, self.strategy, false);
                 EvalOut {
                     tput: processed as f64 / capacity as f64 * overhead,
                     paused: false,
                     spares_used,
                     donated: 0.0,
+                    power,
+                    rack_power,
                 }
             }
         }

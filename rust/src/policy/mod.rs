@@ -130,6 +130,17 @@ pub struct PolicyResponse {
     /// dark-spare rack power saved (`POWER-SPARES`). Exactly `0.0` for
     /// policies with no secondary channel.
     pub donated: f64,
+    /// Fleet power draw of this snapshot as a fraction of `n_gpus ×
+    /// TDP`: healthy GPUs at their boost level, failed GPUs at 0, dark
+    /// spares at standby, a paused job at the idle floor
+    /// ([`snapshot_power`]). Piecewise-constant between health changes,
+    /// so the exact event-boundary sweep integrates it with zero
+    /// quantization — exactly like throughput.
+    pub power: f64,
+    /// Draw of the hottest scale-up domain, as a fraction of
+    /// `domain_size × TDP` — the peak-rack headroom a datacenter
+    /// operator provisions for ([`crate::manager::FleetStats::peak_rack_power_frac`]).
+    pub rack_power: f64,
 }
 
 impl PolicyResponse {
@@ -158,6 +169,10 @@ pub struct EvalOut {
     pub spares_used: usize,
     /// Secondary-channel capacity fraction ([`PolicyResponse::donated`]).
     pub donated: f64,
+    /// Fleet power fraction ([`PolicyResponse::power`]).
+    pub power: f64,
+    /// Hottest-domain draw fraction ([`PolicyResponse::rack_power`]).
+    pub rack_power: f64,
 }
 
 impl EvalOut {
@@ -168,8 +183,63 @@ impl EvalOut {
             paused: resp.paused,
             spares_used: resp.spares_used,
             donated: resp.donated,
+            power: resp.power,
+            rack_power: resp.rack_power,
         }
     }
+}
+
+/// Fleet power fraction + hottest-domain draw of one snapshot, shared
+/// by every policy's `respond` / `respond_with` pair (identical call,
+/// identical operations — the conformance suite pins the two paths
+/// bit-for-bit through [`EvalOut`]'s `PartialEq`).
+///
+/// The base model, before any policy-specific surcharge (NTP-PW boost)
+/// or credit (dark spares):
+///
+/// * every healthy GPU (job domains *and* the live spare pool) draws
+///   nominal TDP; failed GPUs draw 0 — on a zero-failure snapshot with
+///   a consistent context (`n_gpus` = job + spare GPUs) the fleet
+///   fraction is **exactly 1.0** (`n/n`, an exact division);
+/// * `spare_frac` scales the live spare pool's draw (1.0 = warm
+///   standby; `POWER-SPARES` subtracts its dark-pool saving on top);
+/// * a paused job idles everything at [`crate::power::RackDesign::idle_frac`]
+///   (clocks floored, HBM refreshed) — the "paused ⇒ idle-power floor"
+///   conformance invariant;
+/// * the hottest-domain draw is the fullest job domain's healthy
+///   fraction (boost surcharges raise it above 1.0 where granted).
+///
+/// Both outputs are pure functions of the damage *multiset* (a sum and
+/// a max over domains) plus the context — the invariant that makes the
+/// cached [`EvalOut`]s of the shared sweep's snapshot-signature memo
+/// safe to reuse across permutations.
+pub(crate) fn snapshot_power(
+    ctx: &PolicyCtx,
+    job_healthy: &[usize],
+    paused: bool,
+    spare_frac: f64,
+) -> (f64, f64) {
+    let rack = &ctx.table.rack;
+    let healthy: usize = job_healthy.iter().sum();
+    let spare_gpus = ctx.spares.map(|p| p.spare_domains * ctx.domain_size).unwrap_or(0);
+    let n = ctx.n_gpus as f64;
+    if paused {
+        let draw = (healthy + spare_gpus) as f64 * rack.idle_frac;
+        let peak = if healthy + spare_gpus > 0 { rack.idle_frac } else { 0.0 };
+        return (draw / n, peak);
+    }
+    let draw = healthy as f64 + spare_gpus as f64 * spare_frac;
+    let mut peak = 0.0f64;
+    for &h in job_healthy {
+        let frac = h as f64 / ctx.domain_size as f64;
+        if frac > peak {
+            peak = frac;
+        }
+    }
+    if spare_gpus > 0 && spare_frac > peak {
+        peak = spare_frac;
+    }
+    (draw / n, peak)
 }
 
 /// Reusable buffers threaded through [`FtPolicy::respond_with`] so the
@@ -245,6 +315,14 @@ pub trait FtPolicy: Send + Sync {
     /// and this collapses bit-exactly to the plain respond path.
     /// `STRAGGLER-EVICT` overrides it to treat degraded GPUs as failed
     /// instead (reshard away the straggler, keep full group pace).
+    ///
+    /// Power: a degraded GPU runs slow because it runs capped
+    /// (thermal throttle, flaky link retraining), so each one is
+    /// derated from nominal draw to
+    /// [`crate::power::RackDesign::degraded_derate`]. The guard keeps
+    /// the zero-degradation collapse bit-exact (no subtraction at all),
+    /// and the hottest-domain draw is left conservative (the hottest
+    /// domain need not be the degraded one).
     fn eval_degraded(
         &self,
         ctx: &PolicyCtx,
@@ -252,9 +330,13 @@ pub trait FtPolicy: Send + Sync {
         job_degraded: &[usize],
         job_slowdowns: &[f64],
     ) -> EvalOut {
-        let _ = job_degraded;
         let mut out = EvalOut::of(&self.respond(ctx, job_healthy), ctx.table.full_local_batch);
         out.tput *= ctx.table.group_drag(job_healthy, job_slowdowns);
+        let degraded: usize = job_degraded.iter().sum();
+        if !out.paused && degraded > 0 {
+            out.power -=
+                degraded as f64 * (1.0 - ctx.table.rack.degraded_derate) / ctx.n_gpus as f64;
+        }
         out
     }
 
@@ -271,9 +353,13 @@ pub trait FtPolicy: Send + Sync {
         job_slowdowns: &[f64],
         scratch: &mut EvalScratch,
     ) -> EvalOut {
-        let _ = job_degraded;
         let mut out = self.respond_with(ctx, job_healthy, scratch);
         out.tput *= ctx.table.group_drag(job_healthy, job_slowdowns);
+        let degraded: usize = job_degraded.iter().sum();
+        if !out.paused && degraded > 0 {
+            out.power -=
+                degraded as f64 * (1.0 - ctx.table.rack.degraded_derate) / ctx.n_gpus as f64;
+        }
         out
     }
 

@@ -19,7 +19,7 @@
 
 use super::spare_migration::{migrated_domains, SPARE_MIGRATION};
 use super::{EvalOut, EvalScratch, FtPolicy, PolicyCtx, PolicyResponse};
-use crate::power::RackDesign;
+use crate::power::{RackDesign, ThermalModel};
 
 #[derive(Clone, Debug)]
 pub struct PowerSpares {
@@ -31,7 +31,16 @@ pub struct PowerSpares {
 }
 
 pub static POWER_SPARES: PowerSpares = PowerSpares {
-    rack: RackDesign { gpu_boost_cap: 1.3, rack_budget_frac: 1.3 },
+    rack: RackDesign {
+        gpu_boost_cap: 1.3,
+        rack_budget_frac: 1.3,
+        thermal: ThermalModel::UNLIMITED,
+        standby_frac: 0.15,
+        idle_frac: 0.15,
+        degraded_derate: 0.7,
+        row_domains: 0,
+        row_budget_frac: 1.0,
+    },
     standby_power_frac: 0.15,
 };
 
@@ -51,6 +60,20 @@ impl PowerSpares {
         let freed_budget = (self.rack.rack_budget_frac - self.standby_power_frac).max(0.0);
         dark_gpus as f64 * freed_budget / ctx.n_gpus as f64
     }
+
+    /// Real power *saved* by the dark pool versus the delegated warm
+    /// pool: `SPARE-MIG`'s snapshot counts every spare GPU at nominal
+    /// draw, but an unused dark domain sips only the fleet-wide
+    /// [`RackDesign::standby_frac`] (the table's rack, so the CLI's
+    /// rack knobs govern it — unlike the frozen `donated` credit, which
+    /// keeps this policy's own provisioning constants). Pure in the
+    /// damage multiset (depends only on the configured pool and
+    /// `spares_used`), so the memoized response stays valid.
+    fn dark_power_saving(&self, ctx: &PolicyCtx, spares_used: usize) -> f64 {
+        let Some(pool) = ctx.spares else { return 0.0 };
+        let dark_gpus = pool.spare_domains.saturating_sub(spares_used) * ctx.domain_size;
+        dark_gpus as f64 * (1.0 - ctx.table.rack.standby_frac) / ctx.n_gpus as f64
+    }
 }
 
 impl FtPolicy for PowerSpares {
@@ -61,6 +84,9 @@ impl FtPolicy for PowerSpares {
     fn respond(&self, ctx: &PolicyCtx, job_healthy: &[usize]) -> PolicyResponse {
         let mut resp = SPARE_MIGRATION.respond(ctx, job_healthy);
         resp.donated = self.dark_credit(ctx, resp.spares_used);
+        if !resp.paused {
+            resp.power -= self.dark_power_saving(ctx, resp.spares_used);
+        }
         resp
     }
 
@@ -72,6 +98,9 @@ impl FtPolicy for PowerSpares {
     ) -> EvalOut {
         let mut out = SPARE_MIGRATION.respond_with(ctx, job_healthy, s);
         out.donated = self.dark_credit(ctx, out.spares_used);
+        if !out.paused {
+            out.power -= self.dark_power_saving(ctx, out.spares_used);
+        }
         out
     }
 

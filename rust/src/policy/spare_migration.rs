@@ -72,7 +72,11 @@ impl FtPolicy for SpareMigration {
         let capacity = ctx.table.full_local_batch * replicas.len().max(1);
         let frac = processed as f64 / capacity as f64;
         let paused = ctx.spares.is_some() && frac < self.min_capacity_frac;
-        PolicyResponse { replicas, paused, spares_used, overhead, donated: 0.0 }
+        // Plain-NTP shrink — no boost, so migrated-in spares draw full
+        // nominal power (spare_frac = 1.0: the pool is kept warm here;
+        // the dark-standby variant is `POWER-SPARES`).
+        let (power, rack_power) = super::snapshot_power(ctx, job_healthy, paused, 1.0);
+        PolicyResponse { replicas, paused, spares_used, overhead, donated: 0.0, power, rack_power }
     }
 
     fn respond_with(
@@ -118,8 +122,9 @@ impl FtPolicy for SpareMigration {
         let capacity = ctx.table.full_local_batch * s.replica_tp.len().max(1);
         let frac = processed as f64 / capacity as f64;
         let paused = ctx.spares.is_some() && frac < self.min_capacity_frac;
+        let (power, rack_power) = super::snapshot_power(ctx, job_healthy, paused, 1.0);
         if paused {
-            return EvalOut { tput: 0.0, paused: true, spares_used, donated: 0.0 };
+            return EvalOut { tput: 0.0, paused: true, spares_used, donated: 0.0, power, rack_power };
         }
         let throughput_capacity = ctx.table.full_local_batch * s.replica_tp.len();
         EvalOut {
@@ -127,6 +132,8 @@ impl FtPolicy for SpareMigration {
             paused: false,
             spares_used,
             donated: 0.0,
+            power,
+            rack_power,
         }
     }
 

@@ -62,7 +62,11 @@ impl FtPolicy for StragglerEvict {
         job_slowdowns: &[f64],
     ) -> EvalOut {
         // Degraded GPUs count as failed; the evicted group runs at full
-        // pace, so the slowdown factors are irrelevant here.
+        // pace, so the slowdown factors are irrelevant here. Power falls
+        // out the same way: the evicted straggler is powered down, so
+        // the NTP snapshot on the adjusted counts already excludes its
+        // draw (no derate term — the default derate path applies only to
+        // *tolerated* stragglers).
         let _ = job_slowdowns;
         let effective: Vec<usize> = job_healthy
             .iter()

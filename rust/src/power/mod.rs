@@ -7,4 +7,4 @@ pub mod allocator;
 pub mod rack;
 
 pub use allocator::{min_boost_for, BoostDecision};
-pub use rack::RackDesign;
+pub use rack::{RackDesign, ThermalModel};

@@ -5,10 +5,75 @@
 //! matching GH200's 700 W → 900 W dynamic balancing), with the row-level
 //! budget oversubscribed: the *expected* draw stays near nominal because
 //! boosting only happens in domains that have failed (power-free) GPUs.
+//!
+//! Beyond the per-domain boost budget, the model carries everything the
+//! fleet-wide power integrand needs (the `power` channel of
+//! [`crate::policy::EvalOut`], integrated duration-weighted by
+//! `manager::Accum`): the standby draw of dark spare domains
+//! (`POWER-SPARES`), the idle floor of a paused job, the derate of a
+//! degraded (throttling) GPU, a boost-sustainability model
+//! ([`ThermalModel`] — boost only while thermal headroom lasts), and a
+//! row-level power cap bounding how many boosted domains may coexist
+//! ([`RackDesign::row_boost_allowance`]). Every addition defaults to
+//! the pre-power behavior bit-exactly: infinite thermal headroom
+//! returns the untouched boost, and `row_domains == 0` disables the
+//! row cap.
 
 use crate::config::GpuSpec;
 
-#[derive(Clone, Debug)]
+/// Boost sustainability: a domain can hold boosted clocks only while
+/// its thermal headroom (cold-plate / cooling-loop margin) lasts, then
+/// must fall back to nominal power to recover. The model caps the
+/// *sustained* boost as the duty-cycled average of the boost/recover
+/// cycle; [`ThermalModel::UNLIMITED`] (infinite headroom, the default)
+/// collapses bit-exactly to the unthrottled behavior.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThermalModel {
+    /// Seconds a domain can hold boost before exhausting its thermal
+    /// headroom. `f64::INFINITY` (the default) disables the model;
+    /// `0.0` forbids sustained boost entirely.
+    pub headroom_secs: f64,
+    /// Cooling rate relative to heating: after `headroom_secs` of
+    /// boost the domain recovers at nominal power for
+    /// `headroom_secs / recover_frac` before it can boost again
+    /// (`1.0` = cools as fast as it heats, a 50% duty cycle).
+    pub recover_frac: f64,
+}
+
+impl ThermalModel {
+    /// Infinite headroom: boost is sustainable forever —
+    /// [`ThermalModel::sustained`] is the bit-exact identity.
+    pub const UNLIMITED: ThermalModel =
+        ThermalModel { headroom_secs: f64::INFINITY, recover_frac: 1.0 };
+
+    /// The boost level a domain can *sustain* given its thermal
+    /// headroom: the duty-cycled average of `headroom_secs` at `boost`
+    /// followed by `headroom_secs / recover_frac` at nominal.
+    ///
+    /// Bit-exactness contract: with infinite headroom — or when the
+    /// input does not boost at all (`boost <= 1.0`, including the
+    /// `0.0` of a dead domain) — the input is returned untouched, so
+    /// the default model cannot perturb any existing result.
+    pub fn sustained(&self, boost: f64) -> f64 {
+        if !(boost > 1.0) || self.headroom_secs.is_infinite() {
+            return boost;
+        }
+        if self.headroom_secs <= 0.0 {
+            return 1.0;
+        }
+        let on = self.headroom_secs;
+        let off = on / self.recover_frac.max(1e-9);
+        1.0 + (boost - 1.0) * on / (on + off)
+    }
+}
+
+impl Default for ThermalModel {
+    fn default() -> Self {
+        ThermalModel::UNLIMITED
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RackDesign {
     /// Max sustained per-GPU power as a fraction of TDP.
     pub gpu_boost_cap: f64,
@@ -16,36 +81,88 @@ pub struct RackDesign {
     /// traditional rack; the flexible design keeps 1.0 nominal but allows
     /// per-GPU boost inside it).
     pub rack_budget_frac: f64,
+    /// Boost sustainability ([`ThermalModel::sustained`] caps
+    /// [`RackDesign::max_boost`]); [`ThermalModel::UNLIMITED`] by
+    /// default, which is a bit-exact no-op.
+    pub thermal: ThermalModel,
+    /// Standby draw of a dark (power-capped) spare domain as a
+    /// fraction of TDP (VR/HBM retention + fabric keep-alive) —
+    /// `POWER-SPARES` keeps its unused pool here.
+    pub standby_frac: f64,
+    /// Draw of a healthy-but-idle GPU while the job is paused, as a
+    /// fraction of TDP (clocks floored, HBM refreshed, links up).
+    pub idle_frac: f64,
+    /// Draw of a degraded (thermally throttling / flaky) GPU as a
+    /// fraction of TDP — stragglers run slow because they run capped.
+    pub degraded_derate: f64,
+    /// Scale-up domains per rack row for the row-level power cap; `0`
+    /// (the default) disables the cap.
+    pub row_domains: usize,
+    /// Row power budget as a fraction of `row_domains × domain_size ×
+    /// TDP` — bounds how many boosted domains may coexist per row
+    /// ([`RackDesign::row_boost_allowance`]).
+    pub row_budget_frac: f64,
 }
 
 impl Default for RackDesign {
     fn default() -> Self {
-        RackDesign { gpu_boost_cap: 1.3, rack_budget_frac: 1.3 }
+        RackDesign {
+            gpu_boost_cap: 1.3,
+            rack_budget_frac: 1.3,
+            thermal: ThermalModel::UNLIMITED,
+            standby_frac: 0.15,
+            idle_frac: 0.15,
+            degraded_derate: 0.7,
+            row_domains: 0,
+            row_budget_frac: 1.0,
+        }
     }
 }
 
 /// A traditional rack: no boosting at all.
 impl RackDesign {
     pub fn traditional() -> RackDesign {
-        RackDesign { gpu_boost_cap: 1.0, rack_budget_frac: 1.0 }
+        RackDesign { gpu_boost_cap: 1.0, rack_budget_frac: 1.0, ..RackDesign::default() }
     }
 
     /// Maximum uniform boost (fraction of TDP) available to the `healthy`
     /// survivors of a domain of `domain_size` GPUs: limited by the GPU
-    /// cap and by the rack budget with failed GPUs' power repurposed.
+    /// cap, by the rack budget with failed GPUs' power repurposed, and
+    /// by the sustained-boost thermal model (a bit-exact pass-through
+    /// with the default infinite headroom).
     pub fn max_boost(&self, domain_size: usize, healthy: usize) -> f64 {
         if healthy == 0 {
             return 0.0;
         }
         let rack_limit =
             self.rack_budget_frac * domain_size as f64 / healthy as f64;
-        self.gpu_boost_cap.min(rack_limit.max(1.0))
+        self.thermal.sustained(self.gpu_boost_cap.min(rack_limit.max(1.0)))
     }
 
     /// Net domain power draw (fraction of nominal `domain_size × TDP`)
     /// when `healthy` GPUs run at `boost` × TDP.
     pub fn domain_power_frac(&self, domain_size: usize, healthy: usize, boost: f64) -> f64 {
         healthy as f64 * boost / domain_size as f64
+    }
+
+    /// Fleet-wide count of domains allowed to run boosted under the
+    /// row-level power cap, or `None` when the cap is off
+    /// (`row_domains == 0`) or the rack cannot boost at all. Each row
+    /// of `row_domains` domains carries `(row_budget_frac − 1) ×
+    /// row_domains` domains' worth of budget above nominal; a boosted
+    /// domain draws up to `gpu_boost_cap − 1` above nominal, so a row
+    /// sustains `floor(row_domains × (row_budget_frac − 1) /
+    /// (gpu_boost_cap − 1))` boosted domains. The allowance is pooled
+    /// over the fleet's rows (placement within rows is the resource
+    /// manager's concern, not this electrical model's).
+    pub fn row_boost_allowance(&self, n_domains: usize) -> Option<usize> {
+        if self.row_domains == 0 || self.gpu_boost_cap <= 1.0 {
+            return None;
+        }
+        let per_row = (self.row_domains as f64 * (self.row_budget_frac - 1.0).max(0.0)
+            / (self.gpu_boost_cap - 1.0))
+            .floor() as usize;
+        Some(per_row * n_domains.div_ceil(self.row_domains))
     }
 
     /// Perf-per-watt penalty of running at `boost` × TDP (relative to
@@ -64,6 +181,10 @@ mod tests {
     fn traditional_rack_never_boosts() {
         let r = RackDesign::traditional();
         assert_eq!(r.max_boost(32, 30), 1.0);
+        // the whole healthy range, not just one point
+        for healthy in 1..=32 {
+            assert_eq!(r.max_boost(32, healthy), 1.0, "healthy {healthy}");
+        }
     }
 
     #[test]
@@ -81,9 +202,109 @@ mod tests {
 
         // A rack with only nominal budget: boost limited to the
         // repurposed power of the failed GPUs.
-        let nominal = RackDesign { gpu_boost_cap: 1.3, rack_budget_frac: 1.0 };
+        let nominal =
+            RackDesign { gpu_boost_cap: 1.3, rack_budget_frac: 1.0, ..RackDesign::default() };
         assert!((nominal.max_boost(32, 30) - 32.0 / 30.0).abs() < 1e-12);
         assert_eq!(nominal.max_boost(32, 32), 1.0);
+    }
+
+    #[test]
+    fn max_boost_edge_cases() {
+        let r = RackDesign::default();
+        // healthy == 0: a dead domain draws (and boosts) nothing.
+        assert_eq!(r.max_boost(32, 0), 0.0);
+        assert_eq!(RackDesign::traditional().max_boost(32, 0), 0.0);
+        // healthy == domain_size: cap-bound on the flexible rack,
+        // exactly nominal on the traditional one.
+        assert_eq!(r.max_boost(32, 32), 1.3);
+        assert_eq!(RackDesign::traditional().max_boost(32, 32), 1.0);
+        // rack_budget_frac < 1.0 (a derated/brownout row): the
+        // `max(1.0)` floor guarantees survivors still get nominal
+        // power — the model never starves a healthy GPU below TDP.
+        let derated =
+            RackDesign { gpu_boost_cap: 1.3, rack_budget_frac: 0.8, ..RackDesign::default() };
+        assert_eq!(derated.max_boost(32, 32), 1.0);
+        assert_eq!(derated.max_boost(32, 30), 1.0);
+        // a single survivor of a derated rack still gets the GPU cap
+        // (budget floor × repurposed power dominates)
+        assert_eq!(derated.max_boost(32, 1), 1.3);
+    }
+
+    #[test]
+    fn thermal_unlimited_collapses_bit_exactly() {
+        // Satellite contract: headroom=∞ must reproduce the
+        // no-thermal path to the bit, for every (domain, healthy)
+        // shape and every budget that exercises cap-, budget- and
+        // floor-bound boosts.
+        let unthrottled = |rack: &RackDesign, ds: usize, h: usize| -> f64 {
+            // the pre-thermal formula, verbatim
+            if h == 0 {
+                return 0.0;
+            }
+            let rack_limit = rack.rack_budget_frac * ds as f64 / h as f64;
+            rack.gpu_boost_cap.min(rack_limit.max(1.0))
+        };
+        for budget in [0.8, 1.0, 1.15, 1.3] {
+            let r = RackDesign {
+                gpu_boost_cap: 1.3,
+                rack_budget_frac: budget,
+                thermal: ThermalModel { headroom_secs: f64::INFINITY, recover_frac: 0.25 },
+                ..RackDesign::default()
+            };
+            for ds in [8usize, 32, 72] {
+                for h in 0..=ds {
+                    assert_eq!(
+                        r.max_boost(ds, h).to_bits(),
+                        unthrottled(&r, ds, h).to_bits(),
+                        "budget {budget} ds {ds} h {h}"
+                    );
+                }
+            }
+        }
+        // the identity also holds through `sustained` directly,
+        // including the non-boosting inputs 0.0 and 1.0
+        for b in [0.0, 0.5, 1.0, 1.2, 1.3] {
+            assert_eq!(ThermalModel::UNLIMITED.sustained(b).to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn thermal_headroom_caps_sustained_boost() {
+        // zero headroom: no boost can be sustained at all
+        let none = ThermalModel { headroom_secs: 0.0, recover_frac: 1.0 };
+        assert_eq!(none.sustained(1.3), 1.0);
+        // finite headroom: strictly between nominal and the ask;
+        // symmetric heat/cool (recover_frac = 1) is a 50% duty cycle
+        let even = ThermalModel { headroom_secs: 600.0, recover_frac: 1.0 };
+        let s = even.sustained(1.3);
+        assert!((s - 1.15).abs() < 1e-12, "50% duty of 1.3 is 1.15, got {s}");
+        // slower cooling sustains less
+        let slow = ThermalModel { headroom_secs: 600.0, recover_frac: 0.5 };
+        assert!(slow.sustained(1.3) < s);
+        // a thermally-limited rack's max_boost shrinks but never
+        // below nominal for a live domain
+        let r = RackDesign { thermal: even, ..RackDesign::default() };
+        assert!((r.max_boost(32, 30) - 1.15).abs() < 1e-12);
+        assert!(r.max_boost(32, 31) >= 1.0);
+        assert_eq!(r.max_boost(32, 0), 0.0);
+    }
+
+    #[test]
+    fn row_cap_bounds_boosted_domains() {
+        // cap off by default
+        assert_eq!(RackDesign::default().row_boost_allowance(96), None);
+        // a traditional rack cannot boost, so the cap is moot
+        let trad = RackDesign { row_domains: 8, ..RackDesign::traditional() };
+        assert_eq!(trad.row_boost_allowance(96), None);
+        // 8 domains per row, 10% row headroom, 30% boost per domain:
+        // floor(8 × 0.1 / 0.3) = 2 boosted domains per row
+        let r = RackDesign { row_domains: 8, row_budget_frac: 1.1, ..RackDesign::default() };
+        assert_eq!(r.row_boost_allowance(96), Some(2 * 12));
+        // partial rows round up to a whole row's allowance
+        assert_eq!(r.row_boost_allowance(9), Some(2 * 2));
+        // a row with no headroom allows no boosted domains
+        let tight = RackDesign { row_domains: 8, row_budget_frac: 1.0, ..RackDesign::default() };
+        assert_eq!(tight.row_boost_allowance(96), Some(0));
     }
 
     #[test]

@@ -525,3 +525,133 @@ fn exact_mode_is_refinement_invariant_on_scenario_traces() {
         }
     }
 }
+
+/// Hand-oracle for the energy integral: 2048 GPUs, one failure at
+/// exactly half the horizon, a non-boosting policy. Power is 1.0 for
+/// the first half and `2047/2048` for the second, so the
+/// duration-weighted mean is `1 − (1/2048)/2 = 4095/4096` — every
+/// division is by a power of two, so the integrator must land on it
+/// **to the bit**, in exact mode, on the clamped grid, and through the
+/// per-step replay reference.
+///
+/// (Refinement invariance of the energy integral needs no test of its
+/// own: `mean_power_frac` and `peak_rack_power_frac` are `FleetStats`
+/// fields, so every `assert_eq!`-on-stats refinement test above —
+/// 12 policies × 4 scenario generators × Exact/Grid — now pins the
+/// energy channel too.)
+#[test]
+fn energy_integral_matches_hand_oracle_to_the_bit() {
+    let (_sim, _cfg, table) = setup();
+    let job_domains = 64usize; // 64 × 32 = 2048 GPUs
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let trace = Trace {
+        horizon_hours: 2.0,
+        events: vec![FailureEvent {
+            at_hours: 1.0,
+            gpu: 0,
+            is_hw: true,
+            recover_at_hours: 100.0,
+            kind: EventKind::Fail,
+        }],
+    };
+    let fs = FleetSim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: PER_REPLICA,
+        policy: FtStrategy::Ntp.policy(),
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition: None,
+        detect: None,
+    };
+    let expected = 1.0 - (1.0 / 2048.0) / 2.0; // = 4095/4096, exact
+    let exact = fs.run(&trace, StepMode::Exact);
+    assert_eq!(exact.mean_power_frac, expected);
+    // Other domains stay full, so the hottest domain never leaves 1.0.
+    assert_eq!(exact.peak_rack_power_frac, 1.0);
+    // energy_per_token is the derived ratio of the two integrals.
+    assert_eq!(
+        exact.energy_per_token(),
+        exact.mean_power_frac / exact.net_throughput()
+    );
+    // A 0.5 h grid samples the boundary exactly; the replay reference
+    // must agree bit-for-bit on all three paths.
+    assert_eq!(fs.run(&trace, StepMode::Grid(0.5)).mean_power_frac, expected);
+    assert_eq!(fs.run_replay_per_step(&trace, StepMode::Exact), exact);
+    let healthy = Trace { horizon_hours: 2.0, events: vec![] };
+    assert_eq!(fs.run(&healthy, StepMode::Exact).mean_power_frac, 1.0);
+    assert_eq!(fs.run(&healthy, StepMode::Exact).peak_rack_power_frac, 1.0);
+}
+
+/// The energy channel is strictly an *observer*: varying the rack's
+/// power-accounting knobs (`idle_frac`, `standby_frac`,
+/// `degraded_derate`) moves only the power stats — every throughput,
+/// pause, downtime, spare and donation stat stays bit-identical, for
+/// every registered policy. (The shaping knobs — boost cap, thermal,
+/// row caps — legitimately move throughput; they are exercised in
+/// `power::rack` and the allocator tests.)
+#[test]
+fn power_accounting_knobs_never_move_throughput() {
+    let (sim, cfg, _table) = setup();
+    let job_domains = 16usize;
+    let spare_domains = 4usize;
+    let topo = Topology::of((job_domains + spare_domains) * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(25.0);
+    let mut rng = Rng::new(0x9E7);
+    let trace = Trace::generate(&topo, &model, 24.0 * 8.0, &mut rng);
+    assert!(!trace.events.is_empty());
+    let transition = Some(TransitionCosts::model(&sim, &cfg));
+
+    let base_rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let tweaked_rack = RackDesign {
+        idle_frac: 0.08,
+        standby_frac: 0.05,
+        degraded_derate: 0.5,
+        ..base_rack
+    };
+    let base_table = StrategyTable::build(&sim, &cfg, &base_rack);
+    let tweaked_table = StrategyTable::build(&sim, &cfg, &tweaked_rack);
+    // Accounting knobs must not leak into the batch/boost tables.
+    assert_eq!(base_table.batch, tweaked_table.batch);
+    assert_eq!(base_table.batch_pw, tweaked_table.batch_pw);
+
+    let spares = Some(SparePolicy { spare_domains, cold_domains: 0, min_tp: 28 });
+    for policy in registry::all() {
+        let run = |table: &StrategyTable| {
+            FleetSim {
+                topo: &topo,
+                table,
+                domains_per_replica: PER_REPLICA,
+                policy,
+                spares,
+                packed: true,
+                blast: BlastRadius::Single,
+                transition,
+                detect: None,
+            }
+            .run(&trace, StepMode::Exact)
+        };
+        let a = run(&base_table);
+        let b = run(&tweaked_table);
+        let name = policy.name();
+        assert_eq!(a.mean_throughput, b.mean_throughput, "{name}");
+        assert_eq!(a.paused_frac, b.paused_frac, "{name}");
+        assert_eq!(a.mean_spares_used, b.mean_spares_used, "{name}");
+        assert_eq!(a.throughput_per_gpu, b.throughput_per_gpu, "{name}");
+        assert_eq!(a.downtime_frac, b.downtime_frac, "{name}");
+        assert_eq!(a.transitions, b.transitions, "{name}");
+        assert_eq!(a.mean_donated, b.mean_donated, "{name}");
+        // Sanity that the knobs are live: the dark pool's saving reads
+        // the fleet-wide standby fraction, so POWER-SPARES must draw
+        // *less* under the deeper standby cap.
+        if name == "POWER-SPARES" {
+            assert!(
+                b.mean_power_frac < a.mean_power_frac,
+                "{name}: standby knob dead ({} vs {})",
+                b.mean_power_frac,
+                a.mean_power_frac
+            );
+        }
+    }
+}

@@ -52,6 +52,13 @@ fn hex(x: f64) -> Value {
 
 /// Bit-exact, human-auditable serialization: every f64 as its hex bit
 /// pattern plus a lossy decimal echo for the reviewer.
+///
+/// Deliberately does NOT include the energy channel: the power stats
+/// are pinned under their own `…|energy` keys (below) so they ride the
+/// additive-verify path — a checkout whose golden file predates the
+/// energy channel keeps verifying every existing key bit-exactly and
+/// blesses the energy keys in place, proving the default-off energy
+/// accounting left the pinned numbers untouched.
 fn stats_value(s: &FleetStats) -> Value {
     Value::obj(vec![
         ("mean_throughput", hex(s.mean_throughput)),
@@ -62,6 +69,17 @@ fn stats_value(s: &FleetStats) -> Value {
         ("mean_donated", hex(s.mean_donated)),
         ("transitions", s.transitions.into()),
         ("echo_mean_throughput", Value::Str(format!("{:.6}", s.mean_throughput))),
+    ])
+}
+
+/// The energy channel's own pin: the two integrated power stats plus
+/// the derived tokens-per-joule ratio, hex-exact.
+fn energy_value(s: &FleetStats) -> Value {
+    Value::obj(vec![
+        ("mean_power_frac", hex(s.mean_power_frac)),
+        ("peak_rack_power_frac", hex(s.peak_rack_power_frac)),
+        ("energy_per_token", hex(s.energy_per_token())),
+        ("echo_mean_power_frac", Value::Str(format!("{:.6}", s.mean_power_frac))),
     ])
 }
 
@@ -156,12 +174,18 @@ fn golden_trace_pins_fleet_stats_for_every_policy() {
         }
     }
 
-    let got = Value::Obj(
-        entries
-            .iter()
-            .map(|(k, s)| (k.clone(), stats_value(s)))
-            .collect(),
-    );
+    // Every config pins two keys: the original stats object (unchanged
+    // field set — its hex values must not move when the energy channel
+    // is off by default) and a sibling `…|energy` key for the power
+    // integrals, additive for checkouts pinned before the channel
+    // existed.
+    let flat: Vec<(String, Value)> = entries
+        .iter()
+        .flat_map(|(k, s)| {
+            [(k.clone(), stats_value(s)), (format!("{k}|energy"), energy_value(s))]
+        })
+        .collect();
+    let got = Value::Obj(flat.iter().cloned().collect());
     let rebless = std::env::var("UPDATE_GOLDEN").is_ok();
     // Verify-only mode (CI sets GOLDEN_VERIFY=1 once the golden file is
     // committed): a missing file is a failure, never a silent bless.
@@ -187,7 +211,7 @@ fn golden_trace_pins_fleet_stats_for_every_policy() {
             // mean a policy or grid axis was REMOVED. That is never
             // additive: hard-fail even in verify-only mode.
             let produced: std::collections::HashSet<&str> =
-                entries.iter().map(|(k, _)| k.as_str()).collect();
+                flat.iter().map(|(k, _)| k.as_str()).collect();
             let stale: Vec<&String> =
                 want_map.keys().filter(|k| !produced.contains(k.as_str())).collect();
             assert!(
@@ -204,14 +228,14 @@ fn golden_trace_pins_fleet_stats_for_every_policy() {
             // must not force a manual re-bless of numbers that did not
             // move, and must not dodge verification of the ones pinned.
             let mut fresh: Vec<&str> = Vec::new();
-            for (key, stats) in &entries {
+            for (key, value) in &flat {
                 if !want_map.contains_key(key.as_str()) {
                     fresh.push(key);
                     continue;
                 }
                 assert_eq!(
                     want.get(key),
-                    &stats_value(stats),
+                    value,
                     "FleetStats drifted from the golden record for '{key}'.\n\
                      If this change is intentional, re-bless with:\n\
                      UPDATE_GOLDEN=1 cargo test --test golden_trace"
@@ -237,7 +261,7 @@ fn golden_trace_pins_fleet_stats_for_every_policy() {
             eprintln!(
                 "golden_trace: {} {GOLDEN_PATH} with {} entries — commit it to pin",
                 if rebless { "re-blessed" } else { "blessed" },
-                entries.len()
+                flat.len()
             );
         }
     }

@@ -321,6 +321,118 @@ fn healthy_fleet_is_lossless_under_every_policy() {
             assert_eq!(resp.donated, 0.0, "{}: nothing to donate when healthy", policy.name());
             let tput = resp.throughput(table.full_local_batch);
             assert!((tput - 1.0).abs() < 1e-12, "{}: {tput}", policy.name());
+            // Zero failures, no spare pool: every GPU at nominal draw
+            // is exactly n/n — an exact division, so the fleet power
+            // fraction is bit-exactly 1.0 (the "energy off by default"
+            // contract the golden pins rest on).
+            assert_eq!(resp.power, 1.0, "{}: healthy power", policy.name());
+            assert_eq!(resp.rack_power, 1.0, "{}: healthy rack draw", policy.name());
+        }
+    }
+}
+
+/// Registry-driven energy-conformance pass: for every registered policy
+/// over the full context grid and randomized snapshots —
+///
+/// * the fleet power fraction is finite and within
+///   `[0, gpu_boost_cap × (job + pool GPUs) / job GPUs]` — the grid's
+///   spare contexts provision the pool *on top of* `ctx.n_gpus`, so a
+///   warm pool legitimately pushes the job-normalized fraction above 1;
+/// * the hottest-domain draw is within `[0, gpu_boost_cap]` (a boosted
+///   domain may exceed nominal, never the boost cap);
+/// * a paused snapshot draws no more than the idle-power floor
+///   ([`RackDesign::idle_frac`] over every provisioned-and-alive GPU).
+///
+/// `respond_with == respond` on the power channels is already pinned by
+/// `registry_properties_hold_for_every_policy`, whose `EvalOut`
+/// equality covers `power` and `rack_power` bit-for-bit.
+#[test]
+fn energy_conformance_for_every_policy() {
+    let (sim, cfg, table) = setup();
+    let transitions = [None, Some(TransitionCosts::model(&sim, &cfg))];
+    let grid = ctx_grid(&table, &transitions);
+    let cap = table.rack.gpu_boost_cap;
+    let mut rng = Rng::new(0x98);
+    let mut scratch = EvalScratch::default();
+    for trial in 0..120 {
+        let job = random_healthy(&mut rng, JOB_DOMAINS);
+        for ctx in &grid {
+            let pool_slack = ctx
+                .spares
+                .map(|p| (p.spare_domains * ctx.domain_size) as f64 / ctx.n_gpus as f64)
+                .unwrap_or(0.0);
+            for policy in registry::all() {
+                let name = policy.name();
+                let got = policy.respond_with(ctx, &job, &mut scratch);
+                assert!(
+                    got.power.is_finite() && got.power >= 0.0,
+                    "trial {trial} {name}: power {}",
+                    got.power
+                );
+                assert!(
+                    got.power <= cap * (1.0 + pool_slack) + 1e-12,
+                    "trial {trial} {name}: power {} above boost cap {cap} \
+                     (pool slack {pool_slack})",
+                    got.power
+                );
+                assert!(
+                    (0.0..=cap + 1e-12).contains(&got.rack_power),
+                    "trial {trial} {name}: rack draw {} outside [0, {cap}]",
+                    got.rack_power
+                );
+                if got.paused {
+                    assert!(
+                        got.power <= table.rack.idle_frac * (1.0 + pool_slack) + 1e-12,
+                        "trial {trial} {name}: paused power {} above the idle floor",
+                        got.power
+                    );
+                    assert!(
+                        got.rack_power <= table.rack.idle_frac + 1e-12,
+                        "trial {trial} {name}: paused rack draw {}",
+                        got.rack_power
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Fleet power is monotone non-increasing in the failed-GPU count for
+/// every non-boosting policy: each additional failure removes one GPU's
+/// draw (or pauses the job at the idle floor, lower still). The two
+/// exclusions are policy *features*, not violations: NTP-PW boosts
+/// surviving reduced replicas (draw may rise with damage), and
+/// POWER-SPARES wakes a dark domain when a failure migrates a spare in
+/// (standby → nominal draw).
+#[test]
+fn power_monotone_in_failures_for_non_boosting_policies() {
+    let (_sim, _cfg, table) = setup();
+    let grid = ctx_grid(&table, &[None]);
+    let mut scratch = EvalScratch::default();
+    for ctx in &grid {
+        for policy in registry::all() {
+            let name = policy.name();
+            if name == "NTP-PW" || name == "POWER-SPARES" {
+                continue;
+            }
+            let mut job = vec![DOMAIN_SIZE; JOB_DOMAINS];
+            let mut prev = policy.respond_with(ctx, &job, &mut scratch).power;
+            // Deepen damage one GPU at a time, two whole domains plus a
+            // third started — crosses the min-TP reshard and the pause
+            // threshold for every policy family.
+            for step in 0..(2 * DOMAIN_SIZE + DOMAIN_SIZE / 2) {
+                let d = step / DOMAIN_SIZE;
+                job[d] -= 1;
+                let now = policy.respond_with(ctx, &job, &mut scratch).power;
+                assert!(
+                    now <= prev + 1e-12,
+                    "{name}: power rose {prev} -> {now} at step {step} \
+                     (spares {:?} packed {})",
+                    ctx.spares,
+                    ctx.packed
+                );
+                prev = now;
+            }
         }
     }
 }
