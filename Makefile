@@ -27,7 +27,13 @@
 #                       asserting the NTP-PW vs DP-DROP tokens/J
 #                       ordering, the traditional-rack boost collapse
 #                       and the dark-spare saving (writes
-#                       BENCH_energy_quick.json)
+#                       BENCH_energy_quick.json); plus the adaptive
+#                       smoke: CI-driven early stopping asserting
+#                       >= 3x trial savings with the exhaustive policy
+#                       ordering preserved, no early stop on an
+#                       adversarially-close pair, and bit-identical
+#                       stop points at every thread count (writes
+#                       BENCH_adaptive_quick.json)
 
 CARGO    ?= cargo
 MANIFEST := rust/Cargo.toml
@@ -58,6 +64,7 @@ bench-perf:
 bench-quick:
 	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick --trials-only
 	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick --streaming-only
+	$(CARGO) bench --bench perf_hotpath --manifest-path $(MANIFEST) -- --quick --adaptive-only
 	$(CARGO) bench --bench fig12_scenarios --manifest-path $(MANIFEST) -- --quick
 	$(CARGO) bench --bench fig7_spares --manifest-path $(MANIFEST) -- --quick
 	$(CARGO) bench --bench fig13_energy --manifest-path $(MANIFEST) -- --quick

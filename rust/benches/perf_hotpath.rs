@@ -11,10 +11,12 @@
 //! `run_trials_par` is bit-identical to 1 thread), `--streaming-only`
 //! to run just the streaming-trials / incremental-signature / grid-memo
 //! section (the second `make bench-quick` smoke — writes
-//! `BENCH_streaming_quick.json`). Plain `--quick` skips both of those
-//! sections — CI runs each as its own `bench-quick` step, so the smoke
-//! steps partition the workload instead of repeating it; full runs
-//! cover everything.
+//! `BENCH_streaming_quick.json`), or `--adaptive-only` to run just the
+//! adaptive Monte-Carlo early-stopping section (the third smoke —
+//! writes `BENCH_adaptive_quick.json`). Plain `--quick` skips all of
+//! those sections — CI runs each as its own `bench-quick` step, so the
+//! smoke steps partition the workload instead of repeating it; full
+//! runs cover everything.
 //!
 //! Components measured:
 //!   * fleet trace integration at paper scale (32K GPUs, 8-week trace):
@@ -29,6 +31,10 @@
 //!     via a counting allocator), the incremental snapshot-signature
 //!     sweep vs its from-scratch rebuild oracle, and a 100-point
 //!     memo-shared parameter grid (cross-point hit rate > 0)
+//!   * adaptive Monte-Carlo early stopping: >= 3x trial savings with
+//!     the identical final policy ordering on a settled preset, no
+//!     early stop on an adversarially-close pair, and bit-identical
+//!     adaptive aggregates at every thread count
 //!   * Algorithm-1 plan construction: direct build vs `PlanCache` hit,
 //!     and the `ntp_iteration` call that rides the cache
 //!   * explicit NTP reshard permutations: per-unit vs coalesced CopyPlan
@@ -40,19 +46,20 @@ use ntp::failure::{
     BlastRadius, FailureModel, ScenarioConfig, ScenarioKind, Trace, TrialGen,
 };
 use ntp::manager::{
-    FleetSim, FleetStats, MultiPolicySim, ResponseMemo, SparePolicy, StepMode, StrategyTable,
+    FleetSim, FleetStats, MultiPolicySim, PolicyAggregate, ResponseMemo, SparePolicy, StepMode,
+    StopReason, StopRule, StrategyTable,
 };
 use ntp::ntp::cache::PlanCache;
 use ntp::ntp::shard_map::ShardMap;
 use ntp::ntp::sync::{comp_to_sync, scatter_comp, sync_to_comp, CopyPlan};
 use ntp::ntp::ReshardPlan;
 use ntp::parallel::ParallelConfig;
-use ntp::policy::registry;
+use ntp::policy::{registry, FtPolicy};
 use ntp::power::RackDesign;
 use ntp::sim::{FtStrategy, IterationModel, SimParams};
 use ntp::train::optimizer::AdamW;
 use ntp::train::sync::weighted_accumulate;
-use ntp::util::bench::{arg_flag, bench_with, black_box, BenchConfig, JsonReport};
+use ntp::util::bench::{arg_flag, bench_with, black_box, time_once, BenchConfig, JsonReport};
 use ntp::util::par;
 use ntp::util::prng::Rng;
 
@@ -67,6 +74,8 @@ const OUT_PATH_TRIALS: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf_hotpath_trials.json");
 const OUT_PATH_STREAMING: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_streaming_quick.json");
+const OUT_PATH_ADAPTIVE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_adaptive_quick.json");
 
 /// Cumulative-allocation meter behind the global allocator: counts every
 /// heap byte *requested* (allocations plus realloc growth; frees are not
@@ -115,11 +124,13 @@ fn main() {
     let quick = arg_flag("--quick");
     let trials_only = arg_flag("--trials-only");
     let streaming_only = arg_flag("--streaming-only");
+    let adaptive_only = arg_flag("--adaptive-only");
     let mut rng = Rng::new(1);
     let mut report = JsonReport::new("perf_hotpath");
     report.scalar("quick", if quick { 1.0 } else { 0.0 });
     report.scalar("trials_only", if trials_only { 1.0 } else { 0.0 });
     report.scalar("streaming_only", if streaming_only { 1.0 } else { 0.0 });
+    report.scalar("adaptive_only", if adaptive_only { 1.0 } else { 0.0 });
     let threads = par::num_threads();
     report.scalar("threads", threads as f64);
 
@@ -142,7 +153,7 @@ fn main() {
     let cfg = ParallelConfig { tp: 32, pp: 8, dp: 128, microbatch: 1 };
     let sim = IterationModel::new(model, work, cluster, SimParams::default());
 
-    if !trials_only && !streaming_only {
+    if !trials_only && !streaming_only && !adaptive_only {
         // =================================================================
         // Fleet trace integration at paper scale: event-driven sweep vs
         // per-step rebuild on the legacy 1h grid, plus exact stepping
@@ -243,7 +254,7 @@ fn main() {
         detect: None,
     };
 
-    if !trials_only && !streaming_only {
+    if !trials_only && !streaming_only && !adaptive_only {
         // =================================================================
         // Shared-sweep multi-policy engine at SPARe scale, exact stepping:
         // one event-bounded trace replay + signature-memoized responses
@@ -370,7 +381,7 @@ fn main() {
     // most expensive bench workload per push. Full runs always include
     // it.
     // =====================================================================
-    if (trials_only || !quick) && !streaming_only {
+    if (trials_only || !quick) && !streaming_only && !adaptive_only {
         let n_trials = if quick { 4 } else { 8 };
         // Per-trial forked PRNG streams: trace i is the same regardless
         // of trial count or worker count.
@@ -440,7 +451,7 @@ fn main() {
     // `--quick --streaming-only` is the second `make bench-quick` smoke
     // and writes BENCH_streaming_quick.json.
     // =====================================================================
-    if streaming_only || (!quick && !trials_only) {
+    if streaming_only || (!quick && !trials_only && !adaptive_only) {
         let n_trials = if quick { 4 } else { 6 };
         let scen_ind = ScenarioConfig::new(ScenarioKind::Independent);
         // ~10x llama-3 rates so each trial carries thousands of events:
@@ -670,7 +681,7 @@ fn main() {
         report.scalar("grid_cross_point_hit_rate", gs.cross_hit_rate());
     }
 
-    if !trials_only && !streaming_only {
+    if !trials_only && !streaming_only && !adaptive_only {
         // =================================================================
         // Algorithm-1 plan construction: direct vs cached
         // =================================================================
@@ -800,7 +811,166 @@ fn main() {
         report.scalar("weighted_reduce_par_speedup", r_seq.secs.p50 / r_par.secs.p50);
     }
 
-    let out = if streaming_only {
+    // =====================================================================
+    // Adaptive Monte-Carlo: CI-driven early stopping over the work-
+    // stealing trial scheduler (EXPERIMENTS.md §Adaptive). `--quick
+    // --adaptive-only` is the third `make bench-quick` smoke and
+    // writes BENCH_adaptive_quick.json.
+    // =====================================================================
+    if adaptive_only || (!quick && !trials_only && !streaming_only) {
+        // Small dedicated fleet (20 NVL32 domains) with failure rates
+        // scaled up until every trial replays hundreds of events — the
+        // cheapest setup where policy orderings are decided by the
+        // trace statistics rather than by a handful of lucky events.
+        let cluster_a = presets::cluster("paper-32k-nvl32").unwrap();
+        let tp_a = cluster_a.domain_size; // 32
+        let cfg_a = ParallelConfig { tp: tp_a, pp: 4, dp: 5, microbatch: 1 };
+        let sim_a = IterationModel::new(
+            presets::model("gpt-480b").unwrap(),
+            WorkloadConfig { seq_len: 16_384, minibatch_tokens: 16 << 20, dtype: Dtype::BF16 },
+            cluster_a.clone(),
+            SimParams::default(),
+        );
+        let table_a = StrategyTable::build(&sim_a, &cfg_a, &RackDesign::default());
+        let topo_a = Topology::of(cfg_a.n_gpus(), tp_a, cluster_a.gpus_per_node);
+        let fmodel_a = FailureModel::llama3().scaled(60.0);
+        let scen_a = ScenarioConfig::new(ScenarioKind::Independent);
+        let horizon_a = 10.0 * 24.0;
+        let budget = 96usize;
+        // rel_ci disabled: the run stops on Separated or not at all,
+        // which is the property both presets below exercise.
+        let rule =
+            StopRule { round: 8, min_trials: 8, max_trials: budget, rel_ci: 0.0, margin: 0.0 };
+
+        // (a) Settled preset: three policies whose net-throughput
+        // ordering separates long before the budget runs out.
+        let trio: Vec<&dyn FtPolicy> = ["ntp", "dp-drop", "ckpt-restart"]
+            .iter()
+            .map(|n| registry::parse(n).unwrap())
+            .collect();
+        let msim_a = MultiPolicySim {
+            topo: &topo_a,
+            table: &table_a,
+            domains_per_replica: cfg_a.pp,
+            policies: &trio,
+            spares: None,
+            packed: true,
+            blast: BlastRadius::Single,
+            transition: None,
+            detect: None,
+        };
+        let gen_a = TrialGen::new(&topo_a, &fmodel_a, &scen_a, horizon_a, 0xADA7, budget);
+        println!(
+            "\nadaptive Monte-Carlo: {} GPUs, {} policies, round {}, budget {budget}",
+            topo_a.n_gpus,
+            trio.len(),
+            rule.round
+        );
+        let (adapt, secs_adapt) =
+            time_once(|| msim_a.run_trials_adaptive(&gen_a, StepMode::Exact, &rule, threads));
+        let (full, secs_full) = time_once(|| {
+            msim_a.run_trials_stream_agg_par(&gen_a, StepMode::Exact, threads).0
+        });
+        assert_eq!(
+            adapt.reason,
+            StopReason::Separated,
+            "the settled trio must stop on CI separation (ran {}/{budget} trials)",
+            adapt.trials_run
+        );
+        let savings = budget as f64 / adapt.trials_run as f64;
+        assert!(
+            savings >= 3.0,
+            "adaptive stopping should save >= 3x trials on a settled preset \
+             (ran {}/{budget}, {savings:.1}x)",
+            adapt.trials_run
+        );
+        // The early-stopped ordering must agree with the exhaustive
+        // budget run — cheap trials saved, same conclusion.
+        let order = |aggs: &[PolicyAggregate]| -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..aggs.len()).collect();
+            idx.sort_by(|&a, &b| {
+                aggs[b].mean_net_tput().partial_cmp(&aggs[a].mean_net_tput()).unwrap()
+            });
+            idx
+        };
+        assert_eq!(
+            order(&adapt.aggs),
+            order(&full),
+            "adaptive early stop must preserve the exhaustive policy ordering"
+        );
+        println!(
+            "  settled trio: stopped after {}/{budget} trials ({}), {savings:.1}x trial \
+             savings, {secs_adapt:.2}s vs {secs_full:.2}s exhaustive",
+            adapt.trials_run,
+            adapt.reason.as_str()
+        );
+        report.scalar("adaptive_trials_run", adapt.trials_run as f64);
+        report.scalar("adaptive_trials_budget", budget as f64);
+        report.scalar("adaptive_trial_savings", savings);
+        report.scalar("adaptive_secs", secs_adapt);
+        report.scalar("adaptive_exhaustive_secs", secs_full);
+        report.scalar("adaptive_wallclock_speedup", secs_full / secs_adapt);
+        report.label("adaptive_stop_reason", adapt.reason.as_str());
+
+        // Stop point, reason and every aggregate are bit-identical at
+        // any thread count: decisions happen only at round boundaries
+        // on trial-index-ordered folds.
+        for t in [1usize, 2, threads.max(3)] {
+            let o = msim_a.run_trials_adaptive(&gen_a, StepMode::Exact, &rule, t);
+            assert_eq!(o.trials_run, adapt.trials_run, "stop point drifted at {t} threads");
+            assert_eq!(o.reason, adapt.reason, "stop reason drifted at {t} threads");
+            for (x, y) in o.aggs.iter().zip(&adapt.aggs) {
+                assert_eq!(x.trials(), y.trials(), "trial count drifted at {t} threads");
+                assert_eq!(
+                    x.mean_net_tput().to_bits(),
+                    y.mean_net_tput().to_bits(),
+                    "net-throughput mean drifted at {t} threads"
+                );
+                assert_eq!(
+                    x.tput.mean().to_bits(),
+                    y.tput.mean().to_bits(),
+                    "throughput Welford mean drifted at {t} threads"
+                );
+                assert_eq!(
+                    x.tput_ci95().to_bits(),
+                    y.tput_ci95().to_bits(),
+                    "throughput CI95 drifted at {t} threads"
+                );
+            }
+        }
+        println!("  bit-identical stop point and aggregates at 1/2/{} threads", threads.max(3));
+
+        // (b) Adversarially close pair: under an Independent scenario
+        // no Degrade event ever fires, so the two straggler policies
+        // respond identically — the net-throughput gap is exactly zero
+        // and the CIs always overlap. The rule must refuse to
+        // early-stop and run the (smaller) budget out.
+        let pair: Vec<&dyn FtPolicy> = ["straggler-evict", "straggler-tolerate"]
+            .iter()
+            .map(|n| registry::parse(n).unwrap())
+            .collect();
+        let msim_p = MultiPolicySim { policies: &pair, ..msim_a };
+        let close_budget = 24usize;
+        let close_rule = StopRule { max_trials: close_budget, ..rule };
+        let gen_p = TrialGen::new(&topo_a, &fmodel_a, &scen_a, horizon_a, 0xADA8, close_budget);
+        let close = msim_p.run_trials_adaptive(&gen_p, StepMode::Exact, &close_rule, threads);
+        assert_eq!(
+            close.reason,
+            StopReason::MaxTrials,
+            "an adversarially-close pair must never early-stop (got '{}' after {} trials)",
+            close.reason.as_str(),
+            close.trials_run
+        );
+        assert_eq!(close.trials_run, close_budget, "close pair must exhaust its budget");
+        println!("  adversarial pair: ran the full {close_budget}-trial budget (no early stop)");
+        report.scalar("adaptive_close_trials_run", close.trials_run as f64);
+        report.scalar("adaptive_close_trials_budget", close_budget as f64);
+        report.label("adaptive_close_stop_reason", close.reason.as_str());
+    }
+
+    let out = if adaptive_only {
+        OUT_PATH_ADAPTIVE
+    } else if streaming_only {
         OUT_PATH_STREAMING
     } else if trials_only {
         OUT_PATH_TRIALS

@@ -21,7 +21,8 @@ use ntp::failure::{
     DetectionModel, EventKind, FailureModel, ScenarioConfig, ScenarioKind, Trace, TrialGen,
 };
 use ntp::manager::{
-    FleetStats, MemoStats, MultiPolicySim, ResponseMemo, SparePolicy, StepMode, StrategyTable,
+    FleetStats, MemoStats, MultiPolicySim, ResponseMemo, SparePolicy, StepMode, StopRule,
+    StrategyTable,
 };
 use ntp::util::stats::Welford;
 use ntp::ntp::{ReshardPlan, ShardMap};
@@ -122,6 +123,17 @@ USAGE: ntp <subcommand> [options]
                 --threads, but trials are drawn from the random-access
                 per-trial PRNG family, so stats differ from the default
                 path's sequential fork chain for trials >= 1)
+                [--adaptive] (adaptive Monte-Carlo: trials run in
+                --round-sized rounds and stop early once every pairwise
+                policy ordering is separated by non-overlapping 95% CIs
+                on net throughput, or every CI half-width falls below
+                --rel-ci of its mean; implies the --stream trial
+                family, reports trials_run + stop_reason, and the stop
+                point is independent of --threads)
+                [--rel-ci 0.01] (relative CI target; 0 disables the
+                precision stop) [--round 16] (trials per round)
+                [--min-trials 16] (no early stop before this many)
+                [--max-trials N] (trial budget; default --trials)
                 transition-cost calibration (defaults are the modeled
                 TransitionCosts with the trace's observed failure rate,
                 see EXPERIMENTS.md §Policies):
@@ -171,6 +183,11 @@ USAGE: ntp <subcommand> [options]
                 [--scenario correlated] [--strategy dp-drop,ntp,
                 ckpt-restart] [--days 15] [--trials 2] [--replicas 16]
                 [--pp 8] [--seed 5] [--out PATH]
+                [--adaptive] [--rel-ci 0.01] [--round 16]
+                [--min-trials 16] [--max-trials N (default --trials)]
+                (per-point CI-driven early stop, same semantics as
+                `fleet --adaptive`; rows gain trials_run/stop_reason
+                and the cube reports total trials run vs budget)
                 Runs the whole (rate x spares x scenario-scale x
                 cluster) grid in ONE process: every grid point streams
                 its trials through the shared response/transition memo
@@ -543,6 +560,14 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     // them as they replay — no materialized trace, O(1) memory per
     // trial at any --trials.
     let stream = args.flag("stream");
+    // Adaptive Monte-Carlo (manager::adaptive): CI-driven early
+    // stopping at round boundaries over the streaming trial family;
+    // --trials doubles as the default budget.
+    let adaptive = args.flag("adaptive");
+    let rel_ci = args.opt_f64("rel-ci");
+    let round = args.opt_usize("round");
+    let min_trials = args.opt_usize("min-trials");
+    let max_trials = args.opt_usize("max-trials");
     // Transition-cost calibration knobs (defaults: the modeled
     // TransitionCosts — see EXPERIMENTS.md §Policies for the published
     // latencies the defaults are calibrated against).
@@ -601,6 +626,26 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
           --ckpt-write-secs/--power-ramp-secs/--cold-load-secs/--preempt-secs/\
           --rejoin-secs/--failure-rate/--validation-sweep-secs)"
     );
+    anyhow::ensure!(
+        adaptive
+            || (rel_ci.is_none()
+                && round.is_none()
+                && min_trials.is_none()
+                && max_trials.is_none()),
+        "--rel-ci/--round/--min-trials/--max-trials require --adaptive"
+    );
+    anyhow::ensure!(
+        rel_ci.map(|r| r >= 0.0).unwrap_or(true),
+        "--rel-ci must be non-negative (0 disables the precision stop)"
+    );
+    let rule = StopRule {
+        round: round.unwrap_or(16),
+        min_trials: min_trials.unwrap_or(16),
+        max_trials: max_trials.unwrap_or(trials),
+        rel_ci: rel_ci.unwrap_or(0.01),
+        margin: 0.0,
+    }
+    .normalized();
     anyhow::ensure!(
         !(spares_flag.is_some() && warm_spares.is_some()),
         "--spares (total pool) and --warm-spares (tiered spelling) conflict; \
@@ -711,10 +756,13 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     let fmodel = FailureModel::llama3().scaled(rate_x);
     // Default path: one forked PRNG stream per Monte-Carlo trial —
     // trace i is the same for any --trials >= i+1 and any --threads.
-    // --stream path: nothing materialized; trials come from the
-    // random-access TrialGen family instead.
-    let gen = TrialGen::new(&topo, &fmodel, &scen, days * 24.0, seed, trials);
-    let traces: Vec<Trace> = if stream {
+    // --stream and --adaptive paths: nothing materialized; trials come
+    // from the random-access TrialGen family instead (adaptive sizes
+    // the family by its trial budget, not --trials).
+    let stream_like = stream || adaptive;
+    let gen_trials = if adaptive { rule.max_trials } else { trials };
+    let gen = TrialGen::new(&topo, &fmodel, &scen, days * 24.0, seed, gen_trials);
+    let traces: Vec<Trace> = if stream_like {
         Vec::new()
     } else {
         let mut rng = Rng::new(seed);
@@ -734,15 +782,18 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         // one cost model to share one response memo. The streaming path
         // counts events by draining throwaway streams (O(1) memory,
         // same totals its trials will replay).
-        let mut t = if stream {
+        let mut t = if stream_like {
             let mut events = 0usize;
-            for i in 0..trials {
+            for i in 0..gen.trials {
                 let mut s = gen.stream_for(i);
                 while s.next_event().is_some() {
                     events += 1;
                 }
             }
-            let total_hours = days * 24.0 * trials as f64;
+            // Adaptive runs pool the rate over the whole budget family
+            // (the rate must be fixed before any trial runs — the cost
+            // model is part of the shared memo fingerprint).
+            let total_hours = days * 24.0 * gen.trials as f64;
             let mut t = TransitionCosts::model(&sim, &cfg);
             if total_hours > 0.0 {
                 t.failure_rate_per_hour = events as f64 / total_hours;
@@ -813,12 +864,15 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     // never stored: fold them into per-policy aggregates (plain sums
     // for means + Welford moments for the CI). The stored path keeps
     // per-trial stats and derives the same numbers from them.
-    let (per_trial, stream_agg, memo) = if stream {
+    let (per_trial, stream_agg, memo, adaptive_run) = if adaptive {
+        let out = msim.run_trials_adaptive(&gen, mode, &rule, threads);
+        (Vec::new(), Some(out.aggs), out.memo, Some((out.trials_run, out.reason)))
+    } else if stream {
         let (agg, memo) = msim.run_trials_stream_agg_par(&gen, mode, threads);
-        (Vec::new(), Some(agg), memo)
+        (Vec::new(), Some(agg), memo, None)
     } else {
         let (per_trial, memo) = msim.run_trials_par(&traces, mode, threads);
-        (per_trial, None, memo)
+        (per_trial, None, memo, None)
     };
 
     let mut out = Table::new(&[
@@ -844,6 +898,17 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
     rep.scalar("trials", trials as f64);
     rep.scalar("threads", threads as f64);
     rep.scalar("stream", if stream { 1.0 } else { 0.0 });
+    // Adaptive keys appear only under --adaptive, so runs without the
+    // flag stay bit-identical to earlier builds.
+    if let Some((trials_run, reason)) = adaptive_run {
+        rep.scalar("adaptive", 1.0);
+        rep.scalar("round", rule.round as f64);
+        rep.scalar("min_trials", rule.min_trials as f64);
+        rep.scalar("max_trials", rule.max_trials as f64);
+        rep.scalar("rel_ci", rule.rel_ci);
+        rep.scalar("trials_run", trials_run as f64);
+        rep.label("stop_reason", reason.as_str());
+    }
     rep.scalar("exact", if grid_hours.is_none() { 1.0 } else { 0.0 });
     if let Some(h) = grid_hours {
         rep.scalar("grid_hours", h);
@@ -957,6 +1022,13 @@ fn cmd_fleet(args: &mut Args) -> Result<()> {
         println!("{}", rep.to_json().pretty());
     } else {
         out.print();
+        if let Some((trials_run, reason)) = adaptive_run {
+            println!(
+                "adaptive: stopped after {trials_run}/{} trials ({})",
+                rule.max_trials,
+                reason.as_str()
+            );
+        }
     }
     Ok(())
 }
@@ -990,7 +1062,35 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
     let pp = args.usize_or("pp", 8);
     let seed = args.u64_or("seed", 5);
     let out_path = args.opt_str("out");
+    // Per-point adaptive early stop (same rule semantics as `fleet
+    // --adaptive`); trials stream through the shared memo, so
+    // cross-point reuse keeps accruing.
+    let adaptive = args.flag("adaptive");
+    let rel_ci = args.opt_f64("rel-ci");
+    let round = args.opt_usize("round");
+    let min_trials = args.opt_usize("min-trials");
+    let max_trials = args.opt_usize("max-trials");
     args.finish()?;
+    anyhow::ensure!(
+        adaptive
+            || (rel_ci.is_none()
+                && round.is_none()
+                && min_trials.is_none()
+                && max_trials.is_none()),
+        "--rel-ci/--round/--min-trials/--max-trials require --adaptive"
+    );
+    anyhow::ensure!(
+        rel_ci.map(|r| r >= 0.0).unwrap_or(true),
+        "--rel-ci must be non-negative (0 disables the precision stop)"
+    );
+    let rule = StopRule {
+        round: round.unwrap_or(16),
+        min_trials: min_trials.unwrap_or(16),
+        max_trials: max_trials.unwrap_or(trials),
+        rel_ci: rel_ci.unwrap_or(0.01),
+        margin: 0.0,
+    }
+    .normalized();
     anyhow::ensure!(!cluster_names.is_empty(), "--clusters must name at least one cluster");
     anyhow::ensure!(
         !(rate_xs.is_empty() || spares_list.is_empty() || scen_xs.is_empty()),
@@ -1018,6 +1118,7 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         &policies.iter().map(|p| p.name()).collect::<Vec<_>>().join(","),
     );
     let mut merged = MemoStats::default();
+    let mut trials_run_total = 0usize;
 
     for cluster_name in &cluster_names {
         let cluster = presets::cluster(cluster_name)?;
@@ -1050,8 +1151,12 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
                 // Same seed at every point: points differing only in
                 // spare budget replay IDENTICAL streams (the topology
                 // is shared), which is both a paired-comparison win and
-                // the strongest cross-point memo reuse.
-                let gen = TrialGen::new(&topo, &fmodel, &scen, days * 24.0, seed, trials);
+                // the strongest cross-point memo reuse. Adaptive sizes
+                // the family by its per-point budget instead of
+                // --trials.
+                let gen_trials = if adaptive { rule.max_trials } else { trials };
+                let gen =
+                    TrialGen::new(&topo, &fmodel, &scen, days * 24.0, seed, gen_trials);
                 for &spare_domains in &spares_list {
                     memo.begin_point();
                     let msim = MultiPolicySim {
@@ -1065,9 +1170,6 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
                         transition: Some(costs),
                         detect: None,
                     };
-                    let per_trial =
-                        msim.run_trials_stream(&gen, StepMode::Exact, &mut memo);
-                    let n = per_trial.len() as f64;
                     let mut row: Vec<(String, Value)> = vec![
                         ("cluster".into(), Value::Str(cluster_name.clone())),
                         ("rate_x".into(), Value::Num(rate_x)),
@@ -1075,24 +1177,63 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
                         ("spares".into(), Value::Num(spare_domains as f64)),
                         ("n_gpus".into(), Value::Num(topo.n_gpus as f64)),
                     ];
-                    for (pi, policy) in policies.iter().enumerate() {
-                        let key =
-                            policy.name().to_ascii_lowercase().replace('-', "_");
-                        let mean = |f: &dyn Fn(&FleetStats) -> f64| -> f64 {
-                            per_trial.iter().map(|t| f(&t[pi])).sum::<f64>() / n
-                        };
+                    if adaptive {
+                        // Sequential adaptive runner on the SHARED memo:
+                        // the stop point is bit-identical to the
+                        // parallel runner at any thread count, and
+                        // cross-point hits keep accruing.
+                        let res = msim.run_trials_adaptive_with(
+                            &gen,
+                            StepMode::Exact,
+                            &rule,
+                            &mut memo,
+                        );
+                        for (pi, policy) in policies.iter().enumerate() {
+                            let key =
+                                policy.name().to_ascii_lowercase().replace('-', "_");
+                            let a = &res.aggs[pi];
+                            row.push((
+                                format!("{key}_net_tput"),
+                                Value::Num(a.mean_net_tput()),
+                            ));
+                            row.push((
+                                format!("{key}_mean_tput"),
+                                Value::Num(a.mean_tput()),
+                            ));
+                            row.push((
+                                format!("{key}_downtime_frac"),
+                                Value::Num(a.mean_downtime_frac()),
+                            ));
+                        }
+                        row.push(("trials_run".into(), Value::Num(res.trials_run as f64)));
                         row.push((
-                            format!("{key}_net_tput"),
-                            Value::Num(mean(&|s| s.net_throughput())),
+                            "stop_reason".into(),
+                            Value::Str(res.reason.as_str().to_string()),
                         ));
-                        row.push((
-                            format!("{key}_mean_tput"),
-                            Value::Num(mean(&|s| s.mean_throughput)),
-                        ));
-                        row.push((
-                            format!("{key}_downtime_frac"),
-                            Value::Num(mean(&|s| s.downtime_frac)),
-                        ));
+                        trials_run_total += res.trials_run;
+                    } else {
+                        let per_trial =
+                            msim.run_trials_stream(&gen, StepMode::Exact, &mut memo);
+                        let n = per_trial.len() as f64;
+                        for (pi, policy) in policies.iter().enumerate() {
+                            let key =
+                                policy.name().to_ascii_lowercase().replace('-', "_");
+                            let mean = |f: &dyn Fn(&FleetStats) -> f64| -> f64 {
+                                per_trial.iter().map(|t| f(&t[pi])).sum::<f64>() / n
+                            };
+                            row.push((
+                                format!("{key}_net_tput"),
+                                Value::Num(mean(&|s| s.net_throughput())),
+                            ));
+                            row.push((
+                                format!("{key}_mean_tput"),
+                                Value::Num(mean(&|s| s.mean_throughput)),
+                            ));
+                            row.push((
+                                format!("{key}_downtime_frac"),
+                                Value::Num(mean(&|s| s.downtime_frac)),
+                            ));
+                        }
                     }
                     rep.row(Value::Obj(row));
                 }
@@ -1107,6 +1248,25 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
     rep.scalar("cross_point_transition_hits", merged.cross_transition_hits as f64);
     rep.scalar("cross_point_hit_rate", merged.cross_hit_rate());
     rep.scalar("memo_entries", merged.unique_entries as f64);
+    // Saved-trial accounting, only under --adaptive so default cubes
+    // stay bit-identical to earlier builds.
+    if adaptive {
+        let budget = grid_points * rule.max_trials;
+        rep.scalar("adaptive", 1.0);
+        rep.scalar("round", rule.round as f64);
+        rep.scalar("min_trials", rule.min_trials as f64);
+        rep.scalar("max_trials_per_point", rule.max_trials as f64);
+        rep.scalar("rel_ci", rule.rel_ci);
+        rep.scalar("trials_run_total", trials_run_total as f64);
+        rep.scalar("trials_budget_total", budget as f64);
+        rep.scalar("trials_saved", (budget - trials_run_total) as f64);
+        if budget > 0 {
+            rep.scalar(
+                "trials_saved_frac",
+                (budget - trials_run_total) as f64 / budget as f64,
+            );
+        }
+    }
     match out_path {
         Some(path) => {
             rep.write(&path)?;

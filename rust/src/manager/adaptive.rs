@@ -1,0 +1,248 @@
+//! Adaptive Monte-Carlo trial allocation: run trials in fixed-size
+//! *rounds* and stop as soon as the per-policy `net_throughput`
+//! statistics are settled, instead of spending a fixed budget on
+//! comparisons that were decided hundreds of trials earlier. The
+//! paper's headline results (Figs. 6–7) are policy *orderings* — NTP
+//! vs dp-drop vs spares — and at fleet-scale failure rates those
+//! orderings typically separate long before a fixed `--trials` budget
+//! is exhausted (the ROADMAP item-5 follow-on).
+//!
+//! The stop decision is taken ONLY at round boundaries, on per-policy
+//! [`Welford`] moments folded in trial-index order — so the stopping
+//! trial count is a pure function of `(seed, StopRule)`, and in
+//! particular independent of `--threads` and of the work-stealing
+//! schedule (`rust/tests/adaptive_mc.rs` pins this). Entry points live
+//! on [`super::sweep::MultiPolicySim`]: `run_trials_adaptive`
+//! (parallel, per-worker memos) and `run_trials_adaptive_with`
+//! (sequential on a caller-shared memo, for grid sweeps).
+
+use super::sweep::{MemoStats, PolicyAggregate};
+use crate::util::stats::Welford;
+
+/// Why an adaptive Monte-Carlo run stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Every pairwise policy ordering is settled: for any two policies
+    /// the 95% confidence intervals on mean net throughput do not
+    /// overlap, with at least [`StopRule::margin`] of clearance.
+    Separated,
+    /// Every policy's CI95 half-width dropped below
+    /// [`StopRule::rel_ci`] of its mean — the estimates are precise
+    /// even where orderings are genuinely tied.
+    RelCi,
+    /// The [`StopRule::max_trials`] budget ran out before either
+    /// criterion held (e.g. an adversarially-close policy pair).
+    MaxTrials,
+}
+
+impl StopReason {
+    /// Stable lowercase key for JSON reports.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StopReason::Separated => "separated",
+            StopReason::RelCi => "rel_ci",
+            StopReason::MaxTrials => "max_trials",
+        }
+    }
+}
+
+/// Round-boundary stop rule for adaptive Monte-Carlo. Checked against
+/// the per-policy net-throughput [`Welford`] accumulators after each
+/// whole round, in fixed precedence: minimum-trial gate, then pairwise
+/// [`StopReason::Separated`], then [`StopReason::RelCi`], then the
+/// [`StopReason::MaxTrials`] budget.
+#[derive(Clone, Copy, Debug)]
+pub struct StopRule {
+    /// Trials per round. Decisions happen only after whole rounds, so
+    /// the stopping point depends on this and the seed — never on the
+    /// worker count or schedule.
+    pub round: usize,
+    /// No stop check passes (except the budget) below this many trials
+    /// — guards against a lucky early round separating by accident.
+    pub min_trials: usize,
+    /// Hard trial budget; the run never draws past it.
+    pub max_trials: usize,
+    /// Relative precision target: stop once every policy satisfies
+    /// `ci95 ≤ rel_ci · |mean|`. `<= 0` disables the precision stop
+    /// (useful when only the ordering matters).
+    pub rel_ci: f64,
+    /// Extra absolute clearance (net-throughput units) required
+    /// between two policies' intervals before they count as separated.
+    pub margin: f64,
+}
+
+impl Default for StopRule {
+    fn default() -> StopRule {
+        StopRule { round: 16, min_trials: 16, max_trials: 256, rel_ci: 0.01, margin: 0.0 }
+    }
+}
+
+impl StopRule {
+    /// Copy with degenerate fields clamped sane: at least one trial
+    /// per round, a positive budget, and `min_trials` within it.
+    pub fn normalized(&self) -> StopRule {
+        let max_trials = self.max_trials.max(1);
+        StopRule {
+            round: self.round.max(1),
+            min_trials: self.min_trials.max(1).min(max_trials),
+            max_trials,
+            ..*self
+        }
+    }
+
+    /// Round-boundary decision on the per-policy net-throughput
+    /// accumulators (one per policy, all with equal counts): `None`
+    /// keeps sampling, `Some(reason)` stops. Pure — same accumulators,
+    /// same verdict, which is what makes the stopping point
+    /// thread-count-independent.
+    pub fn check(&self, net: &[Welford]) -> Option<StopReason> {
+        let n = net.first().map(|w| w.count() as usize).unwrap_or(0);
+        // Below the gate (or below n = 2, where no CI exists) only the
+        // budget can stop the run.
+        if n < self.min_trials.max(2) {
+            return (n >= self.max_trials).then_some(StopReason::MaxTrials);
+        }
+        // A single policy has no ordering to settle; rel_ci governs.
+        if net.len() >= 2 && self.separated(net) {
+            return Some(StopReason::Separated);
+        }
+        if self.precise(net) {
+            return Some(StopReason::RelCi);
+        }
+        (n >= self.max_trials).then_some(StopReason::MaxTrials)
+    }
+
+    /// Every pair of policies has non-overlapping CI95s with `margin`
+    /// clearance: `|mᵢ − mⱼ| > ciᵢ + ciⱼ + margin`.
+    fn separated(&self, net: &[Welford]) -> bool {
+        for i in 0..net.len() {
+            for j in (i + 1)..net.len() {
+                let gap = (net[i].mean() - net[j].mean()).abs();
+                if gap <= net[i].ci95() + net[j].ci95() + self.margin {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Every policy's CI95 half-width is within `rel_ci` of its mean.
+    fn precise(&self, net: &[Welford]) -> bool {
+        self.rel_ci > 0.0 && net.iter().all(|w| w.ci95() <= self.rel_ci * w.mean().abs())
+    }
+}
+
+/// Result of an adaptive Monte-Carlo run.
+#[derive(Clone, Debug)]
+pub struct AdaptiveOutcome {
+    /// Per-policy aggregates over the `trials_run` trials actually
+    /// drawn, folded in trial-index order (bit-identical for any
+    /// thread count).
+    pub aggs: Vec<PolicyAggregate>,
+    /// Trials actually integrated — a whole number of rounds, except
+    /// when the budget cuts the last round short.
+    pub trials_run: usize,
+    /// Which criterion stopped the run.
+    pub reason: StopReason,
+    /// Merged response-memo counters (diagnostics; the hit/miss split
+    /// depends on the work-stealing schedule, the total does not).
+    pub memo: MemoStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn welford_of(xs: &[f64]) -> Welford {
+        let mut w = Welford::default();
+        for &x in xs {
+            w.push(x);
+        }
+        w
+    }
+
+    /// `n` samples tightly clustered around `mean` (tiny but nonzero
+    /// spread, so CIs are finite and small).
+    fn tight(mean: f64, n: usize) -> Welford {
+        let xs: Vec<f64> =
+            (0..n).map(|i| mean + 1e-6 * if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        welford_of(&xs)
+    }
+
+    /// `n` samples around `mean` with ±`spread` alternation.
+    fn wide(mean: f64, spread: f64, n: usize) -> Welford {
+        let xs: Vec<f64> =
+            (0..n).map(|i| mean + spread * if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        welford_of(&xs)
+    }
+
+    #[test]
+    fn min_trials_gates_every_criterion_but_budget() {
+        let rule = StopRule { min_trials: 16, max_trials: 64, ..StopRule::default() };
+        // Clearly separated AND precise, but only 8 trials: keep going.
+        let net = [tight(10.0, 8), tight(5.0, 8)];
+        assert_eq!(rule.check(&net), None);
+        // Same statistics past the gate: separated wins.
+        let net = [tight(10.0, 16), tight(5.0, 16)];
+        assert_eq!(rule.check(&net), Some(StopReason::Separated));
+        // Budget overrides the gate (precision stop disabled so only
+        // the budget can fire).
+        let gated =
+            StopRule { min_trials: 64, max_trials: 16, rel_ci: 0.0, ..StopRule::default() };
+        assert_eq!(gated.normalized().check(&[wide(10.0, 3.0, 16)]), Some(StopReason::MaxTrials));
+    }
+
+    #[test]
+    fn separation_precedes_rel_ci_and_respects_margin() {
+        let rule = StopRule { min_trials: 4, max_trials: 1024, rel_ci: 0.5, margin: 0.0, round: 4 };
+        // Separated pair also satisfies the loose rel_ci — Separated
+        // has precedence.
+        assert_eq!(rule.check(&[tight(10.0, 8), tight(5.0, 8)]), Some(StopReason::Separated));
+        // A margin wider than the gap suppresses separation; the loose
+        // rel_ci still stops.
+        let wide_margin = StopRule { margin: 100.0, ..rule };
+        assert_eq!(wide_margin.check(&[tight(10.0, 8), tight(5.0, 8)]), Some(StopReason::RelCi));
+    }
+
+    #[test]
+    fn overlapping_pair_stops_on_rel_ci_or_budget() {
+        // Means 10 ± wide CIs overlap: not separated.
+        let net = [wide(10.0, 3.0, 8), wide(10.1, 3.0, 8)];
+        let rule = StopRule { min_trials: 4, max_trials: 1024, rel_ci: 0.9, margin: 0.0, round: 4 };
+        assert_eq!(rule.check(&net), Some(StopReason::RelCi));
+        // rel_ci = 0 disables the precision stop; below budget → keep
+        // sampling, at budget → MaxTrials.
+        let strict = StopRule { rel_ci: 0.0, ..rule };
+        assert_eq!(strict.check(&net), None);
+        let capped = StopRule { max_trials: 8, ..strict };
+        assert_eq!(capped.check(&net), Some(StopReason::MaxTrials));
+    }
+
+    #[test]
+    fn single_policy_never_separates() {
+        let rule = StopRule { min_trials: 4, max_trials: 1024, rel_ci: 0.5, margin: 0.0, round: 4 };
+        assert_eq!(rule.check(&[tight(10.0, 8)]), Some(StopReason::RelCi));
+        let strict = StopRule { rel_ci: 0.0, ..rule };
+        assert_eq!(strict.check(&[tight(10.0, 8)]), None);
+        // No policies at all: nothing to decide until the budget.
+        assert_eq!(rule.check(&[]), None);
+    }
+
+    #[test]
+    fn normalized_clamps_degenerate_fields() {
+        let r = StopRule { round: 0, min_trials: 50, max_trials: 0, rel_ci: 0.0, margin: 0.0 }
+            .normalized();
+        assert_eq!(r.round, 1);
+        assert_eq!(r.max_trials, 1);
+        assert_eq!(r.min_trials, 1);
+        let d = StopRule::default().normalized();
+        assert_eq!(d.min_trials, StopRule::default().min_trials);
+    }
+
+    #[test]
+    fn stop_reason_json_keys_stable() {
+        assert_eq!(StopReason::Separated.as_str(), "separated");
+        assert_eq!(StopReason::RelCi.as_str(), "rel_ci");
+        assert_eq!(StopReason::MaxTrials.as_str(), "max_trials");
+    }
+}

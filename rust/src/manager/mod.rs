@@ -3,12 +3,14 @@
 //! pool and the fixed-minibatch pause semantics (Fig. 7), and account
 //! for idle healthy GPUs donated to lower-priority jobs.
 
+pub mod adaptive;
 pub mod fleet;
 pub mod lowpri;
 pub mod packing;
 pub mod spares;
 pub mod sweep;
 
+pub use adaptive::{AdaptiveOutcome, StopReason, StopRule};
 pub use fleet::{FleetSim, FleetStats, StepMode, StrategyTable};
 pub use packing::{pack_domains, packed_replica_tp, Assignment};
 pub use spares::{SparePolicy, SpareOutcome};

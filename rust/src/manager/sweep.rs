@@ -19,9 +19,13 @@
 //!   `FleetSim::run` calls (`rust/tests/multi_policy_sweep.rs`). Under
 //!   [`StepMode::Exact`] the sweep is bounded by the trace's *event
 //!   count*, not a sample grid, and
-//!   [`MultiPolicySim::run_trials_par`] fans Monte-Carlo batches over
-//!   `util::par` (per-thread memos, merged [`MemoStats`], bit-identical
-//!   to one thread).
+//!   [`MultiPolicySim::run_trials_par`] fans Monte-Carlo trials over a
+//!   work-stealing scheduler (`util::par::par_steal_with_states` —
+//!   per-worker replayers and memos, per-trial stats folded in
+//!   trial-index order, bit-identical to one thread). The adaptive
+//!   runners ([`MultiPolicySim::run_trials_adaptive`]) stack
+//!   `manager::adaptive`'s round-boundary [`StopRule`] on the same
+//!   scheduler to stop settled policy comparisons early.
 //! * [`SnapshotSig`] — failures are rare, so a snapshot is keyed by the
 //!   sorted multiset of *damaged* domains only, as `(deficit, count)`
 //!   pairs with inline storage (no heap below
@@ -45,6 +49,7 @@
 //!   cost model, so repeated change patterns skip the prev/next scan
 //!   (hit counters in `fleet --json` and `perf_hotpath`).
 
+use super::adaptive::{AdaptiveOutcome, StopReason, StopRule};
 use super::fleet::{grid_step, Accum, FleetStats, StepMode, StrategyTable};
 use super::spares::SparePolicy;
 use crate::cluster::Topology;
@@ -445,7 +450,11 @@ impl PolicyAggregate {
         }
     }
 
-    /// Merge another batch's fold (parallel workers, batch order).
+    /// Merge another batch's fold. No longer on the parallel hot path
+    /// (the steal scheduler folds per-trial stats in trial-index order
+    /// instead, keeping aggregates bit-identical across thread
+    /// counts); kept for callers combining independently-built
+    /// aggregates, where Welford-merge rounding is acceptable.
     pub fn merge(&mut self, other: &PolicyAggregate) {
         self.tput.merge(&other.tput);
         self.net_tput.merge(&other.net_tput);
@@ -531,8 +540,10 @@ impl PolicyAggregate {
         self.peak_power
     }
 
-    /// Half-width of the normal-approximation 95% confidence interval
-    /// on the mean throughput (`1.96·σ/√n`; `0` below two trials).
+    /// Half-width of the 95% confidence interval on the mean
+    /// throughput (`t·σ/√n` with the Student-t critical value for
+    /// `n − 1` degrees of freedom, `crate::util::stats::t_critical_95`
+    /// — 1.96 only for large n; `0` below two trials).
     pub fn tput_ci95(&self) -> f64 {
         self.tput.ci95()
     }
@@ -817,10 +828,106 @@ pub struct MultiPolicySim<'a> {
     pub detect: Option<DetectionModel>,
 }
 
+/// Trials per work-stealing window in the non-adaptive entry points:
+/// bounds the per-window result buffer (the fold itself is
+/// window-size-invariant — stats are handed over in trial-index order
+/// regardless of where window boundaries fall), preserving the
+/// aggregate path's O(1) memory in the total trial count. In adaptive
+/// mode the window is the stop rule's round instead.
+const STEAL_WINDOW: usize = 1024;
+
+/// Per-worker state of the work-stealing trial scheduler: one replayer
+/// (reset per claimed trial, keeping the fleet-health allocation — the
+/// O(1)-memory-per-trial property the perf gate counts) and one
+/// private [`ResponseMemo`]. Workers persist across windows and
+/// rounds, so replayer and memo reuse span the whole run.
+struct TrialWorker<S: EventSource> {
+    rep: Option<ReplayCore<S>>,
+    memo: ResponseMemo,
+}
+
 impl<'a> MultiPolicySim<'a> {
     /// A fresh memo sized for this sim's policy list.
     pub fn memo(&self) -> ResponseMemo {
         ResponseMemo::new(self.policies.len())
+    }
+
+    fn trial_worker<S: EventSource>(&self) -> TrialWorker<S> {
+        TrialWorker { rep: None, memo: self.memo() }
+    }
+
+    /// Sweep one source on a reusable replayer slot: the first call
+    /// builds the replayer, later calls reset it in place
+    /// ([`ReplayCore::reset_source`] keeps every allocation).
+    fn sweep_source<S: EventSource>(
+        &self,
+        rep: &mut Option<ReplayCore<S>>,
+        src: S,
+        mode: StepMode,
+        memo: &mut ResponseMemo,
+    ) -> Vec<FleetStats> {
+        match rep.as_mut() {
+            Some(r) => r.reset_source(src),
+            None => *rep = Some(ReplayCore::from_source(src, self.topo, self.blast)),
+        }
+        self.sweep(rep.as_mut().unwrap(), mode, memo)
+    }
+
+    /// The work-stealing trial scheduler behind every parallel
+    /// Monte-Carlo entry point and the adaptive runner. Trials
+    /// `0..max` are claimed one at a time from an atomic cursor
+    /// ([`par::par_steal_with_states`]) by up to `threads` persistent
+    /// [`TrialWorker`]s, in windows of `window` trials; a slow trial
+    /// (correlated-blast trace with thousands of events) occupies one
+    /// worker while the rest drain the remainder, instead of gating a
+    /// static batch. After each window the per-trial stats are handed
+    /// to `on_window` **in trial-index order** — claim order never
+    /// leaks — and a `true` return stops the run at that window
+    /// boundary. Returns the merged per-worker memo counters.
+    ///
+    /// **Determinism contract:** every per-trial stat, and any fold
+    /// `on_window` performs, is bit-identical for any `threads` and
+    /// any steal schedule. Each trial's integration touches only its
+    /// own source plus the sim configuration, memoization is exact — a
+    /// cached response or transition charge is the identical `f64`s a
+    /// recompute would produce (`rust/tests/multi_policy_sweep.rs`) —
+    /// and the coordinator folds in trial-index order, so neither the
+    /// trial→worker assignment nor the window size can change any
+    /// stat. Only the merged [`MemoStats`] depend on the schedule
+    /// (which worker's private memo could serve a repeat); their total
+    /// lookup count does not.
+    fn steal_trials<S, Mk>(
+        &self,
+        max: usize,
+        window: usize,
+        threads: usize,
+        mk_src: Mk,
+        mode: StepMode,
+        mut on_window: impl FnMut(Vec<Vec<FleetStats>>) -> bool,
+    ) -> MemoStats
+    where
+        S: EventSource + Send,
+        Mk: Fn(usize) -> S + Sync,
+    {
+        let t = threads.max(1).min(max.max(1));
+        let window = window.max(1);
+        let mut workers: Vec<TrialWorker<S>> = (0..t).map(|_| self.trial_worker()).collect();
+        let mut start = 0usize;
+        while start < max {
+            let end = (start + window).min(max);
+            let stats = par::par_steal_with_states(end - start, &mut workers, |w, i| {
+                self.sweep_source(&mut w.rep, mk_src(start + i), mode, &mut w.memo)
+            });
+            start = end;
+            if on_window(stats) {
+                break;
+            }
+        }
+        let mut merged = MemoStats::default();
+        for w in &workers {
+            merged.merge(&w.memo.stats());
+        }
+        merged
     }
 
     /// Sweep one trace with a private memo. Returns one [`FleetStats`]
@@ -880,57 +987,48 @@ impl<'a> MultiPolicySim<'a> {
         out
     }
 
-    /// Parallel Monte-Carlo: fan [`MultiPolicySim::run_trials`] batches
-    /// across up to `threads` scoped threads (`util::par`, no external
-    /// deps). Traces are split into contiguous batches; each worker
-    /// sweeps its batch with its own [`FleetReplayer`] and its own
-    /// [`ResponseMemo`], and the per-trace, per-policy stats come back
-    /// in input order with the per-thread memo counters merged.
+    /// Parallel Monte-Carlo over materialized traces: up to `threads`
+    /// work-stealing [`TrialWorker`]s (see [`Self::steal_trials`])
+    /// claim traces one at a time from an atomic cursor, each sweeping
+    /// on its own reusable replayer and its own [`ResponseMemo`]. The
+    /// per-trace, per-policy stats come back in input order with the
+    /// per-worker memo counters merged.
     ///
     /// **Determinism contract:** the result is bit-identical to
-    /// `run_trials` with one thread (and to any other thread count).
-    /// Each trace's integration touches only that trace plus the sim
-    /// configuration, and memoization is exact — a cached response or
-    /// transition charge is the identical `f64`s a recompute would
-    /// produce (`rust/tests/multi_policy_sweep.rs`) — so how traces are
-    /// batched across workers (or across per-trial forked PRNG streams
-    /// at generation time) cannot change any stat. Only the merged
-    /// [`MemoStats`] depend on the batching: per-thread memos cannot
-    /// share hits across batches.
+    /// [`Self::run_trials`] with one thread (and to any other thread
+    /// count or steal schedule) — see [`Self::steal_trials`]. Only the
+    /// merged [`MemoStats`] depend on the schedule: which worker's
+    /// private memo could serve a repeated damage pattern.
     pub fn run_trials_par(
         &self,
         traces: &[Trace],
         mode: StepMode,
         threads: usize,
     ) -> (Vec<Vec<FleetStats>>, MemoStats) {
-        let t = threads.max(1).min(traces.len().max(1));
-        if t <= 1 {
-            let mut memo = self.memo();
-            let stats = self.run_trials(traces, mode, &mut memo);
-            return (stats, memo.stats());
-        }
-        let chunk = traces.len().div_ceil(t);
-        // Spawn only workers with a non-empty batch: when `t` does not
-        // divide the trace count, `t` fixed-size chunks can overrun the
-        // slice and the trailing workers would be handed empty batches
-        // (e.g. 5 traces on 4 threads -> chunks of 2 -> worker 3 gets
-        // [5..5]). Batch *boundaries* are unchanged, so the stats stay
-        // bit-identical to any other thread count.
-        let workers = traces.len().div_ceil(chunk.max(1));
-        let parts = par::par_map(workers, workers, |ti| {
-            let lo = (ti * chunk).min(traces.len());
-            let hi = ((ti + 1) * chunk).min(traces.len());
-            let mut memo = self.memo();
-            let stats = self.run_trials(&traces[lo..hi], mode, &mut memo);
-            (stats, memo.stats())
-        });
         let mut all = Vec::with_capacity(traces.len());
-        let mut merged = MemoStats::default();
-        for (stats, ms) in parts {
+        let collect = |stats: Vec<Vec<FleetStats>>| {
             all.extend(stats);
-            merged.merge(&ms);
-        }
-        (all, merged)
+            false
+        };
+        let ms = match DetectionModel::active(&self.detect) {
+            Some(d) => self.steal_trials(
+                traces.len(),
+                STEAL_WINDOW,
+                threads,
+                |i| DelayedEvents::new(TraceCursor::new(&traces[i]), *d, self.topo.n_gpus),
+                mode,
+                collect,
+            ),
+            None => self.steal_trials(
+                traces.len(),
+                STEAL_WINDOW,
+                threads,
+                |i| TraceCursor::new(&traces[i]),
+                mode,
+                collect,
+            ),
+        };
+        (all, ms)
     }
 
     /// Sweep one live [`TraceStream`] without materializing it. The
@@ -1021,39 +1119,41 @@ impl<'a> MultiPolicySim<'a> {
     /// Parallel streaming Monte-Carlo: [`MultiPolicySim::run_trials_par`]
     /// over a [`TrialGen`] instead of a trace slice. Trial PRNGs are
     /// random-access (`TrialGen::rng_for` forks from a fresh root), so
-    /// workers draw their own batches with no shared generation pass;
-    /// batch boundaries match `run_trials_par` on `gen.traces()` exactly,
-    /// which makes the stats bit-identical to the materialized path at
-    /// every thread count.
+    /// a stealing worker draws whichever trial it claims with no shared
+    /// generation pass, and each trial's stream is bit-identical to its
+    /// materialized trace — the stats match the materialized path at
+    /// every thread count ([`Self::steal_trials`] determinism
+    /// contract).
     pub fn run_trials_stream_par(
         &self,
         gen: &TrialGen,
         mode: StepMode,
         threads: usize,
     ) -> (Vec<Vec<FleetStats>>, MemoStats) {
-        let n = gen.trials;
-        let t = threads.max(1).min(n.max(1));
-        if t <= 1 {
-            let mut memo = self.memo();
-            let stats = self.run_trials_stream(gen, mode, &mut memo);
-            return (stats, memo.stats());
-        }
-        let chunk = n.div_ceil(t);
-        let workers = n.div_ceil(chunk.max(1));
-        let parts = par::par_map(workers, workers, |ti| {
-            let lo = (ti * chunk).min(n);
-            let hi = ((ti + 1) * chunk).min(n);
-            let mut memo = self.memo();
-            let stats = self.run_trials_stream_range(gen, lo..hi, mode, &mut memo);
-            (stats, memo.stats())
-        });
-        let mut all = Vec::with_capacity(n);
-        let mut merged = MemoStats::default();
-        for (stats, ms) in parts {
+        let mut all = Vec::with_capacity(gen.trials);
+        let collect = |stats: Vec<Vec<FleetStats>>| {
             all.extend(stats);
-            merged.merge(&ms);
-        }
-        (all, merged)
+            false
+        };
+        let ms = match DetectionModel::active(&self.detect) {
+            Some(d) => self.steal_trials(
+                gen.trials,
+                STEAL_WINDOW,
+                threads,
+                |i| DelayedEvents::new(gen.stream_for(i), *d, self.topo.n_gpus),
+                mode,
+                collect,
+            ),
+            None => self.steal_trials(
+                gen.trials,
+                STEAL_WINDOW,
+                threads,
+                |i| gen.stream_for(i),
+                mode,
+                collect,
+            ),
+        };
+        (all, ms)
     }
 
     /// Streaming Monte-Carlo with **O(1) memory in the trial count**:
@@ -1087,49 +1187,181 @@ impl<'a> MultiPolicySim<'a> {
         aggs
     }
 
-    /// Parallel [`MultiPolicySim::run_trials_stream_agg`]: workers fold
-    /// their own trial batches (same batch boundaries as
-    /// [`MultiPolicySim::run_trials_stream_par`]) and the per-worker
-    /// aggregates merge in batch order.
+    /// Parallel [`MultiPolicySim::run_trials_stream_agg`]: stealing
+    /// workers compute per-trial stats, and the coordinator folds them
+    /// into one [`PolicyAggregate`] per policy **in trial-index
+    /// order** — exactly the push sequence the sequential aggregator
+    /// performs, never a cross-worker [`crate::util::stats::Welford`]
+    /// merge. Per-window hand-off keeps the memory O(1) in the trial
+    /// count ([`STEAL_WINDOW`]).
     ///
-    /// Determinism caveat: the underlying per-trial stats stay
-    /// bit-identical at every thread count, but the *folded* sums and
-    /// Welford moments are floating-point reductions whose grouping
-    /// follows the batching — different thread counts can differ in the
-    /// last ulp. Aggregates are statistical reporting quantities, not
-    /// pinned ones; anything bit-pinned (golden traces, equivalence
-    /// suites) goes through the per-trial entry points.
+    /// **Determinism contract:** the folded sums, Welford moments and
+    /// [`PolicyAggregate::tput_ci95`] are bit-identical to the
+    /// sequential [`Self::run_trials_stream_agg`] at any thread count
+    /// and steal schedule (asserted across 1/2/5 workers in
+    /// `rust/tests/detection_elastic.rs`). This replaces the pre-PR-10
+    /// behavior, where per-worker partial aggregates merged in batch
+    /// order and thread counts could differ in the last ulp.
     pub fn run_trials_stream_agg_par(
         &self,
         gen: &TrialGen,
         mode: StepMode,
         threads: usize,
     ) -> (Vec<PolicyAggregate>, MemoStats) {
-        let n = gen.trials;
-        let t = threads.max(1).min(n.max(1));
-        if t <= 1 {
-            let mut memo = self.memo();
-            let aggs = self.run_trials_stream_agg(gen, mode, &mut memo);
-            return (aggs, memo.stats());
-        }
-        let chunk = n.div_ceil(t);
-        let workers = n.div_ceil(chunk.max(1));
-        let parts = par::par_map(workers, workers, |ti| {
-            let lo = (ti * chunk).min(n);
-            let hi = ((ti + 1) * chunk).min(n);
-            let mut memo = self.memo();
-            let aggs = self.run_trials_stream_agg_range(gen, lo..hi, mode, &mut memo);
-            (aggs, memo.stats())
-        });
-        let mut merged_aggs = vec![PolicyAggregate::default(); self.policies.len()];
-        let mut merged = MemoStats::default();
-        for (aggs, ms) in parts {
-            for (m, a) in merged_aggs.iter_mut().zip(&aggs) {
-                m.merge(a);
+        let mut aggs = vec![PolicyAggregate::default(); self.policies.len()];
+        let fold = |stats: Vec<Vec<FleetStats>>| {
+            for trial in &stats {
+                for (agg, s) in aggs.iter_mut().zip(trial) {
+                    agg.push(s);
+                }
             }
-            merged.merge(&ms);
+            false
+        };
+        let ms = match DetectionModel::active(&self.detect) {
+            Some(d) => self.steal_trials(
+                gen.trials,
+                STEAL_WINDOW,
+                threads,
+                |i| DelayedEvents::new(gen.stream_for(i), *d, self.topo.n_gpus),
+                mode,
+                fold,
+            ),
+            None => self.steal_trials(
+                gen.trials,
+                STEAL_WINDOW,
+                threads,
+                |i| gen.stream_for(i),
+                mode,
+                fold,
+            ),
+        };
+        (aggs, ms)
+    }
+
+    /// Adaptive Monte-Carlo ([`super::adaptive`]): trials run in
+    /// `rule.round`-sized rounds over the same work-stealing scheduler
+    /// as [`Self::run_trials_stream_agg_par`]; after each round the
+    /// [`StopRule`] inspects the per-policy net-throughput Welford
+    /// accumulators (folded in trial-index order) and stops once every
+    /// pairwise policy ordering is separated, every CI is tight, or
+    /// the `rule.max_trials` budget is out. `gen` supplies the trial
+    /// family (seed, scenario, horizon); its `trials` field is
+    /// ignored — the rule's budget bounds the draw, and
+    /// `TrialGen::rng_for` is random-access so any trial index is
+    /// addressable.
+    ///
+    /// Decisions happen only at round boundaries on deterministic
+    /// folds, so `trials_run`, the stop reason and every aggregate are
+    /// a pure function of `(gen, mode, rule)` — independent of
+    /// `threads` (`rust/tests/adaptive_mc.rs`).
+    pub fn run_trials_adaptive(
+        &self,
+        gen: &TrialGen,
+        mode: StepMode,
+        rule: &StopRule,
+        threads: usize,
+    ) -> AdaptiveOutcome {
+        let rule = rule.normalized();
+        let mut aggs = vec![PolicyAggregate::default(); self.policies.len()];
+        let mut trials_run = 0usize;
+        let mut reason = StopReason::MaxTrials;
+        let on_round = |stats: Vec<Vec<FleetStats>>| {
+            trials_run += stats.len();
+            for trial in &stats {
+                for (agg, s) in aggs.iter_mut().zip(trial) {
+                    agg.push(s);
+                }
+            }
+            let net: Vec<Welford> = aggs.iter().map(|a| a.net_tput).collect();
+            match rule.check(&net) {
+                Some(r) => {
+                    reason = r;
+                    true
+                }
+                None => false,
+            }
+        };
+        let memo = match DetectionModel::active(&self.detect) {
+            Some(d) => self.steal_trials(
+                rule.max_trials,
+                rule.round,
+                threads,
+                |i| DelayedEvents::new(gen.stream_for(i), *d, self.topo.n_gpus),
+                mode,
+                on_round,
+            ),
+            None => self.steal_trials(
+                rule.max_trials,
+                rule.round,
+                threads,
+                |i| gen.stream_for(i),
+                mode,
+                on_round,
+            ),
+        };
+        AdaptiveOutcome { aggs, trials_run, reason, memo }
+    }
+
+    /// Sequential adaptive runner on a caller-shared memo: same
+    /// rounds, same trial-index fold, same [`StopRule`] — `trials_run`,
+    /// the reason and every aggregate are bit-identical to
+    /// [`Self::run_trials_adaptive`] at any thread count — but trials
+    /// stream through `memo`, so cross-point reuse keeps accruing
+    /// across the points of a grid sweep (`ntp sweep --adaptive`).
+    pub fn run_trials_adaptive_with(
+        &self,
+        gen: &TrialGen,
+        mode: StepMode,
+        rule: &StopRule,
+        memo: &mut ResponseMemo,
+    ) -> AdaptiveOutcome {
+        let rule = rule.normalized();
+        let (aggs, trials_run, reason) = match DetectionModel::active(&self.detect) {
+            Some(d) => self.adaptive_rounds(
+                &rule,
+                |i| DelayedEvents::new(gen.stream_for(i), *d, self.topo.n_gpus),
+                mode,
+                memo,
+            ),
+            None => self.adaptive_rounds(&rule, |i| gen.stream_for(i), mode, memo),
+        };
+        AdaptiveOutcome { aggs, trials_run, reason, memo: memo.stats() }
+    }
+
+    /// Round loop shared by the detect/plain arms of
+    /// [`Self::run_trials_adaptive_with`]: one persistent replayer,
+    /// fold-as-you-stream, stop checks at round boundaries.
+    fn adaptive_rounds<S, Mk>(
+        &self,
+        rule: &StopRule,
+        mk_src: Mk,
+        mode: StepMode,
+        memo: &mut ResponseMemo,
+    ) -> (Vec<PolicyAggregate>, usize, StopReason)
+    where
+        S: EventSource,
+        Mk: Fn(usize) -> S,
+    {
+        let mut aggs = vec![PolicyAggregate::default(); self.policies.len()];
+        let mut rep: Option<ReplayCore<S>> = None;
+        let mut reason = StopReason::MaxTrials;
+        let mut done = 0usize;
+        while done < rule.max_trials {
+            let end = (done + rule.round).min(rule.max_trials);
+            for trial in done..end {
+                let stats = self.sweep_source(&mut rep, mk_src(trial), mode, memo);
+                for (agg, s) in aggs.iter_mut().zip(&stats) {
+                    agg.push(s);
+                }
+            }
+            done = end;
+            let net: Vec<Welford> = aggs.iter().map(|a| a.net_tput).collect();
+            if let Some(r) = rule.check(&net) {
+                reason = r;
+                break;
+            }
         }
-        (merged_aggs, merged)
+        (aggs, done, reason)
     }
 
     /// Core sweep dispatch: mirrors `FleetSim::run` operation-for-
@@ -1956,10 +2188,11 @@ mod tests {
         );
         // Peak is a max over trials: 0.95 + 0.3.
         assert_eq!(whole.peak_rack_power_frac(), 0.95 + 0.3);
-        // CI against the direct two-pass sample variance.
+        // CI against the direct two-pass sample variance (4 trials ⇒
+        // df = 3 ⇒ Student-t critical value, not the normal 1.96).
         let var =
             trials.iter().map(|s| (s.mean_throughput - mean).powi(2)).sum::<f64>() / (n - 1.0);
-        let ci = 1.96 * (var / n).sqrt();
+        let ci = crate::util::stats::t_critical_95(3) * (var / n).sqrt();
         assert!((whole.tput_ci95() - ci).abs() < 1e-12, "{} vs {ci}", whole.tput_ci95());
         // Split-and-merge agrees to floating-point reassociation noise.
         let mut a = PolicyAggregate::default();

@@ -92,6 +92,64 @@ where
     });
 }
 
+/// Work-stealing fan-out over `0..n_items` with per-worker state: one
+/// worker per element of `states`, each repeatedly claiming the next
+/// unclaimed index from a shared atomic cursor until the range drains.
+/// Static contiguous chunking ([`par_map`]) lets the slowest batch
+/// gate wall-clock when per-item cost is heterogeneous (a correlated
+/// failure-blast trial replays thousands of events while a quiet trial
+/// replays a handful); stealing keeps every worker busy to the end.
+///
+/// Results come back in **index order**, so which worker computed what
+/// never leaks into the output — for index-independent `f` the result
+/// vector is bit-identical for any worker count and any scheduling.
+/// Only the mutations `f` makes to its worker state (e.g. per-worker
+/// memo hit counters) remain scheduling-dependent. With a single state
+/// (or fewer than two items) the map runs inline on `states[0]` with
+/// no thread spawned or cursor touched.
+pub fn par_steal_with_states<S, U, F>(n_items: usize, states: &mut [S], f: F) -> Vec<U>
+where
+    S: Send,
+    U: Send,
+    F: Fn(&mut S, usize) -> U + Sync,
+{
+    assert!(!states.is_empty(), "par_steal_with_states needs at least one worker state");
+    if states.len() == 1 || n_items <= 1 {
+        let st = &mut states[0];
+        return (0..n_items).map(|i| f(st, i)).collect();
+    }
+    let cursor = std::sync::atomic::AtomicUsize::new(0);
+    let (fref, cref) = (&f, &cursor);
+    let mut parts: Vec<Vec<(usize, U)>> = Vec::with_capacity(states.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = states
+            .iter_mut()
+            .map(|st| {
+                s.spawn(move || {
+                    let mut got: Vec<(usize, U)> = Vec::new();
+                    loop {
+                        let i = cref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= n_items {
+                            break;
+                        }
+                        got.push((i, fref(st, i)));
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("par_steal_with_states worker panicked"));
+        }
+    });
+    let mut all: Vec<(usize, U)> = Vec::with_capacity(n_items);
+    for p in parts {
+        all.extend(p);
+    }
+    all.sort_unstable_by_key(|&(i, _)| i);
+    all.into_iter().map(|(_, v)| v).collect()
+}
+
 /// Like [`par_chunks_mut`], but chunk boundaries are chosen so each
 /// chunk carries a near-equal share of `weights[i]` (e.g. element
 /// counts of per-tensor work items) instead of a near-equal item
@@ -183,6 +241,31 @@ mod tests {
         assert_eq!(one, vec![9]);
         let mut empty: Vec<u64> = Vec::new();
         par_chunks_weighted_mut(&mut empty, &[], 4, |_, _| {});
+    }
+
+    #[test]
+    fn steal_matches_sequential_any_worker_count() {
+        let want: Vec<usize> = (0..53).map(|i| i * 3 + 1).collect();
+        for workers in [1usize, 2, 3, 8] {
+            let mut states: Vec<u64> = vec![0; workers];
+            let got = par_steal_with_states(53, &mut states, |st, i| {
+                *st += 1; // per-worker claim count
+                i * 3 + 1
+            });
+            assert_eq!(got, want, "workers={workers}");
+            // Every index was claimed exactly once, across all workers.
+            assert_eq!(states.iter().sum::<u64>(), 53, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn steal_degenerate_cases() {
+        let mut one = [0u8];
+        assert!(par_steal_with_states(0, &mut one, |_, i| i).is_empty());
+        assert_eq!(par_steal_with_states(1, &mut one, |_, i| i + 7), vec![7]);
+        // More workers than items still covers each index once.
+        let mut many = [0u8; 9];
+        assert_eq!(par_steal_with_states(2, &mut many, |_, i| i), vec![0, 1]);
     }
 
     #[test]

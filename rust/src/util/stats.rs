@@ -111,12 +111,38 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Two-tailed 95% Student-t critical value for `df` degrees of
+/// freedom. Small Monte-Carlo batches (adaptive early stopping checks
+/// CIs after as few as 8 trials) are anti-conservative under the
+/// normal 1.96 constant — at df = 7 the exact value is 2.365, 21%
+/// wider. Table-driven for df < 30, converging to the normal 1.96
+/// beyond (the df = 29 entry is 2.045; the residual error from
+/// switching to 1.96 at df ≥ 30 is < 2.5% and shrinks with n).
+/// `df = 0` (one observation) has no finite interval and is clamped to
+/// the df = 1 value; [`Welford::ci95`] never calls it below `n = 2`.
+pub fn t_critical_95(df: u64) -> f64 {
+    /// `t.ppf(0.975, df)` for df = 1..=29.
+    const T95: [f64; 29] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045,
+    ];
+    match df {
+        0 => T95[0],
+        1..=29 => T95[df as usize - 1],
+        _ => 1.96,
+    }
+}
+
 /// Welford's online mean/variance accumulator: numerically stable,
 /// O(1) state — confidence intervals over Monte-Carlo trial batches
 /// without storing per-trial values. Mergeable across parallel workers
 /// via Chan's pairwise formula ([`Welford::merge`]); note that both
 /// `push` order and merge grouping reassociate floating-point sums, so
-/// two different batchings agree only to rounding, not bit-for-bit.
+/// two different batchings agree only to rounding, not bit-for-bit —
+/// which is why the trial scheduler (`manager::sweep`) folds per-trial
+/// stats in trial-index order on one accumulator instead of merging
+/// per-worker partials.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Welford {
     n: u64,
@@ -175,13 +201,16 @@ impl Welford {
         self.variance().sqrt()
     }
 
-    /// Half-width of the normal-approximation 95% confidence interval
-    /// on the mean: `1.96·σ/√n`. 0.0 below two observations.
+    /// Half-width of the 95% confidence interval on the mean:
+    /// `t·σ/√n` with the Student-t critical value for `n − 1` degrees
+    /// of freedom ([`t_critical_95`] — 1.96 for n ≥ 31, wider below so
+    /// small-trial CIs aren't anti-conservative). 0.0 below two
+    /// observations.
     pub fn ci95(&self) -> f64 {
         if self.n < 2 {
             return 0.0;
         }
-        1.96 * (self.variance() / self.n as f64).sqrt()
+        t_critical_95(self.n - 1) * (self.variance() / self.n as f64).sqrt()
     }
 }
 
@@ -284,8 +313,52 @@ mod tests {
         let n = xs.len() as f64;
         let sample = variance(&xs) * n / (n - 1.0);
         assert!((w.variance() - sample).abs() < 1e-12);
-        let ci = 1.96 * (sample / n).sqrt();
+        // n = 8 ⇒ df = 7 ⇒ Student-t 2.365, not the normal 1.96.
+        let ci = t_critical_95(7) * (sample / n).sqrt();
         assert!((w.ci95() - ci).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_critical_converges_to_normal() {
+        assert_eq!(t_critical_95(0), t_critical_95(1));
+        assert_eq!(t_critical_95(1), 12.706);
+        assert_eq!(t_critical_95(7), 2.365);
+        assert_eq!(t_critical_95(29), 2.045);
+        assert_eq!(t_critical_95(30), 1.96);
+        assert_eq!(t_critical_95(u64::MAX), 1.96);
+        // Monotone non-increasing toward the normal limit.
+        for df in 1..40 {
+            assert!(t_critical_95(df + 1) <= t_critical_95(df), "df {df}");
+            assert!(t_critical_95(df) >= 1.96, "df {df}");
+        }
+    }
+
+    #[test]
+    fn welford_merge_vs_push_oracle() {
+        // Merge-of-parts must agree with a single push stream, and both
+        // with the two-pass `stats::{mean,variance}` oracle, for an
+        // uneven three-way split (the shape a work-stealing worker set
+        // actually produces).
+        let xs: Vec<f64> = (0..53).map(|i| ((i as f64) * 1.137).cos() * 3.0 + 7.5).collect();
+        let mut pushed = Welford::default();
+        for &x in &xs {
+            pushed.push(x);
+        }
+        let mut merged = Welford::default();
+        for part in [&xs[..5], &xs[5..31], &xs[31..]] {
+            let mut w = Welford::default();
+            for &x in part {
+                w.push(x);
+            }
+            merged.merge(&w);
+        }
+        assert_eq!(merged.count(), pushed.count());
+        assert!((merged.mean() - pushed.mean()).abs() < 1e-12);
+        assert!((merged.variance() - pushed.variance()).abs() < 1e-10);
+        assert!((merged.ci95() - pushed.ci95()).abs() < 1e-10);
+        let n = xs.len() as f64;
+        assert!((pushed.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((pushed.variance() - variance(&xs) * n / (n - 1.0)).abs() < 1e-10);
     }
 
     #[test]

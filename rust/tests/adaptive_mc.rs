@@ -1,0 +1,253 @@
+//! PR 10 suite: adaptive Monte-Carlo trial allocation.
+//!
+//! * The stop point, stop reason and every per-policy aggregate of
+//!   `run_trials_adaptive` are **bit-identical** at 1/2/5 threads, and
+//!   to the sequential shared-memo `run_trials_adaptive_with` — stop
+//!   decisions happen only at round boundaries on trial-index-ordered
+//!   folds, so the work-stealing schedule can never leak into them.
+//! * An adaptive run's aggregates equal the plain sequential
+//!   aggregator over exactly its first `trials_run` trials — early
+//!   stopping truncates the trial sequence, it never reweights it.
+//! * Policies with genuinely different net throughput stop on CI
+//!   separation well under budget; a pair of policies that respond
+//!   identically (the straggler pair under an Independent scenario,
+//!   which emits no Degrade events) never separates and must run its
+//!   full budget out.
+
+use ntp::cluster::Topology;
+use ntp::config::{presets, Dtype, WorkloadConfig};
+use ntp::failure::{
+    BlastRadius, DetectionModel, FailureModel, ScenarioConfig, ScenarioKind, TrialGen,
+};
+use ntp::manager::{MultiPolicySim, StepMode, StopReason, StopRule, StrategyTable};
+use ntp::parallel::ParallelConfig;
+use ntp::policy::{registry, FtPolicy, TransitionCosts};
+use ntp::power::RackDesign;
+use ntp::sim::{IterationModel, SimParams};
+
+const DOMAIN_SIZE: usize = 32;
+const PER_REPLICA: usize = 4;
+
+fn setup() -> (IterationModel, ParallelConfig, StrategyTable) {
+    let sim = IterationModel::new(
+        presets::model("gpt-480b").unwrap(),
+        WorkloadConfig {
+            seq_len: 16_384,
+            minibatch_tokens: 2 * 1024 * 1024,
+            dtype: Dtype::BF16,
+        },
+        presets::cluster("paper-32k-nvl32").unwrap(),
+        SimParams::default(),
+    );
+    let cfg = ParallelConfig { tp: DOMAIN_SIZE, pp: PER_REPLICA, dp: 16, microbatch: 1 };
+    let rack = RackDesign { rack_budget_frac: 1.3, ..RackDesign::default() };
+    let table = StrategyTable::build(&sim, &cfg, &rack);
+    (sim, cfg, table)
+}
+
+fn parse_all(names: &[&str]) -> Vec<&'static dyn FtPolicy> {
+    names.iter().map(|n| registry::parse(n).unwrap()).collect()
+}
+
+/// Bit-level equality of two aggregate vectors (counts, plain-sum
+/// means, Welford moments and the derived CI).
+fn assert_aggs_bit_equal(
+    a: &[ntp::manager::PolicyAggregate],
+    b: &[ntp::manager::PolicyAggregate],
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: aggregate count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.trials(), y.trials(), "{what}: trials");
+        assert_eq!(x.mean_tput().to_bits(), y.mean_tput().to_bits(), "{what}: mean_tput");
+        assert_eq!(
+            x.mean_net_tput().to_bits(),
+            y.mean_net_tput().to_bits(),
+            "{what}: mean_net_tput"
+        );
+        assert_eq!(x.tput.mean().to_bits(), y.tput.mean().to_bits(), "{what}: Welford mean");
+        assert_eq!(
+            x.tput.variance().to_bits(),
+            y.tput.variance().to_bits(),
+            "{what}: Welford variance"
+        );
+        assert_eq!(x.tput_ci95().to_bits(), y.tput_ci95().to_bits(), "{what}: CI95");
+        assert_eq!(
+            x.net_tput.mean().to_bits(),
+            y.net_tput.mean().to_bits(),
+            "{what}: net Welford mean"
+        );
+    }
+}
+
+/// The stop point is a pure function of `(gen, rule)` — the thread
+/// count and steal schedule never shift it, and the sequential
+/// shared-memo runner lands on the identical outcome. Detection is
+/// active, so the delayed-events arm of the dispatch is the one under
+/// test too.
+#[test]
+fn adaptive_stop_is_thread_count_invariant() {
+    let (sim, cfg, table) = setup();
+    let policies = parse_all(&["ntp", "dp-drop", "ckpt-restart"]);
+    let job_domains = 20usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(40.0);
+    let gen = TrialGen::new(
+        &topo,
+        &model,
+        &ScenarioConfig::new(ScenarioKind::Independent),
+        24.0 * 6.0,
+        0xADA,
+        48,
+    );
+    let msim = MultiPolicySim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: PER_REPLICA,
+        policies: &policies,
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition: Some(TransitionCosts::model(&sim, &cfg)),
+        detect: Some(DetectionModel {
+            fail_latency_hours: 0.4,
+            degrade_latency_hours: 1.5,
+            false_positives_per_gpu_day: 2e-3,
+            jitter_frac: 1.0,
+        }),
+    };
+    let rule = StopRule { round: 8, min_trials: 8, max_trials: 48, rel_ci: 0.0, margin: 0.0 };
+    let base = msim.run_trials_adaptive(&gen, StepMode::Exact, &rule, 1);
+    // Stops only at whole round boundaries (the budget is a multiple
+    // of the round here, so no short final round exists).
+    assert_eq!(base.trials_run % rule.round, 0, "stop must land on a round boundary");
+    assert!(base.trials_run >= rule.min_trials && base.trials_run <= rule.max_trials);
+    for threads in [2usize, 5] {
+        let par = msim.run_trials_adaptive(&gen, StepMode::Exact, &rule, threads);
+        assert_eq!(par.trials_run, base.trials_run, "stop point drifted at {threads} threads");
+        assert_eq!(par.reason, base.reason, "stop reason drifted at {threads} threads");
+        assert_aggs_bit_equal(&par.aggs, &base.aggs, &format!("{threads} threads"));
+    }
+    let mut memo = msim.memo();
+    let seq = msim.run_trials_adaptive_with(&gen, StepMode::Exact, &rule, &mut memo);
+    assert_eq!(seq.trials_run, base.trials_run);
+    assert_eq!(seq.reason, base.reason);
+    assert_aggs_bit_equal(&seq.aggs, &base.aggs, "sequential shared-memo runner");
+
+    // Three policies this far apart settle on separation under budget.
+    assert_eq!(base.reason, StopReason::Separated);
+    assert!(
+        base.trials_run < rule.max_trials,
+        "distinct policies should separate before the {}-trial budget (ran {})",
+        rule.max_trials,
+        base.trials_run
+    );
+
+    // Early stopping truncates the trial sequence, nothing more: the
+    // plain sequential aggregator over exactly the first `trials_run`
+    // trials of the same family reproduces the aggregates bit-for-bit.
+    let gen_prefix = TrialGen::new(
+        &topo,
+        &model,
+        &ScenarioConfig::new(ScenarioKind::Independent),
+        24.0 * 6.0,
+        0xADA,
+        base.trials_run,
+    );
+    let mut memo_prefix = msim.memo();
+    let prefix = msim.run_trials_stream_agg(&gen_prefix, StepMode::Exact, &mut memo_prefix);
+    assert_aggs_bit_equal(&prefix, &base.aggs, "exhaustive prefix");
+}
+
+/// Two policies that respond identically on every event never
+/// separate: under an Independent scenario no Degrade event fires, so
+/// `STRAGGLER-EVICT` and `STRAGGLER-TOLERATE` are both exactly NTP and
+/// the net-throughput gap is zero forever. With the precision stop
+/// disabled, only the budget can end the run.
+#[test]
+fn identical_pair_never_stops_early() {
+    let (sim, cfg, table) = setup();
+    let policies = parse_all(&["straggler-evict", "straggler-tolerate"]);
+    let job_domains = 16usize;
+    let topo = Topology::of(job_domains * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(40.0);
+    let gen = TrialGen::new(
+        &topo,
+        &model,
+        &ScenarioConfig::new(ScenarioKind::Independent),
+        24.0 * 4.0,
+        0xADB,
+        12,
+    );
+    let msim = MultiPolicySim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: PER_REPLICA,
+        policies: &policies,
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition: Some(TransitionCosts::model(&sim, &cfg)),
+        detect: None,
+    };
+    let rule = StopRule { round: 4, min_trials: 4, max_trials: 12, rel_ci: 0.0, margin: 0.0 };
+    let out = msim.run_trials_adaptive(&gen, StepMode::Exact, &rule, 2);
+    assert_eq!(
+        out.reason,
+        StopReason::MaxTrials,
+        "identical policies must never separate (stopped '{}' after {} trials)",
+        out.reason.as_str(),
+        out.trials_run
+    );
+    assert_eq!(out.trials_run, rule.max_trials);
+    // The pair really is identical: bit-equal aggregates.
+    assert_eq!(
+        out.aggs[0].mean_net_tput().to_bits(),
+        out.aggs[1].mean_net_tput().to_bits(),
+        "straggler pair must respond identically without Degrade events"
+    );
+
+    // A loose rel_ci turns the same run into a precision stop instead
+    // (the ordering is tied, but the estimates themselves converge).
+    let loose = StopRule { rel_ci: 10.0, ..rule };
+    let out_loose = msim.run_trials_adaptive(&gen, StepMode::Exact, &loose, 2);
+    assert_eq!(out_loose.reason, StopReason::RelCi);
+    assert_eq!(out_loose.trials_run, rule.min_trials.max(rule.round));
+}
+
+/// A budget that is not a round multiple is cut short at the budget,
+/// never overrun — and the short final round still folds.
+#[test]
+fn budget_cuts_final_round_short() {
+    let (sim, cfg, table) = setup();
+    let policies = parse_all(&["straggler-evict", "straggler-tolerate"]);
+    let topo = Topology::of(16 * DOMAIN_SIZE, DOMAIN_SIZE, 4);
+    let model = FailureModel::llama3().scaled(40.0);
+    let gen = TrialGen::new(
+        &topo,
+        &model,
+        &ScenarioConfig::new(ScenarioKind::Independent),
+        24.0 * 4.0,
+        0xADC,
+        10,
+    );
+    let msim = MultiPolicySim {
+        topo: &topo,
+        table: &table,
+        domains_per_replica: PER_REPLICA,
+        policies: &policies,
+        spares: None,
+        packed: true,
+        blast: BlastRadius::Single,
+        transition: Some(TransitionCosts::model(&sim, &cfg)),
+        detect: None,
+    };
+    // round 4 does not divide the 10-trial budget: rounds of 4, 4, 2.
+    let rule = StopRule { round: 4, min_trials: 10, max_trials: 10, rel_ci: 0.0, margin: 0.0 };
+    for threads in [1usize, 3] {
+        let out = msim.run_trials_adaptive(&gen, StepMode::Exact, &rule, threads);
+        assert_eq!(out.trials_run, 10, "threads={threads}");
+        assert_eq!(out.reason, StopReason::MaxTrials, "threads={threads}");
+        assert_eq!(out.aggs[0].trials(), 10, "threads={threads}");
+    }
+}
